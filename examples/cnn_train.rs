@@ -1,0 +1,85 @@
+//! Fig. 3 / END-TO-END DRIVER — trains a CNN through the entire stack
+//! on a real (synthetic-CIFAR) workload and logs the loss curve +
+//! validation accuracy:
+//!
+//!   data gen -> shard(8 workers) -> PJRT grad executable (JAX/Pallas
+//!   AOT artifact) -> REGTOP-k / TOP-k sparsification -> weighted
+//!   aggregation -> SGD -> broadcast -> eval artifact.
+//!
+//! Python is never on this path; only `artifacts/*.hlo.txt` built once
+//! by `make artifacts`.
+//!
+//!     cargo run --release --example cnn_train -- \
+//!         [--iters 300] [--model resnet8|mlp] [--s 0.001] [--dense]
+//!
+//! The EXPERIMENTS.md §Fig3 record was produced with the defaults.
+
+use regtopk::experiments::fig3::{run, Fig3Config};
+use regtopk::runtime::Runtime;
+use regtopk::util::cli::Cli;
+
+fn main() {
+    let p = Cli::new("Fig 3 end-to-end CNN training")
+        .flag("iters", "300", "training iterations")
+        .flag("model", "resnet8", "resnet8 | mlp")
+        .flag("workers", "8", "workers")
+        .flag("s", "0.001", "sparsity factor (paper: 0.001)")
+        .flag("eta", "0.01", "learning rate (paper: 0.01)")
+        .flag("mu", "0.5", "REGTOP-k temperature")
+        .flag("q", "1.0", "REGTOP-k never-sent prior")
+        .flag("train-rows", "1600", "synthetic training set size")
+        .flag("val-rows", "200", "synthetic validation set size")
+        .flag("eval-every", "25", "evaluate accuracy every k iters")
+        .flag("seed", "42", "seed (shared init + samplers across algos)")
+        .flag("out", "results", "output dir")
+        .switch("dense", "also run the dense reference")
+        .parse();
+
+    let mut rt = Runtime::open_default().expect("run `make artifacts` first");
+    println!("PJRT platform: {}", rt.platform());
+    let cfg = Fig3Config {
+        workers: p.get_usize("workers"),
+        iters: p.get_usize("iters"),
+        eta: p.get_f32("eta"),
+        s: p.get_f64("s"),
+        mu: p.get_f32("mu"),
+        q: p.get_f32("q"),
+        seed: p.get_usize("seed") as u64,
+        train_rows: p.get_usize("train-rows"),
+        val_rows: p.get_usize("val-rows"),
+        eval_every: p.get_usize("eval-every"),
+    };
+    let model = p.get("model").to_string();
+    let t0 = std::time::Instant::now();
+    let logs = run(&mut rt, cfg, &model, p.get_bool("dense")).expect("training failed");
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("\n{model}: N={}, S={} (k = S*J), eta={}, {} iters, wall {wall:.1}s", cfg.workers, cfg.s, cfg.eta, cfg.iters);
+    println!("\n{:>6} {:>14} {:>14} {:>10} {:>10}", "iter", "loss(topk)", "loss(regtopk)", "acc(topk)", "acc(reg)");
+    let step = (cfg.iters / 15).max(1);
+    for t in (0..cfg.iters).step_by(step) {
+        let a = &logs[0].records()[t];
+        let b = &logs[1].records()[t];
+        let f = |v: f32| if v.is_nan() { "-".to_string() } else { format!("{v:.3}") };
+        println!("{t:>6} {:>14.4} {:>14.4} {:>10} {:>10}", a.loss, b.loss, f(a.accuracy), f(b.accuracy));
+    }
+    for log in &logs {
+        let final_acc = log
+            .records()
+            .iter()
+            .rev()
+            .find(|r| !r.accuracy.is_nan())
+            .map(|r| r.accuracy)
+            .unwrap_or(f32::NAN);
+        println!(
+            "{:>8}: final loss {:.4}, val acc {:.3}, loss curve {}",
+            log.name,
+            log.last().unwrap().loss,
+            final_acc,
+            log.sparkline(|r| r.loss, 40)
+        );
+        let dir = std::path::PathBuf::from(p.get("out"));
+        log.write_csv(&dir.join(format!("cnn_train_{model}_{}.csv", log.name))).unwrap();
+    }
+    println!("\nwrote CSVs to {}/cnn_train_{model}_*.csv", p.get("out"));
+}

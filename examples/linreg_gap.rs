@@ -1,0 +1,57 @@
+//! Fig. 2 — distributed linear regression optimality gap (§4.1), at
+//! the paper's exact parameters by default.
+//!
+//!     cargo run --release --example linreg_gap -- \
+//!         [--iters 2000] [--s 0.4,0.5,0.6] [--seed 42] [--out results]
+//!
+//! Writes one CSV per (algorithm, S) curve under --out and prints a
+//! log-scale summary.  See EXPERIMENTS.md §Fig2 for the reproduction
+//! findings at this testbed.
+
+use regtopk::data::linear::LinearParams;
+use regtopk::experiments::fig2;
+use regtopk::util::cli::Cli;
+
+fn main() {
+    let p = Cli::new("Fig 2: optimality gap vs iterations")
+        .flag("iters", "2000", "iterations")
+        .flag("s", "0.4,0.5,0.6", "sparsity factors")
+        .flag("mu", "0.5", "REGTOP-k temperature")
+        .flag("q", "1.0", "REGTOP-k never-sent prior")
+        .flag("eta", "0.01", "learning rate")
+        .flag("seed", "42", "generator seed")
+        .flag("out", "results", "output dir")
+        .parse();
+
+    let logs = fig2::run(
+        LinearParams::fig2(),
+        p.get_usize("seed") as u64,
+        p.get_usize("iters"),
+        &p.get_f64_list("s"),
+        p.get_f32("mu"),
+        p.get_f32("q"),
+        p.get_f32("eta"),
+    );
+    println!("optimality gap ||w^t - w*|| (log10) at checkpoints:\n");
+    print!("{:>14}", "iter");
+    let iters = p.get_usize("iters");
+    let checkpoints: Vec<usize> =
+        [0.05, 0.1, 0.25, 0.5, 0.75, 1.0].iter().map(|f| ((iters as f64 * f) as usize).saturating_sub(1)).collect();
+    for c in &checkpoints {
+        print!("{c:>10}");
+    }
+    println!();
+    for log in &logs {
+        print!("{:>14}", log.name);
+        for &c in &checkpoints {
+            print!("{:>10.2}", (log.records()[c].opt_gap as f64).max(1e-12).log10());
+        }
+        println!();
+    }
+    let dir = std::path::PathBuf::from(p.get("out"));
+    for log in &logs {
+        let safe = log.name.replace('.', "p");
+        log.write_csv(&dir.join(format!("linreg_gap_{safe}.csv"))).unwrap();
+    }
+    println!("\nwrote CSVs to {}/linreg_gap_*.csv", p.get("out"));
+}

@@ -1,0 +1,68 @@
+//! Quickstart: the 60-second tour of the public API.
+//!
+//! Builds a 4-worker distributed linear-regression problem, trains it
+//! three ways (dense, TOP-k, REGTOP-k), and prints optimality gap and
+//! communication cost side by side.
+//!
+//!     cargo run --release --example quickstart
+
+use regtopk::config::TrainConfig;
+use regtopk::coordinator::{Server, Trainer, Worker};
+use regtopk::data::linear::{generate, LinearParams};
+use regtopk::experiments::fig2::opt_gap;
+use regtopk::models::LinRegShard;
+use regtopk::optim::Sgd;
+use regtopk::sparsify::{build, SparsifierKind};
+
+fn main() {
+    // 1. A distributed problem: 4 workers, heterogeneous local data.
+    let params = LinearParams {
+        workers: 4,
+        rows_per_worker: 200,
+        dim: 50,
+        u: 0.0,
+        sigma2: 5.0, // worker heterogeneity
+        h2: 1.0,
+        noise: 0.5,
+    };
+    let problem = generate(params, /*seed=*/ 1);
+    println!("problem: {} workers, J={}, w* known in closed form\n", params.workers, params.dim);
+
+    // 2. Train with three sparsifiers at the same learning rate.
+    let k = 15; // transmit 30% of the gradient entries
+    let kinds = [
+        ("dense  ", SparsifierKind::Dense),
+        ("topk   ", SparsifierKind::TopK { k }),
+        ("regtopk", SparsifierKind::RegTopK { k, mu: 0.5, q: 1.0 }),
+    ];
+    println!("{:<8} {:>12} {:>14} {:>12}", "algo", "||w-w*||", "upload bytes", "vs dense");
+    for (name, kind) in kinds {
+        let config = TrainConfig {
+            workers: params.workers,
+            eta: 0.05,
+            sparsifier: kind.clone(),
+            ..TrainConfig::default()
+        };
+        let workers: Vec<Worker> = (0..params.workers)
+            .map(|i| {
+                Worker::new(
+                    i,
+                    Box::new(LinRegShard { shard: problem.shards[i].clone() }),
+                    build(&kind, params.dim, i),
+                )
+            })
+            .collect();
+        let server = Server::new(vec![0.0; params.dim], Box::new(Sgd::new(0.05)));
+        let mut trainer = Trainer::new(config, workers, server);
+        for _ in 0..500 {
+            trainer.round();
+        }
+        let gap = opt_gap(&trainer.server.w, &problem.w_star);
+        let up = trainer.ledger.total_upload_bytes();
+        let ratio = trainer.ledger.upload_compression_vs_dense(params.dim, params.workers);
+        println!("{name:<8} {gap:>12.6} {up:>14} {ratio:>12.5}");
+    }
+    println!("\nsame budget for topk/regtopk, ~70% upload savings vs dense.");
+    println!("next: examples/toy_logistic.rs (Fig 1), examples/linreg_gap.rs (Fig 2),");
+    println!("      examples/cnn_train.rs (Fig 3, end-to-end through PJRT artifacts)");
+}

@@ -1,0 +1,46 @@
+//! Fig. 1 — the paper's motivational toy (§1.2), end to end.
+//!
+//! Two workers hold single data points x1=[100,1], x2=[-100,1] whose
+//! first gradient entries are huge but cancel after aggregation.
+//! TOP-1 wastes its budget on them and stalls; REGTOP-1 detects the
+//! destructive aggregation through the posterior distortion and moves.
+//!
+//!     cargo run --release --example toy_logistic -- [--iters 100] [--with-g]
+
+use regtopk::experiments::fig1;
+use regtopk::util::cli::Cli;
+
+fn main() {
+    let p = Cli::new("Fig 1 toy: dense vs TOP-1 vs REGTOP-1")
+        .flag("iters", "100", "iterations")
+        .flag("mu", "0.5", "REGTOP-k temperature")
+        .flag("q", "1.0", "REGTOP-k never-sent prior")
+        .switch("with-g", "run the learning-rate-scaling variant (§1.2 extension)")
+        .parse();
+
+    let iters = p.get_usize("iters");
+    let logs = fig1::run(iters, p.get_f32("mu"), p.get_f32("q"));
+    println!("training loss (empirical risk) per iteration, eta=0.9, w0=[0,1]:\n");
+    println!("{:>5} {:>12} {:>12} {:>12}", "iter", "dense", "topk", "regtopk");
+    let step = (iters / 20).max(1);
+    for t in (0..iters).step_by(step) {
+        println!(
+            "{t:>5} {:>12.6} {:>12.6} {:>12.6}",
+            logs[0].records()[t].loss,
+            logs[1].records()[t].loss,
+            logs[2].records()[t].loss
+        );
+    }
+    for log in &logs {
+        println!("{:>8}: {}", log.name, log.sparkline(|r| r.loss, 50));
+    }
+
+    if p.get_bool("with-g") {
+        let (steps, factor) = fig1::lr_scaling(iters);
+        let stall = steps.iter().take_while(|&&s| s < 1e-9).count();
+        println!("\nlearning-rate-scaling variant (loss + G(theta2), G'(1)=1, eta=0.01):");
+        println!("  TOP-1 stalls for {stall} iterations, then releases an accumulated");
+        println!("  step {factor:.1}x the dense step — the paper's 'factor ~50' effect");
+        println!("  (ours is ~21-26x under the sigma(-1)=0.269 gradient convention).");
+    }
+}

@@ -1,0 +1,257 @@
+"""AOT pipeline: lower every (model, shape) variant to HLO *text*.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the rust
+crate's XLA (xla_extension 0.5.1) rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/gen_hlo.py.
+
+Outputs (all under ``artifacts/``):
+
+  <name>.hlo.txt        one per artifact (see ARTIFACT REGISTRY below)
+  init_<model>.f32      seeded initial flat parameter vector (raw LE f32)
+  manifest.json         artifact input/output specs + model param layouts
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` (the Makefile
+target `artifacts` does this, skipping the rebuild when inputs are
+unchanged).  ``--full`` additionally lowers the 11.2M-param resnet18
+graphs (slow; not needed by the default test/bench suite).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import error_feedback as k_ef
+from .kernels import quantize as k_quant
+from .kernels import regtopk as k_regtopk
+from .kernels import sgd as k_sgd
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+_DTYPE_NAMES = {np.dtype("float32"): "f32", np.dtype("int32"): "i32"}
+
+
+class Registry:
+    """Collects artifacts, writes HLO files + the JSON manifest."""
+
+    def __init__(self, out_dir: pathlib.Path):
+        self.out_dir = out_dir
+        self.manifest: dict = {"artifacts": {}, "models": {}}
+
+    def add(self, name: str, fn, in_specs: list, n_outputs: int, doc: str):
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        path = self.out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        self.manifest["artifacts"][name] = {
+            "file": path.name,
+            "doc": doc,
+            "inputs": [
+                {"shape": list(s.shape), "dtype": _DTYPE_NAMES[np.dtype(s.dtype)]}
+                for s in in_specs
+            ],
+            "outputs": n_outputs,
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        }
+        print(f"  {name}: {len(text)} chars -> {path.name}")
+
+    def add_model(self, name: str, pspec: M.ParamSpec, seed: int):
+        w0 = pspec.init(seed)
+        init_file = f"init_{name}.f32"
+        (self.out_dir / init_file).write_bytes(w0.astype("<f4").tobytes())
+        self.manifest["models"][name] = {
+            "param_count": pspec.total,
+            "init_file": init_file,
+            "init_seed": seed,
+            "layers": pspec.manifest(),
+        }
+        print(f"  model {name}: J={pspec.total} ({init_file})")
+
+    def finish(self):
+        (self.out_dir / "manifest.json").write_text(
+            json.dumps(self.manifest, indent=1)
+        )
+        print(f"  manifest.json: {len(self.manifest['artifacts'])} artifacts")
+
+
+# ---------------------------------------------------------------------------
+# ARTIFACT REGISTRY
+# ---------------------------------------------------------------------------
+
+# Fig. 2 geometry (paper §4.1): J=100 features, D=500 points per worker.
+LINREG_J, LINREG_D = 100, 500
+# Fig. 3 geometry (paper §4.2): batch 20 per worker, 32x32x3 inputs.
+CNN_BATCH, EVAL_BATCH = 20, 100
+# Standalone kernel artifacts at a generic large J (2^17) for the
+# runtime's large-vector sparsification path + kernel benches.
+KERNEL_J = 1 << 17
+
+
+def build(out_dir: pathlib.Path, full: bool) -> None:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    reg = Registry(out_dir)
+
+    f32 = jnp.float32
+    i32 = jnp.int32
+
+    # ---- linear regression (Fig. 2) -----------------------------------
+    wj = spec([LINREG_J])
+    xs = spec([LINREG_D, LINREG_J])
+    ys = spec([LINREG_D])
+    reg.add(
+        "linreg_grad",
+        M.linreg_grad,
+        [wj, xs, ys],
+        2,
+        "LS loss+grad, Fig.2 geometry (J=100, D=500)",
+    )
+    reg.add(
+        "linreg_worker_step",
+        M.worker_step(M.linreg_grad),
+        [wj, wj, wj, wj, wj, xs, ys, spec([3])],
+        3,
+        "fused grad + REGTOP-k score (L2+L1), Fig.2 geometry",
+    )
+
+    # ---- MLP on flattened CIFAR-like inputs ---------------------------
+    mlp = M.mlp_spec(3072, [128], 10)
+    wm = spec([mlp.total])
+    xm = spec([CNN_BATCH, 3072])
+    ym = spec([CNN_BATCH], i32)
+    reg.add(
+        "mlp_grad",
+        lambda w, x, y: M.mlp_grad(mlp, w, x, y),
+        [wm, xm, ym],
+        2,
+        "MLP(3072-128-10) loss+grad, batch 20",
+    )
+    reg.add_model("mlp", mlp, seed=7)
+
+    # ---- ResNet-8 (Fig. 3 default substrate) --------------------------
+    net = M.resnet8()
+    wc = spec([net.param_count])
+    xc_ = spec([CNN_BATCH, 32, 32, 3])
+    yc = spec([CNN_BATCH], i32)
+    reg.add(
+        "cnn_grad_resnet8",
+        net.grad,
+        [wc, xc_, yc],
+        2,
+        "ResNet-8 loss+grad, batch 20 (Fig.3 substrate)",
+    )
+    reg.add(
+        "cnn_eval_resnet8",
+        net.logits,
+        [wc, spec([EVAL_BATCH, 32, 32, 3])],
+        1,
+        "ResNet-8 logits, eval batch 100",
+    )
+    reg.add(
+        "cnn_worker_step_resnet8",
+        M.worker_step(net.grad),
+        [wc, wc, wc, wc, wc, xc_, yc, spec([3])],
+        3,
+        "fused ResNet-8 grad + REGTOP-k score (L2+L1)",
+    )
+    reg.add_model("resnet8", net.spec, seed=42)
+
+    # ---- resnet18 (paper-exact model; opt-in, slow to lower) ----------
+    if full:
+        net18 = M.resnet18()
+        w18 = spec([net18.param_count])
+        reg.add(
+            "cnn_grad_resnet18",
+            net18.grad,
+            [w18, xc_, yc],
+            2,
+            "ResNet-18 (11.2M params) loss+grad, batch 20",
+        )
+        reg.add_model("resnet18", net18.spec, seed=42)
+
+    # ---- standalone L1 kernels at generic J ---------------------------
+    vk = spec([KERNEL_J])
+    reg.add(
+        "regtopk_score",
+        lambda e, g, ap, gp, mp, s: k_regtopk.regtopk_score(
+            e, g, ap, gp, mp, s[0], s[1], s[2]
+        ),
+        [vk, vk, vk, vk, vk, spec([3])],
+        2,
+        f"fused REGTOP-k score pass, J=2^17={KERNEL_J}",
+    )
+    reg.add(
+        "error_feedback",
+        k_ef.error_feedback,
+        [vk, vk],
+        2,
+        f"fused sparsify + error update, J={KERNEL_J}",
+    )
+    reg.add(
+        "sgd_apply",
+        lambda w, g, s: k_sgd.sgd_apply(w, g, s[0]),
+        [vk, vk, spec([1])],
+        1,
+        f"fused SGD apply, J={KERNEL_J}",
+    )
+    reg.add(
+        "quantize_sr4",
+        lambda x, noise: k_quant.quantize_sr(x, noise, 4),
+        [vk, vk],
+        1,
+        f"4-bit stochastic-rounding quantizer, J={KERNEL_J}",
+    )
+    reg.add(
+        "momentum_apply",
+        lambda w, m, g, s: k_sgd.momentum_apply(w, m, g, s[0], s[1]),
+        [vk, vk, vk, spec([2])],
+        2,
+        f"fused momentum apply, J={KERNEL_J}",
+    )
+
+    reg.finish()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--full", action="store_true", help="also lower resnet18 (11.2M params)"
+    )
+    # Legacy single-file interface kept for Makefile compatibility: the
+    # stamp target passes --out <dir>/STAMP; we derive the dir from it.
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    out_dir = (
+        pathlib.Path(args.out).parent
+        if args.out
+        else pathlib.Path(args.out_dir)
+    )
+    build(out_dir, full=args.full)
+    if args.out:
+        pathlib.Path(args.out).write_text("ok\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Pallas kernel for the fused sparsify + error-accumulation update.
+
+Alg. 1 lines 7-8 of the paper in one memory-bound sweep:
+
+    ghat = mask . acc        (the sparsified gradient sent upstream)
+    eps' = acc - ghat        (the error carried to iteration t+1)
+
+Invariant (property-tested): acc == ghat + eps' bit-exactly, because
+eps' is computed as a subtraction of the masked copy — this is the
+error-feedback *conservation law* that makes TOP-k/REGTOP-k unbiased
+over time.  Oracle: ``ref.error_feedback``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 16384
+
+
+def _ef_kernel(acc_ref, mask_ref, ghat_ref, eps_ref):
+    acc = acc_ref[...]
+    ghat = mask_ref[...] * acc
+    ghat_ref[...] = ghat
+    eps_ref[...] = acc - ghat
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def error_feedback(acc, mask, *, block=BLOCK):
+    """Fused (ghat, eps_next) update; matches ``ref.error_feedback``."""
+    (j,) = acc.shape
+    pad = (-j) % block
+    padded = j + pad
+
+    def pad1(x):
+        return jnp.pad(x, (0, pad)) if pad else x
+
+    grid = (padded // block,)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    ghat, eps = pl.pallas_call(
+        _ef_kernel,
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((padded,), acc.dtype),
+            jax.ShapeDtypeStruct((padded,), acc.dtype),
+        ],
+        interpret=True,
+    )(pad1(acc), pad1(mask))
+    return ghat[:j], eps[:j]

@@ -1,0 +1,59 @@
+"""Pallas kernel: scaled stochastic-rounding quantization of the
+transmitted values (the compression axis orthogonal to sparsity).
+
+Randomness is supplied as a uniform-[0,1) noise input so the kernel
+stays pure (and matches the rust `comm::Quantizer` given the same
+noise); the scale (max|x| / levels) is computed by a first reduction
+pass, mirroring the two-phase structure of the top-k kernels.
+
+Oracle: ``ref.quantize_sr``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 16384
+
+
+def _quant_kernel(x_ref, noise_ref, scal_ref, out_ref):
+    scale = scal_ref[0]
+    x = x_ref[...] / scale
+    lo = jnp.floor(x)
+    frac = x - lo
+    q = jnp.where(noise_ref[...] < frac, lo + 1.0, lo)
+    out_ref[...] = q * scale
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block"))
+def quantize_sr(x, noise, bits, *, block=BLOCK):
+    """Quantize to ``bits`` with stochastic rounding; returns the
+    dequantized (lossy) values.  ``noise`` is uniform [0,1) of x's
+    shape.  bits >= 32 is a passthrough."""
+    if bits >= 32:
+        return x
+    (j,) = x.shape
+    levels = float(max((1 << (bits - 1)) - 1, 1))
+    maxabs = jnp.max(jnp.abs(x))
+    scale = jnp.where(maxabs > 0, maxabs / levels, 1.0)
+    pad = (-j) % block
+    padded = j + pad
+
+    def pad1(v):
+        return jnp.pad(v, (0, pad)) if pad else v
+
+    grid = (padded // block,)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    out = pl.pallas_call(
+        _quant_kernel,
+        grid=grid,
+        in_specs=[spec, spec, pl.BlockSpec((1,), lambda i: (0,))],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((padded,), x.dtype),
+        interpret=True,
+    )(pad1(x), pad1(noise), scale.reshape(1))
+    return out[:j]

@@ -1,0 +1,163 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the *single source of truth* for kernel numerics: each Pallas
+kernel in `regtopk.py`, `topk_mask.py`, `error_feedback.py` and `sgd.py`
+must match its oracle here to float tolerance (see python/tests/).  The
+rust-native sparsifier implementations are additionally cross-checked
+against golden vectors produced from these oracles.
+
+All functions follow Algorithm 1 of the paper (REGTOP-k, Bereyhi et al.,
+2024) and use its notation:
+
+    a_n^t      accumulated gradient         (``acc``)
+    eps_n^t    sparsification error         (``eps``)
+    g_n^t      local gradient               (``grad``)
+    g^{t-1}    previous aggregated gradient (``gagg_prev``)
+    s_n^{t-1}  previous sparsification mask (``mask_prev``)
+    Delta_n^t  posterior distortion         (``delta``)
+    omega_n    aggregation weight
+    mu, Q      REGTOP-k hyper-parameters
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+# Division guard: entries with |omega * a| below this are treated as
+# "locally dead" and receive the never-sent prior Q (their score is ~0
+# anyway because score = a * tanh(.)).
+DIV_EPS = 1e-30
+
+
+def accumulate(eps, grad):
+    """Accumulated gradient  a_n^t = eps_n^t + g_n^t  (Alg. 1, line 4)."""
+    return eps + grad
+
+
+def posterior_distortion(acc, acc_prev, gagg_prev, mask_prev, omega, q):
+    """Posterior distortion Delta_n^t (Alg. 1, line 5).
+
+    Delta = s^{t-1} . [(g^{t-1} - omega * a^{t-1}) / (omega * a^t)]
+            + Q * (1 - s^{t-1})
+
+    Entries where ``omega * acc`` is (numerically) zero are mapped to Q:
+    their regularized score is zero regardless, and this keeps the
+    division well-defined (matches the rust implementation in the
+    positions that matter).
+    """
+    denom = omega * acc
+    safe = jnp.abs(denom) > DIV_EPS
+    num = gagg_prev - omega * acc_prev
+    delta_sent = jnp.where(safe, num / jnp.where(safe, denom, 1.0), q)
+    return mask_prev * delta_sent + q * (1.0 - mask_prev)
+
+
+def regularizer(delta, mu):
+    """u_mu(|1 + Delta|) = tanh(|1 + Delta| / mu)   (Prop. 2 / eq. 15)."""
+    return jnp.tanh(jnp.abs(1.0 + delta) / mu)
+
+
+def regtopk_score(eps, grad, acc_prev, gagg_prev, mask_prev, omega, mu, q):
+    """Fused score pass: returns (acc, score) with
+
+    acc   = eps + grad
+    score = acc * tanh(|1 + Delta| / mu)          (eq. 16)
+
+    Selection is Top_k over |score|; the *sent values* are ``acc`` (not
+    the score) — eq. (16) only reorders the selection.
+    """
+    acc = accumulate(eps, grad)
+    delta = posterior_distortion(acc, acc_prev, gagg_prev, mask_prev, omega, q)
+    return acc, acc * regularizer(delta, mu)
+
+
+def topk_mask(score, k):
+    """Exact Top_k selector over amplitudes (eq. 5).
+
+    Ties are broken toward the *lower index* (stable), matching the rust
+    `sparse::topk` implementation.  Returns a {0,1} float mask.
+    """
+    j = score.shape[-1]
+    k = min(k, j)
+    if k == 0:
+        return jnp.zeros_like(score)
+    mag = jnp.abs(score)
+    # lax.top_k is stable: ties break toward the lower index, matching
+    # the rust `sparse::topk` implementation.
+    idx = lax.top_k(mag, k)[1]
+    return jnp.zeros_like(score).at[idx].set(1.0)
+
+
+def threshold_mask(score, tau):
+    """Mask of entries with |score| >= tau (phase-2 of two-phase top-k)."""
+    return (jnp.abs(score) >= tau).astype(score.dtype)
+
+
+def error_feedback(acc, mask):
+    """Sparsify + error update (Alg. 1, lines 7-8).
+
+    ghat = mask . acc  (sent to the server)
+    eps' = acc - ghat  (carried to iteration t+1)
+
+    Invariant:  acc == ghat + eps'   exactly (fp-exact: subtraction of a
+    masked copy).
+    """
+    ghat = mask * acc
+    return ghat, acc - ghat
+
+
+def sgd_apply(w, grad, eta):
+    """Plain SGD step  w' = w - eta * g."""
+    return w - eta * grad
+
+
+def momentum_apply(w, m, grad, eta, beta):
+    """Heavy-ball momentum:  m' = beta*m + g ;  w' = w - eta*m'."""
+    m_next = beta * m + grad
+    return w - eta * m_next, m_next
+
+
+def block_absmax(score, block):
+    """Per-block max |score| — phase-1 statistics for two-phase top-k."""
+    j = score.shape[-1]
+    pad = (-j) % block
+    mag = jnp.abs(jnp.pad(score, (0, pad)))
+    return mag.reshape(-1, block).max(axis=-1)
+
+
+def regtopk_step(eps, grad, acc_prev, gagg_prev, mask_prev, omega, mu, q, k):
+    """One full REGTOP-k worker step (Alg. 1 lines 4-8), dense oracle.
+
+    Returns (ghat, eps_next, mask, acc, score).  Used by the algorithm-
+    level tests and by the golden-vector generator for the rust side.
+    """
+    acc, score = regtopk_score(
+        eps, grad, acc_prev, gagg_prev, mask_prev, omega, mu, q
+    )
+    mask = topk_mask(score, k)
+    ghat, eps_next = error_feedback(acc, mask)
+    return ghat, eps_next, mask, acc, score
+
+
+def topk_step(eps, grad, k):
+    """One classical TOP-k worker step (the paper's baseline)."""
+    acc = accumulate(eps, grad)
+    mask = topk_mask(acc, k)
+    ghat, eps_next = error_feedback(acc, mask)
+    return ghat, eps_next, mask, acc
+
+
+def quantize_sr(x, noise, bits):
+    """Scaled stochastic-rounding quantizer (oracle for quantize.py;
+    matches rust ``comm::Quantizer`` given identical noise)."""
+    if bits >= 32:
+        return x
+    levels = float(max((1 << (bits - 1)) - 1, 1))
+    maxabs = jnp.max(jnp.abs(x))
+    scale = jnp.where(maxabs > 0, maxabs / levels, 1.0)
+    xs = x / scale
+    lo = jnp.floor(xs)
+    frac = xs - lo
+    q = jnp.where(noise < frac, lo + 1.0, lo)
+    return q * scale

@@ -1,0 +1,102 @@
+"""Pallas kernel for the REGTOP-k score pass (the paper's compute hot-spot).
+
+One fused element-wise sweep computes, per gradient entry j (Alg. 1
+lines 4-6 of the paper):
+
+    a     = eps + g                                   (accumulate)
+    Delta = s_prev ? (gagg_prev - omega*a_prev)/(omega*a) : Q
+    score = a * tanh(|1 + Delta| / mu)                (eq. 16)
+
+Fusing the three lines means each of the five input vectors is read
+from HBM exactly once and the two outputs written once — the pass is
+memory-bound (arithmetic intensity ~= 1.3 flop/byte), so single-sweep
+is the roofline-optimal structure on TPU.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the kernel is a pure
+VPU pass; we view the length-J vector as rows of (8, 128) lanes and
+tile ``BLOCK`` elements per grid step so every live block fits in VMEM
+(7 inputs/outputs x BLOCK x 4 B; BLOCK=16384 -> ~448 KiB << 16 MiB,
+leaving room for double-buffering).  ``interpret=True`` is mandatory in
+this image: real-TPU lowering emits a Mosaic custom-call the CPU PJRT
+plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Elements per grid step.  Multiple of 8*128 (TPU VPU tile); see module
+# docstring for the VMEM budget.
+BLOCK = 16384
+
+# Must match ref.DIV_EPS.
+DIV_EPS = 1e-30
+
+
+def _regtopk_kernel(
+    eps_ref,
+    grad_ref,
+    acc_prev_ref,
+    gagg_prev_ref,
+    mask_prev_ref,
+    scal_ref,  # (3,) = [omega, mu, q] in SMEM-like small block
+    acc_out_ref,
+    score_out_ref,
+):
+    omega = scal_ref[0]
+    mu = scal_ref[1]
+    q = scal_ref[2]
+
+    acc = eps_ref[...] + grad_ref[...]
+    denom = omega * acc
+    safe = jnp.abs(denom) > DIV_EPS
+    num = gagg_prev_ref[...] - omega * acc_prev_ref[...]
+    delta_sent = jnp.where(safe, num / jnp.where(safe, denom, 1.0), q)
+    delta = mask_prev_ref[...] * delta_sent + q * (1.0 - mask_prev_ref[...])
+    reg = jnp.tanh(jnp.abs(1.0 + delta) / mu)
+
+    acc_out_ref[...] = acc
+    score_out_ref[...] = acc * reg
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def regtopk_score(
+    eps, grad, acc_prev, gagg_prev, mask_prev, omega, mu, q, *, block=BLOCK
+):
+    """Fused REGTOP-k score pass; matches ``ref.regtopk_score``.
+
+    All vector arguments are rank-1 with identical length J (any J >= 1;
+    internally padded to a multiple of ``block``).  ``omega``, ``mu``,
+    ``q`` are python or 0-d floats.  Returns ``(acc, score)``.
+    """
+    (j,) = eps.shape
+    dtype = eps.dtype
+    pad = (-j) % block
+    padded = j + pad
+
+    def pad1(x):
+        return jnp.pad(x, (0, pad)) if pad else x
+
+    # Padded tail: mask_prev=0 and acc=0 there, so delta=Q and score=0 —
+    # the pad lanes never affect real lanes (element-wise kernel).
+    args = tuple(pad1(x) for x in (eps, grad, acc_prev, gagg_prev, mask_prev))
+    scal = jnp.array([omega, mu, q], dtype=dtype)
+
+    grid = (padded // block,)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    acc, score = pl.pallas_call(
+        _regtopk_kernel,
+        grid=grid,
+        in_specs=[spec] * 5 + [pl.BlockSpec((3,), lambda i: (0,))],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((padded,), dtype),
+            jax.ShapeDtypeStruct((padded,), dtype),
+        ],
+        interpret=True,  # CPU-PJRT: Mosaic custom-calls are TPU-only.
+    )(*args, scal)
+    return acc[:j], score[:j]

@@ -1,0 +1,77 @@
+"""Pallas kernels for two-phase top-k selection support.
+
+Exact data-dependent top-k is selection, which the TPU vector units do
+not natively perform.  The standard TPU scheme (mirrored from the GPU
+`torch.topk` the paper used) is two-phase:
+
+  phase 1 (device, this file): per-block magnitude statistics
+           (`block_absmax`) reduce J lanes to J/BLOCK candidates;
+  phase 2 (host / scalar core): find the k-th magnitude tau among the
+           surviving candidates (rust `sparse::topk` does this with
+           quickselect), then
+  phase 3 (device, this file): `threshold_mask` re-sweeps the vector and
+           emits the {0,1} mask of entries with |score| >= tau.
+
+Phases 1 and 3 are single memory-bound sweeps; phase 2 touches only the
+reduced candidate set.  Oracles: ``ref.block_absmax``/``ref.threshold_mask``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 16384
+
+
+def _absmax_kernel(score_ref, out_ref):
+    out_ref[0] = jnp.max(jnp.abs(score_ref[...]))
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def block_absmax(score, *, block=BLOCK):
+    """Per-block max |score|; phase-1 statistics (matches ref.block_absmax)."""
+    (j,) = score.shape
+    pad = (-j) % block
+    padded = j + pad
+    x = jnp.pad(score, (0, pad)) if pad else score  # pad lanes are 0
+    grid = (padded // block,)
+    out = pl.pallas_call(
+        _absmax_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((padded // block,), score.dtype),
+        interpret=True,
+    )(x)
+    return out
+
+
+def _threshold_kernel(score_ref, tau_ref, mask_ref):
+    mask_ref[...] = (jnp.abs(score_ref[...]) >= tau_ref[0]).astype(
+        score_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def threshold_mask(score, tau, *, block=BLOCK):
+    """{0,1} mask of |score| >= tau; phase-3 sweep (matches ref.threshold_mask)."""
+    (j,) = score.shape
+    pad = (-j) % block
+    padded = j + pad
+    x = jnp.pad(score, (0, pad)) if pad else score
+    tau_arr = jnp.asarray(tau, dtype=score.dtype).reshape(1)
+    grid = (padded // block,)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    mask = pl.pallas_call(
+        _threshold_kernel,
+        grid=grid,
+        in_specs=[spec, pl.BlockSpec((1,), lambda i: (0,))],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((padded,), score.dtype),
+        interpret=True,
+    )(x, tau_arr)
+    return mask[:j]

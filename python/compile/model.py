@@ -1,0 +1,310 @@
+"""L2: JAX model definitions (build-time only; never on the request path).
+
+Every training workload in the paper is defined here as a pure function
+over a *flat* parameter vector ``w ∈ R^J`` — the sparsification
+algorithms (L1/L3) operate on flat gradient vectors, so the flat-vector
+interface is the contract between the layers:
+
+  * linear regression (least squares)      — Fig. 2 workload (§4.1)
+  * logistic regression                    — Fig. 1 toy (§1.2)
+  * MLP classifier                         — extra workload
+  * ResNet-CIFAR family (resnet8/20/18)    — Fig. 3 workload (§4.2)
+
+For each model there are three exported graphs:
+
+  ``*_loss(w, ...)``        scalar empirical loss F_n(w)         (eq. 4)
+  ``*_grad(w, ...)``        (loss, flat gradient)
+  ``worker_step(grad_fn)``  fused L2+L1 graph: gradient + REGTOP-k
+                            accumulate/score (calls the Pallas kernel
+                            so it lowers into the same HLO module)
+
+``aot.py`` lowers concrete-shape instances of these to HLO text that
+the rust runtime loads via PJRT.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .kernels import regtopk as k_regtopk
+
+# ---------------------------------------------------------------------------
+# Flat-parameter packing
+# ---------------------------------------------------------------------------
+
+
+class ParamSpec:
+    """Ordered (name, shape) list defining the layout of the flat vector.
+
+    The same layout is exported to ``artifacts/manifest.json`` so the
+    rust side can slice per-layer statistics out of flat vectors.
+    """
+
+    def __init__(self, entries: list[tuple[str, tuple[int, ...]]]):
+        self.entries = entries
+        self.sizes = [int(np.prod(s)) if s else 1 for _, s in entries]
+        self.offsets = np.concatenate([[0], np.cumsum(self.sizes)])
+        self.total = int(self.offsets[-1])
+
+    def unflatten(self, w: jax.Array) -> dict[str, jax.Array]:
+        out = {}
+        for (name, shape), size, off in zip(
+            self.entries, self.sizes, self.offsets[:-1]
+        ):
+            out[name] = lax.dynamic_slice(w, (int(off),), (size,)).reshape(shape)
+        return out
+
+    def flatten(self, params: dict[str, jax.Array]) -> jax.Array:
+        return jnp.concatenate(
+            [params[name].reshape(-1) for name, _ in self.entries]
+        )
+
+    def init(self, seed: int) -> np.ndarray:
+        """He-normal init for weight tensors, zeros for biases/BN-beta,
+        ones for BN-gamma.  Deterministic given ``seed``."""
+        rng = np.random.default_rng(seed)
+        chunks = []
+        for name, shape in self.entries:
+            n = int(np.prod(shape)) if shape else 1
+            if name.endswith("gamma"):
+                chunks.append(np.ones(n, np.float32))
+            elif name.endswith(("beta", "bias", "b")):
+                chunks.append(np.zeros(n, np.float32))
+            else:
+                fan_in = int(np.prod(shape[:-1])) if len(shape) > 1 else shape[0]
+                std = math.sqrt(2.0 / max(fan_in, 1))
+                chunks.append(rng.normal(0.0, std, n).astype(np.float32))
+        return np.concatenate(chunks)
+
+    def manifest(self) -> list[dict[str, Any]]:
+        return [
+            {"name": n, "shape": list(s), "offset": int(o), "size": int(z)}
+            for (n, s), z, o in zip(self.entries, self.sizes, self.offsets[:-1])
+        ]
+
+
+# ---------------------------------------------------------------------------
+# Linear regression (Fig. 2, §4.1) — least-squares loss
+# ---------------------------------------------------------------------------
+
+
+def linreg_loss(w, x, y):
+    """F_n(w) = 1/(2 D) * ||X w - y||^2  (LS loss used by the paper's
+    linear-regression testbed; the 1/2 makes grad = X^T(Xw-y)/D)."""
+    r = x @ w - y
+    return 0.5 * jnp.mean(r * r)
+
+
+def linreg_grad(w, x, y):
+    return jax.value_and_grad(linreg_loss)(w, x, y)
+
+
+# ---------------------------------------------------------------------------
+# Logistic regression (Fig. 1 toy, §1.2)
+# ---------------------------------------------------------------------------
+
+
+def logistic_loss(w, x, y):
+    """Cross-entropy with ±1 labels: mean log(1 + exp(-y <w;x>))."""
+    z = (x @ w) * y
+    return jnp.mean(jnp.logaddexp(0.0, -z))
+
+
+def logistic_grad(w, x, y):
+    return jax.value_and_grad(logistic_loss)(w, x, y)
+
+
+# ---------------------------------------------------------------------------
+# MLP classifier (extra workload; exercises multi-layer flat packing)
+# ---------------------------------------------------------------------------
+
+
+def mlp_spec(in_dim: int, hidden: list[int], classes: int) -> ParamSpec:
+    entries = []
+    dims = [in_dim] + hidden + [classes]
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        entries.append((f"fc{i}.w", (a, b)))
+        entries.append((f"fc{i}.b", (b,)))
+    return ParamSpec(entries)
+
+
+def mlp_logits(spec: ParamSpec, w, x):
+    p = spec.unflatten(w)
+    h = x
+    n_layers = len(spec.entries) // 2
+    for i in range(n_layers):
+        h = h @ p[f"fc{i}.w"] + p[f"fc{i}.b"]
+        if i < n_layers - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def softmax_xent(logits, labels):
+    """Mean softmax cross-entropy; labels are int32 class ids."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+def mlp_loss(spec: ParamSpec, w, x, y):
+    return softmax_xent(mlp_logits(spec, w, x), y)
+
+
+def mlp_grad(spec: ParamSpec, w, x, y):
+    return jax.value_and_grad(lambda ww: mlp_loss(spec, ww, x, y))(w)
+
+
+# ---------------------------------------------------------------------------
+# ResNet-CIFAR family (Fig. 3, §4.2)
+# ---------------------------------------------------------------------------
+#
+# Two variants:
+#   * resnet_cifar(n, width):  He et al. CIFAR family, depth 6n+2, stage
+#     widths (w, 2w, 4w).  resnet8 = (n=1, w=8): CPU-tractable e2e runs.
+#   * resnet18(width=64):      the paper's model — ImageNet basic-block
+#     layout [2,2,2,2] with widths (w, 2w, 4w, 8w) adapted to 32x32
+#     inputs (3x3 stem, no max-pool), 11.2M params at w=64.
+#
+# BatchNorm uses training-mode batch statistics (stateless — no running
+# averages), which is the behaviour that matters for gradient statistics.
+
+
+def _conv(x, k, stride):
+    return lax.conv_general_dilated(
+        x,
+        k,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _bn(x, gamma, beta, eps=1e-5):
+    mean = jnp.mean(x, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(x, axis=(0, 1, 2), keepdims=True)
+    return gamma * (x - mean) * lax.rsqrt(var + eps) + beta
+
+
+class ResNetDef:
+    """Architecture description + flat-parameter forward pass."""
+
+    def __init__(self, stage_blocks: list[int], widths: list[int], classes=10):
+        assert len(stage_blocks) == len(widths)
+        self.stage_blocks = stage_blocks
+        self.widths = widths
+        self.classes = classes
+        self.spec = self._build_spec()
+
+    def _build_spec(self) -> ParamSpec:
+        e: list[tuple[str, tuple[int, ...]]] = []
+        w0 = self.widths[0]
+        e.append(("stem.conv", (3, 3, 3, w0)))
+        e.append(("stem.gamma", (w0,)))
+        e.append(("stem.beta", (w0,)))
+        c_in = w0
+        for s, (nb, c_out) in enumerate(zip(self.stage_blocks, self.widths)):
+            for b in range(nb):
+                pre = f"s{s}b{b}"
+                cin = c_in if b == 0 else c_out
+                e.append((f"{pre}.conv1", (3, 3, cin, c_out)))
+                e.append((f"{pre}.gamma1", (c_out,)))
+                e.append((f"{pre}.beta1", (c_out,)))
+                e.append((f"{pre}.conv2", (3, 3, c_out, c_out)))
+                e.append((f"{pre}.gamma2", (c_out,)))
+                e.append((f"{pre}.beta2", (c_out,)))
+                if b == 0 and cin != c_out:
+                    e.append((f"{pre}.proj", (1, 1, cin, c_out)))
+            c_in = c_out
+        e.append(("fc.w", (self.widths[-1], self.classes)))
+        e.append(("fc.b", (self.classes,)))
+        return ParamSpec(e)
+
+    def logits(self, w, x):
+        p = self.spec.unflatten(w)
+        h = jax.nn.relu(
+            _bn(_conv(x, p["stem.conv"], 1), p["stem.gamma"], p["stem.beta"])
+        )
+        for s, (nb, c_out) in enumerate(zip(self.stage_blocks, self.widths)):
+            for b in range(nb):
+                pre = f"s{s}b{b}"
+                stride = 2 if (b == 0 and s > 0) else 1
+                y = jax.nn.relu(
+                    _bn(
+                        _conv(h, p[f"{pre}.conv1"], stride),
+                        p[f"{pre}.gamma1"],
+                        p[f"{pre}.beta1"],
+                    )
+                )
+                y = _bn(
+                    _conv(y, p[f"{pre}.conv2"], 1),
+                    p[f"{pre}.gamma2"],
+                    p[f"{pre}.beta2"],
+                )
+                if f"{pre}.proj" in p:
+                    h = _conv(h, p[f"{pre}.proj"], stride)
+                elif stride != 1:
+                    h = h[:, ::stride, ::stride, :]
+                h = jax.nn.relu(h + y)
+        h = jnp.mean(h, axis=(1, 2))  # global average pool
+        return h @ p["fc.w"] + p["fc.b"]
+
+    def loss(self, w, x, y):
+        return softmax_xent(self.logits(w, x), y)
+
+    def grad(self, w, x, y):
+        return jax.value_and_grad(lambda ww: self.loss(ww, x, y))(w)
+
+    @property
+    def param_count(self) -> int:
+        return self.spec.total
+
+
+def resnet_cifar(n: int, width: int = 16) -> ResNetDef:
+    """He-et-al CIFAR ResNet: depth 6n+2, widths (w, 2w, 4w)."""
+    return ResNetDef([n, n, n], [width, 2 * width, 4 * width])
+
+
+def resnet8(width: int = 8) -> ResNetDef:
+    return resnet_cifar(1, width)
+
+
+def resnet20(width: int = 16) -> ResNetDef:
+    return resnet_cifar(3, width)
+
+
+def resnet18(width: int = 64) -> ResNetDef:
+    """The paper's model: [2,2,2,2] basic blocks, 11.2M params at w=64."""
+    return ResNetDef([2, 2, 2, 2], [width, 2 * width, 4 * width, 8 * width])
+
+
+# ---------------------------------------------------------------------------
+# Fused worker step  (L2 gradient + L1 REGTOP-k score in one HLO module)
+# ---------------------------------------------------------------------------
+
+
+def worker_step(grad_fn):
+    """Wrap a ``(w, x, y) -> (loss, grad)`` graph into the fused
+    REGTOP-k worker step used by the rust coordinator:
+
+        inputs : w, eps, acc_prev, gagg_prev, mask_prev, x, y,
+                 scal = [omega, mu, q]          (f32[3])
+        outputs: (loss, acc, score)
+
+    One PJRT round-trip per worker per iteration; selection (top-k over
+    |score|) and the error update happen in rust on the returned
+    vectors (or via the error_feedback artifact).
+    """
+
+    def step(w, eps, acc_prev, gagg_prev, mask_prev, x, y, scal):
+        loss, g = grad_fn(w, x, y)
+        acc, score = k_regtopk.regtopk_score(
+            eps, g, acc_prev, gagg_prev, mask_prev, scal[0], scal[1], scal[2]
+        )
+        return loss, acc, score
+
+    return step

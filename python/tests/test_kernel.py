@@ -1,0 +1,229 @@
+"""Pallas kernels vs pure-jnp oracles — the CORE correctness signal.
+
+Every kernel in python/compile/kernels/ is swept against its ref.py
+oracle with hypothesis over shapes, block sizes and value regimes
+(including the adversarial ones: zeros in the denominator of the
+posterior distortion, huge magnitudes, tiny mu).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import error_feedback as k_ef
+from compile.kernels import ref
+from compile.kernels import regtopk as k_regtopk
+from compile.kernels import sgd as k_sgd
+from compile.kernels import topk_mask as k_topk
+
+# Hypothesis profile: kernels run under interpret=True (slow), keep the
+# example counts moderate but the value space adversarial.
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def vec(rng, j, scale=1.0):
+    return jnp.asarray(rng.standard_normal(j) * scale, jnp.float32)
+
+
+@st.composite
+def score_case(draw):
+    j = draw(st.integers(1, 700))
+    block = draw(st.sampled_from([32, 128, 256]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    omega = draw(st.sampled_from([1.0, 0.5, 0.125, 1 / 20]))
+    mu = draw(st.sampled_from([1e-3, 0.1, 0.5, 2.0]))
+    q = draw(st.sampled_from([0.0, 0.5, 1.0, 10.0]))
+    scale = draw(st.sampled_from([1e-4, 1.0, 1e4]))
+    return j, block, seed, omega, mu, q, scale
+
+
+class TestRegTopKScore:
+    @settings(**SETTINGS)
+    @given(score_case())
+    def test_matches_ref(self, case):
+        j, block, seed, omega, mu, q, scale = case
+        rng = np.random.default_rng(seed)
+        eps, g, ap, gp = (vec(rng, j, scale) for _ in range(4))
+        mp = jnp.asarray(rng.integers(0, 2, j), jnp.float32)
+        a_ref, s_ref = ref.regtopk_score(eps, g, ap, gp, mp, omega, mu, q)
+        a_ker, s_ker = k_regtopk.regtopk_score(
+            eps, g, ap, gp, mp, omega, mu, q, block=block
+        )
+        np.testing.assert_allclose(a_ker, a_ref, rtol=1e-6, atol=0)
+        np.testing.assert_allclose(
+            s_ker, s_ref, rtol=1e-5, atol=1e-6 * scale
+        )
+
+    def test_zero_denominator_entries_are_finite(self):
+        # acc = eps + g == 0 at masked positions: distortion guard must
+        # kick in; score must be exactly 0 (acc==0) and finite.
+        j = 64
+        eps = jnp.zeros(j)
+        g = jnp.zeros(j)
+        ap = jnp.ones(j)
+        gp = jnp.ones(j)
+        mp = jnp.ones(j)
+        acc, score = k_regtopk.regtopk_score(
+            eps, g, ap, gp, mp, 0.5, 0.1, 1.0, block=32
+        )
+        assert np.all(np.isfinite(np.asarray(score)))
+        np.testing.assert_array_equal(np.asarray(score), np.zeros(j))
+
+    def test_destructive_cancellation_damps_score(self):
+        # Paper §3.2 discussion case (2): entry sent last round whose
+        # aggregate came back ~0 has Delta ~= -1 -> tanh(0) ~= 0 -> score
+        # damped to ~0 even though |acc| is the largest.
+        eps = jnp.zeros(4)
+        g = jnp.array([100.0, 1.0, 0.5, 0.1])
+        ap = jnp.array([100.0, 0.0, 0.0, 0.0])  # sent entry 0 last round
+        gp = jnp.array([0.0, 0.0, 0.0, 0.0])  # ... and it aggregated to 0
+        mp = jnp.array([1.0, 0.0, 0.0, 0.0])
+        _, score = ref.regtopk_score(eps, g, ap, gp, mp, 1.0, 0.1, 1.0)
+        score = np.asarray(score)
+        # Entry 0 must lose to entry 1 despite 100x larger magnitude.
+        assert abs(score[0]) < abs(score[1])
+
+    def test_mu_to_zero_reduces_to_topk_ordering(self):
+        # mu -> 0: tanh(|1+Delta|/mu) -> 1 for any Delta != -1, so the
+        # score ordering equals the |acc| ordering (plain TOP-k).
+        rng = np.random.default_rng(3)
+        j = 128
+        eps, g, ap, gp = (vec(rng, j) for _ in range(4))
+        mp = jnp.asarray(rng.integers(0, 2, j), jnp.float32)
+        acc, score = ref.regtopk_score(eps, g, ap, gp, mp, 0.5, 1e-12, 1.0)
+        np.testing.assert_array_equal(
+            np.argsort(np.abs(np.asarray(score))),
+            np.argsort(np.abs(np.asarray(acc))),
+        )
+
+
+class TestTopKMask:
+    @settings(**SETTINGS)
+    @given(
+        st.integers(1, 500),
+        st.integers(0, 2**31 - 1),
+        st.integers(0, 600),
+    )
+    def test_mask_selects_k_largest(self, j, seed, k):
+        rng = np.random.default_rng(seed)
+        s = vec(rng, j)
+        mask = np.asarray(ref.topk_mask(s, k))
+        keff = min(k, j)
+        assert mask.sum() == keff
+        if 0 < keff < j:
+            mag = np.abs(np.asarray(s))
+            assert mag[mask == 1].min() >= mag[mask == 0].max()
+
+    @settings(**SETTINGS)
+    @given(st.integers(1, 600), st.integers(0, 2**31 - 1))
+    def test_threshold_kernel_matches_ref(self, j, seed):
+        rng = np.random.default_rng(seed)
+        s = vec(rng, j)
+        tau = float(np.quantile(np.abs(np.asarray(s)), 0.7))
+        got = k_topk.threshold_mask(s, tau, block=128)
+        want = ref.threshold_mask(s, tau)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @settings(**SETTINGS)
+    @given(
+        st.integers(1, 600),
+        st.integers(0, 2**31 - 1),
+        st.sampled_from([32, 64, 128]),
+    )
+    def test_block_absmax_matches_ref(self, j, seed, block):
+        rng = np.random.default_rng(seed)
+        s = vec(rng, j)
+        got = k_topk.block_absmax(s, block=block)
+        want = ref.block_absmax(s, block)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+    def test_two_phase_equals_exact(self):
+        # phase1 absmax + host threshold + phase3 mask == exact top-k
+        # when magnitudes are distinct.
+        rng = np.random.default_rng(11)
+        j, k = 1000, 37
+        s = vec(rng, j)
+        mag = np.abs(np.asarray(s))
+        tau = np.sort(mag)[-k]
+        mask2 = np.asarray(k_topk.threshold_mask(s, float(tau), block=128))
+        mask_exact = np.asarray(ref.topk_mask(s, k))
+        np.testing.assert_array_equal(mask2, mask_exact)
+
+
+class TestErrorFeedback:
+    @settings(**SETTINGS)
+    @given(
+        st.integers(1, 700),
+        st.integers(0, 2**31 - 1),
+        st.sampled_from([32, 128, 256]),
+    )
+    def test_matches_ref_and_conserves(self, j, seed, block):
+        rng = np.random.default_rng(seed)
+        acc = vec(rng, j, 10.0)
+        mask = jnp.asarray(rng.integers(0, 2, j), jnp.float32)
+        ghat, eps = k_ef.error_feedback(acc, mask, block=block)
+        ghat_r, eps_r = ref.error_feedback(acc, mask)
+        np.testing.assert_array_equal(np.asarray(ghat), np.asarray(ghat_r))
+        np.testing.assert_array_equal(np.asarray(eps), np.asarray(eps_r))
+        # conservation law: acc == ghat + eps' bit-exactly
+        np.testing.assert_array_equal(
+            np.asarray(ghat) + np.asarray(eps), np.asarray(acc)
+        )
+        # disjoint support
+        assert np.all((np.asarray(ghat) == 0) | (np.asarray(eps) == 0))
+
+
+class TestSgd:
+    @settings(**SETTINGS)
+    @given(
+        st.integers(1, 700),
+        st.integers(0, 2**31 - 1),
+        st.sampled_from([1e-4, 0.01, 0.9]),
+    )
+    def test_sgd_matches_ref(self, j, seed, eta):
+        rng = np.random.default_rng(seed)
+        w, g = vec(rng, j), vec(rng, j)
+        got = k_sgd.sgd_apply(w, g, eta, block=128)
+        # 1-ulp difference allowed: the kernel rounds eta to f32 first.
+        np.testing.assert_allclose(
+            np.asarray(got),
+            np.asarray(ref.sgd_apply(w, g, eta)),
+            rtol=1e-5,
+            atol=1e-7,
+        )
+
+    @settings(**SETTINGS)
+    @given(st.integers(1, 700), st.integers(0, 2**31 - 1))
+    def test_momentum_matches_ref(self, j, seed):
+        rng = np.random.default_rng(seed)
+        w, m, g = vec(rng, j), vec(rng, j), vec(rng, j)
+        w2, m2 = k_sgd.momentum_apply(w, m, g, 0.01, 0.9, block=128)
+        wr, mr = ref.momentum_apply(w, m, g, 0.01, 0.9)
+        np.testing.assert_allclose(
+            np.asarray(w2), np.asarray(wr), rtol=1e-5, atol=1e-7
+        )
+        np.testing.assert_allclose(
+            np.asarray(m2), np.asarray(mr), rtol=1e-5, atol=1e-7
+        )
+
+
+class TestFullStep:
+    @settings(**SETTINGS)
+    @given(st.integers(2, 300), st.integers(0, 2**31 - 1))
+    def test_regtopk_step_invariants(self, j, seed):
+        rng = np.random.default_rng(seed)
+        k = max(1, j // 10)
+        eps, g, ap, gp = (vec(rng, j) for _ in range(4))
+        mp = jnp.asarray(rng.integers(0, 2, j), jnp.float32)
+        ghat, eps2, mask, acc, score = ref.regtopk_step(
+            eps, g, ap, gp, mp, 1 / 8, 0.5, 1.0, k
+        )
+        mask = np.asarray(mask)
+        assert mask.sum() == k
+        np.testing.assert_array_equal(
+            np.asarray(ghat) + np.asarray(eps2), np.asarray(acc)
+        )
+        # selected entries are the k largest |score|
+        mag = np.abs(np.asarray(score))
+        assert mag[mask == 1].min() >= mag[mask == 0].max() - 1e-12

@@ -1,0 +1,145 @@
+"""L2 model graphs: shapes, closed-form gradients, param counts."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+class TestParamSpec:
+    def test_flatten_unflatten_roundtrip(self):
+        spec = M.mlp_spec(8, [4], 3)
+        w = jnp.arange(spec.total, dtype=jnp.float32)
+        p = spec.unflatten(w)
+        np.testing.assert_array_equal(np.asarray(spec.flatten(p)), np.asarray(w))
+
+    def test_init_deterministic_and_typed(self):
+        spec = M.mlp_spec(8, [4], 3)
+        a, b = spec.init(5), spec.init(5)
+        np.testing.assert_array_equal(a, b)
+        assert a.dtype == np.float32
+        # biases are zero
+        p = spec.unflatten(jnp.asarray(a))
+        np.testing.assert_array_equal(np.asarray(p["fc0.b"]), np.zeros(4))
+
+    def test_manifest_offsets_cover_total(self):
+        spec = M.resnet8().spec
+        man = spec.manifest()
+        assert man[0]["offset"] == 0
+        assert man[-1]["offset"] + man[-1]["size"] == spec.total
+
+
+class TestLinreg:
+    def test_grad_closed_form(self):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal((50, 10)), jnp.float32)
+        y = jnp.asarray(rng.standard_normal(50), jnp.float32)
+        w = jnp.asarray(rng.standard_normal(10), jnp.float32)
+        loss, g = M.linreg_grad(w, x, y)
+        r = np.asarray(x) @ np.asarray(w) - np.asarray(y)
+        np.testing.assert_allclose(float(loss), 0.5 * np.mean(r * r), rtol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(g), np.asarray(x).T @ r / 50, rtol=1e-4, atol=1e-6
+        )
+
+
+class TestLogistic:
+    def test_grad_matches_paper_eq2(self):
+        # Paper eq. (2): g = -exp(-<w;x>) x / (1 + exp(-<w;x>)) for label +1.
+        x = jnp.asarray([[100.0, 1.0]])
+        y = jnp.asarray([1.0])
+        w = jnp.asarray([0.0, 1.0])
+        _, g = M.logistic_grad(w, x, y)
+        z = np.exp(-1.0)  # -<w;x> = -1
+        expected = -z / (1 + z) * np.array([100.0, 1.0])
+        np.testing.assert_allclose(np.asarray(g), expected, rtol=1e-5)
+
+    def test_toy_gradients_at_w0(self):
+        # §1.2: at w0=[0,1], g1 = 0.269*[-100,1]... actually the paper
+        # says 0.736[-100,1] using sigmoid(-1)=0.269? Verify numerically:
+        # sigma(-<w;x>) with <w0;x1>=1 gives factor exp(-1)/(1+exp(-1))
+        # = 0.2689. The paper's 0.736 appears to use a different sign
+        # convention; what matters (and what we check) is |g[0]|/|g[1]|
+        # = 100 and the two workers' first entries cancel.
+        w0 = jnp.asarray([0.0, 1.0])
+        _, g1 = M.logistic_grad(w0, jnp.asarray([[100.0, 1.0]]), jnp.asarray([1.0]))
+        _, g2 = M.logistic_grad(w0, jnp.asarray([[-100.0, 1.0]]), jnp.asarray([1.0]))
+        g1, g2 = np.asarray(g1), np.asarray(g2)
+        assert abs(g1[0] / g1[1]) == pytest.approx(100.0)
+        assert g1[0] + g2[0] == pytest.approx(0.0, abs=1e-9)
+        assert g1[1] + g2[1] != 0.0
+
+
+class TestMlp:
+    def test_grad_shapes_and_descent(self):
+        spec = M.mlp_spec(12, [8], 3)
+        rng = np.random.default_rng(1)
+        w = jnp.asarray(spec.init(1))
+        x = jnp.asarray(rng.standard_normal((16, 12)), jnp.float32)
+        y = jnp.asarray(rng.integers(0, 3, 16), jnp.int32)
+        loss, g = M.mlp_grad(spec, w, x, y)
+        assert g.shape == (spec.total,)
+        loss2, _ = M.mlp_grad(spec, w - 0.1 * g, x, y)
+        assert float(loss2) < float(loss)
+
+
+class TestResNet:
+    def test_resnet18_param_count_matches_paper(self):
+        # ResNet-18 is ~11.2M params (paper cites ResNet-110 at 1.7M for
+        # scale; ResNet-18's canonical count is 11,173,962 for ImageNet;
+        # our CIFAR adaptation drops the 7x7 stem for 3x3).
+        n = M.resnet18()
+        assert 11_000_000 < n.param_count < 11_300_000
+
+    def test_resnet8_forward_shapes(self):
+        n = M.resnet8()
+        w = jnp.asarray(n.spec.init(0))
+        x = jnp.zeros((4, 32, 32, 3), jnp.float32)
+        logits = n.logits(w, x)
+        assert logits.shape == (4, 10)
+
+    def test_resnet8_grad_descends(self):
+        n = M.resnet8()
+        rng = np.random.default_rng(2)
+        w = jnp.asarray(n.spec.init(2))
+        x = jnp.asarray(rng.standard_normal((8, 32, 32, 3)), jnp.float32)
+        y = jnp.asarray(rng.integers(0, 10, 8), jnp.int32)
+        loss, g = n.grad(w, x, y)
+        assert np.all(np.isfinite(np.asarray(g)))
+        loss2, _ = n.grad(w - 0.05 * g, x, y)
+        assert float(loss2) < float(loss)
+
+    def test_stage_downsampling(self):
+        # widths double and spatial halves at each stage transition:
+        # output of GAP must have the last-stage width.
+        n = M.resnet_cifar(1, 4)
+        assert n.widths == [4, 8, 16]
+        w = jnp.asarray(n.spec.init(0))
+        logits = n.logits(w, jnp.zeros((2, 32, 32, 3)))
+        assert logits.shape == (2, 10)
+
+
+class TestWorkerStep:
+    def test_fused_step_equals_composition(self):
+        rng = np.random.default_rng(3)
+        j, d = 10, 20
+        x = jnp.asarray(rng.standard_normal((d, j)), jnp.float32)
+        y = jnp.asarray(rng.standard_normal(d), jnp.float32)
+        w, eps, ap, gp = (
+            jnp.asarray(rng.standard_normal(j), jnp.float32) for _ in range(4)
+        )
+        mp = jnp.asarray(rng.integers(0, 2, j), jnp.float32)
+        scal = jnp.asarray([0.05, 0.5, 1.0])
+        step = M.worker_step(M.linreg_grad)
+        loss, acc, score = step(w, eps, ap, gp, mp, x, y, scal)
+        loss_r, g_r = M.linreg_grad(w, x, y)
+        from compile.kernels import ref
+
+        acc_r, score_r = ref.regtopk_score(eps, g_r, ap, gp, mp, 0.05, 0.5, 1.0)
+        np.testing.assert_allclose(float(loss), float(loss_r), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(acc), np.asarray(acc_r), rtol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(score), np.asarray(score_r), rtol=1e-4, atol=1e-6
+        )

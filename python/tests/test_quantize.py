@@ -1,0 +1,61 @@
+"""Quantization kernel vs oracle + statistical properties."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quantize as k_quant
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(
+    st.integers(1, 500),
+    st.integers(0, 2**31 - 1),
+    st.sampled_from([2, 4, 8, 16]),
+)
+def test_kernel_matches_oracle(j, seed, bits):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(j), jnp.float32)
+    noise = jnp.asarray(rng.random(j), jnp.float32)
+    got = k_quant.quantize_sr(x, noise, bits, block=128)
+    want = ref.quantize_sr(x, noise, bits)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_error_bounded_by_one_level():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(1000) * 5, jnp.float32)
+    noise = jnp.asarray(rng.random(1000), jnp.float32)
+    q = np.asarray(ref.quantize_sr(x, noise, 4))
+    scale = np.abs(np.asarray(x)).max() / 7.0
+    assert np.all(np.abs(q - np.asarray(x)) <= scale * 1.0001)
+
+
+def test_unbiased_in_expectation():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray([0.37, 1.0], jnp.float32)  # second entry sets scale
+    total = np.zeros(2)
+    n = 4000
+    for _ in range(n):
+        noise = jnp.asarray(rng.random(2), jnp.float32)
+        total += np.asarray(ref.quantize_sr(x, noise, 4))
+    mean = total / n
+    assert abs(mean[0] - 0.37) < 0.02, mean
+
+
+def test_passthrough_32_bits():
+    x = jnp.asarray([0.123, -4.5], jnp.float32)
+    noise = jnp.zeros(2, jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(k_quant.quantize_sr(x, noise, 32)), np.asarray(x)
+    )
+
+
+def test_zero_vector_stays_zero():
+    x = jnp.zeros(64, jnp.float32)
+    noise = jnp.full(64, 0.99, jnp.float32)
+    q = np.asarray(k_quant.quantize_sr(x, noise, 4, block=32))
+    np.testing.assert_array_equal(q, np.zeros(64))

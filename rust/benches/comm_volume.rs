@@ -1,0 +1,29 @@
+//! Tab A regeneration: analytic communication table + measured
+//! bytes/round (prints the same rows as `repro comm`).
+//!
+//!     cargo bench --bench comm_volume
+
+use regtopk::experiments::comm_table;
+use regtopk::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new();
+    b.run("comm/analytic-table", || {
+        black_box(comm_table::analytic(&[0.1, 0.01, 0.001]));
+    });
+    b.run("comm/measured-10-rounds", || {
+        black_box(comm_table::measured(0.01, 10, 42));
+    });
+
+    println!("\n# Tab A: analytic symbols/epoch/worker (1000 minibatches)");
+    for r in comm_table::analytic(&[0.1, 0.01, 0.001]) {
+        println!(
+            "  {:<10} J={:<9} S={:<6} symbols/ep {:.3e}  compression {:.5}",
+            r.model, r.dim, r.s, r.symbols_per_epoch, r.compression
+        );
+    }
+    println!("\n# measured bytes/round (linreg testbed)");
+    for (name, bytes, sim) in comm_table::measured(0.01, 20, 42) {
+        println!("  {name:<10} {bytes:>8} B/round  sim {:.3} ms", sim * 1e3);
+    }
+}

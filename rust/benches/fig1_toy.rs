@@ -1,0 +1,24 @@
+//! Fig. 1 regeneration bench: full 100-iteration toy runs per
+//! algorithm (end-to-end coordinator latency at J=2 scale).
+//!
+//!     cargo bench --bench fig1_toy
+
+use regtopk::experiments::fig1;
+use regtopk::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new();
+    println!("# Fig.1 toy: 100-iteration end-to-end runs");
+    b.run("fig1/all-three-curves/100it", || {
+        black_box(fig1::run(100, 0.5, 1.0));
+    });
+    b.run("fig1/lr-scaling-diagnostic/100it", || {
+        black_box(fig1::lr_scaling(100));
+    });
+    // regenerate the figure data once and print the summary rows
+    let logs = fig1::run(100, 0.5, 1.0);
+    println!("\n# figure series (final losses)");
+    for log in &logs {
+        println!("  {:<8} {:.6}", log.name, log.last().unwrap().loss);
+    }
+}

@@ -1,0 +1,39 @@
+//! Fig. 2 regeneration bench: per-round latency of the full
+//! coordinator at the paper's geometry (N=20, D=500, J=100), per
+//! algorithm, plus a complete figure regeneration timing.
+//!
+//!     cargo bench --bench fig2_linreg
+
+use regtopk::data::linear::{generate, LinearParams};
+use regtopk::experiments::fig2;
+use regtopk::sparsify::SparsifierKind;
+use regtopk::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new();
+    println!("# Fig.2 per-round coordinator latency (paper geometry)");
+    let problem = generate(LinearParams::fig2(), 42);
+    for (name, kind) in [
+        ("dense", SparsifierKind::Dense),
+        ("topk", SparsifierKind::TopK { k: 60 }),
+        ("regtopk", SparsifierKind::RegTopK { k: 60, mu: 0.5, q: 1.0 }),
+        ("gtopk", SparsifierKind::GlobalTopK { k: 60 }),
+    ] {
+        let mut tr = fig2::trainer_for(&problem, kind, 0.01);
+        b.run(&format!("fig2/round/{name}"), || {
+            black_box(tr.round());
+        });
+    }
+    println!("\n# full-figure regeneration (3 sparsities x 2 algos + dense, 300 iters)");
+    b.run("fig2/figure/300it", || {
+        black_box(fig2::run(
+            LinearParams::fig2(),
+            42,
+            300,
+            &[0.4, 0.5, 0.6],
+            0.5,
+            1.0,
+            0.01,
+        ));
+    });
+}

@@ -1,0 +1,73 @@
+//! PJRT runtime round-trip latency: the L3 <-> artifact boundary.
+//! Measures compile-once/execute-many for the gradient executables and
+//! the standalone kernels (this is the per-round per-worker cost of
+//! the artifact-backed path in Fig. 3).
+//!
+//!     cargo bench --bench runtime_exec   (requires `make artifacts`)
+
+use regtopk::runtime::{Runtime, Tensor};
+use regtopk::util::bench::{black_box, Bench};
+use regtopk::util::rng::Rng;
+
+fn main() {
+    let mut rt = match Runtime::open("artifacts") {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("skipping runtime benches (no artifacts): {e}");
+            return;
+        }
+    };
+    let mut b = Bench::new();
+    let mut rng = Rng::seed_from(1);
+
+    // linreg grad: J=100, D=500
+    let exe = rt.load("linreg_grad").unwrap();
+    let w = rng.gaussian_vec(100, 1.0);
+    let x = rng.gaussian_vec(500 * 100, 1.0);
+    let y = rng.gaussian_vec(500, 1.0);
+    b.run("runtime/linreg_grad(J=100,D=500)", || {
+        black_box(
+            exe.call(&[
+                Tensor::f32(w.clone(), &[100]),
+                Tensor::f32(x.clone(), &[500, 100]),
+                Tensor::f32(y.clone(), &[500]),
+            ])
+            .unwrap(),
+        );
+    });
+
+    // regtopk score kernel at J=2^17
+    let exe = rt.load("regtopk_score").unwrap();
+    let j = exe.spec.inputs[0].shape[0];
+    let vecs: Vec<Vec<f32>> = (0..5).map(|_| rng.gaussian_vec(j, 1.0)).collect();
+    b.run_throughput(&format!("runtime/regtopk_score(J={j})"), j, || {
+        black_box(
+            exe.call(&[
+                Tensor::f32(vecs[0].clone(), &[j]),
+                Tensor::f32(vecs[1].clone(), &[j]),
+                Tensor::f32(vecs[2].clone(), &[j]),
+                Tensor::f32(vecs[3].clone(), &[j]),
+                Tensor::f32(vecs[4].clone(), &[j]),
+                Tensor::f32(vec![0.125, 0.5, 1.0], &[3]),
+            ])
+            .unwrap(),
+        );
+    });
+
+    // resnet8 grad step (the Fig.3 per-worker cost)
+    let exe = rt.load("cnn_grad_resnet8").unwrap();
+    let jw = exe.spec.inputs[0].shape[0];
+    let wv = rt.load_init("resnet8").unwrap();
+    let xb = rng.gaussian_vec(20 * 32 * 32 * 3, 0.5);
+    let yb: Vec<i32> = (0..20).map(|i| (i % 10) as i32).collect();
+    b.run(&format!("runtime/cnn_grad_resnet8(J={jw},B=20)"), || {
+        black_box(
+            exe.call(&[
+                Tensor::f32(wv.clone(), &[jw]),
+                Tensor::f32(xb.clone(), &[20, 32, 32, 3]),
+                Tensor::i32(yb.clone(), &[20]),
+            ])
+            .unwrap(),
+        );
+    });
+}

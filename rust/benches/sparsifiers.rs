@@ -1,0 +1,38 @@
+//! Sparsifier throughput: one worker-step per (algorithm, J, S) point.
+//! This is the L3 per-round hot path (score + select + error update).
+//!
+//!     cargo bench --bench sparsifiers
+
+use regtopk::sparsify::{build, RoundCtx, SparsifierKind};
+use regtopk::util::bench::{black_box, Bench};
+use regtopk::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new();
+    println!("# sparsifier worker-step throughput (elements = J per step)");
+    for &j in &[10_000usize, 100_000, 1_000_000] {
+        let mut rng = Rng::seed_from(1);
+        let grad = rng.gaussian_vec(j, 1.0);
+        let gagg = rng.gaussian_vec(j, 0.2);
+        for &s in &[0.01f64, 0.001] {
+            let k = ((j as f64 * s) as usize).max(1);
+            for kind in [
+                SparsifierKind::TopK { k },
+                SparsifierKind::RegTopK { k, mu: 0.5, q: 1.0 },
+                SparsifierKind::RandK { k, seed: 3 },
+            ] {
+                let mut sp = build(&kind, j, 0);
+                let name = format!("{}/J={j}/S={s}", sp.name());
+                // warm the error-feedback state once
+                let ctx = RoundCtx { t: 0, gagg_prev: &gagg, omega: 0.125, genie_acc: None };
+                black_box(sp.step(&grad, &ctx));
+                let mut t = 1usize;
+                b.run_throughput(&name, j, || {
+                    let ctx = RoundCtx { t, gagg_prev: &gagg, omega: 0.125, genie_acc: None };
+                    black_box(sp.step(&grad, &ctx));
+                    t += 1;
+                });
+            }
+        }
+    }
+}

@@ -1,0 +1,37 @@
+//! Top-k selection kernels: exact quickselect vs full sort vs sampled
+//! threshold (ablation 4).  The selection is the only super-linear
+//! step in the sparsifier hot path.
+//!
+//!     cargo bench --bench topk_select
+
+use regtopk::sparse::{approx, select_topk, topk::{select_topk_quick, select_topk_radix, select_topk_sort}};
+use regtopk::util::bench::{black_box, Bench};
+use regtopk::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new();
+    println!("# top-k selection: exact quickselect vs sort vs sampled threshold");
+    for &j in &[10_000usize, 100_000, 1_000_000] {
+        let mut rng = Rng::seed_from(2);
+        let x = rng.gaussian_vec(j, 1.0);
+        let k = (j / 1000).max(1);
+        b.run_throughput(&format!("dispatch/J={j}/k={k}"), j, || {
+            black_box(select_topk(&x, k));
+        });
+        b.run_throughput(&format!("radix/J={j}/k={k}"), j, || {
+            black_box(select_topk_radix(&x, k));
+        });
+        b.run_throughput(&format!("quickselect/J={j}/k={k}"), j, || {
+            black_box(select_topk_quick(&x, k));
+        });
+        if j <= 100_000 {
+            b.run_throughput(&format!("fullsort/J={j}/k={k}"), j, || {
+                black_box(select_topk_sort(&x, k));
+            });
+        }
+        let mut arng = Rng::seed_from(3);
+        b.run_throughput(&format!("sampled8/J={j}/k={k}"), j, || {
+            black_box(approx::select_topk_sampled(&x, k, 8, &mut arng));
+        });
+    }
+}

@@ -1,0 +1,122 @@
+//! Per-round traffic accounting: every byte that crosses the simulated
+//! network is recorded here; EXPERIMENTS.md's communication tables are
+//! produced from these counters (DESIGN.md invariant 5).
+
+use crate::comm::CostModel;
+use crate::sparse::SparseVec;
+
+/// Traffic observed in one synchronous round.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RoundTraffic {
+    pub round: usize,
+    /// sum over workers of sparse-update bytes
+    pub upload_bytes: usize,
+    /// broadcast bytes * n_workers
+    pub download_bytes: usize,
+    /// total entries transmitted upward
+    pub upload_entries: usize,
+    /// simulated wall-clock for the round's communication
+    pub sim_time_s: f64,
+}
+
+/// Append-only ledger; one entry per round.
+#[derive(Debug, Default)]
+pub struct Ledger {
+    pub cost: CostModel,
+    rounds: Vec<RoundTraffic>,
+    current: RoundTraffic,
+    upload_sizes: Vec<usize>,
+}
+
+impl Ledger {
+    pub fn new(cost: CostModel) -> Self {
+        Ledger { cost, rounds: Vec::new(), current: RoundTraffic::default(), upload_sizes: Vec::new() }
+    }
+
+    /// Record one worker's upload for the current round.
+    pub fn record_upload(&mut self, sv: &SparseVec) {
+        let bytes = self.cost.update_bytes(sv);
+        self.current.upload_bytes += bytes;
+        self.current.upload_entries += sv.nnz();
+        self.upload_sizes.push(bytes);
+    }
+
+    /// Record the server broadcast and close the round.
+    pub fn close_round(&mut self, round: usize, dim: usize, n_workers: usize) {
+        let bt = self.cost.broadcast_bytes(dim);
+        self.current.download_bytes = bt * n_workers;
+        self.current.round = round;
+        self.current.sim_time_s = self.cost.round_time(&self.upload_sizes, bt, n_workers);
+        self.rounds.push(self.current);
+        self.current = RoundTraffic::default();
+        self.upload_sizes.clear();
+    }
+
+    pub fn rounds(&self) -> &[RoundTraffic] {
+        &self.rounds
+    }
+
+    pub fn total_upload_bytes(&self) -> usize {
+        self.rounds.iter().map(|r| r.upload_bytes).sum()
+    }
+
+    pub fn total_download_bytes(&self) -> usize {
+        self.rounds.iter().map(|r| r.download_bytes).sum()
+    }
+
+    pub fn total_sim_time(&self) -> f64 {
+        self.rounds.iter().map(|r| r.sim_time_s).sum()
+    }
+
+    /// Upload compression ratio vs dense (dense = J values per worker
+    /// per round, no indices).
+    pub fn upload_compression_vs_dense(&self, dim: usize, n_workers: usize) -> f64 {
+        let dense = self.rounds.len() * n_workers * self.cost.broadcast_bytes(dim);
+        if dense == 0 {
+            return 1.0;
+        }
+        self.total_upload_bytes() as f64 / dense as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_sums_per_round() {
+        let mut l = Ledger::new(CostModel::default());
+        let sv = SparseVec::new(100, vec![0, 1], vec![1.0, 2.0]);
+        l.record_upload(&sv);
+        l.record_upload(&sv);
+        l.close_round(0, 100, 2);
+        assert_eq!(l.rounds().len(), 1);
+        let r = l.rounds()[0];
+        assert_eq!(r.upload_entries, 4);
+        assert_eq!(r.upload_bytes, 2 * l.cost.update_bytes(&sv));
+        assert_eq!(r.download_bytes, 2 * 400);
+        assert!(r.sim_time_s > 0.0);
+    }
+
+    #[test]
+    fn totals_accumulate_across_rounds() {
+        let mut l = Ledger::new(CostModel::default());
+        for t in 0..3 {
+            l.record_upload(&SparseVec::new(64, vec![1], vec![1.0]));
+            l.close_round(t, 64, 1);
+        }
+        assert_eq!(l.rounds().len(), 3);
+        assert_eq!(l.total_upload_bytes(), 3 * l.cost.update_bytes(&SparseVec::new(64, vec![1], vec![1.0])));
+        assert_eq!(l.total_download_bytes(), 3 * 256);
+    }
+
+    #[test]
+    fn compression_ratio_reflects_sparsity() {
+        let mut l = Ledger::new(CostModel::default());
+        // 1 of 1024 entries -> ratio should be ~ (32+10)/8 / 4096 bytes
+        l.record_upload(&SparseVec::new(1024, vec![5], vec![1.0]));
+        l.close_round(0, 1024, 1);
+        let r = l.upload_compression_vs_dense(1024, 1);
+        assert!(r < 0.01, "{r}");
+    }
+}

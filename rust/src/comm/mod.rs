@@ -1,0 +1,118 @@
+//! Communication substrate: message types, an in-process transport,
+//! the paper's byte cost model, and a per-round traffic ledger.
+//!
+//! The paper's experiments ran on real multi-GPU links; here the
+//! transport is simulated (std mpsc channels for the threaded driver,
+//! direct calls for the deterministic driver) but the *accounting* is
+//! exact: each sparse update costs `32 + ceil(log2 J)` bits per entry
+//! (§2: "the index can be losslessly represented by log J bits"), and
+//! the broadcast costs `32 J` bits dense or the sparse equivalent.
+//! A [`CostModel`] converts bytes to simulated wall-clock so the
+//! benches can report the paper's motivating traffic arithmetic
+//! (1.7e9 symbols/epoch for ResNet-110, §1).
+
+mod ledger;
+pub mod quantize;
+mod transport;
+
+pub use ledger::{Ledger, RoundTraffic};
+pub use quantize::Quantizer;
+pub use transport::{Endpoint, Network};
+
+use crate::sparse::SparseVec;
+
+/// Messages exchanged between workers and the server.
+#[derive(Clone, Debug)]
+pub enum Msg {
+    /// worker -> server: sparsified gradient for round `round`
+    Update { worker: usize, round: usize, update: SparseVec, loss: f32 },
+    /// server -> workers: aggregated gradient for round `round`
+    Broadcast { round: usize, gagg: Vec<f32> },
+    /// server -> workers: orderly shutdown
+    Shutdown,
+}
+
+/// Link parameters for simulated transfer-time accounting.
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// per-message fixed latency (seconds)
+    pub latency_s: f64,
+    /// link bandwidth (bytes/second)
+    pub bandwidth_bps: f64,
+    /// bits per transmitted value (32 for f32; 16 models half-precision
+    /// compression ablations)
+    pub value_bits: usize,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        // 10 GbE-ish defaults: 50us latency, 1.25 GB/s
+        CostModel { latency_s: 50e-6, bandwidth_bps: 1.25e9, value_bits: 32 }
+    }
+}
+
+impl CostModel {
+    /// Wire bytes of a sparse update: nnz * (value_bits + ceil(log2 J)) / 8.
+    pub fn update_bytes(&self, sv: &SparseVec) -> usize {
+        let dim = sv.dim().max(2);
+        let index_bits = usize::BITS as usize - (dim - 1).leading_zeros() as usize;
+        (sv.nnz() * (self.value_bits + index_bits)).div_ceil(8)
+    }
+
+    /// Wire bytes of the dense broadcast g^t (no indices needed).
+    pub fn broadcast_bytes(&self, dim: usize) -> usize {
+        (dim * self.value_bits).div_ceil(8)
+    }
+
+    /// Simulated transfer time of a message of `bytes`.
+    pub fn transfer_time(&self, bytes: usize) -> f64 {
+        self.latency_s + bytes as f64 / self.bandwidth_bps
+    }
+
+    /// Round time for a synchronous gather of per-worker byte counts
+    /// followed by a broadcast: server link is the bottleneck, uploads
+    /// serialize on it (parameter-server topology).
+    pub fn round_time(&self, upload_bytes: &[usize], broadcast: usize, n_workers: usize) -> f64 {
+        let gather: f64 = upload_bytes.iter().map(|&b| self.transfer_time(b)).sum();
+        gather + self.transfer_time(broadcast) * n_workers as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn update_bytes_matches_paper_cost() {
+        let cm = CostModel::default();
+        // J=100 -> 7 index bits; 10 entries * 39 bits = 390 bits -> 49 bytes
+        let sv = SparseVec::new(100, (0..10).collect(), vec![1.0; 10]);
+        assert_eq!(cm.update_bytes(&sv), 49);
+        // dense broadcast of J=100 f32s = 400 bytes
+        assert_eq!(cm.broadcast_bytes(100), 400);
+    }
+
+    #[test]
+    fn half_precision_halves_value_cost() {
+        let cm16 = CostModel { value_bits: 16, ..CostModel::default() };
+        let sv = SparseVec::new(1 << 20, vec![0, 1, 2, 3], vec![1.0; 4]);
+        // 4 * (16+20) = 144 bits = 18 bytes
+        assert_eq!(cm16.update_bytes(&sv), 18);
+    }
+
+    #[test]
+    fn transfer_time_latency_plus_bandwidth() {
+        let cm = CostModel { latency_s: 1e-3, bandwidth_bps: 1e6, value_bits: 32 };
+        let t = cm.transfer_time(1000);
+        assert!((t - (1e-3 + 1e-3)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sparsification_reduces_round_time() {
+        let cm = CostModel::default();
+        let dense = vec![cm.broadcast_bytes(1 << 20); 8];
+        let sparse = vec![cm.update_bytes(&SparseVec::new(1 << 20, (0..1000).collect(), vec![0.0; 1000])); 8];
+        let bt = cm.broadcast_bytes(1 << 20);
+        assert!(cm.round_time(&sparse, bt, 8) < cm.round_time(&dense, bt, 8));
+    }
+}

@@ -1,0 +1,143 @@
+//! Value quantization composing with sparsification: the transmitted
+//! k values are quantized to `bits` via scaled stochastic rounding
+//! (unbiased), shrinking the per-entry payload from 32 bits to
+//! `bits` + shared 32-bit scale per message.
+//!
+//! This is the compression axis orthogonal to sparsity (the paper's
+//! cost model footnote: value bits + index bits); the `CostModel`
+//! `value_bits` field accounts for it, and the quantization error
+//! feeds back through the sparsifier's error accumulator when used
+//! via [`quantize_update`] at the worker boundary.
+
+use crate::sparse::SparseVec;
+use crate::util::rng::Rng;
+
+/// Symmetric linear quantizer with stochastic rounding.
+#[derive(Clone, Copy, Debug)]
+pub struct Quantizer {
+    /// bits per value, 1..=16 (32 = passthrough)
+    pub bits: usize,
+}
+
+impl Quantizer {
+    pub fn new(bits: usize) -> Self {
+        assert!((1..=32).contains(&bits));
+        Quantizer { bits }
+    }
+
+    /// Quantize values in place; returns the scale used.  Stochastic
+    /// rounding keeps E[q(x)] = x.
+    pub fn quantize(&self, values: &mut [f32], rng: &mut Rng) -> f32 {
+        if self.bits >= 32 || values.is_empty() {
+            return 1.0;
+        }
+        let levels = ((1usize << (self.bits - 1)) - 1).max(1) as f32;
+        let max = values.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        if max == 0.0 {
+            return 1.0;
+        }
+        let scale = max / levels;
+        for v in values.iter_mut() {
+            let x = *v / scale; // in [-levels, levels]
+            let lo = x.floor();
+            let frac = x - lo;
+            let q = if (rng.uniform() as f32) < frac { lo + 1.0 } else { lo };
+            *v = q * scale;
+        }
+        scale
+    }
+
+    /// Quantize a sparse update's values; the returned SparseVec holds
+    /// the dequantized (lossy) values that the server will see, and
+    /// `residual` receives the per-entry quantization error so the
+    /// caller can fold it back into the error accumulator.
+    pub fn quantize_update(
+        &self,
+        sv: &SparseVec,
+        rng: &mut Rng,
+    ) -> (SparseVec, Vec<f32>) {
+        let mut vals = sv.values().to_vec();
+        self.quantize(&mut vals, rng);
+        let residual: Vec<f32> = sv
+            .values()
+            .iter()
+            .zip(&vals)
+            .map(|(orig, q)| orig - q)
+            .collect();
+        (
+            SparseVec::new(sv.dim(), sv.indices().to_vec(), vals),
+            residual,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check;
+
+    #[test]
+    fn unbiased_in_expectation() {
+        let q = Quantizer::new(4);
+        let mut rng = Rng::seed_from(1);
+        let x = 0.37f32;
+        let n = 20_000;
+        let mut sum = 0.0f64;
+        for _ in 0..n {
+            let mut v = [x, 1.0]; // 1.0 sets the scale
+            q.quantize(&mut v, &mut rng);
+            sum += v[0] as f64;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - x as f64).abs() < 0.01, "{mean}");
+    }
+
+    #[test]
+    fn error_bounded_by_one_level() {
+        check::forall("quant_error_bound", |rng, _| {
+            let n = check::arb_len(rng, 100);
+            let mut v = check::arb_vec(rng, n);
+            let orig = v.clone();
+            let bits = 2 + rng.below(7);
+            let q = Quantizer::new(bits);
+            let scale = q.quantize(&mut v, rng);
+            for (a, b) in orig.iter().zip(&v) {
+                assert!((a - b).abs() <= scale * 1.0001, "bits={bits}");
+            }
+        });
+    }
+
+    #[test]
+    fn passthrough_at_32_bits() {
+        let q = Quantizer::new(32);
+        let mut rng = Rng::seed_from(2);
+        let mut v = vec![0.123, -9.5];
+        let orig = v.clone();
+        q.quantize(&mut v, &mut rng);
+        assert_eq!(v, orig);
+    }
+
+    #[test]
+    fn update_residual_reconstructs_exactly() {
+        let q = Quantizer::new(4);
+        let mut rng = Rng::seed_from(3);
+        let sv = SparseVec::new(10, vec![1, 4, 7], vec![0.9, -0.2, 0.05]);
+        let (qsv, residual) = q.quantize_update(&sv, &mut rng);
+        for i in 0..3 {
+            assert_eq!(qsv.values()[i] + residual[i], sv.values()[i]);
+        }
+        assert_eq!(qsv.indices(), sv.indices());
+    }
+
+    #[test]
+    fn fewer_bits_fewer_distinct_values() {
+        let q = Quantizer::new(2); // levels = 1 -> values in {-s, 0, s}
+        let mut rng = Rng::seed_from(4);
+        let mut v: Vec<f32> = (0..100).map(|i| i as f32 / 100.0).collect();
+        q.quantize(&mut v, &mut rng);
+        let mut uniq: Vec<i32> = v.iter().map(|x| (x * 1000.0) as i32).collect();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert!(uniq.len() <= 3, "{uniq:?}");
+    }
+}

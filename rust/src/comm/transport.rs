@@ -1,0 +1,154 @@
+//! In-process transport: mpsc-based endpoints wiring N workers to one
+//! server (parameter-server star topology).
+//!
+//! The deterministic single-threaded trainer calls sparsifiers
+//! directly; this transport backs the *threaded* driver
+//! (`coordinator::Trainer::run_threaded`) where each worker owns an OS
+//! thread, which is how the framework would host real gradient
+//! computation.  Message order per link is FIFO (mpsc guarantee); the
+//! server gathers exactly one update per worker per round, so the
+//! aggregate is order-independent and bit-identical to the
+//! deterministic driver (verified in coordinator tests).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use crate::comm::Msg;
+
+/// One side of the star: the server holds `WorkerHandle`s; each worker
+/// thread holds an `Endpoint`.
+pub struct Network {
+    /// server's receive end (all workers send here)
+    pub from_workers: Receiver<Msg>,
+    /// per-worker broadcast senders
+    to_workers: Vec<Sender<Msg>>,
+    /// sender workers clone
+    up_tx: Sender<Msg>,
+    /// endpoints not yet taken by worker threads
+    pending: Vec<Option<Endpoint>>,
+}
+
+/// A worker-side endpoint: send updates up, receive broadcasts down.
+pub struct Endpoint {
+    pub worker: usize,
+    pub up: Sender<Msg>,
+    pub down: Receiver<Msg>,
+}
+
+impl Network {
+    pub fn star(n_workers: usize) -> Self {
+        let (up_tx, from_workers) = channel();
+        let mut to_workers = Vec::with_capacity(n_workers);
+        let mut pending = Vec::with_capacity(n_workers);
+        for worker in 0..n_workers {
+            let (tx, rx) = channel();
+            to_workers.push(tx);
+            pending.push(Some(Endpoint { worker, up: up_tx.clone(), down: rx }));
+        }
+        Network { from_workers, to_workers, up_tx, pending }
+    }
+
+    /// Take worker `i`'s endpoint (once).
+    pub fn endpoint(&mut self, worker: usize) -> Endpoint {
+        self.pending[worker].take().expect("endpoint already taken")
+    }
+
+    /// Broadcast a message to all workers.
+    pub fn broadcast(&self, msg: &Msg) {
+        for tx in &self.to_workers {
+            // a dropped worker is a shutdown race, not an error
+            let _ = tx.send(msg.clone());
+        }
+    }
+
+    /// Gather exactly one update per worker for `round`; returns them
+    /// ordered by worker id (determinism).
+    pub fn gather_round(&self, n_workers: usize, round: usize) -> Vec<Msg> {
+        let mut slots: Vec<Option<Msg>> = (0..n_workers).map(|_| None).collect();
+        let mut got = 0;
+        while got < n_workers {
+            let msg = self
+                .from_workers
+                .recv()
+                .expect("worker hung up mid-round");
+            match msg {
+                Msg::Update { worker, round: r, .. } => {
+                    assert_eq!(r, round, "out-of-round update");
+                    assert!(slots[worker].is_none(), "duplicate update");
+                    slots[worker] = Some(msg);
+                    got += 1;
+                }
+                other => panic!("unexpected message at server: {other:?}"),
+            }
+        }
+        slots.into_iter().map(Option::unwrap).collect()
+    }
+
+    /// A sender handle for injecting messages (tests).
+    pub fn up_sender(&self) -> Sender<Msg> {
+        self.up_tx.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::SparseVec;
+
+    #[test]
+    fn star_roundtrip_two_workers() {
+        let mut net = Network::star(2);
+        let e0 = net.endpoint(0);
+        let e1 = net.endpoint(1);
+        let h0 = std::thread::spawn(move || {
+            e0.up
+                .send(Msg::Update { worker: 0, round: 0, update: SparseVec::zeros(4), loss: 1.0 })
+                .unwrap();
+            match e0.down.recv().unwrap() {
+                Msg::Broadcast { round, gagg } => (round, gagg),
+                _ => panic!(),
+            }
+        });
+        let h1 = std::thread::spawn(move || {
+            e1.up
+                .send(Msg::Update { worker: 1, round: 0, update: SparseVec::zeros(4), loss: 2.0 })
+                .unwrap();
+            match e1.down.recv().unwrap() {
+                Msg::Broadcast { round, .. } => round,
+                _ => panic!(),
+            }
+        });
+        let msgs = net.gather_round(2, 0);
+        assert_eq!(msgs.len(), 2);
+        // ordered by worker id regardless of arrival order
+        match (&msgs[0], &msgs[1]) {
+            (Msg::Update { worker: 0, .. }, Msg::Update { worker: 1, .. }) => {}
+            other => panic!("bad order {other:?}"),
+        }
+        net.broadcast(&Msg::Broadcast { round: 0, gagg: vec![1.0; 4] });
+        let (r0, g0) = h0.join().unwrap();
+        assert_eq!(r0, 0);
+        assert_eq!(g0, vec![1.0; 4]);
+        assert_eq!(h1.join().unwrap(), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn duplicate_update_detected() {
+        let net = Network::star(1);
+        let tx = net.up_sender();
+        tx.send(Msg::Update { worker: 0, round: 0, update: SparseVec::zeros(1), loss: 0.0 }).unwrap();
+        tx.send(Msg::Update { worker: 0, round: 0, update: SparseVec::zeros(1), loss: 0.0 }).unwrap();
+        // gather for 2 workers so it tries to consume both messages
+        net.gather_round(2, 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_round_update_detected() {
+        let net = Network::star(1);
+        net.up_sender()
+            .send(Msg::Update { worker: 0, round: 5, update: SparseVec::zeros(1), loss: 0.0 })
+            .unwrap();
+        net.gather_round(1, 0);
+    }
+}

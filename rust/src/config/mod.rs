@@ -1,0 +1,173 @@
+//! Experiment configuration: a typed config with JSON file loading and
+//! CLI overrides.  Every `repro` subcommand and example builds one of
+//! these; the config is echoed into each run's JSON output so results
+//! are self-describing.
+
+use std::path::Path;
+
+use crate::comm::CostModel;
+use crate::sparsify::SparsifierKind;
+use crate::util::json::{obj, Json};
+
+/// Top-level experiment configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// number of workers N
+    pub workers: usize,
+    /// synchronous rounds T
+    pub iters: usize,
+    /// learning rate eta (constant schedule unless overridden)
+    pub eta: f32,
+    /// sparsifier + parameters
+    pub sparsifier: SparsifierKind,
+    /// aggregation weights: uniform 1/N (the paper's arithmetic mean)
+    pub omega_uniform: bool,
+    /// RNG seed for data, init and samplers
+    pub seed: u64,
+    /// evaluate validation metrics every `eval_every` rounds (0 = never)
+    pub eval_every: usize,
+    /// communication cost model
+    pub cost: CostModel,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            workers: 8,
+            iters: 100,
+            eta: 0.01,
+            sparsifier: SparsifierKind::TopK { k: 1 },
+            omega_uniform: true,
+            seed: 42,
+            eval_every: 10,
+            cost: CostModel::default(),
+        }
+    }
+}
+
+impl TrainConfig {
+    /// omega_n for worker n (uniform only; the hook exists for
+    /// D_n-proportional weights).
+    pub fn omega(&self, _worker: usize) -> f32 {
+        1.0 / self.workers as f32
+    }
+
+    /// Serialize for run manifests.
+    pub fn to_json(&self) -> Json {
+        let sp = match &self.sparsifier {
+            SparsifierKind::Dense => obj([("name", "dense".into())]),
+            SparsifierKind::TopK { k } => obj([("name", "topk".into()), ("k", (*k).into())]),
+            SparsifierKind::RegTopK { k, mu, q } => obj([
+                ("name", "regtopk".into()),
+                ("k", (*k).into()),
+                ("mu", (*mu as f64).into()),
+                ("q", (*q as f64).into()),
+            ]),
+            SparsifierKind::RandK { k, seed } => obj([
+                ("name", "randk".into()),
+                ("k", (*k).into()),
+                ("seed", (*seed as usize).into()),
+            ]),
+            SparsifierKind::Threshold { tau } => {
+                obj([("name", "threshold".into()), ("tau", (*tau as f64).into())])
+            }
+            SparsifierKind::GlobalTopK { k } => {
+                obj([("name", "gtopk".into()), ("k", (*k).into())])
+            }
+            SparsifierKind::Dgc { k, momentum, clip } => obj([
+                ("name", "dgc".into()),
+                ("k", (*k).into()),
+                ("momentum", (*momentum as f64).into()),
+                ("clip", (*clip as f64).into()),
+            ]),
+            SparsifierKind::AdaK { ratio, k_min, k_max } => obj([
+                ("name", "adak".into()),
+                ("ratio", (*ratio as f64).into()),
+                ("k_min", (*k_min).into()),
+                ("k_max", (*k_max).into()),
+            ]),
+        };
+        obj([
+            ("workers", self.workers.into()),
+            ("iters", self.iters.into()),
+            ("eta", (self.eta as f64).into()),
+            ("sparsifier", sp),
+            ("seed", (self.seed as usize).into()),
+            ("eval_every", self.eval_every.into()),
+        ])
+    }
+
+    /// Load from a JSON config file; missing keys keep defaults.
+    pub fn from_json_file(path: &Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path:?}: {e}"))?;
+        let j = Json::parse(&text).map_err(|e| format!("{path:?}: {e}"))?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let mut c = TrainConfig::default();
+        if let Some(v) = j.get("workers").and_then(Json::as_usize) {
+            c.workers = v;
+        }
+        if let Some(v) = j.get("iters").and_then(Json::as_usize) {
+            c.iters = v;
+        }
+        if let Some(v) = j.get("eta").and_then(Json::as_f64) {
+            c.eta = v as f32;
+        }
+        if let Some(v) = j.get("seed").and_then(Json::as_f64) {
+            c.seed = v as u64;
+        }
+        if let Some(v) = j.get("eval_every").and_then(Json::as_usize) {
+            c.eval_every = v;
+        }
+        if let Some(sp) = j.get("sparsifier") {
+            let name = sp.get("name").and_then(Json::as_str).ok_or("sparsifier.name missing")?;
+            let k = sp.get("k").and_then(Json::as_usize).unwrap_or(1);
+            let mu = sp.get("mu").and_then(Json::as_f64).unwrap_or(0.5) as f32;
+            let q = sp.get("q").and_then(Json::as_f64).unwrap_or(1.0) as f32;
+            let tau = sp.get("tau").and_then(Json::as_f64).unwrap_or(1.0) as f32;
+            let seed = sp.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+            c.sparsifier = SparsifierKind::from_name(name, k, mu, q, tau, seed)
+                .ok_or_else(|| format!("unknown sparsifier '{name}'"))?;
+        }
+        Ok(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip() {
+        let mut c = TrainConfig::default();
+        c.sparsifier = SparsifierKind::RegTopK { k: 7, mu: 0.25, q: 2.0 };
+        c.workers = 20;
+        let j = c.to_json();
+        let c2 = TrainConfig::from_json(&j).unwrap();
+        assert_eq!(c2.workers, 20);
+        assert_eq!(c2.sparsifier, c.sparsifier);
+    }
+
+    #[test]
+    fn missing_keys_keep_defaults() {
+        let j = Json::parse(r#"{"iters": 7}"#).unwrap();
+        let c = TrainConfig::from_json(&j).unwrap();
+        assert_eq!(c.iters, 7);
+        assert_eq!(c.workers, TrainConfig::default().workers);
+    }
+
+    #[test]
+    fn unknown_sparsifier_rejected() {
+        let j = Json::parse(r#"{"sparsifier": {"name": "magic"}}"#).unwrap();
+        assert!(TrainConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn uniform_omega_sums_to_one() {
+        let c = TrainConfig { workers: 8, ..TrainConfig::default() };
+        let total: f32 = (0..8).map(|n| c.omega(n)).sum();
+        assert!((total - 1.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,154 @@
+//! Checkpointing: save/restore the global model and training cursor so
+//! long runs (Fig. 3 at full scale) survive restarts.
+//!
+//! Format: a JSON header (config echo, iteration, dims, crc) followed
+//! by the raw little-endian f32 model vector in a sidecar `.w` file —
+//! human-inspectable metadata, zero-parse bulk data.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{obj, Json};
+
+/// A saved training state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub iter: usize,
+    pub w: Vec<f32>,
+    pub config: Json,
+}
+
+fn crc32(data: &[u8]) -> u32 {
+    // small table-free CRC-32 (IEEE), fine for checkpoint integrity
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+impl Checkpoint {
+    pub fn new(iter: usize, w: Vec<f32>, config: Json) -> Self {
+        Checkpoint { iter, w, config }
+    }
+
+    fn weight_path(path: &Path) -> PathBuf {
+        path.with_extension("w")
+    }
+
+    /// Write `<path>` (JSON header) and `<path minus ext>.w` (weights).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let raw: Vec<u8> = self.w.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let header = obj([
+            ("iter", Json::from(self.iter)),
+            ("dim", Json::from(self.w.len())),
+            ("crc32", Json::from(crc32(&raw) as usize)),
+            ("config", self.config.clone()),
+        ]);
+        std::fs::write(path, header.dump())?;
+        std::fs::write(Self::weight_path(path), raw)?;
+        Ok(())
+    }
+
+    /// Load and verify a checkpoint pair.
+    pub fn load(path: &Path) -> Result<Self> {
+        let header = Json::parse(
+            &std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let dim = header
+            .get("dim")
+            .and_then(Json::as_usize)
+            .context("header missing dim")?;
+        let iter = header
+            .get("iter")
+            .and_then(Json::as_usize)
+            .context("header missing iter")?;
+        let want_crc = header
+            .get("crc32")
+            .and_then(Json::as_usize)
+            .context("header missing crc32")? as u32;
+        let raw = std::fs::read(Self::weight_path(path))?;
+        if raw.len() != 4 * dim {
+            bail!("weight file size {} != 4*{}", raw.len(), dim);
+        }
+        if crc32(&raw) != want_crc {
+            bail!("checkpoint crc mismatch (corrupt or truncated)");
+        }
+        let w = raw
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        Ok(Checkpoint {
+            iter,
+            w,
+            config: header.get("config").cloned().unwrap_or(Json::Null),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("regtopk_ckpt_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let path = tmp("rt.json");
+        let ck = Checkpoint::new(
+            123,
+            vec![1.5, -2.25, 0.0, f32::MIN_POSITIVE],
+            obj([("eta", Json::from(0.01))]),
+        );
+        ck.save(&path).unwrap();
+        let re = Checkpoint::load(&path).unwrap();
+        assert_eq!(re, ck);
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(path.with_extension("w")).ok();
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let path = tmp("bad.json");
+        let ck = Checkpoint::new(1, vec![1.0; 16], Json::Null);
+        ck.save(&path).unwrap();
+        // flip a byte in the weight file
+        let wpath = path.with_extension("w");
+        let mut raw = std::fs::read(&wpath).unwrap();
+        raw[5] ^= 0xFF;
+        std::fs::write(&wpath, raw).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&wpath).ok();
+    }
+
+    #[test]
+    fn truncation_is_detected() {
+        let path = tmp("trunc.json");
+        let ck = Checkpoint::new(1, vec![1.0; 16], Json::Null);
+        ck.save(&path).unwrap();
+        let wpath = path.with_extension("w");
+        let raw = std::fs::read(&wpath).unwrap();
+        std::fs::write(&wpath, &raw[..raw.len() - 4]).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&wpath).ok();
+    }
+
+    #[test]
+    fn crc_reference_value() {
+        // "123456789" -> 0xCBF43926 (IEEE CRC-32 check value)
+        assert_eq!(crc32(b"123456789"), 0xCBF43926);
+    }
+}

@@ -1,0 +1,26 @@
+//! The L3 coordination layer: the paper's distributed-SGD system.
+//!
+//! Topology is a parameter-server star (paper §1): N workers compute
+//! local gradients, sparsify (TOP-k / REGTOP-k / baselines), and send
+//! sparse updates; the server aggregates g^t = sum_n omega_n ghat_n^t,
+//! applies the optimizer to the global model, and broadcasts g^t back
+//! (workers need g^{t-1} for the REGTOP-k posterior distortion — the
+//! paper's footnote 1: broadcasting w^{t+1} is equivalent since
+//! g^t = (w^t - w^{t+1}) / eta^t).
+//!
+//! Two drivers over the same [`Worker`]/[`Server`] state:
+//! - [`Trainer::run`]          — deterministic single-threaded rounds
+//!   (reference semantics; all experiments and tests use this).
+//! - [`Trainer::run_threaded`] — one OS thread per worker over the
+//!   [`crate::comm::Network`] transport; bit-identical aggregates
+//!   (verified in tests) because gathers are ordered by worker id.
+
+mod checkpoint;
+mod server;
+mod trainer;
+mod worker;
+
+pub use checkpoint::Checkpoint;
+pub use server::Server;
+pub use trainer::{EvalFn, RoundResult, Trainer};
+pub use worker::Worker;

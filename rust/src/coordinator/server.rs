@@ -1,0 +1,65 @@
+//! Server-side state: aggregation + model update + broadcast value.
+
+use crate::optim::Optimizer;
+use crate::sparse::SparseVec;
+
+/// The parameter server: owns the global model w and the optimizer.
+pub struct Server {
+    pub w: Vec<f32>,
+    pub optimizer: Box<dyn Optimizer>,
+    /// g^t of the last completed round (what gets broadcast)
+    pub gagg: Vec<f32>,
+    agg_buf: Vec<f32>,
+}
+
+impl Server {
+    pub fn new(w0: Vec<f32>, optimizer: Box<dyn Optimizer>) -> Self {
+        let dim = w0.len();
+        Server { w: w0, optimizer, gagg: vec![0.0; dim], agg_buf: vec![0.0; dim] }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.w.len()
+    }
+
+    /// Aggregate sparse updates with weights omega and update the model:
+    /// g^t = sum_n omega_n ghat_n ;  w <- optimizer(w, g^t).
+    /// Updates MUST be ordered by worker id (fp-determinism).
+    pub fn aggregate_and_step(&mut self, updates: &[(f32, &SparseVec)], t: usize) -> &[f32] {
+        self.agg_buf.iter_mut().for_each(|v| *v = 0.0);
+        for (omega, sv) in updates {
+            sv.axpy_into(*omega, &mut self.agg_buf);
+        }
+        std::mem::swap(&mut self.gagg, &mut self.agg_buf);
+        self.optimizer.step(&mut self.w, &self.gagg, t);
+        &self.gagg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::Sgd;
+
+    #[test]
+    fn weighted_aggregation_and_sgd_step() {
+        let mut s = Server::new(vec![1.0, 1.0, 1.0], Box::new(Sgd::new(0.5)));
+        let a = SparseVec::new(3, vec![0], vec![2.0]);
+        let b = SparseVec::new(3, vec![0, 2], vec![-2.0, 4.0]);
+        s.aggregate_and_step(&[(0.5, &a), (0.5, &b)], 0);
+        // g = [0.5*2 + 0.5*(-2), 0, 0.5*4] = [0, 0, 2]
+        assert_eq!(s.gagg, vec![0.0, 0.0, 2.0]);
+        assert_eq!(s.w, vec![1.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn cancellation_yields_zero_step() {
+        // the §1.2 toy's first-entry cancellation
+        let mut s = Server::new(vec![0.0, 1.0], Box::new(Sgd::new(0.9)));
+        let a = SparseVec::new(2, vec![0], vec![-73.6]);
+        let b = SparseVec::new(2, vec![0], vec![73.6]);
+        s.aggregate_and_step(&[(0.5, &a), (0.5, &b)], 0);
+        assert_eq!(s.gagg, vec![0.0, 0.0]);
+        assert_eq!(s.w, vec![0.0, 1.0]); // model did not move
+    }
+}

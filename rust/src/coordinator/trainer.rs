@@ -1,0 +1,354 @@
+//! The synchronous-round driver tying workers, server, transport and
+//! metrics together.
+
+use std::time::Instant;
+
+use crate::comm::{Ledger, Msg, Network};
+use crate::config::TrainConfig;
+use crate::coordinator::{Server, Worker};
+use crate::metrics::{IterRecord, RunLog};
+use crate::sparsify::RoundCtx;
+
+/// Optional per-evaluation callback: `(iter, w, record)` — fills
+/// opt_gap / accuracy on the record (e.g. ||w - w*|| for Fig. 2, val
+/// accuracy via the PJRT eval artifact for Fig. 3).
+pub type EvalFn<'a> = dyn FnMut(usize, &[f32], &mut IterRecord) + 'a;
+
+/// Result of one synchronous round.
+#[derive(Clone, Copy, Debug)]
+pub struct RoundResult {
+    pub t: usize,
+    pub mean_loss: f32,
+    pub upload_bytes: usize,
+}
+
+/// Synchronous distributed-SGD trainer.
+pub struct Trainer {
+    pub config: TrainConfig,
+    pub workers: Vec<Worker>,
+    pub server: Server,
+    pub ledger: Ledger,
+    /// g^{t-1} broadcast to workers (zeros before the first round)
+    gagg_prev: Vec<f32>,
+    t: usize,
+}
+
+impl Trainer {
+    pub fn new(config: TrainConfig, workers: Vec<Worker>, server: Server) -> Self {
+        assert_eq!(config.workers, workers.len(), "config.workers mismatch");
+        let dim = server.dim();
+        for w in &workers {
+            assert_eq!(w.dim(), dim, "worker {} dim mismatch", w.id);
+        }
+        let ledger = Ledger::new(config.cost);
+        Trainer { config, workers, server, ledger, gagg_prev: vec![0.0; dim], t: 0 }
+    }
+
+    pub fn iter(&self) -> usize {
+        self.t
+    }
+
+    /// Snapshot the current training state.
+    pub fn checkpoint(&self) -> crate::coordinator::Checkpoint {
+        crate::coordinator::Checkpoint::new(
+            self.t,
+            self.server.w.clone(),
+            self.config.to_json(),
+        )
+    }
+
+    /// Restore model + cursor from a checkpoint (sparsifier error
+    /// state restarts cold — the standard error-feedback resume).
+    pub fn restore(&mut self, ck: &crate::coordinator::Checkpoint) {
+        assert_eq!(ck.w.len(), self.server.dim(), "checkpoint dim mismatch");
+        self.server.w.copy_from_slice(&ck.w);
+        self.t = ck.iter;
+    }
+
+    /// One synchronous round (deterministic reference driver).
+    pub fn round(&mut self) -> RoundResult {
+        let t = self.t;
+        let n = self.workers.len();
+        let dim = self.server.dim();
+        // Phase 1: local gradients at the current global model.
+        // Parallelized across workers when the model is heavy enough to
+        // amortize thread spawn (perf pass, EXPERIMENTS.md §Perf: 8
+        // artifact-backed CNN workers -> ~6x round speedup); results
+        // are per-worker so the aggregate stays bit-identical to the
+        // sequential order.
+        let mut loss_sum = 0.0f64;
+        if n > 1 && dim >= 4096 {
+            let w_ref = &self.server.w;
+            let losses: Vec<f32> = std::thread::scope(|scope| {
+                let handles: Vec<_> = self
+                    .workers
+                    .iter_mut()
+                    .map(|w| scope.spawn(move || w.compute_grad(w_ref)))
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("worker grad panicked")).collect()
+            });
+            loss_sum = losses.iter().map(|&l| l as f64).sum();
+        } else {
+            for w in &mut self.workers {
+                loss_sum += w.compute_grad(&self.server.w) as f64;
+            }
+        }
+        // Genie side-channel for gtopk: true aggregated accumulated
+        // gradient sum_n omega_n a_n^t (infeasible in practice, §3.1).
+        let genie: Option<Vec<f32>> = if self.workers.iter().any(Worker::needs_genie) {
+            let mut acc = vec![0.0f32; dim];
+            for (i, w) in self.workers.iter().enumerate() {
+                let omega = self.config.omega(i);
+                for (a, v) in acc.iter_mut().zip(w.peek_acc()) {
+                    *a += omega * v;
+                }
+            }
+            Some(acc)
+        } else {
+            None
+        };
+        // Phase 2: sparsify + "transmit" (ledger accounting).
+        let mut updates = Vec::with_capacity(n);
+        for (i, w) in self.workers.iter_mut().enumerate() {
+            let ctx = RoundCtx {
+                t,
+                gagg_prev: &self.gagg_prev,
+                omega: self.config.omega(i),
+                genie_acc: genie.as_deref(),
+            };
+            let sv = w.sparsify(&ctx);
+            self.ledger.record_upload(&sv);
+            updates.push(sv);
+        }
+        // Phase 3: aggregate, step, broadcast.
+        let weighted: Vec<(f32, &crate::sparse::SparseVec)> = updates
+            .iter()
+            .enumerate()
+            .map(|(i, sv)| (self.config.omega(i), sv))
+            .collect();
+        let gagg = self.server.aggregate_and_step(&weighted, t);
+        self.gagg_prev.copy_from_slice(gagg);
+        self.ledger.close_round(t, dim, n);
+        self.t += 1;
+        RoundResult {
+            t,
+            mean_loss: (loss_sum / n as f64) as f32,
+            upload_bytes: self.ledger.rounds().last().unwrap().upload_bytes,
+        }
+    }
+
+    /// Run `iters` rounds, logging per-round records and evaluating
+    /// every `config.eval_every` rounds (and at the final round).
+    pub fn run(&mut self, iters: usize, mut eval: Option<&mut EvalFn>) -> RunLog {
+        let mut log = RunLog::new(
+            format!("{}-{}", self.workers[0].sparsifier.name(), self.config.seed),
+            self.config.to_json(),
+        );
+        for i in 0..iters {
+            let t0 = Instant::now();
+            let rr = self.round();
+            let mut rec = IterRecord::new(rr.t);
+            rec.loss = rr.mean_loss;
+            rec.upload_bytes = rr.upload_bytes;
+            rec.sim_time_s = self.ledger.rounds().last().unwrap().sim_time_s;
+            rec.wall_time_s = t0.elapsed().as_secs_f64();
+            let is_eval = self.config.eval_every > 0
+                && (rr.t % self.config.eval_every == 0 || i + 1 == iters);
+            if is_eval {
+                if let Some(f) = eval.as_deref_mut() {
+                    f(rr.t, &self.server.w, &mut rec);
+                }
+            }
+            log.push(rec);
+        }
+        log
+    }
+
+    /// Threaded driver: each worker runs on its own OS thread and
+    /// exchanges [`Msg`]s over the star [`Network`]; the server thread
+    /// (this function) gathers, aggregates and broadcasts.  Produces a
+    /// bit-identical model trajectory to [`Trainer::run`] because the
+    /// gather orders updates by worker id.  Genie sparsifiers are not
+    /// supported here (they need a global side-channel).
+    pub fn run_threaded(&mut self, iters: usize) -> RunLog {
+        assert!(
+            !self.workers.iter().any(Worker::needs_genie),
+            "gtopk requires the deterministic driver"
+        );
+        let n = self.workers.len();
+        let dim = self.server.dim();
+        let mut net = Network::star(n);
+        let mut log = RunLog::new(
+            format!("{}-threaded", self.workers[0].sparsifier.name()),
+            self.config.to_json(),
+        );
+        let omegas: Vec<f32> = (0..n).map(|i| self.config.omega(i)).collect();
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for (i, mut worker) in self.workers.drain(..).enumerate() {
+                let ep = net.endpoint(i);
+                let omega = omegas[i];
+                handles.push(scope.spawn(move || {
+                    let mut w_model = vec![0.0f32; dim];
+                    let mut gagg_prev = vec![0.0f32; dim];
+                    for t in 0..iters {
+                        // receive the current model (round t broadcast
+                        // carries w^t and g^{t-1})
+                        match ep.down.recv().expect("server gone") {
+                            Msg::Broadcast { round, gagg } => {
+                                assert_eq!(round, t);
+                                // broadcast layout: [w | gagg_prev]
+                                w_model.copy_from_slice(&gagg[..dim]);
+                                gagg_prev.copy_from_slice(&gagg[dim..]);
+                            }
+                            Msg::Shutdown => return worker,
+                            other => panic!("worker {i}: unexpected {other:?}"),
+                        }
+                        let loss = worker.compute_grad(&w_model);
+                        let ctx = RoundCtx { t, gagg_prev: &gagg_prev, omega, genie_acc: None };
+                        let sv = worker.sparsify(&ctx);
+                        ep.up
+                            .send(Msg::Update { worker: i, round: t, update: sv, loss })
+                            .expect("server gone");
+                    }
+                    worker
+                }));
+            }
+            // server loop
+            let mut bcast = vec![0.0f32; 2 * dim];
+            for t in 0..iters {
+                bcast[..dim].copy_from_slice(&self.server.w);
+                bcast[dim..].copy_from_slice(&self.gagg_prev);
+                net.broadcast(&Msg::Broadcast { round: t, gagg: bcast.clone() });
+                let msgs = net.gather_round(n, t);
+                let mut updates = Vec::with_capacity(n);
+                let mut loss_sum = 0.0f64;
+                for m in msgs {
+                    if let Msg::Update { update, loss, .. } = m {
+                        loss_sum += loss as f64;
+                        self.ledger.record_upload(&update);
+                        updates.push(update);
+                    }
+                }
+                let weighted: Vec<(f32, &crate::sparse::SparseVec)> =
+                    updates.iter().enumerate().map(|(i, sv)| (omegas[i], sv)).collect();
+                let gagg = self.server.aggregate_and_step(&weighted, t);
+                self.gagg_prev.copy_from_slice(gagg);
+                self.ledger.close_round(t, dim, n);
+                let mut rec = IterRecord::new(t);
+                rec.loss = (loss_sum / n as f64) as f32;
+                rec.upload_bytes = self.ledger.rounds().last().unwrap().upload_bytes;
+                rec.sim_time_s = self.ledger.rounds().last().unwrap().sim_time_s;
+                log.push(rec);
+            }
+            net.broadcast(&Msg::Shutdown);
+            // reclaim workers (ordered by id)
+            self.workers = handles.into_iter().map(|h| h.join().expect("worker panicked")).collect();
+        });
+        self.t += iters;
+        log
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::logistic::Logistic;
+    use crate::optim::Sgd;
+    use crate::sparsify::{build, SparsifierKind};
+
+    fn toy_trainer(kind: SparsifierKind, eta: f32) -> Trainer {
+        let config = TrainConfig {
+            workers: 2,
+            iters: 0,
+            eta,
+            sparsifier: kind.clone(),
+            omega_uniform: true,
+            seed: 0,
+            eval_every: 0,
+            ..TrainConfig::default()
+        };
+        let workers = vec![
+            Worker::new(0, Box::new(Logistic::toy_worker(vec![100.0, 1.0])), build(&kind, 2, 0)),
+            Worker::new(1, Box::new(Logistic::toy_worker(vec![-100.0, 1.0])), build(&kind, 2, 1)),
+        ];
+        let server = Server::new(vec![0.0, 1.0], Box::new(Sgd::new(eta)));
+        Trainer::new(config, workers, server)
+    }
+
+    #[test]
+    fn toy_top1_stalls_regtop1_moves() {
+        let mut top = toy_trainer(SparsifierKind::TopK { k: 1 }, 0.9);
+        for _ in 0..20 {
+            top.round();
+        }
+        assert_eq!(top.server.w, vec![0.0, 1.0], "TOP-1 must stall at w0");
+
+        let mut reg = toy_trainer(SparsifierKind::RegTopK { k: 1, mu: 0.5, q: 1.0 }, 0.9);
+        for _ in 0..20 {
+            reg.round();
+        }
+        assert!(reg.server.w[1] > 1.0, "REGTOP-1 must move theta_2: {:?}", reg.server.w);
+    }
+
+    #[test]
+    fn dense_matches_manual_gd() {
+        let mut tr = toy_trainer(SparsifierKind::Dense, 0.9);
+        let rr = tr.round();
+        assert!(rr.mean_loss > 0.0);
+        // manual: g = 0.5(g1+g2); first entries cancel; second entries
+        // equal -sigma(-1) each
+        let s = 1.0 / (1.0 + 1f64.exp());
+        let expect_w1 = 1.0 + 0.9 * s as f32;
+        assert!((tr.server.w[1] - expect_w1).abs() < 1e-6);
+        assert_eq!(tr.server.w[0], 0.0);
+    }
+
+    #[test]
+    fn ledger_counts_rounds_and_bytes() {
+        let mut tr = toy_trainer(SparsifierKind::TopK { k: 1 }, 0.9);
+        tr.round();
+        tr.round();
+        assert_eq!(tr.ledger.rounds().len(), 2);
+        // 2 workers x 1 entry x (32+1 index bits for J=2)/8 -> 5 bytes each
+        assert_eq!(tr.ledger.rounds()[0].upload_entries, 2);
+        assert!(tr.ledger.rounds()[0].upload_bytes > 0);
+    }
+
+    #[test]
+    fn run_produces_log_with_eval() {
+        let mut tr = toy_trainer(SparsifierKind::Dense, 0.5);
+        tr.config.eval_every = 2;
+        let mut eval_calls = 0;
+        let mut eval = |_t: usize, w: &[f32], rec: &mut IterRecord| {
+            eval_calls += 1;
+            rec.opt_gap = w[1];
+        };
+        let log = tr.run(5, Some(&mut eval));
+        assert_eq!(log.records().len(), 5);
+        assert!(eval_calls >= 2);
+        assert!(log.records()[0].loss.is_finite());
+    }
+
+    #[test]
+    fn threaded_driver_matches_deterministic() {
+        for kind in [
+            SparsifierKind::TopK { k: 1 },
+            SparsifierKind::RegTopK { k: 1, mu: 0.5, q: 1.0 },
+            SparsifierKind::Dense,
+        ] {
+            let mut a = toy_trainer(kind.clone(), 0.9);
+            for _ in 0..15 {
+                a.round();
+            }
+            let mut b = toy_trainer(kind.clone(), 0.9);
+            b.run_threaded(15);
+            assert_eq!(a.server.w, b.server.w, "{kind:?}");
+            assert_eq!(
+                a.ledger.total_upload_bytes(),
+                b.ledger.total_upload_bytes(),
+                "{kind:?}"
+            );
+        }
+    }
+}

@@ -1,0 +1,71 @@
+//! Worker-side state: model + sparsifier + gradient buffer.
+
+use crate::models::GradModel;
+use crate::sparse::SparseVec;
+use crate::sparsify::{RoundCtx, Sparsifier};
+
+/// One worker: computes the local gradient with its [`GradModel`] and
+/// sparsifies it with its [`Sparsifier`].
+pub struct Worker {
+    pub id: usize,
+    pub model: Box<dyn GradModel>,
+    pub sparsifier: Box<dyn Sparsifier>,
+    grad: Vec<f32>,
+    last_loss: f32,
+}
+
+impl Worker {
+    pub fn new(id: usize, model: Box<dyn GradModel>, sparsifier: Box<dyn Sparsifier>) -> Self {
+        let dim = model.dim();
+        Worker { id, model, sparsifier, grad: vec![0.0; dim], last_loss: f32::NAN }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.grad.len()
+    }
+
+    pub fn last_loss(&self) -> f32 {
+        self.last_loss
+    }
+
+    /// Phase 1: local gradient at the current global model.
+    pub fn compute_grad(&mut self, w: &[f32]) -> f32 {
+        self.last_loss = self.model.loss_grad(w, &mut self.grad);
+        self.last_loss
+    }
+
+    /// Accumulated gradient a_n^t for the genie channel (gtopk only).
+    pub fn peek_acc(&self) -> Vec<f32> {
+        self.sparsifier.peek_acc(&self.grad)
+    }
+
+    /// Phase 2: sparsify the gradient computed in phase 1.
+    pub fn sparsify(&mut self, ctx: &RoundCtx) -> SparseVec {
+        self.sparsifier.step(&self.grad, ctx)
+    }
+
+    pub fn needs_genie(&self) -> bool {
+        self.sparsifier.needs_genie()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::logistic::Logistic;
+    use crate::sparsify::{build, SparsifierKind};
+
+    #[test]
+    fn grad_then_sparsify_roundtrip() {
+        let model = Box::new(Logistic::toy_worker(vec![100.0, 1.0]));
+        let sp = build(&SparsifierKind::TopK { k: 1 }, 2, 0);
+        let mut w = Worker::new(0, model, sp);
+        let loss = w.compute_grad(&[0.0, 1.0]);
+        assert!(loss.is_finite() && loss > 0.0);
+        let z = vec![0.0; 2];
+        let ctx = RoundCtx { t: 0, gagg_prev: &z, omega: 0.5, genie_acc: None };
+        let sv = w.sparsify(&ctx);
+        assert_eq!(sv.nnz(), 1);
+        assert_eq!(sv.indices(), &[0]); // |g[0]| = 100x |g[1]|
+    }
+}

@@ -1,0 +1,233 @@
+//! The paper's §4.1 synthetic linear-regression testbed, exactly:
+//!
+//! * N workers, each with D i.i.d. N(0,1) data points of dimension J;
+//! * per-worker ground truth t_n ~ N(u_n, h^2 I) with u_n ~ N(U, sigma^2);
+//! * labels y = x^T t_n + eps, eps ~ N(0, epsilon).
+//!
+//! Fig. 2 uses N=20, D=500, J=100, U=0, sigma^2=5, h^2=1, epsilon=0.5.
+//! Heterogeneity across workers comes from the worker-specific means
+//! u_n — this is what makes sparsified entries cancel destructively
+//! and lets REGTOP-k shine.
+
+use crate::data::Shard;
+use crate::util::rng::Rng;
+
+/// Generator parameters (paper notation).
+#[derive(Clone, Copy, Debug)]
+pub struct LinearParams {
+    pub workers: usize,
+    pub rows_per_worker: usize,
+    pub dim: usize,
+    /// U: mean of the per-worker ground-truth means
+    pub u: f64,
+    /// sigma^2: variance of the per-worker means
+    pub sigma2: f64,
+    /// h^2: per-entry variance of t_n around u_n
+    pub h2: f64,
+    /// epsilon: label noise variance
+    pub noise: f64,
+}
+
+impl LinearParams {
+    /// The exact Fig. 2 configuration.
+    pub fn fig2() -> Self {
+        LinearParams { workers: 20, rows_per_worker: 500, dim: 100, u: 0.0, sigma2: 5.0, h2: 1.0, noise: 0.5 }
+    }
+}
+
+/// A generated distributed linear-regression problem.
+#[derive(Clone, Debug)]
+pub struct LinearProblem {
+    pub params: LinearParams,
+    pub shards: Vec<Shard>,
+    /// per-worker ground-truth models t_n
+    pub truths: Vec<Vec<f32>>,
+    /// global least-squares optimum w* of the averaged objective
+    pub w_star: Vec<f32>,
+}
+
+pub fn generate(params: LinearParams, seed: u64) -> LinearProblem {
+    let root = Rng::seed_from(seed);
+    let mut shards = Vec::with_capacity(params.workers);
+    let mut truths = Vec::with_capacity(params.workers);
+    for n in 0..params.workers {
+        let mut rng = root.derive(n as u64 + 1);
+        let u_n = params.u + params.sigma2.sqrt() * rng.gaussian();
+        let t_n: Vec<f32> = (0..params.dim).map(|_| rng.normal_f32(u_n, params.h2.sqrt())).collect();
+        let rows = params.rows_per_worker;
+        let mut x = Vec::with_capacity(rows * params.dim);
+        let mut y = Vec::with_capacity(rows);
+        for _ in 0..rows {
+            let start = x.len();
+            for _ in 0..params.dim {
+                x.push(rng.normal_f32(0.0, 1.0));
+            }
+            let dot: f32 = x[start..].iter().zip(&t_n).map(|(a, b)| a * b).sum();
+            y.push(dot + rng.normal_f32(0.0, params.noise.sqrt()));
+        }
+        shards.push(Shard { x, y, rows, dim: params.dim });
+        truths.push(t_n);
+    }
+    let w_star = least_squares(&shards);
+    LinearProblem { params, shards, truths, w_star }
+}
+
+/// Global LS optimum of (1/N) sum_n F_n via normal equations
+/// (sum X^T X) w = sum X^T y, solved by Gaussian elimination with
+/// partial pivoting (J is 100 in the paper — direct solve is exact
+/// enough and dependency-free).
+pub fn least_squares(shards: &[Shard]) -> Vec<f32> {
+    let j = shards[0].dim;
+    let mut ata = vec![0.0f64; j * j];
+    let mut aty = vec![0.0f64; j];
+    for s in shards {
+        for r in 0..s.rows {
+            let row = s.row(r);
+            let yr = s.y[r] as f64;
+            for a in 0..j {
+                let ra = row[a] as f64;
+                aty[a] += ra * yr;
+                let base = a * j;
+                for b in a..j {
+                    ata[base + b] += ra * row[b] as f64;
+                }
+            }
+        }
+    }
+    // mirror the upper triangle
+    for a in 0..j {
+        for b in 0..a {
+            ata[a * j + b] = ata[b * j + a];
+        }
+    }
+    solve_dense(&mut ata, &mut aty, j);
+    aty.into_iter().map(|v| v as f32).collect()
+}
+
+/// In-place Gaussian elimination with partial pivoting: solves A x = b,
+/// leaving x in `b`.
+pub fn solve_dense(a: &mut [f64], b: &mut [f64], n: usize) {
+    for col in 0..n {
+        // pivot
+        let mut piv = col;
+        for r in col + 1..n {
+            if a[r * n + col].abs() > a[piv * n + col].abs() {
+                piv = r;
+            }
+        }
+        if piv != col {
+            for c in 0..n {
+                a.swap(col * n + c, piv * n + c);
+            }
+            b.swap(col, piv);
+        }
+        let d = a[col * n + col];
+        assert!(d.abs() > 1e-12, "singular normal equations");
+        for r in col + 1..n {
+            let f = a[r * n + col] / d;
+            if f == 0.0 {
+                continue;
+            }
+            for c in col..n {
+                a[r * n + c] -= f * a[col * n + c];
+            }
+            b[r] -= f * b[col];
+        }
+    }
+    for col in (0..n).rev() {
+        let mut s = b[col];
+        for c in col + 1..n {
+            s -= a[col * n + c] * b[c];
+        }
+        b[col] = s / a[col * n + col];
+    }
+}
+
+/// Full-batch LS gradient of worker shard at w:  X^T (X w - y) / D
+/// (matches `model.linreg_grad` with the 1/2-mean loss).
+pub fn ls_gradient(shard: &Shard, w: &[f32], out: &mut [f32]) -> f32 {
+    out.iter_mut().for_each(|v| *v = 0.0);
+    let mut loss = 0.0f64;
+    for r in 0..shard.rows {
+        let row = shard.row(r);
+        let resid: f32 = row.iter().zip(w).map(|(a, b)| a * b).sum::<f32>() - shard.y[r];
+        loss += 0.5 * (resid as f64) * (resid as f64);
+        for (o, &x) in out.iter_mut().zip(row) {
+            *o += resid * x;
+        }
+    }
+    let inv = 1.0 / shard.rows as f32;
+    out.iter_mut().for_each(|v| *v *= inv);
+    (loss / shard.rows as f64) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> LinearParams {
+        LinearParams { workers: 3, rows_per_worker: 80, dim: 10, u: 0.0, sigma2: 5.0, h2: 1.0, noise: 0.5 }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = generate(small(), 7);
+        let b = generate(small(), 7);
+        assert_eq!(a.shards[1].x, b.shards[1].x);
+        assert_eq!(a.w_star, b.w_star);
+        let c = generate(small(), 8);
+        assert_ne!(a.shards[1].x, c.shards[1].x);
+    }
+
+    #[test]
+    fn workers_are_heterogeneous() {
+        let p = generate(small(), 1);
+        // per-worker truths differ markedly (sigma^2 = 5)
+        let d: f32 = p.truths[0].iter().zip(&p.truths[1]).map(|(a, b)| (a - b).abs()).sum();
+        assert!(d > 1.0, "{d}");
+    }
+
+    #[test]
+    fn w_star_zeroes_averaged_gradient() {
+        let p = generate(small(), 3);
+        let j = p.params.dim;
+        let mut g = vec![0.0; j];
+        let mut agg = vec![0.0f32; j];
+        for s in &p.shards {
+            ls_gradient(s, &p.w_star, &mut g);
+            for i in 0..j {
+                agg[i] += g[i] / p.params.workers as f32;
+            }
+        }
+        let norm: f32 = agg.iter().map(|v| v * v).sum::<f32>().sqrt();
+        assert!(norm < 1e-3, "grad norm at w* = {norm}");
+    }
+
+    #[test]
+    fn ls_gradient_matches_finite_difference() {
+        let p = generate(small(), 5);
+        let s = &p.shards[0];
+        let w: Vec<f32> = (0..10).map(|i| 0.1 * i as f32).collect();
+        let mut g = vec![0.0; 10];
+        let loss0 = ls_gradient(s, &w, &mut g);
+        let h = 1e-3f32;
+        for i in [0usize, 4, 9] {
+            let mut wp = w.clone();
+            wp[i] += h;
+            let mut tmp = vec![0.0; 10];
+            let lp = ls_gradient(s, &wp, &mut tmp);
+            let fd = (lp - loss0) / h;
+            assert!((fd - g[i]).abs() < 0.05 * g[i].abs().max(1.0), "i={i} fd={fd} g={}", g[i]);
+        }
+    }
+
+    #[test]
+    fn solver_solves_known_system() {
+        let mut a = vec![4.0, 1.0, 1.0, 3.0];
+        let mut b = vec![1.0, 2.0];
+        solve_dense(&mut a, &mut b, 2);
+        // exact solution of [[4,1],[1,3]] x = [1,2] is [1/11, 7/11]
+        assert!((b[0] - 1.0 / 11.0).abs() < 1e-12);
+        assert!((b[1] - 7.0 / 11.0).abs() < 1e-12);
+    }
+}

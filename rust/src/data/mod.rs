@@ -1,0 +1,56 @@
+//! Dataset substrates.
+//!
+//! - [`linear`]     — the paper's §4.1 Gaussian linear-model generator
+//!                    (exact parameters: U, sigma^2, h^2, epsilon).
+//! - [`cifar_like`] — synthetic 32x32x3 10-class image generator (the
+//!                    CIFAR-10 substitute; see DESIGN.md §3) plus a
+//!                    loader for real CIFAR-10 binary batches when
+//!                    present on disk.
+//! - [`sampler`]    — seeded mini-batch samplers, identical across
+//!                    algorithms (the paper's §4.2 fairness condition).
+
+pub mod cifar_like;
+pub mod linear;
+pub mod sampler;
+
+/// A labelled dense-feature dataset shard held by one worker.
+#[derive(Clone, Debug)]
+pub struct Shard {
+    /// row-major features, `rows x dim`
+    pub x: Vec<f32>,
+    /// labels: regression targets or class ids as f32
+    pub y: Vec<f32>,
+    pub rows: usize,
+    pub dim: usize,
+}
+
+impl Shard {
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Gather a batch by row indices into contiguous buffers.
+    pub fn gather_batch(&self, idx: &[usize]) -> (Vec<f32>, Vec<f32>) {
+        let mut x = Vec::with_capacity(idx.len() * self.dim);
+        let mut y = Vec::with_capacity(idx.len());
+        for &i in idx {
+            x.extend_from_slice(self.row(i));
+            y.push(self.y[i]);
+        }
+        (x, y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_rows_and_batches() {
+        let s = Shard { x: (0..6).map(|v| v as f32).collect(), y: vec![10.0, 20.0, 30.0], rows: 3, dim: 2 };
+        assert_eq!(s.row(1), &[2.0, 3.0]);
+        let (x, y) = s.gather_batch(&[2, 0]);
+        assert_eq!(x, vec![4.0, 5.0, 0.0, 1.0]);
+        assert_eq!(y, vec![30.0, 10.0]);
+    }
+}

@@ -1,0 +1,130 @@
+//! Baseline shoot-out: every sparsifier in the framework on the Fig. 2
+//! testbed at one sparsity budget — the comparison table the paper's
+//! §1.3 discusses qualitatively ("these approaches perform identically
+//! to TOP-k with respect to learning-rate scaling").
+//!
+//! Also exercises the quantization axis: `topk+q4` transmits the same
+//! k entries at 4-bit values, with the quantization residual folded
+//! back into the error accumulator (unbiased end-to-end).
+
+use crate::comm::{CostModel, Quantizer};
+use crate::data::linear::{generate, LinearParams, LinearProblem};
+use crate::experiments::fig2;
+use crate::sparse::SparseVec;
+use crate::sparsify::{RoundCtx, Sparsifier, SparsifierKind, TopK};
+use crate::util::rng::Rng;
+
+/// Row of the comparison table.
+#[derive(Clone, Debug)]
+pub struct BaselineRow {
+    pub name: String,
+    pub final_gap: f32,
+    pub bytes_per_round: usize,
+    pub mean_k: f32,
+}
+
+/// Run all baselines at sparsity `s` for `iters` rounds.
+pub fn run(params: LinearParams, s: f64, iters: usize, seed: u64) -> Vec<BaselineRow> {
+    let problem = generate(params, seed);
+    let j = params.dim;
+    let k = ((s * j as f64).round() as usize).max(1);
+    let kinds: Vec<(String, SparsifierKind)> = vec![
+        ("dense".into(), SparsifierKind::Dense),
+        ("topk".into(), SparsifierKind::TopK { k }),
+        ("regtopk".into(), SparsifierKind::RegTopK { k, mu: 0.5, q: 1.0 }),
+        ("gtopk".into(), SparsifierKind::GlobalTopK { k }),
+        ("randk".into(), SparsifierKind::RandK { k, seed: 11 }),
+        ("dgc".into(), SparsifierKind::Dgc { k, momentum: 0.9, clip: 0.0 }),
+        ("adak".into(), SparsifierKind::AdaK { ratio: 1.0, k_min: 1, k_max: 2 * k }),
+    ];
+    let mut rows = Vec::new();
+    for (name, kind) in kinds {
+        let mut tr = fig2::trainer_for(&problem, kind, 0.02);
+        for _ in 0..iters {
+            tr.round();
+        }
+        let gap = fig2::opt_gap(&tr.server.w, &problem.w_star);
+        let bytes = tr.ledger.total_upload_bytes() / iters;
+        let entries = tr.ledger.rounds().iter().map(|r| r.upload_entries).sum::<usize>();
+        rows.push(BaselineRow {
+            name,
+            final_gap: gap,
+            bytes_per_round: bytes,
+            mean_k: entries as f32 / (iters * params.workers) as f32,
+        });
+    }
+    // quantized TOP-k (manual loop: quantization sits between
+    // sparsifier and transport, residual folds into error feedback)
+    rows.push(run_quantized_topk(&problem, k, iters, 4));
+    rows
+}
+
+fn run_quantized_topk(
+    problem: &LinearProblem,
+    k: usize,
+    iters: usize,
+    bits: usize,
+) -> BaselineRow {
+    use crate::data::linear::ls_gradient;
+    let n = problem.params.workers;
+    let j = problem.params.dim;
+    let omega = 1.0 / n as f32;
+    let quant = Quantizer::new(bits);
+    let cost = CostModel { value_bits: bits, ..CostModel::default() };
+    let mut rng = Rng::seed_from(99);
+    let mut sparsifiers: Vec<TopK> = (0..n).map(|_| TopK::new(j, k)).collect();
+    let mut w = vec![0.0f32; j];
+    let mut grad = vec![0.0f32; j];
+    let mut gagg_prev = vec![0.0f32; j];
+    let mut bytes_total = 0usize;
+    let mut entries = 0usize;
+    for t in 0..iters {
+        let mut gagg = vec![0.0f32; j];
+        for (i, sp) in sparsifiers.iter_mut().enumerate() {
+            ls_gradient(&problem.shards[i], &w, &mut grad);
+            let ctx = RoundCtx { t, gagg_prev: &gagg_prev, omega, genie_acc: None };
+            let sv = sp.step(&grad, &ctx);
+            let (qsv, residual) = quant.quantize_update(&sv, &mut rng);
+            // fold the quantization error back into the accumulator
+            sp.fold_residual(qsv.indices(), &residual);
+            bytes_total += cost.update_bytes(&qsv);
+            entries += qsv.nnz();
+            qsv.axpy_into(omega, &mut gagg);
+        }
+        for i in 0..j {
+            w[i] -= 0.02 * gagg[i];
+        }
+        gagg_prev = gagg;
+    }
+    BaselineRow {
+        name: format!("topk+q{bits}"),
+        final_gap: fig2::opt_gap(&w, &problem.w_star),
+        bytes_per_round: bytes_total / iters,
+        mean_k: entries as f32 / (iters * n) as f32,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::sweeps;
+
+    #[test]
+    fn table_has_all_rows_and_sane_ordering() {
+        let rows = run(sweeps::sweep_params(6), 0.3, 250, 5);
+        assert_eq!(rows.len(), 8);
+        let get = |n: &str| rows.iter().find(|r| r.name == n).unwrap();
+        // dense is the floor; randk the worst selector
+        assert!(get("dense").final_gap < get("randk").final_gap);
+        assert!(get("gtopk").final_gap <= get("topk").final_gap * 1.2);
+        // budgets: fixed-k rows transmit k entries on average
+        assert!((get("topk").mean_k - 18.0).abs() < 0.5);
+        // quantized topk transmits the same entries in fewer bytes
+        assert!(get("topk+q4").bytes_per_round < get("topk").bytes_per_round);
+        // ... and still converges to a reasonable gap (unbiased EF)
+        assert!(get("topk+q4").final_gap < 4.0 * get("topk").final_gap);
+        // adak adapts within bounds
+        let a = get("adak");
+        assert!(a.mean_k >= 1.0 && a.mean_k <= 36.0);
+    }
+}

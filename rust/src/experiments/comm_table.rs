@@ -1,0 +1,114 @@
+//! Tab A — communication-volume accounting (the paper's motivating
+//! arithmetic, §1: "for ResNet-110, J ~= 1.7e6 ... the network
+//! exchanges 1.7e9 symbols per epoch per worker" at 1000 minibatches).
+//!
+//! Produces (a) the analytic symbols/epoch table for representative
+//! model sizes and sparsities and (b) measured bytes/round from a live
+//! ledger on the Fig. 2 testbed.
+
+use crate::comm::CostModel;
+use crate::data::linear::generate;
+use crate::experiments::{fig2, sweeps};
+use crate::sparsify::SparsifierKind;
+
+/// One analytic row: model, J, S, symbols/epoch/worker, bytes/epoch,
+/// compression vs dense.
+#[derive(Clone, Debug)]
+pub struct CommRow {
+    pub model: String,
+    pub dim: usize,
+    pub s: f64,
+    pub symbols_per_epoch: f64,
+    pub bytes_per_epoch: f64,
+    pub compression: f64,
+}
+
+/// Analytic table (batches/epoch = 1000 as in §1).
+pub fn analytic(sparsities: &[f64]) -> Vec<CommRow> {
+    let models: [(&str, usize); 3] =
+        [("resnet110", 1_700_000), ("resnet18", 11_173_962), ("resnet8", 19_858)];
+    let cm = CostModel::default();
+    let batches = 1000.0;
+    let mut rows = Vec::new();
+    for (name, j) in models {
+        // dense reference row (S = 1, no index overhead)
+        rows.push(CommRow {
+            model: name.to_string(),
+            dim: j,
+            s: 1.0,
+            symbols_per_epoch: j as f64 * batches,
+            bytes_per_epoch: cm.broadcast_bytes(j) as f64 * batches,
+            compression: 1.0,
+        });
+        for &s in sparsities {
+            let k = ((s * j as f64).round()).max(1.0);
+            let index_bits = (usize::BITS - (j - 1).leading_zeros()) as f64;
+            let bytes = k * (32.0 + index_bits) / 8.0 * batches;
+            rows.push(CommRow {
+                model: name.to_string(),
+                dim: j,
+                s,
+                symbols_per_epoch: k * batches,
+                bytes_per_epoch: bytes,
+                compression: bytes / (cm.broadcast_bytes(j) as f64 * batches),
+            });
+        }
+    }
+    rows
+}
+
+/// Measured bytes/round per sparsifier on the (reduced) Fig. 2 testbed.
+pub fn measured(s: f64, iters: usize, seed: u64) -> Vec<(String, usize, f64)> {
+    let params = sweeps::sweep_params(8);
+    let problem = generate(params, seed);
+    let k = ((s * params.dim as f64).round() as usize).max(1);
+    [
+        ("dense".to_string(), SparsifierKind::Dense),
+        ("topk".to_string(), SparsifierKind::TopK { k }),
+        ("regtopk".to_string(), SparsifierKind::RegTopK { k, mu: 0.5, q: 1.0 }),
+        ("randk".to_string(), SparsifierKind::RandK { k, seed: 7 }),
+    ]
+    .into_iter()
+    .map(|(name, kind)| {
+        let mut tr = fig2::trainer_for(&problem, kind, 0.02);
+        for _ in 0..iters {
+            tr.round();
+        }
+        let per_round = tr.ledger.total_upload_bytes() / iters;
+        let sim = tr.ledger.total_sim_time() / iters as f64;
+        (name, per_round, sim)
+    })
+    .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn analytic_reproduces_paper_motivating_number() {
+        // §1: ResNet-110, 1000 minibatches -> 1.7e9 symbols/epoch/worker
+        let rows = analytic(&[0.001]);
+        let dense110 = rows.iter().find(|r| r.model == "resnet110" && r.s == 1.0).unwrap();
+        assert!((dense110.symbols_per_epoch - 1.7e9).abs() < 1e7);
+        // 0.1% sparsification cuts symbols by ~1000x
+        let sp = rows.iter().find(|r| r.model == "resnet110" && r.s == 0.001).unwrap();
+        assert!(sp.symbols_per_epoch < 2e6);
+        assert!(sp.compression < 0.003, "{}", sp.compression);
+    }
+
+    #[test]
+    fn measured_sparsifiers_transmit_less_than_dense() {
+        let rows = measured(0.1, 5, 3);
+        let dense = rows.iter().find(|r| r.0 == "dense").unwrap().1;
+        for (name, bytes, _) in &rows {
+            if name != "dense" {
+                assert!(*bytes < dense / 5, "{name}: {bytes} vs dense {dense}");
+            }
+        }
+        // topk and regtopk budgets identical
+        let t = rows.iter().find(|r| r.0 == "topk").unwrap().1;
+        let r = rows.iter().find(|r| r.0 == "regtopk").unwrap().1;
+        assert_eq!(t, r);
+    }
+}

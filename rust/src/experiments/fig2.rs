@@ -1,0 +1,164 @@
+//! Fig. 2 — distributed linear regression (§4.1): N=20 workers, D=500
+//! points each, J=100, full-batch GD, eta=1e-2, omega=1/N; generator
+//! U=0, sigma^2=5, h^2=1, epsilon=0.5.  Plots optimality gap
+//! delta^t = ||w^t - w*|| (log scale) for S in {0.4, 0.5, 0.6} under
+//! Dense / TOP-k / REGTOP-k.
+//!
+//! Expected shape (paper): REGTOP-k starts tracking the dense curve at
+//! S=0.6 while TOP-k plateaus at a fixed gap (oscillation around the
+//! optimum driven by learning-rate scaling of late-released entries).
+
+use crate::config::TrainConfig;
+use crate::coordinator::{Server, Trainer, Worker};
+use crate::data::linear::{generate, LinearParams, LinearProblem};
+use crate::metrics::{IterRecord, RunLog};
+use crate::models::LinRegShard;
+use crate::optim::Sgd;
+use crate::sparsify::{build, SparsifierKind};
+
+pub const ETA: f32 = 0.01;
+
+/// Build a trainer over a generated problem for one sparsifier kind.
+pub fn trainer_for(problem: &LinearProblem, kind: SparsifierKind, eta: f32) -> Trainer {
+    let n = problem.params.workers;
+    let dim = problem.params.dim;
+    let config = TrainConfig {
+        workers: n,
+        eta,
+        sparsifier: kind.clone(),
+        eval_every: 1,
+        ..TrainConfig::default()
+    };
+    let workers = (0..n)
+        .map(|i| {
+            Worker::new(
+                i,
+                Box::new(LinRegShard { shard: problem.shards[i].clone() }),
+                build(&kind, dim, i),
+            )
+        })
+        .collect();
+    let server = Server::new(vec![0.0; dim], Box::new(Sgd::new(eta)));
+    Trainer::new(config, workers, server)
+}
+
+/// ||w - w*||
+pub fn opt_gap(w: &[f32], w_star: &[f32]) -> f32 {
+    w.iter()
+        .zip(w_star)
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum::<f32>()
+        .sqrt()
+}
+
+/// One (sparsity, algorithm) curve.
+pub fn run_curve(
+    problem: &LinearProblem,
+    kind: SparsifierKind,
+    name: &str,
+    iters: usize,
+    eta: f32,
+) -> RunLog {
+    let mut tr = trainer_for(problem, kind, eta);
+    let mut log = RunLog::new(name, tr.config.to_json());
+    for t in 0..iters {
+        let rr = tr.round();
+        let mut rec = IterRecord::new(t);
+        rec.loss = rr.mean_loss;
+        rec.opt_gap = opt_gap(&tr.server.w, &problem.w_star);
+        rec.upload_bytes = rr.upload_bytes;
+        rec.sim_time_s = tr.ledger.rounds().last().unwrap().sim_time_s;
+        log.push(rec);
+    }
+    log
+}
+
+/// The full figure: for each S in `sparsities`, run dense / topk /
+/// regtopk.  Run names are "{alg}-S{S}".
+pub fn run(
+    params: LinearParams,
+    seed: u64,
+    iters: usize,
+    sparsities: &[f64],
+    mu: f32,
+    q: f32,
+    eta: f32,
+) -> Vec<RunLog> {
+    let problem = generate(params, seed);
+    let j = params.dim;
+    let mut logs = Vec::new();
+    // dense reference is sparsity-independent; run it once
+    logs.push(run_curve(&problem, SparsifierKind::Dense, "dense", iters, eta));
+    for &s in sparsities {
+        let k = ((s * j as f64).round() as usize).clamp(1, j);
+        logs.push(run_curve(
+            &problem,
+            SparsifierKind::TopK { k },
+            &format!("topk-S{s}"),
+            iters,
+            eta,
+        ));
+        logs.push(run_curve(
+            &problem,
+            SparsifierKind::RegTopK { k, mu, q },
+            &format!("regtopk-S{s}"),
+            iters,
+            eta,
+        ));
+    }
+    logs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> LinearParams {
+        // scaled-down geometry, same generator statistics
+        LinearParams { workers: 6, rows_per_worker: 120, dim: 30, u: 0.0, sigma2: 5.0, h2: 1.0, noise: 0.5 }
+    }
+
+    #[test]
+    fn dense_gap_decreases_monotonically_late() {
+        let p = generate(small(), 3);
+        let log = run_curve(&p, SparsifierKind::Dense, "dense", 200, ETA);
+        let g50 = log.records()[50].opt_gap;
+        let g199 = log.records()[199].opt_gap;
+        assert!(g199 < g50, "{g199} !< {g50}");
+    }
+
+    #[test]
+    fn regtopk_parity_with_topk_at_same_sparsity() {
+        // Reproduction finding (see rust/tests/fig2_linreg.rs and
+        // EXPERIMENTS.md §Fig2): on the isotropic LS testbed REGTOP-k
+        // is at PARITY with TOP-k — this fixed-seed check pins the
+        // transient-phase gap within a tight band of TOP-k's, and the
+        // deterministic run keeps it stable.
+        let p = generate(small(), 3);
+        let k = 18; // S = 0.6
+        let top = run_curve(&p, SparsifierKind::TopK { k }, "t", 400, 0.05);
+        let reg = run_curve(
+            &p,
+            SparsifierKind::RegTopK { k, mu: 0.5, q: 1.0 },
+            "r",
+            400,
+            0.05,
+        );
+        let gap_top = top.records().last().unwrap().opt_gap;
+        let gap_reg = reg.records().last().unwrap().opt_gap;
+        assert!(
+            gap_reg < 1.5 * gap_top && gap_reg > 0.2 * gap_top,
+            "regtopk {gap_reg} vs topk {gap_top}"
+        );
+    }
+
+    #[test]
+    fn higher_sparsity_budget_helps_topk() {
+        let p = generate(small(), 7);
+        let lo = run_curve(&p, SparsifierKind::TopK { k: 6 }, "lo", 300, 0.05);
+        let hi = run_curve(&p, SparsifierKind::TopK { k: 24 }, "hi", 300, 0.05);
+        assert!(
+            hi.records().last().unwrap().opt_gap < lo.records().last().unwrap().opt_gap
+        );
+    }
+}

@@ -1,0 +1,143 @@
+//! Fig. 3 — CNN on CIFAR-like data (§4.2 substitute; DESIGN.md §3):
+//! N=8 workers, mini-batch 20/worker, eta=0.01, S=0.001 (k = max(1,
+//! round(S*J))), validation accuracy vs iteration, TOP-k vs REGTOP-k
+//! with identical init and identical batch samplers.
+//!
+//! The model is the artifact-backed ResNet-8 (`cnn_grad_resnet8` /
+//! `cnn_eval_resnet8` HLO executables through PJRT) — python never
+//! runs here.  With `--model mlp` the MLP artifacts are used instead
+//! (faster; same J-scale sparsification dynamics).
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::coordinator::{Server, Trainer, Worker};
+use crate::data::cifar_like;
+use crate::metrics::{IterRecord, RunLog};
+use crate::models::artifact::{CnnEval, CnnModel, MlpModel};
+use crate::optim::Sgd;
+use crate::runtime::Runtime;
+use crate::sparsify::{build, SparsifierKind};
+
+#[derive(Clone, Copy, Debug)]
+pub struct Fig3Config {
+    pub workers: usize,
+    pub iters: usize,
+    pub eta: f32,
+    /// sparsity factor S; k = max(1, round(S * J))
+    pub s: f64,
+    pub mu: f32,
+    pub q: f32,
+    pub seed: u64,
+    pub train_rows: usize,
+    pub val_rows: usize,
+    pub eval_every: usize,
+}
+
+impl Default for Fig3Config {
+    fn default() -> Self {
+        Fig3Config {
+            workers: 8,
+            iters: 300,
+            eta: 0.01,
+            s: 0.001,
+            mu: 0.5,
+            q: 1.0,
+            seed: 42,
+            train_rows: 1600,
+            val_rows: 200,
+            eval_every: 25,
+        }
+    }
+}
+
+/// Build a trainer for one sparsifier over shared data/artifacts.
+fn build_trainer(
+    rt: &mut Runtime,
+    cfg: &Fig3Config,
+    kind: SparsifierKind,
+    model: &str,
+    train: &cifar_like::ImageSet,
+) -> Result<Trainer> {
+    let grad_name = match model {
+        "mlp" => "mlp_grad".to_string(),
+        m => format!("cnn_grad_{m}"),
+    };
+    let exe = rt.load(&grad_name)?;
+    let w0 = rt.load_init(if model == "mlp" { "mlp" } else { model })?;
+    let dim = w0.len();
+    let shards = train.shard(cfg.workers);
+    let workers: Vec<Worker> = shards
+        .into_iter()
+        .enumerate()
+        .map(|(i, shard)| {
+            // identical batch-sampler seeds across algorithms (§4.2)
+            let seed = cfg.seed.wrapping_mul(1000).wrapping_add(i as u64);
+            let boxed: Box<dyn crate::models::GradModel> = if model == "mlp" {
+                Box::new(MlpModel::new(exe.clone(), shard, seed))
+            } else {
+                Box::new(CnnModel::new(exe.clone(), shard, seed))
+            };
+            Worker::new(i, boxed, build(&kind, dim, i))
+        })
+        .collect();
+    let config = TrainConfig {
+        workers: cfg.workers,
+        eta: cfg.eta,
+        sparsifier: kind,
+        eval_every: cfg.eval_every,
+        seed: cfg.seed,
+        ..TrainConfig::default()
+    };
+    let server = Server::new(w0, Box::new(Sgd::new(cfg.eta)));
+    Ok(Trainer::new(config, workers, server))
+}
+
+/// Run the figure: accuracy curves for TOP-k and REGTOP-k (and dense
+/// when `with_dense`).  `model` is "resnet8" (default) or "mlp".
+pub fn run(
+    rt: &mut Runtime,
+    cfg: Fig3Config,
+    model: &str,
+    with_dense: bool,
+) -> Result<Vec<RunLog>> {
+    let train = cifar_like::generate(cfg.train_rows, 0.15, cfg.seed);
+    let val = cifar_like::generate(cfg.val_rows, 0.15, cfg.seed ^ 0xEEEE);
+    let eval_exe = if model == "mlp" {
+        None // MLP eval via grad artifact loss only
+    } else {
+        Some(CnnEval::new(rt.load(&format!("cnn_eval_{model}"))?, val))
+    };
+
+    let dim = rt.load_init(if model == "mlp" { "mlp" } else { model })?.len();
+    let k = ((cfg.s * dim as f64).round() as usize).max(1);
+    let mut kinds = vec![
+        ("topk".to_string(), SparsifierKind::TopK { k }),
+        ("regtopk".to_string(), SparsifierKind::RegTopK { k, mu: cfg.mu, q: cfg.q }),
+    ];
+    if with_dense {
+        kinds.push(("dense".to_string(), SparsifierKind::Dense));
+    }
+
+    let mut logs = Vec::new();
+    for (name, kind) in kinds {
+        let mut tr = build_trainer(rt, &cfg, kind, model, &train)?;
+        let mut log = RunLog::new(name.clone(), tr.config.to_json());
+        for t in 0..cfg.iters {
+            let t0 = std::time::Instant::now();
+            let rr = tr.round();
+            let mut rec = IterRecord::new(t);
+            rec.loss = rr.mean_loss;
+            rec.upload_bytes = rr.upload_bytes;
+            rec.wall_time_s = t0.elapsed().as_secs_f64();
+            if cfg.eval_every > 0 && (t % cfg.eval_every == 0 || t + 1 == cfg.iters) {
+                if let Some(ev) = &eval_exe {
+                    rec.accuracy = ev.accuracy(&tr.server.w);
+                }
+            }
+            log.push(rec);
+        }
+        logs.push(log);
+    }
+    Ok(logs)
+}

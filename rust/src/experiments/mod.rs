@@ -1,0 +1,13 @@
+//! Experiment harnesses: one module per paper figure/table plus the
+//! ablation sweeps (DESIGN.md §5 experiment index).
+//!
+//! Every harness returns [`crate::metrics::RunLog`]s so the CLI,
+//! examples, integration tests and benches all regenerate the same
+//! series the paper reports; EXPERIMENTS.md records the outputs.
+
+pub mod baselines;
+pub mod comm_table;
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod sweeps;

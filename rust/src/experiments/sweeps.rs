@@ -1,0 +1,122 @@
+//! Ablation sweeps (DESIGN.md Abl 1-4): mu, Q, worker count, and
+//! approximate-selection recall.  All run on the Fig. 2 testbed at a
+//! reduced geometry so a full sweep finishes in seconds.
+
+use crate::data::linear::{generate, LinearParams};
+use crate::experiments::fig2;
+use crate::sparse::{approx, select_topk};
+use crate::sparsify::SparsifierKind;
+use crate::util::rng::Rng;
+
+/// Reduced Fig. 2 geometry for sweeps.
+pub fn sweep_params(workers: usize) -> LinearParams {
+    LinearParams { workers, rows_per_worker: 200, dim: 60, u: 0.0, sigma2: 5.0, h2: 1.0, noise: 0.5 }
+}
+
+/// Abl 1 — mu sweep: final optimality gap of REGTOP-k per mu, plus the
+/// TOP-k reference at the same k.  mu -> 0 must converge to TOP-k.
+pub fn mu_sweep(mus: &[f64], s: f64, iters: usize, seed: u64) -> Vec<(String, f32)> {
+    let params = sweep_params(8);
+    let problem = generate(params, seed);
+    let k = ((s * params.dim as f64).round() as usize).max(1);
+    let mut out = Vec::new();
+    let top = fig2::run_curve(&problem, SparsifierKind::TopK { k }, "topk", iters, 0.02);
+    out.push(("topk".to_string(), top.records().last().unwrap().opt_gap));
+    for &mu in mus {
+        let log = fig2::run_curve(
+            &problem,
+            SparsifierKind::RegTopK { k, mu: mu as f32, q: 1.0 },
+            &format!("mu={mu}"),
+            iters,
+            0.02,
+        );
+        out.push((format!("mu={mu}"), log.records().last().unwrap().opt_gap));
+    }
+    out
+}
+
+/// Abl 2 — Q sweep at fixed mu.
+pub fn q_sweep(qs: &[f64], s: f64, iters: usize, seed: u64) -> Vec<(String, f32)> {
+    let params = sweep_params(8);
+    let problem = generate(params, seed);
+    let k = ((s * params.dim as f64).round() as usize).max(1);
+    qs.iter()
+        .map(|&q| {
+            let log = fig2::run_curve(
+                &problem,
+                SparsifierKind::RegTopK { k, mu: 0.5, q: q as f32 },
+                &format!("q={q}"),
+                iters,
+                0.02,
+            );
+            (format!("q={q}"), log.records().last().unwrap().opt_gap)
+        })
+        .collect()
+}
+
+/// Abl 3 — worker-count scaling: (N, topk gap, regtopk gap).
+pub fn worker_sweep(ns: &[usize], s: f64, iters: usize, seed: u64) -> Vec<(usize, f32, f32)> {
+    ns.iter()
+        .map(|&n| {
+            let problem = generate(sweep_params(n), seed);
+            let k = ((s * 60.0).round() as usize).max(1);
+            let top = fig2::run_curve(&problem, SparsifierKind::TopK { k }, "t", iters, 0.02);
+            let reg = fig2::run_curve(
+                &problem,
+                SparsifierKind::RegTopK { k, mu: 0.5, q: 1.0 },
+                "r",
+                iters,
+                0.02,
+            );
+            (
+                n,
+                top.records().last().unwrap().opt_gap,
+                reg.records().last().unwrap().opt_gap,
+            )
+        })
+        .collect()
+}
+
+/// Abl 4 — approximate top-k: (oversample, mean recall) over random
+/// Gaussian vectors at the Fig. 3 scale.
+pub fn approx_recall_sweep(oversamples: &[usize], j: usize, k: usize, trials: usize) -> Vec<(usize, f64)> {
+    oversamples
+        .iter()
+        .map(|&ov| {
+            let mut total = 0.0;
+            for t in 0..trials {
+                let mut rng = Rng::seed_from(1000 + t as u64);
+                let x = rng.gaussian_vec(j, 1.0);
+                let exact = select_topk(&x, k);
+                let ap = approx::select_topk_sampled(&x, k, ov, &mut rng);
+                total += approx::recall(&exact, &ap);
+            }
+            (ov, total / trials as f64)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mu_sweep_small_mu_matches_topk() {
+        let rows = mu_sweep(&[1e-6, 0.5], 0.5, 150, 5);
+        let topk_gap = rows[0].1;
+        let mu_tiny_gap = rows[1].1;
+        assert!(
+            (mu_tiny_gap - topk_gap).abs() < 0.05 * topk_gap.max(0.1),
+            "mu->0 {mu_tiny_gap} vs topk {topk_gap}"
+        );
+    }
+
+    #[test]
+    fn recall_improves_with_oversampling() {
+        let rows = approx_recall_sweep(&[2, 16], 20_000, 200, 5);
+        // the threshold estimator is stochastic; require high recall at
+        // large oversampling and no collapse at small
+        assert!(rows[1].1 > 0.9, "{rows:?}");
+        assert!(rows[0].1 > 0.7, "{rows:?}");
+    }
+}

@@ -1,0 +1,230 @@
+//! Gradient bookkeeping: error-feedback state and flat-vector layout.
+//!
+//! Each worker owns one [`ErrorFeedback`] holding the sparsification
+//! error eps_n^t and the REGTOP-k history (a_n^{t-1}, s_n^{t-1}).  The
+//! conservation law  a = ghat + eps'  is enforced bit-exactly and
+//! property-tested (DESIGN.md invariant 2).
+//!
+//! Perf note (EXPERIMENTS.md §Perf): the per-round path is
+//! zero-allocation for the length-J state — `accumulate` writes into
+//! an internal buffer, `commit` swaps it into the history and reuses
+//! the previous round's buffers; only the k-entry [`SparseVec`] is
+//! allocated per round.
+
+use crate::sparse::SparseVec;
+
+/// Per-worker error-feedback state (paper §1.1 / Alg. 1).
+#[derive(Clone, Debug)]
+pub struct ErrorFeedback {
+    /// eps_n^t — sparsification error carried across iterations
+    pub eps: Vec<f32>,
+    /// a_n^t — current accumulated gradient (valid between
+    /// [`Self::accumulate`] and [`Self::commit`])
+    pub acc: Vec<f32>,
+    /// a_n^{t-1} — previous accumulated gradient (REGTOP-k history)
+    pub acc_prev: Vec<f32>,
+    /// s_n^{t-1} — previous mask as a dense {0,1} vector
+    pub mask_prev: Vec<f32>,
+    /// indices set in `mask_prev` (for O(k) clearing)
+    prev_sel: Vec<u32>,
+    /// whether any iteration has completed (Alg. 1 line 1 switch)
+    pub warm: bool,
+}
+
+impl ErrorFeedback {
+    pub fn new(dim: usize) -> Self {
+        ErrorFeedback {
+            eps: vec![0.0; dim],
+            acc: vec![0.0; dim],
+            acc_prev: vec![0.0; dim],
+            mask_prev: vec![0.0; dim],
+            prev_sel: Vec::new(),
+            warm: false,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.eps.len()
+    }
+
+    /// a_n^t = eps_n^t + g_n^t   (Alg. 1 line 4), written into
+    /// `self.acc` (no allocation).  Returns a borrow of the result.
+    pub fn accumulate(&mut self, grad: &[f32]) -> &[f32] {
+        debug_assert_eq!(grad.len(), self.eps.len());
+        for ((a, e), g) in self.acc.iter_mut().zip(&self.eps).zip(grad) {
+            *a = e + g;
+        }
+        &self.acc
+    }
+
+    /// Allocation-free peek used by the genie channel: a = eps + g into
+    /// a caller buffer.
+    pub fn accumulate_into(&self, grad: &[f32], out: &mut [f32]) {
+        for ((o, e), g) in out.iter_mut().zip(&self.eps).zip(grad) {
+            *o = e + g;
+        }
+    }
+
+    /// Split the accumulated gradient (from the latest
+    /// [`Self::accumulate`]) by `selected`: returns the sparse gradient
+    /// to transmit, stores eps' = acc - ghat (Alg. 1 lines 7-8) and
+    /// records (acc, mask) as the t-1 history for REGTOP-k.
+    pub fn commit(&mut self, selected: &[u32]) -> SparseVec {
+        debug_assert!(selected.windows(2).all(|w| w[0] < w[1]));
+        let ghat = SparseVec::gather(&self.acc, selected);
+        // history: acc_prev <- acc (buffer swap; old acc_prev becomes
+        // next round's acc scratch)
+        std::mem::swap(&mut self.acc_prev, &mut self.acc);
+        // eps' = acc with selected entries zeroed (bit-exact
+        // conservation: untouched entries are copied verbatim)
+        self.eps.copy_from_slice(&self.acc_prev);
+        for &i in selected {
+            self.eps[i as usize] = 0.0;
+        }
+        // mask_prev: clear previous k bits, set new k bits
+        for &i in &self.prev_sel {
+            self.mask_prev[i as usize] = 0.0;
+        }
+        for &i in selected {
+            self.mask_prev[i as usize] = 1.0;
+        }
+        self.prev_sel.clear();
+        self.prev_sel.extend_from_slice(selected);
+        self.warm = true;
+        ghat
+    }
+}
+
+/// Layer layout of a flat parameter vector (mirrors the python
+/// `ParamSpec` exported in artifacts/manifest.json).
+#[derive(Clone, Debug)]
+pub struct FlatLayout {
+    pub layers: Vec<LayerSlice>,
+    pub total: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct LayerSlice {
+    pub name: String,
+    pub offset: usize,
+    pub size: usize,
+    pub shape: Vec<usize>,
+}
+
+impl FlatLayout {
+    /// Per-layer l2 norms of a flat vector — used by the metrics sink
+    /// for layer-wise sparsification diagnostics.
+    pub fn layer_norms(&self, w: &[f32]) -> Vec<(String, f32)> {
+        self.layers
+            .iter()
+            .map(|l| {
+                let s = &w[l.offset..l.offset + l.size];
+                (l.name.clone(), s.iter().map(|v| v * v).sum::<f32>().sqrt())
+            })
+            .collect()
+    }
+
+    /// Count of selected indices per layer (diagnostic: where does the
+    /// sparsifier spend its budget?).
+    pub fn selection_histogram(&self, selected: &[u32]) -> Vec<(String, usize)> {
+        let mut out: Vec<(String, usize)> =
+            self.layers.iter().map(|l| (l.name.clone(), 0usize)).collect();
+        for &i in selected {
+            let i = i as usize;
+            // layers are sorted by offset: binary search
+            let li = match self.layers.binary_search_by(|l| l.offset.cmp(&i)) {
+                Ok(exact) => exact,
+                Err(ins) => ins - 1,
+            };
+            debug_assert!(
+                i >= self.layers[li].offset && i < self.layers[li].offset + self.layers[li].size
+            );
+            out[li].1 += 1;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::select_topk;
+    use crate::util::check;
+
+    #[test]
+    fn conservation_law_bit_exact() {
+        check::forall("ef_conservation", |rng, _| {
+            let n = check::arb_len(rng, 200);
+            let mut ef = ErrorFeedback::new(n);
+            ef.eps = check::arb_vec(rng, n);
+            let g = check::arb_vec(rng, n);
+            let acc_copy = ef.accumulate(&g).to_vec();
+            let k = rng.below(n + 1);
+            let sel = select_topk(&acc_copy, k);
+            let ghat = ef.commit(&sel);
+            // acc == ghat + eps' exactly
+            let dense = ghat.to_dense();
+            for i in 0..n {
+                assert_eq!(dense[i] + ef.eps[i], acc_copy[i], "i={i}");
+                // disjoint support
+                assert!(dense[i] == 0.0 || ef.eps[i] == 0.0);
+            }
+            // history stored exactly
+            assert_eq!(ef.acc_prev, acc_copy);
+            assert_eq!(
+                ef.mask_prev.iter().filter(|&&m| m == 1.0).count(),
+                sel.len()
+            );
+        });
+    }
+
+    #[test]
+    fn mask_prev_cleared_between_rounds() {
+        let mut ef = ErrorFeedback::new(4);
+        ef.accumulate(&[1.0, 5.0, 2.0, 0.1]);
+        ef.commit(&[1]);
+        assert_eq!(ef.mask_prev, vec![0.0, 1.0, 0.0, 0.0]);
+        ef.accumulate(&[1.0, 0.0, 2.0, 0.1]);
+        ef.commit(&[2, 3]);
+        assert_eq!(ef.mask_prev, vec![0.0, 0.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn unselected_entries_accumulate_over_rounds() {
+        let mut ef = ErrorFeedback::new(3);
+        let g = vec![10.0, 1.0, 0.1];
+        for t in 1..=5 {
+            ef.accumulate(&g);
+            let sel = select_topk(&ef.acc, 1); // always picks index 0
+            assert_eq!(sel, vec![0]);
+            ef.commit(&sel);
+            assert_eq!(ef.eps[1], t as f32 * 1.0);
+        }
+    }
+
+    #[test]
+    fn accumulate_into_matches_accumulate() {
+        let mut ef = ErrorFeedback::new(3);
+        ef.eps = vec![1.0, -2.0, 3.0];
+        let g = vec![0.5, 0.5, 0.5];
+        let mut out = vec![0.0; 3];
+        ef.accumulate_into(&g, &mut out);
+        assert_eq!(ef.accumulate(&g), out.as_slice());
+    }
+
+    #[test]
+    fn layout_histogram_and_norms() {
+        let layout = FlatLayout {
+            layers: vec![
+                LayerSlice { name: "a".into(), offset: 0, size: 3, shape: vec![3] },
+                LayerSlice { name: "b".into(), offset: 3, size: 2, shape: vec![2] },
+            ],
+            total: 5,
+        };
+        let h = layout.selection_histogram(&[0, 2, 3]);
+        assert_eq!(h, vec![("a".to_string(), 2), ("b".to_string(), 1)]);
+        let n = layout.layer_norms(&[3.0, 0.0, 4.0, 1.0, 0.0]);
+        assert_eq!(n[0].1, 5.0);
+        assert_eq!(n[1].1, 1.0);
+    }
+}

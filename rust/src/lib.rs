@@ -1,0 +1,32 @@
+//! # regtopk — REGTOP-k gradient sparsification, reproduced end-to-end
+//!
+//! Production-quality reproduction of *"Novel Gradient Sparsification
+//! Algorithm via Bayesian Inference"* (Bereyhi, Liang, Boudreau, Afana,
+//! 2024): a distributed-SGD coordinator in rust whose model gradients
+//! are AOT-compiled JAX/Pallas artifacts executed through PJRT, and
+//! whose communication layer sparsifies gradients with the paper's
+//! REGTOP-k algorithm (plus the TOP-k family of baselines).
+//!
+//! Layer map (see DESIGN.md):
+//! - **L3 (this crate)** — coordination: [`coordinator`] drives the
+//!   synchronous rounds; [`sparsify`] implements the paper's Alg. 1 and
+//!   baselines; [`comm`] simulates the transport with exact byte
+//!   accounting; [`data`], [`models`], [`optim`], [`metrics`],
+//!   [`config`], [`util`] are the substrates.
+//! - **L2/L1 (python, build-time only)** — JAX model graphs + Pallas
+//!   kernels, lowered once to `artifacts/*.hlo.txt`; [`runtime`] loads
+//!   and executes them via the PJRT CPU client.
+
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod grad;
+pub mod metrics;
+pub mod models;
+pub mod optim;
+pub mod runtime;
+pub mod sparse;
+pub mod sparsify;
+pub mod util;

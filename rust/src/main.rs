@@ -1,0 +1,414 @@
+//! `repro` — the leader binary: regenerates every figure/table of the
+//! paper and exposes the generic training entrypoint.
+//!
+//! ```text
+//! repro fig1   [--iters 100] [--mu 0.5] [--q 1.0] [--out results]
+//! repro fig2   [--iters 1000] [--s 0.4,0.5,0.6] [--seed 42] [--out results]
+//! repro fig3   [--iters 300] [--model resnet8|mlp] [--s 0.001] [--dense] ...
+//! repro sweep  --param mu|q|workers|approx ...
+//! repro comm   [--s 0.4,0.1,0.01,0.001]
+//! repro train  --config cfg.json      (generic linreg-testbed run)
+//! repro info                          (artifact + platform report)
+//! ```
+//!
+//! Every subcommand writes CSV + JSON under `--out` (default
+//! `results/`) and prints a terminal summary with sparklines.
+
+use std::path::{Path, PathBuf};
+
+use regtopk::config::TrainConfig;
+use regtopk::data::linear::{generate, LinearParams};
+use regtopk::experiments::{comm_table, fig1, fig2, fig3, sweeps};
+use regtopk::metrics::RunLog;
+use regtopk::runtime::Runtime;
+use regtopk::util::cli::Cli;
+
+fn main() {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = if args.is_empty() { "help".to_string() } else { args.remove(0) };
+    let code = match cmd.as_str() {
+        "fig1" => cmd_fig1(args),
+        "fig2" => cmd_fig2(args),
+        "fig3" => cmd_fig3(args),
+        "sweep" => cmd_sweep(args),
+        "baselines" => cmd_baselines(args),
+        "comm" => cmd_comm(args),
+        "train" => cmd_train(args),
+        "info" => cmd_info(args),
+        _ => {
+            eprintln!(
+                "usage: repro <fig1|fig2|fig3|sweep|baselines|comm|train|info> [flags]\n\
+                 run `repro <cmd> --help` for per-command flags"
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn write_logs(logs: &[RunLog], out: &str, stem: &str) {
+    let dir = PathBuf::from(out);
+    for log in logs {
+        // sanitize: "topk-S0.6" would otherwise lose ".6" to
+        // with_extension
+        let safe = log.name.replace('.', "p");
+        let base = dir.join(format!("{stem}_{safe}"));
+        log.write_csv(&base.with_extension("csv")).expect("write csv");
+        log.write_json(&base.with_extension("json")).expect("write json");
+    }
+    println!("wrote {} runs to {out}/{stem}_*.{{csv,json}}", logs.len());
+}
+
+fn cmd_fig1(args: Vec<String>) -> i32 {
+    let p = Cli::new("Fig. 1: toy logistic regression (dense vs TOP-1 vs REGTOP-1)")
+        .flag("iters", "100", "iterations")
+        .flag("mu", "0.5", "REGTOP-k regularization temperature")
+        .flag("q", "1.0", "REGTOP-k never-sent prior")
+        .flag("out", "results", "output directory")
+        .switch("lr-scaling", "also run the §1.2 G-extension diagnostic")
+        .parse_from(args);
+    let p = match p {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let logs = fig1::run(p.get_usize("iters"), p.get_f32("mu"), p.get_f32("q"));
+    println!("Fig.1 toy logistic regression (eta=0.9, w0=[0,1]):");
+    for log in &logs {
+        println!(
+            "  {:<8} final loss {:.6}  {}",
+            log.name,
+            log.last().unwrap().loss,
+            log.sparkline(|r| r.loss, 40)
+        );
+    }
+    if p.get_bool("lr-scaling") {
+        let (steps, factor) = fig1::lr_scaling(p.get_usize("iters"));
+        let stall = steps.iter().take_while(|&&s| s < 1e-9).count();
+        println!("  LR-scaling diagnostic: stall {stall} iters, then scaling factor {factor:.1}x");
+    }
+    write_logs(&logs, p.get("out"), "fig1");
+    0
+}
+
+fn cmd_fig2(args: Vec<String>) -> i32 {
+    let p = Cli::new("Fig. 2: distributed linear regression optimality gap")
+        .flag("iters", "1000", "iterations")
+        .flag("s", "0.4,0.5,0.6", "sparsity factors")
+        .flag("workers", "20", "workers N")
+        .flag("rows", "500", "data points per worker D")
+        .flag("dim", "100", "feature dimension J")
+        .flag("mu", "0.5", "REGTOP-k mu")
+        .flag("q", "1.0", "REGTOP-k Q")
+        .flag("eta", "0.01", "learning rate")
+        .flag("seed", "42", "rng seed")
+        .flag("out", "results", "output directory")
+        .parse_from(args);
+    let p = match p {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let params = LinearParams {
+        workers: p.get_usize("workers"),
+        rows_per_worker: p.get_usize("rows"),
+        dim: p.get_usize("dim"),
+        ..LinearParams::fig2()
+    };
+    let logs = fig2::run(
+        params,
+        p.get_usize("seed") as u64,
+        p.get_usize("iters"),
+        &p.get_f64_list("s"),
+        p.get_f32("mu"),
+        p.get_f32("q"),
+        p.get_f32("eta"),
+    );
+    println!(
+        "Fig.2 linreg (N={} D={} J={} eta={}): final optimality gap ||w-w*||",
+        params.workers, params.rows_per_worker, params.dim, p.get_f32("eta")
+    );
+    for log in &logs {
+        println!(
+            "  {:<14} gap {:>12.6}  {}",
+            log.name,
+            log.last().unwrap().opt_gap,
+            log.sparkline(|r| r.opt_gap.max(1e-9).ln(), 40)
+        );
+    }
+    write_logs(&logs, p.get("out"), "fig2");
+    0
+}
+
+fn cmd_fig3(args: Vec<String>) -> i32 {
+    let p = Cli::new("Fig. 3: CNN on CIFAR-like data, TOP-k vs REGTOP-k at S=0.001")
+        .flag("iters", "300", "iterations")
+        .flag("model", "resnet8", "resnet8 | mlp")
+        .flag("workers", "8", "workers N")
+        .flag("s", "0.001", "sparsity factor")
+        .flag("eta", "0.01", "learning rate")
+        .flag("mu", "0.5", "REGTOP-k mu")
+        .flag("q", "1.0", "REGTOP-k Q")
+        .flag("train-rows", "1600", "synthetic training rows")
+        .flag("val-rows", "200", "synthetic validation rows")
+        .flag("eval-every", "25", "accuracy eval period")
+        .flag("seed", "42", "rng seed")
+        .flag("out", "results", "output directory")
+        .switch("dense", "also run the dense reference")
+        .parse_from(args);
+    let p = match p {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let mut rt = match Runtime::open_default() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("cannot open artifacts: {e:#}");
+            return 1;
+        }
+    };
+    let cfg = fig3::Fig3Config {
+        workers: p.get_usize("workers"),
+        iters: p.get_usize("iters"),
+        eta: p.get_f32("eta"),
+        s: p.get_f64("s"),
+        mu: p.get_f32("mu"),
+        q: p.get_f32("q"),
+        seed: p.get_usize("seed") as u64,
+        train_rows: p.get_usize("train-rows"),
+        val_rows: p.get_usize("val-rows"),
+        eval_every: p.get_usize("eval-every"),
+    };
+    let model = p.get("model").to_string();
+    let logs = match fig3::run(&mut rt, cfg, &model, p.get_bool("dense")) {
+        Ok(l) => l,
+        Err(e) => {
+            eprintln!("fig3 failed: {e:#}");
+            return 1;
+        }
+    };
+    println!("Fig.3 {model} (N={}, S={}):", cfg.workers, cfg.s);
+    for log in &logs {
+        let acc = log
+            .records()
+            .iter()
+            .rev()
+            .find(|r| !r.accuracy.is_nan())
+            .map(|r| r.accuracy)
+            .unwrap_or(f32::NAN);
+        println!(
+            "  {:<8} final loss {:.4}  val acc {:.3}  {}",
+            log.name,
+            log.last().unwrap().loss,
+            acc,
+            log.sparkline(|r| r.loss, 40)
+        );
+    }
+    write_logs(&logs, p.get("out"), &format!("fig3_{model}"));
+    0
+}
+
+fn cmd_sweep(args: Vec<String>) -> i32 {
+    let p = Cli::new("Ablation sweeps (DESIGN.md Abl 1-4)")
+        .required("param", "mu | q | workers | approx")
+        .flag("values", "", "comma-separated sweep values (defaults per param)")
+        .flag("s", "0.5", "sparsity factor")
+        .flag("iters", "400", "iterations per point")
+        .flag("seed", "42", "rng seed")
+        .parse_from(args);
+    let p = match p {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let seed = p.get_usize("seed") as u64;
+    let iters = p.get_usize("iters");
+    let s = p.get_f64("s");
+    match p.get("param") {
+        "mu" => {
+            let vals = if p.get("values").is_empty() {
+                vec![1e-4, 0.01, 0.1, 0.5, 1.0, 4.0]
+            } else {
+                p.get_f64_list("values")
+            };
+            println!("mu sweep (S={s}, final opt gap; topk = mu->0 reference):");
+            for (name, gap) in sweeps::mu_sweep(&vals, s, iters, seed) {
+                println!("  {name:<10} {gap:.6}");
+            }
+        }
+        "q" => {
+            let vals = if p.get("values").is_empty() {
+                vec![0.0, 0.25, 0.5, 1.0, 2.0, 10.0]
+            } else {
+                p.get_f64_list("values")
+            };
+            println!("Q sweep (S={s}, mu=0.5, final opt gap):");
+            for (name, gap) in sweeps::q_sweep(&vals, s, iters, seed) {
+                println!("  {name:<10} {gap:.6}");
+            }
+        }
+        "workers" => {
+            let vals: Vec<usize> = if p.get("values").is_empty() {
+                vec![2, 4, 8, 16, 32]
+            } else {
+                p.get_f64_list("values").into_iter().map(|v| v as usize).collect()
+            };
+            println!("worker sweep (S={s}): N, topk gap, regtopk gap");
+            for (n, t, r) in sweeps::worker_sweep(&vals, s, iters, seed) {
+                println!("  N={n:<4} topk {t:.5}  regtopk {r:.5}");
+            }
+        }
+        "approx" => {
+            let vals: Vec<usize> = if p.get("values").is_empty() {
+                vec![2, 4, 8, 16, 32]
+            } else {
+                p.get_f64_list("values").into_iter().map(|v| v as usize).collect()
+            };
+            println!("approximate top-k recall (J=2^17, k=131):");
+            for (ov, rec) in sweeps::approx_recall_sweep(&vals, 1 << 17, 131, 5) {
+                println!("  oversample={ov:<4} recall {rec:.4}");
+            }
+        }
+        other => {
+            eprintln!("unknown sweep param '{other}'");
+            return 2;
+        }
+    }
+    0
+}
+
+fn cmd_baselines(args: Vec<String>) -> i32 {
+    let p = Cli::new("Baseline shoot-out: every sparsifier at one budget")
+        .flag("s", "0.3", "sparsity factor")
+        .flag("iters", "400", "iterations")
+        .flag("workers", "8", "workers")
+        .flag("seed", "42", "rng seed")
+        .parse_from(args);
+    let p = match p {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let params = regtopk::experiments::sweeps::sweep_params(p.get_usize("workers"));
+    let rows = regtopk::experiments::baselines::run(
+        params,
+        p.get_f64("s"),
+        p.get_usize("iters"),
+        p.get_usize("seed") as u64,
+    );
+    println!(
+        "baseline comparison (linreg testbed, J={}, S={}, {} iters):",
+        params.dim,
+        p.get_f64("s"),
+        p.get_usize("iters")
+    );
+    println!("  {:<10} {:>12} {:>14} {:>8}", "algo", "final gap", "bytes/round", "mean k");
+    for r in rows {
+        println!(
+            "  {:<10} {:>12.5} {:>14} {:>8.1}",
+            r.name, r.final_gap, r.bytes_per_round, r.mean_k
+        );
+    }
+    0
+}
+
+fn cmd_comm(args: Vec<String>) -> i32 {
+    let p = Cli::new("Tab A: communication volume (analytic + measured)")
+        .flag("s", "0.1,0.01,0.001", "sparsity factors")
+        .flag("iters", "20", "measured-run iterations")
+        .flag("seed", "42", "rng seed")
+        .parse_from(args);
+    let p = match p {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let ss = p.get_f64_list("s");
+    println!("analytic symbols/epoch/worker (1000 minibatches, §1 arithmetic):");
+    println!("  {:<10} {:>10} {:>8} {:>14} {:>14} {:>8}", "model", "J", "S", "symbols/ep", "bytes/ep", "ratio");
+    for r in comm_table::analytic(&ss) {
+        println!(
+            "  {:<10} {:>10} {:>8} {:>14.3e} {:>14.3e} {:>8.5}",
+            r.model, r.dim, r.s, r.symbols_per_epoch, r.bytes_per_epoch, r.compression
+        );
+    }
+    println!("\nmeasured bytes/round on the linreg testbed (8 workers, J=60):");
+    for &s in &ss {
+        println!("  S={s}:");
+        for (name, bytes, sim) in
+            comm_table::measured(s, p.get_usize("iters"), p.get_usize("seed") as u64)
+        {
+            println!("    {name:<10} {bytes:>8} B/round  sim {:.3} ms/round", sim * 1e3);
+        }
+    }
+    0
+}
+
+fn cmd_train(args: Vec<String>) -> i32 {
+    let p = Cli::new("Generic linreg-testbed training run from a JSON config")
+        .required("config", "path to config JSON (see config module docs)")
+        .flag("out", "results", "output directory")
+        .parse_from(args);
+    let p = match p {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let cfg = match TrainConfig::from_json_file(Path::new(p.get("config"))) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("bad config: {e}");
+            return 2;
+        }
+    };
+    let params = LinearParams {
+        workers: cfg.workers,
+        ..LinearParams::fig2()
+    };
+    let problem = generate(params, cfg.seed);
+    let log = fig2::run_curve(&problem, cfg.sparsifier.clone(), "train", cfg.iters, cfg.eta);
+    println!(
+        "train: {} iters, final loss {:.6}, final gap {:.6}",
+        cfg.iters,
+        log.last().unwrap().loss,
+        log.last().unwrap().opt_gap
+    );
+    write_logs(&[log], p.get("out"), "train");
+    0
+}
+
+fn cmd_info(_args: Vec<String>) -> i32 {
+    match Runtime::open_default() {
+        Ok(rt) => {
+            println!("platform: {}", rt.platform());
+            println!("artifacts ({}):", rt.manifest.artifacts.len());
+            for (name, a) in &rt.manifest.artifacts {
+                println!("  {:<26} {} in / {} out  {}", name, a.inputs.len(), a.outputs, a.doc);
+            }
+            println!("models:");
+            for (name, m) in &rt.manifest.models {
+                println!("  {:<12} J={} ({} layers)", name, m.param_count, m.layout.layers.len());
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("artifacts unavailable: {e:#}\nrun `make artifacts` first");
+            1
+        }
+    }
+}

@@ -1,0 +1,227 @@
+//! Metrics sink: per-iteration records, CSV/JSON writers, run manifests.
+//!
+//! Every experiment harness (examples/, `repro` subcommands, benches)
+//! logs through a [`RunLog`]; EXPERIMENTS.md tables are generated from
+//! the CSV/JSON these produce.  Records are append-only and the writer
+//! is deterministic (BTreeMap-backed JSON), so identical runs produce
+//! byte-identical outputs (DESIGN.md invariant 6).
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::util::json::{obj, Json};
+
+/// One training-iteration record.  Unused fields stay NaN/0 and are
+/// omitted from sparse outputs.
+#[derive(Clone, Copy, Debug)]
+pub struct IterRecord {
+    pub iter: usize,
+    /// mean training loss across workers
+    pub loss: f32,
+    /// ||w - w*|| when the optimum is known (Fig. 2), else NaN
+    pub opt_gap: f32,
+    /// validation accuracy in [0,1] when evaluated, else NaN
+    pub accuracy: f32,
+    /// upload bytes this round (all workers)
+    pub upload_bytes: usize,
+    /// simulated comm time this round
+    pub sim_time_s: f64,
+    /// wall-clock compute time this round
+    pub wall_time_s: f64,
+}
+
+impl IterRecord {
+    pub fn new(iter: usize) -> Self {
+        IterRecord {
+            iter,
+            loss: f32::NAN,
+            opt_gap: f32::NAN,
+            accuracy: f32::NAN,
+            upload_bytes: 0,
+            sim_time_s: 0.0,
+            wall_time_s: 0.0,
+        }
+    }
+}
+
+/// A named run: config echo + records.
+pub struct RunLog {
+    pub name: String,
+    pub config: Json,
+    records: Vec<IterRecord>,
+}
+
+impl RunLog {
+    pub fn new(name: impl Into<String>, config: Json) -> Self {
+        RunLog { name: name.into(), config, records: Vec::new() }
+    }
+
+    pub fn push(&mut self, r: IterRecord) {
+        self.records.push(r);
+    }
+
+    pub fn records(&self) -> &[IterRecord] {
+        &self.records
+    }
+
+    pub fn last(&self) -> Option<&IterRecord> {
+        self.records.last()
+    }
+
+    /// CSV with a fixed header; NaN fields serialize as empty cells.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("iter,loss,opt_gap,accuracy,upload_bytes,sim_time_s,wall_time_s\n");
+        for r in &self.records {
+            let f = |v: f32| if v.is_nan() { String::new() } else { format!("{v}") };
+            out.push_str(&format!(
+                "{},{},{},{},{},{},{}\n",
+                r.iter,
+                f(r.loss),
+                f(r.opt_gap),
+                f(r.accuracy),
+                r.upload_bytes,
+                r.sim_time_s,
+                r.wall_time_s
+            ));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj([
+            ("name", Json::from(self.name.clone())),
+            ("config", self.config.clone()),
+            (
+                "records",
+                Json::Arr(
+                    self.records
+                        .iter()
+                        .map(|r| {
+                            let mut o = vec![("iter", Json::from(r.iter))];
+                            if !r.loss.is_nan() {
+                                o.push(("loss", Json::from(r.loss as f64)));
+                            }
+                            if !r.opt_gap.is_nan() {
+                                o.push(("opt_gap", Json::from(r.opt_gap as f64)));
+                            }
+                            if !r.accuracy.is_nan() {
+                                o.push(("accuracy", Json::from(r.accuracy as f64)));
+                            }
+                            o.push(("upload_bytes", Json::from(r.upload_bytes)));
+                            obj(o)
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_csv().as_bytes())
+    }
+
+    pub fn write_json(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_json().dump().as_bytes())
+    }
+
+    /// Terminal-friendly sparkline of a field (for example binaries).
+    pub fn sparkline(&self, field: impl Fn(&IterRecord) -> f32, width: usize) -> String {
+        let vals: Vec<f32> = self
+            .records
+            .iter()
+            .map(&field)
+            .filter(|v| v.is_finite())
+            .collect();
+        if vals.is_empty() {
+            return String::new();
+        }
+        let chars = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let (lo, hi) = vals
+            .iter()
+            .fold((f32::INFINITY, f32::NEG_INFINITY), |(l, h), &v| (l.min(v), h.max(v)));
+        let span = (hi - lo).max(1e-12);
+        let stride = (vals.len() as f64 / width as f64).max(1.0);
+        let mut out = String::new();
+        let mut i = 0.0;
+        while (i as usize) < vals.len() && out.chars().count() < width {
+            let v = vals[i as usize];
+            let b = (((v - lo) / span) * 7.0).round() as usize;
+            out.push(chars[b.min(7)]);
+            i += stride;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> RunLog {
+        let mut l = RunLog::new("t", obj([("k", Json::from(3usize))]));
+        let mut r = IterRecord::new(0);
+        r.loss = 1.5;
+        r.upload_bytes = 10;
+        l.push(r);
+        let mut r = IterRecord::new(1);
+        r.loss = 0.5;
+        r.opt_gap = 0.1;
+        l.push(r);
+        l
+    }
+
+    #[test]
+    fn csv_has_header_and_blank_nans() {
+        let csv = sample().to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("iter,loss"));
+        assert!(lines[1].starts_with("0,1.5,,")); // opt_gap NaN -> empty
+        assert!(lines[2].contains("0.1"));
+    }
+
+    #[test]
+    fn json_roundtrips_through_parser() {
+        let j = sample().to_json();
+        let re = Json::parse(&j.dump()).unwrap();
+        assert_eq!(re.get("name").unwrap().as_str().unwrap(), "t");
+        assert_eq!(re.get("records").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn writers_create_parent_dirs() {
+        let dir = std::env::temp_dir().join(format!("regtopk_test_{}", std::process::id()));
+        let path = dir.join("sub/run.csv");
+        sample().write_csv(&path).unwrap();
+        assert!(path.exists());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn sparkline_monotone_loss() {
+        let mut l = RunLog::new("s", Json::Null);
+        for i in 0..32 {
+            let mut r = IterRecord::new(i);
+            r.loss = 32.0 - i as f32;
+            l.push(r);
+        }
+        let sl = l.sparkline(|r| r.loss, 8);
+        assert_eq!(sl.chars().count(), 8);
+        assert!(sl.starts_with('█'));
+        // strictly decreasing series -> non-increasing block levels,
+        // and the tail must sit well below the head
+        let blocks = "▁▂▃▄▅▆▇█";
+        let levels: Vec<usize> =
+            sl.chars().map(|c| blocks.chars().position(|b| b == c).unwrap()).collect();
+        assert!(levels.windows(2).all(|w| w[1] <= w[0]), "{levels:?}");
+        assert!(*levels.last().unwrap() <= 2, "{levels:?}");
+    }
+}

@@ -1,0 +1,139 @@
+//! Artifact-backed models: worker gradient computation through the
+//! AOT-compiled JAX/Pallas executables (the production hot path —
+//! python is never in the loop, only its build-time artifacts).
+
+use std::sync::Arc;
+
+use crate::data::cifar_like::{ImageSet, IMG_DIM};
+use crate::data::sampler::BatchSampler;
+use crate::models::GradModel;
+use crate::runtime::{Executable, Tensor};
+
+/// CNN worker model: samples a mini-batch from its image shard and
+/// computes (loss, grad) via the `cnn_grad_*` artifact.
+pub struct CnnModel {
+    exe: Arc<Executable>,
+    shard: ImageSet,
+    sampler: BatchSampler,
+    batch: usize,
+    dim: usize,
+}
+
+impl CnnModel {
+    pub fn new(exe: Arc<Executable>, shard: ImageSet, seed: u64) -> Self {
+        let dim = exe.spec.inputs[0].shape[0];
+        let batch = exe.spec.inputs[1].shape[0];
+        assert!(shard.rows >= batch, "shard smaller than batch");
+        let sampler = BatchSampler::new(shard.rows, batch, seed);
+        CnnModel { exe, shard, sampler, batch, dim }
+    }
+}
+
+impl GradModel for CnnModel {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn loss_grad(&mut self, w: &[f32], out: &mut [f32]) -> f32 {
+        let idx = self.sampler.next_batch().to_vec();
+        let (x, y) = self.shard.gather(&idx);
+        let res = self
+            .exe
+            .call(&[
+                Tensor::f32(w.to_vec(), &[self.dim]),
+                Tensor::f32(x, &[self.batch, 32, 32, 3]),
+                Tensor::i32(y, &[self.batch]),
+            ])
+            .expect("cnn_grad artifact failed");
+        out.copy_from_slice(&res[1]);
+        res[0][0]
+    }
+}
+
+/// Validation-accuracy evaluator over the `cnn_eval_*` artifact
+/// (logits for a fixed eval batch size; the val set is chunked).
+pub struct CnnEval {
+    exe: Arc<Executable>,
+    val: ImageSet,
+    batch: usize,
+    dim: usize,
+}
+
+impl CnnEval {
+    pub fn new(exe: Arc<Executable>, val: ImageSet) -> Self {
+        let dim = exe.spec.inputs[0].shape[0];
+        let batch = exe.spec.inputs[1].shape[0];
+        CnnEval { exe, val, batch, dim }
+    }
+
+    /// Top-1 accuracy of model `w` on the validation set (full chunks
+    /// only — drop_last semantics, matching the sampler).
+    pub fn accuracy(&self, w: &[f32]) -> f32 {
+        let chunks = self.val.rows / self.batch;
+        assert!(chunks > 0, "val set smaller than eval batch");
+        let mut correct = 0usize;
+        for c in 0..chunks {
+            let idx: Vec<usize> = (c * self.batch..(c + 1) * self.batch).collect();
+            let (x, y) = self.val.gather(&idx);
+            let logits = &self
+                .exe
+                .call(&[
+                    Tensor::f32(w.to_vec(), &[self.dim]),
+                    Tensor::f32(x, &[self.batch, 32, 32, 3]),
+                ])
+                .expect("cnn_eval artifact failed")[0];
+            for (b, &label) in y.iter().enumerate() {
+                let row = &logits[b * 10..(b + 1) * 10];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                if pred as i32 == label {
+                    correct += 1;
+                }
+            }
+        }
+        correct as f32 / (chunks * self.batch) as f32
+    }
+}
+
+/// MLP worker model over flattened images (`mlp_grad` artifact).
+pub struct MlpModel {
+    exe: Arc<Executable>,
+    shard: ImageSet,
+    sampler: BatchSampler,
+    batch: usize,
+    dim: usize,
+}
+
+impl MlpModel {
+    pub fn new(exe: Arc<Executable>, shard: ImageSet, seed: u64) -> Self {
+        let dim = exe.spec.inputs[0].shape[0];
+        let batch = exe.spec.inputs[1].shape[0];
+        let sampler = BatchSampler::new(shard.rows, batch, seed);
+        MlpModel { exe, shard, sampler, batch, dim }
+    }
+}
+
+impl GradModel for MlpModel {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn loss_grad(&mut self, w: &[f32], out: &mut [f32]) -> f32 {
+        let idx = self.sampler.next_batch().to_vec();
+        let (x, y) = self.shard.gather(&idx);
+        let res = self
+            .exe
+            .call(&[
+                Tensor::f32(w.to_vec(), &[self.dim]),
+                Tensor::f32(x, &[self.batch, IMG_DIM]),
+                Tensor::i32(y, &[self.batch]),
+            ])
+            .expect("mlp_grad artifact failed");
+        out.copy_from_slice(&res[1]);
+        res[0][0]
+    }
+}

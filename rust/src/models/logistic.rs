@@ -1,0 +1,154 @@
+//! Logistic regression (the Fig. 1 toy workload, §1.2) with ±1 labels.
+//!
+//! loss_i = log(1 + exp(-y_i <w; x_i>)),
+//! grad   = -(1/D) sum_i  y_i sigma(-y_i <w;x_i>) x_i      (paper eq. 2)
+
+use crate::models::GradModel;
+
+pub struct Logistic {
+    /// row-major features, rows x dim
+    pub x: Vec<f32>,
+    /// ±1 labels
+    pub y: Vec<f32>,
+    pub rows: usize,
+    pub dim: usize,
+    /// optional additive gradient offset dG/dw (the §1.2 "G(theta_2)"
+    /// extension: a constant extra derivative on chosen coordinates)
+    pub grad_offset: Vec<f32>,
+}
+
+impl Logistic {
+    pub fn new(x: Vec<f32>, y: Vec<f32>, dim: usize) -> Self {
+        assert_eq!(x.len() % dim, 0);
+        let rows = x.len() / dim;
+        assert_eq!(y.len(), rows);
+        assert!(y.iter().all(|&v| v == 1.0 || v == -1.0), "labels must be ±1");
+        Logistic { x, y, rows, dim, grad_offset: vec![0.0; dim] }
+    }
+
+    /// The paper's worker n of the toy problem: single data point.
+    pub fn toy_worker(point: Vec<f32>) -> Self {
+        let dim = point.len();
+        Logistic::new(point, vec![1.0], dim)
+    }
+
+    pub fn loss(&self, w: &[f32]) -> f32 {
+        let mut total = 0.0f64;
+        for r in 0..self.rows {
+            let row = &self.x[r * self.dim..(r + 1) * self.dim];
+            let z: f32 = row.iter().zip(w).map(|(a, b)| a * b).sum::<f32>() * self.y[r];
+            // stable log(1 + exp(-z))
+            total += if z > 0.0 {
+                (-z as f64).exp().ln_1p()
+            } else {
+                -z as f64 + (z as f64).exp().ln_1p()
+            };
+        }
+        (total / self.rows as f64) as f32
+    }
+}
+
+impl GradModel for Logistic {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn loss_grad(&mut self, w: &[f32], out: &mut [f32]) -> f32 {
+        out.copy_from_slice(&self.grad_offset);
+        let mut total = 0.0f64;
+        let inv = 1.0 / self.rows as f32;
+        for r in 0..self.rows {
+            let row = &self.x[r * self.dim..(r + 1) * self.dim];
+            let z: f32 = row.iter().zip(w).map(|(a, b)| a * b).sum::<f32>() * self.y[r];
+            total += if z > 0.0 {
+                (-z as f64).exp().ln_1p()
+            } else {
+                -z as f64 + (z as f64).exp().ln_1p()
+            };
+            // sigma(-z) = 1/(1+e^z)
+            let s = 1.0 / (1.0 + (z as f64).exp());
+            let coef = -(self.y[r] as f64 * s) as f32 * inv;
+            for (o, &xv) in out.iter_mut().zip(row) {
+                *o += coef * xv;
+            }
+        }
+        (total / self.rows as f64) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gradient_matches_paper_eq2_at_toy_w0() {
+        // worker 1: x=[100,1], w0=[0,1] => z=1, sigma(-1)=0.2689
+        let mut m = Logistic::toy_worker(vec![100.0, 1.0]);
+        let mut g = vec![0.0; 2];
+        m.loss_grad(&[0.0, 1.0], &mut g);
+        let s = 1.0 / (1.0 + 1f64.exp());
+        assert!((g[0] as f64 + s * 100.0).abs() < 1e-5, "{g:?}");
+        assert!((g[1] as f64 + s).abs() < 1e-6);
+    }
+
+    #[test]
+    fn toy_gradients_cancel_in_first_entry() {
+        let mut m1 = Logistic::toy_worker(vec![100.0, 1.0]);
+        let mut m2 = Logistic::toy_worker(vec![-100.0, 1.0]);
+        let (mut g1, mut g2) = (vec![0.0; 2], vec![0.0; 2]);
+        m1.loss_grad(&[0.0, 1.0], &mut g1);
+        m2.loss_grad(&[0.0, 1.0], &mut g2);
+        assert!((g1[0] + g2[0]).abs() < 1e-7);
+        assert!((g1[1] - g2[1]).abs() < 1e-7);
+        assert!(g1[1] < 0.0); // descent direction increases theta_2
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let mut m = Logistic::new(
+            vec![1.0, 2.0, -0.5, 1.5, 0.3, -2.0],
+            vec![1.0, -1.0, 1.0],
+            2,
+        );
+        let w = vec![0.3, -0.7];
+        let mut g = vec![0.0; 2];
+        let l0 = m.loss_grad(&w, &mut g);
+        let h = 1e-3;
+        for i in 0..2 {
+            let mut wp = w.clone();
+            wp[i] += h;
+            let mut tmp = vec![0.0; 2];
+            let lp = m.loss_grad(&wp, &mut tmp);
+            let fd = (lp - l0) / h;
+            assert!((fd - g[i]).abs() < 1e-2, "i={i} fd={fd} g={}", g[i]);
+        }
+    }
+
+    #[test]
+    fn grad_offset_adds_constant_derivative() {
+        let mut m = Logistic::toy_worker(vec![100.0, 1.0]);
+        m.grad_offset = vec![0.0, 1.0];
+        let mut g0 = vec![0.0; 2];
+        m.loss_grad(&[0.0, 1.0], &mut g0);
+        let mut plain = Logistic::toy_worker(vec![100.0, 1.0]);
+        let mut g1 = vec![0.0; 2];
+        plain.loss_grad(&[0.0, 1.0], &mut g1);
+        assert_eq!(g0[0], g1[0]);
+        assert!((g0[1] - (g1[1] + 1.0)).abs() < 1e-7);
+    }
+
+    #[test]
+    fn descent_reduces_loss() {
+        let mut m = Logistic::new(vec![2.0, -1.0, -1.5, 2.5], vec![1.0, -1.0], 2);
+        let mut w = vec![0.0, 0.0];
+        let mut g = vec![0.0; 2];
+        let l0 = m.loss_grad(&w, &mut g);
+        for _ in 0..50 {
+            m.loss_grad(&w, &mut g);
+            for i in 0..2 {
+                w[i] -= 0.5 * g[i];
+            }
+        }
+        assert!(m.loss(&w) < l0 * 0.5);
+    }
+}

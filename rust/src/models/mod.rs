@@ -1,0 +1,60 @@
+//! Model substrate on the rust side.
+//!
+//! Two kinds of model back a worker's gradient computation:
+//!
+//! - **Native** ([`linreg`], [`logistic`]): closed-form losses whose
+//!   gradients are computed directly in rust.  Used by the Fig. 1 toy
+//!   and as the fallback/cross-check for the Fig. 2 testbed.
+//! - **Artifact-backed** (see [`crate::runtime`]): the JAX/Pallas HLO
+//!   executables (linreg, MLP, ResNet) loaded through PJRT; the
+//!   manifest in `artifacts/manifest.json` defines shapes and layouts.
+
+pub mod artifact;
+pub mod logistic;
+
+pub use crate::data::linear::ls_gradient;
+
+/// A differentiable empirical loss over a flat parameter vector.
+/// Implementations must be deterministic given (w, batch).
+pub trait GradModel: Send {
+    /// Parameter dimension J.
+    fn dim(&self) -> usize;
+    /// Compute loss and write the gradient into `out` for the worker's
+    /// current batch.  Returns the loss.
+    fn loss_grad(&mut self, w: &[f32], out: &mut [f32]) -> f32;
+}
+
+/// Full-batch least-squares model over one worker shard (Fig. 2).
+pub struct LinRegShard {
+    pub shard: crate::data::Shard,
+}
+
+impl GradModel for LinRegShard {
+    fn dim(&self) -> usize {
+        self.shard.dim
+    }
+    fn loss_grad(&mut self, w: &[f32], out: &mut [f32]) -> f32 {
+        ls_gradient(&self.shard, w, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::linear::{generate, LinearParams};
+
+    #[test]
+    fn linreg_shard_implements_gradmodel() {
+        let p = generate(
+            LinearParams { workers: 1, rows_per_worker: 30, dim: 5, u: 0.0, sigma2: 1.0, h2: 1.0, noise: 0.1 },
+            1,
+        );
+        let mut m = LinRegShard { shard: p.shards[0].clone() };
+        let w = vec![0.0; 5];
+        let mut g = vec![0.0; 5];
+        let loss = m.loss_grad(&w, &mut g);
+        assert!(loss > 0.0);
+        assert!(g.iter().any(|v| v.abs() > 0.0));
+        assert_eq!(m.dim(), 5);
+    }
+}

@@ -1,0 +1,228 @@
+//! Server-side optimizers and learning-rate schedules.
+//!
+//! The paper trains with plain SGD at fixed eta; we additionally ship
+//! heavy-ball momentum and the standard schedule family so the
+//! framework covers the "extensions to various optimizers" the related
+//! work (DGC, Adacomp) targets.
+
+/// Learning-rate schedule evaluated per iteration.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Schedule {
+    Const { eta: f32 },
+    /// eta * gamma^(t / step_every)
+    Step { eta: f32, gamma: f32, step_every: usize },
+    /// linear warmup to eta over `warmup` iters, then cosine decay to
+    /// `eta_min` at `horizon`
+    WarmupCosine { eta: f32, eta_min: f32, warmup: usize, horizon: usize },
+}
+
+impl Schedule {
+    pub fn at(&self, t: usize) -> f32 {
+        match *self {
+            Schedule::Const { eta } => eta,
+            Schedule::Step { eta, gamma, step_every } => {
+                eta * gamma.powi((t / step_every.max(1)) as i32)
+            }
+            Schedule::WarmupCosine { eta, eta_min, warmup, horizon } => {
+                if t < warmup {
+                    eta * (t as f32 + 1.0) / warmup as f32
+                } else {
+                    let p = ((t - warmup) as f32
+                        / (horizon.saturating_sub(warmup).max(1)) as f32)
+                        .min(1.0);
+                    eta_min + 0.5 * (eta - eta_min) * (1.0 + (std::f32::consts::PI * p).cos())
+                }
+            }
+        }
+    }
+}
+
+/// A gradient-descent optimizer applied to the flat parameter vector.
+pub trait Optimizer: Send {
+    fn name(&self) -> &'static str;
+    /// In-place update of `w` with aggregated gradient `g` at iter `t`.
+    fn step(&mut self, w: &mut [f32], g: &[f32], t: usize);
+    /// Current learning rate (for logging / gradient recovery).
+    fn lr(&self, t: usize) -> f32;
+}
+
+/// Plain SGD:  w <- w - eta_t * g   (the paper's optimizer).
+pub struct Sgd {
+    pub schedule: Schedule,
+}
+
+impl Sgd {
+    pub fn new(eta: f32) -> Self {
+        Sgd { schedule: Schedule::Const { eta } }
+    }
+    pub fn with_schedule(schedule: Schedule) -> Self {
+        Sgd { schedule }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+    fn step(&mut self, w: &mut [f32], g: &[f32], t: usize) {
+        let eta = self.schedule.at(t);
+        debug_assert_eq!(w.len(), g.len());
+        for (wi, gi) in w.iter_mut().zip(g) {
+            *wi -= eta * gi;
+        }
+    }
+    fn lr(&self, t: usize) -> f32 {
+        self.schedule.at(t)
+    }
+}
+
+/// Heavy-ball momentum:  m <- beta*m + g ;  w <- w - eta_t * m.
+pub struct SgdMomentum {
+    pub schedule: Schedule,
+    pub beta: f32,
+    m: Vec<f32>,
+}
+
+impl SgdMomentum {
+    pub fn new(dim: usize, eta: f32, beta: f32) -> Self {
+        SgdMomentum { schedule: Schedule::Const { eta }, beta, m: vec![0.0; dim] }
+    }
+}
+
+impl Optimizer for SgdMomentum {
+    fn name(&self) -> &'static str {
+        "sgd+momentum"
+    }
+    fn step(&mut self, w: &mut [f32], g: &[f32], t: usize) {
+        let eta = self.schedule.at(t);
+        for i in 0..w.len() {
+            self.m[i] = self.beta * self.m[i] + g[i];
+            w[i] -= eta * self.m[i];
+        }
+    }
+    fn lr(&self, t: usize) -> f32 {
+        self.schedule.at(t)
+    }
+}
+
+/// Adam (Kingma & Ba) on the aggregated sparse-sum gradient — the
+/// "various optimizers" extension the related work (DGC, Adacomp)
+/// targets; bias-corrected, eps inside the sqrt denominator.
+pub struct Adam {
+    pub schedule: Schedule,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: usize,
+}
+
+impl Adam {
+    pub fn new(dim: usize, eta: f32) -> Self {
+        Adam {
+            schedule: Schedule::Const { eta },
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            m: vec![0.0; dim],
+            v: vec![0.0; dim],
+            t: 0,
+        }
+    }
+}
+
+impl Optimizer for Adam {
+    fn name(&self) -> &'static str {
+        "adam"
+    }
+    fn step(&mut self, w: &mut [f32], g: &[f32], t: usize) {
+        self.t += 1;
+        let eta = self.schedule.at(t);
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        for i in 0..w.len() {
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * g[i];
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * g[i] * g[i];
+            let mhat = self.m[i] / bc1;
+            let vhat = self.v[i] / bc2;
+            w[i] -= eta * mhat / (vhat.sqrt() + self.eps);
+        }
+    }
+    fn lr(&self, t: usize) -> f32 {
+        self.schedule.at(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_step_formula() {
+        let mut o = Sgd::new(0.1);
+        let mut w = vec![1.0, 2.0];
+        o.step(&mut w, &[10.0, -10.0], 0);
+        assert_eq!(w, vec![0.0, 3.0]);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let mut o = SgdMomentum::new(1, 1.0, 0.5);
+        let mut w = vec![0.0];
+        o.step(&mut w, &[1.0], 0); // m=1, w=-1
+        o.step(&mut w, &[1.0], 1); // m=1.5, w=-2.5
+        assert_eq!(w, vec![-2.5]);
+    }
+
+    #[test]
+    fn step_schedule_decays() {
+        let s = Schedule::Step { eta: 1.0, gamma: 0.1, step_every: 10 };
+        assert_eq!(s.at(0), 1.0);
+        assert_eq!(s.at(9), 1.0);
+        assert!((s.at(10) - 0.1).abs() < 1e-7);
+        assert!((s.at(25) - 0.01).abs() < 1e-8);
+    }
+
+    #[test]
+    fn warmup_cosine_shape() {
+        let s = Schedule::WarmupCosine { eta: 1.0, eta_min: 0.1, warmup: 10, horizon: 110 };
+        assert!(s.at(0) < s.at(5));
+        assert!((s.at(9) - 1.0).abs() < 0.11);
+        assert!(s.at(60) < 1.0 && s.at(60) > 0.1);
+        assert!((s.at(1000) - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn adam_first_step_is_eta_sized() {
+        // bias correction makes the first update ~eta * sign(g)
+        let mut o = Adam::new(2, 0.1);
+        let mut w = vec![0.0, 0.0];
+        o.step(&mut w, &[3.0, -0.5], 0);
+        assert!((w[0] + 0.1).abs() < 1e-3, "{w:?}");
+        assert!((w[1] - 0.1).abs() < 1e-3, "{w:?}");
+    }
+
+    #[test]
+    fn adam_descends_quadratic() {
+        let mut o = Adam::new(1, 0.3);
+        let mut w = vec![8.0];
+        for t in 0..200 {
+            let g = vec![w[0]];
+            o.step(&mut w, &g, t);
+        }
+        assert!(w[0].abs() < 0.05, "{w:?}");
+    }
+
+    #[test]
+    fn sgd_descends_quadratic() {
+        // f(w) = 0.5 w^2, grad = w: converges geometrically
+        let mut o = Sgd::new(0.5);
+        let mut w = vec![8.0];
+        for t in 0..20 {
+            let g = vec![w[0]];
+            o.step(&mut w, &g, t);
+        }
+        assert!(w[0].abs() < 1e-4);
+    }
+}

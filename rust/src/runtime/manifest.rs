@@ -1,0 +1,217 @@
+//! Typed view of `artifacts/manifest.json` (produced by aot.py).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::grad::{FlatLayout, LayerSlice};
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+#[derive(Clone, Debug)]
+pub struct InputSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub inputs: Vec<InputSpec>,
+    pub outputs: usize,
+    pub doc: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub param_count: usize,
+    pub init_file: String,
+    pub init_seed: u64,
+    pub layout: FlatLayout,
+}
+
+/// The artifact registry.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub models: BTreeMap<String, ModelInfo>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path:?}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let mut m = Manifest::default();
+        let arts = j
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?;
+        for (name, a) in arts {
+            let inputs = a
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("{name}: missing inputs"))?
+                .iter()
+                .map(|i| {
+                    let shape = i
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .ok_or_else(|| anyhow!("{name}: bad shape"))?
+                        .iter()
+                        .map(|d| d.as_usize().ok_or_else(|| anyhow!("{name}: bad dim")))
+                        .collect::<Result<Vec<_>>>()?;
+                    let dtype = match i.get("dtype").and_then(Json::as_str) {
+                        Some("f32") => DType::F32,
+                        Some("i32") => DType::I32,
+                        other => return Err(anyhow!("{name}: bad dtype {other:?}")),
+                    };
+                    Ok(InputSpec { shape, dtype })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            m.artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    file: a
+                        .get("file")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("{name}: missing file"))?
+                        .to_string(),
+                    inputs,
+                    outputs: a
+                        .get("outputs")
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| anyhow!("{name}: missing outputs"))?,
+                    doc: a
+                        .get("doc")
+                        .and_then(Json::as_str)
+                        .unwrap_or("")
+                        .to_string(),
+                },
+            );
+        }
+        if let Some(models) = j.get("models").and_then(Json::as_obj) {
+            for (name, mm) in models {
+                let layers = mm
+                    .get("layers")
+                    .and_then(Json::as_arr)
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|l| {
+                        Ok(LayerSlice {
+                            name: l
+                                .get("name")
+                                .and_then(Json::as_str)
+                                .ok_or_else(|| anyhow!("{name}: layer name"))?
+                                .to_string(),
+                            offset: l
+                                .get("offset")
+                                .and_then(Json::as_usize)
+                                .ok_or_else(|| anyhow!("{name}: layer offset"))?,
+                            size: l
+                                .get("size")
+                                .and_then(Json::as_usize)
+                                .ok_or_else(|| anyhow!("{name}: layer size"))?,
+                            shape: l
+                                .get("shape")
+                                .and_then(Json::as_arr)
+                                .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                                .unwrap_or_default(),
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                let param_count = mm
+                    .get("param_count")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("{name}: param_count"))?;
+                m.models.insert(
+                    name.clone(),
+                    ModelInfo {
+                        param_count,
+                        init_file: mm
+                            .get("init_file")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| anyhow!("{name}: init_file"))?
+                            .to_string(),
+                        init_seed: mm
+                            .get("init_seed")
+                            .and_then(Json::as_f64)
+                            .unwrap_or(0.0) as u64,
+                        layout: FlatLayout { layers, total: param_count },
+                    },
+                );
+            }
+        }
+        Ok(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "artifacts": {
+        "linreg_grad": {
+          "file": "linreg_grad.hlo.txt",
+          "doc": "d",
+          "inputs": [
+            {"shape": [100], "dtype": "f32"},
+            {"shape": [500, 100], "dtype": "f32"},
+            {"shape": [500], "dtype": "f32"}
+          ],
+          "outputs": 2
+        }
+      },
+      "models": {
+        "mlp": {
+          "param_count": 10,
+          "init_file": "init_mlp.f32",
+          "init_seed": 7,
+          "layers": [
+            {"name": "fc0.w", "shape": [2, 4], "offset": 0, "size": 8},
+            {"name": "fc0.b", "shape": [2], "offset": 8, "size": 2}
+          ]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_artifacts_and_models() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let a = &m.artifacts["linreg_grad"];
+        assert_eq!(a.inputs.len(), 3);
+        assert_eq!(a.inputs[1].shape, vec![500, 100]);
+        assert_eq!(a.outputs, 2);
+        let mm = &m.models["mlp"];
+        assert_eq!(mm.param_count, 10);
+        assert_eq!(mm.layout.layers.len(), 2);
+        assert_eq!(mm.layout.layers[1].offset, 8);
+    }
+
+    #[test]
+    fn rejects_missing_sections() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"artifacts": {"x": {"file": "f"}}}"#).is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_built() {
+        let p = std::path::Path::new("artifacts/manifest.json");
+        if p.exists() {
+            let m = Manifest::load(p).unwrap();
+            assert!(m.artifacts.contains_key("regtopk_score"));
+            assert!(m.models.contains_key("resnet8"));
+        }
+    }
+}

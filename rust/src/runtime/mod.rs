@@ -1,0 +1,216 @@
+//! The PJRT runtime: loads the AOT artifacts produced by
+//! `python/compile/aot.py` and executes them from the L3 hot path.
+//!
+//! Interchange is HLO *text* (see aot.py's docstring: jax >= 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects in proto
+//! form; the text parser reassigns ids).  All artifacts were lowered
+//! with `return_tuple=True`, so every execution returns one tuple
+//! literal that is decomposed into `outputs` parts.
+//!
+//! The [`Runtime`] lazily compiles artifacts on first use and caches
+//! the loaded executable — compilation happens once per process, never
+//! in the per-round loop.
+
+mod manifest;
+
+pub use manifest::{ArtifactSpec, DType, Manifest, ModelInfo};
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+/// Typed host-side tensor handed to [`Executable::call`].
+#[derive(Clone, Debug)]
+pub enum Tensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl Tensor {
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> Self {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        Tensor::F32(data, shape.to_vec())
+    }
+    pub fn i32(data: Vec<i32>, shape: &[usize]) -> Self {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        Tensor::I32(data, shape.to_vec())
+    }
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32(_, s) | Tensor::I32(_, s) => s,
+        }
+    }
+    pub fn dtype(&self) -> DType {
+        match self {
+            Tensor::F32(..) => DType::F32,
+            Tensor::I32(..) => DType::I32,
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        Ok(match self {
+            Tensor::F32(v, _) => xla::Literal::vec1(v).reshape(&dims)?,
+            Tensor::I32(v, _) => xla::Literal::vec1(v).reshape(&dims)?,
+        })
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    pub name: String,
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+// SAFETY: the PJRT C API guarantees `PJRT_LoadedExecutable_Execute` and
+// friends are thread-safe (the underlying client serializes/locks as
+// needed; see the PJRT C API header contract), and our wrapper never
+// exposes interior mutation.  The `xla` crate simply does not annotate
+// its raw-pointer wrappers.  The CPU client used here is the standard
+// TfrtCpuClient, which is explicitly multi-threaded internally.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Executable {
+    /// Execute with host tensors; validates shapes/dtypes against the
+    /// manifest and returns `spec.outputs` f32 vectors (i32 outputs are
+    /// not produced by any artifact in this repo).
+    pub fn call(&self, inputs: &[Tensor]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, want)) in inputs.iter().zip(&self.spec.inputs).enumerate() {
+            if t.shape() != want.shape.as_slice() || t.dtype() != want.dtype {
+                bail!(
+                    "{} input {i}: got {:?}{:?}, want {:?}{:?}",
+                    self.name,
+                    t.dtype(),
+                    t.shape(),
+                    want.dtype,
+                    want.shape
+                );
+            }
+        }
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(Tensor::to_literal).collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0]
+            .to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        if parts.len() != self.spec.outputs {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                self.name,
+                self.spec.outputs,
+                parts.len()
+            );
+        }
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<f32>().map_err(Into::into))
+            .collect()
+    }
+}
+
+/// Artifact registry + PJRT client + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: BTreeMap<String, Arc<Executable>>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (reads `manifest.json`, creates the
+    /// PJRT CPU client).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {dir:?} (run `make artifacts`)"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, dir, manifest, cache: BTreeMap::new() })
+    }
+
+    /// Default artifact dir: $REGTOPK_ARTIFACTS or ./artifacts.
+    pub fn open_default() -> Result<Self> {
+        let dir = std::env::var("REGTOPK_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Self::open(dir)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (once) and return a shareable handle to the artifact.
+    pub fn load(&mut self, name: &str) -> Result<Arc<Executable>> {
+        if !self.cache.contains_key(name) {
+            let spec = self
+                .manifest
+                .artifacts
+                .get(name)
+                .with_context(|| format!("artifact '{name}' not in manifest"))?
+                .clone();
+            let path = self.dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.cache.insert(
+                name.to_string(),
+                Arc::new(Executable { name: name.to_string(), spec, exe }),
+            );
+        }
+        Ok(self.cache[name].clone())
+    }
+
+    /// Initial flat parameter vector for a model (raw LE f32 file).
+    pub fn load_init(&self, model: &str) -> Result<Vec<f32>> {
+        let info = self
+            .manifest
+            .models
+            .get(model)
+            .with_context(|| format!("model '{model}' not in manifest"))?;
+        let raw = std::fs::read(self.dir.join(&info.init_file))?;
+        if raw.len() != 4 * info.param_count {
+            bail!(
+                "init file size {} != 4 * {}",
+                raw.len(),
+                info.param_count
+            );
+        }
+        Ok(raw
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_validation() {
+        let t = Tensor::f32(vec![1.0; 6], &[2, 3]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.dtype(), DType::F32);
+    }
+
+    #[test]
+    #[should_panic]
+    fn tensor_rejects_bad_shape() {
+        Tensor::f32(vec![1.0; 5], &[2, 3]);
+    }
+
+    #[test]
+    fn open_missing_dir_errors() {
+        assert!(Runtime::open("/nonexistent/artifacts").is_err());
+    }
+}

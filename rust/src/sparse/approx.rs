@@ -1,0 +1,125 @@
+//! Approximate top-k via sampled thresholding (DESIGN.md ablation 4).
+//!
+//! For very large J, exact selection costs O(J) with a large constant
+//! (full pass + partition).  The sampled-threshold scheme estimates the
+//! k-th magnitude from a random subsample, then collects entries above
+//! the estimated threshold in a single pass:
+//!
+//!   1. sample m = min(J, oversample * k) entries uniformly
+//!   2. tau_hat = (k * m / J)-th largest magnitude of the sample
+//!   3. emit entries with |x| >= tau_hat, clipped/padded to ~k
+//!
+//! Recall is tunable via `oversample`; the `approx_topk_recall` test
+//! and the `topk_select` bench quantify the accuracy/latency trade-off.
+
+use crate::sparse::topk::select_topk;
+use crate::util::rng::Rng;
+
+/// Approximate top-k selection. Returns ascending indices; the result
+/// has between ~0.5k and ~2k entries depending on threshold accuracy
+/// (callers that need exactly k entries re-trim with `select_topk`).
+pub fn select_topk_sampled(x: &[f32], k: usize, oversample: usize, rng: &mut Rng) -> Vec<u32> {
+    let j = x.len();
+    let k = k.min(j);
+    if k == 0 {
+        return Vec::new();
+    }
+    let m = (oversample.max(2) * k).min(j);
+    if m >= j / 2 {
+        // sampling would touch most of the vector anyway: do it exactly
+        return select_topk(x, k);
+    }
+    // 1-2. sample magnitudes and take the proportional rank
+    let sample_idx = rng.sample_indices(j, m);
+    let sample: Vec<f32> = sample_idx.iter().map(|&i| x[i]).collect();
+    // Proportional rank, biased 25% conservative (lower threshold):
+    // over-collecting a few entries is cheap, missing true top-k
+    // entries is what hurts recall.
+    let rank = ((k as f64) * (m as f64) / (j as f64) * 1.25).ceil() as usize;
+    let rank = rank.clamp(1, m);
+    let thresh_idx = select_topk(&sample, rank);
+    let tau = thresh_idx
+        .iter()
+        .map(|&i| sample[i as usize].abs())
+        .fold(f32::INFINITY, f32::min);
+    // 3. single pass collect
+    let mut out: Vec<u32> = Vec::with_capacity(2 * k);
+    for (i, &v) in x.iter().enumerate() {
+        if v.abs() >= tau {
+            out.push(i as u32);
+        }
+    }
+    // keep the result bounded: if the threshold was too low, exact-trim
+    if out.len() > 4 * k {
+        let vals: Vec<f32> = out.iter().map(|&i| x[i as usize]).collect();
+        let keep = select_topk(&vals, k);
+        out = keep.iter().map(|&i| out[i as usize]).collect();
+        out.sort_unstable();
+    }
+    out
+}
+
+/// Recall of an approximate selection vs the exact top-k set.
+pub fn recall(exact: &[u32], approx: &[u32]) -> f64 {
+    if exact.is_empty() {
+        return 1.0;
+    }
+    let mut hit = 0usize;
+    let mut ai = 0usize;
+    for &e in exact {
+        while ai < approx.len() && approx[ai] < e {
+            ai += 1;
+        }
+        if ai < approx.len() && approx[ai] == e {
+            hit += 1;
+        }
+    }
+    hit as f64 / exact.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check;
+
+    #[test]
+    fn high_recall_on_gaussian_vectors() {
+        let mut rng = Rng::seed_from(42);
+        let j = 50_000;
+        let x = rng.gaussian_vec(j, 1.0);
+        let k = 500;
+        let exact = select_topk(&x, k);
+        let approx = select_topk_sampled(&x, k, 8, &mut rng);
+        let r = recall(&exact, &approx);
+        assert!(r > 0.8, "recall {r}");
+    }
+
+    #[test]
+    fn small_inputs_fall_back_to_exact() {
+        check::forall("approx_small_exact", |rng, _| {
+            let n = check::arb_len(rng, 64);
+            let x = check::arb_vec(rng, n);
+            let k = rng.below(n) + 1;
+            let approx = select_topk_sampled(&x, k, 8, rng);
+            assert_eq!(approx, select_topk(&x, k));
+        });
+    }
+
+    #[test]
+    fn result_is_sorted_and_bounded() {
+        let mut rng = Rng::seed_from(7);
+        let x = rng.gaussian_vec(20_000, 1.0);
+        let k = 100;
+        let sel = select_topk_sampled(&x, k, 4, &mut rng);
+        assert!(sel.windows(2).all(|w| w[0] < w[1]));
+        assert!(sel.len() <= 4 * k, "len={}", sel.len());
+    }
+
+    #[test]
+    fn recall_metric_sanity() {
+        assert_eq!(recall(&[1, 2, 3], &[1, 2, 3]), 1.0);
+        assert_eq!(recall(&[1, 2, 3, 4], &[1, 3]), 0.5);
+        assert_eq!(recall(&[], &[1]), 1.0);
+        assert_eq!(recall(&[5], &[]), 0.0);
+    }
+}

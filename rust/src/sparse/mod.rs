@@ -1,0 +1,19 @@
+//! Sparse-vector substrate: representation, exact and approximate
+//! top-k selection, and sparse aggregation.
+//!
+//! Everything the sparsifiers and the server's aggregation path need:
+//!
+//! - [`SparseVec`] — index+value pairs (indices strictly increasing),
+//!   the wire format of a sparsified gradient.
+//! - [`topk`] — exact k-largest-|x| selection (quickselect-based,
+//!   O(J) average) with stable low-index tie-breaking that matches
+//!   `ref.topk_mask` / `lax.top_k` on the python side.
+//! - [`approx`] — sampled-threshold approximate selection for very
+//!   large J (ablation 4 in DESIGN.md).
+
+pub mod approx;
+pub mod topk;
+mod vec;
+
+pub use topk::{select_topk, topk_threshold};
+pub use vec::SparseVec;

@@ -1,0 +1,310 @@
+//! Exact top-k selection over |x| — the Top_k(.) selector of eq. (5).
+//!
+//! Selection is by magnitude with ties broken toward the LOWER index
+//! (stable), matching `lax.top_k` / `ref.topk_mask` on the python side
+//! so the two implementations are bit-compatible (integration test
+//! `rust/tests/hlo_cross_check.rs`).
+//!
+//! Algorithm: quickselect over (|x|, index) keys, O(J) average, then an
+//! O(k log k) sort of the selected prefix to emit sorted indices.  For
+//! k >= J it degenerates to "select all".
+
+/// Composite ordering key: larger |v| wins; on exact magnitude ties the
+/// lower index wins.
+#[inline]
+fn better(a_mag: f32, a_idx: u32, b_mag: f32, b_idx: u32) -> bool {
+    a_mag > b_mag || (a_mag == b_mag && a_idx < b_idx)
+}
+
+/// Indices of the k largest-|x| entries, sorted ascending.
+/// NaNs are treated as magnitude 0 (never preferred).
+///
+/// Dispatch (perf pass, EXPERIMENTS.md §Perf): for k << J the
+/// radix-bucket path ([`select_topk_radix`]) does two sequential O(J)
+/// passes with a 256-bucket histogram — ~6x faster than quickselect at
+/// J=1e6, S=0.1% because it never materializes the (mag, idx) key
+/// array.  Larger k falls back to quickselect.
+pub fn select_topk(x: &[f32], k: usize) -> Vec<u32> {
+    let j = x.len();
+    let k_eff = k.min(j);
+    if k_eff > 0 && k_eff < j && j >= 4096 && k_eff <= j / 8 {
+        return select_topk_radix(x, k_eff);
+    }
+    select_topk_quick(x, k)
+}
+
+/// Magnitude as order-preserving u32 bits (IEEE-754 non-negative floats
+/// compare like their bit patterns); NaN maps to 0 (never preferred).
+#[inline]
+fn mag_bits(v: f32) -> u32 {
+    let m = v.abs();
+    if m.is_nan() {
+        0
+    } else {
+        m.to_bits()
+    }
+}
+
+/// Radix-bucket top-k for k << J: histogram the top byte of the
+/// magnitude bits, locate the boundary bucket, take everything above
+/// it, and exact-select the remainder inside the boundary bucket
+/// (expected J/256 candidates).  Tie-breaking matches quickselect:
+/// equal magnitudes prefer the lower index, because the boundary-bucket
+/// candidates are collected in ascending index order.
+pub fn select_topk_radix(x: &[f32], k: usize) -> Vec<u32> {
+    let j = x.len();
+    debug_assert!(k > 0 && k < j);
+    // pass 1: 256-bucket histogram of the high byte
+    let mut counts = [0usize; 256];
+    for &v in x {
+        counts[(mag_bits(v) >> 24) as usize] += 1;
+    }
+    // walk buckets from the top until cumulative >= k
+    let mut above = 0usize; // entries in buckets strictly above `b`
+    let mut b = 255usize;
+    loop {
+        if above + counts[b] >= k || b == 0 {
+            break;
+        }
+        above += counts[b];
+        b -= 1;
+    }
+    let need = k - above; // how many to take from bucket b
+    // pass 2: collect winners from above-buckets and candidates at b
+    let mut out: Vec<u32> = Vec::with_capacity(k);
+    let mut cand_idx: Vec<u32> = Vec::with_capacity(counts[b].min(j));
+    let mut cand_val: Vec<f32> = Vec::with_capacity(counts[b].min(j));
+    // u64 floor avoids overflow when the boundary bucket is 255
+    // (infinities / values >= 2^128 land there).
+    let hi_floor: u64 = ((b as u64) + 1) << 24;
+    for (i, &v) in x.iter().enumerate() {
+        let m = mag_bits(v);
+        if (m as u64) >= hi_floor {
+            out.push(i as u32);
+        } else if (m >> 24) as usize == b {
+            cand_idx.push(i as u32);
+            cand_val.push(v);
+        }
+    }
+    // exact select among the boundary candidates (index order preserved
+    // => quickselect's positional tie-break equals global index order)
+    if need > 0 {
+        let chosen = select_topk_quick(&cand_val, need);
+        out.extend(chosen.into_iter().map(|c| cand_idx[c as usize]));
+    }
+    out.sort_unstable();
+    debug_assert_eq!(out.len(), k);
+    out
+}
+
+/// Quickselect top-k (the general-k path; also the exact selector the
+/// radix path uses inside the boundary bucket).
+pub fn select_topk_quick(x: &[f32], k: usize) -> Vec<u32> {
+    let j = x.len();
+    let k = k.min(j);
+    if k == 0 {
+        return Vec::new();
+    }
+    if k == j {
+        return (0..j as u32).collect();
+    }
+    let mut keys: Vec<(f32, u32)> = x
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| {
+            let m = v.abs();
+            (if m.is_nan() { 0.0 } else { m }, i as u32)
+        })
+        .collect();
+    // Quickselect: after the loop, keys[..k] hold the k best entries
+    // (in arbitrary order).  Deterministic LCG pivots avoid adversarial
+    // quadratic behaviour on sorted inputs without an RNG dependency.
+    let mut lo = 0usize;
+    let mut hi = j;
+    let mut state: u64 = 0x2545F4914F6CDD1D;
+    while hi - lo > 1 {
+        state = state
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        let pivot_at = lo + (state >> 33) as usize % (hi - lo);
+        keys.swap(lo, pivot_at);
+        let (pm, pi) = keys[lo];
+        // Lomuto-style partition: entries better than the pivot move to
+        // the front; the pivot ends at index `p` with exactly `p`
+        // better entries before it.
+        let mut i = lo + 1;
+        for scan in lo + 1..hi {
+            let (m, ix) = keys[scan];
+            if better(m, ix, pm, pi) {
+                keys.swap(i, scan);
+                i += 1;
+            }
+        }
+        keys.swap(lo, i - 1);
+        let p = i - 1;
+        if p == k {
+            break; // keys[..k] are exactly the k best
+        } else if p > k {
+            hi = p;
+        } else {
+            lo = p + 1;
+        }
+    }
+    let mut out: Vec<u32> = keys[..k].iter().map(|&(_, i)| i).collect();
+    out.sort_unstable();
+    out
+}
+
+/// The k-th largest magnitude (the selection threshold tau), used by
+/// the two-phase HLO path: phase-2 of DESIGN.md §Hardware-Adaptation.
+/// Returns 0.0 for k == 0 and the min magnitude for k >= J.
+pub fn topk_threshold(x: &[f32], k: usize) -> f32 {
+    if k == 0 {
+        return f32::INFINITY;
+    }
+    let idx = select_topk(x, k);
+    idx.iter()
+        .map(|&i| x[i as usize].abs())
+        .fold(f32::INFINITY, f32::min)
+}
+
+/// Reference O(J log J) implementation (full sort) — used by tests and
+/// as the fallback oracle for the property suite.
+pub fn select_topk_sort(x: &[f32], k: usize) -> Vec<u32> {
+    let j = x.len();
+    let k = k.min(j);
+    let mut order: Vec<u32> = (0..j as u32).collect();
+    order.sort_by(|&a, &b| {
+        let ma = x[a as usize].abs();
+        let mb = x[b as usize].abs();
+        let ma = if ma.is_nan() { 0.0 } else { ma };
+        let mb = if mb.is_nan() { 0.0 } else { mb };
+        mb.partial_cmp(&ma).unwrap().then(a.cmp(&b))
+    });
+    let mut out = order[..k].to_vec();
+    out.sort_unstable();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check;
+
+    #[test]
+    fn matches_sort_oracle_on_random_inputs() {
+        check::forall("topk_vs_sort", |rng, _| {
+            let n = check::arb_len(rng, 300);
+            let x = check::arb_vec(rng, n);
+            let k = rng.below(n + 2);
+            assert_eq!(select_topk(&x, k), select_topk_sort(&x, k), "n={n} k={k}");
+        });
+    }
+
+    #[test]
+    fn selects_k_largest_magnitudes() {
+        check::forall("topk_magnitudes", |rng, _| {
+            let n = check::arb_len(rng, 300);
+            let x = check::arb_vec(rng, n);
+            let k = rng.below(n) + 1;
+            let sel = select_topk(&x, k);
+            assert_eq!(sel.len(), k.min(n));
+            let selected: Vec<bool> = {
+                let mut b = vec![false; n];
+                for &i in &sel {
+                    b[i as usize] = true;
+                }
+                b
+            };
+            let min_in = sel.iter().map(|&i| x[i as usize].abs()).fold(f32::INFINITY, f32::min);
+            for i in 0..n {
+                if !selected[i] {
+                    assert!(
+                        x[i].abs() <= min_in,
+                        "unselected {} > min selected {}",
+                        x[i].abs(),
+                        min_in
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn radix_matches_sort_oracle_small_k() {
+        check::forall("radix_vs_sort", |rng, _| {
+            let n = 4096 + rng.below(4096);
+            let x = check::arb_vec(rng, n);
+            let k = rng.below(n / 8) + 1;
+            assert_eq!(
+                select_topk_radix(&x, k),
+                select_topk_sort(&x, k),
+                "n={n} k={k}"
+            );
+        });
+    }
+
+    #[test]
+    fn radix_top_bucket_boundary_no_overflow() {
+        // infinities and huge values live in bucket 255; the boundary
+        // floor must not overflow u32
+        let mut x = vec![0.5f32; 8192];
+        x[7] = f32::INFINITY;
+        x[9] = f32::MAX;
+        x[11] = 3.0e38;
+        assert_eq!(select_topk_radix(&x, 2), vec![7, 9]);
+        assert_eq!(select_topk_radix(&x, 3), vec![7, 9, 11]);
+        assert_eq!(select_topk_radix(&x, 4), select_topk_sort(&x, 4));
+    }
+
+    #[test]
+    fn radix_handles_nan_and_duplicates() {
+        let mut x = vec![1.0f32; 8192];
+        x[0] = f32::NAN;
+        x[100] = 7.0;
+        x[4000] = -7.0;
+        let sel = select_topk_radix(&x, 3);
+        assert_eq!(sel, vec![1, 100, 4000]); // 7s first, then lowest-index 1.0... 
+    }
+
+    #[test]
+    fn tie_break_prefers_lower_index() {
+        let x = vec![1.0, -1.0, 1.0, 0.5];
+        assert_eq!(select_topk(&x, 2), vec![0, 1]);
+        assert_eq!(select_topk(&x, 3), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn edge_cases() {
+        assert!(select_topk(&[], 3).is_empty());
+        assert!(select_topk(&[1.0, 2.0], 0).is_empty());
+        assert_eq!(select_topk(&[1.0, 2.0], 5), vec![0, 1]);
+        assert_eq!(select_topk(&[0.0, 0.0, 0.0], 2), vec![0, 1]);
+    }
+
+    #[test]
+    fn nan_never_selected_over_finite() {
+        let x = vec![f32::NAN, 1.0, 0.5];
+        assert_eq!(select_topk(&x, 1), vec![1]);
+        assert_eq!(select_topk(&x, 2), vec![1, 2]);
+    }
+
+    #[test]
+    fn threshold_is_kth_magnitude() {
+        let x = vec![5.0, -3.0, 1.0, -4.0, 2.0];
+        assert_eq!(topk_threshold(&x, 1), 5.0);
+        assert_eq!(topk_threshold(&x, 3), 3.0);
+        assert_eq!(topk_threshold(&x, 5), 1.0);
+        assert_eq!(topk_threshold(&x, 0), f32::INFINITY);
+    }
+
+    #[test]
+    fn sorted_inputs_no_quadratic_blowup() {
+        // 100k ascending values — pivot randomization keeps this fast;
+        // the test is a smoke guard (completes well under the default
+        // 60s test timeout even in debug).
+        let x: Vec<f32> = (0..100_000).map(|i| i as f32).collect();
+        let sel = select_topk(&x, 10);
+        assert_eq!(sel, (99_990..100_000).collect::<Vec<u32>>());
+    }
+}

@@ -1,0 +1,162 @@
+//! `SparseVec`: the wire format of a sparsified gradient.
+
+/// A sparse view of a length-`dim` dense vector: parallel arrays of
+/// strictly-increasing indices and their values.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseVec {
+    dim: usize,
+    idx: Vec<u32>,
+    val: Vec<f32>,
+}
+
+impl SparseVec {
+    /// Build from parallel arrays. Panics if indices are not strictly
+    /// increasing or out of range (violating the wire invariant).
+    pub fn new(dim: usize, idx: Vec<u32>, val: Vec<f32>) -> Self {
+        assert_eq!(idx.len(), val.len(), "index/value length mismatch");
+        for w in idx.windows(2) {
+            assert!(w[0] < w[1], "indices must be strictly increasing");
+        }
+        if let Some(&last) = idx.last() {
+            assert!((last as usize) < dim, "index {last} out of dim {dim}");
+        }
+        SparseVec { dim, idx, val }
+    }
+
+    /// Empty sparse vector.
+    pub fn zeros(dim: usize) -> Self {
+        SparseVec { dim, idx: Vec::new(), val: Vec::new() }
+    }
+
+    /// Gather `dense[i]` for every `i` in a sorted index list.
+    pub fn gather(dense: &[f32], idx: &[u32]) -> Self {
+        let val = idx.iter().map(|&i| dense[i as usize]).collect();
+        SparseVec::new(dense.len(), idx.to_vec(), val)
+    }
+
+    /// Densify into a fresh vector.
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0; self.dim];
+        for (&i, &v) in self.idx.iter().zip(&self.val) {
+            out[i as usize] = v;
+        }
+        out
+    }
+
+    /// `out += scale * self` (server-side aggregation hot path).
+    pub fn axpy_into(&self, scale: f32, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.dim);
+        for (&i, &v) in self.idx.iter().zip(&self.val) {
+            out[i as usize] += scale * v;
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+    pub fn nnz(&self) -> usize {
+        self.idx.len()
+    }
+    pub fn indices(&self) -> &[u32] {
+        &self.idx
+    }
+    pub fn values(&self) -> &[f32] {
+        &self.val
+    }
+
+    /// ell-2 norm of the stored values.
+    pub fn norm2(&self) -> f32 {
+        self.val.iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+
+    /// Wire size in bytes under the paper's cost model: 4 bytes per
+    /// f32 value + ceil(log2 J)/8 bytes per index ("the index can be
+    /// losslessly represented by log J bits", §2).
+    pub fn wire_bytes(&self) -> usize {
+        let index_bits = usize::BITS - (self.dim.max(2) - 1).leading_zeros();
+        let per_entry_bits = 32 + index_bits as usize;
+        (self.nnz() * per_entry_bits).div_ceil(8)
+    }
+
+    /// Dot with a dense vector.
+    pub fn dot(&self, dense: &[f32]) -> f32 {
+        debug_assert_eq!(dense.len(), self.dim);
+        self.idx
+            .iter()
+            .zip(&self.val)
+            .map(|(&i, &v)| v * dense[i as usize])
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check;
+
+    #[test]
+    fn roundtrip_dense_sparse_dense() {
+        let dense = vec![0.0, 1.5, 0.0, -2.0, 0.0];
+        let sv = SparseVec::new(5, vec![1, 3], vec![1.5, -2.0]);
+        assert_eq!(sv.to_dense(), dense);
+        assert_eq!(sv.nnz(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_unsorted_indices() {
+        SparseVec::new(5, vec![3, 1], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_out_of_range() {
+        SparseVec::new(3, vec![0, 3], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn axpy_matches_dense_axpy() {
+        check::forall("sparse_axpy", |rng, _| {
+            let n = check::arb_len(rng, 200);
+            let dense = check::arb_vec(rng, n);
+            let k = rng.below(n + 1);
+            let mut keep = rng.sample_indices(n, k);
+            keep.sort_unstable();
+            let idx: Vec<u32> = keep.iter().map(|&i| i as u32).collect();
+            let sv = SparseVec::gather(&dense, &idx);
+            let mut out = vec![1.0f32; n];
+            sv.axpy_into(0.5, &mut out);
+            for i in 0..n {
+                let expect = if keep.binary_search(&i).is_ok() {
+                    1.0 + 0.5 * dense[i]
+                } else {
+                    1.0
+                };
+                assert_eq!(out[i], expect);
+            }
+        });
+    }
+
+    #[test]
+    fn wire_bytes_matches_cost_model() {
+        // dim 100 -> 7 index bits; 10 entries * (32+7) bits = 390 bits = 49 bytes
+        let sv = SparseVec::new(100, (0..10).collect(), vec![1.0; 10]);
+        assert_eq!(sv.wire_bytes(), 49);
+        // dim 2^17 -> 17 bits; 1 entry * 49 bits -> 7 bytes
+        let sv = SparseVec::new(1 << 17, vec![0], vec![1.0]);
+        assert_eq!(sv.wire_bytes(), 7);
+        assert_eq!(SparseVec::zeros(10).wire_bytes(), 0);
+    }
+
+    #[test]
+    fn dot_matches_dense_dot() {
+        let sv = SparseVec::new(4, vec![0, 2], vec![2.0, 3.0]);
+        assert_eq!(sv.dot(&[1.0, 9.0, -1.0, 9.0]), 2.0 - 3.0);
+    }
+
+    #[test]
+    fn norm2() {
+        let sv = SparseVec::new(4, vec![0, 1], vec![3.0, 4.0]);
+        assert_eq!(sv.norm2(), 5.0);
+    }
+}

@@ -1,0 +1,120 @@
+//! Adaptive-k sparsification (the paper's [9]/[10] family): the budget
+//! k_t is tuned online from feedback instead of fixed.
+//!
+//! `AdaK` implements the residual-ratio rule of AdaComp (Chen et al.,
+//! AAAI'18), simplified to the flat-vector setting: transmit every
+//! accumulated entry whose magnitude exceeds `ratio` x (current batch
+//! max |g|), bounded to [k_min, k_max].  The effective k thus grows
+//! when the residual is large relative to fresh gradients (training
+//! plateau, errors piling up) and shrinks when fresh gradients
+//! dominate.
+
+use crate::sparse::{select_topk, topk_threshold, SparseVec};
+use crate::sparsify::{RoundCtx, Sparsifier};
+
+pub struct AdaK {
+    /// residual-vs-gradient trigger ratio (AdaComp uses ~1.0)
+    ratio: f32,
+    k_min: usize,
+    k_max: usize,
+    eps: Vec<f32>,
+    acc: Vec<f32>,
+    /// effective k of the last round (observability)
+    pub last_k: usize,
+}
+
+impl AdaK {
+    pub fn new(dim: usize, ratio: f32, k_min: usize, k_max: usize) -> Self {
+        assert!(k_min >= 1 && k_min <= k_max && k_max <= dim);
+        AdaK { ratio, k_min, k_max, eps: vec![0.0; dim], acc: vec![0.0; dim], last_k: 0 }
+    }
+}
+
+impl Sparsifier for AdaK {
+    fn name(&self) -> &'static str {
+        "adak"
+    }
+
+    fn step(&mut self, grad: &[f32], _ctx: &RoundCtx) -> SparseVec {
+        let gmax = grad.iter().fold(0.0f32, |m, g| m.max(g.abs()));
+        for i in 0..grad.len() {
+            self.acc[i] = self.eps[i] + grad[i];
+        }
+        let tau = self.ratio * gmax;
+        // candidate count under the adaptive threshold
+        let count = self.acc.iter().filter(|a| a.abs() >= tau && tau > 0.0).count();
+        let k = count.clamp(self.k_min, self.k_max);
+        self.last_k = k;
+        // exact top-k at the adapted budget (deterministic; avoids
+        // over-shooting k_max on heavy-tailed rounds)
+        let sel = if count > k || tau == 0.0 {
+            select_topk(&self.acc, k)
+        } else {
+            // threshold already yields <= k entries; still use top-k
+            // semantics so ties resolve identically
+            let t2 = topk_threshold(&self.acc, k);
+            let _ = t2;
+            select_topk(&self.acc, k)
+        };
+        let sv = SparseVec::gather(&self.acc, &sel);
+        self.eps.copy_from_slice(&self.acc);
+        for &i in &sel {
+            self.eps[i as usize] = 0.0;
+        }
+        sv
+    }
+
+    fn peek_acc(&self, grad: &[f32]) -> Vec<f32> {
+        self.eps.iter().zip(grad).map(|(e, g)| e + g).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx<'a>(z: &'a [f32]) -> RoundCtx<'a> {
+        RoundCtx { t: 0, gagg_prev: z, omega: 1.0, genie_acc: None }
+    }
+
+    #[test]
+    fn budget_grows_with_residual() {
+        let z = vec![0.0; 8];
+        let mut s = AdaK::new(8, 1.0, 1, 8);
+        // round 1: uniform gradient -> only entries >= max survive
+        s.step(&[1.0; 8], &ctx(&z));
+        let k1 = s.last_k;
+        // rounds 2-4: same gradient; residuals pile up above gmax
+        for _ in 0..3 {
+            s.step(&[1.0; 8], &ctx(&z));
+        }
+        assert!(s.last_k >= k1, "{} -> {}", k1, s.last_k);
+    }
+
+    #[test]
+    fn k_respects_bounds() {
+        let z = vec![0.0; 10];
+        let mut s = AdaK::new(10, 0.01, 2, 5);
+        // tiny ratio: everything qualifies, must clamp to k_max
+        let sv = s.step(&[1.0; 10], &ctx(&z));
+        assert_eq!(sv.nnz(), 5);
+        assert_eq!(s.last_k, 5);
+        // huge ratio: nothing qualifies, must clamp to k_min
+        let mut s = AdaK::new(10, 100.0, 2, 5);
+        let sv = s.step(&[1.0; 10], &ctx(&z));
+        assert_eq!(sv.nnz(), 2);
+    }
+
+    #[test]
+    fn error_feedback_conserves() {
+        let z = vec![0.0; 6];
+        let mut s = AdaK::new(6, 1.0, 1, 6);
+        let g = [3.0, -1.0, 0.5, 2.0, -0.1, 0.0];
+        let acc = s.peek_acc(&g);
+        let sv = s.step(&g, &ctx(&z));
+        let dense = sv.to_dense();
+        for i in 0..6 {
+            assert_eq!(dense[i] + s.eps[i], acc[i]);
+        }
+    }
+}

@@ -1,0 +1,40 @@
+//! No-op sparsifier: transmits the full gradient (the paper's
+//! "non-sparsified distributed SGD" upper-bound curve).
+
+use crate::sparse::SparseVec;
+use crate::sparsify::{RoundCtx, Sparsifier};
+
+#[derive(Default)]
+pub struct Dense;
+
+impl Dense {
+    pub fn new() -> Self {
+        Dense
+    }
+}
+
+impl Sparsifier for Dense {
+    fn name(&self) -> &'static str {
+        "dense"
+    }
+
+    fn step(&mut self, grad: &[f32], _ctx: &RoundCtx) -> SparseVec {
+        let idx: Vec<u32> = (0..grad.len() as u32).collect();
+        SparseVec::new(grad.len(), idx, grad.to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transmits_everything_unchanged() {
+        let mut s = Dense::new();
+        let g = vec![1.0, -2.0, 0.0];
+        let ctx = RoundCtx { t: 0, gagg_prev: &[0.0; 3], omega: 1.0, genie_acc: None };
+        let sv = s.step(&g, &ctx);
+        assert_eq!(sv.to_dense(), g);
+        assert_eq!(sv.nnz(), 3);
+    }
+}

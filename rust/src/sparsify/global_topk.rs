@@ -1,0 +1,93 @@
+//! Global TOP-k — the genie-aided idealization of paper §3.1.
+//!
+//! Worker n transmits a_n[j] iff j is in the top-k of the TRUE
+//! aggregated accumulated gradient sum_n omega_n a_n (which no real
+//! worker can know; the trainer computes it through the genie
+//! side-channel).  REGTOP-k is the feasible statistical approximation
+//! of this scheme, so gtopk's curve is the ceiling REGTOP-k aims for.
+
+use crate::grad::ErrorFeedback;
+use crate::sparse::{select_topk, SparseVec};
+use crate::sparsify::{RoundCtx, Sparsifier};
+
+pub struct GlobalTopK {
+    k: usize,
+    ef: ErrorFeedback,
+}
+
+impl GlobalTopK {
+    pub fn new(dim: usize, k: usize) -> Self {
+        assert!(k > 0, "gtopk needs k >= 1");
+        GlobalTopK { k, ef: ErrorFeedback::new(dim) }
+    }
+}
+
+impl Sparsifier for GlobalTopK {
+    fn name(&self) -> &'static str {
+        "gtopk"
+    }
+
+    fn needs_genie(&self) -> bool {
+        true
+    }
+
+    fn step(&mut self, grad: &[f32], ctx: &RoundCtx) -> SparseVec {
+        self.ef.accumulate(grad);
+        let genie = ctx
+            .genie_acc
+            .expect("GlobalTopK requires the genie side-channel (needs_genie)");
+        let sel = select_topk(genie, self.k);
+        self.ef.commit(&sel)
+    }
+
+    fn peek_acc(&self, grad: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0; grad.len()];
+        self.ef.accumulate_into(grad, &mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selects_by_global_not_local_magnitude() {
+        // local gradient favours entry 0, but the genie aggregate says
+        // entry 1 is globally dominant -> entry 1 is transmitted.
+        let mut s = GlobalTopK::new(2, 1);
+        let genie = vec![0.0, 5.0];
+        let ctx = RoundCtx { t: 0, gagg_prev: &[0.0; 2], omega: 0.5, genie_acc: Some(&genie) };
+        let sv = s.step(&[100.0, 1.0], &ctx);
+        assert_eq!(sv.indices(), &[1]);
+        assert_eq!(sv.values(), &[1.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn panics_without_genie() {
+        let mut s = GlobalTopK::new(2, 1);
+        let ctx = RoundCtx { t: 0, gagg_prev: &[0.0; 2], omega: 0.5, genie_acc: None };
+        s.step(&[1.0, 2.0], &ctx);
+    }
+
+    #[test]
+    fn toy_cancellation_solved_by_genie() {
+        // The §1.2 toy: worker gradients ±100 at entry 0 cancel; the
+        // genie aggregate keeps only entry 1, so gtopk transmits entry 1
+        // at round 0 (what TOP-k takes ~50 rounds to discover).
+        let mut w1 = GlobalTopK::new(2, 1);
+        let mut w2 = GlobalTopK::new(2, 1);
+        let g1 = [-73.6, 0.736];
+        let g2 = [73.6, 0.736];
+        let genie: Vec<f32> = (0..2).map(|i| 0.5 * (g1[i] + g2[i])).collect();
+        let z = [0.0; 2];
+        let c1 = RoundCtx { t: 0, gagg_prev: &z, omega: 0.5, genie_acc: Some(&genie) };
+        let sv1 = w1.step(&g1, &c1);
+        let sv2 = w2.step(&g2, &c1);
+        assert_eq!(sv1.indices(), &[1]);
+        assert_eq!(sv2.indices(), &[1]);
+        let agg = 0.5 * (sv1.values()[0] + sv2.values()[0]);
+        assert!((agg - 0.736).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,193 @@
+//! The sparsifier family: the paper's REGTOP-k plus every baseline.
+//!
+//! A [`Sparsifier`] consumes the worker's local gradient for round `t`
+//! and emits the sparse update to transmit; all error-feedback state
+//! lives inside the sparsifier.  Implementations:
+//!
+//! | name        | selection rule                                   | paper role |
+//! |-------------|--------------------------------------------------|------------|
+//! | `dense`     | send everything                                  | upper bound |
+//! | `topk`      | k largest |a| (error feedback)                   | baseline (§1.1) |
+//! | `regtopk`   | k largest |a . tanh(|1+Delta|/mu)|               | **contribution** (Alg. 1) |
+//! | `randk`     | k uniform random entries (error feedback)        | classical baseline |
+//! | `threshold` | all entries with |a| >= tau (error feedback)     | classical baseline |
+//! | `gtopk`     | k largest |sum_n w_n a_n| (genie, infeasible)    | §3.1 "global TOP-k" |
+//! | `dgc`       | TOP-k + momentum correction/masking/clipping      | cited baseline [6,8] |
+//! | `adak`      | adaptive budget from the residual ratio           | cited baseline [9,10] |
+
+mod adaptive;
+mod dense;
+mod dgc;
+mod global_topk;
+mod randk;
+mod regtopk;
+mod threshold;
+mod topk;
+
+pub use adaptive::AdaK;
+pub use dense::Dense;
+pub use dgc::Dgc;
+pub use global_topk::GlobalTopK;
+pub use randk::RandK;
+pub use regtopk::RegTopK;
+pub use threshold::Threshold;
+pub use topk::TopK;
+
+use crate::sparse::SparseVec;
+
+/// Per-round context handed to every sparsifier by the worker loop.
+pub struct RoundCtx<'a> {
+    /// iteration index t (0-based)
+    pub t: usize,
+    /// g^{t-1}: aggregated gradient broadcast by the server last round
+    /// (zeros at t=0)
+    pub gagg_prev: &'a [f32],
+    /// omega_n: this worker's aggregation weight
+    pub omega: f32,
+    /// Genie side-channel: the true aggregated accumulated gradient
+    /// sum_n omega_n a_n^t for THIS round.  Only populated when the
+    /// sparsifier declares `needs_genie()`; infeasible in practice
+    /// (paper §3.1) and used only by the `gtopk` reference bound.
+    pub genie_acc: Option<&'a [f32]>,
+}
+
+/// A gradient sparsifier with internal error-feedback state.
+pub trait Sparsifier: Send {
+    /// Short name used in configs, CSV output and plots.
+    fn name(&self) -> &'static str;
+
+    /// Process the local gradient for one round; returns the sparse
+    /// update to transmit to the server.
+    fn step(&mut self, grad: &[f32], ctx: &RoundCtx) -> SparseVec;
+
+    /// Whether this sparsifier needs the genie side-channel (only the
+    /// idealized global TOP-k does).
+    fn needs_genie(&self) -> bool {
+        false
+    }
+
+    /// The worker's accumulated gradient a_n^t = eps + g for the
+    /// CURRENT round, needed by the trainer to build the genie channel.
+    /// Sparsifiers without error feedback return the gradient itself.
+    fn peek_acc(&self, grad: &[f32]) -> Vec<f32> {
+        grad.to_vec()
+    }
+}
+
+/// Sparsifier configuration — the factory input (see [`build`]).
+#[derive(Clone, Debug, PartialEq)]
+pub enum SparsifierKind {
+    Dense,
+    TopK { k: usize },
+    RegTopK { k: usize, mu: f32, q: f32 },
+    RandK { k: usize, seed: u64 },
+    Threshold { tau: f32 },
+    GlobalTopK { k: usize },
+    Dgc { k: usize, momentum: f32, clip: f32 },
+    AdaK { ratio: f32, k_min: usize, k_max: usize },
+}
+
+impl SparsifierKind {
+    /// Parse "dense" | "topk" | "regtopk" | "randk" | "threshold" | "gtopk"
+    /// with parameters supplied separately (CLI layer does this).
+    pub fn from_name(
+        name: &str,
+        k: usize,
+        mu: f32,
+        q: f32,
+        tau: f32,
+        seed: u64,
+    ) -> Option<Self> {
+        Some(match name {
+            "dense" => SparsifierKind::Dense,
+            "topk" => SparsifierKind::TopK { k },
+            "regtopk" => SparsifierKind::RegTopK { k, mu, q },
+            "randk" => SparsifierKind::RandK { k, seed },
+            "threshold" => SparsifierKind::Threshold { tau },
+            "gtopk" => SparsifierKind::GlobalTopK { k },
+            "dgc" => SparsifierKind::Dgc { k, momentum: 0.9, clip: 0.0 },
+            "adak" => SparsifierKind::AdaK { ratio: 1.0, k_min: 1, k_max: k.max(1) },
+            _ => return None,
+        })
+    }
+}
+
+/// Instantiate a sparsifier for a worker with gradient dimension `dim`.
+/// `worker` diversifies the RandK stream per worker.
+pub fn build(kind: &SparsifierKind, dim: usize, worker: usize) -> Box<dyn Sparsifier> {
+    match kind {
+        SparsifierKind::Dense => Box::new(Dense::new()),
+        SparsifierKind::TopK { k } => Box::new(TopK::new(dim, *k)),
+        SparsifierKind::RegTopK { k, mu, q } => Box::new(RegTopK::new(dim, *k, *mu, *q)),
+        SparsifierKind::RandK { k, seed } => {
+            Box::new(RandK::new(dim, *k, seed.wrapping_add(worker as u64)))
+        }
+        SparsifierKind::Threshold { tau } => Box::new(Threshold::new(dim, *tau)),
+        SparsifierKind::GlobalTopK { k } => Box::new(GlobalTopK::new(dim, *k)),
+        SparsifierKind::Dgc { k, momentum, clip } => {
+            Box::new(Dgc::new(dim, *k, *momentum, *clip))
+        }
+        SparsifierKind::AdaK { ratio, k_min, k_max } => {
+            Box::new(AdaK::new(dim, *ratio, *k_min, (*k_max).min(dim)))
+        }
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+
+    /// Drive a sparsifier through `rounds` with a fixed gradient and a
+    /// fabricated previous aggregate; returns total transmitted mass.
+    pub fn drive(s: &mut dyn Sparsifier, grad: &[f32], rounds: usize) -> f32 {
+        let dim = grad.len();
+        let mut gagg_prev = vec![0.0; dim];
+        let mut total = 0.0;
+        for t in 0..rounds {
+            let ctx = RoundCtx { t, gagg_prev: &gagg_prev, omega: 1.0, genie_acc: None };
+            let sv = s.step(grad, &ctx);
+            gagg_prev = sv.to_dense();
+            total += sv.values().iter().map(|v| v.abs()).sum::<f32>();
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factory_builds_every_kind() {
+        let kinds = [
+            SparsifierKind::Dense,
+            SparsifierKind::TopK { k: 2 },
+            SparsifierKind::RegTopK { k: 2, mu: 0.5, q: 1.0 },
+            SparsifierKind::RandK { k: 2, seed: 1 },
+            SparsifierKind::Threshold { tau: 0.1 },
+            SparsifierKind::GlobalTopK { k: 2 },
+            SparsifierKind::Dgc { k: 2, momentum: 0.9, clip: 0.0 },
+            SparsifierKind::AdaK { ratio: 1.0, k_min: 1, k_max: 4 },
+        ];
+        for kind in &kinds {
+            let s = build(kind, 10, 0);
+            assert!(!s.name().is_empty());
+        }
+    }
+
+    #[test]
+    fn from_name_roundtrip() {
+        assert_eq!(
+            SparsifierKind::from_name("regtopk", 3, 0.5, 1.0, 0.0, 0),
+            Some(SparsifierKind::RegTopK { k: 3, mu: 0.5, q: 1.0 })
+        );
+        assert_eq!(SparsifierKind::from_name("bogus", 1, 0.0, 0.0, 0.0, 0), None);
+    }
+
+    #[test]
+    fn only_gtopk_needs_genie() {
+        assert!(build(&SparsifierKind::GlobalTopK { k: 1 }, 4, 0).needs_genie());
+        assert!(!build(&SparsifierKind::TopK { k: 1 }, 4, 0).needs_genie());
+        assert!(!build(&SparsifierKind::RegTopK { k: 1, mu: 0.5, q: 1.0 }, 4, 0).needs_genie());
+    }
+}

@@ -1,0 +1,91 @@
+//! RAND-k baseline: k uniformly random entries with error feedback.
+//! Unbiased in expectation (after 1/p scaling variants; we transmit raw
+//! accumulated values like TOP-k so comparisons stay apples-to-apples).
+
+use crate::grad::ErrorFeedback;
+use crate::sparse::SparseVec;
+use crate::sparsify::{RoundCtx, Sparsifier};
+use crate::util::rng::Rng;
+
+pub struct RandK {
+    k: usize,
+    ef: ErrorFeedback,
+    rng: Rng,
+}
+
+impl RandK {
+    pub fn new(dim: usize, k: usize, seed: u64) -> Self {
+        assert!(k > 0, "randk needs k >= 1");
+        RandK { k, ef: ErrorFeedback::new(dim), rng: Rng::seed_from(seed) }
+    }
+}
+
+impl Sparsifier for RandK {
+    fn name(&self) -> &'static str {
+        "randk"
+    }
+
+    fn step(&mut self, grad: &[f32], _ctx: &RoundCtx) -> SparseVec {
+        self.ef.accumulate(grad);
+        let dim = grad.len();
+        let mut sel: Vec<usize> = self.rng.sample_indices(dim, self.k.min(dim));
+        sel.sort_unstable();
+        let sel: Vec<u32> = sel.into_iter().map(|i| i as u32).collect();
+        self.ef.commit(&sel)
+    }
+
+    fn peek_acc(&self, grad: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0; grad.len()];
+        self.ef.accumulate_into(grad, &mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx<'a>(gagg: &'a [f32]) -> RoundCtx<'a> {
+        RoundCtx { t: 0, gagg_prev: gagg, omega: 1.0, genie_acc: None }
+    }
+
+    #[test]
+    fn transmits_exactly_k_random_entries() {
+        let z = vec![0.0; 20];
+        let mut s = RandK::new(20, 5, 9);
+        let g: Vec<f32> = (1..=20).map(|i| i as f32).collect();
+        let sv = s.step(&g, &ctx(&z));
+        assert_eq!(sv.nnz(), 5);
+    }
+
+    #[test]
+    fn eventually_covers_all_entries() {
+        let z = vec![0.0; 10];
+        let mut s = RandK::new(10, 2, 1);
+        let g = vec![1.0; 10];
+        let mut seen = [false; 10];
+        for _ in 0..200 {
+            for &i in s.step(&g, &ctx(&z)).indices() {
+                seen[i as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b), "{seen:?}");
+    }
+
+    #[test]
+    fn error_feedback_preserves_mass() {
+        // unselected mass accumulates: after T rounds of constant grad,
+        // transmitted + residual error == T * grad (per entry).
+        let z = vec![0.0; 6];
+        let mut s = RandK::new(6, 2, 3);
+        let g = vec![1.0; 6];
+        let mut transmitted = vec![0.0f32; 6];
+        let rounds = 50;
+        for _ in 0..rounds {
+            s.step(&g, &ctx(&z)).axpy_into(1.0, &mut transmitted);
+        }
+        for i in 0..6 {
+            assert!((transmitted[i] + s.ef.eps[i] - rounds as f32).abs() < 1e-3);
+        }
+    }
+}

@@ -1,0 +1,235 @@
+//! REGTOP-k (Algorithm 1) — the paper's contribution.
+//!
+//! Per round t >= 1 each worker computes
+//!
+//!   a     = eps + g                                   (line 4)
+//!   Delta = s_prev ? (gagg_prev - omega*acc_prev) / (omega*a) : Q   (line 5)
+//!   score = a * tanh(|1 + Delta| / mu)                (line 6, eq. 16)
+//!   s     = Top_k(score);  ghat = s . a;  eps' = a - ghat  (lines 6-8)
+//!
+//! Round 0 falls back to plain TOP-k (line 1).  The numerics here match
+//! `kernels/ref.py::regtopk_score` to the guard constant (`DIV_EPS`) so
+//! the rust-native path and the HLO artifact path agree bit-for-bit in
+//! every position that can be selected (cross-checked in
+//! rust/tests/hlo_cross_check.rs).
+
+use crate::grad::ErrorFeedback;
+use crate::sparse::{select_topk, SparseVec};
+use crate::sparsify::{RoundCtx, Sparsifier};
+
+/// Must equal ref.DIV_EPS on the python side.
+pub const DIV_EPS: f32 = 1e-30;
+
+pub struct RegTopK {
+    k: usize,
+    /// regularization temperature; mu -> 0 recovers plain TOP-k
+    mu: f32,
+    /// postulated distortion for never-sent entries (Prop. 2's Q)
+    q: f32,
+    ef: ErrorFeedback,
+    /// scratch buffer for scores (avoids per-round allocation)
+    score: Vec<f32>,
+}
+
+impl RegTopK {
+    pub fn new(dim: usize, k: usize, mu: f32, q: f32) -> Self {
+        assert!(k > 0, "regtopk needs k >= 1");
+        assert!(mu > 0.0, "mu must be positive (mu -> 0 is TOP-k)");
+        RegTopK { k, mu, q, ef: ErrorFeedback::new(dim), score: vec![0.0; dim] }
+    }
+
+    pub fn error(&self) -> &[f32] {
+        &self.ef.eps
+    }
+
+    /// The regularized score  a * tanh(|1 + Delta|/mu)  (eq. 16).
+    /// Exposed for the cross-check tests and the score benches.
+    pub fn compute_score(
+        acc: &[f32],
+        acc_prev: &[f32],
+        gagg_prev: &[f32],
+        mask_prev: &[f32],
+        omega: f32,
+        mu: f32,
+        q: f32,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(acc.len(), out.len());
+        let inv_mu = 1.0 / mu;
+        for i in 0..acc.len() {
+            let denom = omega * acc[i];
+            let delta_sent = if denom.abs() > DIV_EPS {
+                (gagg_prev[i] - omega * acc_prev[i]) / denom
+            } else {
+                q
+            };
+            let delta = mask_prev[i] * delta_sent + q * (1.0 - mask_prev[i]);
+            let arg = (1.0 + delta).abs() * inv_mu;
+            // Exact-in-f32 saturation shortcut (perf pass): for
+            // arg >= 9.2, 1 - tanh(arg) < 2e-8 < half the f32 ulp at
+            // 1.0, so f32(tanh(arg)) == 1.0 bit-exactly.  Skipping the
+            // transcendental halves the score-pass cost at the plateau
+            // where most entries saturate.
+            let reg = if arg >= 9.2 { 1.0 } else { arg.tanh() };
+            out[i] = acc[i] * reg;
+        }
+    }
+}
+
+impl Sparsifier for RegTopK {
+    fn name(&self) -> &'static str {
+        "regtopk"
+    }
+
+    fn step(&mut self, grad: &[f32], ctx: &RoundCtx) -> SparseVec {
+        self.ef.accumulate(grad);
+        let sel = if !self.ef.warm {
+            // Alg. 1 line 1: plain TOP-k in the initial iteration.
+            select_topk(&self.ef.acc, self.k)
+        } else {
+            Self::compute_score(
+                &self.ef.acc,
+                &self.ef.acc_prev,
+                ctx.gagg_prev,
+                &self.ef.mask_prev,
+                ctx.omega,
+                self.mu,
+                self.q,
+                &mut self.score,
+            );
+            select_topk(&self.score, self.k)
+        };
+        self.ef.commit(&sel)
+    }
+
+    fn peek_acc(&self, grad: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0; grad.len()];
+        self.ef.accumulate_into(grad, &mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsify::testutil;
+    use crate::util::check;
+
+    fn ctx<'a>(t: usize, gagg: &'a [f32]) -> RoundCtx<'a> {
+        RoundCtx { t, gagg_prev: gagg, omega: 0.5, genie_acc: None }
+    }
+
+    #[test]
+    fn round0_is_plain_topk() {
+        let mut reg = RegTopK::new(4, 2, 0.5, 1.0);
+        let mut top = crate::sparsify::TopK::new(4, 2);
+        let z = vec![0.0; 4];
+        let g = [3.0, -1.0, 0.5, 2.0];
+        assert_eq!(reg.step(&g, &ctx(0, &z)), top.step(&g, &ctx(0, &z)));
+    }
+
+    #[test]
+    fn destructive_entry_is_damped() {
+        // Worker sent entry 0 (huge) in round 0; the server's aggregate
+        // came back 0 there (cancelled by another worker).  Delta = -1
+        // => tanh(0) => score 0 => round 1 must select a different entry.
+        let mut reg = RegTopK::new(3, 1, 0.5, 1.0);
+        let z = vec![0.0; 3];
+        let g = [100.0, 1.0, 0.5];
+        let sv0 = reg.step(&g, &ctx(0, &z));
+        assert_eq!(sv0.indices(), &[0]);
+        let gagg = vec![0.0, 0.0, 0.0]; // entry 0 cancelled globally
+        let sv1 = reg.step(&g, &ctx(1, &gagg));
+        assert_eq!(sv1.indices(), &[1], "damped entry 0 must lose");
+    }
+
+    #[test]
+    fn constructive_entry_is_kept() {
+        // If the aggregate equals the worker's own contribution
+        // (omega*acc_prev) plus more of the same sign, Delta >= 0 and
+        // the large entry keeps winning.
+        let mut reg = RegTopK::new(3, 1, 0.5, 1.0);
+        let z = vec![0.0; 3];
+        let g = [100.0, 1.0, 0.5];
+        reg.step(&g, &ctx(0, &z));
+        // aggregate reinforces entry 0: g_agg = 2 * omega * 100
+        let gagg = vec![100.0, 0.0, 0.0];
+        let sv1 = reg.step(&g, &ctx(1, &gagg));
+        assert_eq!(sv1.indices(), &[0]);
+    }
+
+    #[test]
+    fn tiny_mu_matches_topk_trajectory() {
+        // mu -> 0: tanh saturates to 1 for any Delta != -1, recovering
+        // TOP-k (DESIGN.md invariant 3). Drive both 5 rounds on random
+        // grads with a nonzero fabricated aggregate.
+        check::forall("regtopk_mu0_is_topk", |rng, _| {
+            let n = check::arb_len(rng, 60);
+            let k = rng.below(n) + 1;
+            let mut reg = RegTopK::new(n, k, 1e-9, 1.0);
+            let mut top = crate::sparsify::TopK::new(n, k);
+            let mut gagg = vec![0.0; n];
+            for t in 0..5 {
+                let g = check::arb_vec(rng, n);
+                let c = RoundCtx { t, gagg_prev: &gagg, omega: 0.5, genie_acc: None };
+                let a = reg.step(&g, &c);
+                let b = top.step(&g, &c);
+                assert_eq!(a, b, "t={t}");
+                gagg = a.to_dense();
+            }
+        });
+    }
+
+    #[test]
+    fn conservation_and_mask_size() {
+        check::forall("regtopk_conservation", |rng, _| {
+            let n = check::arb_len(rng, 80).max(2);
+            let k = rng.below(n) + 1;
+            let mut reg = RegTopK::new(n, k, 0.5, 1.0);
+            let mut gagg = vec![0.0; n];
+            for t in 0..4 {
+                let g = check::arb_vec(rng, n);
+                let acc = reg.peek_acc(&g);
+                let c = RoundCtx { t, gagg_prev: &gagg, omega: 0.25, genie_acc: None };
+                let sv = reg.step(&g, &c);
+                assert_eq!(sv.nnz(), k.min(n));
+                let dense = sv.to_dense();
+                for i in 0..n {
+                    assert_eq!(dense[i] + reg.error()[i], acc[i]);
+                }
+                gagg = dense;
+            }
+        });
+    }
+
+    #[test]
+    fn zero_accumulated_entries_never_panic() {
+        let mut reg = RegTopK::new(4, 2, 0.1, 1.0);
+        let z = vec![0.0; 4];
+        reg.step(&[0.0, 0.0, 0.0, 0.0], &ctx(0, &z));
+        let sv = reg.step(&[0.0, 1.0, 0.0, 0.0], &ctx(1, &z));
+        assert!(sv.values().iter().all(|v| v.is_finite()));
+        let _ = testutil::drive(&mut reg, &[0.0; 4], 3);
+    }
+
+    #[test]
+    fn score_matches_scalar_formula() {
+        // independent recomputation of eq. 16 for a handful of entries
+        let acc = [2.0f32, -3.0, 0.5];
+        let acc_prev = [1.0f32, 1.0, 1.0];
+        let gagg_prev = [0.5f32, -2.0, 0.0];
+        let mask_prev = [1.0f32, 0.0, 1.0];
+        let (omega, mu, q) = (0.5f32, 0.3f32, 2.0f32);
+        let mut out = [0.0f32; 3];
+        RegTopK::compute_score(&acc, &acc_prev, &gagg_prev, &mask_prev, omega, mu, q, &mut out);
+        for i in 0..3 {
+            let delta = if mask_prev[i] == 1.0 {
+                (gagg_prev[i] - omega * acc_prev[i]) / (omega * acc[i])
+            } else {
+                q
+            };
+            let want = acc[i] * ((1.0f32 + delta).abs() / mu).tanh();
+            assert!((out[i] - want).abs() <= 1e-6 * want.abs().max(1.0), "i={i}");
+        }
+    }
+}

@@ -1,0 +1,71 @@
+//! Hard-threshold baseline: transmit every accumulated entry with
+//! |a| >= tau (variable k per round; error feedback on the rest).
+
+use crate::grad::ErrorFeedback;
+use crate::sparse::SparseVec;
+use crate::sparsify::{RoundCtx, Sparsifier};
+
+pub struct Threshold {
+    tau: f32,
+    ef: ErrorFeedback,
+}
+
+impl Threshold {
+    pub fn new(dim: usize, tau: f32) -> Self {
+        assert!(tau > 0.0, "threshold needs tau > 0");
+        Threshold { tau, ef: ErrorFeedback::new(dim) }
+    }
+}
+
+impl Sparsifier for Threshold {
+    fn name(&self) -> &'static str {
+        "threshold"
+    }
+
+    fn step(&mut self, grad: &[f32], _ctx: &RoundCtx) -> SparseVec {
+        self.ef.accumulate(grad);
+        let sel: Vec<u32> = self
+            .ef
+            .acc
+            .iter()
+            .enumerate()
+            .filter(|(_, v)| v.abs() >= self.tau)
+            .map(|(i, _)| i as u32)
+            .collect();
+        self.ef.commit(&sel)
+    }
+
+    fn peek_acc(&self, grad: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0; grad.len()];
+        self.ef.accumulate_into(grad, &mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selects_entries_at_or_above_tau() {
+        let z = vec![0.0; 4];
+        let ctx = RoundCtx { t: 0, gagg_prev: &z, omega: 1.0, genie_acc: None };
+        let mut s = Threshold::new(4, 1.0);
+        let sv = s.step(&[0.5, -1.0, 2.0, 0.99], &ctx);
+        assert_eq!(sv.indices(), &[1, 2]);
+    }
+
+    #[test]
+    fn sub_threshold_mass_accumulates_until_release() {
+        let z = vec![0.0; 1];
+        let mut s = Threshold::new(1, 1.0);
+        for t in 0..2 {
+            let ctx = RoundCtx { t, gagg_prev: &z, omega: 1.0, genie_acc: None };
+            assert_eq!(s.step(&[0.4], &ctx).nnz(), 0);
+        }
+        let ctx = RoundCtx { t: 2, gagg_prev: &z, omega: 1.0, genie_acc: None };
+        let sv = s.step(&[0.4], &ctx);
+        assert_eq!(sv.nnz(), 1);
+        assert!((sv.values()[0] - 1.2).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,108 @@
+//! Classical TOP-k with error accumulation (paper §1.1) — the baseline
+//! the contribution is measured against.
+
+use crate::grad::ErrorFeedback;
+use crate::sparse::{select_topk, SparseVec};
+use crate::sparsify::{RoundCtx, Sparsifier};
+
+pub struct TopK {
+    k: usize,
+    ef: ErrorFeedback,
+}
+
+impl TopK {
+    pub fn new(dim: usize, k: usize) -> Self {
+        assert!(k > 0, "topk needs k >= 1");
+        TopK { k, ef: ErrorFeedback::new(dim) }
+    }
+
+    pub fn error(&self) -> &[f32] {
+        &self.ef.eps
+    }
+
+    /// Fold a post-sparsification residual (e.g. quantization error on
+    /// the transmitted values) back into the error accumulator so the
+    /// compression stays unbiased over time.
+    pub fn fold_residual(&mut self, indices: &[u32], residual: &[f32]) {
+        debug_assert_eq!(indices.len(), residual.len());
+        for (&i, &r) in indices.iter().zip(residual) {
+            self.ef.eps[i as usize] += r;
+        }
+    }
+}
+
+impl Sparsifier for TopK {
+    fn name(&self) -> &'static str {
+        "topk"
+    }
+
+    fn step(&mut self, grad: &[f32], _ctx: &RoundCtx) -> SparseVec {
+        self.ef.accumulate(grad);
+        let sel = select_topk(&self.ef.acc, self.k);
+        self.ef.commit(&sel)
+    }
+
+    fn peek_acc(&self, grad: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0; grad.len()];
+        self.ef.accumulate_into(grad, &mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check;
+
+    fn ctx<'a>(t: usize, gagg: &'a [f32]) -> RoundCtx<'a> {
+        RoundCtx { t, gagg_prev: gagg, omega: 1.0, genie_acc: None }
+    }
+
+    #[test]
+    fn selects_largest_magnitudes() {
+        let mut s = TopK::new(4, 2);
+        let z = vec![0.0; 4];
+        let sv = s.step(&[1.0, -5.0, 3.0, 0.1], &ctx(0, &z));
+        assert_eq!(sv.indices(), &[1, 2]);
+        assert_eq!(sv.values(), &[-5.0, 3.0]);
+    }
+
+    #[test]
+    fn error_accumulation_promotes_small_entries() {
+        // The §1.1 mechanism: entry 1 (always 1.0) is never selected
+        // against entry 0 (always 10.0) until its accumulated error
+        // overtakes; with k=1 that happens at t where t*1.0 > 10.
+        let mut s = TopK::new(2, 1);
+        let z = vec![0.0; 2];
+        let mut first_sel_of_1 = None;
+        for t in 0..15 {
+            let sv = s.step(&[10.0, 1.0], &ctx(t, &z));
+            if sv.indices() == [1] {
+                first_sel_of_1 = Some(t);
+                // released value = accumulated error = (t+1) * 1.0
+                assert_eq!(sv.values()[0], (t + 1) as f32);
+                break;
+            }
+        }
+        assert_eq!(first_sel_of_1, Some(10));
+    }
+
+    #[test]
+    fn transmitted_plus_error_equals_accumulated() {
+        check::forall("topk_conservation", |rng, _| {
+            let n = check::arb_len(rng, 100);
+            let k = rng.below(n) + 1;
+            let mut s = TopK::new(n, k);
+            let z = vec![0.0; n];
+            for t in 0..3 {
+                let g = check::arb_vec(rng, n);
+                let acc = s.peek_acc(&g);
+                let sv = s.step(&g, &ctx(t, &z));
+                let dense = sv.to_dense();
+                for i in 0..n {
+                    assert_eq!(dense[i] + s.error()[i], acc[i]);
+                }
+            }
+        });
+    }
+}

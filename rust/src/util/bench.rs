@@ -1,0 +1,137 @@
+//! Micro-benchmark harness used by every `cargo bench` target.
+//!
+//! criterion is unavailable offline, so this provides the subset we
+//! need: warmup, timed batches, median + MAD + throughput reporting,
+//! and a black_box.  Output format is one line per benchmark:
+//!
+//!   bench <name> ... median 12.34 us  (mad 0.56 us, n=64, 8.1 Melem/s)
+//!
+//! which the EXPERIMENTS.md tables are built from.
+
+use std::time::{Duration, Instant};
+
+/// Prevent the optimizer from eliding a computation.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66
+    std::hint::black_box(x)
+}
+
+/// Benchmark runner with a per-target time budget.
+pub struct Bench {
+    /// max wall-clock budget per benchmark
+    pub budget: Duration,
+    /// minimum sample count
+    pub min_samples: usize,
+    results: Vec<(String, f64)>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        // Keep default budgets modest: the bench suite covers many
+        // (sparsifier, J, k) points and must finish in minutes.
+        Bench { budget: Duration::from_millis(700), min_samples: 10, results: Vec::new() }
+    }
+
+    pub fn with_budget(budget: Duration) -> Self {
+        Bench { budget, ..Bench::new() }
+    }
+
+    /// Time `f`, which should perform ONE logical iteration per call.
+    /// Returns the median seconds/iter and prints a summary line.
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> f64 {
+        // warmup: at least 3 calls or 10% of budget
+        let warm_deadline = Instant::now() + self.budget / 10;
+        for _ in 0..3 {
+            f();
+        }
+        while Instant::now() < warm_deadline {
+            f();
+        }
+        // sample
+        let mut samples = Vec::new();
+        let deadline = Instant::now() + self.budget;
+        while samples.len() < self.min_samples || Instant::now() < deadline {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+            if samples.len() >= 10_000 {
+                break;
+            }
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = samples[samples.len() / 2];
+        let mad = {
+            let mut d: Vec<f64> = samples.iter().map(|s| (s - median).abs()).collect();
+            d.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            d[d.len() / 2]
+        };
+        println!(
+            "bench {name:<44} median {:>10}  (mad {}, n={})",
+            fmt_time(median),
+            fmt_time(mad),
+            samples.len()
+        );
+        self.results.push((name.to_string(), median));
+        median
+    }
+
+    /// Like `run` but also reports elements/second for `elems` per iter.
+    pub fn run_throughput<F: FnMut()>(&mut self, name: &str, elems: usize, f: F) -> f64 {
+        let median = self.run(name, f);
+        if median > 0.0 {
+            println!(
+                "      {:<44} throughput {:.2} Melem/s",
+                name,
+                elems as f64 / median / 1e6
+            );
+        }
+        median
+    }
+
+    /// All recorded (name, median_secs) pairs.
+    pub fn results(&self) -> &[(String, f64)] {
+        &self.results
+    }
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut b = Bench::with_budget(Duration::from_millis(50));
+        let m = b.run("noop-ish", || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(m > 0.0 && m < 0.1);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with("ms"));
+        assert!(fmt_time(2e-6).ends_with("us"));
+        assert!(fmt_time(2e-9).ends_with("ns"));
+    }
+}

@@ -1,0 +1,115 @@
+//! Seeded property-test driver (a shrinking-free proptest-alike).
+//!
+//! Runs a property over `n` random cases drawn from a deterministic
+//! seed; on failure it reports the case index and seed so the exact
+//! case replays.  Used by the invariant suites in `sparse`, `sparsify`,
+//! `grad` and `comm` (DESIGN.md §6).
+
+use crate::util::rng::Rng;
+
+/// Number of cases per property (kept moderate; the suites cover many
+/// properties).  Override with env `REGTOPK_PROP_CASES`.
+pub fn default_cases() -> usize {
+    std::env::var("REGTOPK_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop` over `default_cases()` random cases.  `prop` gets a
+/// per-case RNG and the case index; it should panic/assert on failure.
+pub fn forall<F: FnMut(&mut Rng, usize)>(name: &str, mut prop: F) {
+    let seed = 0xC0FFEE ^ fxhash(name);
+    let cases = default_cases();
+    for case in 0..cases {
+        let mut rng = Rng::seed_from(seed.wrapping_add((case as u64).wrapping_mul(0x9E3779B97F4A7C15)));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng, case)
+        }));
+        if let Err(e) = result {
+            eprintln!(
+                "property '{name}' failed at case {case}/{cases} (seed {seed:#x})"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Random vector length biased toward small + boundary sizes.
+pub fn arb_len(rng: &mut Rng, max: usize) -> usize {
+    match rng.below(10) {
+        0 => 1,
+        1 => 2,
+        2 => rng.below(8) + 1,
+        _ => rng.below(max.max(2) - 1) + 1,
+    }
+}
+
+/// Random f32 vector with occasional adversarial values (zeros, huge,
+/// tiny, exact duplicates).
+pub fn arb_vec(rng: &mut Rng, len: usize) -> Vec<f32> {
+    let mode = rng.below(5);
+    let mut v: Vec<f32> = (0..len)
+        .map(|_| match mode {
+            0 => rng.normal_f32(0.0, 1.0),
+            1 => rng.normal_f32(0.0, 1e4),
+            2 => rng.normal_f32(0.0, 1e-4),
+            _ => rng.normal_f32(0.0, 1.0),
+        })
+        .collect();
+    // sprinkle zeros and duplicates
+    if len > 2 && mode == 3 {
+        for _ in 0..(len / 4).max(1) {
+            let i = rng.below(len);
+            v[i] = 0.0;
+        }
+    }
+    if len > 2 && mode == 4 {
+        let src = rng.below(len);
+        for _ in 0..(len / 4).max(1) {
+            let dst = rng.below(len);
+            v[dst] = v[src];
+        }
+    }
+    v
+}
+
+fn fxhash(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_runs_all_cases() {
+        let mut count = 0;
+        forall("counter", |_rng, _case| {
+            count += 1;
+        });
+        assert_eq!(count, default_cases());
+    }
+
+    #[test]
+    #[should_panic]
+    fn forall_propagates_failures() {
+        forall("fails", |rng, _case| {
+            assert!(rng.uniform() < 0.5, "expected failure");
+        });
+    }
+
+    #[test]
+    fn arb_vec_has_requested_length() {
+        let mut rng = Rng::seed_from(1);
+        for _ in 0..50 {
+            let n = arb_len(&mut rng, 100);
+            assert_eq!(arb_vec(&mut rng, n).len(), n);
+        }
+    }
+}

@@ -1,0 +1,228 @@
+//! Declarative flag parser for the `repro` binary and the examples.
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
+//! positional arguments; generates `--help` text from declarations.
+
+use std::collections::BTreeMap;
+
+/// One declared flag.
+struct FlagDef {
+    name: &'static str,
+    default: Option<String>,
+    help: &'static str,
+    boolean: bool,
+}
+
+/// Declarative CLI: declare flags, then parse `std::env::args`.
+pub struct Cli {
+    about: &'static str,
+    flags: Vec<FlagDef>,
+    values: BTreeMap<&'static str, String>,
+    positional: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(about: &'static str) -> Self {
+        Cli { about, flags: Vec::new(), values: BTreeMap::new(), positional: Vec::new() }
+    }
+
+    /// Declare a value flag with a default.
+    pub fn flag(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.flags.push(FlagDef { name, default: Some(default.to_string()), help, boolean: false });
+        self
+    }
+
+    /// Declare a required value flag (no default).
+    pub fn required(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagDef { name, default: None, help, boolean: false });
+        self
+    }
+
+    /// Declare a boolean switch (default false).
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagDef { name, default: Some("false".to_string()), help, boolean: true });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{}\n\nFlags:\n", self.about);
+        for f in &self.flags {
+            let d = match &f.default {
+                Some(d) if f.boolean => format!(" [switch, default {d}]"),
+                Some(d) => format!(" [default: {d}]"),
+                None => " [required]".to_string(),
+            };
+            s.push_str(&format!("  --{:<18} {}{}\n", f.name, f.help, d));
+        }
+        s
+    }
+
+    /// Parse an explicit argv (no program name). Returns Err(help) on
+    /// `--help` or malformed input.
+    pub fn parse_from<I: IntoIterator<Item = String>>(mut self, args: I) -> Result<Parsed, String> {
+        let mut it = args.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if arg == "--help" || arg == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(rest) = arg.strip_prefix("--") {
+                let (name, inline) = match rest.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let def = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| format!("unknown flag --{name}\n\n{}", self.usage()))?;
+                let val = if def.boolean {
+                    inline.unwrap_or_else(|| "true".to_string())
+                } else {
+                    match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("--{name} needs a value"))?,
+                    }
+                };
+                self.values.insert(def.name, val);
+            } else {
+                self.positional.push(arg);
+            }
+        }
+        // fill defaults / check required
+        let mut out = BTreeMap::new();
+        for f in &self.flags {
+            match self.values.get(f.name) {
+                Some(v) => {
+                    out.insert(f.name, v.clone());
+                }
+                None => match &f.default {
+                    Some(d) => {
+                        out.insert(f.name, d.clone());
+                    }
+                    None => return Err(format!("missing required --{}\n\n{}", f.name, self.usage())),
+                },
+            }
+        }
+        Ok(Parsed { values: out, positional: self.positional })
+    }
+
+    /// Parse the process args (skipping argv[0]); print help and exit on error.
+    pub fn parse(self) -> Parsed {
+        match self.parse_from(std::env::args().skip(1)) {
+            Ok(p) => p,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+/// Parsed flag values with typed getters (panic on type error — flags
+/// are developer-declared, so a bad parse is a bug in the caller).
+#[derive(Debug)]
+pub struct Parsed {
+    values: BTreeMap<&'static str, String>,
+    pub positional: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("flag --{name} was not declared"))
+    }
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects an integer, got '{}'", self.get(name)))
+    }
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects a number, got '{}'", self.get(name)))
+    }
+    pub fn get_f32(&self, name: &str) -> f32 {
+        self.get_f64(name) as f32
+    }
+    pub fn get_bool(&self, name: &str) -> bool {
+        matches!(self.get(name), "true" | "1" | "yes")
+    }
+    /// Comma-separated list of numbers, e.g. `--s 0.4,0.5,0.6`.
+    pub fn get_f64_list(&self, name: &str) -> Vec<f64> {
+        self.get(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .unwrap_or_else(|_| panic!("--{name}: bad number '{s}'"))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    fn cli() -> Cli {
+        Cli::new("test")
+            .flag("iters", "100", "iterations")
+            .flag("eta", "0.01", "learning rate")
+            .switch("verbose", "chatty")
+            .required("name", "run name")
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let p = cli().parse_from(argv("--name run1 --iters 5")).unwrap();
+        assert_eq!(p.get_usize("iters"), 5);
+        assert_eq!(p.get_f64("eta"), 0.01);
+        assert!(!p.get_bool("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax_and_switch() {
+        let p = cli().parse_from(argv("--name=x --eta=0.5 --verbose")).unwrap();
+        assert_eq!(p.get_f64("eta"), 0.5);
+        assert!(p.get_bool("verbose"));
+    }
+
+    #[test]
+    fn missing_required_fails() {
+        assert!(cli().parse_from(argv("--iters 5")).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_fails() {
+        assert!(cli().parse_from(argv("--name x --bogus 1")).is_err());
+    }
+
+    #[test]
+    fn positional_collected() {
+        let p = cli().parse_from(argv("fig2 --name x")).unwrap();
+        assert_eq!(p.positional, vec!["fig2".to_string()]);
+    }
+
+    #[test]
+    fn list_parsing() {
+        let p = Cli::new("t")
+            .flag("s", "0.4,0.5,0.6", "sparsities")
+            .parse_from(argv(""))
+            .unwrap();
+        assert_eq!(p.get_f64_list("s"), vec![0.4, 0.5, 0.6]);
+    }
+
+    #[test]
+    fn help_is_error_with_usage() {
+        let err = cli().parse_from(argv("--help")).unwrap_err();
+        assert!(err.contains("--iters"));
+    }
+}

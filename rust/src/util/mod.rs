@@ -1,0 +1,24 @@
+//! In-tree substrates replacing unavailable third-party crates.
+//!
+//! This workspace builds fully offline: the only external dependency is
+//! the `xla` PJRT binding.  Everything a framework normally pulls from
+//! crates.io is implemented (and tested) here:
+//!
+//! - [`rng`]    — deterministic PRNG (SplitMix64 / Xoshiro256++) with
+//!               Gaussian sampling; seeds every dataset, sampler and
+//!               property test in the repo.
+//! - [`json`]   — minimal JSON parser/serializer for
+//!               `artifacts/manifest.json`, metrics output and configs.
+//! - [`cli`]    — declarative flag parser for the `repro` binary and
+//!               the examples.
+//! - [`bench`]  — micro-benchmark harness (warmup + median/MAD) used by
+//!               every `cargo bench` target (criterion is unavailable
+//!               offline).
+//! - [`check`]  — seeded property-test driver (shrinking-free
+//!               proptest-alike) used by the invariant suites.
+
+pub mod bench;
+pub mod check;
+pub mod cli;
+pub mod json;
+pub mod rng;

@@ -1,0 +1,49 @@
+//! DESIGN.md invariant 6: same config => bit-identical results, across
+//! both drivers and after state reuse.
+
+use regtopk::data::linear::{generate, LinearParams};
+use regtopk::experiments::{fig1, fig2};
+use regtopk::sparsify::SparsifierKind;
+
+#[test]
+fn fig2_runs_are_bit_identical() {
+    let params = LinearParams { workers: 5, rows_per_worker: 100, dim: 20, ..LinearParams::fig2() };
+    let a = generate(params, 9);
+    let b = generate(params, 9);
+    let kind = SparsifierKind::RegTopK { k: 10, mu: 0.5, q: 1.0 };
+    let la = fig2::run_curve(&a, kind.clone(), "a", 100, 0.02);
+    let lb = fig2::run_curve(&b, kind, "b", 100, 0.02);
+    for (ra, rb) in la.records().iter().zip(lb.records()) {
+        assert_eq!(ra.loss.to_bits(), rb.loss.to_bits());
+        assert_eq!(ra.opt_gap.to_bits(), rb.opt_gap.to_bits());
+        assert_eq!(ra.upload_bytes, rb.upload_bytes);
+    }
+}
+
+#[test]
+fn threaded_and_deterministic_drivers_agree_bitwise() {
+    let params = LinearParams { workers: 4, rows_per_worker: 80, dim: 16, ..LinearParams::fig2() };
+    let problem = generate(params, 4);
+    for kind in [
+        SparsifierKind::TopK { k: 8 },
+        SparsifierKind::RegTopK { k: 8, mu: 0.5, q: 1.0 },
+    ] {
+        let mut det = fig2::trainer_for(&problem, kind.clone(), 0.02);
+        for _ in 0..50 {
+            det.round();
+        }
+        let mut thr = fig2::trainer_for(&problem, kind.clone(), 0.02);
+        thr.run_threaded(50);
+        assert_eq!(det.server.w, thr.server.w, "{kind:?}");
+    }
+}
+
+#[test]
+fn csv_output_is_byte_identical_across_runs() {
+    let a = fig1::run(30, 0.5, 1.0);
+    let b = fig1::run(30, 0.5, 1.0);
+    for (la, lb) in a.iter().zip(&b) {
+        assert_eq!(la.to_csv(), lb.to_csv());
+        assert_eq!(la.to_json().dump(), lb.to_json().dump());
+    }
+}

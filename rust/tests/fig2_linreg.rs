@@ -1,0 +1,105 @@
+//! Fig. 2 integration at the paper's FULL geometry (N=20, D=500,
+//! J=100, eta=0.01, U=0, sigma^2=5, h^2=1, eps=0.5).
+//!
+//! Reproduction findings (EXPERIMENTS.md §Fig2): two of the figure's
+//! three curve shapes reproduce exactly — dense GD converges to w*
+//! and TOP-k plateaus at a fixed optimality gap ("oscillates at a
+//! fixed optimality gap", §4.1).  The third claim (REGTOP-k tracking
+//! dense at S=0.6) does NOT reproduce from Algorithm 1 as printed:
+//! REGTOP-k tracks TOP-k at parity across mu in [0.1, 50] and
+//! Q in {0, 1, N-1}.  Alg. 1's posterior distortion has one-round
+//! memory, so it can suppress at most k destructively-aggregating
+//! coordinates per round; in the isotropic-heterogeneity generator
+//! every coordinate is destructive near w*, and the suppression has
+//! no selection signal to exploit.  The separation the paper builds
+//! its intuition on (§1.2) DOES reproduce whenever the destructive
+//! set is small relative to k — see fig1_toy.rs.  These tests pin the
+//! reproducible claims.
+
+use regtopk::data::linear::{generate, LinearParams};
+use regtopk::experiments::fig2;
+use regtopk::metrics::RunLog;
+use regtopk::sparsify::SparsifierKind;
+
+fn curve(problem: &regtopk::data::linear::LinearProblem, kind: SparsifierKind, iters: usize) -> RunLog {
+    fig2::run_curve(problem, kind, "x", iters, fig2::ETA)
+}
+
+fn tail_gap(log: &RunLog) -> f32 {
+    let recs = log.records();
+    let tail = &recs[recs.len() - 200..];
+    tail.iter().map(|r| r.opt_gap).sum::<f32>() / tail.len() as f32
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "full-geometry run; use cargo test --release")]
+fn dense_converges_and_topk_plateaus() {
+    let problem = generate(LinearParams::fig2(), 42);
+    let iters = 2500;
+    let dense = curve(&problem, SparsifierKind::Dense, iters);
+    let top = curve(&problem, SparsifierKind::TopK { k: 60 }, iters);
+    let dense_gap = tail_gap(&dense);
+    let top_gap = tail_gap(&top);
+    // dense: converged to the LS optimum
+    assert!(dense_gap < 1e-3, "dense gap {dense_gap}");
+    // TOP-k: stuck at a fixed distance, orders of magnitude above dense
+    assert!(top_gap > 50.0 * dense_gap, "topk {top_gap} vs dense {dense_gap}");
+    // ... and it is a plateau, not divergence: gap stable over the tail
+    let g1000 = top.records()[1000].opt_gap;
+    assert!(top_gap < 3.0 * g1000 && top_gap > 0.2 * g1000, "{g1000} -> {top_gap}");
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "full-geometry run; use cargo test --release")]
+fn regtopk_is_at_parity_with_topk_at_equal_budget() {
+    // The reproducible Fig.2 statement for REGTOP-k on this testbed:
+    // identical communication budget, final gap within 50% of TOP-k
+    // (parity), never divergent.
+    let problem = generate(LinearParams::fig2(), 42);
+    let iters = 2500;
+    for s in [0.4f64, 0.6] {
+        let k = (s * 100.0) as usize;
+        let top = curve(&problem, SparsifierKind::TopK { k }, iters);
+        let reg = curve(
+            &problem,
+            SparsifierKind::RegTopK { k, mu: 0.5, q: 1.0 },
+            iters,
+        );
+        let (tg, rg) = (tail_gap(&top), tail_gap(&reg));
+        assert!(rg < 1.5 * tg, "S={s}: regtopk {rg} vs topk {tg}");
+        assert!(rg.is_finite() && rg > 0.0);
+        assert_eq!(
+            top.records()[10].upload_bytes,
+            reg.records()[10].upload_bytes,
+            "budgets must match at S={s}"
+        );
+    }
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "full-geometry run; use cargo test --release")]
+fn higher_sparsity_budget_lowers_the_plateau() {
+    // the cross-panel trend of Fig. 2: S=0.6 plateaus below S=0.4
+    let problem = generate(LinearParams::fig2(), 42);
+    let lo = curve(&problem, SparsifierKind::TopK { k: 40 }, 2500);
+    let hi = curve(&problem, SparsifierKind::TopK { k: 60 }, 2500);
+    assert!(tail_gap(&hi) < tail_gap(&lo));
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "full-geometry run; use cargo test --release")]
+fn gtopk_genie_beats_local_topk() {
+    // §3.1's idealized bound: selecting by the TRUE aggregate removes
+    // the destructive-selection waste and lowers the plateau.
+    let params = LinearParams { workers: 10, rows_per_worker: 200, dim: 60, ..LinearParams::fig2() };
+    let problem = generate(params, 7);
+    let k = 12; // S = 0.2: tight budget, selection quality matters
+    let top = curve(&problem, SparsifierKind::TopK { k }, 2000);
+    let genie = curve(&problem, SparsifierKind::GlobalTopK { k }, 2000);
+    assert!(
+        tail_gap(&genie) < tail_gap(&top),
+        "gtopk {} !< topk {}",
+        tail_gap(&genie),
+        tail_gap(&top)
+    );
+}

@@ -1,0 +1,123 @@
+//! Cross-layer equivalence: the rust-native sparsifier pipeline and
+//! the L1/L2 HLO artifacts compute the same algorithm.
+//!
+//! This is the contract that lets the coordinator switch freely
+//! between the native path (small J) and the artifact path (large J):
+//! score agreement is checked entrywise AND at the selection level.
+
+use regtopk::runtime::{Runtime, Tensor};
+use regtopk::sparse::{select_topk, topk_threshold};
+use regtopk::sparsify::RegTopK;
+use regtopk::util::rng::Rng;
+
+fn runtime() -> Option<Runtime> {
+    Runtime::open("artifacts").ok().or_else(|| {
+        eprintln!("skipping: artifacts not built");
+        None
+    })
+}
+
+/// Full REGTOP-k round via artifacts (score -> host select -> EF) vs
+/// the pure-rust `RegTopK` sparsifier over several synthetic rounds.
+#[test]
+fn multi_round_artifact_pipeline_matches_native_sparsifier() {
+    let Some(mut rt) = runtime() else { return };
+    let score_exe = rt.load("regtopk_score").unwrap();
+    let ef_exe = rt.load("error_feedback").unwrap();
+    let j = score_exe.spec.inputs[0].shape[0];
+    let (k, omega, mu, q) = (64usize, 0.25f32, 0.5f32, 1.0f32);
+
+    // native sparsifier
+    let mut native = RegTopK::new(j, k, mu, q);
+    // artifact-side state
+    let mut eps = vec![0.0f32; j];
+    let mut acc_prev = vec![0.0f32; j];
+    let mut mask_prev = vec![0.0f32; j];
+    let mut gagg_prev = vec![0.0f32; j];
+
+    let mut rng = Rng::seed_from(77);
+    for t in 0..4 {
+        let g = rng.gaussian_vec(j, 1.0);
+
+        // ---- artifact path
+        let out = score_exe
+            .call(&[
+                Tensor::f32(eps.clone(), &[j]),
+                Tensor::f32(g.clone(), &[j]),
+                Tensor::f32(acc_prev.clone(), &[j]),
+                Tensor::f32(gagg_prev.clone(), &[j]),
+                Tensor::f32(mask_prev.clone(), &[j]),
+                Tensor::f32(vec![omega, mu, q], &[3]),
+            ])
+            .unwrap();
+        let (acc, score) = (&out[0], &out[1]);
+        // round 0 is plain TOP-k (Alg. 1 line 1)
+        let sel = if t == 0 { select_topk(acc, k) } else { select_topk(score, k) };
+        let mut mask = vec![0.0f32; j];
+        for &i in &sel {
+            mask[i as usize] = 1.0;
+        }
+        let ef = ef_exe
+            .call(&[Tensor::f32(acc.clone(), &[j]), Tensor::f32(mask.clone(), &[j])])
+            .unwrap();
+        let (ghat_art, eps_next) = (ef[0].clone(), ef[1].clone());
+        acc_prev = acc.clone();
+        mask_prev = mask;
+        eps = eps_next;
+
+        // ---- native path
+        let ctx = regtopk::sparsify::RoundCtx {
+            t,
+            gagg_prev: &gagg_prev,
+            omega,
+            genie_acc: None,
+        };
+        use regtopk::sparsify::Sparsifier;
+        let sv = native.step(&g, &ctx);
+
+        // compare: same selection, same transmitted values
+        assert_eq!(sv.indices(), sel.as_slice(), "t={t} selection");
+        for (&i, &v) in sv.indices().iter().zip(sv.values()) {
+            assert_eq!(v, ghat_art[i as usize], "t={t} value at {i}");
+        }
+
+        // fabricate the broadcast (single-worker "aggregate")
+        let mut gagg = vec![0.0f32; j];
+        sv.axpy_into(omega, &mut gagg);
+        gagg_prev = gagg;
+    }
+}
+
+/// Two-phase HLO-side selection (block_absmax threshold) equals exact
+/// host selection when magnitudes are distinct.
+#[test]
+fn threshold_equals_exact_topk_on_artifact_scores() {
+    let Some(mut rt) = runtime() else { return };
+    let score_exe = rt.load("regtopk_score").unwrap();
+    let j = score_exe.spec.inputs[0].shape[0];
+    let mut rng = Rng::seed_from(5);
+    let eps = rng.gaussian_vec(j, 1.0);
+    let g = rng.gaussian_vec(j, 1.0);
+    let z = vec![0.0f32; j];
+    let out = score_exe
+        .call(&[
+            Tensor::f32(eps, &[j]),
+            Tensor::f32(g, &[j]),
+            Tensor::f32(z.clone(), &[j]),
+            Tensor::f32(z.clone(), &[j]),
+            Tensor::f32(z.clone(), &[j]),
+            Tensor::f32(vec![0.25, 0.5, 1.0], &[3]),
+        ])
+        .unwrap();
+    let score = &out[1];
+    let k = 500;
+    let exact = select_topk(score, k);
+    let tau = topk_threshold(score, k);
+    let by_threshold: Vec<u32> = score
+        .iter()
+        .enumerate()
+        .filter(|(_, v)| v.abs() >= tau)
+        .map(|(i, _)| i as u32)
+        .collect();
+    assert_eq!(exact, by_threshold);
+}

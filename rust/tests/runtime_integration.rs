@@ -1,0 +1,179 @@
+//! Integration: load real AOT artifacts through PJRT and validate the
+//! numerics against rust-native reference computations.
+//!
+//! Requires `make artifacts` (skipped gracefully when absent so plain
+//! `cargo test` works pre-build; CI/`make test` always builds first).
+
+use regtopk::runtime::{Runtime, Tensor};
+use regtopk::sparsify::RegTopK;
+use regtopk::util::rng::Rng;
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::open("artifacts") {
+        Ok(r) => Some(r),
+        Err(e) => {
+            eprintln!("skipping (artifacts not built): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn linreg_grad_matches_rust_native() {
+    let Some(mut rt) = runtime() else { return };
+    let (j, d) = (100usize, 500usize);
+    let mut rng = Rng::seed_from(11);
+    let w = rng.gaussian_vec(j, 1.0);
+    let x = rng.gaussian_vec(d * j, 1.0);
+    let y = rng.gaussian_vec(d, 1.0);
+
+    let exe = rt.load("linreg_grad").unwrap();
+    let out = exe
+        .call(&[
+            Tensor::f32(w.clone(), &[j]),
+            Tensor::f32(x.clone(), &[d, j]),
+            Tensor::f32(y.clone(), &[d]),
+        ])
+        .unwrap();
+    assert_eq!(out.len(), 2);
+    let (hlo_loss, hlo_grad) = (&out[0], &out[1]);
+    assert_eq!(hlo_loss.len(), 1);
+    assert_eq!(hlo_grad.len(), j);
+
+    // rust-native LS gradient on the same data
+    let shard = regtopk::data::Shard { x, y, rows: d, dim: j };
+    let mut g = vec![0.0f32; j];
+    let loss = regtopk::data::linear::ls_gradient(&shard, &w, &mut g);
+    assert!(
+        (hlo_loss[0] - loss).abs() <= 1e-4 * loss.abs().max(1.0),
+        "loss {} vs {}",
+        hlo_loss[0],
+        loss
+    );
+    for i in 0..j {
+        assert!(
+            (hlo_grad[i] - g[i]).abs() <= 2e-3 * g[i].abs().max(1.0),
+            "grad[{i}] {} vs {}",
+            hlo_grad[i],
+            g[i]
+        );
+    }
+}
+
+#[test]
+fn regtopk_score_artifact_matches_rust_native() {
+    let Some(mut rt) = runtime() else { return };
+    let spec = rt.manifest.artifacts["regtopk_score"].clone();
+    let j = spec.inputs[0].shape[0];
+    let mut rng = Rng::seed_from(22);
+    let eps = rng.gaussian_vec(j, 1.0);
+    let g = rng.gaussian_vec(j, 1.0);
+    let acc_prev = rng.gaussian_vec(j, 1.0);
+    let gagg_prev = rng.gaussian_vec(j, 1.0);
+    let mask_prev: Vec<f32> = (0..j).map(|_| (rng.below(2)) as f32).collect();
+    let (omega, mu, q) = (0.125f32, 0.5f32, 1.0f32);
+
+    let exe = rt.load("regtopk_score").unwrap();
+    let out = exe
+        .call(&[
+            Tensor::f32(eps.clone(), &[j]),
+            Tensor::f32(g.clone(), &[j]),
+            Tensor::f32(acc_prev.clone(), &[j]),
+            Tensor::f32(gagg_prev.clone(), &[j]),
+            Tensor::f32(mask_prev.clone(), &[j]),
+            Tensor::f32(vec![omega, mu, q], &[3]),
+        ])
+        .unwrap();
+    let (hlo_acc, hlo_score) = (&out[0], &out[1]);
+
+    // rust-native: acc + score
+    let acc: Vec<f32> = eps.iter().zip(&g).map(|(a, b)| a + b).collect();
+    let mut score = vec![0.0f32; j];
+    RegTopK::compute_score(&acc, &acc_prev, &gagg_prev, &mask_prev, omega, mu, q, &mut score);
+
+    for i in 0..j {
+        assert_eq!(hlo_acc[i], acc[i], "acc[{i}]");
+        assert!(
+            (hlo_score[i] - score[i]).abs() <= 1e-5 * score[i].abs().max(1e-3),
+            "score[{i}] {} vs {}",
+            hlo_score[i],
+            score[i]
+        );
+    }
+
+    // selection agreement: same top-k set under both scores
+    let k = 1000;
+    let a = regtopk::sparse::select_topk(hlo_score, k);
+    let b = regtopk::sparse::select_topk(&score, k);
+    let same = a.iter().zip(&b).filter(|(x, y)| x == y).count();
+    assert!(same as f64 > 0.999 * k as f64, "selection overlap {same}/{k}");
+}
+
+#[test]
+fn error_feedback_artifact_conserves() {
+    let Some(mut rt) = runtime() else { return };
+    let spec = rt.manifest.artifacts["error_feedback"].clone();
+    let j = spec.inputs[0].shape[0];
+    let mut rng = Rng::seed_from(33);
+    let acc = rng.gaussian_vec(j, 10.0);
+    let mask: Vec<f32> = (0..j).map(|_| (rng.below(2)) as f32).collect();
+    let exe = rt.load("error_feedback").unwrap();
+    let out = exe
+        .call(&[Tensor::f32(acc.clone(), &[j]), Tensor::f32(mask.clone(), &[j])])
+        .unwrap();
+    let (ghat, eps) = (&out[0], &out[1]);
+    for i in 0..j {
+        assert_eq!(ghat[i] + eps[i], acc[i], "conservation at {i}");
+        assert!(ghat[i] == 0.0 || eps[i] == 0.0, "support overlap at {i}");
+    }
+}
+
+#[test]
+fn sgd_apply_artifact_matches_native() {
+    let Some(mut rt) = runtime() else { return };
+    let spec = rt.manifest.artifacts["sgd_apply"].clone();
+    let j = spec.inputs[0].shape[0];
+    let mut rng = Rng::seed_from(44);
+    let w = rng.gaussian_vec(j, 1.0);
+    let g = rng.gaussian_vec(j, 1.0);
+    let eta = 0.01f32;
+    let exe = rt.load("sgd_apply").unwrap();
+    let out = exe
+        .call(&[
+            Tensor::f32(w.clone(), &[j]),
+            Tensor::f32(g.clone(), &[j]),
+            Tensor::f32(vec![eta], &[1]),
+        ])
+        .unwrap();
+    for i in 0..j {
+        let want = w[i] - eta * g[i];
+        assert!((out[0][i] - want).abs() <= 1e-6 * want.abs().max(1e-3), "{i}");
+    }
+}
+
+#[test]
+fn mlp_grad_descends_on_its_init() {
+    let Some(mut rt) = runtime() else { return };
+    let w = rt.load_init("mlp").unwrap();
+    let spec = rt.manifest.artifacts["mlp_grad"].clone();
+    let b = spec.inputs[1].shape[0];
+    let mut rng = Rng::seed_from(55);
+    let x = rng.gaussian_vec(b * 3072, 0.5);
+    let y: Vec<i32> = (0..b).map(|_| rng.below(10) as i32).collect();
+    let exe = rt.load("mlp_grad").unwrap();
+    let call = |w: &[f32]| {
+        exe.call(&[
+            Tensor::f32(w.to_vec(), &[w.len()]),
+            Tensor::f32(x.clone(), &[b, 3072]),
+            Tensor::i32(y.clone(), &[b]),
+        ])
+        .unwrap()
+    };
+    let out = call(&w);
+    let (loss0, grad) = (out[0][0], &out[1]);
+    assert!(loss0.is_finite() && loss0 > 0.0);
+    assert_eq!(grad.len(), w.len());
+    let w2: Vec<f32> = w.iter().zip(grad).map(|(wi, gi)| wi - 0.05 * gi).collect();
+    let loss1 = call(&w2)[0][0];
+    assert!(loss1 < loss0, "descent: {loss1} !< {loss0}");
+}
