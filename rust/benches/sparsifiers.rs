@@ -1,15 +1,24 @@
-//! Sparsifier throughput: one worker-step per (algorithm, J, S) point.
-//! This is the L3 per-round hot path (score + select + error update).
+//! Sparsifier throughput: one worker-step per (algorithm, J, S, shards)
+//! point.  This is the L3 per-round hot path (error-feedback accumulate
+//! + score + select + error update) — the fused sharded engine collapses
+//! the three O(J) passes and recycles every buffer (`step_into`).
 //!
 //!     cargo bench --bench sparsifiers
+//!
+//! Results are appended to BENCH_PR1.json (override with $BENCH_JSON);
+//! EXPERIMENTS.md §Perf records the trajectory.  The acceptance gate of
+//! PR 1 compares `*/sh1` (seed-equivalent serial) against `*/shN`.
 
+use regtopk::sparse::SparseVec;
 use regtopk::sparsify::{build, RoundCtx, SparsifierKind};
 use regtopk::util::bench::{black_box, Bench};
+use regtopk::util::pool;
 use regtopk::util::rng::Rng;
 
 fn main() {
     let mut b = Bench::new();
-    println!("# sparsifier worker-step throughput (elements = J per step)");
+    let auto = pool::global().parallelism();
+    println!("# sparsifier worker-step throughput (elements = J per step; {auto} pool executors)");
     for &j in &[10_000usize, 100_000, 1_000_000] {
         let mut rng = Rng::seed_from(1);
         let grad = rng.gaussian_vec(j, 1.0);
@@ -19,20 +28,34 @@ fn main() {
             for kind in [
                 SparsifierKind::TopK { k },
                 SparsifierKind::RegTopK { k, mu: 0.5, q: 1.0 },
+                SparsifierKind::Dgc { k, momentum: 0.9, clip: 0.0 },
                 SparsifierKind::RandK { k, seed: 3 },
             ] {
-                let mut sp = build(&kind, j, 0);
-                let name = format!("{}/J={j}/S={s}", sp.name());
-                // warm the error-feedback state once
-                let ctx = RoundCtx { t: 0, gagg_prev: &gagg, omega: 0.125, genie_acc: None };
-                black_box(sp.step(&grad, &ctx));
-                let mut t = 1usize;
-                b.run_throughput(&name, j, || {
-                    let ctx = RoundCtx { t, gagg_prev: &gagg, omega: 0.125, genie_acc: None };
-                    black_box(sp.step(&grad, &ctx));
-                    t += 1;
-                });
+                // shards=1: the seed-equivalent serial path; shards=auto:
+                // the fused sharded engine on the persistent pool
+                for &shards in &[1usize, auto] {
+                    if shards > 1 && matches!(kind, SparsifierKind::RandK { .. }) {
+                        continue; // randk has no magnitude selection to shard
+                    }
+                    let mut sp = build(&kind, j, 0);
+                    sp.set_shards(shards);
+                    let name = format!("{}/J={j}/S={s}/sh{shards}", sp.name());
+                    let mut out = SparseVec::zeros(j);
+                    // warm the error-feedback state once
+                    let ctx = RoundCtx { t: 0, gagg_prev: &gagg, omega: 0.125, genie_acc: None };
+                    sp.step_into(&grad, &ctx, &mut out);
+                    black_box(out.nnz());
+                    let mut t = 1usize;
+                    b.run_throughput(&name, j, || {
+                        let ctx =
+                            RoundCtx { t, gagg_prev: &gagg, omega: 0.125, genie_acc: None };
+                        sp.step_into(&grad, &ctx, &mut out);
+                        black_box(out.nnz());
+                        t += 1;
+                    });
+                }
             }
         }
     }
+    b.write_json_default();
 }

@@ -1,16 +1,26 @@
 //! Top-k selection kernels: exact quickselect vs full sort vs sampled
-//! threshold (ablation 4).  The selection is the only super-linear
-//! step in the sparsifier hot path.
+//! threshold (ablation 4) vs the sharded engine.  The selection is the
+//! only super-linear step in the sparsifier hot path.
 //!
 //!     cargo bench --bench topk_select
+//!
+//! Results are appended to BENCH_PR1.json (override with $BENCH_JSON);
+//! EXPERIMENTS.md §Perf records the trajectory.
 
-use regtopk::sparse::{approx, select_topk, topk::{select_topk_quick, select_topk_radix, select_topk_sort}};
+use regtopk::sparse::engine::SelectEngine;
+use regtopk::sparse::topk::{select_topk_quick, select_topk_radix, select_topk_sort};
+use regtopk::sparse::select_topk;
+use regtopk::sparse::approx;
 use regtopk::util::bench::{black_box, Bench};
+use regtopk::util::pool;
 use regtopk::util::rng::Rng;
 
 fn main() {
     let mut b = Bench::new();
-    println!("# top-k selection: exact quickselect vs sort vs sampled threshold");
+    println!(
+        "# top-k selection: serial kernels vs sharded engine ({} pool executors)",
+        pool::global().parallelism()
+    );
     for &j in &[10_000usize, 100_000, 1_000_000] {
         let mut rng = Rng::seed_from(2);
         let x = rng.gaussian_vec(j, 1.0);
@@ -29,9 +39,21 @@ fn main() {
                 black_box(select_topk_sort(&x, k));
             });
         }
+        // the sharded zero-allocation engine at several shard counts
+        // (shards=1 exercises the fused structure without the pool)
+        let auto = pool::global().parallelism();
+        for shards in [1usize, 2, 4, auto] {
+            let mut eng = SelectEngine::new(shards);
+            let mut out = Vec::new();
+            b.run_throughput(&format!("sharded{shards}/J={j}/k={k}"), j, || {
+                eng.select_into(&x, k, &mut out);
+                black_box(out.len());
+            });
+        }
         let mut arng = Rng::seed_from(3);
         b.run_throughput(&format!("sampled8/J={j}/k={k}"), j, || {
             black_box(approx::select_topk_sampled(&x, k, 8, &mut arng));
         });
     }
+    b.write_json_default();
 }

@@ -6,7 +6,7 @@
 use std::path::Path;
 
 use crate::comm::CostModel;
-use crate::sparsify::SparsifierKind;
+use crate::sparsify::{SparsifierKind, SparsifierParams};
 use crate::util::json::{obj, Json};
 
 /// Top-level experiment configuration.
@@ -28,6 +28,11 @@ pub struct TrainConfig {
     pub eval_every: usize,
     /// communication cost model
     pub cost: CostModel,
+    /// shard count for the sparsification engine: 1 = serial (the seed
+    /// path), 0 = auto (sized to the persistent pool), N = fixed.
+    /// Small models fall back to serial regardless (see
+    /// [`Self::effective_shards`]).
+    pub shards: usize,
 }
 
 impl Default for TrainConfig {
@@ -41,6 +46,7 @@ impl Default for TrainConfig {
             seed: 42,
             eval_every: 10,
             cost: CostModel::default(),
+            shards: 1,
         }
     }
 }
@@ -50,6 +56,27 @@ impl TrainConfig {
     /// D_n-proportional weights).
     pub fn omega(&self, _worker: usize) -> f32 {
         1.0 / self.workers as f32
+    }
+
+    /// Short name of the configured sparsifier (for summaries).
+    pub fn sparsifier_name(&self) -> &'static str {
+        self.sparsifier.name()
+    }
+
+    /// Resolve the configured shard count for a model of dimension
+    /// `dim`: `0` means "one shard per pool executor"; dimensions
+    /// below the engine threshold always run serial (a parallel pass
+    /// over a few thousand elements costs more in handoff than it
+    /// saves).  Results are bit-identical across all shard counts, so
+    /// this is purely a performance decision.
+    pub fn effective_shards(&self, dim: usize) -> usize {
+        if dim < crate::sparse::engine::MIN_SHARDED_DIM {
+            return 1;
+        }
+        match self.shards {
+            0 => crate::util::pool::global().parallelism(),
+            s => s,
+        }
     }
 
     /// Serialize for run manifests.
@@ -94,6 +121,7 @@ impl TrainConfig {
             ("sparsifier", sp),
             ("seed", (self.seed as usize).into()),
             ("eval_every", self.eval_every.into()),
+            ("shards", self.shards.into()),
         ])
     }
 
@@ -121,14 +149,29 @@ impl TrainConfig {
         if let Some(v) = j.get("eval_every").and_then(Json::as_usize) {
             c.eval_every = v;
         }
+        if let Some(v) = j.get("shards").and_then(Json::as_usize) {
+            c.shards = v;
+        }
         if let Some(sp) = j.get("sparsifier") {
             let name = sp.get("name").and_then(Json::as_str).ok_or("sparsifier.name missing")?;
-            let k = sp.get("k").and_then(Json::as_usize).unwrap_or(1);
-            let mu = sp.get("mu").and_then(Json::as_f64).unwrap_or(0.5) as f32;
-            let q = sp.get("q").and_then(Json::as_f64).unwrap_or(1.0) as f32;
-            let tau = sp.get("tau").and_then(Json::as_f64).unwrap_or(1.0) as f32;
-            let seed = sp.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u64;
-            c.sparsifier = SparsifierKind::from_name(name, k, mu, q, tau, seed)
+            let d = SparsifierParams::default();
+            let p = SparsifierParams {
+                k: sp.get("k").and_then(Json::as_usize).unwrap_or(d.k),
+                mu: sp.get("mu").and_then(Json::as_f64).map(|v| v as f32).unwrap_or(d.mu),
+                q: sp.get("q").and_then(Json::as_f64).map(|v| v as f32).unwrap_or(d.q),
+                tau: sp.get("tau").and_then(Json::as_f64).map(|v| v as f32).unwrap_or(d.tau),
+                seed: sp.get("seed").and_then(Json::as_f64).map(|v| v as u64).unwrap_or(d.seed),
+                momentum: sp
+                    .get("momentum")
+                    .and_then(Json::as_f64)
+                    .map(|v| v as f32)
+                    .unwrap_or(d.momentum),
+                clip: sp.get("clip").and_then(Json::as_f64).map(|v| v as f32).unwrap_or(d.clip),
+                ratio: sp.get("ratio").and_then(Json::as_f64).map(|v| v as f32).unwrap_or(d.ratio),
+                k_min: sp.get("k_min").and_then(Json::as_usize).unwrap_or(d.k_min),
+                k_max: sp.get("k_max").and_then(Json::as_usize).unwrap_or(d.k_max),
+            };
+            c.sparsifier = SparsifierKind::from_params(name, &p)
                 .ok_or_else(|| format!("unknown sparsifier '{name}'"))?;
         }
         Ok(c)
@@ -156,6 +199,33 @@ mod tests {
         let c = TrainConfig::from_json(&j).unwrap();
         assert_eq!(c.iters, 7);
         assert_eq!(c.workers, TrainConfig::default().workers);
+        assert_eq!(c.shards, 1, "serial engine by default");
+    }
+
+    #[test]
+    fn dgc_and_adak_params_roundtrip() {
+        let mut c = TrainConfig::default();
+        c.sparsifier = SparsifierKind::Dgc { k: 9, momentum: 0.7, clip: 3.0 };
+        let c2 = TrainConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.sparsifier, c.sparsifier);
+        c.sparsifier = SparsifierKind::AdaK { ratio: 0.4, k_min: 2, k_max: 17 };
+        let c2 = TrainConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.sparsifier, c.sparsifier);
+    }
+
+    #[test]
+    fn shards_roundtrip_and_effective_fallback() {
+        let mut c = TrainConfig::default();
+        c.shards = 8;
+        let c2 = TrainConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.shards, 8);
+        // below the engine threshold: always serial
+        assert_eq!(c2.effective_shards(100), 1);
+        // above it: the configured count
+        assert_eq!(c2.effective_shards(1 << 20), 8);
+        // auto resolves to the pool size (>= 1)
+        c.shards = 0;
+        assert!(c.effective_shards(1 << 20) >= 1);
     }
 
     #[test]

@@ -30,18 +30,43 @@ pub struct Trainer {
     pub ledger: Ledger,
     /// g^{t-1} broadcast to workers (zeros before the first round)
     gagg_prev: Vec<f32>,
+    /// per-worker update buffers, recycled every round (zero
+    /// steady-state allocation on the sparsify path)
+    updates: Vec<crate::sparse::SparseVec>,
+    /// genie-channel scratch (allocated lazily, only for gtopk runs)
+    genie_buf: Vec<f32>,
+    peek_buf: Vec<f32>,
     t: usize,
 }
 
 impl Trainer {
-    pub fn new(config: TrainConfig, workers: Vec<Worker>, server: Server) -> Self {
+    pub fn new(config: TrainConfig, mut workers: Vec<Worker>, server: Server) -> Self {
         assert_eq!(config.workers, workers.len(), "config.workers mismatch");
         let dim = server.dim();
         for w in &workers {
             assert_eq!(w.dim(), dim, "worker {} dim mismatch", w.id);
         }
+        // wire the configured shard count into every sparsifier; small
+        // models and shards=1 keep the seed's serial path
+        let shards = config.effective_shards(dim);
+        for w in &mut workers {
+            w.set_shards(shards);
+        }
         let ledger = Ledger::new(config.cost);
-        Trainer { config, workers, server, ledger, gagg_prev: vec![0.0; dim], t: 0 }
+        let updates = (0..workers.len())
+            .map(|_| crate::sparse::SparseVec::zeros(dim))
+            .collect();
+        Trainer {
+            config,
+            workers,
+            server,
+            ledger,
+            gagg_prev: vec![0.0; dim],
+            updates,
+            genie_buf: Vec::new(),
+            peek_buf: Vec::new(),
+            t: 0,
+        }
     }
 
     pub fn iter(&self) -> usize {
@@ -71,22 +96,19 @@ impl Trainer {
         let n = self.workers.len();
         let dim = self.server.dim();
         // Phase 1: local gradients at the current global model.
-        // Parallelized across workers when the model is heavy enough to
-        // amortize thread spawn (perf pass, EXPERIMENTS.md §Perf: 8
-        // artifact-backed CNN workers -> ~6x round speedup); results
-        // are per-worker so the aggregate stays bit-identical to the
-        // sequential order.
+        // Fanned out over the persistent pool when the model is heavy
+        // enough to amortize the handoff (perf pass, EXPERIMENTS.md
+        // §Perf) — the pool replaces the seed's per-round
+        // `thread::scope`, so no OS threads are created per round;
+        // results are per-worker so the aggregate stays bit-identical
+        // to the sequential order.
         let mut loss_sum = 0.0f64;
         if n > 1 && dim >= 4096 {
             let w_ref = &self.server.w;
-            let losses: Vec<f32> = std::thread::scope(|scope| {
-                let handles: Vec<_> = self
-                    .workers
-                    .iter_mut()
-                    .map(|w| scope.spawn(move || w.compute_grad(w_ref)))
-                    .collect();
-                handles.into_iter().map(|h| h.join().expect("worker grad panicked")).collect()
-            });
+            let losses: Vec<f32> =
+                crate::util::pool::global().map_mut(&mut self.workers, |_, w| {
+                    w.compute_grad(w_ref)
+                });
             loss_sum = losses.iter().map(|&l| l as f64).sum();
         } else {
             for w in &mut self.workers {
@@ -95,33 +117,37 @@ impl Trainer {
         }
         // Genie side-channel for gtopk: true aggregated accumulated
         // gradient sum_n omega_n a_n^t (infeasible in practice, §3.1).
-        let genie: Option<Vec<f32>> = if self.workers.iter().any(Worker::needs_genie) {
-            let mut acc = vec![0.0f32; dim];
+        // Buffers are lazily sized and reused across rounds.
+        let genie: Option<&[f32]> = if self.workers.iter().any(Worker::needs_genie) {
+            self.genie_buf.resize(dim, 0.0);
+            self.peek_buf.resize(dim, 0.0);
+            self.genie_buf.fill(0.0);
             for (i, w) in self.workers.iter().enumerate() {
                 let omega = self.config.omega(i);
-                for (a, v) in acc.iter_mut().zip(w.peek_acc()) {
+                w.peek_acc_into(&mut self.peek_buf);
+                for (a, &v) in self.genie_buf.iter_mut().zip(&self.peek_buf) {
                     *a += omega * v;
                 }
             }
-            Some(acc)
+            Some(&self.genie_buf)
         } else {
             None
         };
-        // Phase 2: sparsify + "transmit" (ledger accounting).
-        let mut updates = Vec::with_capacity(n);
+        // Phase 2: sparsify + "transmit" (ledger accounting), each
+        // worker writing into its recycled update buffer.
         for (i, w) in self.workers.iter_mut().enumerate() {
             let ctx = RoundCtx {
                 t,
                 gagg_prev: &self.gagg_prev,
                 omega: self.config.omega(i),
-                genie_acc: genie.as_deref(),
+                genie_acc: genie,
             };
-            let sv = w.sparsify(&ctx);
-            self.ledger.record_upload(&sv);
-            updates.push(sv);
+            w.sparsify_into(&ctx, &mut self.updates[i]);
+            self.ledger.record_upload(&self.updates[i]);
         }
         // Phase 3: aggregate, step, broadcast.
-        let weighted: Vec<(f32, &crate::sparse::SparseVec)> = updates
+        let weighted: Vec<(f32, &crate::sparse::SparseVec)> = self
+            .updates
             .iter()
             .enumerate()
             .map(|(i, sv)| (self.config.omega(i), sv))

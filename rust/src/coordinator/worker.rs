@@ -39,9 +39,25 @@ impl Worker {
         self.sparsifier.peek_acc(&self.grad)
     }
 
+    /// [`Self::peek_acc`] into a caller buffer (no allocation).
+    pub fn peek_acc_into(&self, out: &mut [f32]) {
+        self.sparsifier.peek_acc_into(&self.grad, out);
+    }
+
     /// Phase 2: sparsify the gradient computed in phase 1.
     pub fn sparsify(&mut self, ctx: &RoundCtx) -> SparseVec {
         self.sparsifier.step(&self.grad, ctx)
+    }
+
+    /// [`Self::sparsify`] into a recycled update buffer (the trainer's
+    /// zero-allocation round path).
+    pub fn sparsify_into(&mut self, ctx: &RoundCtx, out: &mut SparseVec) {
+        self.sparsifier.step_into(&self.grad, ctx, out);
+    }
+
+    /// Shard count for the sparsifier's internal kernels.
+    pub fn set_shards(&mut self, shards: usize) {
+        self.sparsifier.set_shards(shards);
     }
 
     pub fn needs_genie(&self) -> bool {

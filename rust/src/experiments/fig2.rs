@@ -20,6 +20,17 @@ pub const ETA: f32 = 0.01;
 
 /// Build a trainer over a generated problem for one sparsifier kind.
 pub fn trainer_for(problem: &LinearProblem, kind: SparsifierKind, eta: f32) -> Trainer {
+    trainer_sharded(problem, kind, eta, 1)
+}
+
+/// [`trainer_for`] with an explicit sparsification-engine shard count
+/// (1 = serial seed path, 0 = auto; see `TrainConfig::shards`).
+pub fn trainer_sharded(
+    problem: &LinearProblem,
+    kind: SparsifierKind,
+    eta: f32,
+    shards: usize,
+) -> Trainer {
     let n = problem.params.workers;
     let dim = problem.params.dim;
     let config = TrainConfig {
@@ -27,6 +38,7 @@ pub fn trainer_for(problem: &LinearProblem, kind: SparsifierKind, eta: f32) -> T
         eta,
         sparsifier: kind.clone(),
         eval_every: 1,
+        shards,
         ..TrainConfig::default()
     };
     let workers = (0..n)
@@ -59,7 +71,20 @@ pub fn run_curve(
     iters: usize,
     eta: f32,
 ) -> RunLog {
-    let mut tr = trainer_for(problem, kind, eta);
+    run_curve_sharded(problem, kind, name, iters, eta, 1)
+}
+
+/// [`run_curve`] with an explicit engine shard count (bit-identical
+/// output for every value; see `rust/tests/sharded_select.rs`).
+pub fn run_curve_sharded(
+    problem: &LinearProblem,
+    kind: SparsifierKind,
+    name: &str,
+    iters: usize,
+    eta: f32,
+    shards: usize,
+) -> RunLog {
+    let mut tr = trainer_sharded(problem, kind, eta, shards);
     let mut log = RunLog::new(name, tr.config.to_json());
     for t in 0..iters {
         let rr = tr.round();

@@ -70,8 +70,16 @@ impl ErrorFeedback {
     /// to transmit, stores eps' = acc - ghat (Alg. 1 lines 7-8) and
     /// records (acc, mask) as the t-1 history for REGTOP-k.
     pub fn commit(&mut self, selected: &[u32]) -> SparseVec {
+        let mut ghat = SparseVec::zeros(self.dim());
+        self.commit_into(selected, &mut ghat);
+        ghat
+    }
+
+    /// [`Self::commit`] into a recycled [`SparseVec`] — the
+    /// zero-allocation variant behind `Sparsifier::step_into`.
+    pub fn commit_into(&mut self, selected: &[u32], out: &mut SparseVec) {
         debug_assert!(selected.windows(2).all(|w| w[0] < w[1]));
-        let ghat = SparseVec::gather(&self.acc, selected);
+        SparseVec::gather_into(&self.acc, selected, out);
         // history: acc_prev <- acc (buffer swap; old acc_prev becomes
         // next round's acc scratch)
         std::mem::swap(&mut self.acc_prev, &mut self.acc);
@@ -91,7 +99,6 @@ impl ErrorFeedback {
         self.prev_sel.clear();
         self.prev_sel.extend_from_slice(selected);
         self.warm = true;
-        ghat
     }
 }
 

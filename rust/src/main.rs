@@ -21,6 +21,7 @@ use regtopk::data::linear::{generate, LinearParams};
 use regtopk::experiments::{comm_table, fig1, fig2, fig3, sweeps};
 use regtopk::metrics::RunLog;
 use regtopk::runtime::Runtime;
+use regtopk::sparsify::SparsifierKind;
 use regtopk::util::cli::Cli;
 
 fn main() {
@@ -358,10 +359,27 @@ fn cmd_comm(args: Vec<String>) -> i32 {
 }
 
 fn cmd_train(args: Vec<String>) -> i32 {
-    let p = Cli::new("Generic linreg-testbed training run from a JSON config")
-        .required("config", "path to config JSON (see config module docs)")
-        .flag("out", "results", "output directory")
-        .parse_from(args);
+    let p = Cli::new(
+        "Generic linreg-testbed training run from a JSON config.\n\
+         CLI flags override the config: --sparsifier rebuilds the kind\n\
+         from the full parameter set (incl. dgc momentum/clip and adak\n\
+         ratio/k-min/k-max); --shards drives the sharded engine.",
+    )
+    .required("config", "path to config JSON (see config module docs)")
+    .flag("out", "results", "output directory")
+    .flag("shards", "", "engine shards: 0=auto, 1=serial, N=fixed (default: config)")
+    .flag("sparsifier", "", "override sparsifier by name (dense|topk|regtopk|randk|threshold|gtopk|dgc|adak)")
+    .flag("k", "1", "sparsity budget k")
+    .flag("mu", "0.5", "regtopk temperature")
+    .flag("q", "1.0", "regtopk never-sent prior")
+    .flag("tau", "1.0", "threshold tau")
+    .flag("sp-seed", "0", "randk stream seed")
+    .flag("momentum", "0.9", "dgc momentum-correction factor")
+    .flag("clip", "0.0", "dgc local l2 clip (0 disables)")
+    .flag("ratio", "1.0", "adak residual trigger ratio")
+    .flag("k-min", "1", "adak lower budget bound")
+    .flag("k-max", "0", "adak upper budget bound (0 = k)")
+    .parse_from(args);
     let p = match p {
         Ok(p) => p,
         Err(e) => {
@@ -369,22 +387,88 @@ fn cmd_train(args: Vec<String>) -> i32 {
             return 2;
         }
     };
-    let cfg = match TrainConfig::from_json_file(Path::new(p.get("config"))) {
+    let mut cfg = match TrainConfig::from_json_file(Path::new(p.get("config"))) {
         Ok(c) => c,
         Err(e) => {
             eprintln!("bad config: {e}");
             return 2;
         }
     };
+    if p.provided("shards") {
+        cfg.shards = p.get_usize("shards");
+    }
+    // Sparsifier overrides start from the CONFIG's parameters and
+    // overlay only the flags the user actually passed, so
+    // `--sparsifier regtopk --mu 0.3` tweaks mu without resetting k,
+    // and `--k 500` alone adjusts the configured kind.
+    let param_flags =
+        ["k", "mu", "q", "tau", "sp-seed", "momentum", "clip", "ratio", "k-min", "k-max"];
+    if p.provided("sparsifier") || param_flags.iter().any(|f| p.provided(f)) {
+        let name = if p.provided("sparsifier") {
+            p.get("sparsifier").to_string()
+        } else {
+            cfg.sparsifier.name().to_string()
+        };
+        let mut params = cfg.sparsifier.to_params();
+        if p.provided("k") {
+            params.k = p.get_usize("k");
+        }
+        if p.provided("mu") {
+            params.mu = p.get_f32("mu");
+        }
+        if p.provided("q") {
+            params.q = p.get_f32("q");
+        }
+        if p.provided("tau") {
+            params.tau = p.get_f32("tau");
+        }
+        if p.provided("sp-seed") {
+            params.seed = p.get_usize("sp-seed") as u64;
+        }
+        if p.provided("momentum") {
+            params.momentum = p.get_f32("momentum");
+        }
+        if p.provided("clip") {
+            params.clip = p.get_f32("clip");
+        }
+        if p.provided("ratio") {
+            params.ratio = p.get_f32("ratio");
+        }
+        if p.provided("k-min") {
+            params.k_min = p.get_usize("k-min");
+        }
+        if p.provided("k-max") {
+            params.k_max = p.get_usize("k-max");
+        }
+        cfg.sparsifier = match SparsifierKind::from_params(&name, &params) {
+            Some(kind) => kind,
+            None => {
+                eprintln!("unknown sparsifier '{name}'");
+                return 2;
+            }
+        };
+    }
     let params = LinearParams {
         workers: cfg.workers,
         ..LinearParams::fig2()
     };
     let problem = generate(params, cfg.seed);
-    let log = fig2::run_curve(&problem, cfg.sparsifier.clone(), "train", cfg.iters, cfg.eta);
-    println!(
-        "train: {} iters, final loss {:.6}, final gap {:.6}",
+    let log = fig2::run_curve_sharded(
+        &problem,
+        cfg.sparsifier.clone(),
+        "train",
         cfg.iters,
+        cfg.eta,
+        cfg.shards,
+    );
+    // report the shard count that actually ran: small testbeds fall
+    // back to serial regardless of the configured value
+    println!(
+        "train: {} iters ({} / shards={} effective={}), final loss {:.6}, final gap {:.6}",
+        cfg.iters,
+        cfg.sparsifier_name(),
+        cfg.shards,
+        cfg.effective_shards(params.dim),
         log.last().unwrap().loss,
         log.last().unwrap().opt_gap
     );

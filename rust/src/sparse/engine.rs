@@ -1,0 +1,347 @@
+//! The sharded sparsification engine: fused score + top-k select over
+//! a persistent thread pool, with all scratch reused across rounds.
+//!
+//! The seed hot path did three sequential O(J) passes per worker per
+//! round (error-feedback accumulate, score, select) with fresh
+//! allocations in each.  [`SelectEngine`] collapses this to two
+//! parallel passes and zero steady-state allocation:
+//!
+//! - **pass 1 (fused fill + histogram):** each shard computes its
+//!   slice of the score vector (the caller's closure — accumulate,
+//!   RegTop-k score, DGC velocity update, ... ) and, in the same loop,
+//!   a 256-bucket histogram of the high byte of the magnitude bits.
+//! - **merge:** histograms are summed (256 x shards adds) and walked
+//!   from the top to find the boundary bucket — exactly the
+//!   [`select_topk_radix`](crate::sparse::topk::select_topk_radix)
+//!   boundary rule.
+//! - **pass 2 (collect):** each shard gathers its winners (strictly
+//!   above the boundary bucket) and boundary-bucket candidates into
+//!   per-shard reusable buffers.
+//! - **exact select:** candidates are concatenated in shard order
+//!   (== ascending global index order) and the remaining `need`
+//!   entries are chosen by the same
+//!   [`quickselect_keys`](crate::sparse::topk) kernel the serial path
+//!   uses, so ties break toward the lower index **bit-identically to
+//!   `select_topk_sort`** for every shard count (property-tested in
+//!   `rust/tests/sharded_select.rs` across shards in {1, 2, 3, 8}).
+//!
+//! Determinism: shard ranges come from [`shard_range`], merges happen
+//! in shard order on the caller, and the exact-select kernel is
+//! deterministic — so results are independent of thread scheduling and
+//! of the shard count itself.
+
+use crate::sparse::topk::{boundary_bucket, mag_bits, quickselect_keys};
+use crate::util::pool::{self, shard_range, SharedSlice};
+
+/// Below this dimension the trainer keeps sparsifiers on the serial
+/// path: a parallel pass over a few thousand elements costs more in
+/// handoff than it saves (see EXPERIMENTS.md §Perf).  Callers that
+/// want sharding on smaller inputs (tests, benches) can still drive
+/// [`SelectEngine`] directly.
+pub const MIN_SHARDED_DIM: usize = 1 << 15;
+
+/// Reusable sharded top-k selector.  One engine per sparsifier; all
+/// buffers grow to their steady-state size on the first round and are
+/// reused afterwards (zero heap allocation per round).
+pub struct SelectEngine {
+    shards: usize,
+    /// per-shard 256-bucket histograms of the magnitude high byte
+    hists: Vec<[u32; 256]>,
+    /// per-shard winner indices (strictly above the boundary bucket)
+    winners: Vec<Vec<u32>>,
+    /// per-shard boundary-bucket candidate indices/values
+    cand_idx: Vec<Vec<u32>>,
+    cand_val: Vec<Vec<f32>>,
+    /// scratch for the exact select among boundary candidates
+    keys: Vec<(f32, u32)>,
+}
+
+impl SelectEngine {
+    /// `shards >= 1`; `shards == 1` is valid and still uses the fused
+    /// single-pass structure (just without the pool handoff).
+    pub fn new(shards: usize) -> Self {
+        let shards = shards.max(1);
+        SelectEngine {
+            shards,
+            hists: vec![[0u32; 256]; shards],
+            winners: (0..shards).map(|_| Vec::new()).collect(),
+            cand_idx: (0..shards).map(|_| Vec::new()).collect(),
+            cand_val: (0..shards).map(|_| Vec::new()).collect(),
+            keys: Vec::new(),
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Indices of the k largest-|x| entries of `x`, sorted ascending,
+    /// written into `out` (reused, no allocation at steady state).
+    /// Bit-identical to `select_topk_sort(x, k)`.
+    pub fn select_into(&mut self, x: &[f32], k: usize, out: &mut Vec<u32>) {
+        let j = x.len();
+        let k_eff = k.min(j);
+        out.clear();
+        if k_eff == 0 {
+            return;
+        }
+        if k_eff == j {
+            out.extend(0..j as u32);
+            return;
+        }
+        self.pass1_hist(x);
+        self.finish(x, k_eff, out);
+    }
+
+    /// Fused score + select: `fill(lo, slice)` must write the scores
+    /// for the global range `[lo, lo + slice.len())` into `slice`; the
+    /// engine histograms each shard's slice in the same parallel pass,
+    /// then selects the top `k` of `|score|` into `out` (sorted
+    /// ascending, bit-identical to `select_topk_sort(score, k)`).
+    ///
+    /// `fill` always runs over the whole vector — even for the trivial
+    /// budgets k = 0 / k >= J — because callers fuse state updates
+    /// (e.g. error-feedback accumulate) into it.
+    pub fn fused_select_into<F>(&mut self, score: &mut [f32], fill: F, k: usize, out: &mut Vec<u32>)
+    where
+        F: Fn(usize, &mut [f32]) + Sync,
+    {
+        let j = score.len();
+        let k_eff = k.min(j);
+        if k_eff == 0 || k_eff == j {
+            // degenerate budget: still materialize the fused buffer
+            self.fill_only(score, &fill);
+            out.clear();
+            if k_eff == j {
+                out.extend(0..j as u32);
+            }
+            return;
+        }
+        self.pass1_fill_hist(score, &fill);
+        self.finish(score, k_eff, out);
+    }
+
+    /// Parallel fill without histogramming (degenerate-budget path).
+    fn fill_only<F: Fn(usize, &mut [f32]) + Sync>(&self, score: &mut [f32], fill: &F) {
+        let j = score.len();
+        let shards = self.shards;
+        let score_sh = SharedSlice::new(score);
+        pool::global().run(shards, |s| {
+            let (lo, hi) = shard_range(j, shards, s);
+            // SAFETY: shard ranges are disjoint.
+            let slice = unsafe { score_sh.range(lo, hi) };
+            fill(lo, slice);
+        });
+    }
+
+    /// Pass 1, histogram-only variant (the input already exists).
+    fn pass1_hist(&mut self, x: &[f32]) {
+        let j = x.len();
+        let shards = self.shards;
+        let hist_sh = SharedSlice::new(&mut self.hists);
+        pool::global().run(shards, |s| {
+            let (lo, hi) = shard_range(j, shards, s);
+            // SAFETY: each shard touches only its own histogram slot.
+            let h = unsafe { &mut hist_sh.range(s, s + 1)[0] };
+            h.fill(0);
+            for &v in &x[lo..hi] {
+                h[(mag_bits(v) >> 24) as usize] += 1;
+            }
+        });
+    }
+
+    /// Pass 1, fused variant: fill the score slice and histogram it in
+    /// one loop per shard.
+    fn pass1_fill_hist<F: Fn(usize, &mut [f32]) + Sync>(&mut self, score: &mut [f32], fill: &F) {
+        let j = score.len();
+        let shards = self.shards;
+        let hist_sh = SharedSlice::new(&mut self.hists);
+        let score_sh = SharedSlice::new(score);
+        pool::global().run(shards, |s| {
+            let (lo, hi) = shard_range(j, shards, s);
+            // SAFETY: disjoint score ranges / histogram slots per shard.
+            let slice = unsafe { score_sh.range(lo, hi) };
+            let h = unsafe { &mut hist_sh.range(s, s + 1)[0] };
+            fill(lo, slice);
+            h.fill(0);
+            for &v in slice.iter() {
+                h[(mag_bits(v) >> 24) as usize] += 1;
+            }
+        });
+    }
+
+    /// Merge histograms, locate the boundary bucket, collect winners +
+    /// candidates per shard (pass 2), exact-select the remainder.
+    /// Requires `0 < k < x.len()`.
+    fn finish(&mut self, x: &[f32], k: usize, out: &mut Vec<u32>) {
+        let j = x.len();
+        let shards = self.shards;
+        // merge histograms, then locate the boundary with the same
+        // walk select_topk_radix uses (shared fn = shared tie-break)
+        let mut counts = [0usize; 256];
+        for h in &self.hists {
+            for (c, &v) in counts.iter_mut().zip(h.iter()) {
+                *c += v as usize;
+            }
+        }
+        let (b, above) = boundary_bucket(&counts, k);
+        let need = k - above;
+        // u64 floor avoids overflow when the boundary bucket is 255
+        let hi_floor: u64 = ((b as u64) + 1) << 24;
+        // pass 2: per-shard winner/candidate collection (parallel)
+        {
+            let win_sh = SharedSlice::new(&mut self.winners);
+            let ci_sh = SharedSlice::new(&mut self.cand_idx);
+            let cv_sh = SharedSlice::new(&mut self.cand_val);
+            pool::global().run(shards, |s| {
+                let (lo, hi) = shard_range(j, shards, s);
+                // SAFETY: each shard touches only its own buffers.
+                let w = unsafe { &mut win_sh.range(s, s + 1)[0] };
+                let ci = unsafe { &mut ci_sh.range(s, s + 1)[0] };
+                let cv = unsafe { &mut cv_sh.range(s, s + 1)[0] };
+                w.clear();
+                ci.clear();
+                cv.clear();
+                for (off, &v) in x[lo..hi].iter().enumerate() {
+                    let m = mag_bits(v);
+                    if (m as u64) >= hi_floor {
+                        w.push((lo + off) as u32);
+                    } else if (m >> 24) as usize == b {
+                        ci.push((lo + off) as u32);
+                        cv.push(v);
+                    }
+                }
+            });
+        }
+        // merge in shard order == ascending global index order, so the
+        // exact select's lower-index tie-break matches the sort oracle
+        out.clear();
+        self.keys.clear();
+        for s in 0..shards {
+            out.extend_from_slice(&self.winners[s]);
+            for (&i, &v) in self.cand_idx[s].iter().zip(&self.cand_val[s]) {
+                let m = v.abs();
+                self.keys.push((if m.is_nan() { 0.0 } else { m }, i));
+            }
+        }
+        if need > 0 {
+            quickselect_keys(&mut self.keys, need);
+            out.extend(self.keys[..need].iter().map(|&(_, i)| i));
+        }
+        out.sort_unstable();
+        debug_assert_eq!(out.len(), k);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::topk::select_topk_sort;
+    use crate::util::check;
+
+    fn select(shards: usize, x: &[f32], k: usize) -> Vec<u32> {
+        let mut eng = SelectEngine::new(shards);
+        let mut out = Vec::new();
+        eng.select_into(x, k, &mut out);
+        out
+    }
+
+    #[test]
+    fn matches_sort_oracle_across_shard_counts() {
+        check::forall("engine_vs_sort", |rng, _| {
+            let n = check::arb_len(rng, 400);
+            let x = check::arb_vec(rng, n);
+            let k = rng.below(n + 2);
+            let want = select_topk_sort(&x, k);
+            for shards in [1usize, 2, 3, 8] {
+                assert_eq!(select(shards, &x, k), want, "n={n} k={k} shards={shards}");
+            }
+        });
+    }
+
+    #[test]
+    fn fused_fill_runs_even_for_degenerate_budgets() {
+        let mut eng = SelectEngine::new(3);
+        let mut score = vec![0.0f32; 100];
+        let mut out = vec![7u32];
+        eng.fused_select_into(&mut score, |lo, s| {
+            for (off, v) in s.iter_mut().enumerate() {
+                *v = (lo + off) as f32;
+            }
+        }, 0, &mut out);
+        assert!(out.is_empty());
+        assert_eq!(score[99], 99.0, "fill must run at k=0");
+        eng.fused_select_into(&mut score, |lo, s| {
+            for (off, v) in s.iter_mut().enumerate() {
+                *v = -((lo + off) as f32);
+            }
+        }, 200, &mut out);
+        assert_eq!(out.len(), 100);
+        assert_eq!(score[99], -99.0, "fill must run at k>=J");
+    }
+
+    #[test]
+    fn fused_matches_separate_fill_then_select() {
+        check::forall("engine_fused_vs_split", |rng, _| {
+            let n = check::arb_len(rng, 300);
+            let base = check::arb_vec(rng, n);
+            let k = rng.below(n) + 1;
+            // fused: score = 2*base + 1
+            let mut eng = SelectEngine::new(4);
+            let mut score = vec![0.0f32; n];
+            let mut out = Vec::new();
+            eng.fused_select_into(&mut score, |lo, s| {
+                for (off, v) in s.iter_mut().enumerate() {
+                    *v = 2.0 * base[lo + off] + 1.0;
+                }
+            }, k, &mut out);
+            // split reference
+            let reference: Vec<f32> = base.iter().map(|&v| 2.0 * v + 1.0).collect();
+            assert_eq!(score, reference);
+            assert_eq!(out, select_topk_sort(&reference, k));
+        });
+    }
+
+    #[test]
+    fn handles_infinities_nans_and_ties() {
+        let mut x = vec![1.0f32; 9000];
+        x[0] = f32::NAN;
+        x[7] = f32::INFINITY;
+        x[9] = f32::MAX;
+        x[4000] = -f32::MAX;
+        for shards in [1usize, 2, 8] {
+            assert_eq!(select(shards, &x, 1), vec![7]);
+            assert_eq!(select(shards, &x, 3), vec![7, 9, 4000]);
+            // ties: lowest indices of the 1.0 plateau win; NaN never selected
+            assert_eq!(select(shards, &x, 5), select_topk_sort(&x, 5));
+            assert_eq!(select(shards, &x, 5), vec![1, 2, 7, 9, 4000]);
+        }
+    }
+
+    #[test]
+    fn steady_state_reuses_buffers() {
+        let mut eng = SelectEngine::new(4);
+        let mut out = Vec::new();
+        let x: Vec<f32> = (0..50_000).map(|i| ((i * 2654435761u64 as usize) % 977) as f32).collect();
+        eng.select_into(&x, 50, &mut out);
+        let caps: Vec<usize> = eng.winners.iter().chain(&eng.cand_idx).map(Vec::capacity).collect();
+        let keys_cap = eng.keys.capacity();
+        let out_cap = out.capacity();
+        for _ in 0..5 {
+            eng.select_into(&x, 50, &mut out);
+        }
+        let caps2: Vec<usize> = eng.winners.iter().chain(&eng.cand_idx).map(Vec::capacity).collect();
+        assert_eq!(caps, caps2, "scratch must not be reallocated");
+        assert_eq!(keys_cap, eng.keys.capacity());
+        assert_eq!(out_cap, out.capacity());
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        assert!(select(4, &[], 3).is_empty());
+        assert_eq!(select(4, &[2.0], 1), vec![0]);
+        assert_eq!(select(8, &[1.0, -3.0, 2.0], 2), vec![1, 2]);
+        assert!(select(2, &[1.0, 2.0], 0).is_empty());
+        assert_eq!(select(2, &[1.0, 2.0], 9), vec![0, 1]);
+    }
+}

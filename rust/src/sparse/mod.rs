@@ -10,10 +10,15 @@
 //!   `ref.topk_mask` / `lax.top_k` on the python side.
 //! - [`approx`] — sampled-threshold approximate selection for very
 //!   large J (ablation 4 in DESIGN.md).
+//! - [`engine`] — the sharded zero-allocation engine: fused
+//!   score+select over the persistent thread pool, bit-identical to
+//!   the serial selectors for every shard count.
 
 pub mod approx;
+pub mod engine;
 pub mod topk;
 mod vec;
 
+pub use engine::SelectEngine;
 pub use topk::{select_topk, topk_threshold};
 pub use vec::SparseVec;

@@ -35,14 +35,35 @@ pub fn select_topk(x: &[f32], k: usize) -> Vec<u32> {
 
 /// Magnitude as order-preserving u32 bits (IEEE-754 non-negative floats
 /// compare like their bit patterns); NaN maps to 0 (never preferred).
+/// Shared with the sharded engine ([`crate::sparse::engine`]) so both
+/// paths bucket identically.
 #[inline]
-fn mag_bits(v: f32) -> u32 {
+pub(crate) fn mag_bits(v: f32) -> u32 {
     let m = v.abs();
     if m.is_nan() {
         0
     } else {
         m.to_bits()
     }
+}
+
+/// Walk 256-bucket magnitude counts from the top until the cumulative
+/// count reaches `k`: returns `(boundary_bucket, entries_above)` where
+/// `entries_above` counts buckets strictly above the boundary.  The
+/// single boundary rule shared by [`select_topk_radix`] and the
+/// sharded engine ([`crate::sparse::engine`]) — the bit-identity
+/// contract between the two paths hinges on this staying one function.
+pub(crate) fn boundary_bucket(counts: &[usize; 256], k: usize) -> (usize, usize) {
+    let mut above = 0usize;
+    let mut b = 255usize;
+    loop {
+        if above + counts[b] >= k || b == 0 {
+            break;
+        }
+        above += counts[b];
+        b -= 1;
+    }
+    (b, above)
 }
 
 /// Radix-bucket top-k for k << J: histogram the top byte of the
@@ -59,16 +80,7 @@ pub fn select_topk_radix(x: &[f32], k: usize) -> Vec<u32> {
     for &v in x {
         counts[(mag_bits(v) >> 24) as usize] += 1;
     }
-    // walk buckets from the top until cumulative >= k
-    let mut above = 0usize; // entries in buckets strictly above `b`
-    let mut b = 255usize;
-    loop {
-        if above + counts[b] >= k || b == 0 {
-            break;
-        }
-        above += counts[b];
-        b -= 1;
-    }
+    let (b, above) = boundary_bucket(&counts, k);
     let need = k - above; // how many to take from bucket b
     // pass 2: collect winners from above-buckets and candidates at b
     let mut out: Vec<u32> = Vec::with_capacity(k);
@@ -116,9 +128,26 @@ pub fn select_topk_quick(x: &[f32], k: usize) -> Vec<u32> {
             (if m.is_nan() { 0.0 } else { m }, i as u32)
         })
         .collect();
-    // Quickselect: after the loop, keys[..k] hold the k best entries
-    // (in arbitrary order).  Deterministic LCG pivots avoid adversarial
-    // quadratic behaviour on sorted inputs without an RNG dependency.
+    quickselect_keys(&mut keys, k);
+    let mut out: Vec<u32> = keys[..k].iter().map(|&(_, i)| i).collect();
+    out.sort_unstable();
+    out
+}
+
+/// Partially order `keys` so `keys[..k]` hold the k best `(mag, idx)`
+/// entries under [`better`] (in arbitrary order).  The exact-select
+/// kernel behind [`select_topk_quick`] and the boundary-bucket step of
+/// the sharded engine; both therefore share one tie-break definition.
+///
+/// Deterministic LCG pivots avoid adversarial quadratic behaviour on
+/// sorted inputs without an RNG dependency; the pivot sequence depends
+/// only on (len, k), never on addresses or threads.
+pub(crate) fn quickselect_keys(keys: &mut [(f32, u32)], k: usize) {
+    let j = keys.len();
+    debug_assert!(k <= j);
+    if k == 0 || k >= j {
+        return;
+    }
     let mut lo = 0usize;
     let mut hi = j;
     let mut state: u64 = 0x2545F4914F6CDD1D;
@@ -150,9 +179,6 @@ pub fn select_topk_quick(x: &[f32], k: usize) -> Vec<u32> {
             lo = p + 1;
         }
     }
-    let mut out: Vec<u32> = keys[..k].iter().map(|&(_, i)| i).collect();
-    out.sort_unstable();
-    out
 }
 
 /// The k-th largest magnitude (the selection threshold tau), used by

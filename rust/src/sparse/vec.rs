@@ -34,6 +34,27 @@ impl SparseVec {
         SparseVec::new(dense.len(), idx.to_vec(), val)
     }
 
+    /// [`Self::gather`] into an existing vector, recycling its buffers
+    /// (the hot-path variant used by `Sparsifier::step_into`: zero
+    /// allocation once `out` has reached steady-state capacity).  The
+    /// wire invariant stays ALWAYS-ON: every sparsifier round now
+    /// routes through here, and the O(k) check is negligible next to
+    /// the O(J) passes it guards — a selector bug must panic at the
+    /// source, not corrupt aggregation downstream.
+    pub fn gather_into(dense: &[f32], idx: &[u32], out: &mut SparseVec) {
+        for w in idx.windows(2) {
+            assert!(w[0] < w[1], "indices must be strictly increasing");
+        }
+        if let Some(&last) = idx.last() {
+            assert!((last as usize) < dense.len(), "index {last} out of dim {}", dense.len());
+        }
+        out.dim = dense.len();
+        out.idx.clear();
+        out.idx.extend_from_slice(idx);
+        out.val.clear();
+        out.val.extend(idx.iter().map(|&i| dense[i as usize]));
+    }
+
     /// Densify into a fresh vector.
     pub fn to_dense(&self) -> Vec<f32> {
         let mut out = vec![0.0; self.dim];

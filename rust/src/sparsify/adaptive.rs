@@ -9,7 +9,7 @@
 //! plateau, errors piling up) and shrinks when fresh gradients
 //! dominate.
 
-use crate::sparse::{select_topk, topk_threshold, SparseVec};
+use crate::sparse::{select_topk, SelectEngine, SparseVec};
 use crate::sparsify::{RoundCtx, Sparsifier};
 
 pub struct AdaK {
@@ -21,12 +21,25 @@ pub struct AdaK {
     acc: Vec<f32>,
     /// effective k of the last round (observability)
     pub last_k: usize,
+    /// sharded select (None = serial path)
+    engine: Option<SelectEngine>,
+    /// reusable selection buffer
+    sel: Vec<u32>,
 }
 
 impl AdaK {
     pub fn new(dim: usize, ratio: f32, k_min: usize, k_max: usize) -> Self {
         assert!(k_min >= 1 && k_min <= k_max && k_max <= dim);
-        AdaK { ratio, k_min, k_max, eps: vec![0.0; dim], acc: vec![0.0; dim], last_k: 0 }
+        AdaK {
+            ratio,
+            k_min,
+            k_max,
+            eps: vec![0.0; dim],
+            acc: vec![0.0; dim],
+            last_k: 0,
+            engine: None,
+            sel: Vec::new(),
+        }
     }
 }
 
@@ -35,7 +48,13 @@ impl Sparsifier for AdaK {
         "adak"
     }
 
-    fn step(&mut self, grad: &[f32], _ctx: &RoundCtx) -> SparseVec {
+    fn step(&mut self, grad: &[f32], ctx: &RoundCtx) -> SparseVec {
+        let mut out = SparseVec::zeros(grad.len());
+        self.step_into(grad, ctx, &mut out);
+        out
+    }
+
+    fn step_into(&mut self, grad: &[f32], _ctx: &RoundCtx, out: &mut SparseVec) {
         let gmax = grad.iter().fold(0.0f32, |m, g| m.max(g.abs()));
         for i in 0..grad.len() {
             self.acc[i] = self.eps[i] + grad[i];
@@ -46,26 +65,32 @@ impl Sparsifier for AdaK {
         let k = count.clamp(self.k_min, self.k_max);
         self.last_k = k;
         // exact top-k at the adapted budget (deterministic; avoids
-        // over-shooting k_max on heavy-tailed rounds)
-        let sel = if count > k || tau == 0.0 {
-            select_topk(&self.acc, k)
-        } else {
-            // threshold already yields <= k entries; still use top-k
-            // semantics so ties resolve identically
-            let t2 = topk_threshold(&self.acc, k);
-            let _ = t2;
-            select_topk(&self.acc, k)
-        };
-        let sv = SparseVec::gather(&self.acc, &sel);
+        // over-shooting k_max on heavy-tailed rounds); the budget is
+        // data-dependent, so the selection itself reuses the sharded
+        // engine when one is attached
+        match &mut self.engine {
+            Some(eng) => eng.select_into(&self.acc, k, &mut self.sel),
+            None => {
+                self.sel.clear();
+                let sel = select_topk(&self.acc, k);
+                self.sel.extend_from_slice(&sel);
+            }
+        }
+        SparseVec::gather_into(&self.acc, &self.sel, out);
         self.eps.copy_from_slice(&self.acc);
-        for &i in &sel {
+        for &i in &self.sel {
             self.eps[i as usize] = 0.0;
         }
-        sv
     }
 
-    fn peek_acc(&self, grad: &[f32]) -> Vec<f32> {
-        self.eps.iter().zip(grad).map(|(e, g)| e + g).collect()
+    fn set_shards(&mut self, shards: usize) {
+        self.engine = if shards > 1 { Some(SelectEngine::new(shards)) } else { None };
+    }
+
+    fn peek_acc_into(&self, grad: &[f32], out: &mut [f32]) {
+        for ((o, e), g) in out.iter_mut().zip(&self.eps).zip(grad) {
+            *o = e + g;
+        }
     }
 }
 

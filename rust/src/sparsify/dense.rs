@@ -5,11 +5,14 @@ use crate::sparse::SparseVec;
 use crate::sparsify::{RoundCtx, Sparsifier};
 
 #[derive(Default)]
-pub struct Dense;
+pub struct Dense {
+    /// reusable full index list
+    idx: Vec<u32>,
+}
 
 impl Dense {
     pub fn new() -> Self {
-        Dense
+        Dense::default()
     }
 }
 
@@ -18,9 +21,16 @@ impl Sparsifier for Dense {
         "dense"
     }
 
-    fn step(&mut self, grad: &[f32], _ctx: &RoundCtx) -> SparseVec {
-        let idx: Vec<u32> = (0..grad.len() as u32).collect();
-        SparseVec::new(grad.len(), idx, grad.to_vec())
+    fn step(&mut self, grad: &[f32], ctx: &RoundCtx) -> SparseVec {
+        let mut out = SparseVec::zeros(grad.len());
+        self.step_into(grad, ctx, &mut out);
+        out
+    }
+
+    fn step_into(&mut self, grad: &[f32], _ctx: &RoundCtx, out: &mut SparseVec) {
+        self.idx.clear();
+        self.idx.extend(0..grad.len() as u32);
+        SparseVec::gather_into(grad, &self.idx, out);
     }
 }
 

@@ -15,8 +15,9 @@
 //! learning-rate scaling; this implementation lets the benches test
 //! that claim directly.
 
-use crate::sparse::{select_topk, SparseVec};
+use crate::sparse::{select_topk, SelectEngine, SparseVec};
 use crate::sparsify::{RoundCtx, Sparsifier};
+use crate::util::pool::SharedSlice;
 
 pub struct Dgc {
     k: usize,
@@ -29,6 +30,10 @@ pub struct Dgc {
     /// accumulated velocity v_n (the DGC error store)
     acc: Vec<f32>,
     scratch: Vec<f32>,
+    /// sharded fused momentum-update+select (None = serial path)
+    engine: Option<SelectEngine>,
+    /// reusable selection buffer
+    sel: Vec<u32>,
 }
 
 impl Dgc {
@@ -42,6 +47,22 @@ impl Dgc {
             vel: vec![0.0; dim],
             acc: vec![0.0; dim],
             scratch: vec![0.0; dim],
+            engine: None,
+            sel: Vec::new(),
+        }
+    }
+
+    /// Clipping scale for this round's gradient (1.0 when disabled).
+    fn clip_scale(&self, grad: &[f32]) -> f32 {
+        if self.clip > 0.0 {
+            let norm = grad.iter().map(|g| g * g).sum::<f32>().sqrt();
+            if norm > self.clip {
+                self.clip / norm
+            } else {
+                1.0
+            }
+        } else {
+            1.0
         }
     }
 }
@@ -51,39 +72,69 @@ impl Sparsifier for Dgc {
         "dgc"
     }
 
-    fn step(&mut self, grad: &[f32], _ctx: &RoundCtx) -> SparseVec {
+    fn step(&mut self, grad: &[f32], ctx: &RoundCtx) -> SparseVec {
+        let mut out = SparseVec::zeros(grad.len());
+        self.step_into(grad, ctx, &mut out);
+        out
+    }
+
+    fn step_into(&mut self, grad: &[f32], _ctx: &RoundCtx, out: &mut SparseVec) {
         // local gradient clipping
-        let scale = if self.clip > 0.0 {
-            let norm = grad.iter().map(|g| g * g).sum::<f32>().sqrt();
-            if norm > self.clip {
-                self.clip / norm
-            } else {
-                1.0
+        let scale = self.clip_scale(grad);
+        let momentum = self.momentum;
+        match &mut self.engine {
+            // fused sharded path: momentum correction (u <- m*u + g,
+            // v <- v + u), scratch copy and |v| histogram in ONE
+            // parallel pass per shard.
+            Some(eng) => {
+                let vel_sh = SharedSlice::new(&mut self.vel);
+                let acc_sh = SharedSlice::new(&mut self.acc);
+                eng.fused_select_into(
+                    &mut self.scratch,
+                    |lo, scratch| {
+                        let hi = lo + scratch.len();
+                        // SAFETY: shard ranges are disjoint.
+                        let vel = unsafe { vel_sh.range(lo, hi) };
+                        let acc = unsafe { acc_sh.range(lo, hi) };
+                        for (i, s) in scratch.iter_mut().enumerate() {
+                            vel[i] = momentum * vel[i] + scale * grad[lo + i];
+                            acc[i] += vel[i];
+                            *s = acc[i];
+                        }
+                    },
+                    self.k,
+                    &mut self.sel,
+                );
             }
-        } else {
-            1.0
-        };
-        // momentum correction: u <- m*u + g ; v <- v + u
-        for i in 0..grad.len() {
-            self.vel[i] = self.momentum * self.vel[i] + scale * grad[i];
-            self.acc[i] += self.vel[i];
-            self.scratch[i] = self.acc[i];
+            None => {
+                // momentum correction: u <- m*u + g ; v <- v + u
+                for i in 0..grad.len() {
+                    self.vel[i] = momentum * self.vel[i] + scale * grad[i];
+                    self.acc[i] += self.vel[i];
+                    self.scratch[i] = self.acc[i];
+                }
+                self.sel.clear();
+                let sel = select_topk(&self.scratch, self.k);
+                self.sel.extend_from_slice(&sel);
+            }
         }
-        let sel = select_topk(&self.scratch, self.k);
-        let sv = SparseVec::gather(&self.acc, &sel);
+        SparseVec::gather_into(&self.acc, &self.sel, out);
         // momentum factor masking + error update at transmitted coords
-        for &i in &sel {
+        for &i in &self.sel {
             self.acc[i as usize] = 0.0;
             self.vel[i as usize] = 0.0;
         }
-        sv
     }
 
-    fn peek_acc(&self, grad: &[f32]) -> Vec<f32> {
+    fn set_shards(&mut self, shards: usize) {
+        self.engine = if shards > 1 { Some(SelectEngine::new(shards)) } else { None };
+    }
+
+    fn peek_acc_into(&self, grad: &[f32], out: &mut [f32]) {
         // accumulated view consistent with one hypothetical step
-        (0..grad.len())
-            .map(|i| self.acc[i] + self.momentum * self.vel[i] + grad[i])
-            .collect()
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = self.acc[i] + self.momentum * self.vel[i] + grad[i];
+        }
     }
 }
 

@@ -7,18 +7,22 @@
 //! of this scheme, so gtopk's curve is the ceiling REGTOP-k aims for.
 
 use crate::grad::ErrorFeedback;
-use crate::sparse::{select_topk, SparseVec};
+use crate::sparse::{select_topk, SelectEngine, SparseVec};
 use crate::sparsify::{RoundCtx, Sparsifier};
 
 pub struct GlobalTopK {
     k: usize,
     ef: ErrorFeedback,
+    /// sharded select over the genie channel (None = serial path)
+    engine: Option<SelectEngine>,
+    /// reusable selection buffer
+    sel: Vec<u32>,
 }
 
 impl GlobalTopK {
     pub fn new(dim: usize, k: usize) -> Self {
         assert!(k > 0, "gtopk needs k >= 1");
-        GlobalTopK { k, ef: ErrorFeedback::new(dim) }
+        GlobalTopK { k, ef: ErrorFeedback::new(dim), engine: None, sel: Vec::new() }
     }
 }
 
@@ -32,18 +36,33 @@ impl Sparsifier for GlobalTopK {
     }
 
     fn step(&mut self, grad: &[f32], ctx: &RoundCtx) -> SparseVec {
+        let mut out = SparseVec::zeros(grad.len());
+        self.step_into(grad, ctx, &mut out);
+        out
+    }
+
+    fn step_into(&mut self, grad: &[f32], ctx: &RoundCtx, out: &mut SparseVec) {
         self.ef.accumulate(grad);
         let genie = ctx
             .genie_acc
             .expect("GlobalTopK requires the genie side-channel (needs_genie)");
-        let sel = select_topk(genie, self.k);
-        self.ef.commit(&sel)
+        match &mut self.engine {
+            Some(eng) => eng.select_into(genie, self.k, &mut self.sel),
+            None => {
+                self.sel.clear();
+                let sel = select_topk(genie, self.k);
+                self.sel.extend_from_slice(&sel);
+            }
+        }
+        self.ef.commit_into(&self.sel, out);
     }
 
-    fn peek_acc(&self, grad: &[f32]) -> Vec<f32> {
-        let mut out = vec![0.0; grad.len()];
-        self.ef.accumulate_into(grad, &mut out);
-        out
+    fn set_shards(&mut self, shards: usize) {
+        self.engine = if shards > 1 { Some(SelectEngine::new(shards)) } else { None };
+    }
+
+    fn peek_acc_into(&self, grad: &[f32], out: &mut [f32]) {
+        self.ef.accumulate_into(grad, out);
     }
 }
 

@@ -60,6 +60,20 @@ pub trait Sparsifier: Send {
     /// update to transmit to the server.
     fn step(&mut self, grad: &[f32], ctx: &RoundCtx) -> SparseVec;
 
+    /// [`Self::step`] into a recycled [`SparseVec`] — the trainer's
+    /// hot path.  Implementations override this to reuse `out`'s
+    /// buffers (zero allocation at steady state); the default keeps
+    /// correctness for sparsifiers that have not opted in.
+    fn step_into(&mut self, grad: &[f32], ctx: &RoundCtx, out: &mut SparseVec) {
+        *out = self.step(grad, ctx);
+    }
+
+    /// Number of shards for the in-sparsifier kernels (score/select).
+    /// `<= 1` keeps the serial path; selectors with a sharded engine
+    /// override this.  The default is a no-op so stateless sparsifiers
+    /// need not care.
+    fn set_shards(&mut self, _shards: usize) {}
+
     /// Whether this sparsifier needs the genie side-channel (only the
     /// idealized global TOP-k does).
     fn needs_genie(&self) -> bool {
@@ -70,7 +84,14 @@ pub trait Sparsifier: Send {
     /// CURRENT round, needed by the trainer to build the genie channel.
     /// Sparsifiers without error feedback return the gradient itself.
     fn peek_acc(&self, grad: &[f32]) -> Vec<f32> {
-        grad.to_vec()
+        let mut out = vec![0.0; grad.len()];
+        self.peek_acc_into(grad, &mut out);
+        out
+    }
+
+    /// [`Self::peek_acc`] into a caller buffer (no allocation).
+    fn peek_acc_into(&self, grad: &[f32], out: &mut [f32]) {
+        out.copy_from_slice(grad);
     }
 }
 
@@ -87,9 +108,106 @@ pub enum SparsifierKind {
     AdaK { ratio: f32, k_min: usize, k_max: usize },
 }
 
+/// Full parameter set accepted by [`SparsifierKind::from_params`]:
+/// every tunable of every sparsifier, with the family defaults.  The
+/// CLI and JSON-config layers fill in whatever the user supplied and
+/// leave the rest at `Default`.
+#[derive(Clone, Debug)]
+pub struct SparsifierParams {
+    /// sparsity budget k (topk / regtopk / randk / gtopk / dgc)
+    pub k: usize,
+    /// REGTOP-k regularization temperature
+    pub mu: f32,
+    /// REGTOP-k never-sent prior Q
+    pub q: f32,
+    /// threshold tau
+    pub tau: f32,
+    /// randk stream seed
+    pub seed: u64,
+    /// DGC momentum-correction factor
+    pub momentum: f32,
+    /// DGC local l2 clipping threshold (0 disables)
+    pub clip: f32,
+    /// AdaK residual-vs-gradient trigger ratio
+    pub ratio: f32,
+    /// AdaK lower budget bound
+    pub k_min: usize,
+    /// AdaK upper budget bound (0 = use `k.max(1)`)
+    pub k_max: usize,
+}
+
+impl Default for SparsifierParams {
+    fn default() -> Self {
+        SparsifierParams {
+            k: 1,
+            mu: 0.5,
+            q: 1.0,
+            tau: 1.0,
+            seed: 0,
+            momentum: 0.9,
+            clip: 0.0,
+            ratio: 1.0,
+            k_min: 1,
+            k_max: 0,
+        }
+    }
+}
+
 impl SparsifierKind {
-    /// Parse "dense" | "topk" | "regtopk" | "randk" | "threshold" | "gtopk"
-    /// with parameters supplied separately (CLI layer does this).
+    /// Short name of this kind — the single source for the name <->
+    /// kind mapping (`from_params` accepts exactly these strings; the
+    /// config JSON and CLI summaries print them).
+    pub fn name(&self) -> &'static str {
+        match self {
+            SparsifierKind::Dense => "dense",
+            SparsifierKind::TopK { .. } => "topk",
+            SparsifierKind::RegTopK { .. } => "regtopk",
+            SparsifierKind::RandK { .. } => "randk",
+            SparsifierKind::Threshold { .. } => "threshold",
+            SparsifierKind::GlobalTopK { .. } => "gtopk",
+            SparsifierKind::Dgc { .. } => "dgc",
+            SparsifierKind::AdaK { .. } => "adak",
+        }
+    }
+
+    /// Decompose into the full parameter set (fields not used by this
+    /// kind keep their family defaults).  Inverse of
+    /// [`Self::from_params`] together with [`Self::name`]: override
+    /// layers start from these values and overlay what the user set.
+    pub fn to_params(&self) -> SparsifierParams {
+        let mut p = SparsifierParams::default();
+        match self {
+            SparsifierKind::Dense => {}
+            SparsifierKind::TopK { k } => p.k = *k,
+            SparsifierKind::RegTopK { k, mu, q } => {
+                p.k = *k;
+                p.mu = *mu;
+                p.q = *q;
+            }
+            SparsifierKind::RandK { k, seed } => {
+                p.k = *k;
+                p.seed = *seed;
+            }
+            SparsifierKind::Threshold { tau } => p.tau = *tau,
+            SparsifierKind::GlobalTopK { k } => p.k = *k,
+            SparsifierKind::Dgc { k, momentum, clip } => {
+                p.k = *k;
+                p.momentum = *momentum;
+                p.clip = *clip;
+            }
+            SparsifierKind::AdaK { ratio, k_min, k_max } => {
+                p.ratio = *ratio;
+                p.k_min = *k_min;
+                p.k_max = *k_max;
+            }
+        }
+        p
+    }
+
+    /// Parse "dense" | "topk" | "regtopk" | "randk" | "threshold" |
+    /// "gtopk" | "dgc" | "adak" with the legacy positional parameters;
+    /// dgc/adak take their family defaults.  Prefer
+    /// [`Self::from_params`], which exposes every tunable.
     pub fn from_name(
         name: &str,
         k: usize,
@@ -98,15 +216,28 @@ impl SparsifierKind {
         tau: f32,
         seed: u64,
     ) -> Option<Self> {
+        Self::from_params(
+            name,
+            &SparsifierParams { k, mu, q, tau, seed, ..SparsifierParams::default() },
+        )
+    }
+
+    /// Build a kind by name from the full parameter set (CLI + JSON
+    /// config entry point — nothing is hardcoded here).
+    pub fn from_params(name: &str, p: &SparsifierParams) -> Option<Self> {
         Some(match name {
             "dense" => SparsifierKind::Dense,
-            "topk" => SparsifierKind::TopK { k },
-            "regtopk" => SparsifierKind::RegTopK { k, mu, q },
-            "randk" => SparsifierKind::RandK { k, seed },
-            "threshold" => SparsifierKind::Threshold { tau },
-            "gtopk" => SparsifierKind::GlobalTopK { k },
-            "dgc" => SparsifierKind::Dgc { k, momentum: 0.9, clip: 0.0 },
-            "adak" => SparsifierKind::AdaK { ratio: 1.0, k_min: 1, k_max: k.max(1) },
+            "topk" => SparsifierKind::TopK { k: p.k },
+            "regtopk" => SparsifierKind::RegTopK { k: p.k, mu: p.mu, q: p.q },
+            "randk" => SparsifierKind::RandK { k: p.k, seed: p.seed },
+            "threshold" => SparsifierKind::Threshold { tau: p.tau },
+            "gtopk" => SparsifierKind::GlobalTopK { k: p.k },
+            "dgc" => SparsifierKind::Dgc { k: p.k, momentum: p.momentum, clip: p.clip },
+            "adak" => SparsifierKind::AdaK {
+                ratio: p.ratio,
+                k_min: p.k_min,
+                k_max: if p.k_max == 0 { p.k.max(1) } else { p.k_max },
+            },
             _ => return None,
         })
     }
@@ -182,6 +313,72 @@ mod tests {
             Some(SparsifierKind::RegTopK { k: 3, mu: 0.5, q: 1.0 })
         );
         assert_eq!(SparsifierKind::from_name("bogus", 1, 0.0, 0.0, 0.0, 0), None);
+    }
+
+    #[test]
+    fn from_name_keeps_family_defaults_for_dgc_adak() {
+        assert_eq!(
+            SparsifierKind::from_name("dgc", 5, 0.0, 0.0, 0.0, 0),
+            Some(SparsifierKind::Dgc { k: 5, momentum: 0.9, clip: 0.0 })
+        );
+        assert_eq!(
+            SparsifierKind::from_name("adak", 5, 0.0, 0.0, 0.0, 0),
+            Some(SparsifierKind::AdaK { ratio: 1.0, k_min: 1, k_max: 5 })
+        );
+    }
+
+    #[test]
+    fn from_params_exposes_every_tunable() {
+        let p = SparsifierParams {
+            k: 7,
+            momentum: 0.5,
+            clip: 2.0,
+            ratio: 0.8,
+            k_min: 3,
+            k_max: 40,
+            ..SparsifierParams::default()
+        };
+        assert_eq!(
+            SparsifierKind::from_params("dgc", &p),
+            Some(SparsifierKind::Dgc { k: 7, momentum: 0.5, clip: 2.0 })
+        );
+        assert_eq!(
+            SparsifierKind::from_params("adak", &p),
+            Some(SparsifierKind::AdaK { ratio: 0.8, k_min: 3, k_max: 40 })
+        );
+    }
+
+    #[test]
+    fn step_into_matches_step_for_every_kind() {
+        let kinds = [
+            SparsifierKind::Dense,
+            SparsifierKind::TopK { k: 3 },
+            SparsifierKind::RegTopK { k: 3, mu: 0.5, q: 1.0 },
+            SparsifierKind::RandK { k: 3, seed: 1 },
+            SparsifierKind::Threshold { tau: 0.4 },
+            SparsifierKind::Dgc { k: 3, momentum: 0.9, clip: 0.0 },
+            SparsifierKind::AdaK { ratio: 1.0, k_min: 1, k_max: 6 },
+        ];
+        let dim = 12;
+        for kind in &kinds {
+            let mut a = build(kind, dim, 0);
+            let mut b = build(kind, dim, 0);
+            let mut gagg = vec![0.0f32; dim];
+            let mut out = SparseVec::zeros(dim);
+            for t in 0..4 {
+                let g: Vec<f32> =
+                    (0..dim).map(|i| ((i * 7 + t * 13) % 11) as f32 - 5.0).collect();
+                let ctx = RoundCtx { t, gagg_prev: &gagg, omega: 0.5, genie_acc: None };
+                let want = a.step(&g, &ctx);
+                b.step_into(&g, &ctx, &mut out);
+                assert_eq!(want, out, "{kind:?} t={t}");
+                // peek parity as well
+                let mut peek = vec![0.0f32; dim];
+                a.peek_acc_into(&g, &mut peek);
+                assert_eq!(a.peek_acc(&g), peek, "{kind:?} t={t}");
+                gagg = want.to_dense();
+            }
+        }
     }
 
     #[test]

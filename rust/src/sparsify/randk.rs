@@ -11,12 +11,14 @@ pub struct RandK {
     k: usize,
     ef: ErrorFeedback,
     rng: Rng,
+    /// reusable selection buffer
+    sel: Vec<u32>,
 }
 
 impl RandK {
     pub fn new(dim: usize, k: usize, seed: u64) -> Self {
         assert!(k > 0, "randk needs k >= 1");
-        RandK { k, ef: ErrorFeedback::new(dim), rng: Rng::seed_from(seed) }
+        RandK { k, ef: ErrorFeedback::new(dim), rng: Rng::seed_from(seed), sel: Vec::new() }
     }
 }
 
@@ -25,19 +27,24 @@ impl Sparsifier for RandK {
         "randk"
     }
 
-    fn step(&mut self, grad: &[f32], _ctx: &RoundCtx) -> SparseVec {
-        self.ef.accumulate(grad);
-        let dim = grad.len();
-        let mut sel: Vec<usize> = self.rng.sample_indices(dim, self.k.min(dim));
-        sel.sort_unstable();
-        let sel: Vec<u32> = sel.into_iter().map(|i| i as u32).collect();
-        self.ef.commit(&sel)
+    fn step(&mut self, grad: &[f32], ctx: &RoundCtx) -> SparseVec {
+        let mut out = SparseVec::zeros(grad.len());
+        self.step_into(grad, ctx, &mut out);
+        out
     }
 
-    fn peek_acc(&self, grad: &[f32]) -> Vec<f32> {
-        let mut out = vec![0.0; grad.len()];
-        self.ef.accumulate_into(grad, &mut out);
-        out
+    fn step_into(&mut self, grad: &[f32], _ctx: &RoundCtx, out: &mut SparseVec) {
+        self.ef.accumulate(grad);
+        let dim = grad.len();
+        let mut sampled: Vec<usize> = self.rng.sample_indices(dim, self.k.min(dim));
+        sampled.sort_unstable();
+        self.sel.clear();
+        self.sel.extend(sampled.into_iter().map(|i| i as u32));
+        self.ef.commit_into(&self.sel, out);
+    }
+
+    fn peek_acc_into(&self, grad: &[f32], out: &mut [f32]) {
+        self.ef.accumulate_into(grad, out);
     }
 }
 

@@ -14,7 +14,7 @@
 //! rust/tests/hlo_cross_check.rs).
 
 use crate::grad::ErrorFeedback;
-use crate::sparse::{select_topk, SparseVec};
+use crate::sparse::{select_topk, SelectEngine, SparseVec};
 use crate::sparsify::{RoundCtx, Sparsifier};
 
 /// Must equal ref.DIV_EPS on the python side.
@@ -29,13 +29,25 @@ pub struct RegTopK {
     ef: ErrorFeedback,
     /// scratch buffer for scores (avoids per-round allocation)
     score: Vec<f32>,
+    /// sharded fused accumulate+score+select (None = serial path)
+    engine: Option<SelectEngine>,
+    /// reusable selection buffer
+    sel: Vec<u32>,
 }
 
 impl RegTopK {
     pub fn new(dim: usize, k: usize, mu: f32, q: f32) -> Self {
         assert!(k > 0, "regtopk needs k >= 1");
         assert!(mu > 0.0, "mu must be positive (mu -> 0 is TOP-k)");
-        RegTopK { k, mu, q, ef: ErrorFeedback::new(dim), score: vec![0.0; dim] }
+        RegTopK {
+            k,
+            mu,
+            q,
+            ef: ErrorFeedback::new(dim),
+            score: vec![0.0; dim],
+            engine: None,
+            sel: Vec::new(),
+        }
     }
 
     pub fn error(&self) -> &[f32] {
@@ -74,6 +86,42 @@ impl RegTopK {
             out[i] = acc[i] * reg;
         }
     }
+
+    /// One fused shard pass for the engine: a = eps + g (Alg. 1 line 4)
+    /// immediately followed by the eq. 16 score for the same entry —
+    /// bit-identical to `accumulate()` then [`Self::compute_score`]
+    /// (same operation order, same `DIV_EPS` guard, same saturation
+    /// shortcut), but with one loop and one memory traversal.
+    #[allow(clippy::too_many_arguments)]
+    fn fused_accumulate_score(
+        eps: &[f32],
+        grad: &[f32],
+        acc_out: &mut [f32],
+        acc_prev: &[f32],
+        gagg_prev: &[f32],
+        mask_prev: &[f32],
+        omega: f32,
+        mu: f32,
+        q: f32,
+        score_out: &mut [f32],
+    ) {
+        debug_assert_eq!(acc_out.len(), score_out.len());
+        let inv_mu = 1.0 / mu;
+        for i in 0..acc_out.len() {
+            let a = eps[i] + grad[i];
+            acc_out[i] = a;
+            let denom = omega * a;
+            let delta_sent = if denom.abs() > DIV_EPS {
+                (gagg_prev[i] - omega * acc_prev[i]) / denom
+            } else {
+                q
+            };
+            let delta = mask_prev[i] * delta_sent + q * (1.0 - mask_prev[i]);
+            let arg = (1.0 + delta).abs() * inv_mu;
+            let reg = if arg >= 9.2 { 1.0 } else { arg.tanh() };
+            score_out[i] = a * reg;
+        }
+    }
 }
 
 impl Sparsifier for RegTopK {
@@ -82,30 +130,96 @@ impl Sparsifier for RegTopK {
     }
 
     fn step(&mut self, grad: &[f32], ctx: &RoundCtx) -> SparseVec {
-        self.ef.accumulate(grad);
-        let sel = if !self.ef.warm {
-            // Alg. 1 line 1: plain TOP-k in the initial iteration.
-            select_topk(&self.ef.acc, self.k)
-        } else {
-            Self::compute_score(
-                &self.ef.acc,
-                &self.ef.acc_prev,
-                ctx.gagg_prev,
-                &self.ef.mask_prev,
-                ctx.omega,
-                self.mu,
-                self.q,
-                &mut self.score,
-            );
-            select_topk(&self.score, self.k)
-        };
-        self.ef.commit(&sel)
+        let mut out = SparseVec::zeros(grad.len());
+        self.step_into(grad, ctx, &mut out);
+        out
     }
 
-    fn peek_acc(&self, grad: &[f32]) -> Vec<f32> {
-        let mut out = vec![0.0; grad.len()];
-        self.ef.accumulate_into(grad, &mut out);
-        out
+    fn step_into(&mut self, grad: &[f32], ctx: &RoundCtx, out: &mut SparseVec) {
+        match &mut self.engine {
+            // fused sharded path: accumulate + score + histogram in ONE
+            // parallel pass, then one parallel collect pass — replacing
+            // the serial accumulate/score/select triple.
+            Some(eng) => {
+                let k = self.k;
+                if !self.ef.warm {
+                    // Alg. 1 line 1: plain TOP-k on a = eps + g.
+                    let eps = &self.ef.eps;
+                    eng.fused_select_into(
+                        &mut self.ef.acc,
+                        |lo, acc| {
+                            for ((a, e), g) in
+                                acc.iter_mut().zip(&eps[lo..lo + acc.len()]).zip(&grad[lo..])
+                            {
+                                *a = e + g;
+                            }
+                        },
+                        k,
+                        &mut self.sel,
+                    );
+                } else {
+                    let (mu, q) = (self.mu, self.q);
+                    let omega = ctx.omega;
+                    let gagg = ctx.gagg_prev;
+                    let acc_sh = crate::util::pool::SharedSlice::new(&mut self.ef.acc);
+                    let eps = &self.ef.eps;
+                    let acc_prev = &self.ef.acc_prev;
+                    let mask_prev = &self.ef.mask_prev;
+                    eng.fused_select_into(
+                        &mut self.score,
+                        |lo, score| {
+                            let hi = lo + score.len();
+                            // SAFETY: shard ranges are disjoint.
+                            let acc = unsafe { acc_sh.range(lo, hi) };
+                            Self::fused_accumulate_score(
+                                &eps[lo..hi],
+                                &grad[lo..hi],
+                                acc,
+                                &acc_prev[lo..hi],
+                                &gagg[lo..hi],
+                                &mask_prev[lo..hi],
+                                omega,
+                                mu,
+                                q,
+                                score,
+                            );
+                        },
+                        k,
+                        &mut self.sel,
+                    );
+                }
+            }
+            None => {
+                self.ef.accumulate(grad);
+                let sel = if !self.ef.warm {
+                    // Alg. 1 line 1: plain TOP-k in the initial iteration.
+                    select_topk(&self.ef.acc, self.k)
+                } else {
+                    Self::compute_score(
+                        &self.ef.acc,
+                        &self.ef.acc_prev,
+                        ctx.gagg_prev,
+                        &self.ef.mask_prev,
+                        ctx.omega,
+                        self.mu,
+                        self.q,
+                        &mut self.score,
+                    );
+                    select_topk(&self.score, self.k)
+                };
+                self.sel.clear();
+                self.sel.extend_from_slice(&sel);
+            }
+        }
+        self.ef.commit_into(&self.sel, out);
+    }
+
+    fn set_shards(&mut self, shards: usize) {
+        self.engine = if shards > 1 { Some(SelectEngine::new(shards)) } else { None };
+    }
+
+    fn peek_acc_into(&self, grad: &[f32], out: &mut [f32]) {
+        self.ef.accumulate_into(grad, out);
     }
 }
 

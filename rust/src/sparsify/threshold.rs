@@ -8,12 +8,14 @@ use crate::sparsify::{RoundCtx, Sparsifier};
 pub struct Threshold {
     tau: f32,
     ef: ErrorFeedback,
+    /// reusable selection buffer
+    sel: Vec<u32>,
 }
 
 impl Threshold {
     pub fn new(dim: usize, tau: f32) -> Self {
         assert!(tau > 0.0, "threshold needs tau > 0");
-        Threshold { tau, ef: ErrorFeedback::new(dim) }
+        Threshold { tau, ef: ErrorFeedback::new(dim), sel: Vec::new() }
     }
 }
 
@@ -22,23 +24,29 @@ impl Sparsifier for Threshold {
         "threshold"
     }
 
-    fn step(&mut self, grad: &[f32], _ctx: &RoundCtx) -> SparseVec {
-        self.ef.accumulate(grad);
-        let sel: Vec<u32> = self
-            .ef
-            .acc
-            .iter()
-            .enumerate()
-            .filter(|(_, v)| v.abs() >= self.tau)
-            .map(|(i, _)| i as u32)
-            .collect();
-        self.ef.commit(&sel)
+    fn step(&mut self, grad: &[f32], ctx: &RoundCtx) -> SparseVec {
+        let mut out = SparseVec::zeros(grad.len());
+        self.step_into(grad, ctx, &mut out);
+        out
     }
 
-    fn peek_acc(&self, grad: &[f32]) -> Vec<f32> {
-        let mut out = vec![0.0; grad.len()];
-        self.ef.accumulate_into(grad, &mut out);
-        out
+    fn step_into(&mut self, grad: &[f32], _ctx: &RoundCtx, out: &mut SparseVec) {
+        self.ef.accumulate(grad);
+        let tau = self.tau;
+        self.sel.clear();
+        self.sel.extend(
+            self.ef
+                .acc
+                .iter()
+                .enumerate()
+                .filter(|(_, v)| v.abs() >= tau)
+                .map(|(i, _)| i as u32),
+        );
+        self.ef.commit_into(&self.sel, out);
+    }
+
+    fn peek_acc_into(&self, grad: &[f32], out: &mut [f32]) {
+        self.ef.accumulate_into(grad, out);
     }
 }
 

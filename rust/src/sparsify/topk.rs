@@ -2,18 +2,22 @@
 //! the contribution is measured against.
 
 use crate::grad::ErrorFeedback;
-use crate::sparse::{select_topk, SparseVec};
+use crate::sparse::{select_topk, SelectEngine, SparseVec};
 use crate::sparsify::{RoundCtx, Sparsifier};
 
 pub struct TopK {
     k: usize,
     ef: ErrorFeedback,
+    /// sharded fused accumulate+select (None = serial path)
+    engine: Option<SelectEngine>,
+    /// reusable selection buffer
+    sel: Vec<u32>,
 }
 
 impl TopK {
     pub fn new(dim: usize, k: usize) -> Self {
         assert!(k > 0, "topk needs k >= 1");
-        TopK { k, ef: ErrorFeedback::new(dim) }
+        TopK { k, ef: ErrorFeedback::new(dim), engine: None, sel: Vec::new() }
     }
 
     pub fn error(&self) -> &[f32] {
@@ -36,16 +40,47 @@ impl Sparsifier for TopK {
         "topk"
     }
 
-    fn step(&mut self, grad: &[f32], _ctx: &RoundCtx) -> SparseVec {
-        self.ef.accumulate(grad);
-        let sel = select_topk(&self.ef.acc, self.k);
-        self.ef.commit(&sel)
+    fn step(&mut self, grad: &[f32], ctx: &RoundCtx) -> SparseVec {
+        let mut out = SparseVec::zeros(grad.len());
+        self.step_into(grad, ctx, &mut out);
+        out
     }
 
-    fn peek_acc(&self, grad: &[f32]) -> Vec<f32> {
-        let mut out = vec![0.0; grad.len()];
-        self.ef.accumulate_into(grad, &mut out);
-        out
+    fn step_into(&mut self, grad: &[f32], _ctx: &RoundCtx, out: &mut SparseVec) {
+        match &mut self.engine {
+            // fused path: one parallel pass computes a = eps + g AND
+            // histograms |a|; selection needs no extra full scan
+            Some(eng) => {
+                let eps = &self.ef.eps;
+                eng.fused_select_into(
+                    &mut self.ef.acc,
+                    |lo, acc| {
+                        for ((a, e), g) in
+                            acc.iter_mut().zip(&eps[lo..lo + acc.len()]).zip(&grad[lo..])
+                        {
+                            *a = e + g;
+                        }
+                    },
+                    self.k,
+                    &mut self.sel,
+                );
+            }
+            None => {
+                self.ef.accumulate(grad);
+                self.sel.clear();
+                let sel = select_topk(&self.ef.acc, self.k);
+                self.sel.extend_from_slice(&sel);
+            }
+        }
+        self.ef.commit_into(&self.sel, out);
+    }
+
+    fn set_shards(&mut self, shards: usize) {
+        self.engine = if shards > 1 { Some(SelectEngine::new(shards)) } else { None };
+    }
+
+    fn peek_acc_into(&self, grad: &[f32], out: &mut [f32]) {
+        self.ef.accumulate_into(grad, out);
     }
 }
 

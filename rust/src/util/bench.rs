@@ -6,9 +6,20 @@
 //!
 //!   bench <name> ... median 12.34 us  (mad 0.56 us, n=64, 8.1 Melem/s)
 //!
-//! which the EXPERIMENTS.md tables are built from.
+//! which the EXPERIMENTS.md tables are built from.  In addition,
+//! [`Bench::write_json`] emits machine-readable results (name ->
+//! median s/iter + throughput) so the perf trajectory is trackable
+//! across PRs — the bench targets merge into `BENCH_PR1.json` (or
+//! `$BENCH_JSON`) at the repo root.
+//!
+//! Env knobs: `BENCH_BUDGET_MS` overrides the per-target time budget
+//! (the `scripts/verify.sh` smoke run uses a small one).
 
+use std::collections::BTreeMap;
+use std::path::Path;
 use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
 
 /// Prevent the optimizer from eliding a computation.
 #[inline]
@@ -17,13 +28,22 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// One recorded measurement.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub median_s: f64,
+    /// elements per iteration (0 = throughput not reported)
+    pub elems: usize,
+}
+
 /// Benchmark runner with a per-target time budget.
 pub struct Bench {
     /// max wall-clock budget per benchmark
     pub budget: Duration,
     /// minimum sample count
     pub min_samples: usize,
-    results: Vec<(String, f64)>,
+    results: Vec<BenchResult>,
 }
 
 impl Default for Bench {
@@ -36,7 +56,11 @@ impl Bench {
     pub fn new() -> Self {
         // Keep default budgets modest: the bench suite covers many
         // (sparsifier, J, k) points and must finish in minutes.
-        Bench { budget: Duration::from_millis(700), min_samples: 10, results: Vec::new() }
+        let ms = std::env::var("BENCH_BUDGET_MS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(700u64);
+        Bench { budget: Duration::from_millis(ms), min_samples: 10, results: Vec::new() }
     }
 
     pub fn with_budget(budget: Duration) -> Self {
@@ -45,7 +69,24 @@ impl Bench {
 
     /// Time `f`, which should perform ONE logical iteration per call.
     /// Returns the median seconds/iter and prints a summary line.
-    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> f64 {
+    pub fn run<F: FnMut()>(&mut self, name: &str, f: F) -> f64 {
+        self.run_elems(name, 0, f)
+    }
+
+    /// Like `run` but also reports elements/second for `elems` per iter.
+    pub fn run_throughput<F: FnMut()>(&mut self, name: &str, elems: usize, f: F) -> f64 {
+        let median = self.run_elems(name, elems, f);
+        if median > 0.0 && elems > 0 {
+            println!(
+                "      {:<44} throughput {:.2} Melem/s",
+                name,
+                elems as f64 / median / 1e6
+            );
+        }
+        median
+    }
+
+    fn run_elems<F: FnMut()>(&mut self, name: &str, elems: usize, mut f: F) -> f64 {
         // warmup: at least 3 calls or 10% of budget
         let warm_deadline = Instant::now() + self.budget / 10;
         for _ in 0..3 {
@@ -78,26 +119,47 @@ impl Bench {
             fmt_time(mad),
             samples.len()
         );
-        self.results.push((name.to_string(), median));
+        self.results.push(BenchResult { name: name.to_string(), median_s: median, elems });
         median
     }
 
-    /// Like `run` but also reports elements/second for `elems` per iter.
-    pub fn run_throughput<F: FnMut()>(&mut self, name: &str, elems: usize, f: F) -> f64 {
-        let median = self.run(name, f);
-        if median > 0.0 {
-            println!(
-                "      {:<44} throughput {:.2} Melem/s",
-                name,
-                elems as f64 / median / 1e6
-            );
-        }
-        median
-    }
-
-    /// All recorded (name, median_secs) pairs.
-    pub fn results(&self) -> &[(String, f64)] {
+    /// All recorded results.
+    pub fn results(&self) -> &[BenchResult] {
         &self.results
+    }
+
+    /// Merge this run's results into a JSON file keyed by benchmark
+    /// name: `{name: {"median_s": .., "melem_per_s": ..}}`.  Existing
+    /// entries for other benchmarks are preserved, so several bench
+    /// targets can share one trajectory file (BENCH_PR1.json).
+    pub fn write_json(&self, path: &Path) -> std::io::Result<()> {
+        let mut map: BTreeMap<String, Json> = std::fs::read_to_string(path)
+            .ok()
+            .and_then(|text| Json::parse(&text).ok())
+            .and_then(|j| j.as_obj().cloned())
+            .unwrap_or_default();
+        for r in &self.results {
+            let mut entry = BTreeMap::new();
+            entry.insert("median_s".to_string(), Json::Num(r.median_s));
+            if r.elems > 0 && r.median_s > 0.0 {
+                entry.insert(
+                    "melem_per_s".to_string(),
+                    Json::Num(r.elems as f64 / r.median_s / 1e6),
+                );
+            }
+            map.insert(r.name.clone(), Json::Obj(entry));
+        }
+        std::fs::write(path, Json::Obj(map).dump())
+    }
+
+    /// Write to `$BENCH_JSON` (default `BENCH_PR1.json`) and print the
+    /// destination — the standard epilogue of every bench target.
+    pub fn write_json_default(&self) {
+        let path = std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_PR1.json".to_string());
+        match self.write_json(Path::new(&path)) {
+            Ok(()) => println!("# wrote {} results to {path}", self.results.len()),
+            Err(e) => eprintln!("# could not write {path}: {e}"),
+        }
     }
 }
 
@@ -133,5 +195,33 @@ mod tests {
         assert!(fmt_time(2e-3).ends_with("ms"));
         assert!(fmt_time(2e-6).ends_with("us"));
         assert!(fmt_time(2e-9).ends_with("ns"));
+    }
+
+    #[test]
+    fn json_results_merge_across_runs() {
+        let dir = std::env::temp_dir().join("regtopk_bench_json_test");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("bench.json");
+        let _ = std::fs::remove_file(&path);
+
+        let mut a = Bench::with_budget(Duration::from_millis(10));
+        a.run_throughput("alpha", 1000, || {
+            black_box((0..50).sum::<u64>());
+        });
+        a.write_json(&path).unwrap();
+
+        let mut b = Bench::with_budget(Duration::from_millis(10));
+        b.run("beta", || {
+            black_box((0..50).sum::<u64>());
+        });
+        b.write_json(&path).unwrap();
+
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let obj = j.as_obj().unwrap();
+        assert!(obj.contains_key("alpha"), "first run preserved");
+        assert!(obj.contains_key("beta"));
+        assert!(obj["alpha"].get("median_s").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(obj["alpha"].get("melem_per_s").and_then(Json::as_f64).unwrap() > 0.0);
+        let _ = std::fs::remove_file(&path);
     }
 }

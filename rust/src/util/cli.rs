@@ -92,10 +92,12 @@ impl Cli {
         }
         // fill defaults / check required
         let mut out = BTreeMap::new();
+        let mut explicit = std::collections::BTreeSet::new();
         for f in &self.flags {
             match self.values.get(f.name) {
                 Some(v) => {
                     out.insert(f.name, v.clone());
+                    explicit.insert(f.name.to_string());
                 }
                 None => match &f.default {
                     Some(d) => {
@@ -105,7 +107,7 @@ impl Cli {
                 },
             }
         }
-        Ok(Parsed { values: out, positional: self.positional })
+        Ok(Parsed { values: out, explicit, positional: self.positional })
     }
 
     /// Parse the process args (skipping argv[0]); print help and exit on error.
@@ -125,6 +127,8 @@ impl Cli {
 #[derive(Debug)]
 pub struct Parsed {
     values: BTreeMap<&'static str, String>,
+    /// flags the user actually passed (vs. filled-in defaults)
+    explicit: std::collections::BTreeSet<String>,
     pub positional: Vec<String>,
 }
 
@@ -133,6 +137,13 @@ impl Parsed {
         self.values
             .get(name)
             .unwrap_or_else(|| panic!("flag --{name} was not declared"))
+    }
+
+    /// Whether the user passed `--name` explicitly (false = the value
+    /// came from the declared default).  Lets override-style commands
+    /// distinguish "tweak this one parameter" from "leave config as is".
+    pub fn provided(&self, name: &str) -> bool {
+        self.explicit.contains(name)
     }
     pub fn get_usize(&self, name: &str) -> usize {
         self.get(name)
@@ -186,6 +197,8 @@ mod tests {
         assert_eq!(p.get_usize("iters"), 5);
         assert_eq!(p.get_f64("eta"), 0.01);
         assert!(!p.get_bool("verbose"));
+        assert!(p.provided("iters"));
+        assert!(!p.provided("eta"), "default fill is not 'provided'");
     }
 
     #[test]

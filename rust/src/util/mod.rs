@@ -16,9 +16,13 @@
 //!               offline).
 //! - [`check`]  — seeded property-test driver (shrinking-free
 //!               proptest-alike) used by the invariant suites.
+//! - [`pool`]   — persistent sharded thread pool (+ deterministic
+//!               shard->range mapping) shared by the trainer fan-out
+//!               and the sparsification engine.
 
 pub mod bench;
 pub mod check;
 pub mod cli;
 pub mod json;
+pub mod pool;
 pub mod rng;

@@ -1,0 +1,447 @@
+//! Persistent sharded thread pool — the execution substrate of the
+//! sparsification engine (EXPERIMENTS.md §Perf).
+//!
+//! Design goals, in order:
+//!
+//! 1. **Determinism.** Work is split into *indexed tasks*; which OS
+//!    thread runs a task never affects results because every consumer
+//!    writes only its own disjoint output (see [`SharedSlice`]) and
+//!    merges happen in task order on the caller.  [`shard_range`] is
+//!    the single source of truth for the shard -> index-range mapping.
+//! 2. **Zero per-round setup.** Threads are spawned once and parked on
+//!    a condvar between jobs — no `thread::spawn` in any hot path
+//!    (the seed trainer spawned N threads per round).
+//! 3. **std-only.** No crossbeam/rayon; one `Mutex<State>` + two
+//!    condvars.  Work-stealing is deliberately absent: shards are
+//!    claimed from a shared counter, which is enough because shard
+//!    costs are uniform (contiguous equal ranges of the same kernel).
+//!
+//! The caller of [`ThreadPool::run`] participates in execution, so a
+//! pool with `t` worker threads uses `t + 1` executors.  Nested `run`
+//! calls (a pooled task itself calling `run`) execute inline serially
+//! instead of deadlocking on the job slot.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Deterministic contiguous shard -> range mapping: shard `s` of
+/// `shards` over `len` elements covers `[s*len/shards, (s+1)*len/shards)`.
+/// Ranges are disjoint, cover `0..len`, and differ in size by at most 1.
+#[inline]
+pub fn shard_range(len: usize, shards: usize, s: usize) -> (usize, usize) {
+    debug_assert!(s < shards);
+    (s * len / shards, (s + 1) * len / shards)
+}
+
+/// Pointer-with-length wrapper that lets pooled tasks write **disjoint**
+/// ranges of one slice in parallel.  The type is `Copy` so a `Fn`
+/// closure can hand it to every shard.
+///
+/// Safety contract (bounds are checked in debug builds): concurrent
+/// [`Self::range`] calls must use non-overlapping ranges, and the
+/// backing slice must outlive the pool job — which
+/// [`ThreadPool::run`] guarantees by blocking until every task is done.
+pub struct SharedSlice<T> {
+    ptr: *mut T,
+    len: usize,
+}
+
+impl<T> Clone for SharedSlice<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SharedSlice<T> {}
+
+unsafe impl<T: Send> Send for SharedSlice<T> {}
+unsafe impl<T: Send> Sync for SharedSlice<T> {}
+
+impl<T> SharedSlice<T> {
+    pub fn new(slice: &mut [T]) -> Self {
+        SharedSlice { ptr: slice.as_mut_ptr(), len: slice.len() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Mutable view of `[lo, hi)`.
+    ///
+    /// # Safety
+    /// Concurrent callers must use disjoint ranges; the backing slice
+    /// must be live for the duration of the borrow.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn range(&self, lo: usize, hi: usize) -> &mut [T] {
+        debug_assert!(lo <= hi && hi <= self.len, "range {lo}..{hi} of {}", self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(lo), hi - lo)
+    }
+}
+
+/// Type-erased borrowed task: a `'static`-laundered pointer to the
+/// caller's closure.  Sound because `run` blocks until every claimed
+/// index completes, so the closure strictly outlives all dereferences
+/// (a claim holds the job's `remaining` count up, and the job owner
+/// cannot return while `remaining > 0`).
+struct RawTask(*const (dyn Fn(usize) + Sync));
+unsafe impl Send for RawTask {}
+
+struct Job {
+    task: RawTask,
+    n: usize,
+    next: usize,
+    remaining: usize,
+    panic: Option<Box<dyn std::any::Any + Send>>,
+}
+
+struct State {
+    job: Option<Job>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+}
+
+impl Shared {
+    /// Poison-tolerant state lock: a panic that unwinds through `run`
+    /// (task panics are re-raised there while the `run_lock` guard is
+    /// live) must not brick the pool for subsequent jobs.
+    fn lock(&self) -> std::sync::MutexGuard<'_, State> {
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+}
+
+/// The persistent pool.  One global instance (see [`global`]) is shared
+/// by the trainer's worker fan-out and every in-sparsifier kernel.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    /// serializes concurrent `run` calls (the pool runs one job at a time)
+    run_lock: Mutex<()>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+thread_local! {
+    /// Set while this thread executes a pooled task; nested `run` calls
+    /// detect it and execute inline (serially) instead of deadlocking.
+    static IN_POOL_TASK: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+impl ThreadPool {
+    /// Spawn a pool with `threads` worker threads.  `threads == 0` is
+    /// valid: every job then runs inline on the caller.
+    pub fn new(threads: usize) -> Self {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State { job: None, shutdown: false }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let handles = (0..threads)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("regtopk-pool-{i}"))
+                    .spawn(move || worker_loop(&sh))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool { shared, run_lock: Mutex::new(()), handles }
+    }
+
+    /// Total executors a job can use (workers + the participating caller).
+    pub fn parallelism(&self) -> usize {
+        self.handles.len() + 1
+    }
+
+    /// Run `f(0), f(1), ..., f(tasks-1)` across the pool and block until
+    /// all complete.  Which thread runs which index is unspecified;
+    /// callers must make outputs index-deterministic (disjoint writes
+    /// merged in index order).  Panics in any task are re-raised here
+    /// after the whole job has drained.
+    pub fn run<F: Fn(usize) + Sync>(&self, tasks: usize, f: F) {
+        if tasks == 0 {
+            return;
+        }
+        // inline paths: trivial job, no workers, or nested call from a
+        // pooled task (running inline keeps progress + avoids deadlock)
+        if tasks == 1 || self.handles.is_empty() || IN_POOL_TASK.with(|c| c.get()) {
+            for i in 0..tasks {
+                f(i);
+            }
+            return;
+        }
+        let _serial = self.run_lock.lock().unwrap_or_else(|p| p.into_inner());
+        let obj: &(dyn Fn(usize) + Sync) = &f;
+        // SAFETY: lifetime laundering only — this function does not
+        // return until `remaining == 0`, so `f` outlives every use.
+        let obj: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(obj) };
+        {
+            let mut st = self.shared.lock();
+            debug_assert!(st.job.is_none(), "run_lock must serialize jobs");
+            st.job = Some(Job {
+                task: RawTask(obj as *const (dyn Fn(usize) + Sync)),
+                n: tasks,
+                next: 0,
+                remaining: tasks,
+                panic: None,
+            });
+            self.shared.work_cv.notify_all();
+        }
+        // caller participates in execution
+        drain_current_job(&self.shared);
+        // wait for stragglers, then collect the finished job
+        let job = {
+            let mut st = self.shared.lock();
+            while st.job.as_ref().map(|j| j.remaining > 0).unwrap_or(false) {
+                st = self
+                    .shared
+                    .done_cv
+                    .wait(st)
+                    .unwrap_or_else(|p| p.into_inner());
+            }
+            st.job.take().expect("job stays in the slot until its owner takes it")
+        };
+        if let Some(payload) = job.panic {
+            std::panic::resume_unwind(payload);
+        }
+    }
+
+    /// Run `f(i, &mut items[i])` for every item in parallel and return
+    /// the per-item results in index order.  The disjoint `&mut`
+    /// hand-out is what the seed's per-round `thread::scope` fan-out
+    /// did with scoped spawns, minus the per-round thread creation.
+    pub fn map_mut<T, R, F>(&self, items: &mut [T], f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(usize, &mut T) -> R + Sync,
+    {
+        let n = items.len();
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        {
+            let items_sh = SharedSlice::new(items);
+            let out_sh = SharedSlice::new(&mut out);
+            self.run(n, |i| {
+                // SAFETY: each index is claimed exactly once, so the
+                // item and slot borrows are disjoint across tasks.
+                let item = unsafe { &mut items_sh.range(i, i + 1)[0] };
+                let slot = unsafe { &mut out_sh.range(i, i + 1)[0] };
+                *slot = Some(f(i, item));
+            });
+        }
+        out.into_iter()
+            .map(|r| r.expect("pool job completed every index"))
+            .collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.lock();
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Claim-and-execute loop shared by pool workers and the participating
+/// caller: repeatedly claim the next unclaimed index of the job in the
+/// slot and run it; return when nothing is claimable.  The task pointer
+/// is read under the same lock as the claim, so it always belongs to
+/// the job the index was claimed from.
+fn drain_current_job(shared: &Shared) {
+    loop {
+        let (i, task_ptr) = {
+            let mut st = shared.lock();
+            match st.job.as_mut() {
+                Some(job) if job.next < job.n => {
+                    let i = job.next;
+                    job.next += 1;
+                    (i, job.task.0)
+                }
+                _ => return,
+            }
+        };
+        // SAFETY: our claim keeps `remaining > 0`, so the job owner is
+        // still blocked in `run` and the closure is alive.
+        let f: &(dyn Fn(usize) + Sync) = unsafe { &*task_ptr };
+        IN_POOL_TASK.with(|c| c.set(true));
+        let result = catch_unwind(AssertUnwindSafe(|| f(i)));
+        IN_POOL_TASK.with(|c| c.set(false));
+        let mut st = shared.lock();
+        let job = st.job.as_mut().expect("job lives until its owner takes it");
+        job.remaining -= 1;
+        if let Err(payload) = result {
+            if job.panic.is_none() {
+                job.panic = Some(payload);
+            }
+        }
+        if job.remaining == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        // park until there is claimable work (or shutdown)
+        {
+            let mut st = shared.lock();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                match st.job.as_ref() {
+                    Some(job) if job.next < job.n => break,
+                    _ => st = shared.work_cv.wait(st).unwrap_or_else(|p| p.into_inner()),
+                }
+            }
+        }
+        drain_current_job(shared);
+    }
+}
+
+static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
+
+/// The process-wide pool, sized to the machine (capped at 16 executors)
+/// and created on first use.  Shared by the trainer fan-out and every
+/// sparsifier engine so round-over-round there is exactly one set of
+/// threads, all parked when idle.
+pub fn global() -> &'static ThreadPool {
+    GLOBAL.get_or_init(|| {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        // caller participates, so spawn one fewer worker thread
+        ThreadPool::new(n.clamp(1, 16) - 1)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn shard_ranges_partition_exactly() {
+        for &(len, shards) in &[(10usize, 3usize), (7, 7), (5, 8), (1_000_003, 16), (0, 4), (1, 1)] {
+            let mut covered = 0usize;
+            let mut prev_hi = 0usize;
+            for s in 0..shards {
+                let (lo, hi) = shard_range(len, shards, s);
+                assert_eq!(lo, prev_hi, "len={len} shards={shards} s={s}");
+                assert!(hi >= lo && hi <= len);
+                covered += hi - lo;
+                prev_hi = hi;
+            }
+            assert_eq!(covered, len);
+            assert_eq!(prev_hi, len);
+        }
+    }
+
+    #[test]
+    fn run_executes_every_index_once() {
+        let pool = ThreadPool::new(3);
+        let counts: Vec<AtomicUsize> = (0..257).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(257, |i| {
+            counts[i].fetch_add(1, Ordering::SeqCst);
+        });
+        for (i, c) in counts.iter().enumerate() {
+            assert_eq!(c.load(Ordering::SeqCst), 1, "index {i}");
+        }
+    }
+
+    #[test]
+    fn run_reusable_across_jobs() {
+        let pool = ThreadPool::new(2);
+        for round in 0..50 {
+            let total = AtomicUsize::new(0);
+            pool.run(8, |i| {
+                total.fetch_add(i + round, Ordering::SeqCst);
+            });
+            assert_eq!(total.load(Ordering::SeqCst), 28 + 8 * round);
+        }
+    }
+
+    #[test]
+    fn map_mut_gives_disjoint_mut_access() {
+        let pool = ThreadPool::new(3);
+        let mut items: Vec<usize> = (0..64).collect();
+        let doubled = pool.map_mut(&mut items, |i, v| {
+            *v *= 2;
+            *v + i
+        });
+        for i in 0..64 {
+            assert_eq!(items[i], 2 * i);
+            assert_eq!(doubled[i], 3 * i);
+        }
+    }
+
+    #[test]
+    fn nested_run_executes_inline() {
+        let pool = ThreadPool::new(2);
+        let total = AtomicUsize::new(0);
+        pool.run(4, |_| {
+            // nested call from inside a pooled task must not deadlock
+            global().run(4, |j| {
+                total.fetch_add(j + 1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 4 * 10);
+    }
+
+    #[test]
+    fn zero_workers_runs_inline() {
+        let pool = ThreadPool::new(0);
+        let total = AtomicUsize::new(0);
+        pool.run(5, |i| {
+            total.fetch_add(i, Ordering::SeqCst);
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn panics_propagate_after_drain() {
+        let pool = ThreadPool::new(2);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(8, |i| {
+                if i == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err());
+        // pool still usable after a panicked job
+        let total = AtomicUsize::new(0);
+        pool.run(4, |i| {
+            total.fetch_add(i, Ordering::SeqCst);
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 6);
+    }
+
+    #[test]
+    fn shared_slice_disjoint_parallel_writes() {
+        let pool = ThreadPool::new(3);
+        let mut v = vec![0u64; 100_000];
+        {
+            let sh = SharedSlice::new(&mut v);
+            pool.run(8, |s| {
+                let (lo, hi) = shard_range(sh.len(), 8, s);
+                let part = unsafe { sh.range(lo, hi) };
+                for (off, x) in part.iter_mut().enumerate() {
+                    *x = (lo + off) as u64;
+                }
+            });
+        }
+        for (i, &x) in v.iter().enumerate() {
+            assert_eq!(x, i as u64);
+        }
+    }
+}

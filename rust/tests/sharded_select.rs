@@ -1,0 +1,145 @@
+//! Contract of the sharded sparsification engine (PR 1 tentpole):
+//!
+//! 1. the fused sharded select matches `select_topk_sort` bit-for-bit —
+//!    indices AND tie-breaks — for every shard count;
+//! 2. a full RegTop-k trajectory is bit-identical between shards=N and
+//!    shards=1 (and the seed serial path), so the shard count is purely
+//!    a performance knob;
+//! 3. the trainer produces bit-identical models with sharding on.
+
+use regtopk::data::linear::{generate, LinearParams};
+use regtopk::experiments::fig2;
+use regtopk::sparse::engine::SelectEngine;
+use regtopk::sparse::topk::select_topk_sort;
+use regtopk::sparse::SparseVec;
+use regtopk::sparsify::{build, RoundCtx, SparsifierKind};
+use regtopk::util::check;
+use regtopk::util::rng::Rng;
+
+const SHARD_COUNTS: [usize; 4] = [1, 2, 3, 8];
+
+/// Property: sharded select == sort oracle for shard counts {1,2,3,8}
+/// and k in {1, J/1000, J/8} (plus random k), across random inputs with
+/// adversarial values (zeros, duplicates, huge/tiny magnitudes).
+#[test]
+fn sharded_select_matches_sort_oracle_bit_for_bit() {
+    check::forall("sharded_select_vs_sort", |rng, case| {
+        // mix of small random lengths and k-regime-relevant sizes
+        let n = if case % 3 == 0 { 2048 + rng.below(4096) } else { check::arb_len(rng, 500) };
+        let x = check::arb_vec(rng, n);
+        let ks = [1usize, (n / 1000).max(1), (n / 8).max(1), rng.below(n + 2)];
+        for &k in &ks {
+            let want = select_topk_sort(&x, k);
+            for shards in SHARD_COUNTS {
+                let mut eng = SelectEngine::new(shards);
+                let mut got = Vec::new();
+                eng.select_into(&x, k, &mut got);
+                assert_eq!(got, want, "n={n} k={k} shards={shards}");
+            }
+        }
+    });
+}
+
+/// The exact tie-break contract: equal magnitudes (including opposite
+/// signs) resolve toward the LOWER index under every shard count, even
+/// when the tied plateau spans shard boundaries.
+#[test]
+fn tie_breaks_survive_shard_boundaries() {
+    // 9000 identical magnitudes +-1.0: any k must select 0..k
+    let x: Vec<f32> = (0..9000).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+    for shards in SHARD_COUNTS {
+        let mut eng = SelectEngine::new(shards);
+        let mut got = Vec::new();
+        for k in [1usize, 9, 4500, 8999] {
+            eng.select_into(&x, k, &mut got);
+            assert_eq!(got, (0..k as u32).collect::<Vec<_>>(), "k={k} shards={shards}");
+        }
+    }
+}
+
+/// Determinism: a full RegTop-k trajectory (warm-up round + regularized
+/// rounds, evolving aggregate feedback) is bit-identical between the
+/// serial path, shards=1, and shards=8.
+#[test]
+fn regtopk_trajectory_bit_identical_across_shard_counts() {
+    let dim = 600;
+    let k = 13;
+    let mut serial = build(&SparsifierKind::RegTopK { k, mu: 0.5, q: 1.0 }, dim, 0);
+    let mut sh1 = build(&SparsifierKind::RegTopK { k, mu: 0.5, q: 1.0 }, dim, 0);
+    let mut sh8 = build(&SparsifierKind::RegTopK { k, mu: 0.5, q: 1.0 }, dim, 0);
+    sh1.set_shards(1); // explicit serial fallback
+    sh8.set_shards(8); // engine on, even below the trainer threshold
+    let mut rng = Rng::seed_from(123);
+    let mut gagg = vec![0.0f32; dim];
+    let mut out1 = SparseVec::zeros(dim);
+    let mut out8 = SparseVec::zeros(dim);
+    for t in 0..12 {
+        let g = rng.gaussian_vec(dim, 1.0);
+        let ctx = RoundCtx { t, gagg_prev: &gagg, omega: 0.25, genie_acc: None };
+        let want = serial.step(&g, &ctx);
+        sh1.step_into(&g, &ctx, &mut out1);
+        sh8.step_into(&g, &ctx, &mut out8);
+        assert_eq!(want, out1, "t={t} shards=1");
+        assert_eq!(want, out8, "t={t} shards=8");
+        // feed the aggregate back so Delta is exercised (non-zero mask)
+        gagg = want.to_dense();
+        for v in gagg.iter_mut() {
+            *v *= 0.5;
+        }
+    }
+}
+
+/// Same contract for TOP-k and DGC (the other engine-backed selectors).
+#[test]
+fn topk_and_dgc_trajectories_bit_identical_across_shard_counts() {
+    for kind in [
+        SparsifierKind::TopK { k: 7 },
+        SparsifierKind::Dgc { k: 7, momentum: 0.9, clip: 0.0 },
+    ] {
+        let dim = 400;
+        let mut serial = build(&kind, dim, 0);
+        let mut sharded = build(&kind, dim, 0);
+        sharded.set_shards(5);
+        let mut rng = Rng::seed_from(77);
+        let gagg = vec![0.0f32; dim];
+        let mut out = SparseVec::zeros(dim);
+        for t in 0..8 {
+            let g = rng.gaussian_vec(dim, 1.0);
+            let ctx = RoundCtx { t, gagg_prev: &gagg, omega: 0.25, genie_acc: None };
+            let want = serial.step(&g, &ctx);
+            sharded.step_into(&g, &ctx, &mut out);
+            assert_eq!(want, out, "{kind:?} t={t}");
+        }
+    }
+}
+
+/// End-to-end: the fig2 trainer with the engine fully on (shards=8,
+/// forced through the config) matches the seed serial trainer bitwise
+/// over a full training run — model, losses, and upload accounting.
+#[test]
+fn trainer_bit_identical_with_sharding_enabled() {
+    let params = LinearParams { workers: 4, rows_per_worker: 80, dim: 24, ..LinearParams::fig2() };
+    let problem = generate(params, 11);
+    for kind in [
+        SparsifierKind::TopK { k: 8 },
+        SparsifierKind::RegTopK { k: 8, mu: 0.5, q: 1.0 },
+    ] {
+        let mut serial = fig2::trainer_for(&problem, kind.clone(), 0.02);
+        // dim 24 is below the trainer's auto threshold, so force the
+        // engine directly onto the workers to exercise the full path
+        let mut sharded = fig2::trainer_for(&problem, kind.clone(), 0.02);
+        for w in &mut sharded.workers {
+            w.set_shards(8);
+        }
+        for _ in 0..40 {
+            serial.round();
+            sharded.round();
+        }
+        assert_eq!(serial.server.w, sharded.server.w, "{kind:?}");
+        assert_eq!(
+            serial.ledger.total_upload_bytes(),
+            sharded.ledger.total_upload_bytes(),
+            "{kind:?}"
+        );
+    }
+}

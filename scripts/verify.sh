@@ -1,0 +1,30 @@
+#!/usr/bin/env bash
+# Tier-1 verification gate + perf smoke run.
+#
+#   scripts/verify.sh          # build + tests + quick bench smoke
+#   scripts/verify.sh --full   # also run the benches at full budget
+#
+# The bench smoke uses a tiny per-target budget (BENCH_BUDGET_MS) so it
+# finishes in seconds; it exists to catch perf-path regressions that
+# compile but crash/hang, and to refresh BENCH_PR1.json coarsely.
+# EXPERIMENTS.md records full-budget numbers.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== tier-1: cargo build --release =="
+cargo build --release
+
+echo "== tier-1: cargo test -q =="
+cargo test -q
+
+if [[ "${1:-}" == "--full" ]]; then
+    echo "== bench (full budget) =="
+    cargo bench --bench topk_select
+    cargo bench --bench sparsifiers
+else
+    echo "== bench smoke (quick budget) =="
+    BENCH_BUDGET_MS=60 cargo bench --bench topk_select
+    BENCH_BUDGET_MS=60 cargo bench --bench sparsifiers
+fi
+
+echo "verify: OK"
