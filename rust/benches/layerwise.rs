@@ -1,0 +1,111 @@
+//! Layer-wise API benchmarks: flat (single-group) vs grouped select
+//! throughput for one RegTop-k worker step, plus the wire-cost points
+//! of the bucketed update format (per-group index bits vs flat
+//! `log2 J` bits).
+//!
+//!     cargo bench --bench layerwise
+//!
+//! Results merge into BENCH_PR2.json (override with $BENCH_JSON):
+//! `layerwise/*` entries carry median_s/melem_per_s; the
+//! `layerwise_bytes/*` entries carry `grouped_bytes` vs `flat_bytes`
+//! for one sparsified update (the per-group upload saving the ledger
+//! reports per round).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use regtopk::grad::{GradLayout, GradView};
+use regtopk::sparse::SparseUpdate;
+use regtopk::sparsify::{
+    build, BudgetPolicy, LayerwiseSparsifier, RoundCtx, Sparsifier, SparsifierKind,
+};
+use regtopk::util::bench::{black_box, Bench};
+use regtopk::util::json::Json;
+use regtopk::util::rng::Rng;
+
+fn bench_json_path() -> String {
+    std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_PR2.json".to_string())
+}
+
+/// Merge `(key, grouped_bytes, flat_bytes)` points into the bench JSON
+/// (preserving the timing entries written by `Bench::write_json`).
+fn merge_byte_points(path: &str, points: &[(String, usize, usize)]) {
+    let mut map: BTreeMap<String, Json> = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|text| Json::parse(&text).ok())
+        .and_then(|j| j.as_obj().cloned())
+        .unwrap_or_default();
+    for (key, grouped, flat) in points {
+        let mut entry = BTreeMap::new();
+        entry.insert("grouped_bytes".to_string(), Json::from(*grouped));
+        entry.insert("flat_bytes".to_string(), Json::from(*flat));
+        map.insert(format!("layerwise_bytes/{key}"), Json::Obj(entry));
+    }
+    match std::fs::write(Path::new(path), Json::Obj(map).dump()) {
+        Ok(()) => println!("# wrote {} byte points to {path}", points.len()),
+        Err(e) => eprintln!("# could not write {path}: {e}"),
+    }
+}
+
+fn main() {
+    let mut b = Bench::new();
+    let j = 1_000_000usize;
+    let s = 0.001f64;
+    let k = (j as f64 * s) as usize;
+    let mut rng = Rng::seed_from(1);
+    let grad = rng.gaussian_vec(j, 1.0);
+    let gagg = rng.gaussian_vec(j, 0.2);
+    let kind = SparsifierKind::RegTopK { k, mu: 0.5, q: 1.0 };
+    println!("# layer-wise select: flat single group vs G equal groups (J={j}, S={s})");
+
+    // flat reference: the degenerate single-group layout
+    {
+        let layout = GradLayout::single(j);
+        let mut sp = build(&kind, j, 0);
+        let mut out = SparseUpdate::empty();
+        let mut t = 0usize;
+        b.run_throughput(&format!("layerwise/flat/J={j}/S={s}"), j, || {
+            let ctx = RoundCtx { t, gagg_prev: &gagg, omega: 0.125, genie_acc: None };
+            let view = GradView::new(&layout, &grad);
+            sp.step_group_into(&view, &ctx, &mut out);
+            black_box(out.nnz());
+            t += 1;
+        });
+    }
+
+    // grouped: G equal groups, proportional budget (same total k)
+    let mut byte_points: Vec<(String, usize, usize)> = Vec::new();
+    for &groups in &[8usize, 64] {
+        let layout =
+            GradLayout::from_sizes((0..groups).map(|g| (format!("g{g}"), j / groups)));
+        assert_eq!(layout.total(), j, "J must divide evenly into {groups} groups");
+        let mut lw =
+            LayerwiseSparsifier::new(&kind, layout.clone(), &BudgetPolicy::Proportional { frac: s }, 0);
+        let mut out = SparseUpdate::empty();
+        let mut t = 0usize;
+        b.run_throughput(&format!("layerwise/G={groups}/J={j}/S={s}"), j, || {
+            let ctx = RoundCtx { t, gagg_prev: &gagg, omega: 0.125, genie_acc: None };
+            let view = GradView::new(&layout, &grad);
+            lw.step_group_into(&view, &ctx, &mut out);
+            black_box(out.nnz());
+            t += 1;
+        });
+        // wire-cost point: the same update bucketed vs flattened
+        byte_points.push((
+            format!("G={groups}/J={j}/S={s}"),
+            out.wire_bytes(),
+            out.flatten().wire_bytes(),
+        ));
+    }
+
+    let path = bench_json_path();
+    b.write_json(Path::new(&path)).unwrap_or_else(|e| eprintln!("# could not write {path}: {e}"));
+    merge_byte_points(&path, &byte_points);
+    println!("\n# per-update upload bytes (one worker, k = {k} entries total)");
+    for (key, grouped, flat) in &byte_points {
+        println!(
+            "  {key:<24} grouped {grouped:>8} B   flat {flat:>8} B   saving {:.2}%",
+            100.0 * (1.0 - *grouped as f64 / (*flat).max(1) as f64)
+        );
+    }
+}

@@ -1,9 +1,15 @@
 //! Per-round traffic accounting: every byte that crosses the simulated
 //! network is recorded here; EXPERIMENTS.md's communication tables are
 //! produced from these counters (DESIGN.md invariant 5).
+//!
+//! With the layer-wise API the ledger also accounts upload bytes *per
+//! parameter group* ([`Ledger::set_layout`] + [`Ledger::record_update`]),
+//! so a grouped run can report where the budget — and the wire saving
+//! from per-group index widths — actually lands.
 
 use crate::comm::CostModel;
-use crate::sparse::SparseVec;
+use crate::grad::GradLayout;
+use crate::sparse::{SparseUpdate, SparseVec};
 
 /// Traffic observed in one synchronous round.
 #[derive(Clone, Copy, Debug, Default)]
@@ -26,18 +32,53 @@ pub struct Ledger {
     rounds: Vec<RoundTraffic>,
     current: RoundTraffic,
     upload_sizes: Vec<usize>,
+    /// group names (set by [`Self::set_layout`]; empty = per-group
+    /// accounting off)
+    group_names: Vec<String>,
+    /// cumulative upload bytes per group, aligned with `group_names`
+    group_bytes: Vec<usize>,
 }
 
 impl Ledger {
     pub fn new(cost: CostModel) -> Self {
-        Ledger { cost, rounds: Vec::new(), current: RoundTraffic::default(), upload_sizes: Vec::new() }
+        Ledger { cost, ..Ledger::default() }
     }
 
-    /// Record one worker's upload for the current round.
+    /// Enable per-group accounting for `layout` (called by the trainer
+    /// once the worker layout is known).
+    pub fn set_layout(&mut self, layout: &GradLayout) {
+        self.group_names = layout.groups().iter().map(|g| g.name.clone()).collect();
+        self.group_bytes = vec![0; layout.num_groups()];
+    }
+
+    /// Record one worker's bucketed upload for the current round.
+    pub fn record_update(&mut self, up: &SparseUpdate) {
+        let mut total = 0usize;
+        for (g, bucket) in up.buckets().iter().enumerate() {
+            let bytes = self.cost.update_bytes(bucket);
+            total += bytes;
+            if let Some(acc) = self.group_bytes.get_mut(g) {
+                *acc += bytes;
+            }
+            self.current.upload_entries += bucket.nnz();
+        }
+        self.current.upload_bytes += total;
+        self.upload_sizes.push(total);
+    }
+
+    /// Record one worker's flat upload for the current round (the
+    /// pre-bucketing entry point, kept for flat callers and tests).
+    /// A flat upload carries no group attribution, so it only feeds
+    /// the per-group table when the installed layout is single-group
+    /// (everything IS that group); under a multi-group layout the
+    /// round totals still count but no group is credited.
     pub fn record_upload(&mut self, sv: &SparseVec) {
         let bytes = self.cost.update_bytes(sv);
         self.current.upload_bytes += bytes;
         self.current.upload_entries += sv.nnz();
+        if self.group_bytes.len() == 1 {
+            self.group_bytes[0] += bytes;
+        }
         self.upload_sizes.push(bytes);
     }
 
@@ -66,6 +107,16 @@ impl Ledger {
 
     pub fn total_sim_time(&self) -> f64 {
         self.rounds.iter().map(|r| r.sim_time_s).sum()
+    }
+
+    /// Cumulative upload bytes per parameter group `(name, bytes)`.
+    /// Empty unless [`Self::set_layout`] was called.
+    pub fn group_upload_totals(&self) -> Vec<(String, usize)> {
+        self.group_names
+            .iter()
+            .cloned()
+            .zip(self.group_bytes.iter().copied())
+            .collect()
     }
 
     /// Upload compression ratio vs dense (dense = J values per worker
@@ -118,5 +169,41 @@ mod tests {
         l.close_round(0, 1024, 1);
         let r = l.upload_compression_vs_dense(1024, 1);
         assert!(r < 0.01, "{r}");
+    }
+
+    #[test]
+    fn grouped_updates_account_per_group() {
+        let layout =
+            GradLayout::from_sizes([("conv".to_string(), 64), ("fc".to_string(), 64)]);
+        let mut l = Ledger::new(CostModel::default());
+        l.set_layout(&layout);
+        let mut up = SparseUpdate::zeros(&layout);
+        up.bucket_mut(0).push(3, 1.0);
+        up.bucket_mut(0).push(9, 1.0);
+        up.bucket_mut(1).push(0, -2.0);
+        l.record_update(&up);
+        l.close_round(0, 128, 1);
+        let r = l.rounds()[0];
+        assert_eq!(r.upload_entries, 3);
+        assert_eq!(r.upload_bytes, l.cost.update_bytes_grouped(&up));
+        let totals = l.group_upload_totals();
+        assert_eq!(totals.len(), 2);
+        assert_eq!(totals[0].0, "conv");
+        assert_eq!(totals[0].1, l.cost.update_bytes(up.bucket(0)));
+        assert_eq!(totals[1].1, l.cost.update_bytes(up.bucket(1)));
+    }
+
+    #[test]
+    fn flat_and_single_bucket_record_identically() {
+        let sv = SparseVec::new(256, vec![7, 90], vec![1.0, -1.0]);
+        let mut flat = Ledger::new(CostModel::default());
+        flat.record_upload(&sv);
+        flat.close_round(0, 256, 1);
+        let mut grouped = Ledger::new(CostModel::default());
+        grouped.record_update(&SparseUpdate::single(sv));
+        grouped.close_round(0, 256, 1);
+        assert_eq!(flat.rounds()[0].upload_bytes, grouped.rounds()[0].upload_bytes);
+        assert_eq!(flat.rounds()[0].upload_entries, grouped.rounds()[0].upload_entries);
+        assert_eq!(flat.rounds()[0].sim_time_s, grouped.rounds()[0].sim_time_s);
     }
 }

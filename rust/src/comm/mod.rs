@@ -19,17 +19,19 @@ pub use ledger::{Ledger, RoundTraffic};
 pub use quantize::Quantizer;
 pub use transport::{Endpoint, Network};
 
-use crate::sparse::SparseVec;
+use crate::sparse::{SparseUpdate, SparseVec};
 
-/// Messages exchanged between workers and the server.
+/// Messages exchanged between workers and the server.  Updates travel
+/// bucketed ([`SparseUpdate`], one bucket per parameter group with
+/// group-local indices) so the wire cost of an index is
+/// `ceil(log2 group_len)` bits; the flat path is the degenerate
+/// single-bucket case and costs exactly what the seed did.
 #[derive(Clone, Debug)]
 pub enum Msg {
-    /// worker -> server: sparsified gradient for round `round`
-    Update { worker: usize, round: usize, update: SparseVec, loss: f32 },
+    /// worker -> server: bucketed sparsified gradient for round `round`
+    Update { worker: usize, round: usize, update: SparseUpdate, loss: f32 },
     /// server -> workers: aggregated gradient for round `round`
     Broadcast { round: usize, gagg: Vec<f32> },
-    /// server -> workers: orderly shutdown
-    Shutdown,
 }
 
 /// Link parameters for simulated transfer-time accounting.
@@ -57,6 +59,13 @@ impl CostModel {
         let dim = sv.dim().max(2);
         let index_bits = usize::BITS as usize - (dim - 1).leading_zeros() as usize;
         (sv.nnz() * (self.value_bits + index_bits)).div_ceil(8)
+    }
+
+    /// Wire bytes of a bucketed update: each bucket pays its own
+    /// (smaller) per-group index width.  The single-bucket degenerate
+    /// case equals [`Self::update_bytes`] on the flat vector.
+    pub fn update_bytes_grouped(&self, up: &SparseUpdate) -> usize {
+        up.buckets().iter().map(|b| self.update_bytes(b)).sum()
     }
 
     /// Wire bytes of the dense broadcast g^t (no indices needed).
@@ -90,6 +99,30 @@ mod tests {
         assert_eq!(cm.update_bytes(&sv), 49);
         // dense broadcast of J=100 f32s = 400 bytes
         assert_eq!(cm.broadcast_bytes(100), 400);
+    }
+
+    #[test]
+    fn grouped_update_bytes_use_per_group_index_width() {
+        use crate::grad::GradLayout;
+        let cm = CostModel::default();
+        // two 2^10 groups inside J=2048: 10 index bits per entry
+        let layout =
+            GradLayout::from_sizes([("a".to_string(), 1024), ("b".to_string(), 1024)]);
+        let mut up = SparseUpdate::zeros(&layout);
+        for i in 0..4u32 {
+            up.bucket_mut(0).push(i, 1.0);
+            up.bucket_mut(1).push(i, 1.0);
+        }
+        // 8 entries * (32+10) bits = 336 bits -> 42 bytes
+        assert_eq!(cm.update_bytes_grouped(&up), 42);
+        // the flat equivalent pays 11 bits per index: 344 -> 43 bytes
+        assert_eq!(cm.update_bytes(&up.flatten()), 43);
+        // single-bucket degenerate case matches the flat cost exactly
+        let flat = SparseVec::new(2048, (0..8).collect(), vec![1.0; 8]);
+        assert_eq!(
+            cm.update_bytes_grouped(&SparseUpdate::single(flat.clone())),
+            cm.update_bytes(&flat)
+        );
     }
 
     #[test]

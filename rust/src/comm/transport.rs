@@ -3,9 +3,10 @@
 //!
 //! The deterministic single-threaded trainer calls sparsifiers
 //! directly; this transport backs the *threaded* driver
-//! (`coordinator::Trainer::run_threaded`) where each worker owns an OS
-//! thread, which is how the framework would host real gradient
-//! computation.  Message order per link is FIFO (mpsc guarantee); the
+//! (`coordinator::Trainer::run_threaded`) where each worker's round
+//! body runs as a pooled task on the persistent executors, which is
+//! how the framework would host real gradient computation.  Message
+//! order per link is FIFO (mpsc guarantee); the
 //! server gathers exactly one update per worker per round, so the
 //! aggregate is order-independent and bit-identical to the
 //! deterministic driver (verified in coordinator tests).
@@ -92,7 +93,11 @@ impl Network {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sparse::SparseVec;
+    use crate::sparse::{SparseUpdate, SparseVec};
+
+    fn zero_update(dim: usize) -> SparseUpdate {
+        SparseUpdate::single(SparseVec::zeros(dim))
+    }
 
     #[test]
     fn star_roundtrip_two_workers() {
@@ -101,7 +106,7 @@ mod tests {
         let e1 = net.endpoint(1);
         let h0 = std::thread::spawn(move || {
             e0.up
-                .send(Msg::Update { worker: 0, round: 0, update: SparseVec::zeros(4), loss: 1.0 })
+                .send(Msg::Update { worker: 0, round: 0, update: zero_update(4), loss: 1.0 })
                 .unwrap();
             match e0.down.recv().unwrap() {
                 Msg::Broadcast { round, gagg } => (round, gagg),
@@ -110,7 +115,7 @@ mod tests {
         });
         let h1 = std::thread::spawn(move || {
             e1.up
-                .send(Msg::Update { worker: 1, round: 0, update: SparseVec::zeros(4), loss: 2.0 })
+                .send(Msg::Update { worker: 1, round: 0, update: zero_update(4), loss: 2.0 })
                 .unwrap();
             match e1.down.recv().unwrap() {
                 Msg::Broadcast { round, .. } => round,
@@ -136,8 +141,8 @@ mod tests {
     fn duplicate_update_detected() {
         let net = Network::star(1);
         let tx = net.up_sender();
-        tx.send(Msg::Update { worker: 0, round: 0, update: SparseVec::zeros(1), loss: 0.0 }).unwrap();
-        tx.send(Msg::Update { worker: 0, round: 0, update: SparseVec::zeros(1), loss: 0.0 }).unwrap();
+        tx.send(Msg::Update { worker: 0, round: 0, update: zero_update(1), loss: 0.0 }).unwrap();
+        tx.send(Msg::Update { worker: 0, round: 0, update: zero_update(1), loss: 0.0 }).unwrap();
         // gather for 2 workers so it tries to consume both messages
         net.gather_round(2, 0);
     }
@@ -147,7 +152,7 @@ mod tests {
     fn out_of_round_update_detected() {
         let net = Network::star(1);
         net.up_sender()
-            .send(Msg::Update { worker: 0, round: 5, update: SparseVec::zeros(1), loss: 0.0 })
+            .send(Msg::Update { worker: 0, round: 5, update: zero_update(1), loss: 0.0 })
             .unwrap();
         net.gather_round(1, 0);
     }

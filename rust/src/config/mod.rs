@@ -6,7 +6,8 @@
 use std::path::Path;
 
 use crate::comm::CostModel;
-use crate::sparsify::{SparsifierKind, SparsifierParams};
+use crate::grad::GradLayout;
+use crate::sparsify::{BudgetPolicy, LayerwiseSparsifier, Sparsifier, SparsifierKind, SparsifierParams};
 use crate::util::json::{obj, Json};
 
 /// Top-level experiment configuration.
@@ -33,6 +34,12 @@ pub struct TrainConfig {
     /// Small models fall back to serial regardless (see
     /// [`Self::effective_shards`]).
     pub shards: usize,
+    /// parameter-group layout for the layer-wise API (None = the seed's
+    /// flat single-group path; totals must match the model dimension)
+    pub groups: Option<GradLayout>,
+    /// per-group budget policy; only consulted when `groups` is set
+    /// (None = `Global{k}` from the sparsifier's own budget)
+    pub budget: Option<BudgetPolicy>,
 }
 
 impl Default for TrainConfig {
@@ -47,6 +54,8 @@ impl Default for TrainConfig {
             eval_every: 10,
             cost: CostModel::default(),
             shards: 1,
+            groups: None,
+            budget: None,
         }
     }
 }
@@ -76,6 +85,49 @@ impl TrainConfig {
         match self.shards {
             0 => crate::util::pool::global().parallelism(),
             s => s,
+        }
+    }
+
+    /// The effective parameter-group layout for a model of dimension
+    /// `dim`: the configured groups (validated against `dim`) or the
+    /// degenerate flat single-group layout.
+    pub fn layout_for(&self, dim: usize) -> GradLayout {
+        match &self.groups {
+            Some(l) => {
+                assert_eq!(
+                    l.total(),
+                    dim,
+                    "configured groups total {} != model dim {dim}",
+                    l.total()
+                );
+                l.clone()
+            }
+            None => GradLayout::single(dim),
+        }
+    }
+
+    /// The effective budget policy when groups are configured: the
+    /// explicit policy, or `Global{k}` derived from the sparsifier's
+    /// own budget.
+    pub fn effective_budget(&self) -> BudgetPolicy {
+        self.budget
+            .clone()
+            .unwrap_or(BudgetPolicy::Global { k: self.sparsifier.to_params().k })
+    }
+
+    /// Instantiate this config's sparsifier for one worker.  Without
+    /// `groups` this is exactly the seed factory call (flat path,
+    /// bit-identical); with `groups` it wraps the configured family in
+    /// a [`LayerwiseSparsifier`] with per-group budgets.
+    pub fn build_sparsifier(&self, dim: usize, worker: usize) -> Box<dyn Sparsifier> {
+        match &self.groups {
+            None => crate::sparsify::build(&self.sparsifier, dim, worker),
+            Some(_) => Box::new(LayerwiseSparsifier::new(
+                &self.sparsifier,
+                self.layout_for(dim),
+                &self.effective_budget(),
+                worker,
+            )),
         }
     }
 
@@ -114,7 +166,7 @@ impl TrainConfig {
                 ("k_max", (*k_max).into()),
             ]),
         };
-        obj([
+        let mut j = obj([
             ("workers", self.workers.into()),
             ("iters", self.iters.into()),
             ("eta", (self.eta as f64).into()),
@@ -122,7 +174,16 @@ impl TrainConfig {
             ("seed", (self.seed as usize).into()),
             ("eval_every", self.eval_every.into()),
             ("shards", self.shards.into()),
-        ])
+        ]);
+        if let Json::Obj(m) = &mut j {
+            if let Some(l) = &self.groups {
+                m.insert("groups".to_string(), l.to_json());
+            }
+            if let Some(b) = &self.budget {
+                m.insert("budget".to_string(), b.to_json());
+            }
+        }
+        j
     }
 
     /// Load from a JSON config file; missing keys keep defaults.
@@ -151,6 +212,12 @@ impl TrainConfig {
         }
         if let Some(v) = j.get("shards").and_then(Json::as_usize) {
             c.shards = v;
+        }
+        if let Some(g) = j.get("groups") {
+            c.groups = Some(GradLayout::from_json(g)?);
+        }
+        if let Some(b) = j.get("budget") {
+            c.budget = Some(BudgetPolicy::from_json(b)?);
         }
         if let Some(sp) = j.get("sparsifier") {
             let name = sp.get("name").and_then(Json::as_str).ok_or("sparsifier.name missing")?;
@@ -226,6 +293,51 @@ mod tests {
         // auto resolves to the pool size (>= 1)
         c.shards = 0;
         assert!(c.effective_shards(1 << 20) >= 1);
+    }
+
+    #[test]
+    fn groups_and_budget_roundtrip() {
+        let mut c = TrainConfig::default();
+        c.sparsifier = SparsifierKind::RegTopK { k: 10, mu: 0.5, q: 1.0 };
+        c.groups = Some(GradLayout::from_sizes([
+            ("conv".to_string(), 60),
+            ("fc".to_string(), 40),
+        ]));
+        c.budget = Some(BudgetPolicy::Proportional { frac: 0.1 });
+        let c2 = TrainConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.groups, c.groups);
+        assert_eq!(c2.budget, c.budget);
+        // layout_for validates the dimension
+        assert_eq!(c2.layout_for(100).num_groups(), 2);
+        // default (flat) config round-trips to no groups
+        let flat = TrainConfig::from_json(&TrainConfig::default().to_json()).unwrap();
+        assert!(flat.groups.is_none());
+        assert!(flat.budget.is_none());
+        assert!(flat.layout_for(7).is_single());
+    }
+
+    #[test]
+    #[should_panic]
+    fn layout_for_rejects_dim_mismatch() {
+        let mut c = TrainConfig::default();
+        c.groups = Some(GradLayout::single(10));
+        c.layout_for(11);
+    }
+
+    #[test]
+    fn build_sparsifier_flat_vs_grouped() {
+        let mut c = TrainConfig::default();
+        c.sparsifier = SparsifierKind::TopK { k: 4 };
+        // flat: the family's own name
+        assert_eq!(c.build_sparsifier(20, 0).name(), "topk");
+        // grouped: the layerwise wrapper
+        c.groups = Some(GradLayout::from_sizes([
+            ("a".to_string(), 12),
+            ("b".to_string(), 8),
+        ]));
+        assert_eq!(c.build_sparsifier(20, 0).name(), "layerwise");
+        // default budget is Global{k from the sparsifier}
+        assert_eq!(c.effective_budget(), BudgetPolicy::Global { k: 4 });
     }
 
     #[test]

@@ -11,8 +11,9 @@
 //! Two drivers over the same [`Worker`]/[`Server`] state:
 //! - [`Trainer::run`]          — deterministic single-threaded rounds
 //!   (reference semantics; all experiments and tests use this).
-//! - [`Trainer::run_threaded`] — one OS thread per worker over the
-//!   [`crate::comm::Network`] transport; bit-identical aggregates
+//! - [`Trainer::run_threaded`] — per-worker lanes fanned out on the
+//!   persistent pool's executors over the [`crate::comm::Network`]
+//!   transport (no `thread::spawn` per run); bit-identical aggregates
 //!   (verified in tests) because gathers are ordered by worker id.
 
 mod checkpoint;

@@ -1,7 +1,7 @@
 //! Server-side state: aggregation + model update + broadcast value.
 
 use crate::optim::Optimizer;
-use crate::sparse::SparseVec;
+use crate::sparse::SparseUpdate;
 
 /// The parameter server: owns the global model w and the optimizer.
 pub struct Server {
@@ -22,13 +22,15 @@ impl Server {
         self.w.len()
     }
 
-    /// Aggregate sparse updates with weights omega and update the model:
-    /// g^t = sum_n omega_n ghat_n ;  w <- optimizer(w, g^t).
-    /// Updates MUST be ordered by worker id (fp-determinism).
-    pub fn aggregate_and_step(&mut self, updates: &[(f32, &SparseVec)], t: usize) -> &[f32] {
+    /// Aggregate bucketed updates with weights omega and update the
+    /// model:  g^t = sum_n omega_n ghat_n ;  w <- optimizer(w, g^t).
+    /// Updates MUST be ordered by worker id, and each update's buckets
+    /// apply in offset order — so the float-add sequence (and thus the
+    /// aggregate) is bit-identical to the seed's flat path.
+    pub fn aggregate_and_step(&mut self, updates: &[(f32, &SparseUpdate)], t: usize) -> &[f32] {
         self.agg_buf.iter_mut().for_each(|v| *v = 0.0);
-        for (omega, sv) in updates {
-            sv.axpy_into(*omega, &mut self.agg_buf);
+        for (omega, up) in updates {
+            up.axpy_into(*omega, &mut self.agg_buf);
         }
         std::mem::swap(&mut self.gagg, &mut self.agg_buf);
         self.optimizer.step(&mut self.w, &self.gagg, t);
@@ -39,13 +41,15 @@ impl Server {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::grad::GradLayout;
     use crate::optim::Sgd;
+    use crate::sparse::SparseVec;
 
     #[test]
     fn weighted_aggregation_and_sgd_step() {
         let mut s = Server::new(vec![1.0, 1.0, 1.0], Box::new(Sgd::new(0.5)));
-        let a = SparseVec::new(3, vec![0], vec![2.0]);
-        let b = SparseVec::new(3, vec![0, 2], vec![-2.0, 4.0]);
+        let a = SparseUpdate::single(SparseVec::new(3, vec![0], vec![2.0]));
+        let b = SparseUpdate::single(SparseVec::new(3, vec![0, 2], vec![-2.0, 4.0]));
         s.aggregate_and_step(&[(0.5, &a), (0.5, &b)], 0);
         // g = [0.5*2 + 0.5*(-2), 0, 0.5*4] = [0, 0, 2]
         assert_eq!(s.gagg, vec![0.0, 0.0, 2.0]);
@@ -56,10 +60,23 @@ mod tests {
     fn cancellation_yields_zero_step() {
         // the §1.2 toy's first-entry cancellation
         let mut s = Server::new(vec![0.0, 1.0], Box::new(Sgd::new(0.9)));
-        let a = SparseVec::new(2, vec![0], vec![-73.6]);
-        let b = SparseVec::new(2, vec![0], vec![73.6]);
+        let a = SparseUpdate::single(SparseVec::new(2, vec![0], vec![-73.6]));
+        let b = SparseUpdate::single(SparseVec::new(2, vec![0], vec![73.6]));
         s.aggregate_and_step(&[(0.5, &a), (0.5, &b)], 0);
         assert_eq!(s.gagg, vec![0.0, 0.0]);
         assert_eq!(s.w, vec![0.0, 1.0]); // model did not move
+    }
+
+    #[test]
+    fn bucketed_update_aggregates_with_offsets() {
+        let layout =
+            GradLayout::from_sizes([("a".to_string(), 2), ("b".to_string(), 2)]);
+        let mut up = SparseUpdate::zeros(&layout);
+        up.bucket_mut(0).push(1, 4.0);
+        up.bucket_mut(1).push(0, -2.0);
+        let mut s = Server::new(vec![0.0; 4], Box::new(Sgd::new(1.0)));
+        s.aggregate_and_step(&[(0.5, &up)], 0);
+        assert_eq!(s.gagg, vec![0.0, 2.0, -1.0, 0.0]);
+        assert_eq!(s.w, vec![0.0, -2.0, 1.0, 0.0]);
     }
 }

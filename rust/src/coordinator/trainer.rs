@@ -7,6 +7,7 @@ use crate::comm::{Ledger, Msg, Network};
 use crate::config::TrainConfig;
 use crate::coordinator::{Server, Worker};
 use crate::metrics::{IterRecord, RunLog};
+use crate::sparse::SparseUpdate;
 use crate::sparsify::RoundCtx;
 
 /// Optional per-evaluation callback: `(iter, w, record)` — fills
@@ -30,9 +31,9 @@ pub struct Trainer {
     pub ledger: Ledger,
     /// g^{t-1} broadcast to workers (zeros before the first round)
     gagg_prev: Vec<f32>,
-    /// per-worker update buffers, recycled every round (zero
+    /// per-worker bucketed update buffers, recycled every round (zero
     /// steady-state allocation on the sparsify path)
-    updates: Vec<crate::sparse::SparseVec>,
+    updates: Vec<SparseUpdate>,
     /// genie-channel scratch (allocated lazily, only for gtopk runs)
     genie_buf: Vec<f32>,
     peek_buf: Vec<f32>,
@@ -52,10 +53,12 @@ impl Trainer {
         for w in &mut workers {
             w.set_shards(shards);
         }
-        let ledger = Ledger::new(config.cost);
-        let updates = (0..workers.len())
-            .map(|_| crate::sparse::SparseVec::zeros(dim))
-            .collect();
+        let mut ledger = Ledger::new(config.cost);
+        // per-group upload accounting follows the workers' layout
+        if let Some(w0) = workers.first() {
+            ledger.set_layout(w0.layout());
+        }
+        let updates = (0..workers.len()).map(|_| SparseUpdate::empty()).collect();
         Trainer {
             config,
             workers,
@@ -134,7 +137,7 @@ impl Trainer {
             None
         };
         // Phase 2: sparsify + "transmit" (ledger accounting), each
-        // worker writing into its recycled update buffer.
+        // worker writing into its recycled bucketed update buffer.
         for (i, w) in self.workers.iter_mut().enumerate() {
             let ctx = RoundCtx {
                 t,
@@ -143,14 +146,14 @@ impl Trainer {
                 genie_acc: genie,
             };
             w.sparsify_into(&ctx, &mut self.updates[i]);
-            self.ledger.record_upload(&self.updates[i]);
+            self.ledger.record_update(&self.updates[i]);
         }
         // Phase 3: aggregate, step, broadcast.
-        let weighted: Vec<(f32, &crate::sparse::SparseVec)> = self
+        let weighted: Vec<(f32, &SparseUpdate)> = self
             .updates
             .iter()
             .enumerate()
-            .map(|(i, sv)| (self.config.omega(i), sv))
+            .map(|(i, up)| (self.config.omega(i), up))
             .collect();
         let gagg = self.server.aggregate_and_step(&weighted, t);
         self.gagg_prev.copy_from_slice(gagg);
@@ -190,12 +193,16 @@ impl Trainer {
         log
     }
 
-    /// Threaded driver: each worker runs on its own OS thread and
-    /// exchanges [`Msg`]s over the star [`Network`]; the server thread
-    /// (this function) gathers, aggregates and broadcasts.  Produces a
-    /// bit-identical model trajectory to [`Trainer::run`] because the
-    /// gather orders updates by worker id.  Genie sparsifiers are not
-    /// supported here (they need a global side-channel).
+    /// Threaded driver: workers exchange [`Msg`]s with the server over
+    /// the star [`Network`], with the per-worker round body fanned out
+    /// on the persistent pool's executors (no `thread::spawn` per run
+    /// — the seed spawned one OS thread per worker per call).  Each
+    /// lane owns its endpoint and model/aggregate buffers across
+    /// rounds, so the message protocol is identical to a long-lived
+    /// worker thread's.  Produces a bit-identical model trajectory to
+    /// [`Trainer::run`] because the gather orders updates by worker
+    /// id.  Genie sparsifiers are not supported here (they need a
+    /// global side-channel).
     pub fn run_threaded(&mut self, iters: usize) -> RunLog {
         assert!(
             !self.workers.iter().any(Worker::needs_genie),
@@ -208,69 +215,82 @@ impl Trainer {
             format!("{}-threaded", self.workers[0].sparsifier.name()),
             self.config.to_json(),
         );
+        /// Per-worker execution lane: everything one pooled task needs.
+        struct Lane {
+            worker: Worker,
+            ep: crate::comm::Endpoint,
+            w_model: Vec<f32>,
+            gagg_prev: Vec<f32>,
+            omega: f32,
+        }
         let omegas: Vec<f32> = (0..n).map(|i| self.config.omega(i)).collect();
-        std::thread::scope(|scope| {
-            let mut handles = Vec::new();
-            for (i, mut worker) in self.workers.drain(..).enumerate() {
-                let ep = net.endpoint(i);
-                let omega = omegas[i];
-                handles.push(scope.spawn(move || {
-                    let mut w_model = vec![0.0f32; dim];
-                    let mut gagg_prev = vec![0.0f32; dim];
-                    for t in 0..iters {
-                        // receive the current model (round t broadcast
-                        // carries w^t and g^{t-1})
-                        match ep.down.recv().expect("server gone") {
-                            Msg::Broadcast { round, gagg } => {
-                                assert_eq!(round, t);
-                                // broadcast layout: [w | gagg_prev]
-                                w_model.copy_from_slice(&gagg[..dim]);
-                                gagg_prev.copy_from_slice(&gagg[dim..]);
-                            }
-                            Msg::Shutdown => return worker,
-                            other => panic!("worker {i}: unexpected {other:?}"),
-                        }
-                        let loss = worker.compute_grad(&w_model);
-                        let ctx = RoundCtx { t, gagg_prev: &gagg_prev, omega, genie_acc: None };
-                        let sv = worker.sparsify(&ctx);
-                        ep.up
-                            .send(Msg::Update { worker: i, round: t, update: sv, loss })
-                            .expect("server gone");
+        let mut lanes: Vec<Lane> = self
+            .workers
+            .drain(..)
+            .enumerate()
+            .map(|(i, worker)| Lane {
+                ep: net.endpoint(i),
+                w_model: vec![0.0f32; dim],
+                gagg_prev: vec![0.0f32; dim],
+                omega: omegas[i],
+                worker,
+            })
+            .collect();
+        let mut bcast = vec![0.0f32; 2 * dim];
+        for t in 0..iters {
+            // broadcast layout: [w | gagg_prev]
+            bcast[..dim].copy_from_slice(&self.server.w);
+            bcast[dim..].copy_from_slice(&self.gagg_prev);
+            net.broadcast(&Msg::Broadcast { round: t, gagg: bcast.clone() });
+            // worker phase on the pool: each lane drains its own
+            // endpoint (the broadcast is already queued, so no task
+            // blocks on another), computes, sparsifies, sends up
+            crate::util::pool::global().map_mut(&mut lanes, |i, lane| {
+                match lane.ep.down.recv().expect("server gone") {
+                    Msg::Broadcast { round, gagg } => {
+                        assert_eq!(round, t);
+                        lane.w_model.copy_from_slice(&gagg[..dim]);
+                        lane.gagg_prev.copy_from_slice(&gagg[dim..]);
                     }
-                    worker
-                }));
-            }
-            // server loop
-            let mut bcast = vec![0.0f32; 2 * dim];
-            for t in 0..iters {
-                bcast[..dim].copy_from_slice(&self.server.w);
-                bcast[dim..].copy_from_slice(&self.gagg_prev);
-                net.broadcast(&Msg::Broadcast { round: t, gagg: bcast.clone() });
-                let msgs = net.gather_round(n, t);
-                let mut updates = Vec::with_capacity(n);
-                let mut loss_sum = 0.0f64;
-                for m in msgs {
-                    if let Msg::Update { update, loss, .. } = m {
-                        loss_sum += loss as f64;
-                        self.ledger.record_upload(&update);
-                        updates.push(update);
-                    }
+                    other => panic!("worker {i}: unexpected {other:?}"),
                 }
-                let weighted: Vec<(f32, &crate::sparse::SparseVec)> =
-                    updates.iter().enumerate().map(|(i, sv)| (omegas[i], sv)).collect();
-                let gagg = self.server.aggregate_and_step(&weighted, t);
-                self.gagg_prev.copy_from_slice(gagg);
-                self.ledger.close_round(t, dim, n);
-                let mut rec = IterRecord::new(t);
-                rec.loss = (loss_sum / n as f64) as f32;
-                rec.upload_bytes = self.ledger.rounds().last().unwrap().upload_bytes;
-                rec.sim_time_s = self.ledger.rounds().last().unwrap().sim_time_s;
-                log.push(rec);
+                let loss = lane.worker.compute_grad(&lane.w_model);
+                let ctx = RoundCtx {
+                    t,
+                    gagg_prev: &lane.gagg_prev,
+                    omega: lane.omega,
+                    genie_acc: None,
+                };
+                let up = lane.worker.sparsify_update(&ctx);
+                lane.ep
+                    .up
+                    .send(Msg::Update { worker: i, round: t, update: up, loss })
+                    .expect("server gone");
+            });
+            // server phase: gather (ordered by worker id), aggregate
+            let msgs = net.gather_round(n, t);
+            let mut updates = Vec::with_capacity(n);
+            let mut loss_sum = 0.0f64;
+            for m in msgs {
+                if let Msg::Update { update, loss, .. } = m {
+                    loss_sum += loss as f64;
+                    self.ledger.record_update(&update);
+                    updates.push(update);
+                }
             }
-            net.broadcast(&Msg::Shutdown);
-            // reclaim workers (ordered by id)
-            self.workers = handles.into_iter().map(|h| h.join().expect("worker panicked")).collect();
-        });
+            let weighted: Vec<(f32, &SparseUpdate)> =
+                updates.iter().enumerate().map(|(i, up)| (omegas[i], up)).collect();
+            let gagg = self.server.aggregate_and_step(&weighted, t);
+            self.gagg_prev.copy_from_slice(gagg);
+            self.ledger.close_round(t, dim, n);
+            let mut rec = IterRecord::new(t);
+            rec.loss = (loss_sum / n as f64) as f32;
+            rec.upload_bytes = self.ledger.rounds().last().unwrap().upload_bytes;
+            rec.sim_time_s = self.ledger.rounds().last().unwrap().sim_time_s;
+            log.push(rec);
+        }
+        // reclaim workers (lanes preserve id order)
+        self.workers = lanes.into_iter().map(|l| l.worker).collect();
         self.t += iters;
         log
     }
@@ -339,6 +359,11 @@ mod tests {
         // 2 workers x 1 entry x (32+1 index bits for J=2)/8 -> 5 bytes each
         assert_eq!(tr.ledger.rounds()[0].upload_entries, 2);
         assert!(tr.ledger.rounds()[0].upload_bytes > 0);
+        // single-group layout: one "all" group carries everything
+        let groups = tr.ledger.group_upload_totals();
+        assert_eq!(groups.len(), 1);
+        assert_eq!(groups[0].0, "all");
+        assert_eq!(groups[0].1, tr.ledger.total_upload_bytes());
     }
 
     #[test]
@@ -376,5 +401,18 @@ mod tests {
                 "{kind:?}"
             );
         }
+    }
+
+    #[test]
+    fn threaded_driver_reclaims_workers_for_reuse() {
+        // back-to-back run_threaded calls must keep working (workers
+        // are drained into lanes and reclaimed in id order)
+        let mut tr = toy_trainer(SparsifierKind::TopK { k: 1 }, 0.9);
+        tr.run_threaded(3);
+        assert_eq!(tr.workers.len(), 2);
+        assert_eq!(tr.workers[0].id, 0);
+        assert_eq!(tr.workers[1].id, 1);
+        tr.run_threaded(2);
+        assert_eq!(tr.iter(), 5);
     }
 }

@@ -1,27 +1,49 @@
-//! Worker-side state: model + sparsifier + gradient buffer.
+//! Worker-side state: model + sparsifier + gradient buffer + layout.
 
+use crate::grad::{GradLayout, GradView};
 use crate::models::GradModel;
-use crate::sparse::SparseVec;
+use crate::sparse::{SparseUpdate, SparseVec};
 use crate::sparsify::{RoundCtx, Sparsifier};
 
 /// One worker: computes the local gradient with its [`GradModel`] and
-/// sparsifies it with its [`Sparsifier`].
+/// sparsifies it with its [`Sparsifier`].  The [`GradLayout`] carves
+/// the flat gradient into parameter groups for the bucketed
+/// [`Self::sparsify_into`] path; [`Worker::new`] installs the
+/// degenerate single-group layout (the seed flat path, bit-identical).
 pub struct Worker {
     pub id: usize,
     pub model: Box<dyn GradModel>,
     pub sparsifier: Box<dyn Sparsifier>,
+    layout: GradLayout,
     grad: Vec<f32>,
     last_loss: f32,
 }
 
 impl Worker {
     pub fn new(id: usize, model: Box<dyn GradModel>, sparsifier: Box<dyn Sparsifier>) -> Self {
+        let layout = GradLayout::single(model.dim());
+        Self::with_layout(id, model, sparsifier, layout)
+    }
+
+    /// [`Self::new`] with an explicit parameter-group layout (must
+    /// cover the model's full dimension).
+    pub fn with_layout(
+        id: usize,
+        model: Box<dyn GradModel>,
+        sparsifier: Box<dyn Sparsifier>,
+        layout: GradLayout,
+    ) -> Self {
         let dim = model.dim();
-        Worker { id, model, sparsifier, grad: vec![0.0; dim], last_loss: f32::NAN }
+        assert_eq!(layout.total(), dim, "worker {id}: layout total != model dim");
+        Worker { id, model, sparsifier, layout, grad: vec![0.0; dim], last_loss: f32::NAN }
     }
 
     pub fn dim(&self) -> usize {
         self.grad.len()
+    }
+
+    pub fn layout(&self) -> &GradLayout {
+        &self.layout
     }
 
     pub fn last_loss(&self) -> f32 {
@@ -44,15 +66,25 @@ impl Worker {
         self.sparsifier.peek_acc_into(&self.grad, out);
     }
 
-    /// Phase 2: sparsify the gradient computed in phase 1.
+    /// Phase 2 (flat compatibility): sparsify the gradient computed in
+    /// phase 1 into a flat [`SparseVec`].
     pub fn sparsify(&mut self, ctx: &RoundCtx) -> SparseVec {
         self.sparsifier.step(&self.grad, ctx)
     }
 
-    /// [`Self::sparsify`] into a recycled update buffer (the trainer's
-    /// zero-allocation round path).
-    pub fn sparsify_into(&mut self, ctx: &RoundCtx, out: &mut SparseVec) {
-        self.sparsifier.step_into(&self.grad, ctx, out);
+    /// Phase 2: sparsify into a recycled bucketed update (the
+    /// trainer's zero-allocation round path).  One bucket per layout
+    /// group; the single-group layout reproduces the flat wire format.
+    pub fn sparsify_into(&mut self, ctx: &RoundCtx, out: &mut SparseUpdate) {
+        let view = GradView::new(&self.layout, &self.grad);
+        self.sparsifier.step_group_into(&view, ctx, out);
+    }
+
+    /// Allocating variant of [`Self::sparsify_into`] (threaded driver).
+    pub fn sparsify_update(&mut self, ctx: &RoundCtx) -> SparseUpdate {
+        let mut out = SparseUpdate::empty();
+        self.sparsify_into(ctx, &mut out);
+        out
     }
 
     /// Shard count for the sparsifier's internal kernels.
@@ -83,5 +115,26 @@ mod tests {
         let sv = w.sparsify(&ctx);
         assert_eq!(sv.nnz(), 1);
         assert_eq!(sv.indices(), &[0]); // |g[0]| = 100x |g[1]|
+    }
+
+    #[test]
+    fn bucketed_sparsify_matches_flat_on_single_group() {
+        let mk = || {
+            Worker::new(
+                0,
+                Box::new(Logistic::toy_worker(vec![100.0, 1.0])),
+                build(&SparsifierKind::TopK { k: 1 }, 2, 0),
+            )
+        };
+        let mut flat = mk();
+        let mut grouped = mk();
+        flat.compute_grad(&[0.0, 1.0]);
+        grouped.compute_grad(&[0.0, 1.0]);
+        let z = vec![0.0; 2];
+        let ctx = RoundCtx { t: 0, gagg_prev: &z, omega: 0.5, genie_acc: None };
+        let sv = flat.sparsify(&ctx);
+        let up = grouped.sparsify_update(&ctx);
+        assert_eq!(up.num_buckets(), 1);
+        assert_eq!(up.flatten(), sv);
     }
 }

@@ -14,7 +14,7 @@ use crate::data::linear::{generate, LinearParams, LinearProblem};
 use crate::metrics::{IterRecord, RunLog};
 use crate::models::LinRegShard;
 use crate::optim::Sgd;
-use crate::sparsify::{build, SparsifierKind};
+use crate::sparsify::SparsifierKind;
 
 pub const ETA: f32 = 0.01;
 
@@ -31,27 +31,39 @@ pub fn trainer_sharded(
     eta: f32,
     shards: usize,
 ) -> Trainer {
-    let n = problem.params.workers;
-    let dim = problem.params.dim;
     let config = TrainConfig {
-        workers: n,
+        workers: problem.params.workers,
         eta,
-        sparsifier: kind.clone(),
+        sparsifier: kind,
         eval_every: 1,
         shards,
         ..TrainConfig::default()
     };
+    trainer_from_config(&config, problem)
+}
+
+/// The config-driven constructor behind every fig2-testbed trainer:
+/// honors the full [`TrainConfig`] surface including the layer-wise
+/// `groups`/`budget` pair (each worker gets the config's layout and a
+/// per-group sparsifier stack when groups are set; the flat default is
+/// bit-identical to the seed constructor).
+pub fn trainer_from_config(config: &TrainConfig, problem: &LinearProblem) -> Trainer {
+    let n = problem.params.workers;
+    assert_eq!(config.workers, n, "config.workers != problem workers");
+    let dim = problem.params.dim;
+    let layout = config.layout_for(dim);
     let workers = (0..n)
         .map(|i| {
-            Worker::new(
+            Worker::with_layout(
                 i,
                 Box::new(LinRegShard { shard: problem.shards[i].clone() }),
-                build(&kind, dim, i),
+                config.build_sparsifier(dim, i),
+                layout.clone(),
             )
         })
         .collect();
-    let server = Server::new(vec![0.0; dim], Box::new(Sgd::new(eta)));
-    Trainer::new(config, workers, server)
+    let server = Server::new(vec![0.0; dim], Box::new(Sgd::new(config.eta)));
+    Trainer::new(config.clone(), workers, server)
 }
 
 /// ||w - w*||
@@ -85,6 +97,19 @@ pub fn run_curve_sharded(
     shards: usize,
 ) -> RunLog {
     let mut tr = trainer_sharded(problem, kind, eta, shards);
+    run_curve_with(&mut tr, problem, name, iters)
+}
+
+/// Drive `iters` rounds of an already-built trainer, logging the
+/// standard fig2 record shape (loss, opt gap, upload bytes, sim
+/// time).  Shared by every curve runner and `repro train`, which
+/// keeps the trainer afterwards to read the per-group ledger.
+pub fn run_curve_with(
+    tr: &mut Trainer,
+    problem: &LinearProblem,
+    name: &str,
+    iters: usize,
+) -> RunLog {
     let mut log = RunLog::new(name, tr.config.to_json());
     for t in 0..iters {
         let rr = tr.round();

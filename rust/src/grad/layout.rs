@@ -1,0 +1,273 @@
+//! Parameter-group layout: the single source of truth for how a flat
+//! gradient vector is partitioned into named, contiguous groups
+//! (layers, parameter blocks, ...).
+//!
+//! The journal formulation of REGTOP-k ("Regularized Top-k", arXiv
+//! 2501.05633) states the posterior statistics and the budget k
+//! per layer, and real DDP stacks exchange gradients in per-layer
+//! buckets (arXiv 1911.08772).  [`GradLayout`] carries that structure
+//! through the whole stack: the config declares it, workers carve
+//! their gradients with a [`GradView`], sparsifiers emit one bucket
+//! per group (`sparse::SparseUpdate`), and the ledger accounts wire
+//! bytes with per-group index widths (`ceil(log2 group_len)` bits
+//! instead of `ceil(log2 J)`).
+//!
+//! The degenerate single-group layout ([`GradLayout::single`]) is the
+//! seed's flat path and is bit-identical to it end to end (pinned by
+//! `rust/tests/layerwise.rs`).
+
+use crate::util::json::{obj, Json};
+
+/// One named parameter group: a contiguous `[offset, offset+len)`
+/// slice of the flat vector.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GroupSpec {
+    pub name: String,
+    pub offset: usize,
+    pub len: usize,
+}
+
+/// Named partition of a flat parameter vector into contiguous groups.
+/// Groups are ordered by offset, non-empty, and cover `0..total`
+/// exactly (enforced at construction).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GradLayout {
+    groups: Vec<GroupSpec>,
+    total: usize,
+}
+
+impl GradLayout {
+    /// The degenerate flat layout: one group "all" covering the whole
+    /// vector.  This is the seed API's implicit layout; every flat
+    /// entry point routes through it.
+    pub fn single(dim: usize) -> Self {
+        GradLayout::from_sizes([("all".to_string(), dim)])
+    }
+
+    /// Build from `(name, len)` pairs; offsets are cumulative in
+    /// iteration order.  Panics on empty input or an empty group.
+    pub fn from_sizes<I: IntoIterator<Item = (String, usize)>>(sizes: I) -> Self {
+        let mut groups = Vec::new();
+        let mut offset = 0usize;
+        for (name, len) in sizes {
+            assert!(len > 0, "group '{name}' must be non-empty");
+            groups.push(GroupSpec { name, offset, len });
+            offset += len;
+        }
+        assert!(!groups.is_empty(), "a layout needs at least one group");
+        GradLayout { groups, total: offset }
+    }
+
+    /// Adopt the layer structure of an artifact model's [`FlatLayout`]
+    /// (one group per layer).
+    pub fn from_flat(flat: &super::FlatLayout) -> Self {
+        let l = Self::from_sizes(flat.layers.iter().map(|l| (l.name.clone(), l.size)));
+        debug_assert_eq!(l.total, flat.total, "FlatLayout must be contiguous");
+        l
+    }
+
+    /// Parse a CLI group spec: `"conv:800,fc:200"` (named) or
+    /// `"800,200"` (auto-named `g0`, `g1`, ...).
+    pub fn parse_spec(spec: &str) -> Result<Self, String> {
+        let mut sizes = Vec::new();
+        for (i, part) in spec.split(',').map(str::trim).filter(|s| !s.is_empty()).enumerate() {
+            let (name, len_str) = match part.split_once(':') {
+                Some((n, l)) => (n.trim().to_string(), l.trim()),
+                None => (format!("g{i}"), part),
+            };
+            let len: usize = len_str
+                .parse()
+                .map_err(|_| format!("bad group length '{len_str}' in spec '{spec}'"))?;
+            if len == 0 {
+                return Err(format!("group '{name}' has zero length in spec '{spec}'"));
+            }
+            sizes.push((name, len));
+        }
+        if sizes.is_empty() {
+            return Err(format!("empty group spec '{spec}'"));
+        }
+        Ok(Self::from_sizes(sizes))
+    }
+
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    pub fn num_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    pub fn groups(&self) -> &[GroupSpec] {
+        &self.groups
+    }
+
+    pub fn group(&self, g: usize) -> &GroupSpec {
+        &self.groups[g]
+    }
+
+    /// Whether this is the degenerate flat layout (one group).
+    pub fn is_single(&self) -> bool {
+        self.groups.len() == 1
+    }
+
+    /// Group index containing flat index `i` (binary search; `i` must
+    /// be in range).
+    pub fn group_of(&self, i: usize) -> usize {
+        debug_assert!(i < self.total, "index {i} out of layout total {}", self.total);
+        match self.groups.binary_search_by(|g| g.offset.cmp(&i)) {
+            Ok(exact) => exact,
+            Err(ins) => ins - 1,
+        }
+    }
+
+    /// The `[offset, offset+len)` slice of group `g` in `flat`.
+    pub fn slice<'a>(&self, g: usize, flat: &'a [f32]) -> &'a [f32] {
+        let s = &self.groups[g];
+        &flat[s.offset..s.offset + s.len]
+    }
+
+    /// Serialize as `[{"name": .., "len": ..}, ...]` (offsets are
+    /// derived, so they are not stored).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.groups
+                .iter()
+                .map(|g| obj([("name", g.name.as_str().into()), ("len", g.len.into())]))
+                .collect(),
+        )
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let arr = j.as_arr().ok_or("groups must be a JSON array")?;
+        let mut sizes = Vec::new();
+        for (i, entry) in arr.iter().enumerate() {
+            let name = entry
+                .get("name")
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .unwrap_or_else(|| format!("g{i}"));
+            let len = entry
+                .get("len")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| format!("groups[{i}] missing 'len'"))?;
+            if len == 0 {
+                return Err(format!("groups[{i}] ('{name}') has zero length"));
+            }
+            sizes.push((name, len));
+        }
+        if sizes.is_empty() {
+            return Err("groups array is empty".to_string());
+        }
+        Ok(Self::from_sizes(sizes))
+    }
+}
+
+/// A layout-aware immutable view of one flat dense gradient — the
+/// group-aware replacement for raw `&[f32]` in the public sparsifier
+/// surface.
+pub struct GradView<'a> {
+    layout: &'a GradLayout,
+    flat: &'a [f32],
+}
+
+impl<'a> GradView<'a> {
+    pub fn new(layout: &'a GradLayout, flat: &'a [f32]) -> Self {
+        assert_eq!(
+            flat.len(),
+            layout.total(),
+            "gradient length {} != layout total {}",
+            flat.len(),
+            layout.total()
+        );
+        GradView { layout, flat }
+    }
+
+    pub fn layout(&self) -> &'a GradLayout {
+        self.layout
+    }
+
+    /// The whole flat vector.
+    pub fn flat(&self) -> &'a [f32] {
+        self.flat
+    }
+
+    /// Group `g`'s slice.
+    pub fn group(&self, g: usize) -> &'a [f32] {
+        self.layout.slice(g, self.flat)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_layout_covers_everything() {
+        let l = GradLayout::single(10);
+        assert!(l.is_single());
+        assert_eq!(l.total(), 10);
+        assert_eq!(l.num_groups(), 1);
+        assert_eq!(l.group(0).offset, 0);
+        assert_eq!(l.group(0).len, 10);
+        assert_eq!(l.group(0).name, "all");
+    }
+
+    #[test]
+    fn from_sizes_computes_offsets() {
+        let l = GradLayout::from_sizes([("a".to_string(), 3), ("b".to_string(), 5)]);
+        assert_eq!(l.total(), 8);
+        assert_eq!(l.group(0).offset, 0);
+        assert_eq!(l.group(1).offset, 3);
+        assert_eq!(l.group_of(0), 0);
+        assert_eq!(l.group_of(2), 0);
+        assert_eq!(l.group_of(3), 1);
+        assert_eq!(l.group_of(7), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_group_rejected() {
+        GradLayout::from_sizes([("a".to_string(), 0)]);
+    }
+
+    #[test]
+    fn parse_spec_named_and_bare() {
+        let l = GradLayout::parse_spec("conv:6,fc:4").unwrap();
+        assert_eq!(l.group(0).name, "conv");
+        assert_eq!(l.group(1).len, 4);
+        let l = GradLayout::parse_spec("6, 4").unwrap();
+        assert_eq!(l.group(0).name, "g0");
+        assert_eq!(l.group(1).name, "g1");
+        assert_eq!(l.total(), 10);
+        assert!(GradLayout::parse_spec("").is_err());
+        assert!(GradLayout::parse_spec("a:0").is_err());
+        assert!(GradLayout::parse_spec("x:y").is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let l = GradLayout::from_sizes([("conv".to_string(), 7), ("fc".to_string(), 2)]);
+        let j = l.to_json();
+        let l2 = GradLayout::from_json(&j).unwrap();
+        assert_eq!(l, l2);
+        assert!(GradLayout::from_json(&Json::Arr(vec![])).is_err());
+    }
+
+    #[test]
+    fn view_slices_groups() {
+        let l = GradLayout::from_sizes([("a".to_string(), 2), ("b".to_string(), 3)]);
+        let flat = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let v = GradView::new(&l, &flat);
+        assert_eq!(v.group(0), &[1.0, 2.0]);
+        assert_eq!(v.group(1), &[3.0, 4.0, 5.0]);
+        assert_eq!(v.flat().len(), 5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn view_rejects_length_mismatch() {
+        let l = GradLayout::single(3);
+        let flat = [0.0; 4];
+        GradView::new(&l, &flat);
+    }
+}

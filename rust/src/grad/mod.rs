@@ -1,15 +1,25 @@
-//! Gradient bookkeeping: error-feedback state and flat-vector layout.
+//! Gradient bookkeeping: error-feedback state, parameter-group layout
+//! and flat-vector layout.
 //!
 //! Each worker owns one [`ErrorFeedback`] holding the sparsification
 //! error eps_n^t and the REGTOP-k history (a_n^{t-1}, s_n^{t-1}).  The
 //! conservation law  a = ghat + eps'  is enforced bit-exactly and
 //! property-tested (DESIGN.md invariant 2).
 //!
+//! [`GradLayout`]/[`GradView`] (see [`layout`]) carve the flat vector
+//! into named parameter groups — the layer-wise gradient API's single
+//! source of truth, consumed by `sparsify::LayerwiseSparsifier` and
+//! the bucketed `sparse::SparseUpdate` wire format.
+//!
 //! Perf note (EXPERIMENTS.md §Perf): the per-round path is
 //! zero-allocation for the length-J state — `accumulate` writes into
 //! an internal buffer, `commit` swaps it into the history and reuses
 //! the previous round's buffers; only the k-entry [`SparseVec`] is
 //! allocated per round.
+
+pub mod layout;
+
+pub use layout::{GradLayout, GradView, GroupSpec};
 
 use crate::sparse::SparseVec;
 

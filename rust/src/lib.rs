@@ -10,9 +10,11 @@
 //! Layer map (see DESIGN.md):
 //! - **L3 (this crate)** — coordination: [`coordinator`] drives the
 //!   synchronous rounds; [`sparsify`] implements the paper's Alg. 1 and
-//!   baselines; [`comm`] simulates the transport with exact byte
-//!   accounting; [`data`], [`models`], [`optim`], [`metrics`],
-//!   [`config`], [`util`] are the substrates.
+//!   baselines plus the layer-wise API (`GradLayout` parameter groups,
+//!   bucketed `SparseUpdate` wire format, per-group budgets); [`comm`]
+//!   simulates the transport with exact byte accounting (per group);
+//!   [`data`], [`models`], [`optim`], [`metrics`], [`config`],
+//!   [`util`] are the substrates.
 //! - **L2/L1 (python, build-time only)** — JAX model graphs + Pallas
 //!   kernels, lowered once to `artifacts/*.hlo.txt`; [`runtime`] loads
 //!   and executes them via the PJRT CPU client.

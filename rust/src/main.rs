@@ -7,7 +7,10 @@
 //! repro fig3   [--iters 300] [--model resnet8|mlp] [--s 0.001] [--dense] ...
 //! repro sweep  --param mu|q|workers|approx ...
 //! repro comm   [--s 0.4,0.1,0.01,0.001]
-//! repro train  --config cfg.json      (generic linreg-testbed run)
+//! repro train  --config cfg.json [--groups 60,40 --budget prop:0.1]
+//!                                      (generic linreg-testbed run;
+//!                                       --groups switches on the
+//!                                       layer-wise bucketed path)
 //! repro info                          (artifact + platform report)
 //! ```
 //!
@@ -363,11 +366,15 @@ fn cmd_train(args: Vec<String>) -> i32 {
         "Generic linreg-testbed training run from a JSON config.\n\
          CLI flags override the config: --sparsifier rebuilds the kind\n\
          from the full parameter set (incl. dgc momentum/clip and adak\n\
-         ratio/k-min/k-max); --shards drives the sharded engine.",
+         ratio/k-min/k-max); --shards drives the sharded engine;\n\
+         --groups/--budget switch on the layer-wise API (per-group\n\
+         sparsifier stacks, bucketed uploads, per-group ledger bytes).",
     )
     .required("config", "path to config JSON (see config module docs)")
     .flag("out", "results", "output directory")
     .flag("shards", "", "engine shards: 0=auto, 1=serial, N=fixed (default: config)")
+    .flag("groups", "", "parameter groups 'name:len,...' or 'len,len,...' (sum = model dim; empty = flat)")
+    .flag("budget", "", "per-group budget policy: global:K | per:K1,K2,... | prop:FRAC")
     .flag("sparsifier", "", "override sparsifier by name (dense|topk|regtopk|randk|threshold|gtopk|dgc|adak)")
     .flag("k", "1", "sparsity budget k")
     .flag("mu", "0.5", "regtopk temperature")
@@ -396,6 +403,35 @@ fn cmd_train(args: Vec<String>) -> i32 {
     };
     if p.provided("shards") {
         cfg.shards = p.get_usize("shards");
+    }
+    if p.provided("groups") {
+        let spec = p.get("groups");
+        if spec.is_empty() {
+            cfg.groups = None; // explicit flat override
+        } else {
+            cfg.groups = match regtopk::grad::GradLayout::parse_spec(spec) {
+                Ok(l) => Some(l),
+                Err(e) => {
+                    eprintln!("bad --groups: {e}");
+                    return 2;
+                }
+            };
+        }
+    }
+    if p.provided("budget") {
+        cfg.budget = match regtopk::sparsify::BudgetPolicy::parse(p.get("budget")) {
+            Ok(b) => Some(b),
+            Err(e) => {
+                eprintln!("bad --budget: {e}");
+                return 2;
+            }
+        };
+    }
+    // a budget is only consulted on the grouped path — silently
+    // ignoring it would misreport the experiment, so reject instead
+    if cfg.budget.is_some() && cfg.groups.is_none() {
+        eprintln!("a budget policy needs parameter groups: pass --groups (or \"groups\" in the config)");
+        return 2;
     }
     // Sparsifier overrides start from the CONFIG's parameters and
     // overlay only the flags the user actually passed, so
@@ -452,15 +488,19 @@ fn cmd_train(args: Vec<String>) -> i32 {
         workers: cfg.workers,
         ..LinearParams::fig2()
     };
+    if let Some(groups) = &cfg.groups {
+        if groups.total() != params.dim {
+            eprintln!(
+                "--groups total {} != testbed model dim {} (adjust the group lengths)",
+                groups.total(),
+                params.dim
+            );
+            return 2;
+        }
+    }
     let problem = generate(params, cfg.seed);
-    let log = fig2::run_curve_sharded(
-        &problem,
-        cfg.sparsifier.clone(),
-        "train",
-        cfg.iters,
-        cfg.eta,
-        cfg.shards,
-    );
+    let mut tr = fig2::trainer_from_config(&cfg, &problem);
+    let log = fig2::run_curve_with(&mut tr, &problem, "train", cfg.iters);
     // report the shard count that actually ran: small testbeds fall
     // back to serial regardless of the configured value
     println!(
@@ -472,6 +512,17 @@ fn cmd_train(args: Vec<String>) -> i32 {
         log.last().unwrap().loss,
         log.last().unwrap().opt_gap
     );
+    // layer-wise runs: per-group upload accounting from the ledger
+    let group_totals = tr.ledger.group_upload_totals();
+    if group_totals.len() > 1 {
+        let iters = cfg.iters.max(1);
+        println!("per-group upload bytes ({} groups):", group_totals.len());
+        for (name, bytes) in &group_totals {
+            println!("  {name:<16} {bytes:>12} B total  {:>10} B/round", bytes / iters);
+        }
+        let total: usize = group_totals.iter().map(|(_, b)| b).sum();
+        println!("  {:<16} {total:>12} B total", "(all groups)");
+    }
     write_logs(&[log], p.get("out"), "train");
     0
 }

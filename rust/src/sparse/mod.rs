@@ -13,12 +13,17 @@
 //! - [`engine`] — the sharded zero-allocation engine: fused
 //!   score+select over the persistent thread pool, bit-identical to
 //!   the serial selectors for every shard count.
+//! - [`SparseUpdate`] — the bucketed wire format of the layer-wise
+//!   API: one `SparseVec` per parameter group with group-local
+//!   indices (cheaper index bits per entry).
 
 pub mod approx;
 pub mod engine;
 pub mod topk;
+mod update;
 mod vec;
 
 pub use engine::SelectEngine;
 pub use topk::{select_topk, topk_threshold};
+pub use update::SparseUpdate;
 pub use vec::SparseVec;

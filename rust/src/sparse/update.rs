@@ -1,0 +1,207 @@
+//! `SparseUpdate`: the bucketed wire format of a sparsified gradient —
+//! one [`SparseVec`] per parameter group, with group-LOCAL indices.
+//!
+//! Bucketing is how real DDP stacks ship gradients (arXiv 1911.08772)
+//! and it is cheaper on the wire: an entry's index costs
+//! `ceil(log2 group_len)` bits instead of `ceil(log2 J)` (paper §2's
+//! "log J bits" argument applied per group).  The degenerate
+//! single-bucket update ([`SparseUpdate::single`], or any update
+//! conformed to `GradLayout::single`) is byte- and bit-identical to
+//! the seed's flat `SparseVec` path.
+
+use crate::grad::GradLayout;
+use crate::sparse::SparseVec;
+
+/// A bucketed sparse update.  Buckets are ordered by group offset;
+/// each bucket's `dim` is its group length and its indices are local
+/// to the group.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SparseUpdate {
+    /// per-bucket global offset (mirrors the layout's group offsets)
+    offsets: Vec<usize>,
+    buckets: Vec<SparseVec>,
+    /// total flat dimension J
+    total: usize,
+}
+
+impl SparseUpdate {
+    /// A shapeless update; [`Self::conform_to`] (called by every
+    /// `Sparsifier::step_group_into`) gives it its buckets.
+    pub fn empty() -> Self {
+        SparseUpdate::default()
+    }
+
+    /// An all-zero update shaped by `layout`.
+    pub fn zeros(layout: &GradLayout) -> Self {
+        let mut u = SparseUpdate::empty();
+        u.conform_to(layout);
+        u
+    }
+
+    /// Wrap a flat [`SparseVec`] as the degenerate single-bucket
+    /// update (the seed wire format).
+    pub fn single(sv: SparseVec) -> Self {
+        SparseUpdate { offsets: vec![0], total: sv.dim(), buckets: vec![sv] }
+    }
+
+    /// Reshape to `layout`, recycling bucket buffers (no allocation at
+    /// steady state).  All buckets come back empty with their group's
+    /// dimension.
+    pub fn conform_to(&mut self, layout: &GradLayout) {
+        self.total = layout.total();
+        self.offsets.clear();
+        self.offsets.extend(layout.groups().iter().map(|g| g.offset));
+        self.buckets.resize_with(layout.num_groups(), || SparseVec::zeros(0));
+        for (b, g) in self.buckets.iter_mut().zip(layout.groups()) {
+            b.reset(g.len);
+        }
+    }
+
+    pub fn num_buckets(&self) -> usize {
+        self.buckets.len()
+    }
+
+    pub fn buckets(&self) -> &[SparseVec] {
+        &self.buckets
+    }
+
+    pub fn bucket(&self, g: usize) -> &SparseVec {
+        &self.buckets[g]
+    }
+
+    pub fn bucket_mut(&mut self, g: usize) -> &mut SparseVec {
+        &mut self.buckets[g]
+    }
+
+    /// Global offset of bucket `g`.
+    pub fn offset(&self, g: usize) -> usize {
+        self.offsets[g]
+    }
+
+    /// Total flat dimension J.
+    pub fn total_dim(&self) -> usize {
+        self.total
+    }
+
+    /// Total transmitted entries across buckets.
+    pub fn nnz(&self) -> usize {
+        self.buckets.iter().map(SparseVec::nnz).sum()
+    }
+
+    /// Wire bytes under the bucketed cost model: each bucket pays
+    /// `ceil(log2 group_len)` index bits per entry.
+    pub fn wire_bytes(&self) -> usize {
+        self.buckets.iter().map(SparseVec::wire_bytes).sum()
+    }
+
+    /// `out += scale * self` over the full flat vector (server-side
+    /// aggregation hot path).  Buckets apply in offset order, so the
+    /// float-add order matches the flat path bit-for-bit.
+    pub fn axpy_into(&self, scale: f32, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.total);
+        for (&off, b) in self.offsets.iter().zip(&self.buckets) {
+            b.axpy_into(scale, &mut out[off..off + b.dim()]);
+        }
+    }
+
+    /// Densify into a fresh flat vector.
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0; self.total];
+        self.axpy_into(1.0, &mut out);
+        out
+    }
+
+    /// Flatten to a single global-index [`SparseVec`] into a recycled
+    /// buffer.  Bucket-local indices shift by their group offset;
+    /// bucket order == ascending global order, so the result satisfies
+    /// the wire invariant by construction.
+    pub fn flatten_into(&self, out: &mut SparseVec) {
+        out.reset(self.total);
+        for (&off, b) in self.offsets.iter().zip(&self.buckets) {
+            for (&i, &v) in b.indices().iter().zip(b.values()) {
+                out.push(off as u32 + i, v);
+            }
+        }
+    }
+
+    /// Allocating variant of [`Self::flatten_into`].
+    pub fn flatten(&self) -> SparseVec {
+        let mut out = SparseVec::zeros(self.total);
+        self.flatten_into(&mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grad::GradLayout;
+
+    fn two_group_layout() -> GradLayout {
+        GradLayout::from_sizes([("a".to_string(), 4), ("b".to_string(), 6)])
+    }
+
+    #[test]
+    fn conform_shapes_buckets_and_recycles() {
+        let layout = two_group_layout();
+        let mut u = SparseUpdate::empty();
+        u.conform_to(&layout);
+        assert_eq!(u.num_buckets(), 2);
+        assert_eq!(u.bucket(0).dim(), 4);
+        assert_eq!(u.bucket(1).dim(), 6);
+        assert_eq!(u.offset(1), 4);
+        assert_eq!(u.total_dim(), 10);
+        // reshaping to a different layout reuses the bucket vec
+        u.conform_to(&GradLayout::single(7));
+        assert_eq!(u.num_buckets(), 1);
+        assert_eq!(u.bucket(0).dim(), 7);
+    }
+
+    #[test]
+    fn single_matches_flat_sparsevec() {
+        let sv = SparseVec::new(100, vec![3, 50], vec![1.0, -2.0]);
+        let flat_bytes = sv.wire_bytes();
+        let u = SparseUpdate::single(sv.clone());
+        assert_eq!(u.nnz(), 2);
+        assert_eq!(u.wire_bytes(), flat_bytes);
+        assert_eq!(u.flatten(), sv);
+        assert_eq!(u.to_dense(), sv.to_dense());
+    }
+
+    #[test]
+    fn flatten_shifts_local_indices() {
+        let layout = two_group_layout();
+        let mut u = SparseUpdate::zeros(&layout);
+        u.bucket_mut(0).push(1, 5.0);
+        u.bucket_mut(1).push(0, -1.0);
+        u.bucket_mut(1).push(5, 2.0);
+        let flat = u.flatten();
+        assert_eq!(flat.indices(), &[1, 4, 9]);
+        assert_eq!(flat.values(), &[5.0, -1.0, 2.0]);
+        assert_eq!(u.nnz(), 3);
+        let mut dense = vec![0.0f32; 10];
+        u.axpy_into(2.0, &mut dense);
+        assert_eq!(dense[1], 10.0);
+        assert_eq!(dense[4], -2.0);
+        assert_eq!(dense[9], 4.0);
+    }
+
+    #[test]
+    fn bucketed_indices_are_cheaper_on_the_wire() {
+        // 2^20 flat dim -> 20 index bits; two 2^10 groups -> 10 bits.
+        let layout =
+            GradLayout::from_sizes([("a".to_string(), 1 << 10), ("b".to_string(), (1 << 20) - (1 << 10))]);
+        let mut grouped = SparseUpdate::zeros(&layout);
+        for i in 0..8u32 {
+            grouped.bucket_mut(0).push(i, 1.0);
+        }
+        let flat = grouped.flatten();
+        assert!(flat.dim() == 1 << 20);
+        assert!(
+            grouped.wire_bytes() < flat.wire_bytes(),
+            "grouped {} !< flat {}",
+            grouped.wire_bytes(),
+            flat.wire_bytes()
+        );
+    }
+}

@@ -28,6 +28,25 @@ impl SparseVec {
         SparseVec { dim, idx: Vec::new(), val: Vec::new() }
     }
 
+    /// Reset to an empty vector of dimension `dim`, keeping the entry
+    /// buffers' capacity (bucket-recycling path of `SparseUpdate`).
+    pub fn reset(&mut self, dim: usize) {
+        self.dim = dim;
+        self.idx.clear();
+        self.val.clear();
+    }
+
+    /// Append one entry; the wire invariant (strictly increasing
+    /// in-range indices) is enforced at the point of insertion.
+    pub fn push(&mut self, idx: u32, val: f32) {
+        if let Some(&last) = self.idx.last() {
+            assert!(idx > last, "indices must be strictly increasing ({last} then {idx})");
+        }
+        assert!((idx as usize) < self.dim, "index {idx} out of dim {}", self.dim);
+        self.idx.push(idx);
+        self.val.push(val);
+    }
+
     /// Gather `dense[i]` for every `i` in a sorted index list.
     pub fn gather(dense: &[f32], idx: &[u32]) -> Self {
         let val = idx.iter().map(|&i| dense[i as usize]).collect();
@@ -167,6 +186,33 @@ mod tests {
         let sv = SparseVec::new(1 << 17, vec![0], vec![1.0]);
         assert_eq!(sv.wire_bytes(), 7);
         assert_eq!(SparseVec::zeros(10).wire_bytes(), 0);
+    }
+
+    #[test]
+    fn reset_and_push_keep_invariants() {
+        let mut sv = SparseVec::new(8, vec![1, 4], vec![1.0, 2.0]);
+        sv.reset(5);
+        assert_eq!(sv.nnz(), 0);
+        assert_eq!(sv.dim(), 5);
+        sv.push(0, 3.0);
+        sv.push(4, -1.0);
+        assert_eq!(sv.indices(), &[0, 4]);
+        assert_eq!(sv.values(), &[3.0, -1.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn push_rejects_non_increasing() {
+        let mut sv = SparseVec::zeros(5);
+        sv.push(3, 1.0);
+        sv.push(3, 2.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn push_rejects_out_of_range() {
+        let mut sv = SparseVec::zeros(2);
+        sv.push(2, 1.0);
     }
 
     #[test]

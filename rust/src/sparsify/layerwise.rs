@@ -1,0 +1,435 @@
+//! Layer-wise sparsification: one independent sparsifier per parameter
+//! group, with per-group error feedback and a per-group budget.
+//!
+//! The journal follow-up to the paper ("Regularized Top-k: A Bayesian
+//! Framework for Gradient Sparsification", arXiv 2501.05633) makes the
+//! layer-wise formulation explicit: the posterior statistics and the
+//! budget k are naturally per-layer.  [`LayerwiseSparsifier`] realizes
+//! that here: it owns one child sparsifier (and therefore one
+//! error-feedback state, one `SelectEngine`, one scratch arena) per
+//! [`GradLayout`] group, carves the incoming gradient / previous
+//! aggregate / genie channel into group slices, and emits the bucketed
+//! [`SparseUpdate`] wire format.
+//!
+//! **Equivalence net:** under the degenerate single-group layout the
+//! wrapper is a transparent pass-through — one child over the whole
+//! vector, built with exactly the flat factory parameters — so its
+//! trajectories are bit-identical to the seed flat path for all eight
+//! sparsifier families (pinned by `rust/tests/layerwise.rs`).
+
+use crate::grad::{GradLayout, GradView};
+use crate::sparse::{SparseUpdate, SparseVec};
+use crate::sparsify::{build, RoundCtx, Sparsifier, SparsifierKind};
+use crate::util::json::{obj, Json};
+
+/// How the transmission budget is distributed across parameter groups.
+///
+/// Budgets bind the **fixed-k families** (topk / regtopk / randk /
+/// gtopk / dgc): each group's child gets the resolved k.  Families
+/// whose transmission rule is not a fixed k keep their own rule per
+/// group — `dense` sends everything, `threshold` sends by tau, `adak`
+/// adapts within its (per-group-clamped) `[k_min, k_max]` — and the
+/// resolved numbers only show up in [`LayerwiseSparsifier::budgets`]
+/// observability, not on the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub enum BudgetPolicy {
+    /// One whole-model budget k, apportioned across groups
+    /// proportionally to group length (largest-remainder rounding).
+    Global { k: usize },
+    /// Explicit per-group budgets (length must match the group count).
+    PerGroup { ks: Vec<usize> },
+    /// Per-group k = round(frac * group_len) — the paper's "sparsity
+    /// factor S" applied layer-wise.
+    Proportional { frac: f64 },
+}
+
+impl BudgetPolicy {
+    /// Resolve to one budget per group.  Every budget is clamped to
+    /// `[1, group_len]`; `Global` may therefore transmit slightly more
+    /// than `k` when `k < #groups` (documented floor, matching the
+    /// flat selectors' `k >= 1` requirement).
+    pub fn resolve(&self, layout: &GradLayout) -> Vec<usize> {
+        let clamp = |k: usize, len: usize| k.clamp(1, len);
+        match self {
+            BudgetPolicy::PerGroup { ks } => {
+                assert_eq!(
+                    ks.len(),
+                    layout.num_groups(),
+                    "per-group budget count {} != group count {}",
+                    ks.len(),
+                    layout.num_groups()
+                );
+                ks.iter().zip(layout.groups()).map(|(&k, g)| clamp(k, g.len)).collect()
+            }
+            BudgetPolicy::Proportional { frac } => layout
+                .groups()
+                .iter()
+                .map(|g| clamp((g.len as f64 * frac).round() as usize, g.len))
+                .collect(),
+            BudgetPolicy::Global { k } => {
+                let total = layout.total();
+                let k = (*k).min(total);
+                // largest-remainder apportionment of k over group lens
+                let mut ks: Vec<usize> =
+                    layout.groups().iter().map(|g| k * g.len / total).collect();
+                let assigned: usize = ks.iter().sum();
+                let mut rem: Vec<(usize, usize)> = layout
+                    .groups()
+                    .iter()
+                    .enumerate()
+                    .map(|(i, g)| (i, (k * g.len) % total))
+                    .collect();
+                // biggest fractional part first; ties toward the lower
+                // group index (determinism)
+                rem.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+                for &(i, _) in rem.iter().take(k.saturating_sub(assigned)) {
+                    ks[i] += 1;
+                }
+                ks.iter().zip(layout.groups()).map(|(&kg, g)| clamp(kg, g.len)).collect()
+            }
+        }
+    }
+
+    /// Parse a CLI budget spec: `"global:500"`, `"per:32,8,4"`,
+    /// `"prop:0.001"` (also accepts the long policy names).
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        let (policy, arg) = spec
+            .split_once(':')
+            .ok_or_else(|| format!("budget spec '{spec}' needs the form policy:value"))?;
+        match policy.trim() {
+            "global" => arg
+                .trim()
+                .parse()
+                .map(|k| BudgetPolicy::Global { k })
+                .map_err(|_| format!("bad global budget '{arg}'")),
+            "per" | "per_group" => {
+                let ks: Result<Vec<usize>, _> =
+                    arg.split(',').map(|s| s.trim().parse()).collect();
+                ks.map(|ks| BudgetPolicy::PerGroup { ks })
+                    .map_err(|_| format!("bad per-group budget list '{arg}'"))
+            }
+            "prop" | "proportional" => arg
+                .trim()
+                .parse()
+                .map_err(|_| format!("bad proportional fraction '{arg}'"))
+                .and_then(Self::proportional),
+            other => Err(format!("unknown budget policy '{other}' (global|per|prop)")),
+        }
+    }
+
+    /// Validated `Proportional` constructor: the sparsity factor must
+    /// be a real fraction in (0, 1] — `prop:10` (a user meaning 10%)
+    /// or `prop:nan` must fail loudly, not degenerate to dense/k=1.
+    pub fn proportional(frac: f64) -> Result<Self, String> {
+        if frac.is_finite() && frac > 0.0 && frac <= 1.0 {
+            Ok(BudgetPolicy::Proportional { frac })
+        } else {
+            Err(format!("proportional fraction {frac} outside (0, 1]"))
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            BudgetPolicy::Global { k } => {
+                obj([("policy", "global".into()), ("k", (*k).into())])
+            }
+            BudgetPolicy::PerGroup { ks } => {
+                obj([("policy", "per_group".into()), ("ks", ks.clone().into())])
+            }
+            BudgetPolicy::Proportional { frac } => {
+                obj([("policy", "proportional".into()), ("frac", (*frac).into())])
+            }
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let policy = j.get("policy").and_then(Json::as_str).ok_or("budget.policy missing")?;
+        match policy {
+            "global" => j
+                .get("k")
+                .and_then(Json::as_usize)
+                .map(|k| BudgetPolicy::Global { k })
+                .ok_or_else(|| "budget.k missing".to_string()),
+            "per_group" => {
+                let arr = j
+                    .get("ks")
+                    .and_then(Json::as_arr)
+                    .ok_or("budget.ks missing")?;
+                let ks: Option<Vec<usize>> = arr.iter().map(Json::as_usize).collect();
+                ks.map(|ks| BudgetPolicy::PerGroup { ks })
+                    .ok_or_else(|| "budget.ks must be integers".to_string())
+            }
+            "proportional" => j
+                .get("frac")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| "budget.frac missing".to_string())
+                .and_then(Self::proportional),
+            other => Err(format!("unknown budget policy '{other}'")),
+        }
+    }
+}
+
+/// The per-group child configuration: the family's shared parameters
+/// with the group's budget and bounds substituted in.  Group 0 of a
+/// single-group layout reproduces `kind` exactly (the equivalence
+/// net's anchor).
+fn child_kind(kind: &SparsifierKind, k: usize, len: usize, group: usize) -> SparsifierKind {
+    let k = k.clamp(1, len.max(1));
+    match kind {
+        SparsifierKind::Dense => SparsifierKind::Dense,
+        SparsifierKind::TopK { .. } => SparsifierKind::TopK { k },
+        SparsifierKind::RegTopK { mu, q, .. } => {
+            SparsifierKind::RegTopK { k, mu: *mu, q: *q }
+        }
+        SparsifierKind::RandK { seed, .. } => SparsifierKind::RandK {
+            k,
+            // distinct stream per group; group 0 keeps the flat seed
+            seed: seed.wrapping_add((group as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+        },
+        SparsifierKind::Threshold { tau } => SparsifierKind::Threshold { tau: *tau },
+        SparsifierKind::GlobalTopK { .. } => SparsifierKind::GlobalTopK { k },
+        SparsifierKind::Dgc { momentum, clip, .. } => {
+            SparsifierKind::Dgc { k, momentum: *momentum, clip: *clip }
+        }
+        SparsifierKind::AdaK { ratio, k_min, k_max } => {
+            let k_min = (*k_min).clamp(1, len.max(1));
+            SparsifierKind::AdaK {
+                ratio: *ratio,
+                k_min,
+                k_max: (*k_max).clamp(1, len.max(1)).max(k_min),
+            }
+        }
+    }
+}
+
+/// One sparsifier per parameter group.  Implements [`Sparsifier`], so
+/// workers hold it like any flat sparsifier; the bucketed
+/// [`Sparsifier::step_group_into`] entry point is the native path and
+/// the flat `step`/`step_into` compatibility path flattens the buckets.
+pub struct LayerwiseSparsifier {
+    layout: GradLayout,
+    children: Vec<Box<dyn Sparsifier>>,
+    /// resolved per-group budgets (observability + tests)
+    ks: Vec<usize>,
+    /// recycled bucket scratch for the flat compatibility path
+    scratch: SparseUpdate,
+}
+
+impl LayerwiseSparsifier {
+    /// Build one `kind`-family child per `layout` group with budgets
+    /// resolved by `budget`.  `worker` diversifies stochastic children
+    /// exactly like the flat [`build`] factory.
+    pub fn new(
+        kind: &SparsifierKind,
+        layout: GradLayout,
+        budget: &BudgetPolicy,
+        worker: usize,
+    ) -> Self {
+        let ks = budget.resolve(&layout);
+        let children = layout
+            .groups()
+            .iter()
+            .zip(&ks)
+            .enumerate()
+            .map(|(g, (spec, &k))| build(&child_kind(kind, k, spec.len, g), spec.len, worker))
+            .collect();
+        LayerwiseSparsifier { layout, children, ks, scratch: SparseUpdate::empty() }
+    }
+
+    pub fn layout(&self) -> &GradLayout {
+        &self.layout
+    }
+
+    /// Resolved per-group budgets.
+    pub fn budgets(&self) -> &[usize] {
+        &self.ks
+    }
+}
+
+/// Step every child over its group slice of `flat` into the matching
+/// bucket of `out`.  Free function so the flat compatibility path can
+/// borrow `children`/`layout` disjointly from the scratch buffer.
+fn step_children(
+    children: &mut [Box<dyn Sparsifier>],
+    layout: &GradLayout,
+    flat: &[f32],
+    ctx: &RoundCtx,
+    out: &mut SparseUpdate,
+) {
+    assert_eq!(flat.len(), layout.total(), "gradient/layout length mismatch");
+    assert_eq!(
+        ctx.gagg_prev.len(),
+        layout.total(),
+        "previous aggregate/layout length mismatch"
+    );
+    out.conform_to(layout);
+    for (g, (child, spec)) in children.iter_mut().zip(layout.groups()).enumerate() {
+        let (off, len) = (spec.offset, spec.len);
+        let gctx = RoundCtx {
+            t: ctx.t,
+            gagg_prev: &ctx.gagg_prev[off..off + len],
+            omega: ctx.omega,
+            genie_acc: ctx.genie_acc.map(|ga| &ga[off..off + len]),
+        };
+        child.step_into(&flat[off..off + len], &gctx, out.bucket_mut(g));
+    }
+}
+
+impl Sparsifier for LayerwiseSparsifier {
+    fn name(&self) -> &'static str {
+        "layerwise"
+    }
+
+    fn step(&mut self, grad: &[f32], ctx: &RoundCtx) -> SparseVec {
+        let mut out = SparseVec::zeros(grad.len());
+        self.step_into(grad, ctx, &mut out);
+        out
+    }
+
+    /// Flat compatibility path: bucketed step, then flatten (bucket
+    /// order == ascending global index order, so the wire invariant
+    /// holds by construction).
+    fn step_into(&mut self, grad: &[f32], ctx: &RoundCtx, out: &mut SparseVec) {
+        let mut scratch = std::mem::take(&mut self.scratch);
+        step_children(&mut self.children, &self.layout, grad, ctx, &mut scratch);
+        scratch.flatten_into(out);
+        self.scratch = scratch;
+    }
+
+    /// The native layer-wise path.
+    fn step_group_into(&mut self, view: &GradView, ctx: &RoundCtx, out: &mut SparseUpdate) {
+        assert_eq!(
+            view.layout(),
+            &self.layout,
+            "view layout disagrees with the sparsifier's layout"
+        );
+        step_children(&mut self.children, &self.layout, view.flat(), ctx, out);
+    }
+
+    fn set_shards(&mut self, shards: usize) {
+        for c in &mut self.children {
+            c.set_shards(shards);
+        }
+    }
+
+    fn needs_genie(&self) -> bool {
+        self.children.iter().any(|c| c.needs_genie())
+    }
+
+    fn peek_acc_into(&self, grad: &[f32], out: &mut [f32]) {
+        for (child, spec) in self.children.iter().zip(self.layout.groups()) {
+            let (off, len) = (spec.offset, spec.len);
+            child.peek_acc_into(&grad[off..off + len], &mut out[off..off + len]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout_4_6() -> GradLayout {
+        GradLayout::from_sizes([("a".to_string(), 4), ("b".to_string(), 6)])
+    }
+
+    #[test]
+    fn global_budget_apportions_by_len() {
+        let layout = layout_4_6();
+        assert_eq!(BudgetPolicy::Global { k: 5 }.resolve(&layout), vec![2, 3]);
+        // floor at 1 per group even when k is tiny
+        assert_eq!(BudgetPolicy::Global { k: 1 }.resolve(&layout), vec![1, 1]);
+        // k > total clamps to group lens
+        assert_eq!(BudgetPolicy::Global { k: 100 }.resolve(&layout), vec![4, 6]);
+    }
+
+    #[test]
+    fn proportional_and_per_group_budgets() {
+        let layout = layout_4_6();
+        assert_eq!(BudgetPolicy::Proportional { frac: 0.5 }.resolve(&layout), vec![2, 3]);
+        // rounds to >= 1
+        assert_eq!(BudgetPolicy::Proportional { frac: 0.01 }.resolve(&layout), vec![1, 1]);
+        assert_eq!(
+            BudgetPolicy::PerGroup { ks: vec![3, 9] }.resolve(&layout),
+            vec![3, 6],
+            "per-group budgets clamp to group length"
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn per_group_count_mismatch_panics() {
+        BudgetPolicy::PerGroup { ks: vec![1] }.resolve(&layout_4_6());
+    }
+
+    #[test]
+    fn budget_parse_and_json_roundtrip() {
+        for (spec, want) in [
+            ("global:500", BudgetPolicy::Global { k: 500 }),
+            ("per:3,9", BudgetPolicy::PerGroup { ks: vec![3, 9] }),
+            ("prop:0.001", BudgetPolicy::Proportional { frac: 0.001 }),
+        ] {
+            let b = BudgetPolicy::parse(spec).unwrap();
+            assert_eq!(b, want, "{spec}");
+            assert_eq!(BudgetPolicy::from_json(&b.to_json()).unwrap(), b, "{spec}");
+        }
+        assert!(BudgetPolicy::parse("nope:1").is_err());
+        assert!(BudgetPolicy::parse("global").is_err());
+        assert!(BudgetPolicy::parse("per:1,x").is_err());
+        // proportional fractions must lie in (0, 1] and be finite
+        for bad in ["prop:10", "prop:0", "prop:-0.5", "prop:nan", "prop:inf"] {
+            assert!(BudgetPolicy::parse(bad).is_err(), "{bad}");
+        }
+        assert!(BudgetPolicy::parse("prop:1").is_ok());
+        let j = BudgetPolicy::Proportional { frac: 4.0 }.to_json();
+        assert!(BudgetPolicy::from_json(&j).is_err(), "json path validates too");
+    }
+
+    #[test]
+    fn multi_group_emits_per_group_budgets() {
+        let layout = layout_4_6();
+        let mut lw = LayerwiseSparsifier::new(
+            &SparsifierKind::TopK { k: 0 },
+            layout.clone(),
+            &BudgetPolicy::PerGroup { ks: vec![1, 2] },
+            0,
+        );
+        assert_eq!(lw.budgets(), &[1, 2]);
+        let grad: Vec<f32> = (0..10).map(|i| (10 - i) as f32).collect();
+        let gagg = vec![0.0f32; 10];
+        let ctx = RoundCtx { t: 0, gagg_prev: &gagg, omega: 1.0, genie_acc: None };
+        let view = GradView::new(&layout, &grad);
+        let mut up = SparseUpdate::empty();
+        lw.step_group_into(&view, &ctx, &mut up);
+        assert_eq!(up.bucket(0).nnz(), 1, "group a budget");
+        assert_eq!(up.bucket(1).nnz(), 2, "group b budget");
+        // group a's largest is its first entry; group b's are its first two
+        assert_eq!(up.bucket(0).indices(), &[0]);
+        assert_eq!(up.bucket(1).indices(), &[0, 1]);
+    }
+
+    #[test]
+    fn flat_path_equals_flattened_buckets() {
+        let layout = layout_4_6();
+        let mk = || {
+            LayerwiseSparsifier::new(
+                &SparsifierKind::RegTopK { k: 3, mu: 0.5, q: 1.0 },
+                layout.clone(),
+                &BudgetPolicy::Global { k: 3 },
+                0,
+            )
+        };
+        let mut a = mk();
+        let mut b = mk();
+        let mut gagg = vec![0.0f32; 10];
+        for t in 0..5 {
+            let grad: Vec<f32> = (0..10).map(|i| ((i * 7 + t * 3) % 5) as f32 - 2.0).collect();
+            let ctx = RoundCtx { t, gagg_prev: &gagg, omega: 0.5, genie_acc: None };
+            let flat = a.step(&grad, &ctx);
+            let view = GradView::new(&layout, &grad);
+            let mut up = SparseUpdate::empty();
+            b.step_group_into(&view, &ctx, &mut up);
+            assert_eq!(flat, up.flatten(), "t={t}");
+            gagg = flat.to_dense();
+        }
+    }
+}

@@ -14,11 +14,18 @@
 //! | `gtopk`     | k largest |sum_n w_n a_n| (genie, infeasible)    | §3.1 "global TOP-k" |
 //! | `dgc`       | TOP-k + momentum correction/masking/clipping      | cited baseline [6,8] |
 //! | `adak`      | adaptive budget from the residual ratio           | cited baseline [9,10] |
+//!
+//! The layer-wise API (journal follow-up, arXiv 2501.05633) layers on
+//! top of the family: [`Sparsifier::step_group_into`] consumes a
+//! `grad::GradView` and emits a bucketed `sparse::SparseUpdate`;
+//! [`LayerwiseSparsifier`] wraps any family as one independent child
+//! per `grad::GradLayout` group with budgets from a [`BudgetPolicy`].
 
 mod adaptive;
 mod dense;
 mod dgc;
 mod global_topk;
+mod layerwise;
 mod randk;
 mod regtopk;
 mod threshold;
@@ -28,12 +35,14 @@ pub use adaptive::AdaK;
 pub use dense::Dense;
 pub use dgc::Dgc;
 pub use global_topk::GlobalTopK;
+pub use layerwise::{BudgetPolicy, LayerwiseSparsifier};
 pub use randk::RandK;
 pub use regtopk::RegTopK;
 pub use threshold::Threshold;
 pub use topk::TopK;
 
-use crate::sparse::SparseVec;
+use crate::grad::GradView;
+use crate::sparse::{SparseUpdate, SparseVec};
 
 /// Per-round context handed to every sparsifier by the worker loop.
 pub struct RoundCtx<'a> {
@@ -66,6 +75,26 @@ pub trait Sparsifier: Send {
     /// correctness for sparsifiers that have not opted in.
     fn step_into(&mut self, grad: &[f32], ctx: &RoundCtx, out: &mut SparseVec) {
         *out = self.step(grad, ctx);
+    }
+
+    /// Group-aware entry point of the layer-wise API: sparsify `view`
+    /// into the bucketed `out` (one bucket per layout group, indices
+    /// local to the group).  The default routes through the flat
+    /// [`Self::step_into`] and therefore serves only the degenerate
+    /// single-group layout — which makes it bit-identical to the flat
+    /// path by construction.  Multi-group layouts are handled by
+    /// [`LayerwiseSparsifier`], which overrides this with one child
+    /// sparsifier per group.
+    fn step_group_into(&mut self, view: &GradView, ctx: &RoundCtx, out: &mut SparseUpdate) {
+        let layout = view.layout();
+        assert!(
+            layout.is_single(),
+            "flat sparsifier '{}' cannot serve a {}-group layout; wrap it in LayerwiseSparsifier",
+            self.name(),
+            layout.num_groups()
+        );
+        out.conform_to(layout);
+        self.step_into(view.flat(), ctx, out.bucket_mut(0));
     }
 
     /// Number of shards for the in-sparsifier kernels (score/select).
@@ -206,8 +235,13 @@ impl SparsifierKind {
 
     /// Parse "dense" | "topk" | "regtopk" | "randk" | "threshold" |
     /// "gtopk" | "dgc" | "adak" with the legacy positional parameters;
-    /// dgc/adak take their family defaults.  Prefer
-    /// [`Self::from_params`], which exposes every tunable.
+    /// dgc/adak take their family defaults.
+    ///
+    /// Deprecated shim: every in-tree call site moved to
+    /// [`Self::from_params`] (which exposes every tunable); this stays
+    /// one release for external callers and is pinned by
+    /// `from_name_shim_matches_from_params`.
+    #[deprecated(note = "use SparsifierKind::from_params (exposes every tunable)")]
     pub fn from_name(
         name: &str,
         k: usize,
@@ -306,17 +340,17 @@ mod tests {
         }
     }
 
+    /// The deprecated positional shim must keep delegating to
+    /// `from_params` (same kinds, same family defaults) until removal.
     #[test]
-    fn from_name_roundtrip() {
+    #[allow(deprecated)]
+    fn from_name_shim_matches_from_params() {
         assert_eq!(
             SparsifierKind::from_name("regtopk", 3, 0.5, 1.0, 0.0, 0),
             Some(SparsifierKind::RegTopK { k: 3, mu: 0.5, q: 1.0 })
         );
         assert_eq!(SparsifierKind::from_name("bogus", 1, 0.0, 0.0, 0.0, 0), None);
-    }
-
-    #[test]
-    fn from_name_keeps_family_defaults_for_dgc_adak() {
+        // dgc/adak keep their family defaults under the shim
         assert_eq!(
             SparsifierKind::from_name("dgc", 5, 0.0, 0.0, 0.0, 0),
             Some(SparsifierKind::Dgc { k: 5, momentum: 0.9, clip: 0.0 })

@@ -1,0 +1,282 @@
+//! Contract of the layer-wise gradient API (PR 2 tentpole):
+//!
+//! 1. the degenerate single-group `GradLayout` is bit-identical to the
+//!    seed/PR-1 flat path for ALL EIGHT sparsifier families — at the
+//!    sparsifier level (trajectories) and through the full trainer
+//!    (model, losses, upload accounting);
+//! 2. the flat `step_into` compatibility path of a multi-group
+//!    `LayerwiseSparsifier` equals its bucketed path flattened
+//!    (property-tested over random layouts);
+//! 3. checkpoints round-trip the `GradLayout`/`BudgetPolicy` through
+//!    the config echo;
+//! 4. a multi-group RegTop-k run with `Proportional` budgets completes
+//!    end-to-end with per-group bytes in the ledger, and the threaded
+//!    driver matches the deterministic one under groups.
+
+use regtopk::config::TrainConfig;
+use regtopk::coordinator::Checkpoint;
+use regtopk::data::linear::{generate, LinearParams};
+use regtopk::experiments::fig2;
+use regtopk::grad::{GradLayout, GradView};
+use regtopk::sparse::SparseUpdate;
+use regtopk::sparsify::{
+    build, BudgetPolicy, LayerwiseSparsifier, RoundCtx, Sparsifier, SparsifierKind,
+};
+use regtopk::util::check;
+use regtopk::util::rng::Rng;
+
+/// Every family in the framework at a budget valid for `dim`.
+fn all_kinds(dim: usize) -> Vec<SparsifierKind> {
+    let k = (dim / 4).max(1);
+    vec![
+        SparsifierKind::Dense,
+        SparsifierKind::TopK { k },
+        SparsifierKind::RegTopK { k, mu: 0.5, q: 1.0 },
+        SparsifierKind::RandK { k, seed: 5 },
+        SparsifierKind::Threshold { tau: 0.5 },
+        SparsifierKind::GlobalTopK { k },
+        SparsifierKind::Dgc { k, momentum: 0.9, clip: 0.0 },
+        SparsifierKind::AdaK { ratio: 1.0, k_min: 1, k_max: 2 * k },
+    ]
+}
+
+/// Sparsifier-level equivalence: the config-built single-group
+/// layerwise stack reproduces the flat factory's trajectory bit for
+/// bit, family by family (including the genie-aided gtopk).
+#[test]
+fn single_group_layout_bit_matches_flat_for_all_families() {
+    let dim = 40;
+    let layout = GradLayout::single(dim);
+    for kind in all_kinds(dim) {
+        let mut flat = build(&kind, dim, 0);
+        let mut cfg = TrainConfig::default();
+        cfg.sparsifier = kind.clone();
+        cfg.groups = Some(layout.clone());
+        let mut grouped = cfg.build_sparsifier(dim, 0);
+        assert_eq!(grouped.name(), "layerwise");
+        assert_eq!(grouped.needs_genie(), flat.needs_genie(), "{kind:?}");
+        let mut rng = Rng::seed_from(9);
+        let mut gagg = vec![0.0f32; dim];
+        let mut up = SparseUpdate::empty();
+        for t in 0..8 {
+            let g = rng.gaussian_vec(dim, 1.0);
+            // both sides see the same genie channel (gtopk only)
+            let genie: Option<Vec<f32>> =
+                if flat.needs_genie() { Some(flat.peek_acc(&g)) } else { None };
+            let ctx = RoundCtx {
+                t,
+                gagg_prev: &gagg,
+                omega: 0.25,
+                genie_acc: genie.as_deref(),
+            };
+            // peek parity feeds the trainer's genie construction
+            assert_eq!(flat.peek_acc(&g), grouped.peek_acc(&g), "{kind:?} t={t}");
+            let want = flat.step(&g, &ctx);
+            let view = GradView::new(&layout, &g);
+            grouped.step_group_into(&view, &ctx, &mut up);
+            assert_eq!(up.num_buckets(), 1, "{kind:?}");
+            assert_eq!(want, up.flatten(), "{kind:?} t={t}");
+            gagg = want.to_dense();
+        }
+    }
+}
+
+/// End-to-end equivalence: a full trainer run under the single-group
+/// layout matches the flat config bitwise — model, per-round upload
+/// bytes, totals — for every family.
+#[test]
+fn trainer_single_group_bit_matches_flat_for_all_families() {
+    let params =
+        LinearParams { workers: 4, rows_per_worker: 60, dim: 24, ..LinearParams::fig2() };
+    let problem = generate(params, 7);
+    for kind in all_kinds(24) {
+        let flat_cfg = TrainConfig {
+            workers: 4,
+            eta: 0.03,
+            sparsifier: kind.clone(),
+            eval_every: 0,
+            ..TrainConfig::default()
+        };
+        let mut grouped_cfg = flat_cfg.clone();
+        grouped_cfg.groups = Some(GradLayout::single(24));
+        let mut tr_flat = fig2::trainer_from_config(&flat_cfg, &problem);
+        let mut tr_grp = fig2::trainer_from_config(&grouped_cfg, &problem);
+        for _ in 0..25 {
+            tr_flat.round();
+            tr_grp.round();
+        }
+        assert_eq!(tr_flat.server.w, tr_grp.server.w, "{kind:?}");
+        assert_eq!(
+            tr_flat.ledger.total_upload_bytes(),
+            tr_grp.ledger.total_upload_bytes(),
+            "{kind:?}"
+        );
+        for (a, b) in tr_flat.ledger.rounds().iter().zip(tr_grp.ledger.rounds()) {
+            assert_eq!(a.upload_bytes, b.upload_bytes, "{kind:?} round {}", a.round);
+            assert_eq!(a.upload_entries, b.upload_entries, "{kind:?} round {}", a.round);
+        }
+    }
+}
+
+/// Property: for random multi-group layouts, the flat compatibility
+/// path (`step_into`) of a layerwise stack equals its bucketed path
+/// flattened, and every bucket respects its resolved budget.
+#[test]
+fn layerwise_flat_and_bucketed_paths_agree() {
+    check::forall("layerwise_flat_vs_bucketed", |rng, _| {
+        let ngroups = rng.below(4) + 1;
+        let sizes: Vec<(String, usize)> =
+            (0..ngroups).map(|g| (format!("g{g}"), rng.below(30) + 1)).collect();
+        let layout = GradLayout::from_sizes(sizes);
+        let dim = layout.total();
+        let k = rng.below(dim) + 1;
+        let kind = SparsifierKind::RegTopK { k, mu: 0.5, q: 1.0 };
+        let budget = BudgetPolicy::Global { k };
+        let mut a = LayerwiseSparsifier::new(&kind, layout.clone(), &budget, 0);
+        let mut b = LayerwiseSparsifier::new(&kind, layout.clone(), &budget, 0);
+        let budgets = a.budgets().to_vec();
+        let mut gagg = vec![0.0f32; dim];
+        let mut up = SparseUpdate::empty();
+        for t in 0..4 {
+            let g = check::arb_vec(rng, dim);
+            let ctx = RoundCtx { t, gagg_prev: &gagg, omega: 0.5, genie_acc: None };
+            let flat = a.step(&g, &ctx);
+            let view = GradView::new(&layout, &g);
+            b.step_group_into(&view, &ctx, &mut up);
+            assert_eq!(flat, up.flatten(), "t={t}");
+            for (gi, bucket) in up.buckets().iter().enumerate() {
+                let cap = budgets[gi].min(layout.group(gi).len);
+                assert_eq!(bucket.nnz(), cap, "group {gi} budget");
+                assert_eq!(bucket.dim(), layout.group(gi).len);
+            }
+            gagg = flat.to_dense();
+        }
+    });
+}
+
+/// A flat family sparsifier refuses a multi-group view (the default
+/// trait path serves only the degenerate layout).
+#[test]
+#[should_panic]
+fn flat_sparsifier_rejects_multi_group_view() {
+    let layout = GradLayout::from_sizes([("a".to_string(), 2), ("b".to_string(), 2)]);
+    let mut sp = build(&SparsifierKind::TopK { k: 1 }, 4, 0);
+    let g = [1.0f32, 2.0, 3.0, 4.0];
+    let z = [0.0f32; 4];
+    let ctx = RoundCtx { t: 0, gagg_prev: &z, omega: 1.0, genie_acc: None };
+    let view = GradView::new(&layout, &g);
+    let mut up = SparseUpdate::empty();
+    sp.step_group_into(&view, &ctx, &mut up);
+}
+
+/// Checkpoints carry the layout/budget through the config echo.
+#[test]
+fn checkpoint_roundtrip_preserves_grad_layout() {
+    let params =
+        LinearParams { workers: 3, rows_per_worker: 40, dim: 20, ..LinearParams::fig2() };
+    let problem = generate(params, 3);
+    let cfg = TrainConfig {
+        workers: 3,
+        eta: 0.02,
+        sparsifier: SparsifierKind::RegTopK { k: 5, mu: 0.5, q: 1.0 },
+        eval_every: 0,
+        groups: Some(GradLayout::from_sizes([
+            ("conv".to_string(), 12),
+            ("fc".to_string(), 8),
+        ])),
+        budget: Some(BudgetPolicy::PerGroup { ks: vec![3, 2] }),
+        ..TrainConfig::default()
+    };
+    let mut tr = fig2::trainer_from_config(&cfg, &problem);
+    for _ in 0..3 {
+        tr.round();
+    }
+    let ck = tr.checkpoint();
+    let path = std::env::temp_dir()
+        .join(format!("regtopk_layerwise_ckpt_{}.json", std::process::id()));
+    ck.save(&path).unwrap();
+    let re = Checkpoint::load(&path).unwrap();
+    assert_eq!(re, ck);
+    let cfg2 = TrainConfig::from_json(&re.config).unwrap();
+    assert_eq!(cfg2.groups, cfg.groups, "layout must survive the checkpoint");
+    assert_eq!(cfg2.budget, cfg.budget, "budget must survive the checkpoint");
+    // restoring into a layout-identical trainer resumes the cursor
+    let mut tr2 = fig2::trainer_from_config(&cfg2, &problem);
+    tr2.restore(&re);
+    assert_eq!(tr2.iter(), 3);
+    assert_eq!(tr2.server.w, tr.server.w);
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(path.with_extension("w")).ok();
+}
+
+/// The acceptance scenario: multi-group RegTop-k with `Proportional`
+/// budgets end-to-end, with per-group bytes in the ledger.
+#[test]
+fn multi_group_regtopk_proportional_end_to_end() {
+    let params =
+        LinearParams { workers: 4, rows_per_worker: 80, dim: 100, ..LinearParams::fig2() };
+    let problem = generate(params, 11);
+    let cfg = TrainConfig {
+        workers: 4,
+        eta: 0.02,
+        sparsifier: SparsifierKind::RegTopK { k: 1, mu: 0.5, q: 1.0 },
+        eval_every: 0,
+        groups: Some(GradLayout::from_sizes([
+            ("conv".to_string(), 60),
+            ("fc".to_string(), 40),
+        ])),
+        budget: Some(BudgetPolicy::Proportional { frac: 0.1 }),
+        ..TrainConfig::default()
+    };
+    let mut tr = fig2::trainer_from_config(&cfg, &problem);
+    let initial_gap = fig2::opt_gap(&tr.server.w, &problem.w_star);
+    for _ in 0..200 {
+        let rr = tr.round();
+        assert!(rr.mean_loss.is_finite());
+    }
+    // proportional 10% budgets: 6 + 4 entries per worker per round
+    for r in tr.ledger.rounds() {
+        assert_eq!(r.upload_entries, 4 * 10, "round {}", r.round);
+    }
+    let final_gap = fig2::opt_gap(&tr.server.w, &problem.w_star);
+    assert!(final_gap < 0.9 * initial_gap, "{final_gap} !< 0.9*{initial_gap}");
+    // per-group accounting: both groups carried bytes; totals add up
+    let groups = tr.ledger.group_upload_totals();
+    assert_eq!(groups.len(), 2);
+    assert_eq!(groups[0].0, "conv");
+    assert_eq!(groups[1].0, "fc");
+    assert!(groups[0].1 > 0 && groups[1].1 > 0);
+    assert_eq!(groups[0].1 + groups[1].1, tr.ledger.total_upload_bytes());
+    // the conv group carries more budget (6 vs 4 entries/worker/round)
+    assert!(groups[0].1 > groups[1].1);
+}
+
+/// The pooled threaded driver matches the deterministic driver under a
+/// multi-group layout.
+#[test]
+fn threaded_driver_matches_deterministic_with_groups() {
+    let params =
+        LinearParams { workers: 3, rows_per_worker: 50, dim: 20, ..LinearParams::fig2() };
+    let problem = generate(params, 5);
+    let cfg = TrainConfig {
+        workers: 3,
+        eta: 0.05,
+        sparsifier: SparsifierKind::TopK { k: 1 },
+        eval_every: 0,
+        groups: Some(GradLayout::from_sizes([
+            ("a".to_string(), 12),
+            ("b".to_string(), 8),
+        ])),
+        budget: Some(BudgetPolicy::PerGroup { ks: vec![3, 2] }),
+        ..TrainConfig::default()
+    };
+    let mut a = fig2::trainer_from_config(&cfg, &problem);
+    for _ in 0..12 {
+        a.round();
+    }
+    let mut b = fig2::trainer_from_config(&cfg, &problem);
+    b.run_threaded(12);
+    assert_eq!(a.server.w, b.server.w);
+    assert_eq!(a.ledger.total_upload_bytes(), b.ledger.total_upload_bytes());
+    assert_eq!(a.ledger.group_upload_totals(), b.ledger.group_upload_totals());
+}
