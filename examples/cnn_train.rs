@@ -48,10 +48,12 @@ fn main() {
         train_rows: p.get_usize("train-rows"),
         val_rows: p.get_usize("val-rows"),
         eval_every: p.get_usize("eval-every"),
+        ..Fig3Config::default()
     };
     let model = p.get("model").to_string();
     let t0 = std::time::Instant::now();
-    let logs = run(&mut rt, cfg, &model, p.get_bool("dense")).expect("training failed");
+    let runs = run(&mut rt, &cfg, &model, p.get_bool("dense")).expect("training failed");
+    let logs: Vec<_> = runs.into_iter().map(|r| r.log).collect();
     let wall = t0.elapsed().as_secs_f64();
 
     println!("\n{model}: N={}, S={} (k = S*J), eta={}, {} iters, wall {wall:.1}s", cfg.workers, cfg.s, cfg.eta, cfg.iters);

@@ -1,0 +1,132 @@
+//! Heterogeneous layer-wise sparsification benchmarks (ISSUE 3):
+//! one RegTop-k worker step over a CNN-shaped multi-group layout —
+//! homogeneous vs heterogeneous (dense biases + Top-k tail) — plus the
+//! per-group shard-clamp observability and the bucketed wire-cost
+//! points of each variant.
+//!
+//!     cargo bench --bench heterogeneous
+//!
+//! Results merge into BENCH_PR3.json (override with $BENCH_JSON):
+//! `hetero/*` entries carry median_s/melem_per_s; `hetero_bytes/*`
+//! entries carry grouped vs flat wire bytes for one sparsified update.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use regtopk::grad::{GradLayout, GradView};
+use regtopk::sparsify::{
+    BudgetPolicy, LayerwiseSparsifier, PolicyTable, RoundCtx, Sparsifier, SparsifierKind,
+};
+use regtopk::util::bench::{black_box, Bench};
+use regtopk::util::json::Json;
+use regtopk::util::rng::Rng;
+
+fn bench_json_path() -> String {
+    std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_PR3.json".to_string())
+}
+
+/// A ResNet-ish layout: big kernel blocks interleaved with tiny bias
+/// vectors (the shape that exercises the per-group shard clamp).
+fn cnn_layout(j: usize) -> GradLayout {
+    let blocks = 8usize;
+    let bias = 64usize;
+    let kernel = (j - blocks * bias) / blocks;
+    let mut sizes = Vec::new();
+    let mut used = 0usize;
+    for b in 0..blocks {
+        let k = if b + 1 == blocks { j - used - bias } else { kernel };
+        sizes.push((format!("block{b}.w"), k));
+        sizes.push((format!("block{b}.b"), bias));
+        used += k + bias;
+    }
+    let layout = GradLayout::from_sizes(sizes);
+    assert_eq!(layout.total(), j);
+    layout
+}
+
+fn merge_byte_points(path: &str, points: &[(String, usize, usize)]) {
+    let mut map: BTreeMap<String, Json> = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|text| Json::parse(&text).ok())
+        .and_then(|j| j.as_obj().cloned())
+        .unwrap_or_default();
+    for (key, grouped, flat) in points {
+        let mut entry = BTreeMap::new();
+        entry.insert("grouped_bytes".to_string(), Json::from(*grouped));
+        entry.insert("flat_bytes".to_string(), Json::from(*flat));
+        map.insert(format!("hetero_bytes/{key}"), Json::Obj(entry));
+    }
+    match std::fs::write(Path::new(path), Json::Obj(map).dump()) {
+        Ok(()) => println!("# wrote {} byte points to {path}", points.len()),
+        Err(e) => eprintln!("# could not write {path}: {e}"),
+    }
+}
+
+fn main() {
+    let mut b = Bench::new();
+    let j = 1 << 20;
+    let s = 0.001f64;
+    let k = (j as f64 * s) as usize;
+    let mut rng = Rng::seed_from(3);
+    let grad = rng.gaussian_vec(j, 1.0);
+    let gagg = rng.gaussian_vec(j, 0.2);
+    let layout = cnn_layout(j);
+    let kind = SparsifierKind::RegTopK { k, mu: 0.5, q: 1.0 };
+    let budget = BudgetPolicy::Global { k };
+    println!(
+        "# heterogeneous layer-wise step (J={j}, {} groups, k={k})",
+        layout.num_groups()
+    );
+
+    let variants: Vec<(&str, PolicyTable)> = vec![
+        ("homogeneous", PolicyTable::default()),
+        (
+            "hetero",
+            PolicyTable::parse("*.b=dense;block0*=regtopk:mu=0.3;*=topk").unwrap(),
+        ),
+    ];
+    let mut byte_points = Vec::new();
+    for (name, table) in &variants {
+        for &shards in &[1usize, 8] {
+            let mut lw =
+                LayerwiseSparsifier::with_policies(&kind, layout.clone(), &budget, table, 0);
+            lw.set_shards(shards);
+            if shards > 1 {
+                // the over-sharding fix: tiny bias groups stay serial
+                use regtopk::sparse::engine::MIN_SHARDED_DIM;
+                let cs = lw.child_shards();
+                assert!(cs.iter().zip(layout.groups()).all(|(&c, g)| {
+                    if g.len < MIN_SHARDED_DIM { c == 1 } else { c == shards }
+                }));
+            }
+            let mut out = regtopk::sparse::SparseUpdate::empty();
+            let mut t = 0usize;
+            b.run_throughput(&format!("hetero/{name}/shards={shards}/J={j}"), j, || {
+                let ctx = RoundCtx { t, gagg_prev: &gagg, omega: 0.125, genie_acc: None };
+                let view = GradView::new(&layout, &grad);
+                lw.step_group_into(&view, &ctx, &mut out);
+                black_box(out.nnz());
+                t += 1;
+            });
+            if shards == 1 {
+                byte_points.push((
+                    format!("{name}/J={j}"),
+                    out.wire_bytes(),
+                    out.flatten().wire_bytes(),
+                ));
+            }
+        }
+    }
+
+    let path = bench_json_path();
+    b.write_json(Path::new(&path))
+        .unwrap_or_else(|e| eprintln!("# could not write {path}: {e}"));
+    merge_byte_points(&path, &byte_points);
+    println!("\n# per-update upload bytes (one worker)");
+    for (key, grouped, flat) in &byte_points {
+        println!(
+            "  {key:<28} grouped {grouped:>9} B   flat {flat:>9} B   saving {:.2}%",
+            100.0 * (1.0 - *grouped as f64 / (*flat).max(1) as f64)
+        );
+    }
+}

@@ -37,6 +37,9 @@ pub struct Ledger {
     group_names: Vec<String>,
     /// cumulative upload bytes per group, aligned with `group_names`
     group_bytes: Vec<usize>,
+    /// cumulative transmitted entries per group, aligned with
+    /// `group_names` (heterogeneous runs: shows where the budget lands)
+    group_entries: Vec<usize>,
 }
 
 impl Ledger {
@@ -49,6 +52,7 @@ impl Ledger {
     pub fn set_layout(&mut self, layout: &GradLayout) {
         self.group_names = layout.groups().iter().map(|g| g.name.clone()).collect();
         self.group_bytes = vec![0; layout.num_groups()];
+        self.group_entries = vec![0; layout.num_groups()];
     }
 
     /// Record one worker's bucketed upload for the current round.
@@ -59,6 +63,9 @@ impl Ledger {
             total += bytes;
             if let Some(acc) = self.group_bytes.get_mut(g) {
                 *acc += bytes;
+            }
+            if let Some(acc) = self.group_entries.get_mut(g) {
+                *acc += bucket.nnz();
             }
             self.current.upload_entries += bucket.nnz();
         }
@@ -78,6 +85,7 @@ impl Ledger {
         self.current.upload_entries += sv.nnz();
         if self.group_bytes.len() == 1 {
             self.group_bytes[0] += bytes;
+            self.group_entries[0] += sv.nnz();
         }
         self.upload_sizes.push(bytes);
     }
@@ -116,6 +124,16 @@ impl Ledger {
             .iter()
             .cloned()
             .zip(self.group_bytes.iter().copied())
+            .collect()
+    }
+
+    /// Cumulative transmitted entries per parameter group
+    /// `(name, entries)`.  Empty unless [`Self::set_layout`] was called.
+    pub fn group_upload_entries(&self) -> Vec<(String, usize)> {
+        self.group_names
+            .iter()
+            .cloned()
+            .zip(self.group_entries.iter().copied())
             .collect()
     }
 
@@ -191,6 +209,18 @@ mod tests {
         assert_eq!(totals[0].0, "conv");
         assert_eq!(totals[0].1, l.cost.update_bytes(up.bucket(0)));
         assert_eq!(totals[1].1, l.cost.update_bytes(up.bucket(1)));
+        let entries = l.group_upload_entries();
+        assert_eq!(entries[0], ("conv".to_string(), 2));
+        assert_eq!(entries[1], ("fc".to_string(), 1));
+    }
+
+    #[test]
+    fn single_group_flat_upload_credits_entries() {
+        let mut l = Ledger::new(CostModel::default());
+        l.set_layout(&GradLayout::single(64));
+        l.record_upload(&SparseVec::new(64, vec![1, 2], vec![1.0, 2.0]));
+        l.close_round(0, 64, 1);
+        assert_eq!(l.group_upload_entries(), vec![("all".to_string(), 2)]);
     }
 
     #[test]

@@ -20,6 +20,7 @@ pub use quantize::Quantizer;
 pub use transport::{Endpoint, Network};
 
 use crate::sparse::{SparseUpdate, SparseVec};
+use crate::util::json::{obj, Json};
 
 /// Messages exchanged between workers and the server.  Updates travel
 /// bucketed ([`SparseUpdate`], one bucket per parameter group with
@@ -35,7 +36,7 @@ pub enum Msg {
 }
 
 /// Link parameters for simulated transfer-time accounting.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct CostModel {
     /// per-message fixed latency (seconds)
     pub latency_s: f64,
@@ -54,6 +55,35 @@ impl Default for CostModel {
 }
 
 impl CostModel {
+    /// Serialize for the config echo — replaying a run from its own
+    /// manifest must reproduce the same simulated link, not the
+    /// default one (ISSUE 3 state-loss fix).
+    pub fn to_json(&self) -> Json {
+        obj([
+            ("latency_s", self.latency_s.into()),
+            ("bandwidth_bps", self.bandwidth_bps.into()),
+            ("value_bits", self.value_bits.into()),
+        ])
+    }
+
+    /// Deserialize; missing keys keep the defaults (config style).
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let mut c = CostModel::default();
+        if let Some(v) = j.get("latency_s").and_then(Json::as_f64) {
+            c.latency_s = v;
+        }
+        if let Some(v) = j.get("bandwidth_bps").and_then(Json::as_f64) {
+            c.bandwidth_bps = v;
+        }
+        if let Some(v) = j.get("value_bits").and_then(Json::as_usize) {
+            c.value_bits = v;
+        }
+        if !(c.bandwidth_bps > 0.0) || !(c.latency_s >= 0.0) || c.value_bits == 0 {
+            return Err(format!("invalid cost model {c:?}"));
+        }
+        Ok(c)
+    }
+
     /// Wire bytes of a sparse update: nnz * (value_bits + ceil(log2 J)) / 8.
     pub fn update_bytes(&self, sv: &SparseVec) -> usize {
         let dim = sv.dim().max(2);
@@ -90,6 +120,23 @@ impl CostModel {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn cost_model_json_roundtrip() {
+        let c = CostModel { latency_s: 2e-3, bandwidth_bps: 5e8, value_bits: 16 };
+        assert_eq!(CostModel::from_json(&c.to_json()).unwrap(), c);
+        // defaults round-trip too (latency 50e-6 has a fractional repr)
+        let d = CostModel::default();
+        assert_eq!(CostModel::from_json(&d.to_json()).unwrap(), d);
+        // missing keys keep defaults
+        let partial = Json::parse(r#"{"value_bits": 16}"#).unwrap();
+        let c = CostModel::from_json(&partial).unwrap();
+        assert_eq!(c.value_bits, 16);
+        assert_eq!(c.latency_s, CostModel::default().latency_s);
+        // degenerate links rejected
+        assert!(CostModel::from_json(&Json::parse(r#"{"bandwidth_bps": 0}"#).unwrap()).is_err());
+        assert!(CostModel::from_json(&Json::parse(r#"{"value_bits": 0}"#).unwrap()).is_err());
+    }
 
     #[test]
     fn update_bytes_matches_paper_cost() {

@@ -7,11 +7,14 @@ use std::path::Path;
 
 use crate::comm::CostModel;
 use crate::grad::GradLayout;
-use crate::sparsify::{BudgetPolicy, LayerwiseSparsifier, Sparsifier, SparsifierKind, SparsifierParams};
+use crate::sparsify::{
+    BudgetPolicy, LayerwiseSparsifier, PolicyTable, Sparsifier, SparsifierKind,
+    SparsifierParams,
+};
 use crate::util::json::{obj, Json};
 
 /// Top-level experiment configuration.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct TrainConfig {
     /// number of workers N
     pub workers: usize,
@@ -40,6 +43,10 @@ pub struct TrainConfig {
     /// per-group budget policy; only consulted when `groups` is set
     /// (None = `Global{k}` from the sparsifier's own budget)
     pub budget: Option<BudgetPolicy>,
+    /// heterogeneous per-group policy table (family + hyperparameters
+    /// per group-name glob); only consulted when `groups` is set.
+    /// None/empty = the homogeneous layer-wise path.
+    pub policy: Option<PolicyTable>,
 }
 
 impl Default for TrainConfig {
@@ -56,6 +63,7 @@ impl Default for TrainConfig {
             shards: 1,
             groups: None,
             budget: None,
+            policy: None,
         }
     }
 }
@@ -118,16 +126,21 @@ impl TrainConfig {
     /// Instantiate this config's sparsifier for one worker.  Without
     /// `groups` this is exactly the seed factory call (flat path,
     /// bit-identical); with `groups` it wraps the configured family in
-    /// a [`LayerwiseSparsifier`] with per-group budgets.
+    /// a [`LayerwiseSparsifier`] with per-group budgets, heterogeneous
+    /// per the optional policy table.
     pub fn build_sparsifier(&self, dim: usize, worker: usize) -> Box<dyn Sparsifier> {
         match &self.groups {
             None => crate::sparsify::build(&self.sparsifier, dim, worker),
-            Some(_) => Box::new(LayerwiseSparsifier::new(
-                &self.sparsifier,
-                self.layout_for(dim),
-                &self.effective_budget(),
-                worker,
-            )),
+            Some(_) => {
+                let empty = PolicyTable::default();
+                Box::new(LayerwiseSparsifier::with_policies(
+                    &self.sparsifier,
+                    self.layout_for(dim),
+                    &self.effective_budget(),
+                    self.policy.as_ref().unwrap_or(&empty),
+                    worker,
+                ))
+            }
         }
     }
 
@@ -171,16 +184,24 @@ impl TrainConfig {
             ("iters", self.iters.into()),
             ("eta", (self.eta as f64).into()),
             ("sparsifier", sp),
+            ("omega_uniform", self.omega_uniform.into()),
             ("seed", (self.seed as usize).into()),
             ("eval_every", self.eval_every.into()),
+            ("cost", self.cost.to_json()),
             ("shards", self.shards.into()),
         ]);
         if let Json::Obj(m) = &mut j {
+            // budget/policy are only consulted on the grouped path, so
+            // they are only echoed alongside groups — a manifest must
+            // never claim a policy the run did not apply
             if let Some(l) = &self.groups {
                 m.insert("groups".to_string(), l.to_json());
-            }
-            if let Some(b) = &self.budget {
-                m.insert("budget".to_string(), b.to_json());
+                if let Some(b) = &self.budget {
+                    m.insert("budget".to_string(), b.to_json());
+                }
+                if let Some(p) = &self.policy {
+                    m.insert("policy".to_string(), p.to_json());
+                }
             }
         }
         j
@@ -210,6 +231,12 @@ impl TrainConfig {
         if let Some(v) = j.get("eval_every").and_then(Json::as_usize) {
             c.eval_every = v;
         }
+        if let Some(v) = j.get("omega_uniform").and_then(Json::as_bool) {
+            c.omega_uniform = v;
+        }
+        if let Some(cm) = j.get("cost") {
+            c.cost = CostModel::from_json(cm)?;
+        }
         if let Some(v) = j.get("shards").and_then(Json::as_usize) {
             c.shards = v;
         }
@@ -218,6 +245,9 @@ impl TrainConfig {
         }
         if let Some(b) = j.get("budget") {
             c.budget = Some(BudgetPolicy::from_json(b)?);
+        }
+        if let Some(p) = j.get("policy") {
+            c.policy = Some(PolicyTable::from_json(p)?);
         }
         if let Some(sp) = j.get("sparsifier") {
             let name = sp.get("name").and_then(Json::as_str).ok_or("sparsifier.name missing")?;
@@ -258,6 +288,70 @@ mod tests {
         let c2 = TrainConfig::from_json(&j).unwrap();
         assert_eq!(c2.workers, 20);
         assert_eq!(c2.sparsifier, c.sparsifier);
+    }
+
+    /// The ISSUE 3 state-loss regression: EVERY field — including the
+    /// formerly dropped `cost` and `omega_uniform` — survives the
+    /// to_json/from_json round trip, so replaying a run from its own
+    /// manifest reproduces the exact configuration.
+    #[test]
+    fn full_field_roundtrip_drops_nothing() {
+        let c = TrainConfig {
+            workers: 11,
+            iters: 321,
+            eta: 0.037,
+            sparsifier: SparsifierKind::RegTopK { k: 13, mu: 0.125, q: 2.5 },
+            omega_uniform: false,
+            seed: 987654321,
+            eval_every: 17,
+            cost: crate::comm::CostModel {
+                latency_s: 3.5e-4,
+                bandwidth_bps: 2.5e8,
+                value_bits: 16,
+            },
+            shards: 6,
+            groups: Some(GradLayout::from_sizes([
+                ("conv0.w".to_string(), 70),
+                ("conv0.b".to_string(), 10),
+                ("fc.w".to_string(), 20),
+            ])),
+            budget: Some(BudgetPolicy::PerGroup { ks: vec![7, 1, 2] }),
+            policy: Some(
+                PolicyTable::parse("conv*=regtopk:mu=0.5..0.1/100;*.b=dense;*=topk")
+                    .unwrap(),
+            ),
+        };
+        let c2 = TrainConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2, c, "a config field was dropped by the JSON round trip");
+        // and the default config round-trips to itself as well
+        let d = TrainConfig::default();
+        assert_eq!(TrainConfig::from_json(&d.to_json()).unwrap(), d);
+    }
+
+    #[test]
+    fn groupless_config_never_echoes_budget_or_policy() {
+        // budget/policy without groups are never applied, so the
+        // manifest echo must not claim them (the CLI rejects the
+        // combination outright; a programmatic config just drops them)
+        let mut c = TrainConfig::default();
+        c.budget = Some(BudgetPolicy::Global { k: 5 });
+        c.policy = Some(PolicyTable::parse("*=dense").unwrap());
+        let j = c.to_json();
+        assert!(j.get("budget").is_none());
+        assert!(j.get("policy").is_none());
+        let c2 = TrainConfig::from_json(&j).unwrap();
+        assert!(c2.budget.is_none() && c2.policy.is_none());
+    }
+
+    #[test]
+    fn cost_model_previously_lost_in_roundtrip() {
+        // the exact failure mode: a non-default link silently reverted
+        let mut c = TrainConfig::default();
+        c.cost.bandwidth_bps = 1e6;
+        c.omega_uniform = false;
+        let c2 = TrainConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.cost.bandwidth_bps, 1e6);
+        assert!(!c2.omega_uniform);
     }
 
     #[test]
@@ -338,6 +432,24 @@ mod tests {
         assert_eq!(c.build_sparsifier(20, 0).name(), "layerwise");
         // default budget is Global{k from the sparsifier}
         assert_eq!(c.effective_budget(), BudgetPolicy::Global { k: 4 });
+    }
+
+    #[test]
+    fn build_sparsifier_heterogeneous_policy() {
+        let mut c = TrainConfig::default();
+        c.sparsifier = SparsifierKind::TopK { k: 4 };
+        c.groups = Some(GradLayout::from_sizes([
+            ("w".to_string(), 12),
+            ("b".to_string(), 8),
+        ]));
+        c.policy = Some(PolicyTable::parse("b=dense").unwrap());
+        let sp = c.build_sparsifier(20, 0);
+        assert_eq!(sp.name(), "layerwise");
+        assert_eq!(sp.group_families(), vec!["topk", "dense"]);
+        // a flat build reports its own single family
+        c.groups = None;
+        c.policy = None;
+        assert_eq!(c.build_sparsifier(20, 0).group_families(), vec!["topk"]);
     }
 
     #[test]

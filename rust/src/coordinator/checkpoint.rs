@@ -1,15 +1,33 @@
 //! Checkpointing: save/restore the global model and training cursor so
 //! long runs (Fig. 3 at full scale) survive restarts.
 //!
-//! Format: a JSON header (config echo, iteration, dims, crc) followed
+//! Format: a JSON header (config echo, iteration, dims, crcs) followed
 //! by the raw little-endian f32 model vector in a sidecar `.w` file —
-//! human-inspectable metadata, zero-parse bulk data.
+//! human-inspectable metadata, zero-parse bulk data.  When the trainer
+//! provides resume state (the previous aggregate `g^{t-1}` plus every
+//! worker's sparsifier history), it travels in a second binary sidecar
+//! `.ef`: without it a resumed RegTop-k run silently cold-restarts its
+//! Bayesian history and degrades to plain Top-k (the ISSUE 3 bug);
+//! with it the resumed trajectory is bit-identical to an uninterrupted
+//! one (pinned by `rust/tests/resume.rs`).  Legacy model-only
+//! checkpoints (no `.ef`) still load and restore cold.
 
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
+use crate::grad::EfState;
+use crate::sparsify::SparsifierState;
 use crate::util::json::{obj, Json};
+
+/// The trainer-level resume state persisted next to the model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainState {
+    /// g^{t-1}: the aggregate broadcast in the last completed round
+    pub gagg_prev: Vec<f32>,
+    /// one sparsifier state per worker, in worker-id order
+    pub workers: Vec<SparsifierState>,
+}
 
 /// A saved training state.
 #[derive(Clone, Debug, PartialEq)]
@@ -17,6 +35,9 @@ pub struct Checkpoint {
     pub iter: usize,
     pub w: Vec<f32>,
     pub config: Json,
+    /// sparsifier/aggregate resume state (None = legacy model-only
+    /// checkpoint; restore falls back to the cold error-feedback start)
+    pub state: Option<TrainState>,
 }
 
 fn crc32(data: &[u8]) -> u32 {
@@ -34,31 +55,48 @@ fn crc32(data: &[u8]) -> u32 {
 
 impl Checkpoint {
     pub fn new(iter: usize, w: Vec<f32>, config: Json) -> Self {
-        Checkpoint { iter, w, config }
+        Checkpoint { iter, w, config, state: None }
+    }
+
+    /// [`Self::new`] with the full resume state attached.
+    pub fn with_state(iter: usize, w: Vec<f32>, config: Json, state: TrainState) -> Self {
+        Checkpoint { iter, w, config, state: Some(state) }
     }
 
     fn weight_path(path: &Path) -> PathBuf {
         path.with_extension("w")
     }
 
-    /// Write `<path>` (JSON header) and `<path minus ext>.w` (weights).
+    fn state_path(path: &Path) -> PathBuf {
+        path.with_extension("ef")
+    }
+
+    /// Write `<path>` (JSON header), `<path minus ext>.w` (weights) and
+    /// — when resume state is attached — `<path minus ext>.ef`.
     pub fn save(&self, path: &Path) -> Result<()> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
         let raw: Vec<u8> = self.w.iter().flat_map(|v| v.to_le_bytes()).collect();
-        let header = obj([
+        let mut header = obj([
             ("iter", Json::from(self.iter)),
             ("dim", Json::from(self.w.len())),
             ("crc32", Json::from(crc32(&raw) as usize)),
             ("config", self.config.clone()),
         ]);
+        if let Some(state) = &self.state {
+            let sbytes = encode_train_state(state);
+            if let Json::Obj(m) = &mut header {
+                m.insert("state_crc32".to_string(), Json::from(crc32(&sbytes) as usize));
+            }
+            std::fs::write(Self::state_path(path), sbytes)?;
+        }
         std::fs::write(path, header.dump())?;
         std::fs::write(Self::weight_path(path), raw)?;
         Ok(())
     }
 
-    /// Load and verify a checkpoint pair.
+    /// Load and verify a checkpoint (pair or triple).
     pub fn load(path: &Path) -> Result<Self> {
         let header = Json::parse(
             &std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?,
@@ -87,12 +125,184 @@ impl Checkpoint {
             .chunks_exact(4)
             .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
             .collect();
+        let state = match header.get("state_crc32").and_then(Json::as_usize) {
+            None => None,
+            Some(want) => {
+                let spath = Self::state_path(path);
+                let sbytes = std::fs::read(&spath)
+                    .with_context(|| format!("reading resume state {spath:?}"))?;
+                if crc32(&sbytes) != want as u32 {
+                    bail!("resume-state crc mismatch (corrupt or truncated)");
+                }
+                Some(decode_train_state(&sbytes)?)
+            }
+        };
         Ok(Checkpoint {
             iter,
             w,
             config: header.get("config").cloned().unwrap_or(Json::Null),
+            state,
         })
     }
+}
+
+// ---- binary codec for the `.ef` sidecar (all little-endian) ---------
+
+fn put_u32(out: &mut Vec<u8>, v: usize) {
+    out.extend_from_slice(&u32::try_from(v).expect("state section too large").to_le_bytes());
+}
+
+fn put_f32s(out: &mut Vec<u8>, v: &[f32]) {
+    put_u32(out, v.len());
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn encode_ef(out: &mut Vec<u8>, ef: &EfState) {
+    out.push(ef.warm as u8);
+    put_f32s(out, &ef.eps);
+    put_f32s(out, &ef.acc_prev);
+    put_f32s(out, &ef.mask_prev);
+}
+
+fn encode_state(out: &mut Vec<u8>, st: &SparsifierState) {
+    match st {
+        SparsifierState::Stateless => out.push(0),
+        SparsifierState::Ef(ef) => {
+            out.push(1);
+            encode_ef(out, ef);
+        }
+        SparsifierState::Grouped(children) => {
+            out.push(2);
+            put_u32(out, children.len());
+            for c in children {
+                encode_state(out, c);
+            }
+        }
+        SparsifierState::Dgc { vel, acc } => {
+            out.push(3);
+            put_f32s(out, vel);
+            put_f32s(out, acc);
+        }
+        SparsifierState::Residual { eps } => {
+            out.push(4);
+            put_f32s(out, eps);
+        }
+        SparsifierState::EfRng { ef, rng, gauss_spare } => {
+            out.push(5);
+            encode_ef(out, ef);
+            for word in rng {
+                out.extend_from_slice(&word.to_le_bytes());
+            }
+            out.push(gauss_spare.is_some() as u8);
+            out.extend_from_slice(&gauss_spare.unwrap_or(0.0).to_le_bytes());
+        }
+    }
+}
+
+fn encode_train_state(st: &TrainState) -> Vec<u8> {
+    let mut out = b"RTKS".to_vec();
+    put_f32s(&mut out, &st.gagg_prev);
+    put_u32(&mut out, st.workers.len());
+    for w in &st.workers {
+        encode_state(&mut out, w);
+    }
+    out
+}
+
+/// Byte cursor over the `.ef` sidecar.
+struct Cur<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            bail!("resume state truncated at byte {}", self.i);
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<usize> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]) as usize)
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        let b = self.take(8)?;
+        Ok(f64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()?;
+        let b = self.take(4 * n)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn ef(&mut self) -> Result<EfState> {
+        let warm = self.u8()? != 0;
+        Ok(EfState { warm, eps: self.f32s()?, acc_prev: self.f32s()?, mask_prev: self.f32s()? })
+    }
+
+    fn state(&mut self, depth: usize) -> Result<SparsifierState> {
+        Ok(match self.u8()? {
+            0 => SparsifierState::Stateless,
+            1 => SparsifierState::Ef(self.ef()?),
+            2 => {
+                if depth > 1 {
+                    bail!("resume state nests groups deeper than the sparsifier stack");
+                }
+                let n = self.u32()?;
+                let mut children = Vec::with_capacity(n.min(1 << 16));
+                for _ in 0..n {
+                    children.push(self.state(depth + 1)?);
+                }
+                SparsifierState::Grouped(children)
+            }
+            3 => SparsifierState::Dgc { vel: self.f32s()?, acc: self.f32s()? },
+            4 => SparsifierState::Residual { eps: self.f32s()? },
+            5 => {
+                let ef = self.ef()?;
+                let rng = [self.u64()?, self.u64()?, self.u64()?, self.u64()?];
+                let has_spare = self.u8()? != 0;
+                let spare = self.f64()?;
+                SparsifierState::EfRng { ef, rng, gauss_spare: has_spare.then_some(spare) }
+            }
+            t => bail!("unknown resume-state tag {t}"),
+        })
+    }
+}
+
+fn decode_train_state(bytes: &[u8]) -> Result<TrainState> {
+    let mut c = Cur { b: bytes, i: 0 };
+    if c.take(4)? != b"RTKS" {
+        bail!("bad resume-state magic");
+    }
+    let gagg_prev = c.f32s()?;
+    let n = c.u32()?;
+    let mut workers = Vec::with_capacity(n.min(1 << 16));
+    for _ in 0..n {
+        workers.push(c.state(0)?);
+    }
+    if c.i != bytes.len() {
+        bail!("trailing bytes in resume state");
+    }
+    Ok(TrainState { gagg_prev, workers })
 }
 
 #[cfg(test)]
@@ -144,6 +354,86 @@ mod tests {
         assert!(Checkpoint::load(&path).is_err());
         std::fs::remove_file(&path).ok();
         std::fs::remove_file(&wpath).ok();
+    }
+
+    #[test]
+    fn state_sidecar_roundtrips_every_variant() {
+        let ef = EfState {
+            eps: vec![1.0, -2.5],
+            acc_prev: vec![0.5, 0.0],
+            mask_prev: vec![1.0, 0.0],
+            warm: true,
+        };
+        let state = TrainState {
+            gagg_prev: vec![0.25, -0.125, 3.0],
+            workers: vec![
+                SparsifierState::Stateless,
+                SparsifierState::Ef(ef.clone()),
+                SparsifierState::EfRng {
+                    ef: ef.clone(),
+                    rng: [1, u64::MAX, 3, 4],
+                    gauss_spare: Some(-0.75),
+                },
+                SparsifierState::EfRng { ef: ef.clone(), rng: [9, 8, 7, 6], gauss_spare: None },
+                SparsifierState::Dgc { vel: vec![1.0], acc: vec![-1.0] },
+                SparsifierState::Residual { eps: vec![0.0, 4.0] },
+                SparsifierState::Grouped(vec![
+                    SparsifierState::Ef(ef.clone()),
+                    SparsifierState::Stateless,
+                ]),
+            ],
+        };
+        let bytes = encode_train_state(&state);
+        assert_eq!(decode_train_state(&bytes).unwrap(), state);
+        // truncation and garbage are errors, not panics
+        assert!(decode_train_state(&bytes[..bytes.len() - 1]).is_err());
+        assert!(decode_train_state(b"XXXX").is_err());
+        let mut extra = bytes.clone();
+        extra.push(0);
+        assert!(decode_train_state(&extra).is_err(), "trailing bytes");
+    }
+
+    #[test]
+    fn checkpoint_with_state_roundtrips_on_disk() {
+        let path = tmp("state.json");
+        let state = TrainState {
+            gagg_prev: vec![1.0, 2.0],
+            workers: vec![SparsifierState::Ef(EfState {
+                eps: vec![0.5, -0.5],
+                acc_prev: vec![1.5, 2.5],
+                mask_prev: vec![0.0, 1.0],
+                warm: true,
+            })],
+        };
+        let ck = Checkpoint::with_state(7, vec![1.0, -1.0], Json::Null, state);
+        ck.save(&path).unwrap();
+        let re = Checkpoint::load(&path).unwrap();
+        assert_eq!(re, ck);
+        // corrupt the state sidecar: load must fail loudly
+        let spath = path.with_extension("ef");
+        let mut raw = std::fs::read(&spath).unwrap();
+        let last = raw.len() - 1;
+        raw[last] ^= 0xFF;
+        std::fs::write(&spath, &raw).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        // missing sidecar while the header promises one: also an error
+        std::fs::remove_file(&spath).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(path.with_extension("w")).ok();
+    }
+
+    #[test]
+    fn legacy_checkpoint_without_state_still_loads() {
+        let path = tmp("legacy.json");
+        let ck = Checkpoint::new(3, vec![2.0; 4], Json::Null);
+        ck.save(&path).unwrap();
+        assert!(!path.with_extension("ef").exists(), "no sidecar for model-only saves");
+        let re = Checkpoint::load(&path).unwrap();
+        assert_eq!(re.state, None);
+        assert_eq!(re, ck);
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(path.with_extension("w")).ok();
     }
 
     #[test]

@@ -21,7 +21,7 @@ mod server;
 mod trainer;
 mod worker;
 
-pub use checkpoint::Checkpoint;
+pub use checkpoint::{Checkpoint, TrainState};
 pub use server::Server;
 pub use trainer::{EvalFn, RoundResult, Trainer};
 pub use worker::Worker;

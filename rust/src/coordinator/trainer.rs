@@ -76,21 +76,51 @@ impl Trainer {
         self.t
     }
 
-    /// Snapshot the current training state.
+    /// Snapshot the current training state: model + cursor + the full
+    /// resume state (previous aggregate and every worker's sparsifier
+    /// history), so a restored run continues the trajectory instead of
+    /// cold-restarting error feedback.
     pub fn checkpoint(&self) -> crate::coordinator::Checkpoint {
-        crate::coordinator::Checkpoint::new(
+        let state = crate::coordinator::TrainState {
+            gagg_prev: self.gagg_prev.clone(),
+            workers: self.workers.iter().map(Worker::export_state).collect(),
+        };
+        crate::coordinator::Checkpoint::with_state(
             self.t,
             self.server.w.clone(),
             self.config.to_json(),
+            state,
         )
     }
 
-    /// Restore model + cursor from a checkpoint (sparsifier error
-    /// state restarts cold — the standard error-feedback resume).
+    /// Restore model + cursor from a checkpoint.  When the checkpoint
+    /// carries resume state (every checkpoint this trainer writes
+    /// does), `g^{t-1}` and each worker's error-feedback/sparsifier
+    /// history are restored too, making the resumed trajectory
+    /// bit-identical to an uninterrupted run; a legacy model-only
+    /// checkpoint restores cold as before.
     pub fn restore(&mut self, ck: &crate::coordinator::Checkpoint) {
         assert_eq!(ck.w.len(), self.server.dim(), "checkpoint dim mismatch");
         self.server.w.copy_from_slice(&ck.w);
         self.t = ck.iter;
+        if let Some(st) = &ck.state {
+            assert_eq!(
+                st.gagg_prev.len(),
+                self.server.dim(),
+                "resume-state aggregate dim mismatch"
+            );
+            assert_eq!(
+                st.workers.len(),
+                self.workers.len(),
+                "resume-state worker count mismatch"
+            );
+            self.gagg_prev.copy_from_slice(&st.gagg_prev);
+            for (w, s) in self.workers.iter_mut().zip(&st.workers) {
+                let id = w.id;
+                w.import_state(s)
+                    .unwrap_or_else(|e| panic!("restoring worker {id}: {e}"));
+            }
+        }
     }
 
     /// One synchronous round (deterministic reference driver).

@@ -92,6 +92,16 @@ impl Worker {
         self.sparsifier.set_shards(shards);
     }
 
+    /// Persistent sparsifier state for checkpointing.
+    pub fn export_state(&self) -> crate::sparsify::SparsifierState {
+        self.sparsifier.export_state()
+    }
+
+    /// Restore a previously exported sparsifier state (resume path).
+    pub fn import_state(&mut self, st: &crate::sparsify::SparsifierState) -> Result<(), String> {
+        self.sparsifier.import_state(st)
+    }
+
     pub fn needs_genie(&self) -> bool {
         self.sparsifier.needs_genie()
     }

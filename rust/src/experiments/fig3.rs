@@ -7,19 +7,32 @@
 //! `cnn_eval_resnet8` HLO executables through PJRT) — python never
 //! runs here.  With `--model mlp` the MLP artifacts are used instead
 //! (faster; same J-scale sparsification dynamics).
+//!
+//! With `layerwise` set, the artifact model's REAL per-layer
+//! [`FlatLayout`] (from `artifacts/manifest.json`) is adopted as the
+//! run's `GradLayout` via [`GradLayout::from_flat`]: workers carve
+//! their gradients per layer, updates travel bucketed, the ledger
+//! accounts bytes/entries per layer, and an optional heterogeneous
+//! `PolicyTable` assigns families/hyperparameters per layer-name glob.
+//! When the PJRT binding is the offline stub (no artifacts), the
+//! degraded path ([`run_degraded`]) exercises the identical layer-wise
+//! protocol on the linreg testbed with a synthetic CNN-shaped layout.
 
 use anyhow::Result;
 
 use crate::config::TrainConfig;
 use crate::coordinator::{Server, Trainer, Worker};
 use crate::data::cifar_like;
+use crate::data::linear::{generate, LinearParams};
+use crate::experiments::fig2;
+use crate::grad::GradLayout;
 use crate::metrics::{IterRecord, RunLog};
 use crate::models::artifact::{CnnEval, CnnModel, MlpModel};
 use crate::optim::Sgd;
 use crate::runtime::Runtime;
-use crate::sparsify::{build, SparsifierKind};
+use crate::sparsify::{BudgetPolicy, PolicyTable, SparsifierKind};
 
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct Fig3Config {
     pub workers: usize,
     pub iters: usize,
@@ -32,6 +45,13 @@ pub struct Fig3Config {
     pub train_rows: usize,
     pub val_rows: usize,
     pub eval_every: usize,
+    /// adopt the artifact model's per-layer layout (bucketed path)
+    pub layerwise: bool,
+    /// heterogeneous per-layer policies (implies `layerwise`)
+    pub policy: Option<PolicyTable>,
+    /// per-layer budget policy (default: `Global{k}`, the same total
+    /// budget as the flat run, apportioned by layer size)
+    pub budget: Option<BudgetPolicy>,
 }
 
 impl Default for Fig3Config {
@@ -47,8 +67,60 @@ impl Default for Fig3Config {
             train_rows: 1600,
             val_rows: 200,
             eval_every: 25,
+            layerwise: false,
+            policy: None,
+            budget: None,
         }
     }
+}
+
+/// One Fig. 3 run: the metric log plus — on the layer-wise path — the
+/// per-layer ledger table `(layer, family, upload bytes, entries)`.
+pub struct Fig3Run {
+    pub log: RunLog,
+    pub groups: Vec<(String, String, usize, usize)>,
+}
+
+impl Fig3Config {
+    fn wants_layerwise(&self) -> bool {
+        self.layerwise || self.policy.is_some()
+    }
+
+    /// The trainer-level config for one sparsifier kind over `layout`.
+    fn train_config(&self, kind: SparsifierKind, k: usize, layout: &GradLayout) -> TrainConfig {
+        let layerwise = self.wants_layerwise();
+        TrainConfig {
+            workers: self.workers,
+            eta: self.eta,
+            sparsifier: kind,
+            eval_every: self.eval_every,
+            seed: self.seed,
+            groups: layerwise.then(|| layout.clone()),
+            budget: layerwise
+                .then(|| self.budget.clone().unwrap_or(BudgetPolicy::Global { k })),
+            policy: if layerwise { self.policy.clone() } else { None },
+            ..TrainConfig::default()
+        }
+    }
+}
+
+/// Drain the per-layer ledger table out of a finished trainer.
+fn group_table(tr: &Trainer) -> Vec<(String, String, usize, usize)> {
+    let totals = tr.ledger.group_upload_totals();
+    if totals.len() <= 1 {
+        return Vec::new();
+    }
+    let entries = tr.ledger.group_upload_entries();
+    let families = tr.workers[0].sparsifier.group_families();
+    totals
+        .into_iter()
+        .zip(entries)
+        .enumerate()
+        .map(|(g, ((name, bytes), (_, n)))| {
+            let fam = families.get(g).copied().unwrap_or("?").to_string();
+            (name, fam, bytes, n)
+        })
+        .collect()
 }
 
 /// Build a trainer for one sparsifier over shared data/artifacts.
@@ -56,16 +128,20 @@ fn build_trainer(
     rt: &mut Runtime,
     cfg: &Fig3Config,
     kind: SparsifierKind,
+    k: usize,
     model: &str,
+    layout: &GradLayout,
     train: &cifar_like::ImageSet,
 ) -> Result<Trainer> {
     let grad_name = match model {
         "mlp" => "mlp_grad".to_string(),
         m => format!("cnn_grad_{m}"),
     };
+    let model_key = if model == "mlp" { "mlp" } else { model };
     let exe = rt.load(&grad_name)?;
-    let w0 = rt.load_init(if model == "mlp" { "mlp" } else { model })?;
+    let w0 = rt.load_init(model_key)?;
     let dim = w0.len();
+    let config = cfg.train_config(kind, k, layout);
     let shards = train.shard(cfg.workers);
     let workers: Vec<Worker> = shards
         .into_iter()
@@ -78,29 +154,61 @@ fn build_trainer(
             } else {
                 Box::new(CnnModel::new(exe.clone(), shard, seed))
             };
-            Worker::new(i, boxed, build(&kind, dim, i))
+            Worker::with_layout(i, boxed, config.build_sparsifier(dim, i), layout.clone())
         })
         .collect();
-    let config = TrainConfig {
-        workers: cfg.workers,
-        eta: cfg.eta,
-        sparsifier: kind,
-        eval_every: cfg.eval_every,
-        seed: cfg.seed,
-        ..TrainConfig::default()
-    };
     let server = Server::new(w0, Box::new(Sgd::new(cfg.eta)));
     Ok(Trainer::new(config, workers, server))
+}
+
+/// The sparsifier lineup of the figure at budget `k`.
+///
+/// When a policy table pins an explicit family for EVERY layer, the
+/// base family of a lineup entry never reaches any child, so running
+/// topk-lw AND regtopk-lw would train (near-)identical stacks under
+/// misleading labels.  In that case the lineup collapses to one
+/// `policy-lw` run with the RegTop-k base, so `cfg.mu`/`cfg.q` still
+/// flow into regtopk-family rules that leave mu/Q unset.
+fn lineup(
+    cfg: &Fig3Config,
+    k: usize,
+    layout: &GradLayout,
+    with_dense: bool,
+) -> Vec<(String, SparsifierKind)> {
+    let suffix = if cfg.wants_layerwise() { "-lw" } else { "" };
+    if let Some(p) = &cfg.policy {
+        let fully_pinned = layout
+            .groups()
+            .iter()
+            .all(|g| p.resolve(&g.name).is_some_and(|r| r.family.is_some()));
+        if fully_pinned {
+            return vec![(
+                "policy-lw".to_string(),
+                SparsifierKind::RegTopK { k, mu: cfg.mu, q: cfg.q },
+            )];
+        }
+    }
+    let mut kinds = vec![
+        (format!("topk{suffix}"), SparsifierKind::TopK { k }),
+        (
+            format!("regtopk{suffix}"),
+            SparsifierKind::RegTopK { k, mu: cfg.mu, q: cfg.q },
+        ),
+    ];
+    if with_dense {
+        kinds.push((format!("dense{suffix}"), SparsifierKind::Dense));
+    }
+    kinds
 }
 
 /// Run the figure: accuracy curves for TOP-k and REGTOP-k (and dense
 /// when `with_dense`).  `model` is "resnet8" (default) or "mlp".
 pub fn run(
     rt: &mut Runtime,
-    cfg: Fig3Config,
+    cfg: &Fig3Config,
     model: &str,
     with_dense: bool,
-) -> Result<Vec<RunLog>> {
+) -> Result<Vec<Fig3Run>> {
     let train = cifar_like::generate(cfg.train_rows, 0.15, cfg.seed);
     let val = cifar_like::generate(cfg.val_rows, 0.15, cfg.seed ^ 0xEEEE);
     let eval_exe = if model == "mlp" {
@@ -109,20 +217,24 @@ pub fn run(
         Some(CnnEval::new(rt.load(&format!("cnn_eval_{model}"))?, val))
     };
 
-    let dim = rt.load_init(if model == "mlp" { "mlp" } else { model })?.len();
+    let model_key = if model == "mlp" { "mlp" } else { model };
+    let dim = rt.load_init(model_key)?.len();
     let k = ((cfg.s * dim as f64).round() as usize).max(1);
-    let mut kinds = vec![
-        ("topk".to_string(), SparsifierKind::TopK { k }),
-        ("regtopk".to_string(), SparsifierKind::RegTopK { k, mu: cfg.mu, q: cfg.q }),
-    ];
-    if with_dense {
-        kinds.push(("dense".to_string(), SparsifierKind::Dense));
-    }
+    let layout = if cfg.wants_layerwise() {
+        rt.manifest
+            .models
+            .get(model_key)
+            .ok_or_else(|| anyhow::anyhow!("model '{model_key}' not in manifest"))?
+            .grad_layout()
+            .map_err(|e| e.context(model_key.to_string()))?
+    } else {
+        GradLayout::single(dim)
+    };
 
-    let mut logs = Vec::new();
-    for (name, kind) in kinds {
-        let mut tr = build_trainer(rt, &cfg, kind, model, &train)?;
-        let mut log = RunLog::new(name.clone(), tr.config.to_json());
+    let mut runs = Vec::new();
+    for (name, kind) in lineup(cfg, k, &layout, with_dense) {
+        let mut tr = build_trainer(rt, cfg, kind, k, model, &layout, &train)?;
+        let mut log = RunLog::new(name, tr.config.to_json());
         for t in 0..cfg.iters {
             let t0 = std::time::Instant::now();
             let rr = tr.round();
@@ -137,7 +249,136 @@ pub fn run(
             }
             log.push(rec);
         }
-        logs.push(log);
+        let groups = group_table(&tr);
+        runs.push(Fig3Run { log, groups });
     }
-    Ok(logs)
+    Ok(runs)
+}
+
+/// A synthetic CNN-shaped layout for the artifact-free degraded path:
+/// the real manifest layouts alternate big kernel blocks with tiny
+/// bias vectors, which is exactly the shape that exercises per-group
+/// budgets, index widths and heterogeneous policies.
+pub fn degraded_layout(model: &str) -> GradLayout {
+    let sizes: &[(&str, usize)] = if model == "mlp" {
+        &[("fc0.w", 192), ("fc0.b", 16), ("fc1.w", 160), ("fc1.b", 10)]
+    } else {
+        &[
+            ("conv0.w", 216),
+            ("conv0.b", 8),
+            ("block1.conv.w", 576),
+            ("block1.conv.b", 8),
+            ("fc.w", 80),
+            ("fc.b", 10),
+        ]
+    };
+    GradLayout::from_sizes(sizes.iter().map(|(n, l)| (n.to_string(), *l)))
+}
+
+/// Artifact-free degraded path: the same sparsifier lineup, layout
+/// semantics, budgets and policies as the artifact run, driven on the
+/// linreg testbed with [`degraded_layout`] standing in for the
+/// manifest's `FlatLayout`.  Keeps `repro fig3 --layerwise` exercising
+/// the full bucketed/heterogeneous stack on hosts without the PJRT
+/// binding (the run is labeled degraded by the caller).
+pub fn run_degraded(cfg: &Fig3Config, model: &str, with_dense: bool) -> Vec<Fig3Run> {
+    let layout = degraded_layout(model);
+    let dim = layout.total();
+    let params = LinearParams {
+        workers: cfg.workers,
+        rows_per_worker: 64,
+        dim,
+        ..LinearParams::fig2()
+    };
+    let problem = generate(params, cfg.seed);
+    let k = ((cfg.s * dim as f64).round() as usize).max(1);
+    let mut runs = Vec::new();
+    for (name, kind) in lineup(cfg, k, &layout, with_dense) {
+        let config = cfg.train_config(kind, k, &layout);
+        let mut tr = fig2::trainer_from_config(&config, &problem);
+        let log = fig2::run_curve_with(&mut tr, &problem, &name, cfg.iters);
+        runs.push(Fig3Run { log, groups: group_table(&tr) });
+    }
+    runs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn degraded_layerwise_run_reports_per_layer_tables() {
+        let cfg = Fig3Config {
+            workers: 2,
+            iters: 4,
+            s: 0.01,
+            train_rows: 64,
+            val_rows: 16,
+            eval_every: 0,
+            layerwise: true,
+            ..Fig3Config::default()
+        };
+        let runs = run_degraded(&cfg, "mlp", false);
+        assert_eq!(runs.len(), 2);
+        for r in &runs {
+            assert_eq!(r.log.records().len(), 4);
+            assert!(r.log.last().unwrap().loss.is_finite());
+            assert_eq!(r.groups.len(), 4, "one table row per mlp layer");
+            let total: usize = r.groups.iter().map(|(_, _, b, _)| b).sum();
+            assert!(total > 0);
+        }
+    }
+
+    #[test]
+    fn degraded_heterogeneous_policy_changes_entry_split() {
+        let mut cfg = Fig3Config {
+            workers: 2,
+            iters: 3,
+            s: 0.01,
+            eval_every: 0,
+            layerwise: true,
+            ..Fig3Config::default()
+        };
+        cfg.policy = Some(PolicyTable::parse("*.b=dense;*=regtopk").unwrap());
+        let runs = run_degraded(&cfg, "resnet8", false);
+        // every layer's family is pinned by the policy, so the
+        // topk/regtopk lineup collapses to one labeled policy run
+        assert_eq!(runs.len(), 1);
+        assert_eq!(runs[0].log.name, "policy-lw");
+        // bias layers ship dense: entries per bias row = len * workers * iters
+        let bias = runs[0]
+            .groups
+            .iter()
+            .find(|(n, _, _, _)| n == "conv0.b")
+            .expect("conv0.b row");
+        assert_eq!(bias.1, "dense");
+        assert_eq!(bias.3, 8 * 2 * 3);
+    }
+
+    #[test]
+    fn partial_policy_keeps_the_comparison_lineup() {
+        // only biases are pinned: the topk-vs-regtopk comparison is
+        // still meaningful and must keep both runs
+        let mut cfg = Fig3Config {
+            workers: 2,
+            iters: 2,
+            s: 0.01,
+            eval_every: 0,
+            layerwise: true,
+            ..Fig3Config::default()
+        };
+        cfg.policy = Some(PolicyTable::parse("*.b=dense").unwrap());
+        let runs = run_degraded(&cfg, "mlp", false);
+        assert_eq!(runs.len(), 2);
+        assert_eq!(runs[0].log.name, "topk-lw");
+        assert_eq!(runs[1].log.name, "regtopk-lw");
+    }
+
+    #[test]
+    fn flat_config_stays_single_group() {
+        let cfg = Fig3Config { workers: 2, iters: 2, eval_every: 0, ..Fig3Config::default() };
+        assert!(!cfg.wants_layerwise());
+        let runs = run_degraded(&cfg, "mlp", false);
+        assert!(runs[0].groups.is_empty(), "no per-layer table on the flat path");
+    }
 }

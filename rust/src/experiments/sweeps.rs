@@ -2,10 +2,12 @@
 //! approximate-selection recall.  All run on the Fig. 2 testbed at a
 //! reduced geometry so a full sweep finishes in seconds.
 
+use crate::config::TrainConfig;
 use crate::data::linear::{generate, LinearParams};
 use crate::experiments::fig2;
+use crate::grad::GradLayout;
 use crate::sparse::{approx, select_topk};
-use crate::sparsify::SparsifierKind;
+use crate::sparsify::{BudgetPolicy, PolicyTable, SparsifierKind};
 use crate::util::rng::Rng;
 
 /// Reduced Fig. 2 geometry for sweeps.
@@ -77,6 +79,78 @@ pub fn worker_sweep(ns: &[usize], s: f64, iters: usize, seed: u64) -> Vec<(usize
         .collect()
 }
 
+/// One row of the flat / layer-wise / heterogeneous comparison.
+#[derive(Clone, Debug)]
+pub struct HeteroRow {
+    pub name: String,
+    pub final_gap: f32,
+    pub bytes_per_round: usize,
+    pub entries_per_round: usize,
+}
+
+/// The sweep's 4-layer testbed layout (dim 60, CNN-shaped: two weight
+/// blocks with a tiny bias each).
+pub fn hetero_layout() -> GradLayout {
+    GradLayout::from_sizes([
+        ("fc0.w".to_string(), 24),
+        ("fc0.b".to_string(), 6),
+        ("fc1.w".to_string(), 24),
+        ("fc1.b".to_string(), 6),
+    ])
+}
+
+/// ISSUE 3 protocol — flat vs layer-wise vs heterogeneous RegTop-k on
+/// the linreg testbed (EXPERIMENTS.md §Heterogeneous): identical data,
+/// seed and total budget k = round(S*J); the heterogeneous row ships
+/// biases dense, keeps RegTop-k on the weight blocks with a linear mu
+/// decay, and re-apportions the remaining budget.
+pub fn hetero_sweep(s: f64, iters: usize, seed: u64) -> Vec<HeteroRow> {
+    let params = sweep_params(8);
+    let problem = generate(params, seed);
+    let k = ((s * params.dim as f64).round() as usize).max(1);
+    let kind = SparsifierKind::RegTopK { k, mu: 0.5, q: 1.0 };
+    let layout = hetero_layout();
+    let mut rows = Vec::new();
+    let mut run = |name: &str, cfg: &TrainConfig| {
+        let mut tr = fig2::trainer_from_config(cfg, &problem);
+        let log = fig2::run_curve_with(&mut tr, &problem, name, iters);
+        rows.push(HeteroRow {
+            name: name.to_string(),
+            final_gap: log.last().unwrap().opt_gap,
+            bytes_per_round: tr.ledger.total_upload_bytes() / iters.max(1),
+            entries_per_round: tr
+                .ledger
+                .rounds()
+                .iter()
+                .map(|r| r.upload_entries)
+                .sum::<usize>()
+                / iters.max(1),
+        });
+    };
+    let base = TrainConfig {
+        workers: params.workers,
+        eta: 0.02,
+        sparsifier: kind,
+        eval_every: 1,
+        ..TrainConfig::default()
+    };
+    // flat: the seed path, one global top-k pool
+    run("flat/regtopk", &base);
+    // layer-wise homogeneous: same family, budget apportioned per layer
+    let mut lw = base.clone();
+    lw.groups = Some(layout.clone());
+    lw.budget = Some(BudgetPolicy::Global { k });
+    run("layered/regtopk", &lw);
+    // heterogeneous: dense biases + decaying-mu RegTop-k weights
+    let mut het = lw.clone();
+    het.policy = Some(
+        PolicyTable::parse(&format!("*.b=dense;*.w=regtopk:mu=0.5..0.1/{iters}"))
+            .expect("hetero policy spec"),
+    );
+    run("hetero/regtopk+dense", &het);
+    rows
+}
+
 /// Abl 4 — approximate top-k: (oversample, mean recall) over random
 /// Gaussian vectors at the Fig. 3 scale.
 pub fn approx_recall_sweep(oversamples: &[usize], j: usize, k: usize, trials: usize) -> Vec<(usize, f64)> {
@@ -109,6 +183,20 @@ mod tests {
             (mu_tiny_gap - topk_gap).abs() < 0.05 * topk_gap.max(0.1),
             "mu->0 {mu_tiny_gap} vs topk {topk_gap}"
         );
+    }
+
+    #[test]
+    fn hetero_sweep_three_rows_converge() {
+        let rows = hetero_sweep(0.2, 120, 7);
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0].name, "flat/regtopk");
+        for r in &rows {
+            assert!(r.final_gap.is_finite() && r.final_gap >= 0.0, "{r:?}");
+            assert!(r.bytes_per_round > 0, "{r:?}");
+        }
+        // dense biases push the heterogeneous row's entry count above
+        // the budgeted homogeneous rows
+        assert!(rows[2].entries_per_round > rows[1].entries_per_round, "{rows:?}");
     }
 
     #[test]

@@ -59,11 +59,35 @@ impl GradLayout {
     }
 
     /// Adopt the layer structure of an artifact model's [`FlatLayout`]
-    /// (one group per layer).
-    pub fn from_flat(flat: &super::FlatLayout) -> Self {
-        let l = Self::from_sizes(flat.layers.iter().map(|l| (l.name.clone(), l.size)));
-        debug_assert_eq!(l.total, flat.total, "FlatLayout must be contiguous");
-        l
+    /// (one group per layer).  Errors when the manifest's layers are
+    /// not a contiguous cover of `[0, total)` — gaps, overlaps, empty
+    /// layers or a size/param-count mismatch all mean the layout cannot
+    /// drive the bucketed wire format (formerly a `debug_assert`, which
+    /// silently produced wrong group offsets in release builds).
+    pub fn from_flat(flat: &super::FlatLayout) -> Result<Self, String> {
+        if flat.layers.is_empty() {
+            return Err("FlatLayout has no layers".to_string());
+        }
+        let mut offset = 0usize;
+        for l in &flat.layers {
+            if l.size == 0 {
+                return Err(format!("layer '{}' is empty", l.name));
+            }
+            if l.offset != offset {
+                return Err(format!(
+                    "layer '{}' offset {} != expected {offset} (non-contiguous FlatLayout)",
+                    l.name, l.offset
+                ));
+            }
+            offset += l.size;
+        }
+        if offset != flat.total {
+            return Err(format!(
+                "layer sizes sum to {offset} but FlatLayout total is {}",
+                flat.total
+            ));
+        }
+        Ok(Self::from_sizes(flat.layers.iter().map(|l| (l.name.clone(), l.size))))
     }
 
     /// Parse a CLI group spec: `"conv:800,fc:200"` (named) or
@@ -242,6 +266,35 @@ mod tests {
         assert!(GradLayout::parse_spec("").is_err());
         assert!(GradLayout::parse_spec("a:0").is_err());
         assert!(GradLayout::parse_spec("x:y").is_err());
+    }
+
+    #[test]
+    fn from_flat_requires_contiguity() {
+        use crate::grad::{FlatLayout, LayerSlice};
+        let ls = |name: &str, offset: usize, size: usize| LayerSlice {
+            name: name.to_string(),
+            offset,
+            size,
+            shape: vec![size],
+        };
+        let good = FlatLayout { layers: vec![ls("a", 0, 3), ls("b", 3, 5)], total: 8 };
+        let l = GradLayout::from_flat(&good).unwrap();
+        assert_eq!(l.total(), 8);
+        assert_eq!(l.group(1).name, "b");
+        assert_eq!(l.group(1).offset, 3);
+        // gap between layers
+        let gap = FlatLayout { layers: vec![ls("a", 0, 3), ls("b", 4, 4)], total: 8 };
+        assert!(GradLayout::from_flat(&gap).is_err());
+        // total disagrees with the layer sum
+        let short = FlatLayout { layers: vec![ls("a", 0, 3)], total: 8 };
+        assert!(GradLayout::from_flat(&short).is_err());
+        // first layer does not start at 0
+        let late = FlatLayout { layers: vec![ls("a", 2, 6)], total: 8 };
+        assert!(GradLayout::from_flat(&late).is_err());
+        // empty layer / empty layout
+        let empty = FlatLayout { layers: vec![ls("a", 0, 0)], total: 0 };
+        assert!(GradLayout::from_flat(&empty).is_err());
+        assert!(GradLayout::from_flat(&FlatLayout { layers: vec![], total: 0 }).is_err());
     }
 
     #[test]

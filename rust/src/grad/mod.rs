@@ -23,6 +23,18 @@ pub use layout::{GradLayout, GradView, GroupSpec};
 
 use crate::sparse::SparseVec;
 
+/// Checkpointable snapshot of an [`ErrorFeedback`]'s persistent
+/// history: everything Alg. 1 carries across rounds.  `acc` (the
+/// current-round scratch) and `prev_sel` (derived from `mask_prev`)
+/// are rebuilt on restore.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EfState {
+    pub eps: Vec<f32>,
+    pub acc_prev: Vec<f32>,
+    pub mask_prev: Vec<f32>,
+    pub warm: bool,
+}
+
 /// Per-worker error-feedback state (paper §1.1 / Alg. 1).
 #[derive(Clone, Debug)]
 pub struct ErrorFeedback {
@@ -110,6 +122,41 @@ impl ErrorFeedback {
         self.prev_sel.extend_from_slice(selected);
         self.warm = true;
     }
+
+    /// Snapshot the persistent history for checkpointing.
+    pub fn snapshot(&self) -> EfState {
+        EfState {
+            eps: self.eps.clone(),
+            acc_prev: self.acc_prev.clone(),
+            mask_prev: self.mask_prev.clone(),
+            warm: self.warm,
+        }
+    }
+
+    /// Restore a snapshot (resume path).  `prev_sel` is rebuilt from
+    /// the mask so the next `commit` clears exactly the restored bits.
+    pub fn restore(&mut self, st: &EfState) -> Result<(), String> {
+        let dim = self.dim();
+        if st.eps.len() != dim || st.acc_prev.len() != dim || st.mask_prev.len() != dim {
+            return Err(format!(
+                "error-feedback state dim {} != sparsifier dim {dim}",
+                st.eps.len()
+            ));
+        }
+        self.eps.copy_from_slice(&st.eps);
+        self.acc_prev.copy_from_slice(&st.acc_prev);
+        self.mask_prev.copy_from_slice(&st.mask_prev);
+        self.prev_sel.clear();
+        self.prev_sel.extend(
+            st.mask_prev
+                .iter()
+                .enumerate()
+                .filter(|(_, &m)| m != 0.0)
+                .map(|(i, _)| i as u32),
+        );
+        self.warm = st.warm;
+        Ok(())
+    }
 }
 
 /// Layer layout of a flat parameter vector (mirrors the python
@@ -142,21 +189,31 @@ impl FlatLayout {
     }
 
     /// Count of selected indices per layer (diagnostic: where does the
-    /// sparsifier spend its budget?).
+    /// sparsifier spend its budget?).  Indices no layer covers — before
+    /// the first offset, inside a gap of a non-contiguous manifest, or
+    /// past the end — are tallied under a trailing `"(unmapped)"` entry
+    /// instead of panicking (regression: `Err(0) - 1` underflow).
     pub fn selection_histogram(&self, selected: &[u32]) -> Vec<(String, usize)> {
         let mut out: Vec<(String, usize)> =
             self.layers.iter().map(|l| (l.name.clone(), 0usize)).collect();
+        let mut unmapped = 0usize;
         for &i in selected {
             let i = i as usize;
             // layers are sorted by offset: binary search
             let li = match self.layers.binary_search_by(|l| l.offset.cmp(&i)) {
-                Ok(exact) => exact,
-                Err(ins) => ins - 1,
+                Ok(exact) => Some(exact),
+                Err(0) => None,
+                Err(ins) => Some(ins - 1),
             };
-            debug_assert!(
-                i >= self.layers[li].offset && i < self.layers[li].offset + self.layers[li].size
-            );
-            out[li].1 += 1;
+            match li {
+                Some(li) if i < self.layers[li].offset + self.layers[li].size => {
+                    out[li].1 += 1;
+                }
+                _ => unmapped += 1,
+            }
+        }
+        if unmapped > 0 {
+            out.push(("(unmapped)".to_string(), unmapped));
         }
         out
     }
@@ -227,6 +284,59 @@ mod tests {
         let mut out = vec![0.0; 3];
         ef.accumulate_into(&g, &mut out);
         assert_eq!(ef.accumulate(&g), out.as_slice());
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrips_history() {
+        let mut ef = ErrorFeedback::new(4);
+        ef.accumulate(&[1.0, 5.0, 2.0, 0.1]);
+        ef.commit(&[1, 3]);
+        let snap = ef.snapshot();
+        assert!(snap.warm);
+        // a fresh EF restored from the snapshot continues identically
+        let mut re = ErrorFeedback::new(4);
+        re.restore(&snap).unwrap();
+        let g = [0.5, -1.0, 3.0, 2.0];
+        ef.accumulate(&g);
+        re.accumulate(&g);
+        let a = ef.commit(&[0, 2]);
+        let b = re.commit(&[0, 2]);
+        assert_eq!(a, b);
+        assert_eq!(ef.eps, re.eps);
+        assert_eq!(ef.mask_prev, re.mask_prev);
+        // dim mismatch is an error, not a panic
+        assert!(ErrorFeedback::new(5).restore(&snap).is_err());
+    }
+
+    #[test]
+    fn histogram_unmapped_indices_do_not_panic() {
+        // non-contiguous manifest: first layer starts at 5, gap at 8..10
+        let layout = FlatLayout {
+            layers: vec![
+                LayerSlice { name: "a".into(), offset: 5, size: 3, shape: vec![3] },
+                LayerSlice { name: "b".into(), offset: 10, size: 2, shape: vec![2] },
+            ],
+            total: 12,
+        };
+        // 0 precedes the first offset (the old `Err(0) - 1` underflow),
+        // 8 falls in the gap, 20 is past the end
+        let h = layout.selection_histogram(&[0, 5, 8, 10, 20]);
+        assert_eq!(
+            h,
+            vec![
+                ("a".to_string(), 1),
+                ("b".to_string(), 1),
+                ("(unmapped)".to_string(), 3)
+            ]
+        );
+        // empty layer list: everything is unmapped
+        let empty = FlatLayout { layers: vec![], total: 0 };
+        assert_eq!(
+            empty.selection_histogram(&[1]),
+            vec![("(unmapped)".to_string(), 1)]
+        );
+        // fully-mapped selections get no synthetic bucket
+        assert_eq!(layout.selection_histogram(&[6, 11]).len(), 2);
     }
 
     #[test]

@@ -4,13 +4,20 @@
 //! ```text
 //! repro fig1   [--iters 100] [--mu 0.5] [--q 1.0] [--out results]
 //! repro fig2   [--iters 1000] [--s 0.4,0.5,0.6] [--seed 42] [--out results]
-//! repro fig3   [--iters 300] [--model resnet8|mlp] [--s 0.001] [--dense] ...
-//! repro sweep  --param mu|q|workers|approx ...
+//! repro fig3   [--iters 300] [--model resnet8|mlp] [--s 0.001] [--dense]
+//!              [--layerwise] [--policy 'conv*=regtopk:mu=0.3;*=topk']
+//!              [--budget prop:0.001]  (layer-wise runs adopt the
+//!                                      artifact's real per-layer layout;
+//!                                      degrades to the linreg testbed
+//!                                      when artifacts are unavailable)
+//! repro sweep  --param mu|q|workers|approx|hetero ...
 //! repro comm   [--s 0.4,0.1,0.01,0.001]
 //! repro train  --config cfg.json [--groups 60,40 --budget prop:0.1]
+//!              [--policy 'glob=family:k=v,...;...']
 //!                                      (generic linreg-testbed run;
 //!                                       --groups switches on the
-//!                                       layer-wise bucketed path)
+//!                                       layer-wise bucketed path,
+//!                                       --policy makes it heterogeneous)
 //! repro info                          (artifact + platform report)
 //! ```
 //!
@@ -148,6 +155,21 @@ fn cmd_fig2(args: Vec<String>) -> i32 {
     0
 }
 
+/// Per-layer ledger table of a layer-wise Fig. 3 run.
+fn print_fig3_groups(name: &str, groups: &[(String, String, usize, usize)], iters: usize) {
+    if groups.is_empty() {
+        return;
+    }
+    let iters = iters.max(1);
+    println!("  {name}: per-group upload bytes ({} groups):", groups.len());
+    println!("    {:<18} {:<10} {:>12} {:>12} {:>10}", "group", "family", "B total", "B/round", "entries");
+    for (g, fam, bytes, entries) in groups {
+        println!("    {g:<18} {fam:<10} {bytes:>12} {:>12} {entries:>10}", bytes / iters);
+    }
+    let total: usize = groups.iter().map(|(_, _, b, _)| b).sum();
+    println!("    {:<18} {:<10} {total:>12}", "(all groups)", "");
+}
+
 fn cmd_fig3(args: Vec<String>) -> i32 {
     let p = Cli::new("Fig. 3: CNN on CIFAR-like data, TOP-k vs REGTOP-k at S=0.001")
         .flag("iters", "300", "iterations")
@@ -162,6 +184,9 @@ fn cmd_fig3(args: Vec<String>) -> i32 {
         .flag("eval-every", "25", "accuracy eval period")
         .flag("seed", "42", "rng seed")
         .flag("out", "results", "output directory")
+        .flag("policy", "", "heterogeneous per-layer policy 'glob=family:k=v,...;...' (implies --layerwise)")
+        .flag("budget", "", "per-layer budget policy global:K|per:..|prop:F (default global at the flat k)")
+        .switch("layerwise", "adopt the artifact model's real per-layer layout (bucketed path)")
         .switch("dense", "also run the dense reference")
         .parse_from(args);
     let p = match p {
@@ -171,14 +196,7 @@ fn cmd_fig3(args: Vec<String>) -> i32 {
             return 2;
         }
     };
-    let mut rt = match Runtime::open_default() {
-        Ok(rt) => rt,
-        Err(e) => {
-            eprintln!("cannot open artifacts: {e:#}");
-            return 1;
-        }
-    };
-    let cfg = fig3::Fig3Config {
+    let mut cfg = fig3::Fig3Config {
         workers: p.get_usize("workers"),
         iters: p.get_usize("iters"),
         eta: p.get_f32("eta"),
@@ -189,39 +207,85 @@ fn cmd_fig3(args: Vec<String>) -> i32 {
         train_rows: p.get_usize("train-rows"),
         val_rows: p.get_usize("val-rows"),
         eval_every: p.get_usize("eval-every"),
+        layerwise: p.get_bool("layerwise"),
+        ..fig3::Fig3Config::default()
     };
+    if p.provided("policy") && !p.get("policy").is_empty() {
+        cfg.policy = match regtopk::sparsify::PolicyTable::parse(p.get("policy")) {
+            Ok(t) => Some(t),
+            Err(e) => {
+                eprintln!("bad --policy: {e}");
+                return 2;
+            }
+        };
+        cfg.layerwise = true;
+    }
+    if p.provided("budget") && !p.get("budget").is_empty() {
+        cfg.budget = match regtopk::sparsify::BudgetPolicy::parse(p.get("budget")) {
+            Ok(b) => Some(b),
+            Err(e) => {
+                eprintln!("bad --budget: {e}");
+                return 2;
+            }
+        };
+        if !cfg.layerwise {
+            eprintln!("--budget needs the layer-wise path: pass --layerwise");
+            return 2;
+        }
+    }
     let model = p.get("model").to_string();
-    let logs = match fig3::run(&mut rt, cfg, &model, p.get_bool("dense")) {
-        Ok(l) => l,
+    let runs = match Runtime::open_default() {
+        Ok(mut rt) => match fig3::run(&mut rt, &cfg, &model, p.get_bool("dense")) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("fig3 failed: {e:#}");
+                return 1;
+            }
+        },
+        Err(e) if cfg.layerwise => {
+            // artifact-free degraded path: the same layer-wise protocol
+            // on the linreg testbed with a synthetic CNN-shaped layout
+            eprintln!(
+                "artifacts unavailable ({e:#});\n\
+                 running the DEGRADED layer-wise protocol on the linreg testbed \
+                 (synthetic {model}-shaped layout)"
+            );
+            fig3::run_degraded(&cfg, &model, p.get_bool("dense"))
+        }
         Err(e) => {
-            eprintln!("fig3 failed: {e:#}");
+            eprintln!("cannot open artifacts: {e:#}");
             return 1;
         }
     };
     println!("Fig.3 {model} (N={}, S={}):", cfg.workers, cfg.s);
-    for log in &logs {
+    for r in &runs {
+        let log = &r.log;
         let acc = log
             .records()
             .iter()
             .rev()
-            .find(|r| !r.accuracy.is_nan())
-            .map(|r| r.accuracy)
+            .find(|rec| !rec.accuracy.is_nan())
+            .map(|rec| rec.accuracy)
             .unwrap_or(f32::NAN);
         println!(
-            "  {:<8} final loss {:.4}  val acc {:.3}  {}",
+            "  {:<12} final loss {:.4}  val acc {:.3}  {}",
             log.name,
             log.last().unwrap().loss,
             acc,
-            log.sparkline(|r| r.loss, 40)
+            log.sparkline(|rec| rec.loss, 40)
         );
     }
+    for r in &runs {
+        print_fig3_groups(&r.log.name, &r.groups, cfg.iters);
+    }
+    let logs: Vec<RunLog> = runs.into_iter().map(|r| r.log).collect();
     write_logs(&logs, p.get("out"), &format!("fig3_{model}"));
     0
 }
 
 fn cmd_sweep(args: Vec<String>) -> i32 {
-    let p = Cli::new("Ablation sweeps (DESIGN.md Abl 1-4)")
-        .required("param", "mu | q | workers | approx")
+    let p = Cli::new("Ablation sweeps (DESIGN.md Abl 1-4 + ISSUE 3 hetero)")
+        .required("param", "mu | q | workers | approx | hetero")
         .flag("values", "", "comma-separated sweep values (defaults per param)")
         .flag("s", "0.5", "sparsity factor")
         .flag("iters", "400", "iterations per point")
@@ -280,6 +344,22 @@ fn cmd_sweep(args: Vec<String>) -> i32 {
             println!("approximate top-k recall (J=2^17, k=131):");
             for (ov, rec) in sweeps::approx_recall_sweep(&vals, 1 << 17, 131, 5) {
                 println!("  oversample={ov:<4} recall {rec:.4}");
+            }
+        }
+        "hetero" => {
+            println!(
+                "flat vs layer-wise vs heterogeneous RegTop-k (S={s}, {iters} iters, \
+                 4-layer testbed; EXPERIMENTS.md §Heterogeneous):"
+            );
+            println!(
+                "  {:<22} {:>12} {:>14} {:>14}",
+                "variant", "final gap", "bytes/round", "entries/round"
+            );
+            for r in sweeps::hetero_sweep(s, iters, seed) {
+                println!(
+                    "  {:<22} {:>12.6} {:>14} {:>14}",
+                    r.name, r.final_gap, r.bytes_per_round, r.entries_per_round
+                );
             }
         }
         other => {
@@ -375,6 +455,7 @@ fn cmd_train(args: Vec<String>) -> i32 {
     .flag("shards", "", "engine shards: 0=auto, 1=serial, N=fixed (default: config)")
     .flag("groups", "", "parameter groups 'name:len,...' or 'len,len,...' (sum = model dim; empty = flat)")
     .flag("budget", "", "per-group budget policy: global:K | per:K1,K2,... | prop:FRAC")
+    .flag("policy", "", "heterogeneous per-group policies 'glob=family:k=v,...;...' (empty = homogeneous)")
     .flag("sparsifier", "", "override sparsifier by name (dense|topk|regtopk|randk|threshold|gtopk|dgc|adak)")
     .flag("k", "1", "sparsity budget k")
     .flag("mu", "0.5", "regtopk temperature")
@@ -427,10 +508,28 @@ fn cmd_train(args: Vec<String>) -> i32 {
             }
         };
     }
-    // a budget is only consulted on the grouped path — silently
-    // ignoring it would misreport the experiment, so reject instead
+    if p.provided("policy") {
+        let spec = p.get("policy");
+        if spec.is_empty() {
+            cfg.policy = None; // explicit homogeneous override
+        } else {
+            cfg.policy = match regtopk::sparsify::PolicyTable::parse(spec) {
+                Ok(t) => Some(t),
+                Err(e) => {
+                    eprintln!("bad --policy: {e}");
+                    return 2;
+                }
+            };
+        }
+    }
+    // budgets/policies are only consulted on the grouped path —
+    // silently ignoring them would misreport the experiment, so reject
     if cfg.budget.is_some() && cfg.groups.is_none() {
         eprintln!("a budget policy needs parameter groups: pass --groups (or \"groups\" in the config)");
+        return 2;
+    }
+    if cfg.policy.is_some() && cfg.groups.is_none() {
+        eprintln!("a policy table needs parameter groups: pass --groups (or \"groups\" in the config)");
         return 2;
     }
     // Sparsifier overrides start from the CONFIG's parameters and
@@ -512,16 +611,28 @@ fn cmd_train(args: Vec<String>) -> i32 {
         log.last().unwrap().loss,
         log.last().unwrap().opt_gap
     );
-    // layer-wise runs: per-group upload accounting from the ledger
+    // layer-wise runs: per-group upload accounting from the ledger,
+    // with the per-group family (heterogeneous policies) and entries
     let group_totals = tr.ledger.group_upload_totals();
     if group_totals.len() > 1 {
         let iters = cfg.iters.max(1);
+        let entries = tr.ledger.group_upload_entries();
+        let families = tr.workers[0].sparsifier.group_families();
         println!("per-group upload bytes ({} groups):", group_totals.len());
-        for (name, bytes) in &group_totals {
-            println!("  {name:<16} {bytes:>12} B total  {:>10} B/round", bytes / iters);
+        println!(
+            "  {:<16} {:<10} {:>12} {:>10} {:>10}",
+            "group", "family", "B total", "B/round", "entries"
+        );
+        for (g, (name, bytes)) in group_totals.iter().enumerate() {
+            println!(
+                "  {name:<16} {:<10} {bytes:>12} {:>10} {:>10}",
+                families.get(g).copied().unwrap_or("?"),
+                bytes / iters,
+                entries.get(g).map(|(_, n)| *n).unwrap_or(0)
+            );
         }
         let total: usize = group_totals.iter().map(|(_, b)| b).sum();
-        println!("  {:<16} {total:>12} B total", "(all groups)");
+        println!("  {:<16} {:<10} {total:>12}", "(all groups)", "");
     }
     write_logs(&[log], p.get("out"), "train");
     0

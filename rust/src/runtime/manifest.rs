@@ -36,6 +36,16 @@ pub struct ModelInfo {
     pub layout: FlatLayout,
 }
 
+impl ModelInfo {
+    /// The model's per-layer parameter-group layout for the layer-wise
+    /// sparsification path (`repro fig3 --layerwise`).  Errors when the
+    /// manifest's layers are not a contiguous cover of the parameter
+    /// vector — such a manifest cannot drive the bucketed wire format.
+    pub fn grad_layout(&self) -> Result<crate::grad::GradLayout> {
+        crate::grad::GradLayout::from_flat(&self.layout).map_err(|e| anyhow!("{e}"))
+    }
+}
+
 /// The artifact registry.
 #[derive(Clone, Debug, Default)]
 pub struct Manifest {
@@ -197,6 +207,20 @@ mod tests {
         assert_eq!(mm.param_count, 10);
         assert_eq!(mm.layout.layers.len(), 2);
         assert_eq!(mm.layout.layers[1].offset, 8);
+    }
+
+    #[test]
+    fn model_grad_layout_adopts_layers() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let layout = m.models["mlp"].grad_layout().unwrap();
+        assert_eq!(layout.num_groups(), 2);
+        assert_eq!(layout.total(), 10);
+        assert_eq!(layout.group(1).name, "fc0.b");
+        assert_eq!(layout.group(1).offset, 8);
+        // a gapped manifest layout is a hard error, not a debug_assert
+        let mut bad = m.models["mlp"].clone();
+        bad.layout.layers[1].offset = 9;
+        assert!(bad.grad_layout().is_err());
     }
 
     #[test]

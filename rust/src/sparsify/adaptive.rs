@@ -10,7 +10,7 @@
 //! dominate.
 
 use crate::sparse::{select_topk, SelectEngine, SparseVec};
-use crate::sparsify::{RoundCtx, Sparsifier};
+use crate::sparsify::{RoundCtx, Sparsifier, SparsifierState};
 
 pub struct AdaK {
     /// residual-vs-gradient trigger ratio (AdaComp uses ~1.0)
@@ -85,6 +85,28 @@ impl Sparsifier for AdaK {
 
     fn set_shards(&mut self, shards: usize) {
         self.engine = if shards > 1 { Some(SelectEngine::new(shards)) } else { None };
+    }
+
+    /// AdaK's only cross-round state is the residual store.
+    fn export_state(&self) -> SparsifierState {
+        SparsifierState::Residual { eps: self.eps.clone() }
+    }
+
+    fn import_state(&mut self, st: &SparsifierState) -> Result<(), String> {
+        match st {
+            SparsifierState::Residual { eps } => {
+                if eps.len() != self.eps.len() {
+                    return Err(format!(
+                        "adak state dim {} != sparsifier dim {}",
+                        eps.len(),
+                        self.eps.len()
+                    ));
+                }
+                self.eps.copy_from_slice(eps);
+                Ok(())
+            }
+            other => Err(format!("adak cannot import '{}' state", other.kind())),
+        }
     }
 
     fn peek_acc_into(&self, grad: &[f32], out: &mut [f32]) {

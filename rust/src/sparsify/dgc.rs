@@ -16,7 +16,7 @@
 //! that claim directly.
 
 use crate::sparse::{select_topk, SelectEngine, SparseVec};
-use crate::sparsify::{RoundCtx, Sparsifier};
+use crate::sparsify::{RoundCtx, Sparsifier, SparsifierState};
 use crate::util::pool::SharedSlice;
 
 pub struct Dgc {
@@ -128,6 +128,30 @@ impl Sparsifier for Dgc {
 
     fn set_shards(&mut self, shards: usize) {
         self.engine = if shards > 1 { Some(SelectEngine::new(shards)) } else { None };
+    }
+
+    /// DGC's cross-round state is the velocity + accumulated-velocity
+    /// pair (its error store), not an `ErrorFeedback`.
+    fn export_state(&self) -> SparsifierState {
+        SparsifierState::Dgc { vel: self.vel.clone(), acc: self.acc.clone() }
+    }
+
+    fn import_state(&mut self, st: &SparsifierState) -> Result<(), String> {
+        match st {
+            SparsifierState::Dgc { vel, acc } => {
+                if vel.len() != self.vel.len() || acc.len() != self.acc.len() {
+                    return Err(format!(
+                        "dgc state dim {} != sparsifier dim {}",
+                        vel.len(),
+                        self.vel.len()
+                    ));
+                }
+                self.vel.copy_from_slice(vel);
+                self.acc.copy_from_slice(acc);
+                Ok(())
+            }
+            other => Err(format!("dgc cannot import '{}' state", other.kind())),
+        }
     }
 
     fn peek_acc_into(&self, grad: &[f32], out: &mut [f32]) {

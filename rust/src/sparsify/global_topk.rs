@@ -8,7 +8,7 @@
 
 use crate::grad::ErrorFeedback;
 use crate::sparse::{select_topk, SelectEngine, SparseVec};
-use crate::sparsify::{RoundCtx, Sparsifier};
+use crate::sparsify::{RoundCtx, Sparsifier, SparsifierState};
 
 pub struct GlobalTopK {
     k: usize,
@@ -59,6 +59,17 @@ impl Sparsifier for GlobalTopK {
 
     fn set_shards(&mut self, shards: usize) {
         self.engine = if shards > 1 { Some(SelectEngine::new(shards)) } else { None };
+    }
+
+    fn export_state(&self) -> SparsifierState {
+        SparsifierState::Ef(self.ef.snapshot())
+    }
+
+    fn import_state(&mut self, st: &SparsifierState) -> Result<(), String> {
+        match st {
+            SparsifierState::Ef(ef) => self.ef.restore(ef),
+            other => Err(format!("gtopk cannot import '{}' state", other.kind())),
+        }
     }
 
     fn peek_acc_into(&self, grad: &[f32], out: &mut [f32]) {

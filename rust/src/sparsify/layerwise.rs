@@ -11,15 +11,27 @@
 //! aggregate / genie channel into group slices, and emits the bucketed
 //! [`SparseUpdate`] wire format.
 //!
+//! Children need not be homogeneous: [`LayerwiseSparsifier::with_policies`]
+//! consumes a `sparsify::PolicyTable` mapping group-name globs to a
+//! per-group family + hyperparameters (and mu/Q `Schedule`s re-tuned
+//! each round), so biases can ship dense while conv blocks run
+//! aggressive RegTop-k.
+//!
 //! **Equivalence net:** under the degenerate single-group layout the
 //! wrapper is a transparent pass-through — one child over the whole
 //! vector, built with exactly the flat factory parameters — so its
 //! trajectories are bit-identical to the seed flat path for all eight
-//! sparsifier families (pinned by `rust/tests/layerwise.rs`).
+//! sparsifier families; the same holds for any multi-group layout with
+//! an empty or non-matching policy table vs the PR 2 homogeneous path
+//! (pinned by `rust/tests/layerwise.rs`).
 
 use crate::grad::{GradLayout, GradView};
+use crate::sparse::engine::MIN_SHARDED_DIM;
 use crate::sparse::{SparseUpdate, SparseVec};
-use crate::sparsify::{build, RoundCtx, Sparsifier, SparsifierKind};
+use crate::sparsify::{
+    build, GroupPolicy, PolicyTable, RoundCtx, Schedule, Sparsifier, SparsifierKind,
+    SparsifierState,
+};
 use crate::util::json::{obj, Json};
 
 /// How the transmission budget is distributed across parameter groups.
@@ -202,15 +214,90 @@ fn child_kind(kind: &SparsifierKind, k: usize, len: usize, group: usize) -> Spar
     }
 }
 
+/// Build one group's child from the base family, the group's policy
+/// (None = the homogeneous shared default) and the budget-resolved k.
+/// Returns the child, the effective k and the group's mu/Q schedule
+/// pair (None unless the policy carries a non-constant schedule).
+fn build_child(
+    base: &SparsifierKind,
+    policy: Option<&GroupPolicy>,
+    k_budget: usize,
+    len: usize,
+    group: usize,
+    worker: usize,
+) -> (Box<dyn Sparsifier>, usize, Option<(Schedule, Schedule)>) {
+    let Some(p) = policy else {
+        // the PR 2 homogeneous path, byte for byte
+        let kind = child_kind(base, k_budget, len, group);
+        return (build(&kind, len, worker), k_budget, None);
+    };
+    let mut params = base.to_params();
+    params.k = p.k.unwrap_or(k_budget).clamp(1, len.max(1));
+    if let Some(s) = &p.mu {
+        params.mu = s.at(0);
+    }
+    if let Some(s) = &p.q {
+        params.q = s.at(0);
+    }
+    if let Some(v) = p.tau {
+        params.tau = v;
+    }
+    if let Some(v) = p.seed {
+        params.seed = v;
+    }
+    if let Some(v) = p.momentum {
+        params.momentum = v;
+    }
+    if let Some(v) = p.clip {
+        params.clip = v;
+    }
+    if let Some(v) = p.ratio {
+        params.ratio = v;
+    }
+    if let Some(v) = p.k_min {
+        params.k_min = v;
+    }
+    if let Some(v) = p.k_max {
+        params.k_max = v;
+    }
+    let family = p.family.as_deref().unwrap_or_else(|| base.name());
+    let kind = SparsifierKind::from_params(family, &params)
+        .unwrap_or_else(|| panic!("policy names unknown family '{family}'"));
+    // same per-group clamps + stochastic stream diversification as the
+    // homogeneous path
+    let kind = child_kind(&kind, params.k, len, group);
+    let sched = if p.has_schedule() {
+        Some((
+            p.mu.clone().unwrap_or(Schedule::Const(params.mu)),
+            p.q.clone().unwrap_or(Schedule::Const(params.q)),
+        ))
+    } else {
+        None
+    };
+    (build(&kind, len, worker), params.k, sched)
+}
+
 /// One sparsifier per parameter group.  Implements [`Sparsifier`], so
 /// workers hold it like any flat sparsifier; the bucketed
 /// [`Sparsifier::step_group_into`] entry point is the native path and
 /// the flat `step`/`step_into` compatibility path flattens the buckets.
+///
+/// With a [`PolicyTable`] ([`Self::with_policies`]) the children can be
+/// *heterogeneous*: family and hyperparameters per group, with mu/Q
+/// re-tuned per round by the group's [`Schedule`]s.  Groups matched by
+/// no rule run the shared homogeneous default, so an empty (or
+/// non-matching) table is bit-identical to [`Self::new`].
 pub struct LayerwiseSparsifier {
     layout: GradLayout,
     children: Vec<Box<dyn Sparsifier>>,
     /// resolved per-group budgets (observability + tests)
     ks: Vec<usize>,
+    /// per-group mu/Q schedules; None = fixed hyperparameters (no
+    /// per-round re-tune call, preserving the homogeneous bit-identity)
+    schedules: Vec<Option<(Schedule, Schedule)>>,
+    /// per-child shard counts resolved by [`Sparsifier::set_shards`]
+    /// (observability; 1 until the trainer wires shards in)
+    child_shards: Vec<usize>,
     /// recycled bucket scratch for the flat compatibility path
     scratch: SparseUpdate,
 }
@@ -225,15 +312,40 @@ impl LayerwiseSparsifier {
         budget: &BudgetPolicy,
         worker: usize,
     ) -> Self {
-        let ks = budget.resolve(&layout);
-        let children = layout
-            .groups()
-            .iter()
-            .zip(&ks)
-            .enumerate()
-            .map(|(g, (spec, &k))| build(&child_kind(kind, k, spec.len, g), spec.len, worker))
-            .collect();
-        LayerwiseSparsifier { layout, children, ks, scratch: SparseUpdate::empty() }
+        Self::with_policies(kind, layout, budget, &PolicyTable::default(), worker)
+    }
+
+    /// [`Self::new`] with a heterogeneous [`PolicyTable`]: each group
+    /// takes the first rule matching its name (family + hyperparameter
+    /// overrides + mu/Q schedules); unmatched groups keep the shared
+    /// `kind` default.
+    pub fn with_policies(
+        kind: &SparsifierKind,
+        layout: GradLayout,
+        budget: &BudgetPolicy,
+        policies: &PolicyTable,
+        worker: usize,
+    ) -> Self {
+        let base_ks = budget.resolve(&layout);
+        let n = layout.num_groups();
+        let mut children = Vec::with_capacity(n);
+        let mut ks = Vec::with_capacity(n);
+        let mut schedules = Vec::with_capacity(n);
+        for (g, (spec, &bk)) in layout.groups().iter().zip(&base_ks).enumerate() {
+            let (child, k_eff, sched) =
+                build_child(kind, policies.resolve(&spec.name), bk, spec.len, g, worker);
+            children.push(child);
+            ks.push(k_eff);
+            schedules.push(sched);
+        }
+        LayerwiseSparsifier {
+            layout,
+            children,
+            ks,
+            schedules,
+            child_shards: vec![1; n],
+            scratch: SparseUpdate::empty(),
+        }
     }
 
     pub fn layout(&self) -> &GradLayout {
@@ -244,6 +356,13 @@ impl LayerwiseSparsifier {
     pub fn budgets(&self) -> &[usize] {
         &self.ks
     }
+
+    /// Per-child shard counts as resolved by the last `set_shards`
+    /// call: children below the engine threshold stay serial instead
+    /// of inheriting the model-dim-resolved count (over-sharding fix).
+    pub fn child_shards(&self) -> &[usize] {
+        &self.child_shards
+    }
 }
 
 /// Step every child over its group slice of `flat` into the matching
@@ -252,6 +371,7 @@ impl LayerwiseSparsifier {
 fn step_children(
     children: &mut [Box<dyn Sparsifier>],
     layout: &GradLayout,
+    schedules: &[Option<(Schedule, Schedule)>],
     flat: &[f32],
     ctx: &RoundCtx,
     out: &mut SparseUpdate,
@@ -264,6 +384,9 @@ fn step_children(
     );
     out.conform_to(layout);
     for (g, (child, spec)) in children.iter_mut().zip(layout.groups()).enumerate() {
+        if let Some((mu, q)) = &schedules[g] {
+            child.set_temperature(mu.at(ctx.t), q.at(ctx.t));
+        }
         let (off, len) = (spec.offset, spec.len);
         let gctx = RoundCtx {
             t: ctx.t,
@@ -291,7 +414,7 @@ impl Sparsifier for LayerwiseSparsifier {
     /// holds by construction).
     fn step_into(&mut self, grad: &[f32], ctx: &RoundCtx, out: &mut SparseVec) {
         let mut scratch = std::mem::take(&mut self.scratch);
-        step_children(&mut self.children, &self.layout, grad, ctx, &mut scratch);
+        step_children(&mut self.children, &self.layout, &self.schedules, grad, ctx, &mut scratch);
         scratch.flatten_into(out);
         self.scratch = scratch;
     }
@@ -303,17 +426,63 @@ impl Sparsifier for LayerwiseSparsifier {
             &self.layout,
             "view layout disagrees with the sparsifier's layout"
         );
-        step_children(&mut self.children, &self.layout, view.flat(), ctx, out);
+        step_children(&mut self.children, &self.layout, &self.schedules, view.flat(), ctx, out);
     }
 
+    /// Fan the model-dim-resolved shard count out to the children, but
+    /// clamped per group: a child below [`MIN_SHARDED_DIM`] keeps the
+    /// serial path (a sharded engine over a bias vector costs more in
+    /// pool handoff than the whole select), and no child gets more
+    /// shards than elements.  Results are bit-identical either way —
+    /// this is purely the perf fix for tiny groups.
     fn set_shards(&mut self, shards: usize) {
+        for ((c, g), cs) in self
+            .children
+            .iter_mut()
+            .zip(self.layout.groups())
+            .zip(&mut self.child_shards)
+        {
+            let s = if g.len < MIN_SHARDED_DIM { 1 } else { shards.max(1).min(g.len) };
+            c.set_shards(s);
+            *cs = s;
+        }
+    }
+
+    fn set_temperature(&mut self, mu: f32, q: f32) {
         for c in &mut self.children {
-            c.set_shards(shards);
+            c.set_temperature(mu, q);
         }
     }
 
     fn needs_genie(&self) -> bool {
         self.children.iter().any(|c| c.needs_genie())
+    }
+
+    fn export_state(&self) -> SparsifierState {
+        SparsifierState::Grouped(self.children.iter().map(|c| c.export_state()).collect())
+    }
+
+    fn import_state(&mut self, st: &SparsifierState) -> Result<(), String> {
+        match st {
+            SparsifierState::Grouped(states) => {
+                if states.len() != self.children.len() {
+                    return Err(format!(
+                        "layerwise state has {} groups, sparsifier has {}",
+                        states.len(),
+                        self.children.len()
+                    ));
+                }
+                for (g, (c, s)) in self.children.iter_mut().zip(states).enumerate() {
+                    c.import_state(s).map_err(|e| format!("group {g}: {e}"))?;
+                }
+                Ok(())
+            }
+            other => Err(format!("layerwise cannot import '{}' state", other.kind())),
+        }
+    }
+
+    fn group_families(&self) -> Vec<&'static str> {
+        self.children.iter().map(|c| c.name()).collect()
     }
 
     fn peek_acc_into(&self, grad: &[f32], out: &mut [f32]) {
@@ -405,6 +574,143 @@ mod tests {
         // group a's largest is its first entry; group b's are its first two
         assert_eq!(up.bucket(0).indices(), &[0]);
         assert_eq!(up.bucket(1).indices(), &[0, 1]);
+    }
+
+    #[test]
+    fn policy_table_builds_heterogeneous_children() {
+        let layout = GradLayout::from_sizes([
+            ("conv0.w".to_string(), 8),
+            ("conv0.b".to_string(), 2),
+            ("fc.w".to_string(), 6),
+        ]);
+        let table =
+            PolicyTable::parse("conv*.b=dense;conv*=regtopk:mu=0.3,k=2;*=topk").unwrap();
+        let lw = LayerwiseSparsifier::with_policies(
+            &SparsifierKind::TopK { k: 4 },
+            layout,
+            &BudgetPolicy::Proportional { frac: 0.5 },
+            &table,
+            0,
+        );
+        assert_eq!(lw.group_families(), vec!["regtopk", "dense", "topk"]);
+        // conv0.w: policy k=2 overrides the proportional budget of 4
+        assert_eq!(lw.budgets(), &[2, 1, 3]);
+    }
+
+    #[test]
+    fn dense_child_sends_whole_group() {
+        let layout = layout_4_6();
+        let table = PolicyTable::parse("a=dense").unwrap();
+        let mut lw = LayerwiseSparsifier::with_policies(
+            &SparsifierKind::TopK { k: 0 },
+            layout.clone(),
+            &BudgetPolicy::PerGroup { ks: vec![1, 2] },
+            &table,
+            0,
+        );
+        let grad: Vec<f32> = (0..10).map(|i| (10 - i) as f32).collect();
+        let gagg = vec![0.0f32; 10];
+        let ctx = RoundCtx { t: 0, gagg_prev: &gagg, omega: 1.0, genie_acc: None };
+        let view = GradView::new(&layout, &grad);
+        let mut up = SparseUpdate::empty();
+        lw.step_group_into(&view, &ctx, &mut up);
+        assert_eq!(up.bucket(0).nnz(), 4, "dense group transmits everything");
+        assert_eq!(up.bucket(1).nnz(), 2, "topk group keeps its budget");
+    }
+
+    #[test]
+    fn constant_schedule_matches_homogeneous_build() {
+        // a Linear schedule with from == to is still exercised per
+        // round through set_temperature — it must not disturb the
+        // trajectory of a plain constant-mu build
+        let layout = layout_4_6();
+        let kind = SparsifierKind::RegTopK { k: 3, mu: 0.5, q: 1.0 };
+        let budget = BudgetPolicy::Global { k: 3 };
+        let mut plain = LayerwiseSparsifier::new(&kind, layout.clone(), &budget, 0);
+        let table = PolicyTable::parse("*=regtopk:mu=0.5..0.5/10").unwrap();
+        let mut sched =
+            LayerwiseSparsifier::with_policies(&kind, layout.clone(), &budget, &table, 0);
+        assert!(sched.schedules.iter().all(Option::is_some));
+        let mut gagg = vec![0.0f32; 10];
+        let mut up_a = SparseUpdate::empty();
+        let mut up_b = SparseUpdate::empty();
+        for t in 0..6 {
+            let g: Vec<f32> = (0..10).map(|i| ((i * 5 + t * 7) % 9) as f32 - 4.0).collect();
+            let ctx = RoundCtx { t, gagg_prev: &gagg, omega: 0.5, genie_acc: None };
+            let view = GradView::new(&layout, &g);
+            plain.step_group_into(&view, &ctx, &mut up_a);
+            sched.step_group_into(&view, &ctx, &mut up_b);
+            assert_eq!(up_a, up_b, "t={t}");
+            gagg = up_a.flatten().to_dense();
+        }
+    }
+
+    #[test]
+    fn decaying_mu_schedule_changes_behavior_then_settles() {
+        // at t >= over the scheduled stack behaves exactly like a
+        // constant-`to` stack with the same error-feedback history
+        let sched = Schedule::Linear { from: 4.0, to: 0.1, over: 5 };
+        assert_eq!(sched.at(0), 4.0);
+        assert_eq!(sched.at(5), 0.1);
+        assert_eq!(sched.at(50), 0.1);
+        let layout = GradLayout::single(8);
+        let kind = SparsifierKind::RegTopK { k: 2, mu: 4.0, q: 1.0 };
+        let table = PolicyTable::parse("*=regtopk:mu=4.0..0.1/5").unwrap();
+        let lw = LayerwiseSparsifier::with_policies(
+            &kind,
+            layout,
+            &BudgetPolicy::Global { k: 2 },
+            &table,
+            0,
+        );
+        assert!(lw.schedules[0].is_some());
+        assert_eq!(lw.group_families(), vec!["regtopk"]);
+    }
+
+    #[test]
+    fn set_shards_clamps_tiny_groups_to_serial() {
+        // a big group takes the resolved count, a bias-sized group
+        // stays serial (below MIN_SHARDED_DIM)
+        let layout = GradLayout::from_sizes([
+            ("big".to_string(), MIN_SHARDED_DIM + 10),
+            ("bias".to_string(), 16),
+        ]);
+        let mut lw = LayerwiseSparsifier::new(
+            &SparsifierKind::TopK { k: 8 },
+            layout,
+            &BudgetPolicy::Global { k: 8 },
+            0,
+        );
+        assert_eq!(lw.child_shards(), &[1, 1], "serial until shards are wired");
+        lw.set_shards(8);
+        assert_eq!(lw.child_shards(), &[8, 1]);
+        lw.set_shards(1);
+        assert_eq!(lw.child_shards(), &[1, 1]);
+    }
+
+    #[test]
+    fn grouped_state_roundtrips_through_export() {
+        let layout = layout_4_6();
+        let kind = SparsifierKind::RegTopK { k: 3, mu: 0.5, q: 1.0 };
+        let budget = BudgetPolicy::Global { k: 3 };
+        let mut a = LayerwiseSparsifier::new(&kind, layout.clone(), &budget, 0);
+        let mut gagg = vec![0.0f32; 10];
+        for t in 0..4 {
+            let g: Vec<f32> = (0..10).map(|i| ((i * 3 + t) % 7) as f32 - 3.0).collect();
+            let ctx = RoundCtx { t, gagg_prev: &gagg, omega: 0.5, genie_acc: None };
+            gagg = a.step(&g, &ctx).to_dense();
+        }
+        let st = a.export_state();
+        assert_eq!(st.kind(), "grouped");
+        let mut b = LayerwiseSparsifier::new(&kind, layout.clone(), &budget, 0);
+        b.import_state(&st).unwrap();
+        // both continue identically from the restored history
+        let g: Vec<f32> = (0..10).map(|i| (i as f32) - 4.5).collect();
+        let ctx = RoundCtx { t: 4, gagg_prev: &gagg, omega: 0.5, genie_acc: None };
+        assert_eq!(a.step(&g, &ctx), b.step(&g, &ctx));
+        // wrong shape is an error
+        let mut c = LayerwiseSparsifier::new(&kind, GradLayout::single(10), &budget, 0);
+        assert!(c.import_state(&st).is_err());
     }
 
     #[test]

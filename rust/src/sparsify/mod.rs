@@ -26,6 +26,7 @@ mod dense;
 mod dgc;
 mod global_topk;
 mod layerwise;
+mod policy;
 mod randk;
 mod regtopk;
 mod threshold;
@@ -36,13 +37,48 @@ pub use dense::Dense;
 pub use dgc::Dgc;
 pub use global_topk::GlobalTopK;
 pub use layerwise::{BudgetPolicy, LayerwiseSparsifier};
+pub use policy::{glob_match, GroupPolicy, PolicyRule, PolicyTable, Schedule};
 pub use randk::RandK;
 pub use regtopk::RegTopK;
 pub use threshold::Threshold;
 pub use topk::TopK;
 
-use crate::grad::GradView;
+use crate::grad::{EfState, GradView};
 use crate::sparse::{SparseUpdate, SparseVec};
+
+/// The persistent (checkpointable) state a sparsifier carries across
+/// rounds.  Scratch buffers (scores, selection lists, engines) are
+/// derived and excluded; what is here is exactly what a resumed run
+/// needs to continue the trajectory bit-for-bit.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SparsifierState {
+    /// No state across rounds (dense).
+    Stateless,
+    /// Error-feedback history (topk / regtopk / threshold / gtopk).
+    Ef(EfState),
+    /// Error feedback plus the selection RNG stream (randk).
+    EfRng { ef: EfState, rng: [u64; 4], gauss_spare: Option<f64> },
+    /// DGC velocity + accumulated-velocity stores.
+    Dgc { vel: Vec<f32>, acc: Vec<f32> },
+    /// Residual store only (adak).
+    Residual { eps: Vec<f32> },
+    /// One state per child group (the layerwise wrapper).
+    Grouped(Vec<SparsifierState>),
+}
+
+impl SparsifierState {
+    /// Short tag for error messages.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            SparsifierState::Stateless => "stateless",
+            SparsifierState::Ef(_) => "ef",
+            SparsifierState::EfRng { .. } => "ef+rng",
+            SparsifierState::Dgc { .. } => "dgc",
+            SparsifierState::Residual { .. } => "residual",
+            SparsifierState::Grouped(_) => "grouped",
+        }
+    }
+}
 
 /// Per-round context handed to every sparsifier by the worker loop.
 pub struct RoundCtx<'a> {
@@ -102,6 +138,39 @@ pub trait Sparsifier: Send {
     /// override this.  The default is a no-op so stateless sparsifiers
     /// need not care.
     fn set_shards(&mut self, _shards: usize) {}
+
+    /// Re-tune the REGTOP-k temperature `mu` / never-sent prior `Q` at
+    /// runtime (per-group `Schedule`s drive this once per round).  A
+    /// no-op for families without those hyperparameters.
+    fn set_temperature(&mut self, _mu: f32, _q: f32) {}
+
+    /// Export the persistent cross-round state for checkpointing.  The
+    /// default covers stateless families; everything with history
+    /// overrides it so a resumed run continues the trajectory instead
+    /// of cold-restarting error feedback (ISSUE 3 resume fix).
+    fn export_state(&self) -> SparsifierState {
+        SparsifierState::Stateless
+    }
+
+    /// Restore a previously exported state.  Errors on a family or
+    /// dimension mismatch (the checkpoint belongs to another config).
+    fn import_state(&mut self, st: &SparsifierState) -> Result<(), String> {
+        match st {
+            SparsifierState::Stateless => Ok(()),
+            other => Err(format!(
+                "'{}' carries no persistent state, got '{}'",
+                self.name(),
+                other.kind()
+            )),
+        }
+    }
+
+    /// Family name per parameter group (observability: the CLI prints
+    /// this next to the per-group ledger table).  Flat sparsifiers are
+    /// one implicit group; the layerwise wrapper reports its children.
+    fn group_families(&self) -> Vec<&'static str> {
+        vec![self.name()]
+    }
 
     /// Whether this sparsifier needs the genie side-channel (only the
     /// idealized global TOP-k does).

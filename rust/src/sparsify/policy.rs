@@ -1,0 +1,530 @@
+//! Heterogeneous per-group sparsification policies.
+//!
+//! The journal follow-up ("Regularized Top-k", arXiv 2501.05633) states
+//! the posterior statistics, the temperature `mu` and the budget `k`
+//! per layer — and nothing forces every layer to run the same *family*:
+//! biases are tiny and cheap to send dense, embedding-like blocks want
+//! aggressive RegTop-k, everything else can ride plain Top-k.  A
+//! [`PolicyTable`] maps parameter-group names (glob patterns, first
+//! match wins) to a [`GroupPolicy`]: an optional family override plus
+//! any subset of the family hyperparameters, with `mu`/`Q` optionally
+//! given as a per-round [`Schedule`] instead of a constant.
+//!
+//! Spec language (CLI `--policy`, `;`-separated rules):
+//!
+//! ```text
+//! conv*=regtopk:mu=0.3;bias*=dense;*=topk
+//! fc*=:mu=0.5..0.1/200          # empty family = inherit, linear mu decay
+//! ```
+//!
+//! Each rule is `glob=family[:key=value,...]`; an empty family inherits
+//! the run's base sparsifier.  Groups matched by no rule fall back to
+//! the shared default (the homogeneous PR 2 path, bit-identical).  The
+//! table round-trips through `TrainConfig` JSON, so run manifests and
+//! checkpoints echo the full heterogeneous setup.
+
+use crate::sparsify::{SparsifierKind, SparsifierParams};
+use crate::util::json::{obj, Json};
+
+/// A per-round hyperparameter schedule.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Schedule {
+    Const(f32),
+    /// Linear interpolation from `from` (round 0) to `to` (round
+    /// `over`), constant at `to` afterwards.
+    Linear { from: f32, to: f32, over: usize },
+}
+
+impl Schedule {
+    /// Value at round `t`.
+    pub fn at(&self, t: usize) -> f32 {
+        match self {
+            Schedule::Const(v) => *v,
+            Schedule::Linear { from, to, over } => {
+                if *over == 0 || t >= *over {
+                    *to
+                } else {
+                    from + (to - from) * (t as f32 / *over as f32)
+                }
+            }
+        }
+    }
+
+    /// The values the schedule can emit (for range validation).
+    pub fn endpoints(&self) -> (f32, f32) {
+        match self {
+            Schedule::Const(v) => (*v, *v),
+            Schedule::Linear { from, to, .. } => (*from, *to),
+        }
+    }
+
+    /// Parse `"0.3"` (constant) or `"0.5..0.1/200"` (linear over 200
+    /// rounds).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let s = s.trim();
+        let num = |v: &str| -> Result<f32, String> {
+            v.trim()
+                .parse::<f32>()
+                .map_err(|_| format!("bad schedule value '{v}' in '{s}'"))
+        };
+        if let Some((range, over)) = s.split_once('/') {
+            let (from, to) = range
+                .split_once("..")
+                .ok_or_else(|| format!("linear schedule '{s}' needs the form FROM..TO/OVER"))?;
+            let over: usize = over
+                .trim()
+                .parse()
+                .map_err(|_| format!("bad schedule horizon '{over}' in '{s}'"))?;
+            Ok(Schedule::Linear { from: num(from)?, to: num(to)?, over })
+        } else if s.contains("..") {
+            Err(format!("linear schedule '{s}' needs a /OVER horizon"))
+        } else {
+            Ok(Schedule::Const(num(s)?))
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            Schedule::Const(v) => (*v as f64).into(),
+            Schedule::Linear { from, to, over } => obj([
+                ("from", (*from as f64).into()),
+                ("to", (*to as f64).into()),
+                ("over", (*over).into()),
+            ]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        if let Some(v) = j.as_f64() {
+            return Ok(Schedule::Const(v as f32));
+        }
+        let get = |key: &str| {
+            j.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("schedule missing '{key}'"))
+        };
+        Ok(Schedule::Linear {
+            from: get("from")? as f32,
+            to: get("to")? as f32,
+            over: j
+                .get("over")
+                .and_then(Json::as_usize)
+                .ok_or("schedule missing 'over'")?,
+        })
+    }
+}
+
+/// One group's resolved policy: an optional family override plus any
+/// subset of the family hyperparameters.  Unset fields inherit the
+/// run's base [`SparsifierKind`]; an unset `k` takes the group's
+/// budget-resolved value.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct GroupPolicy {
+    /// family name override (None = the base sparsifier's family)
+    pub family: Option<String>,
+    /// explicit budget (overrides the `BudgetPolicy`-resolved k)
+    pub k: Option<usize>,
+    /// REGTOP-k temperature, possibly scheduled per round
+    pub mu: Option<Schedule>,
+    /// REGTOP-k never-sent prior Q, possibly scheduled per round
+    pub q: Option<Schedule>,
+    pub tau: Option<f32>,
+    pub seed: Option<u64>,
+    pub momentum: Option<f32>,
+    pub clip: Option<f32>,
+    pub ratio: Option<f32>,
+    pub k_min: Option<usize>,
+    pub k_max: Option<usize>,
+}
+
+impl GroupPolicy {
+    /// Whether any mu/Q entry is a non-constant schedule (the layerwise
+    /// wrapper only re-tunes children per round when one is).
+    pub fn has_schedule(&self) -> bool {
+        matches!(self.mu, Some(Schedule::Linear { .. }))
+            || matches!(self.q, Some(Schedule::Linear { .. }))
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        if let Some(f) = &self.family {
+            if SparsifierKind::from_params(f, &SparsifierParams::default()).is_none() {
+                return Err(format!("policy names unknown family '{f}'"));
+            }
+        }
+        if let Some(mu) = &self.mu {
+            let (a, b) = mu.endpoints();
+            if !(a.is_finite() && b.is_finite() && a > 0.0 && b > 0.0) {
+                return Err(format!("mu schedule endpoints ({a}, {b}) must be positive"));
+            }
+        }
+        if let Some(tau) = self.tau {
+            if !(tau.is_finite() && tau > 0.0) {
+                return Err(format!("tau {tau} must be positive"));
+            }
+        }
+        if let Some(m) = self.momentum {
+            if !(0.0..1.0).contains(&m) {
+                return Err(format!("momentum {m} outside [0, 1)"));
+            }
+        }
+        if let Some(s) = self.seed {
+            // the config JSON layer stores numbers as f64: larger
+            // seeds would silently corrupt on the manifest round trip
+            if s > (1u64 << 53) {
+                return Err(format!(
+                    "seed {s} exceeds 2^53 and cannot round-trip through the config JSON"
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// `glob -> GroupPolicy` rule.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PolicyRule {
+    pub pattern: String,
+    pub policy: GroupPolicy,
+}
+
+/// Ordered rule list; [`Self::resolve`] returns the first match.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PolicyTable {
+    rules: Vec<PolicyRule>,
+}
+
+impl PolicyTable {
+    pub fn new(rules: Vec<PolicyRule>) -> Result<Self, String> {
+        for r in &rules {
+            if r.pattern.is_empty() {
+                return Err("policy rule with empty glob pattern".to_string());
+            }
+            r.policy.validate()?;
+        }
+        Ok(PolicyTable { rules })
+    }
+
+    pub fn rules(&self) -> &[PolicyRule] {
+        &self.rules
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rules.is_empty()
+    }
+
+    /// First rule whose glob matches `group_name` (None = the shared
+    /// homogeneous default applies).
+    pub fn resolve(&self, group_name: &str) -> Option<&GroupPolicy> {
+        self.rules
+            .iter()
+            .find(|r| glob_match(&r.pattern, group_name))
+            .map(|r| &r.policy)
+    }
+
+    /// Parse the CLI spec `glob=family[:key=val,...];...` (see module
+    /// docs).  An empty family segment inherits the base sparsifier.
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        let mut rules = Vec::new();
+        for part in spec.split(';').map(str::trim).filter(|s| !s.is_empty()) {
+            let (pattern, rhs) = part.split_once('=').ok_or_else(|| {
+                format!("policy rule '{part}' needs the form glob=family[:key=val,...]")
+            })?;
+            let pattern = pattern.trim();
+            let (family, params) = match rhs.split_once(':') {
+                Some((f, p)) => (f.trim(), Some(p)),
+                None => (rhs.trim(), None),
+            };
+            let mut policy = GroupPolicy {
+                family: (!family.is_empty()).then(|| family.to_string()),
+                ..GroupPolicy::default()
+            };
+            for kv in params
+                .unwrap_or("")
+                .split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+            {
+                let (key, val) = kv
+                    .split_once('=')
+                    .ok_or_else(|| format!("policy param '{kv}' needs key=value"))?;
+                let val = val.trim();
+                let us = |v: &str| {
+                    v.parse::<usize>().map_err(|_| format!("bad integer '{v}' for '{key}'"))
+                };
+                let fl = |v: &str| {
+                    v.parse::<f32>().map_err(|_| format!("bad number '{v}' for '{key}'"))
+                };
+                match key.trim() {
+                    "k" => policy.k = Some(us(val)?),
+                    "mu" => policy.mu = Some(Schedule::parse(val)?),
+                    "q" => policy.q = Some(Schedule::parse(val)?),
+                    "tau" => policy.tau = Some(fl(val)?),
+                    "seed" => {
+                        policy.seed = Some(
+                            val.parse::<u64>()
+                                .map_err(|_| format!("bad seed '{val}'"))?,
+                        )
+                    }
+                    "momentum" => policy.momentum = Some(fl(val)?),
+                    "clip" => policy.clip = Some(fl(val)?),
+                    "ratio" => policy.ratio = Some(fl(val)?),
+                    "k_min" | "kmin" => policy.k_min = Some(us(val)?),
+                    "k_max" | "kmax" => policy.k_max = Some(us(val)?),
+                    other => return Err(format!("unknown policy param '{other}'")),
+                }
+            }
+            rules.push(PolicyRule { pattern: pattern.to_string(), policy });
+        }
+        if rules.is_empty() {
+            return Err(format!("empty policy spec '{spec}'"));
+        }
+        Self::new(rules)
+    }
+
+    /// Serialize as `[{"match": glob, "family"?: .., "mu"?: .., ...}]`.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.rules
+                .iter()
+                .map(|r| {
+                    let mut m = std::collections::BTreeMap::new();
+                    m.insert("match".to_string(), r.pattern.as_str().into());
+                    let p = &r.policy;
+                    if let Some(f) = &p.family {
+                        m.insert("family".to_string(), f.as_str().into());
+                    }
+                    if let Some(k) = p.k {
+                        m.insert("k".to_string(), k.into());
+                    }
+                    if let Some(s) = &p.mu {
+                        m.insert("mu".to_string(), s.to_json());
+                    }
+                    if let Some(s) = &p.q {
+                        m.insert("q".to_string(), s.to_json());
+                    }
+                    if let Some(v) = p.tau {
+                        m.insert("tau".to_string(), (v as f64).into());
+                    }
+                    if let Some(v) = p.seed {
+                        m.insert("seed".to_string(), (v as usize).into());
+                    }
+                    if let Some(v) = p.momentum {
+                        m.insert("momentum".to_string(), (v as f64).into());
+                    }
+                    if let Some(v) = p.clip {
+                        m.insert("clip".to_string(), (v as f64).into());
+                    }
+                    if let Some(v) = p.ratio {
+                        m.insert("ratio".to_string(), (v as f64).into());
+                    }
+                    if let Some(v) = p.k_min {
+                        m.insert("k_min".to_string(), v.into());
+                    }
+                    if let Some(v) = p.k_max {
+                        m.insert("k_max".to_string(), v.into());
+                    }
+                    Json::Obj(m)
+                })
+                .collect(),
+        )
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        const KEYS: [&str; 12] = [
+            "match", "family", "k", "mu", "q", "tau", "seed", "momentum", "clip", "ratio",
+            "k_min", "k_max",
+        ];
+        let arr = j.as_arr().ok_or("policy must be a JSON array")?;
+        let mut rules = Vec::new();
+        for (i, entry) in arr.iter().enumerate() {
+            // unknown/misspelled keys must fail loudly, exactly like
+            // the CLI spec parser — a silently dropped hyperparameter
+            // is the state-loss bug class this module exists to fix
+            let m = entry
+                .as_obj()
+                .ok_or_else(|| format!("policy[{i}] must be an object"))?;
+            if let Some(bad) = m.keys().find(|k| !KEYS.contains(&k.as_str())) {
+                return Err(format!("policy[{i}] has unknown key '{bad}'"));
+            }
+            let pattern = entry
+                .get("match")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("policy[{i}] missing 'match'"))?
+                .to_string();
+            let f32_of = |key: &str| entry.get(key).and_then(Json::as_f64).map(|v| v as f32);
+            let sched_of = |key: &str| -> Result<Option<Schedule>, String> {
+                entry.get(key).map(Schedule::from_json).transpose()
+            };
+            let policy = GroupPolicy {
+                family: entry.get("family").and_then(Json::as_str).map(str::to_string),
+                k: entry.get("k").and_then(Json::as_usize),
+                mu: sched_of("mu")?,
+                q: sched_of("q")?,
+                tau: f32_of("tau"),
+                seed: entry.get("seed").and_then(Json::as_f64).map(|v| v as u64),
+                momentum: f32_of("momentum"),
+                clip: f32_of("clip"),
+                ratio: f32_of("ratio"),
+                k_min: entry.get("k_min").and_then(Json::as_usize),
+                k_max: entry.get("k_max").and_then(Json::as_usize),
+            };
+            rules.push(PolicyRule { pattern, policy });
+        }
+        Self::new(rules)
+    }
+}
+
+/// `*` (any run) / `?` (any one char) glob match, anchored both ends.
+pub fn glob_match(pattern: &str, name: &str) -> bool {
+    let p: Vec<char> = pattern.chars().collect();
+    let n: Vec<char> = name.chars().collect();
+    let (mut pi, mut ni) = (0usize, 0usize);
+    let mut star: Option<usize> = None;
+    let mut mark = 0usize;
+    while ni < n.len() {
+        if pi < p.len() && (p[pi] == '?' || p[pi] == n[ni]) {
+            pi += 1;
+            ni += 1;
+        } else if pi < p.len() && p[pi] == '*' {
+            star = Some(pi);
+            mark = ni;
+            pi += 1;
+        } else if let Some(s) = star {
+            pi = s + 1;
+            mark += 1;
+            ni = mark;
+        } else {
+            return false;
+        }
+    }
+    while pi < p.len() && p[pi] == '*' {
+        pi += 1;
+    }
+    pi == p.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn glob_matches_star_and_question() {
+        assert!(glob_match("conv*", "conv0.w"));
+        assert!(glob_match("*", "anything"));
+        assert!(glob_match("*.b", "fc0.b"));
+        assert!(glob_match("fc?.w", "fc0.w"));
+        assert!(glob_match("*conv*", "block1.conv.w"));
+        assert!(!glob_match("conv*", "fc0.w"));
+        assert!(!glob_match("fc?.w", "fc10.w"));
+        assert!(!glob_match("", "x"));
+        assert!(glob_match("", ""));
+        assert!(glob_match("**", "abc"));
+    }
+
+    #[test]
+    fn schedule_const_and_linear() {
+        let c = Schedule::parse("0.3").unwrap();
+        assert_eq!(c, Schedule::Const(0.3));
+        assert_eq!(c.at(0), 0.3);
+        assert_eq!(c.at(1000), 0.3);
+        let l = Schedule::parse("0.5..0.1/4").unwrap();
+        assert_eq!(l, Schedule::Linear { from: 0.5, to: 0.1, over: 4 });
+        assert_eq!(l.at(0), 0.5);
+        assert!((l.at(2) - 0.3).abs() < 1e-6);
+        assert_eq!(l.at(4), 0.1);
+        assert_eq!(l.at(400), 0.1, "clamped past the horizon");
+        assert!(Schedule::parse("0.5..0.1").is_err(), "missing /OVER");
+        assert!(Schedule::parse("x").is_err());
+        assert!(Schedule::parse("0.5../4").is_err());
+    }
+
+    #[test]
+    fn schedule_json_roundtrip() {
+        for s in [Schedule::Const(0.25), Schedule::Linear { from: 0.5, to: 0.1, over: 200 }] {
+            assert_eq!(Schedule::from_json(&s.to_json()).unwrap(), s);
+        }
+        assert!(Schedule::from_json(&Json::Str("x".into())).is_err());
+    }
+
+    #[test]
+    fn parse_issue_example() {
+        let t = PolicyTable::parse("conv*=regtopk:mu=0.3;bias=dense;*=topk").unwrap();
+        assert_eq!(t.rules().len(), 3);
+        let conv = t.resolve("conv0.w").unwrap();
+        assert_eq!(conv.family.as_deref(), Some("regtopk"));
+        assert_eq!(conv.mu, Some(Schedule::Const(0.3)));
+        assert_eq!(t.resolve("bias").unwrap().family.as_deref(), Some("dense"));
+        assert_eq!(t.resolve("fc.w").unwrap().family.as_deref(), Some("topk"));
+    }
+
+    #[test]
+    fn first_match_wins_and_inherit_family() {
+        let t = PolicyTable::parse("fc*=:mu=0.5..0.1/200;*=dense").unwrap();
+        let fc = t.resolve("fc0.w").unwrap();
+        assert_eq!(fc.family, None, "empty family segment inherits");
+        assert!(fc.has_schedule());
+        assert_eq!(t.resolve("conv").unwrap().family.as_deref(), Some("dense"));
+        // no rule matches -> shared default
+        let t2 = PolicyTable::parse("conv*=dense").unwrap();
+        assert!(t2.resolve("fc0.w").is_none());
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        assert!(PolicyTable::parse("").is_err());
+        assert!(PolicyTable::parse("conv*").is_err(), "no '='");
+        assert!(PolicyTable::parse("conv*=magic").is_err(), "unknown family");
+        assert!(PolicyTable::parse("conv*=topk:bogus=1").is_err(), "unknown param");
+        assert!(PolicyTable::parse("conv*=regtopk:mu=-1").is_err(), "mu <= 0");
+        assert!(PolicyTable::parse("conv*=regtopk:mu=0..0.5/10").is_err(), "mu endpoint 0");
+        assert!(PolicyTable::parse("conv*=threshold:tau=0").is_err(), "tau <= 0");
+        assert!(PolicyTable::parse("conv*=dgc:momentum=1.5").is_err(), "momentum >= 1");
+        assert!(PolicyTable::parse("conv*=topk:k=x").is_err());
+        assert!(PolicyTable::parse("=topk").is_err(), "empty glob");
+    }
+
+    #[test]
+    fn table_json_roundtrip() {
+        let t = PolicyTable::parse(
+            "conv*=regtopk:mu=0.5..0.1/200,q=2,k=32;*.b=dense;fc*=adak:ratio=0.8,kmin=2,kmax=40;*=topk:seed=7",
+        )
+        .unwrap();
+        let j = t.to_json();
+        let t2 = PolicyTable::from_json(&j).unwrap();
+        assert_eq!(t, t2);
+        // validation also runs on the JSON path
+        assert!(PolicyTable::from_json(&Json::parse(r#"[{"match":"a","family":"magic"}]"#).unwrap()).is_err());
+        assert!(PolicyTable::from_json(&Json::parse(r#"[{"family":"topk"}]"#).unwrap()).is_err());
+        // unknown/misspelled keys are rejected, not silently dropped
+        for bad in [
+            r#"[{"match":"a","family":"topk","kmax":40}]"#,
+            r#"[{"match":"a","family":"regtopk","Q":2}]"#,
+            r#"["not an object"]"#,
+        ] {
+            assert!(PolicyTable::from_json(&Json::parse(bad).unwrap()).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn huge_seeds_rejected_before_json_corruption() {
+        // 2^53 + 3 is not representable as an f64 integer; both spec
+        // and JSON paths must refuse it instead of corrupting the
+        // stream seed on the manifest round trip
+        assert!(PolicyTable::parse("g=randk:seed=9007199254740995").is_err());
+        assert!(PolicyTable::parse("g=randk:seed=12345").is_ok());
+    }
+
+    #[test]
+    fn full_param_surface_parses() {
+        let t = PolicyTable::parse(
+            "g=dgc:k=5,momentum=0.7,clip=2.5;h=randk:seed=11;i=threshold:tau=0.25",
+        )
+        .unwrap();
+        let g = t.resolve("g").unwrap();
+        assert_eq!(g.k, Some(5));
+        assert_eq!(g.momentum, Some(0.7));
+        assert_eq!(g.clip, Some(2.5));
+        assert_eq!(t.resolve("h").unwrap().seed, Some(11));
+        assert_eq!(t.resolve("i").unwrap().tau, Some(0.25));
+    }
+}

@@ -4,7 +4,7 @@
 
 use crate::grad::ErrorFeedback;
 use crate::sparse::SparseVec;
-use crate::sparsify::{RoundCtx, Sparsifier};
+use crate::sparsify::{RoundCtx, Sparsifier, SparsifierState};
 use crate::util::rng::Rng;
 
 pub struct RandK {
@@ -41,6 +41,24 @@ impl Sparsifier for RandK {
         self.sel.clear();
         self.sel.extend(sampled.into_iter().map(|i| i as u32));
         self.ef.commit_into(&self.sel, out);
+    }
+
+    /// Error feedback AND the selection stream: a resumed randk run
+    /// re-draws exactly the indices the uninterrupted run would have.
+    fn export_state(&self) -> SparsifierState {
+        let (rng, gauss_spare) = self.rng.state();
+        SparsifierState::EfRng { ef: self.ef.snapshot(), rng, gauss_spare }
+    }
+
+    fn import_state(&mut self, st: &SparsifierState) -> Result<(), String> {
+        match st {
+            SparsifierState::EfRng { ef, rng, gauss_spare } => {
+                self.ef.restore(ef)?;
+                self.rng = Rng::from_state(*rng, *gauss_spare);
+                Ok(())
+            }
+            other => Err(format!("randk cannot import '{}' state", other.kind())),
+        }
     }
 
     fn peek_acc_into(&self, grad: &[f32], out: &mut [f32]) {

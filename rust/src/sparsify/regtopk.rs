@@ -15,7 +15,7 @@
 
 use crate::grad::ErrorFeedback;
 use crate::sparse::{select_topk, SelectEngine, SparseVec};
-use crate::sparsify::{RoundCtx, Sparsifier};
+use crate::sparsify::{RoundCtx, Sparsifier, SparsifierState};
 
 /// Must equal ref.DIV_EPS on the python side.
 pub const DIV_EPS: f32 = 1e-30;
@@ -216,6 +216,25 @@ impl Sparsifier for RegTopK {
 
     fn set_shards(&mut self, shards: usize) {
         self.engine = if shards > 1 { Some(SelectEngine::new(shards)) } else { None };
+    }
+
+    /// Per-round mu/Q re-tune (layer-wise schedules).  mu is kept
+    /// strictly positive — the mu -> 0 limit is plain TOP-k and the
+    /// score kernel divides by mu.
+    fn set_temperature(&mut self, mu: f32, q: f32) {
+        self.mu = mu.max(f32::MIN_POSITIVE);
+        self.q = q;
+    }
+
+    fn export_state(&self) -> SparsifierState {
+        SparsifierState::Ef(self.ef.snapshot())
+    }
+
+    fn import_state(&mut self, st: &SparsifierState) -> Result<(), String> {
+        match st {
+            SparsifierState::Ef(ef) => self.ef.restore(ef),
+            other => Err(format!("regtopk cannot import '{}' state", other.kind())),
+        }
     }
 
     fn peek_acc_into(&self, grad: &[f32], out: &mut [f32]) {

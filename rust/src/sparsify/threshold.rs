@@ -3,7 +3,7 @@
 
 use crate::grad::ErrorFeedback;
 use crate::sparse::SparseVec;
-use crate::sparsify::{RoundCtx, Sparsifier};
+use crate::sparsify::{RoundCtx, Sparsifier, SparsifierState};
 
 pub struct Threshold {
     tau: f32,
@@ -43,6 +43,17 @@ impl Sparsifier for Threshold {
                 .map(|(i, _)| i as u32),
         );
         self.ef.commit_into(&self.sel, out);
+    }
+
+    fn export_state(&self) -> SparsifierState {
+        SparsifierState::Ef(self.ef.snapshot())
+    }
+
+    fn import_state(&mut self, st: &SparsifierState) -> Result<(), String> {
+        match st {
+            SparsifierState::Ef(ef) => self.ef.restore(ef),
+            other => Err(format!("threshold cannot import '{}' state", other.kind())),
+        }
     }
 
     fn peek_acc_into(&self, grad: &[f32], out: &mut [f32]) {

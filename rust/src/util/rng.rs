@@ -40,6 +40,17 @@ impl Rng {
         }
     }
 
+    /// Snapshot the full generator state (checkpoint/resume: a
+    /// restored stream continues exactly where the original left off).
+    pub fn state(&self) -> ([u64; 4], Option<f64>) {
+        (self.s, self.gauss_spare)
+    }
+
+    /// Rebuild a generator from a [`Self::state`] snapshot.
+    pub fn from_state(s: [u64; 4], gauss_spare: Option<f64>) -> Self {
+        Rng { s, gauss_spare }
+    }
+
     /// Derive an independent stream for a sub-component (worker id,
     /// epoch, ...) without correlating with the parent stream.
     pub fn derive(&self, stream: u64) -> Self {

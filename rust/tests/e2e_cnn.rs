@@ -25,9 +25,10 @@ fn resnet8_short_training_descends_and_evaluates() {
         s: 0.01,
         ..Fig3Config::default()
     };
-    let logs = run(&mut rt, cfg, "resnet8", false).unwrap();
-    assert_eq!(logs.len(), 2);
-    for log in &logs {
+    let runs = run(&mut rt, &cfg, "resnet8", false).unwrap();
+    assert_eq!(runs.len(), 2);
+    for r in &runs {
+        let log = &r.log;
         let first = log.records()[0].loss;
         let last = log.last().unwrap().loss;
         assert!(first.is_finite() && last.is_finite(), "{}", log.name);
@@ -58,9 +59,34 @@ fn mlp_path_trains_too() {
         s: 0.001,
         ..Fig3Config::default()
     };
-    let logs = run(&mut rt, cfg, "mlp", false).unwrap();
-    for log in &logs {
+    let runs = run(&mut rt, &cfg, "mlp", false).unwrap();
+    for r in &runs {
+        let log = &r.log;
         assert!(log.last().unwrap().loss < log.records()[0].loss, "{}", log.name);
+    }
+}
+
+#[test]
+fn resnet8_layerwise_adopts_manifest_layout() {
+    // the tentpole wiring: `GradLayout::from_flat` on the artifact's
+    // real per-layer layout, per-layer ledger tables on the way out
+    let Some(mut rt) = runtime() else { return };
+    let cfg = Fig3Config {
+        workers: 2,
+        iters: 4,
+        eval_every: 0,
+        train_rows: 200,
+        val_rows: 100,
+        s: 0.01,
+        layerwise: true,
+        ..Fig3Config::default()
+    };
+    let runs = run(&mut rt, &cfg, "resnet8", false).unwrap();
+    let layers = rt.manifest.models["resnet8"].layout.layers.len();
+    for r in &runs {
+        assert!(r.log.last().unwrap().loss.is_finite());
+        assert_eq!(r.groups.len(), layers, "one ledger row per manifest layer");
+        assert!(r.groups.iter().all(|(_, _, b, _)| *b > 0));
     }
 }
 
@@ -77,9 +103,9 @@ fn identical_seeds_give_identical_batches_across_sparsifiers() {
         val_rows: 100,
         ..Fig3Config::default()
     };
-    let logs = run(&mut rt, cfg, "resnet8", false).unwrap();
+    let runs = run(&mut rt, &cfg, "resnet8", false).unwrap();
     assert_eq!(
-        logs[0].records()[0].loss.to_bits(),
-        logs[1].records()[0].loss.to_bits()
+        runs[0].log.records()[0].loss.to_bits(),
+        runs[1].log.records()[0].loss.to_bits()
     );
 }

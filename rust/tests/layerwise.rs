@@ -20,7 +20,8 @@ use regtopk::experiments::fig2;
 use regtopk::grad::{GradLayout, GradView};
 use regtopk::sparse::SparseUpdate;
 use regtopk::sparsify::{
-    build, BudgetPolicy, LayerwiseSparsifier, RoundCtx, Sparsifier, SparsifierKind,
+    build, BudgetPolicy, LayerwiseSparsifier, PolicyTable, RoundCtx, Sparsifier,
+    SparsifierKind,
 };
 use regtopk::util::check;
 use regtopk::util::rng::Rng;
@@ -118,6 +119,150 @@ fn trainer_single_group_bit_matches_flat_for_all_families() {
     }
 }
 
+/// PR 3 equivalence extension: for EVERY family, a multi-group
+/// homogeneous stack is bit-identical whether built by `new`, by
+/// `with_policies` with an empty table, or by `with_policies` with a
+/// table whose globs match no group — the heterogeneous machinery must
+/// be invisible until a rule actually fires.
+#[test]
+fn homogeneous_multi_group_policy_table_is_identity() {
+    let layout = GradLayout::from_sizes([
+        ("conv.w".to_string(), 20),
+        ("conv.b".to_string(), 4),
+        ("fc.w".to_string(), 16),
+    ]);
+    let dim = layout.total();
+    let budget = BudgetPolicy::Global { k: 8 };
+    let non_matching = PolicyTable::parse("nothing_matches_*=dense").unwrap();
+    for kind in all_kinds(dim) {
+        let mut plain = LayerwiseSparsifier::new(&kind, layout.clone(), &budget, 1);
+        let mut empty = LayerwiseSparsifier::with_policies(
+            &kind,
+            layout.clone(),
+            &budget,
+            &PolicyTable::default(),
+            1,
+        );
+        let mut unmatched =
+            LayerwiseSparsifier::with_policies(&kind, layout.clone(), &budget, &non_matching, 1);
+        assert_eq!(plain.budgets(), empty.budgets(), "{kind:?}");
+        assert_eq!(plain.budgets(), unmatched.budgets(), "{kind:?}");
+        let mut rng = Rng::seed_from(17);
+        let mut gagg = vec![0.0f32; dim];
+        let (mut up_a, mut up_b, mut up_c) =
+            (SparseUpdate::empty(), SparseUpdate::empty(), SparseUpdate::empty());
+        for t in 0..6 {
+            let g = rng.gaussian_vec(dim, 1.0);
+            let genie: Option<Vec<f32>> =
+                if plain.needs_genie() { Some(plain.peek_acc(&g)) } else { None };
+            let ctx = RoundCtx {
+                t,
+                gagg_prev: &gagg,
+                omega: 1.0 / 3.0,
+                genie_acc: genie.as_deref(),
+            };
+            let view = GradView::new(&layout, &g);
+            plain.step_group_into(&view, &ctx, &mut up_a);
+            empty.step_group_into(&view, &ctx, &mut up_b);
+            unmatched.step_group_into(&view, &ctx, &mut up_c);
+            assert_eq!(up_a, up_b, "{kind:?} t={t} (empty table)");
+            assert_eq!(up_a, up_c, "{kind:?} t={t} (non-matching table)");
+            gagg = up_a.flatten().to_dense();
+        }
+    }
+}
+
+/// Heterogeneous end-to-end: the ISSUE spec example on a full trainer —
+/// conv weights on RegTop-k, biases dense, everything else Top-k — with
+/// per-group ledger attribution for both bytes and entries.
+#[test]
+fn heterogeneous_policy_end_to_end() {
+    let params =
+        LinearParams { workers: 4, rows_per_worker: 80, dim: 100, ..LinearParams::fig2() };
+    let problem = generate(params, 11);
+    let cfg = TrainConfig {
+        workers: 4,
+        eta: 0.02,
+        sparsifier: SparsifierKind::RegTopK { k: 10, mu: 0.5, q: 1.0 },
+        eval_every: 0,
+        groups: Some(GradLayout::from_sizes([
+            ("conv.w".to_string(), 60),
+            ("conv.b".to_string(), 10),
+            ("fc.w".to_string(), 30),
+        ])),
+        budget: Some(BudgetPolicy::Proportional { frac: 0.1 }),
+        policy: Some(PolicyTable::parse("conv*.b=dense;conv*=regtopk:mu=0.3;*=topk").unwrap()),
+        ..TrainConfig::default()
+    };
+    // the policy survives the config echo (manifest round trip)
+    let cfg = TrainConfig::from_json(&cfg.to_json()).unwrap();
+    assert!(cfg.policy.is_some());
+    let mut tr = fig2::trainer_from_config(&cfg, &problem);
+    assert_eq!(
+        tr.workers[0].sparsifier.group_families(),
+        vec!["regtopk", "dense", "topk"]
+    );
+    let iters = 60;
+    for _ in 0..iters {
+        let rr = tr.round();
+        assert!(rr.mean_loss.is_finite());
+    }
+    let entries = tr.ledger.group_upload_entries();
+    // conv.w: prop budget k=6; conv.b: dense (all 10); fc.w: k=3
+    assert_eq!(entries[0], ("conv.w".to_string(), 6 * 4 * iters));
+    assert_eq!(entries[1], ("conv.b".to_string(), 10 * 4 * iters));
+    assert_eq!(entries[2], ("fc.w".to_string(), 3 * 4 * iters));
+    let bytes = tr.ledger.group_upload_totals();
+    assert_eq!(
+        bytes.iter().map(|(_, b)| b).sum::<usize>(),
+        tr.ledger.total_upload_bytes()
+    );
+    // and the threaded driver agrees under heterogeneous policies
+    let mut b = fig2::trainer_from_config(&cfg, &problem);
+    b.run_threaded(iters);
+    assert_eq!(tr.server.w, b.server.w);
+    assert_eq!(tr.ledger.group_upload_totals(), b.ledger.group_upload_totals());
+}
+
+/// A scheduled mu decay must (a) leave the trajectory identical when
+/// the schedule is degenerate (from == to) and (b) actually change the
+/// selection behavior when it decays.
+#[test]
+fn mu_schedule_equivalence_and_effect() {
+    let params =
+        LinearParams { workers: 3, rows_per_worker: 50, dim: 20, ..LinearParams::fig2() };
+    let problem = generate(params, 5);
+    let groups = GradLayout::from_sizes([("a".to_string(), 12), ("b".to_string(), 8)]);
+    let mk = |policy: Option<PolicyTable>| TrainConfig {
+        workers: 3,
+        eta: 0.05,
+        sparsifier: SparsifierKind::RegTopK { k: 4, mu: 0.5, q: 1.0 },
+        eval_every: 0,
+        groups: Some(groups.clone()),
+        budget: Some(BudgetPolicy::Global { k: 4 }),
+        policy,
+        ..TrainConfig::default()
+    };
+    let mut plain = fig2::trainer_from_config(&mk(None), &problem);
+    let degenerate = PolicyTable::parse("*=regtopk:mu=0.5..0.5/30").unwrap();
+    let mut sched = fig2::trainer_from_config(&mk(Some(degenerate)), &problem);
+    let decay = PolicyTable::parse("*=regtopk:mu=8.0..0.01/15").unwrap();
+    let mut decayed = fig2::trainer_from_config(&mk(Some(decay)), &problem);
+    for _ in 0..25 {
+        plain.round();
+        sched.round();
+        decayed.round();
+    }
+    assert_eq!(
+        plain.server.w, sched.server.w,
+        "a constant schedule must not perturb the trajectory"
+    );
+    assert_ne!(
+        plain.server.w, decayed.server.w,
+        "a decaying mu schedule must alter selection"
+    );
+}
+
 /// Property: for random multi-group layouts, the flat compatibility
 /// path (`step_into`) of a layerwise stack equals its bucketed path
 /// flattened, and every bucket respects its resolved budget.
@@ -207,6 +352,7 @@ fn checkpoint_roundtrip_preserves_grad_layout() {
     assert_eq!(tr2.server.w, tr.server.w);
     std::fs::remove_file(&path).ok();
     std::fs::remove_file(path.with_extension("w")).ok();
+    std::fs::remove_file(path.with_extension("ef")).ok();
 }
 
 /// The acceptance scenario: multi-group RegTop-k with `Proportional`

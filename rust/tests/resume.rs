@@ -1,0 +1,181 @@
+//! Checkpoint-resume contract (ISSUE 3 satellite): a run restored from
+//! a checkpoint must continue the EXACT trajectory of the
+//! uninterrupted run — model, aggregate history, error feedback,
+//! selection RNG streams — for every sparsifier family, flat and
+//! layer-wise.  Before this fix `Trainer::restore` dropped `gagg_prev`
+//! and all sparsifier state, silently degrading resumed RegTop-k to a
+//! cold plain-Top-k restart.
+
+use regtopk::config::TrainConfig;
+use regtopk::coordinator::Checkpoint;
+use regtopk::data::linear::{generate, LinearParams};
+use regtopk::experiments::fig2;
+use regtopk::grad::GradLayout;
+use regtopk::sparsify::{BudgetPolicy, PolicyTable, SparsifierKind};
+
+fn testbed() -> (LinearParams, u64) {
+    (LinearParams { workers: 3, rows_per_worker: 50, dim: 24, ..LinearParams::fig2() }, 13)
+}
+
+fn all_kinds(dim: usize) -> Vec<SparsifierKind> {
+    let k = (dim / 4).max(1);
+    vec![
+        SparsifierKind::Dense,
+        SparsifierKind::TopK { k },
+        SparsifierKind::RegTopK { k, mu: 0.5, q: 1.0 },
+        SparsifierKind::RandK { k, seed: 5 },
+        SparsifierKind::Threshold { tau: 0.5 },
+        SparsifierKind::GlobalTopK { k },
+        SparsifierKind::Dgc { k, momentum: 0.9, clip: 0.0 },
+        SparsifierKind::AdaK { ratio: 1.0, k_min: 1, k_max: 2 * k },
+    ]
+}
+
+/// Drive `total` rounds uninterrupted vs `split` rounds + checkpoint +
+/// restore-into-fresh-trainer + the remaining rounds; the final models
+/// and aggregates must agree bit for bit.  `tag` keeps the on-disk
+/// checkpoint paths distinct across concurrently running tests.
+fn assert_resume_exact(tag: &str, cfg: &TrainConfig, split: usize, total: usize) {
+    let (params, seed) = testbed();
+    let problem = generate(params, seed);
+    let mut full = fig2::trainer_from_config(cfg, &problem);
+    for _ in 0..total {
+        full.round();
+    }
+    let mut first = fig2::trainer_from_config(cfg, &problem);
+    for _ in 0..split {
+        first.round();
+    }
+    let ck = first.checkpoint();
+    assert!(ck.state.is_some(), "trainer checkpoints must carry resume state");
+    // round-trip through disk: the sidecar codec is part of the contract
+    let path = std::env::temp_dir().join(format!(
+        "regtopk_resume_{}_{tag}_{}.json",
+        std::process::id(),
+        cfg.sparsifier.name()
+    ));
+    ck.save(&path).unwrap();
+    let re = Checkpoint::load(&path).unwrap();
+    assert_eq!(re, ck);
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(path.with_extension("w")).ok();
+    std::fs::remove_file(path.with_extension("ef")).ok();
+
+    let mut resumed = fig2::trainer_from_config(cfg, &problem);
+    resumed.restore(&re);
+    assert_eq!(resumed.iter(), split);
+    for _ in split..total {
+        resumed.round();
+    }
+    assert_eq!(
+        full.server.w, resumed.server.w,
+        "{}: resumed model diverged from the uninterrupted run",
+        cfg.sparsifier.name()
+    );
+}
+
+#[test]
+fn resume_equals_uninterrupted_for_all_families_flat() {
+    for kind in all_kinds(24) {
+        let cfg = TrainConfig {
+            workers: 3,
+            eta: 0.03,
+            sparsifier: kind,
+            eval_every: 0,
+            ..TrainConfig::default()
+        };
+        assert_resume_exact("flat", &cfg, 6, 14);
+    }
+}
+
+#[test]
+fn resume_equals_uninterrupted_layerwise_regtopk() {
+    let cfg = TrainConfig {
+        workers: 3,
+        eta: 0.03,
+        sparsifier: SparsifierKind::RegTopK { k: 6, mu: 0.5, q: 1.0 },
+        eval_every: 0,
+        groups: Some(GradLayout::from_sizes([
+            ("conv.w".to_string(), 16),
+            ("conv.b".to_string(), 8),
+        ])),
+        budget: Some(BudgetPolicy::Global { k: 6 }),
+        ..TrainConfig::default()
+    };
+    assert_resume_exact("layerwise", &cfg, 5, 12);
+}
+
+#[test]
+fn resume_equals_uninterrupted_heterogeneous_policy() {
+    // mixed families AND a mu schedule: schedules are functions of the
+    // restored cursor t, so the resumed run re-derives the same mu
+    let cfg = TrainConfig {
+        workers: 3,
+        eta: 0.03,
+        sparsifier: SparsifierKind::RegTopK { k: 6, mu: 0.5, q: 1.0 },
+        eval_every: 0,
+        groups: Some(GradLayout::from_sizes([
+            ("conv.w".to_string(), 12),
+            ("conv.b".to_string(), 4),
+            ("fc.w".to_string(), 8),
+        ])),
+        budget: Some(BudgetPolicy::Proportional { frac: 0.25 }),
+        policy: Some(
+            PolicyTable::parse("*.b=dense;conv*=regtopk:mu=0.8..0.2/10;*=topk").unwrap(),
+        ),
+        ..TrainConfig::default()
+    };
+    assert_resume_exact("hetero", &cfg, 4, 11);
+}
+
+#[test]
+fn legacy_model_only_checkpoint_still_restores_cold() {
+    let (params, seed) = testbed();
+    let problem = generate(params, seed);
+    let cfg = TrainConfig {
+        workers: 3,
+        eta: 0.03,
+        sparsifier: SparsifierKind::RegTopK { k: 6, mu: 0.5, q: 1.0 },
+        eval_every: 0,
+        ..TrainConfig::default()
+    };
+    let mut tr = fig2::trainer_from_config(&cfg, &problem);
+    for _ in 0..4 {
+        tr.round();
+    }
+    // a pre-fix checkpoint: model + cursor only
+    let legacy = Checkpoint::new(tr.iter(), tr.server.w.clone(), cfg.to_json());
+    let mut resumed = fig2::trainer_from_config(&cfg, &problem);
+    resumed.restore(&legacy);
+    assert_eq!(resumed.iter(), 4);
+    assert_eq!(resumed.server.w, tr.server.w);
+    // cold error feedback: the next round still runs fine
+    let rr = resumed.round();
+    assert!(rr.mean_loss.is_finite());
+}
+
+#[test]
+fn restore_rejects_mismatched_worker_state() {
+    let (params, seed) = testbed();
+    let problem = generate(params, seed);
+    let topk = TrainConfig {
+        workers: 3,
+        eta: 0.03,
+        sparsifier: SparsifierKind::TopK { k: 6 },
+        eval_every: 0,
+        ..TrainConfig::default()
+    };
+    let mut tr = fig2::trainer_from_config(&topk, &problem);
+    tr.round();
+    let ck = tr.checkpoint();
+    // importing an Ef state into a dgc stack must fail loudly
+    let dgc = TrainConfig {
+        sparsifier: SparsifierKind::Dgc { k: 6, momentum: 0.9, clip: 0.0 },
+        ..topk.clone()
+    };
+    let mut other = fig2::trainer_from_config(&dgc, &problem);
+    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        other.restore(&ck);
+    }));
+    assert!(res.is_err(), "family-mismatched resume state must not restore silently");
+}

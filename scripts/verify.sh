@@ -17,12 +17,15 @@ cargo build --release
 echo "== tier-1: cargo test -q =="
 cargo test -q
 
-echo "== style: cargo fmt --check =="
+echo "== style: cargo fmt --check (hard gate) =="
 if cargo fmt --version >/dev/null 2>&1; then
-    # Advisory until the pre-PR-2 tree is formatted wholesale: report
-    # drift loudly without failing the tier-1 gate (parts of the seed
-    # predate rustfmt enforcement).
-    cargo fmt --check || echo "WARN: rustfmt drift detected (non-fatal; run 'cargo fmt')"
+    # Hard gate (ROADMAP item, flipped in PR 3): drift fails verify.
+    # If this trips on a tree that predates the flip, run `cargo fmt`
+    # once, commit the result, and re-run.
+    cargo fmt --check || {
+        echo "FAIL: rustfmt drift — run 'cargo fmt' and commit the result"
+        exit 1
+    }
 else
     echo "rustfmt unavailable on this host; skipping"
 fi
@@ -40,16 +43,31 @@ target/release/repro train --config "$smoke_dir/cfg.json" \
 # flat run from the same config must still work (equivalence net)
 target/release/repro train --config "$smoke_dir/cfg.json" --out "$smoke_dir/out"
 
+echo "== heterogeneous smoke: --policy + fig3 --layerwise =="
+# heterogeneous policy table over named groups (ISSUE 3 tentpole)
+target/release/repro train --config "$smoke_dir/cfg.json" \
+    --groups conv:60,fc:40 --budget prop:0.1 \
+    --policy 'conv*=regtopk:mu=0.3;*=topk' --out "$smoke_dir/out"
+# fig3 layer-wise path: real artifacts when built, else the degraded
+# linreg protocol — either way it must complete and print the
+# per-group upload table
+target/release/repro fig3 --layerwise --iters 8 --eval-every 0 \
+    --policy '*.b=dense;*=regtopk:mu=0.5..0.1/8' --out "$smoke_dir/out"
+# hetero sweep row sanity
+target/release/repro sweep --param hetero --iters 40 --s 0.2
+
 if [[ "${1:-}" == "--full" ]]; then
     echo "== bench (full budget) =="
     cargo bench --bench topk_select
     cargo bench --bench sparsifiers
     BENCH_JSON=BENCH_PR2.json cargo bench --bench layerwise
+    BENCH_JSON=BENCH_PR3.json cargo bench --bench heterogeneous
 else
     echo "== bench smoke (quick budget) =="
     BENCH_BUDGET_MS=60 cargo bench --bench topk_select
     BENCH_BUDGET_MS=60 cargo bench --bench sparsifiers
     BENCH_BUDGET_MS=60 BENCH_JSON=BENCH_PR2.json cargo bench --bench layerwise
+    BENCH_BUDGET_MS=60 BENCH_JSON=BENCH_PR3.json cargo bench --bench heterogeneous
 fi
 
 echo "verify: OK"
