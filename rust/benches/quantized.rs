@@ -1,0 +1,118 @@
+//! Quantized-transmission benchmarks (ISSUE 4): packed-payload
+//! encode/decode throughput across bit widths, the full worker-side
+//! quantize-bucket pass (stochastic rounding + residual + packing),
+//! and the wire-byte points of quantized vs raw buckets.
+//!
+//!     cargo bench --bench quantized
+//!
+//! Results merge into BENCH_PR4.json (override with $BENCH_JSON):
+//! `quantized/*` entries carry median_s/melem_per_s; the
+//! `quantized_bytes/*` entries carry `packed_bytes` vs `raw_bytes`
+//! for one sparsified update (the upload saving the ledger reports
+//! per round under a `bits` policy).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use regtopk::comm::Quantizer;
+use regtopk::sparse::{QuantPayload, SparseVec};
+use regtopk::util::bench::{black_box, Bench};
+use regtopk::util::json::Json;
+use regtopk::util::rng::Rng;
+
+fn bench_json_path() -> String {
+    std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_PR4.json".to_string())
+}
+
+/// Merge `(key, packed_bytes, raw_bytes)` points into the bench JSON
+/// (preserving the timing entries written by `Bench::write_json`).
+fn merge_byte_points(path: &str, points: &[(String, usize, usize)]) {
+    let mut map: BTreeMap<String, Json> = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|text| Json::parse(&text).ok())
+        .and_then(|j| j.as_obj().cloned())
+        .unwrap_or_default();
+    for (key, packed, raw) in points {
+        let mut entry = BTreeMap::new();
+        entry.insert("packed_bytes".to_string(), Json::from(*packed));
+        entry.insert("raw_bytes".to_string(), Json::from(*raw));
+        map.insert(format!("quantized_bytes/{key}"), Json::Obj(entry));
+    }
+    match std::fs::write(Path::new(path), Json::Obj(map).dump()) {
+        Ok(()) => println!("# wrote {} byte points to {path}", points.len()),
+        Err(e) => eprintln!("# could not write {path}: {e}"),
+    }
+}
+
+/// A k-entry bucket of a dim-`dim` group with Gaussian values.
+fn bucket(dim: usize, k: usize, rng: &mut Rng) -> SparseVec {
+    let mut idx: Vec<u32> = rng.sample_indices(dim, k).into_iter().map(|i| i as u32).collect();
+    idx.sort_unstable();
+    let vals: Vec<f32> = (0..k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    SparseVec::new(dim, idx, vals)
+}
+
+fn main() {
+    let mut b = Bench::new();
+    let dim = 1 << 20;
+    let k = 1024usize;
+    println!("# quantized transmission: k={k} entries of a J={dim} group");
+
+    let mut byte_points: Vec<(String, usize, usize)> = Vec::new();
+    for &bits in &[4usize, 8] {
+        let quant = Quantizer::new(bits);
+        // full worker-side pass: stochastic round + residual + pack
+        {
+            let mut rng = Rng::seed_from(1);
+            let proto = bucket(dim, k, &mut rng);
+            let mut payload = QuantPayload::default();
+            let (mut residual, mut codes) = (Vec::new(), Vec::new());
+            let mut work = proto.clone();
+            b.run_throughput(&format!("quantized/quantize_bucket/bits={bits}/k={k}"), k, || {
+                work = proto.clone();
+                quant.quantize_bucket_into(
+                    &mut work,
+                    &mut rng,
+                    &mut payload,
+                    &mut residual,
+                    &mut codes,
+                );
+                black_box(payload.scale());
+            });
+            let raw = proto.wire_bytes();
+            let index_bits = 20;
+            byte_points.push((
+                format!("bits={bits}/k={k}/J={dim}"),
+                payload.wire_bytes(index_bits),
+                raw,
+            ));
+        }
+        // server-side decode alone (the aggregation prerequisite)
+        {
+            let mut rng = Rng::seed_from(2);
+            let mut work = bucket(dim, k, &mut rng);
+            let mut payload = QuantPayload::default();
+            let (mut residual, mut codes) = (Vec::new(), Vec::new());
+            quant.quantize_bucket_into(&mut work, &mut rng, &mut payload, &mut residual, &mut codes);
+            let mut out = vec![0.0f32; k];
+            b.run_throughput(&format!("quantized/decode/bits={bits}/k={k}"), k, || {
+                for (i, o) in out.iter_mut().enumerate() {
+                    *o = payload.decode_value(i);
+                }
+                black_box(out[k - 1]);
+            });
+            assert_eq!(out, work.values(), "decode must reproduce the bucket");
+        }
+    }
+
+    let path = bench_json_path();
+    b.write_json(Path::new(&path)).unwrap_or_else(|e| eprintln!("# could not write {path}: {e}"));
+    merge_byte_points(&path, &byte_points);
+    println!("\n# per-update upload bytes (one worker, {k} entries)");
+    for (key, packed, raw) in &byte_points {
+        println!(
+            "  {key:<24} packed {packed:>8} B   raw {raw:>8} B   saving {:.2}%",
+            100.0 * (1.0 - *packed as f64 / (*raw).max(1) as f64)
+        );
+    }
+}

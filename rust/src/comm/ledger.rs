@@ -56,10 +56,13 @@ impl Ledger {
     }
 
     /// Record one worker's bucketed upload for the current round.
+    /// Quantized buckets are charged their true packed wire size
+    /// (`bits` value bits + scale header), so byte totals under a
+    /// `bits` policy report honest post-quantization upload volume.
     pub fn record_update(&mut self, up: &SparseUpdate) {
         let mut total = 0usize;
         for (g, bucket) in up.buckets().iter().enumerate() {
-            let bytes = self.cost.update_bytes(bucket);
+            let bytes = self.cost.bucket_bytes(up, g);
             total += bytes;
             if let Some(acc) = self.group_bytes.get_mut(g) {
                 *acc += bytes;
@@ -212,6 +215,47 @@ mod tests {
         let entries = l.group_upload_entries();
         assert_eq!(entries[0], ("conv".to_string(), 2));
         assert_eq!(entries[1], ("fc".to_string(), 1));
+    }
+
+    #[test]
+    fn mixed_bit_widths_account_exact_packed_bytes() {
+        use crate::comm::Quantizer;
+        use crate::util::rng::Rng;
+        let layout = GradLayout::from_sizes([
+            ("q4".to_string(), 64),
+            ("q8".to_string(), 64),
+            ("raw".to_string(), 64),
+        ]);
+        let mut l = Ledger::new(CostModel::default());
+        l.set_layout(&layout);
+        let mut up = SparseUpdate::zeros(&layout);
+        for g in 0..3 {
+            for i in 0..4u32 {
+                up.bucket_mut(g).push(i * 7, 0.5 + g as f32 + i as f32);
+            }
+        }
+        let mut rng = Rng::seed_from(3);
+        let (mut residual, mut codes) = (Vec::new(), Vec::new());
+        for (g, bits) in [(0usize, 4usize), (1, 8)] {
+            let (b, q) = up.bucket_quant_mut(g);
+            Quantizer::new(bits).quantize_bucket_into(b, &mut rng, q, &mut residual, &mut codes);
+        }
+        l.record_update(&up);
+        l.close_round(0, 192, 1);
+        // per-group bytes == each payload's own wire accounting, and
+        // the raw group keeps the 32-bit cost
+        let totals = l.group_upload_totals();
+        assert_eq!(totals[0].1, up.quant(0).unwrap().wire_bytes(6));
+        assert_eq!(totals[1].1, up.quant(1).unwrap().wire_bytes(6));
+        assert_eq!(totals[2].1, l.cost.update_bytes(up.bucket(2)));
+        assert!(totals[0].1 < totals[1].1, "4-bit beats 8-bit on the wire");
+        assert!(totals[1].1 < totals[2].1, "8-bit beats raw f32 on the wire");
+        // the round total is exactly the sum of the parts
+        assert_eq!(
+            l.rounds()[0].upload_bytes,
+            totals.iter().map(|(_, b)| b).sum::<usize>()
+        );
+        assert_eq!(l.rounds()[0].upload_bytes, l.cost.update_bytes_grouped(&up));
     }
 
     #[test]

@@ -86,16 +86,37 @@ impl CostModel {
 
     /// Wire bytes of a sparse update: nnz * (value_bits + ceil(log2 J)) / 8.
     pub fn update_bytes(&self, sv: &SparseVec) -> usize {
-        let dim = sv.dim().max(2);
-        let index_bits = usize::BITS as usize - (dim - 1).leading_zeros() as usize;
-        (sv.nnz() * (self.value_bits + index_bits)).div_ceil(8)
+        (sv.nnz() * (self.value_bits + crate::sparse::index_bits(sv.dim()))).div_ceil(8)
+    }
+
+    /// Wire bytes of a quantized bucket: the packed payload's own
+    /// accounting (`bits` value bits + per-group index bits per entry,
+    /// plus the 4-byte scale header).  Exactly what
+    /// `QuantPayload::wire_bytes` reports — the ledger and the payload
+    /// can never disagree.
+    pub fn update_bytes_packed(&self, sv: &SparseVec, q: &crate::sparse::QuantPayload) -> usize {
+        debug_assert_eq!(sv.nnz(), q.len(), "payload/bucket entry mismatch");
+        q.wire_bytes(crate::sparse::index_bits(sv.dim()))
+    }
+
+    /// Wire bytes of bucket `g` of a bucketed update: packed
+    /// accounting when the bucket carries a payload, raw f32 cost
+    /// otherwise.  The ONE dispatch point between the two accountants
+    /// — the ledger and [`Self::update_bytes_grouped`] both route
+    /// through here, so they cannot disagree with the payload.
+    pub fn bucket_bytes(&self, up: &SparseUpdate, g: usize) -> usize {
+        match up.quant(g) {
+            Some(q) => self.update_bytes_packed(up.bucket(g), q),
+            None => self.update_bytes(up.bucket(g)),
+        }
     }
 
     /// Wire bytes of a bucketed update: each bucket pays its own
-    /// (smaller) per-group index width.  The single-bucket degenerate
-    /// case equals [`Self::update_bytes`] on the flat vector.
+    /// (smaller) per-group index width, and quantized buckets pay
+    /// their packed value width.  The single-bucket degenerate case
+    /// equals [`Self::update_bytes`] on the flat vector.
     pub fn update_bytes_grouped(&self, up: &SparseUpdate) -> usize {
-        up.buckets().iter().map(|b| self.update_bytes(b)).sum()
+        (0..up.num_buckets()).map(|g| self.bucket_bytes(up, g)).sum()
     }
 
     /// Wire bytes of the dense broadcast g^t (no indices needed).

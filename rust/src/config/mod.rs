@@ -123,6 +123,27 @@ impl TrainConfig {
             .unwrap_or(BudgetPolicy::Global { k: self.sparsifier.to_params().k })
     }
 
+    /// Per-group learning-rate scales `(offset, len, scale)` resolved
+    /// from the policy table (the §1.2 G-extension applied per layer).
+    /// `None` unless groups + a policy are configured AND some
+    /// matching rule carries a non-unit `eta` — so the common case
+    /// takes the exact pre-scaling server path.
+    pub fn eta_scales(&self, dim: usize) -> Option<Vec<(usize, usize, f32)>> {
+        let (Some(_), Some(policy)) = (&self.groups, &self.policy) else {
+            return None;
+        };
+        let layout = self.layout_for(dim);
+        let scales: Vec<(usize, usize, f32)> = layout
+            .groups()
+            .iter()
+            .map(|g| {
+                let s = policy.resolve(&g.name).and_then(|p| p.eta).unwrap_or(1.0);
+                (g.offset, g.len, s)
+            })
+            .collect();
+        scales.iter().any(|&(_, _, s)| s != 1.0).then_some(scales)
+    }
+
     /// Instantiate this config's sparsifier for one worker.  Without
     /// `groups` this is exactly the seed factory call (flat path,
     /// bit-identical); with `groups` it wraps the configured family in
@@ -133,13 +154,17 @@ impl TrainConfig {
             None => crate::sparsify::build(&self.sparsifier, dim, worker),
             Some(_) => {
                 let empty = PolicyTable::default();
-                Box::new(LayerwiseSparsifier::with_policies(
+                let mut lw = LayerwiseSparsifier::with_policies(
                     &self.sparsifier,
                     self.layout_for(dim),
                     &self.effective_budget(),
                     self.policy.as_ref().unwrap_or(&empty),
                     worker,
-                ))
+                );
+                // the packing-must-pay guard compares against what a
+                // raw value costs on THIS run's simulated link
+                lw.set_raw_value_bits(self.cost.value_bits);
+                Box::new(lw)
             }
         }
     }
@@ -432,6 +457,24 @@ mod tests {
         assert_eq!(c.build_sparsifier(20, 0).name(), "layerwise");
         // default budget is Global{k from the sparsifier}
         assert_eq!(c.effective_budget(), BudgetPolicy::Global { k: 4 });
+    }
+
+    #[test]
+    fn eta_scales_resolve_only_when_non_unit() {
+        let mut c = TrainConfig::default();
+        c.groups = Some(GradLayout::from_sizes([
+            ("w".to_string(), 12),
+            ("b".to_string(), 8),
+        ]));
+        assert!(c.eta_scales(20).is_none(), "no policy, no scales");
+        c.policy = Some(PolicyTable::parse("b=dense").unwrap());
+        assert!(c.eta_scales(20).is_none(), "policy without eta, no scales");
+        c.policy = Some(PolicyTable::parse("b=dense:eta=2.5").unwrap());
+        assert_eq!(
+            c.eta_scales(20),
+            Some(vec![(0, 12, 1.0), (12, 8, 2.5)]),
+            "unmatched groups scale at 1.0"
+        );
     }
 
     #[test]

@@ -198,6 +198,15 @@ fn encode_state(out: &mut Vec<u8>, st: &SparsifierState) {
             out.push(gauss_spare.is_some() as u8);
             out.extend_from_slice(&gauss_spare.unwrap_or(0.0).to_le_bytes());
         }
+        SparsifierState::Quantized { inner, rng, gauss_spare } => {
+            out.push(6);
+            encode_state(out, inner);
+            for word in rng {
+                out.extend_from_slice(&word.to_le_bytes());
+            }
+            out.push(gauss_spare.is_some() as u8);
+            out.extend_from_slice(&gauss_spare.unwrap_or(0.0).to_le_bytes());
+        }
     }
 }
 
@@ -282,6 +291,24 @@ impl<'a> Cur<'a> {
                 let has_spare = self.u8()? != 0;
                 let spare = self.f64()?;
                 SparsifierState::EfRng { ef, rng, gauss_spare: has_spare.then_some(spare) }
+            }
+            6 => {
+                // a quantizing group wraps exactly one leaf family
+                // state; deeper nesting means a corrupt stream
+                if depth > 2 {
+                    bail!("resume state nests quantizers deeper than the sparsifier stack");
+                }
+                let inner = Box::new(self.state(depth + 1)?);
+                if matches!(
+                    *inner,
+                    SparsifierState::Grouped(_) | SparsifierState::Quantized { .. }
+                ) {
+                    bail!("quantized resume state must wrap a leaf family state");
+                }
+                let rng = [self.u64()?, self.u64()?, self.u64()?, self.u64()?];
+                let has_spare = self.u8()? != 0;
+                let spare = self.f64()?;
+                SparsifierState::Quantized { inner, rng, gauss_spare: has_spare.then_some(spare) }
             }
             t => bail!("unknown resume-state tag {t}"),
         })
@@ -381,6 +408,18 @@ mod tests {
                     SparsifierState::Ef(ef.clone()),
                     SparsifierState::Stateless,
                 ]),
+                // quantizing groups (ISSUE 4): child state + rounding
+                // stream, nested inside a grouped worker
+                SparsifierState::Grouped(vec![SparsifierState::Quantized {
+                    inner: Box::new(SparsifierState::Ef(ef.clone())),
+                    rng: [2, 4, 6, 8],
+                    gauss_spare: None,
+                }]),
+                SparsifierState::Quantized {
+                    inner: Box::new(SparsifierState::Dgc { vel: vec![0.5], acc: vec![1.5] }),
+                    rng: [u64::MAX, 0, 1, 2],
+                    gauss_spare: Some(0.25),
+                },
             ],
         };
         let bytes = encode_train_state(&state);

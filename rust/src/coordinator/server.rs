@@ -28,12 +28,43 @@ impl Server {
     /// apply in offset order — so the float-add sequence (and thus the
     /// aggregate) is bit-identical to the seed's flat path.
     pub fn aggregate_and_step(&mut self, updates: &[(f32, &SparseUpdate)], t: usize) -> &[f32] {
+        self.aggregate_and_step_scaled(updates, t, None)
+    }
+
+    /// [`Self::aggregate_and_step`] with optional per-group
+    /// learning-rate scales `(offset, len, scale)` — the §1.2
+    /// G-extension applied per layer.  The optimizer steps on the
+    /// scaled gradient, but the broadcast value g^t stays UNSCALED:
+    /// eta scaling is a server-side optimizer detail, and the
+    /// RegTop-k Delta statistic keeps seeing the true aggregate.
+    /// `None` (or all-unit scales from the caller) takes the exact
+    /// pre-scaling code path, bit for bit.
+    pub fn aggregate_and_step_scaled(
+        &mut self,
+        updates: &[(f32, &SparseUpdate)],
+        t: usize,
+        scales: Option<&[(usize, usize, f32)]>,
+    ) -> &[f32] {
         self.agg_buf.iter_mut().for_each(|v| *v = 0.0);
         for (omega, up) in updates {
             up.axpy_into(*omega, &mut self.agg_buf);
         }
         std::mem::swap(&mut self.gagg, &mut self.agg_buf);
-        self.optimizer.step(&mut self.w, &self.gagg, t);
+        match scales {
+            None => self.optimizer.step(&mut self.w, &self.gagg, t),
+            Some(sc) => {
+                // agg_buf (last round's gagg) is free scratch here
+                self.agg_buf.copy_from_slice(&self.gagg);
+                for &(off, len, s) in sc {
+                    if s != 1.0 {
+                        for v in &mut self.agg_buf[off..off + len] {
+                            *v *= s;
+                        }
+                    }
+                }
+                self.optimizer.step(&mut self.w, &self.agg_buf, t);
+            }
+        }
         &self.gagg
     }
 }
@@ -65,6 +96,27 @@ mod tests {
         s.aggregate_and_step(&[(0.5, &a), (0.5, &b)], 0);
         assert_eq!(s.gagg, vec![0.0, 0.0]);
         assert_eq!(s.w, vec![0.0, 1.0]); // model did not move
+    }
+
+    #[test]
+    fn eta_scales_step_but_not_broadcast() {
+        let mk = || Server::new(vec![0.0; 4], Box::new(Sgd::new(1.0)));
+        let layout = GradLayout::from_sizes([("a".to_string(), 2), ("b".to_string(), 2)]);
+        let mut up = SparseUpdate::zeros(&layout);
+        up.bucket_mut(0).push(0, 2.0);
+        up.bucket_mut(1).push(1, 4.0);
+        // group b steps at 3x; broadcast g^t stays unscaled
+        let mut s = mk();
+        let g = s.aggregate_and_step_scaled(&[(1.0, &up)], 0, Some(&[(0, 2, 1.0), (2, 2, 3.0)]));
+        assert_eq!(g, &[2.0, 0.0, 0.0, 4.0]);
+        assert_eq!(s.w, vec![-2.0, 0.0, 0.0, -12.0]);
+        // all-unit scales match the unscaled path exactly
+        let mut a = mk();
+        let mut b = mk();
+        a.aggregate_and_step(&[(1.0, &up)], 0);
+        b.aggregate_and_step_scaled(&[(1.0, &up)], 0, Some(&[(0, 2, 1.0), (2, 2, 1.0)]));
+        assert_eq!(a.w, b.w);
+        assert_eq!(a.gagg, b.gagg);
     }
 
     #[test]

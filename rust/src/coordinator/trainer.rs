@@ -37,6 +37,9 @@ pub struct Trainer {
     /// genie-channel scratch (allocated lazily, only for gtopk runs)
     genie_buf: Vec<f32>,
     peek_buf: Vec<f32>,
+    /// per-group learning-rate scales from the policy table (None =
+    /// the exact pre-scaling server path)
+    eta_scales: Option<Vec<(usize, usize, f32)>>,
     t: usize,
 }
 
@@ -59,6 +62,7 @@ impl Trainer {
             ledger.set_layout(w0.layout());
         }
         let updates = (0..workers.len()).map(|_| SparseUpdate::empty()).collect();
+        let eta_scales = config.eta_scales(dim);
         Trainer {
             config,
             workers,
@@ -68,12 +72,70 @@ impl Trainer {
             updates,
             genie_buf: Vec::new(),
             peek_buf: Vec::new(),
+            eta_scales,
             t: 0,
         }
     }
 
     pub fn iter(&self) -> usize {
         self.t
+    }
+
+    /// The config echo written into every run manifest: the config's
+    /// JSON plus — for grouped runs — a `"resolved"` array surfacing
+    /// what each group ACTUALLY runs after policy/budget/shard
+    /// resolution: family, budget k, engine shards, value bits and
+    /// the learning-rate scale (ROADMAP follow-up: manifests must not
+    /// make the reader re-derive the heterogeneous setup).
+    pub fn config_echo(&self) -> crate::util::json::Json {
+        use crate::util::json::{obj, Json};
+        let mut j = self.config.to_json();
+        let Some(w0) = self.workers.first() else {
+            return j;
+        };
+        let sp = &w0.sparsifier;
+        let budgets = sp.group_budgets();
+        if budgets.is_empty() {
+            return j; // flat run: nothing grouped to resolve
+        }
+        let families = sp.group_families();
+        let shards = sp.group_shards();
+        let bits = sp.group_value_bits();
+        let bits_end = sp.group_value_bits_end();
+        let layout = w0.layout();
+        let resolved: Vec<Json> = layout
+            .groups()
+            .iter()
+            .enumerate()
+            .map(|(g, spec)| {
+                let eta = self
+                    .eta_scales
+                    .as_ref()
+                    .and_then(|sc| sc.get(g))
+                    .map_or(1.0, |&(_, _, s)| s);
+                let b0 = bits.get(g).copied().unwrap_or(32);
+                let b1 = bits_end.get(g).copied().unwrap_or(32);
+                let mut o = obj([
+                    ("name", spec.name.as_str().into()),
+                    ("family", families.get(g).copied().unwrap_or("?").into()),
+                    ("k", budgets.get(g).copied().unwrap_or(0).into()),
+                    ("shards", shards.get(g).copied().unwrap_or(1).into()),
+                    ("bits", b0.into()),
+                    ("eta_scale", (eta as f64).into()),
+                ]);
+                // scheduled widths: also echo where the schedule lands
+                if b1 != b0 {
+                    if let Json::Obj(m) = &mut o {
+                        m.insert("bits_end".to_string(), b1.into());
+                    }
+                }
+                o
+            })
+            .collect();
+        if let Json::Obj(m) = &mut j {
+            m.insert("resolved".to_string(), Json::Arr(resolved));
+        }
+        j
     }
 
     /// Snapshot the current training state: model + cursor + the full
@@ -185,7 +247,8 @@ impl Trainer {
             .enumerate()
             .map(|(i, up)| (self.config.omega(i), up))
             .collect();
-        let gagg = self.server.aggregate_and_step(&weighted, t);
+        let gagg =
+            self.server.aggregate_and_step_scaled(&weighted, t, self.eta_scales.as_deref());
         self.gagg_prev.copy_from_slice(gagg);
         self.ledger.close_round(t, dim, n);
         self.t += 1;
@@ -201,7 +264,7 @@ impl Trainer {
     pub fn run(&mut self, iters: usize, mut eval: Option<&mut EvalFn>) -> RunLog {
         let mut log = RunLog::new(
             format!("{}-{}", self.workers[0].sparsifier.name(), self.config.seed),
-            self.config.to_json(),
+            self.config_echo(),
         );
         for i in 0..iters {
             let t0 = Instant::now();
@@ -243,7 +306,7 @@ impl Trainer {
         let mut net = Network::star(n);
         let mut log = RunLog::new(
             format!("{}-threaded", self.workers[0].sparsifier.name()),
-            self.config.to_json(),
+            self.config_echo(),
         );
         /// Per-worker execution lane: everything one pooled task needs.
         struct Lane {
@@ -310,7 +373,8 @@ impl Trainer {
             }
             let weighted: Vec<(f32, &SparseUpdate)> =
                 updates.iter().enumerate().map(|(i, up)| (omegas[i], up)).collect();
-            let gagg = self.server.aggregate_and_step(&weighted, t);
+            let gagg =
+                self.server.aggregate_and_step_scaled(&weighted, t, self.eta_scales.as_deref());
             self.gagg_prev.copy_from_slice(gagg);
             self.ledger.close_round(t, dim, n);
             let mut rec = IterRecord::new(t);
@@ -409,6 +473,50 @@ mod tests {
         assert_eq!(log.records().len(), 5);
         assert!(eval_calls >= 2);
         assert!(log.records()[0].loss.is_finite());
+    }
+
+    #[test]
+    fn config_echo_resolves_groups_when_grouped() {
+        use crate::grad::GradLayout;
+        let flat = toy_trainer(SparsifierKind::TopK { k: 1 }, 0.9);
+        assert!(flat.config_echo().get("resolved").is_none(), "flat run has no resolution");
+        // grouped trainer: two one-element groups over the toy model
+        let kind = SparsifierKind::TopK { k: 1 };
+        let layout =
+            GradLayout::from_sizes([("w".to_string(), 1), ("b".to_string(), 1)]);
+        let config = TrainConfig {
+            workers: 2,
+            eta: 0.9,
+            sparsifier: kind.clone(),
+            eval_every: 0,
+            groups: Some(layout.clone()),
+            policy: Some(crate::sparsify::PolicyTable::parse("b=dense:eta=2.0").unwrap()),
+            ..TrainConfig::default()
+        };
+        let workers = vec![
+            crate::coordinator::Worker::with_layout(
+                0,
+                Box::new(Logistic::toy_worker(vec![100.0, 1.0])),
+                config.build_sparsifier(2, 0),
+                layout.clone(),
+            ),
+            crate::coordinator::Worker::with_layout(
+                1,
+                Box::new(Logistic::toy_worker(vec![-100.0, 1.0])),
+                config.build_sparsifier(2, 1),
+                layout.clone(),
+            ),
+        ];
+        let server = Server::new(vec![0.0, 1.0], Box::new(Sgd::new(0.9)));
+        let tr = Trainer::new(config, workers, server);
+        let echo = tr.config_echo();
+        let resolved = echo.get("resolved").and_then(|r| r.as_arr().map(<[_]>::to_vec));
+        let resolved = resolved.expect("grouped run must echo a resolution");
+        assert_eq!(resolved.len(), 2);
+        assert_eq!(resolved[0].get("family").and_then(|j| j.as_str()), Some("topk"));
+        assert_eq!(resolved[1].get("family").and_then(|j| j.as_str()), Some("dense"));
+        assert_eq!(resolved[1].get("eta_scale").and_then(|j| j.as_f64()), Some(2.0));
+        assert_eq!(resolved[0].get("bits").and_then(|j| j.as_usize()), Some(32));
     }
 
     #[test]

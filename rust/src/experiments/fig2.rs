@@ -110,7 +110,9 @@ pub fn run_curve_with(
     name: &str,
     iters: usize,
 ) -> RunLog {
-    let mut log = RunLog::new(name, tr.config.to_json());
+    // the echo carries the per-group resolution (family/k/shards/bits)
+    // for grouped runs, so written manifests are self-describing
+    let mut log = RunLog::new(name, tr.config_echo());
     for t in 0..iters {
         let rr = tr.round();
         let mut rec = IterRecord::new(t);

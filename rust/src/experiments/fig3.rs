@@ -234,7 +234,7 @@ pub fn run(
     let mut runs = Vec::new();
     for (name, kind) in lineup(cfg, k, &layout, with_dense) {
         let mut tr = build_trainer(rt, cfg, kind, k, model, &layout, &train)?;
-        let mut log = RunLog::new(name, tr.config.to_json());
+        let mut log = RunLog::new(name, tr.config_echo());
         for t in 0..cfg.iters {
             let t0 = std::time::Instant::now();
             let rr = tr.round();

@@ -3,7 +3,7 @@
 //! reduced geometry so a full sweep finishes in seconds.
 
 use crate::config::TrainConfig;
-use crate::data::linear::{generate, LinearParams};
+use crate::data::linear::{generate, LinearParams, LinearProblem};
 use crate::experiments::fig2;
 use crate::grad::GradLayout;
 use crate::sparse::{approx, select_topk};
@@ -99,6 +99,25 @@ pub fn hetero_layout() -> GradLayout {
     ])
 }
 
+/// Run one config on the shared testbed problem and collapse it to a
+/// comparison row — the row constructor every sweep table shares.
+fn sweep_row(name: &str, cfg: &TrainConfig, problem: &LinearProblem, iters: usize) -> HeteroRow {
+    let mut tr = fig2::trainer_from_config(cfg, problem);
+    let log = fig2::run_curve_with(&mut tr, problem, name, iters);
+    HeteroRow {
+        name: name.to_string(),
+        final_gap: log.last().unwrap().opt_gap,
+        bytes_per_round: tr.ledger.total_upload_bytes() / iters.max(1),
+        entries_per_round: tr
+            .ledger
+            .rounds()
+            .iter()
+            .map(|r| r.upload_entries)
+            .sum::<usize>()
+            / iters.max(1),
+    }
+}
+
 /// ISSUE 3 protocol — flat vs layer-wise vs heterogeneous RegTop-k on
 /// the linreg testbed (EXPERIMENTS.md §Heterogeneous): identical data,
 /// seed and total budget k = round(S*J); the heterogeneous row ships
@@ -111,22 +130,8 @@ pub fn hetero_sweep(s: f64, iters: usize, seed: u64) -> Vec<HeteroRow> {
     let kind = SparsifierKind::RegTopK { k, mu: 0.5, q: 1.0 };
     let layout = hetero_layout();
     let mut rows = Vec::new();
-    let mut run = |name: &str, cfg: &TrainConfig| {
-        let mut tr = fig2::trainer_from_config(cfg, &problem);
-        let log = fig2::run_curve_with(&mut tr, &problem, name, iters);
-        rows.push(HeteroRow {
-            name: name.to_string(),
-            final_gap: log.last().unwrap().opt_gap,
-            bytes_per_round: tr.ledger.total_upload_bytes() / iters.max(1),
-            entries_per_round: tr
-                .ledger
-                .rounds()
-                .iter()
-                .map(|r| r.upload_entries)
-                .sum::<usize>()
-                / iters.max(1),
-        });
-    };
+    let mut run =
+        |name: &str, cfg: &TrainConfig| rows.push(sweep_row(name, cfg, &problem, iters));
     let base = TrainConfig {
         workers: params.workers,
         eta: 0.02,
@@ -148,6 +153,43 @@ pub fn hetero_sweep(s: f64, iters: usize, seed: u64) -> Vec<HeteroRow> {
             .expect("hetero policy spec"),
     );
     run("hetero/regtopk+dense", &het);
+    rows
+}
+
+/// ISSUE 4 protocol — accuracy vs wire bytes under quantized
+/// transmission (EXPERIMENTS.md §Quantization): the layer-wise
+/// RegTop-k stack at one budget, sweeping the per-group value width
+/// `bits` in {32 (off), 16, 8, 4, 2}.  Same data, seed and budget per
+/// row; the rounding residual folds into error feedback, so accuracy
+/// should degrade gracefully while upload bytes drop ~linearly in
+/// `bits`.
+pub fn bits_sweep(s: f64, iters: usize, seed: u64) -> Vec<HeteroRow> {
+    let params = sweep_params(8);
+    let problem = generate(params, seed);
+    let k = ((s * params.dim as f64).round() as usize).max(1);
+    let layout = hetero_layout();
+    let base = TrainConfig {
+        workers: params.workers,
+        eta: 0.02,
+        sparsifier: SparsifierKind::RegTopK { k, mu: 0.5, q: 1.0 },
+        eval_every: 1,
+        groups: Some(layout),
+        budget: Some(BudgetPolicy::Global { k }),
+        ..TrainConfig::default()
+    };
+    let mut rows = Vec::new();
+    for bits in [32usize, 16, 8, 4, 2] {
+        let mut cfg = base.clone();
+        let name = if bits == 32 {
+            "bits=32 (off)".to_string()
+        } else {
+            cfg.policy = Some(
+                PolicyTable::parse(&format!("*=:bits={bits}")).expect("bits policy spec"),
+            );
+            format!("bits={bits}")
+        };
+        rows.push(sweep_row(&name, &cfg, &problem, iters));
+    }
     rows
 }
 
@@ -197,6 +239,27 @@ mod tests {
         // dense biases push the heterogeneous row's entry count above
         // the budgeted homogeneous rows
         assert!(rows[2].entries_per_round > rows[1].entries_per_round, "{rows:?}");
+    }
+
+    #[test]
+    fn bits_sweep_trades_bytes_for_accuracy() {
+        let rows = bits_sweep(0.2, 120, 7);
+        assert_eq!(rows.len(), 5);
+        assert_eq!(rows[0].name, "bits=32 (off)");
+        for r in &rows {
+            assert!(r.final_gap.is_finite() && r.final_gap >= 0.0, "{r:?}");
+            assert!(r.bytes_per_round > 0, "{r:?}");
+        }
+        // fewer value bits, fewer wire bytes — strictly down the sweep
+        for w in rows.windows(2) {
+            assert!(w[1].bytes_per_round < w[0].bytes_per_round, "{rows:?}");
+        }
+        // same budget every row: the entry counts match exactly
+        assert!(rows.iter().all(|r| r.entries_per_round == rows[0].entries_per_round));
+        // error feedback keeps even 4-bit training in a sane band
+        let off = rows[0].final_gap;
+        let q4 = rows.iter().find(|r| r.name == "bits=4").unwrap().final_gap;
+        assert!(q4 < 6.0 * off.max(0.05), "q4 {q4} vs off {off}");
     }
 
     #[test]

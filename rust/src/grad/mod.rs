@@ -123,6 +123,14 @@ impl ErrorFeedback {
         self.warm = true;
     }
 
+    /// Fold a post-commit residual (e.g. quantization error on the
+    /// transmitted values) back into the error store at `indices`, so
+    /// lossy compression stays unbiased over rounds: the next
+    /// accumulate sees  eps + r  exactly where the wire dropped `r`.
+    pub fn fold_residual(&mut self, indices: &[u32], residual: &[f32]) {
+        fold_residual_into(&mut self.eps, indices, residual);
+    }
+
     /// Snapshot the persistent history for checkpointing.
     pub fn snapshot(&self) -> EfState {
         EfState {
@@ -156,6 +164,16 @@ impl ErrorFeedback {
         );
         self.warm = st.warm;
         Ok(())
+    }
+}
+
+/// `store[i] += r` at `indices` — the one element-wise residual fold
+/// shared by [`ErrorFeedback`] and the families with bespoke error
+/// stores (DGC's accumulated velocity, AdaK's residual vector).
+pub fn fold_residual_into(store: &mut [f32], indices: &[u32], residual: &[f32]) {
+    debug_assert_eq!(indices.len(), residual.len());
+    for (&i, &r) in indices.iter().zip(residual) {
+        store[i as usize] += r;
     }
 }
 

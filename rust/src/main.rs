@@ -10,7 +10,7 @@
 //!                                      artifact's real per-layer layout;
 //!                                      degrades to the linreg testbed
 //!                                      when artifacts are unavailable)
-//! repro sweep  --param mu|q|workers|approx|hetero ...
+//! repro sweep  --param mu|q|workers|approx|hetero|bits ...
 //! repro comm   [--s 0.4,0.1,0.01,0.001]
 //! repro train  --config cfg.json [--groups 60,40 --budget prop:0.1]
 //!              [--policy 'glob=family:k=v,...;...']
@@ -284,8 +284,8 @@ fn cmd_fig3(args: Vec<String>) -> i32 {
 }
 
 fn cmd_sweep(args: Vec<String>) -> i32 {
-    let p = Cli::new("Ablation sweeps (DESIGN.md Abl 1-4 + ISSUE 3 hetero)")
-        .required("param", "mu | q | workers | approx | hetero")
+    let p = Cli::new("Ablation sweeps (DESIGN.md Abl 1-4 + hetero + quantized bits)")
+        .required("param", "mu | q | workers | approx | hetero | bits")
         .flag("values", "", "comma-separated sweep values (defaults per param)")
         .flag("s", "0.5", "sparsity factor")
         .flag("iters", "400", "iterations per point")
@@ -358,6 +358,22 @@ fn cmd_sweep(args: Vec<String>) -> i32 {
             for r in sweeps::hetero_sweep(s, iters, seed) {
                 println!(
                     "  {:<22} {:>12.6} {:>14} {:>14}",
+                    r.name, r.final_gap, r.bytes_per_round, r.entries_per_round
+                );
+            }
+        }
+        "bits" => {
+            println!(
+                "quantized transmission sweep (S={s}, {iters} iters, layer-wise \
+                 RegTop-k, residual-in-EF; EXPERIMENTS.md §Quantization):"
+            );
+            println!(
+                "  {:<14} {:>12} {:>14} {:>14}",
+                "value bits", "final gap", "bytes/round", "entries/round"
+            );
+            for r in sweeps::bits_sweep(s, iters, seed) {
+                println!(
+                    "  {:<14} {:>12.6} {:>14} {:>14}",
                     r.name, r.final_gap, r.bytes_per_round, r.entries_per_round
                 );
             }
@@ -618,21 +634,30 @@ fn cmd_train(args: Vec<String>) -> i32 {
         let iters = cfg.iters.max(1);
         let entries = tr.ledger.group_upload_entries();
         let families = tr.workers[0].sparsifier.group_families();
+        let bits = tr.workers[0].sparsifier.group_value_bits();
+        let bits_end = tr.workers[0].sparsifier.group_value_bits_end();
+        let shards = tr.workers[0].sparsifier.group_shards();
         println!("per-group upload bytes ({} groups):", group_totals.len());
         println!(
-            "  {:<16} {:<10} {:>12} {:>10} {:>10}",
-            "group", "family", "B total", "B/round", "entries"
+            "  {:<16} {:<10} {:>6} {:>7} {:>12} {:>10} {:>10}",
+            "group", "family", "bits", "shards", "B total", "B/round", "entries"
         );
         for (g, (name, bytes)) in group_totals.iter().enumerate() {
+            let b0 = bits.get(g).copied().unwrap_or(32);
+            let b1 = bits_end.get(g).copied().unwrap_or(32);
+            // a scheduled width prints as its start..settled range
+            let bcol =
+                if b1 == b0 { format!("{b0}") } else { format!("{b0}..{b1}") };
             println!(
-                "  {name:<16} {:<10} {bytes:>12} {:>10} {:>10}",
+                "  {name:<16} {:<10} {bcol:>6} {:>7} {bytes:>12} {:>10} {:>10}",
                 families.get(g).copied().unwrap_or("?"),
+                shards.get(g).copied().unwrap_or(1),
                 bytes / iters,
                 entries.get(g).map(|(_, n)| *n).unwrap_or(0)
             );
         }
         let total: usize = group_totals.iter().map(|(_, b)| b).sum();
-        println!("  {:<16} {:<10} {total:>12}", "(all groups)", "");
+        println!("  {:<16} {:<10} {:>6} {:>7} {total:>12}", "(all groups)", "", "", "");
     }
     write_logs(&[log], p.get("out"), "train");
     0

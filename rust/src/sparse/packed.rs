@@ -1,0 +1,205 @@
+//! `QuantPayload`: the packed low-bit value payload of one quantized
+//! bucket — what actually crosses the wire when a group's policy sets
+//! a `bits` override.
+//!
+//! Codes are offset-binary: a stochastic-rounding level `q` in
+//! `[-L, +L]` (with `L = 2^(bits-1) - 1`) is stored as `q + L`, which
+//! spans `[0, 2L]` and always fits in `bits` bits (2 <= bits <= 16).
+//! Codes are bit-packed LSB-first into `u32` words; the shared `f32`
+//! scale travels once per bucket.  Dequantization is exact and
+//! deterministic — `(code - L) * scale` reproduces the worker-side
+//! lossy values bit-for-bit, so the server can aggregate from the
+//! packed payload alone (pinned by `rust/tests/quantized.rs`).
+//!
+//! The *wire accounting* is the single source of truth for the ledger:
+//! [`QuantPayload::wire_bytes`] = `ceil(n*(bits + index_bits)/8)` plus
+//! the 4-byte scale header, mirroring the paper's §2 cost model with
+//! `bits` in place of the 32-bit value width.
+
+/// Packed quantized values for one bucket.  `bits == 0` means the slot
+/// is inactive (the bucket travels as raw f32, the pre-quantization
+/// wire format).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct QuantPayload {
+    bits: usize,
+    scale: f32,
+    len: usize,
+    words: Vec<u32>,
+}
+
+/// Quantization levels per side for a bit width: `2^(bits-1) - 1`.
+pub fn quant_levels(bits: usize) -> i64 {
+    debug_assert!((2..=16).contains(&bits));
+    (1i64 << (bits - 1)) - 1
+}
+
+impl QuantPayload {
+    /// Whether this slot carries a packed payload.
+    pub fn is_active(&self) -> bool {
+        self.bits != 0
+    }
+
+    pub fn bits(&self) -> usize {
+        self.bits
+    }
+
+    pub fn scale(&self) -> f32 {
+        self.scale
+    }
+
+    /// Number of packed codes.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Deactivate, keeping the word buffer's capacity (per-round
+    /// recycling in the trainer's update buffers).
+    pub fn clear(&mut self) {
+        self.bits = 0;
+        self.scale = 0.0;
+        self.len = 0;
+        self.words.clear();
+    }
+
+    /// Pack `codes` at `bits` per code with the shared `scale`,
+    /// recycling the word buffer.  Every code must fit in `bits` bits.
+    pub fn encode_into(&mut self, bits: usize, scale: f32, codes: &[u32]) {
+        assert!((2..=16).contains(&bits), "packable bit width is 2..=16, got {bits}");
+        let mask = (1u32 << bits) - 1;
+        self.bits = bits;
+        self.scale = scale;
+        self.len = codes.len();
+        self.words.clear();
+        self.words.resize((codes.len() * bits).div_ceil(32), 0);
+        for (i, &code) in codes.iter().enumerate() {
+            debug_assert_eq!(code & mask, code, "code {code} exceeds {bits} bits");
+            let bitpos = i * bits;
+            let (w, off) = (bitpos / 32, bitpos % 32);
+            self.words[w] |= code << off;
+            if off + bits > 32 {
+                self.words[w + 1] |= code >> (32 - off);
+            }
+        }
+    }
+
+    /// Extract code `i`.
+    pub fn code(&self, i: usize) -> u32 {
+        assert!(i < self.len, "code index {i} out of {}", self.len);
+        let mask = (1u32 << self.bits) - 1;
+        let bitpos = i * self.bits;
+        let (w, off) = (bitpos / 32, bitpos % 32);
+        let mut code = self.words[w] >> off;
+        if off + self.bits > 32 {
+            code |= self.words[w + 1] << (32 - off);
+        }
+        code & mask
+    }
+
+    /// Dequantize code `i`: `(code - L) * scale`.  This is exactly the
+    /// f32 the worker wrote into the bucket, so server-side decode
+    /// reproduces the transmitted values bit-for-bit.
+    pub fn decode_value(&self, i: usize) -> f32 {
+        (self.code(i) as i64 - quant_levels(self.bits)) as f32 * self.scale
+    }
+
+    /// Dequantize the whole payload into a fresh vector.
+    pub fn decode(&self) -> Vec<f32> {
+        (0..self.len).map(|i| self.decode_value(i)).collect()
+    }
+
+    /// Wire bytes of `len` entries packed at `bits` per value with
+    /// `index_bits` per index, plus the 4-byte scale header (empty
+    /// payloads cost nothing).  Exposed as an associated fn so the
+    /// worker can decide BEFORE packing whether quantization pays for
+    /// a bucket at all (for tiny buckets the scale header can exceed
+    /// the value-bit saving).
+    pub fn bytes_for(len: usize, bits: usize, index_bits: usize) -> usize {
+        if len == 0 {
+            return 0;
+        }
+        (len * (bits + index_bits)).div_ceil(8) + 4
+    }
+
+    /// Wire bytes of this payload for a bucket whose index costs
+    /// `index_bits` bits per entry.
+    pub fn wire_bytes(&self, index_bits: usize) -> usize {
+        Self::bytes_for(self.len, self.bits, index_bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check;
+
+    #[test]
+    fn pack_unpack_roundtrips_across_widths() {
+        check::forall("quant_pack_roundtrip", |rng, _| {
+            let bits = 2 + rng.below(15); // 2..=16
+            let n = check::arb_len(rng, 200);
+            let max_code = (1u32 << bits) - 1;
+            let codes: Vec<u32> = (0..n).map(|_| rng.below(max_code as usize + 1) as u32).collect();
+            let mut p = QuantPayload::default();
+            p.encode_into(bits, 0.5, &codes);
+            assert_eq!(p.len(), n);
+            for (i, &c) in codes.iter().enumerate() {
+                assert_eq!(p.code(i), c, "bits={bits} i={i}");
+            }
+        });
+    }
+
+    #[test]
+    fn decode_is_offset_binary() {
+        let mut p = QuantPayload::default();
+        // bits=4 -> L=7; codes 0, 7, 14 -> -7, 0, +7 levels
+        p.encode_into(4, 0.25, &[0, 7, 14]);
+        assert_eq!(p.decode(), vec![-7.0 * 0.25, 0.0, 7.0 * 0.25]);
+    }
+
+    #[test]
+    fn clear_deactivates_and_recycles() {
+        let mut p = QuantPayload::default();
+        assert!(!p.is_active());
+        p.encode_into(8, 1.0, &[1, 2, 3]);
+        assert!(p.is_active());
+        let cap = p.words.capacity();
+        p.clear();
+        assert!(!p.is_active());
+        assert_eq!(p.len(), 0);
+        assert_eq!(p.words.capacity(), cap, "buffer capacity survives clear");
+    }
+
+    #[test]
+    fn wire_bytes_packs_tight() {
+        let mut p = QuantPayload::default();
+        // 10 codes at 4 bits + 10 index bits each = 140 bits -> 18 B + 4 B scale
+        p.encode_into(4, 1.0, &[0; 10]);
+        assert_eq!(p.wire_bytes(10), 22);
+        // empty payload: nothing on the wire
+        p.encode_into(4, 1.0, &[]);
+        assert_eq!(p.wire_bytes(10), 0);
+    }
+
+    #[test]
+    fn levels_per_width() {
+        assert_eq!(quant_levels(2), 1);
+        assert_eq!(quant_levels(4), 7);
+        assert_eq!(quant_levels(8), 127);
+        assert_eq!(quant_levels(16), 32767);
+    }
+
+    #[test]
+    fn codes_straddling_word_boundaries() {
+        // 7-bit codes hit every 32-bit boundary misalignment
+        let codes: Vec<u32> = (0..64).map(|i| (i * 2 + 1) % 128).collect();
+        let mut p = QuantPayload::default();
+        p.encode_into(7, 2.0, &codes);
+        for (i, &c) in codes.iter().enumerate() {
+            assert_eq!(p.code(i), c, "i={i}");
+        }
+    }
+}

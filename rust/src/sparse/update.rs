@@ -10,16 +10,25 @@
 //! the seed's flat `SparseVec` path.
 
 use crate::grad::GradLayout;
-use crate::sparse::SparseVec;
+use crate::sparse::{QuantPayload, SparseVec};
 
 /// A bucketed sparse update.  Buckets are ordered by group offset;
 /// each bucket's `dim` is its group length and its indices are local
 /// to the group.
+///
+/// A bucket whose group policy sets a `bits` override additionally
+/// carries a [`QuantPayload`]: the packed low-bit codes that ARE the
+/// wire representation of its values (the f32 values held in the
+/// bucket are the payload's exact decode, kept pre-decoded so the
+/// aggregation hot path stays branch-free).  Inactive slots mean the
+/// bucket travels as raw f32 exactly as before quantization existed.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct SparseUpdate {
     /// per-bucket global offset (mirrors the layout's group offsets)
     offsets: Vec<usize>,
     buckets: Vec<SparseVec>,
+    /// per-bucket quantization payload (inactive = raw f32 bucket)
+    quant: Vec<QuantPayload>,
     /// total flat dimension J
     total: usize,
 }
@@ -41,19 +50,29 @@ impl SparseUpdate {
     /// Wrap a flat [`SparseVec`] as the degenerate single-bucket
     /// update (the seed wire format).
     pub fn single(sv: SparseVec) -> Self {
-        SparseUpdate { offsets: vec![0], total: sv.dim(), buckets: vec![sv] }
+        SparseUpdate {
+            offsets: vec![0],
+            total: sv.dim(),
+            quant: vec![QuantPayload::default()],
+            buckets: vec![sv],
+        }
     }
 
     /// Reshape to `layout`, recycling bucket buffers (no allocation at
     /// steady state).  All buckets come back empty with their group's
-    /// dimension.
+    /// dimension and their quantization slots inactive (payload word
+    /// buffers keep their capacity for the next quantized round).
     pub fn conform_to(&mut self, layout: &GradLayout) {
         self.total = layout.total();
         self.offsets.clear();
         self.offsets.extend(layout.groups().iter().map(|g| g.offset));
         self.buckets.resize_with(layout.num_groups(), || SparseVec::zeros(0));
+        self.quant.resize_with(layout.num_groups(), QuantPayload::default);
         for (b, g) in self.buckets.iter_mut().zip(layout.groups()) {
             b.reset(g.len);
+        }
+        for q in &mut self.quant {
+            q.clear();
         }
     }
 
@@ -73,6 +92,19 @@ impl SparseUpdate {
         &mut self.buckets[g]
     }
 
+    /// Bucket `g`'s quantization payload, if one is active.
+    pub fn quant(&self, g: usize) -> Option<&QuantPayload> {
+        self.quant.get(g).filter(|q| q.is_active())
+    }
+
+    /// Disjoint mutable borrows of bucket `g` and its quantization
+    /// slot — the worker-boundary quantization path writes both in one
+    /// pass (dequantized values into the bucket, packed codes into the
+    /// slot).
+    pub fn bucket_quant_mut(&mut self, g: usize) -> (&mut SparseVec, &mut QuantPayload) {
+        (&mut self.buckets[g], &mut self.quant[g])
+    }
+
     /// Global offset of bucket `g`.
     pub fn offset(&self, g: usize) -> usize {
         self.offsets[g]
@@ -88,10 +120,24 @@ impl SparseUpdate {
         self.buckets.iter().map(SparseVec::nnz).sum()
     }
 
-    /// Wire bytes under the bucketed cost model: each bucket pays
-    /// `ceil(log2 group_len)` index bits per entry.
+    /// Wire bytes under the paper's FIXED §2 format — f32 (32-bit)
+    /// raw values, packed `bits` + scale header for quantized buckets,
+    /// per-group index widths.  This is the format-level accountant
+    /// the bench wire points use; runs with a configurable link model
+    /// are charged by `CostModel::bucket_bytes` instead, which swaps
+    /// in `value_bits` for the raw case.
     pub fn wire_bytes(&self) -> usize {
-        self.buckets.iter().map(SparseVec::wire_bytes).sum()
+        self.buckets
+            .iter()
+            .zip(&self.quant)
+            .map(|(b, q)| {
+                if q.is_active() {
+                    q.wire_bytes(crate::sparse::index_bits(b.dim()))
+                } else {
+                    b.wire_bytes()
+                }
+            })
+            .sum()
     }
 
     /// `out += scale * self` over the full flat vector (server-side
@@ -184,6 +230,26 @@ mod tests {
         assert_eq!(dense[1], 10.0);
         assert_eq!(dense[4], -2.0);
         assert_eq!(dense[9], 4.0);
+    }
+
+    #[test]
+    fn quant_slots_follow_conform_and_shrink_wire_bytes() {
+        let layout = two_group_layout();
+        let mut u = SparseUpdate::zeros(&layout);
+        u.bucket_mut(0).push(1, 0.5);
+        u.bucket_mut(0).push(3, -0.25);
+        assert!(u.quant(0).is_none(), "slots start inactive");
+        let raw = u.wire_bytes();
+        let (b, q) = u.bucket_quant_mut(0);
+        // 4-bit codes for the two entries (values already "quantized")
+        q.encode_into(4, 0.25, &[9, 6]);
+        b.values_mut().copy_from_slice(&[0.5, -0.25]);
+        assert!(u.quant(0).is_some());
+        assert!(u.wire_bytes() < raw, "{} !< {raw}", u.wire_bytes());
+        // reconforming deactivates the slot again
+        u.conform_to(&layout);
+        assert!(u.quant(0).is_none());
+        assert_eq!(u.wire_bytes(), 0);
     }
 
     #[test]

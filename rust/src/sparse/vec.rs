@@ -104,6 +104,13 @@ impl SparseVec {
         &self.val
     }
 
+    /// Mutable access to the values (the quantization path rewrites
+    /// transmitted values in place; indices stay immutable so the wire
+    /// invariant cannot be broken from here).
+    pub fn values_mut(&mut self) -> &mut [f32] {
+        &mut self.val
+    }
+
     /// ell-2 norm of the stored values.
     pub fn norm2(&self) -> f32 {
         self.val.iter().map(|v| v * v).sum::<f32>().sqrt()
@@ -113,8 +120,7 @@ impl SparseVec {
     /// f32 value + ceil(log2 J)/8 bytes per index ("the index can be
     /// losslessly represented by log J bits", §2).
     pub fn wire_bytes(&self) -> usize {
-        let index_bits = usize::BITS - (self.dim.max(2) - 1).leading_zeros();
-        let per_entry_bits = 32 + index_bits as usize;
+        let per_entry_bits = 32 + crate::sparse::index_bits(self.dim);
         (self.nnz() * per_entry_bits).div_ceil(8)
     }
 

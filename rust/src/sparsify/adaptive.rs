@@ -87,6 +87,10 @@ impl Sparsifier for AdaK {
         self.engine = if shards > 1 { Some(SelectEngine::new(shards)) } else { None };
     }
 
+    fn fold_residual(&mut self, indices: &[u32], residual: &[f32]) {
+        crate::grad::fold_residual_into(&mut self.eps, indices, residual);
+    }
+
     /// AdaK's only cross-round state is the residual store.
     fn export_state(&self) -> SparsifierState {
         SparsifierState::Residual { eps: self.eps.clone() }

@@ -1,5 +1,10 @@
 //! No-op sparsifier: transmits the full gradient (the paper's
 //! "non-sparsified distributed SGD" upper-bound curve).
+//!
+//! Dense carries no error store, so `Sparsifier::fold_residual` keeps
+//! its default no-op here: under a `bits` policy a dense group is
+//! exactly QSGD — unbiased stochastic quantization with no feedback —
+//! which is the correct composition for a memoryless transmitter.
 
 use crate::sparse::SparseVec;
 use crate::sparsify::{RoundCtx, Sparsifier};

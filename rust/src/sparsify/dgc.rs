@@ -130,6 +130,13 @@ impl Sparsifier for Dgc {
         self.engine = if shards > 1 { Some(SelectEngine::new(shards)) } else { None };
     }
 
+    /// DGC's error store is the accumulated velocity, so that is where
+    /// a post-transmission residual folds back (transmitted coords were
+    /// just zeroed; the residual is what the wire failed to deliver).
+    fn fold_residual(&mut self, indices: &[u32], residual: &[f32]) {
+        crate::grad::fold_residual_into(&mut self.acc, indices, residual);
+    }
+
     /// DGC's cross-round state is the velocity + accumulated-velocity
     /// pair (its error store), not an `ErrorFeedback`.
     fn export_state(&self) -> SparsifierState {

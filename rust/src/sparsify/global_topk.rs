@@ -61,6 +61,10 @@ impl Sparsifier for GlobalTopK {
         self.engine = if shards > 1 { Some(SelectEngine::new(shards)) } else { None };
     }
 
+    fn fold_residual(&mut self, indices: &[u32], residual: &[f32]) {
+        self.ef.fold_residual(indices, residual);
+    }
+
     fn export_state(&self) -> SparsifierState {
         SparsifierState::Ef(self.ef.snapshot())
     }

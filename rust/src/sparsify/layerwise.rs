@@ -17,6 +17,15 @@
 //! each round), so biases can ship dense while conv blocks run
 //! aggressive RegTop-k.
 //!
+//! A policy's `bits` override composes QSGD-style stochastic value
+//! quantization with the sparsification (rTop-k, arXiv 2005.10941:
+//! sparsify-then-quantize beats either alone under a bit budget): the
+//! surviving entries of that group's bucket are quantized at the
+//! worker boundary, travel as a packed `sparse::QuantPayload`, and the
+//! rounding residual folds into the child's error store exactly like
+//! sparsification error folds into eps.  `bits` accepts the same
+//! `FROM..TO/OVER` schedules as mu/Q.
+//!
 //! **Equivalence net:** under the degenerate single-group layout the
 //! wrapper is a transparent pass-through — one child over the whole
 //! vector, built with exactly the flat factory parameters — so its
@@ -25,6 +34,7 @@
 //! an empty or non-matching policy table vs the PR 2 homogeneous path
 //! (pinned by `rust/tests/layerwise.rs`).
 
+use crate::comm::Quantizer;
 use crate::grad::{GradLayout, GradView};
 use crate::sparse::engine::MIN_SHARDED_DIM;
 use crate::sparse::{SparseUpdate, SparseVec};
@@ -33,6 +43,7 @@ use crate::sparsify::{
     SparsifierState,
 };
 use crate::util::json::{obj, Json};
+use crate::util::rng::Rng;
 
 /// How the transmission budget is distributed across parameter groups.
 ///
@@ -181,6 +192,66 @@ impl BudgetPolicy {
     }
 }
 
+/// Stream tag separating the quantizer's stochastic-rounding RNG from
+/// every other stream in the repo (randk selection, data generators).
+const QUANT_STREAM_TAG: u64 = 0x5154_5A51_u64;
+
+/// One quantizing group's transmission state: the `bits` schedule, the
+/// stochastic-rounding stream (checkpointed — resume is bit-exact) and
+/// the per-round scratch buffers.
+struct GroupQuant {
+    bits: Schedule,
+    rng: Rng,
+    residual: Vec<f32>,
+    codes: Vec<u32>,
+}
+
+impl GroupQuant {
+    /// Independent per-(worker, group) rounding stream; the policy's
+    /// `seed` override diversifies it exactly like the randk stream.
+    fn new(bits: Schedule, seed: u64, worker: usize, group: usize) -> Self {
+        GroupQuant {
+            bits,
+            rng: Rng::seed_from(QUANT_STREAM_TAG ^ seed)
+                .derive(((worker as u64) << 32) | group as u64),
+            residual: Vec::new(),
+            codes: Vec::new(),
+        }
+    }
+
+    /// Effective bit width at round `t`: the schedule's value rounded
+    /// and clamped into [2, 32].  Packing exists for widths up to 16;
+    /// anything above is raw-f32 passthrough for the round (so a
+    /// `32..4/T` schedule stays raw until it decays into packable
+    /// territory, and `8..32/T` fades quantization out).
+    fn bits_at(&self, t: usize) -> usize {
+        (self.bits.at(t).round() as i64).clamp(2, 32) as usize
+    }
+
+    /// Whether `bits` engages the packed path this round.
+    fn active_at(bits: usize) -> bool {
+        bits <= 16
+    }
+
+    /// Settled width once the schedule passes its horizon.
+    fn bits_end(&self) -> usize {
+        (self.bits.endpoints().1.round() as i64).clamp(2, 32) as usize
+    }
+
+    /// Whether ANY round of the schedule engages the packed path.
+    /// Linear schedules are monotone between their endpoints, so
+    /// checking both suffices.  A policy whose width can never drop
+    /// to 16 or below (e.g. a constant `bits=32` passthrough) gets no
+    /// quantizer state at all — its exports and checkpoints stay
+    /// interchangeable with a bits-less policy, matching the
+    /// bit-identical trajectories.
+    fn ever_active(&self) -> bool {
+        let (a, b) = self.bits.endpoints();
+        let w = |v: f32| (v.round() as i64).clamp(2, 32) as usize;
+        Self::active_at(w(a)) || Self::active_at(w(b))
+    }
+}
+
 /// The per-group child configuration: the family's shared parameters
 /// with the group's budget and bounds substituted in.  Group 0 of a
 /// single-group layout reproduces `kind` exactly (the equivalence
@@ -295,6 +366,15 @@ pub struct LayerwiseSparsifier {
     /// per-group mu/Q schedules; None = fixed hyperparameters (no
     /// per-round re-tune call, preserving the homogeneous bit-identity)
     schedules: Vec<Option<(Schedule, Schedule)>>,
+    /// per-group quantized-transmission state; None = raw f32 bucket
+    /// (with `bits` unset everywhere this vector is all-None and the
+    /// whole path is bit-identical to the pre-quantization tree)
+    quants: Vec<Option<GroupQuant>>,
+    /// bits an UN-quantized value costs on the wire (the cost model's
+    /// `value_bits`; 32 unless the run models half-precision links).
+    /// The packing-must-pay guard compares against this so the ledger
+    /// can never report a bits policy increasing upload bytes.
+    raw_value_bits: usize,
     /// per-child shard counts resolved by [`Sparsifier::set_shards`]
     /// (observability; 1 until the trainer wires shards in)
     child_shards: Vec<usize>,
@@ -331,21 +411,40 @@ impl LayerwiseSparsifier {
         let mut children = Vec::with_capacity(n);
         let mut ks = Vec::with_capacity(n);
         let mut schedules = Vec::with_capacity(n);
+        let mut quants = Vec::with_capacity(n);
         for (g, (spec, &bk)) in layout.groups().iter().zip(&base_ks).enumerate() {
-            let (child, k_eff, sched) =
-                build_child(kind, policies.resolve(&spec.name), bk, spec.len, g, worker);
+            let pol = policies.resolve(&spec.name);
+            let (child, k_eff, sched) = build_child(kind, pol, bk, spec.len, g, worker);
             children.push(child);
             ks.push(k_eff);
             schedules.push(sched);
+            quants.push(pol.and_then(|p| {
+                p.bits.clone().and_then(|bits| {
+                    let gq = GroupQuant::new(bits, p.seed.unwrap_or(0), worker, g);
+                    gq.ever_active().then_some(gq)
+                })
+            }));
         }
         LayerwiseSparsifier {
             layout,
             children,
             ks,
             schedules,
+            quants,
+            raw_value_bits: 32,
             child_shards: vec![1; n],
             scratch: SparseUpdate::empty(),
         }
+    }
+
+    /// Align the packing-must-pay guard with the run's cost model:
+    /// `bits` is what an un-quantized value costs on the wire
+    /// (`CostModel::value_bits`).  `TrainConfig::build_sparsifier`
+    /// wires this automatically; direct constructions keep the f32
+    /// default of 32.
+    pub fn set_raw_value_bits(&mut self, bits: usize) {
+        assert!(bits > 0, "raw value bits must be positive");
+        self.raw_value_bits = bits;
     }
 
     pub fn layout(&self) -> &GradLayout {
@@ -368,10 +467,13 @@ impl LayerwiseSparsifier {
 /// Step every child over its group slice of `flat` into the matching
 /// bucket of `out`.  Free function so the flat compatibility path can
 /// borrow `children`/`layout` disjointly from the scratch buffer.
+#[allow(clippy::too_many_arguments)]
 fn step_children(
     children: &mut [Box<dyn Sparsifier>],
     layout: &GradLayout,
     schedules: &[Option<(Schedule, Schedule)>],
+    quants: &mut [Option<GroupQuant>],
+    raw_value_bits: usize,
     flat: &[f32],
     ctx: &RoundCtx,
     out: &mut SparseUpdate,
@@ -395,6 +497,35 @@ fn step_children(
             genie_acc: ctx.genie_acc.map(|ga| &ga[off..off + len]),
         };
         child.step_into(&flat[off..off + len], &gctx, out.bucket_mut(g));
+        // Worker-boundary quantization: replace the bucket's values
+        // with their packed low-bit decode and fold the rounding error
+        // back into the child's error store — the lossy wire composes
+        // with error feedback exactly like sparsification does.
+        // Packing must PAY against what the bucket would cost raw
+        // under the run's cost model (`raw_value_bits`): for tiny
+        // buckets the 4-byte scale header exceeds the value-bit
+        // saving, so those rounds ship raw (a pure function of
+        // nnz/bits, so resume stays bit-exact).
+        if let Some(qs) = quants[g].as_mut() {
+            let bits = qs.bits_at(ctx.t);
+            if GroupQuant::active_at(bits) {
+                let (bucket, payload) = out.bucket_quant_mut(g);
+                let ib = crate::sparse::index_bits(bucket.dim());
+                let raw = (bucket.nnz() * (raw_value_bits + ib)).div_ceil(8);
+                if bucket.nnz() > 0
+                    && crate::sparse::QuantPayload::bytes_for(bucket.nnz(), bits, ib) < raw
+                {
+                    Quantizer::new(bits).quantize_bucket_into(
+                        bucket,
+                        &mut qs.rng,
+                        payload,
+                        &mut qs.residual,
+                        &mut qs.codes,
+                    );
+                    child.fold_residual(out.bucket(g).indices(), &qs.residual);
+                }
+            }
+        }
     }
 }
 
@@ -412,9 +543,26 @@ impl Sparsifier for LayerwiseSparsifier {
     /// Flat compatibility path: bucketed step, then flatten (bucket
     /// order == ascending global index order, so the wire invariant
     /// holds by construction).
+    ///
+    /// Under a `bits` policy the VALUES here are identical to the
+    /// bucketed path's (quantization runs either way — the two paths
+    /// stay bit-identical), but the flat `SparseVec` cannot carry the
+    /// packed payload, so a flat caller accounts 32-bit values and
+    /// forfeits the wire saving.  Honest quantized byte accounting
+    /// needs the bucketed [`Self::step_group_into`] path, which is
+    /// what the trainer always drives.
     fn step_into(&mut self, grad: &[f32], ctx: &RoundCtx, out: &mut SparseVec) {
         let mut scratch = std::mem::take(&mut self.scratch);
-        step_children(&mut self.children, &self.layout, &self.schedules, grad, ctx, &mut scratch);
+        step_children(
+            &mut self.children,
+            &self.layout,
+            &self.schedules,
+            &mut self.quants,
+            self.raw_value_bits,
+            grad,
+            ctx,
+            &mut scratch,
+        );
         scratch.flatten_into(out);
         self.scratch = scratch;
     }
@@ -426,7 +574,16 @@ impl Sparsifier for LayerwiseSparsifier {
             &self.layout,
             "view layout disagrees with the sparsifier's layout"
         );
-        step_children(&mut self.children, &self.layout, &self.schedules, view.flat(), ctx, out);
+        step_children(
+            &mut self.children,
+            &self.layout,
+            &self.schedules,
+            &mut self.quants,
+            self.raw_value_bits,
+            view.flat(),
+            ctx,
+            out,
+        );
     }
 
     /// Fan the model-dim-resolved shard count out to the children, but
@@ -458,8 +615,49 @@ impl Sparsifier for LayerwiseSparsifier {
         self.children.iter().any(|c| c.needs_genie())
     }
 
+    /// Route a flat-index residual to the owning children (the flat
+    /// compatibility path of external quantizers; internal `bits`
+    /// policies fold per group inside the step).
+    fn fold_residual(&mut self, indices: &[u32], residual: &[f32]) {
+        debug_assert_eq!(indices.len(), residual.len());
+        let mut i = 0usize;
+        for (child, spec) in self.children.iter_mut().zip(self.layout.groups()) {
+            let end = (spec.offset + spec.len) as u32;
+            let start = i;
+            while i < indices.len() && indices[i] < end {
+                i += 1;
+            }
+            if start < i {
+                let local: Vec<u32> =
+                    indices[start..i].iter().map(|&x| x - spec.offset as u32).collect();
+                child.fold_residual(&local, &residual[start..i]);
+            }
+        }
+    }
+
+    /// Per-group child state; quantizing groups additionally wrap
+    /// their child in [`SparsifierState::Quantized`] carrying the
+    /// rounding stream, so a resumed quantized run draws exactly the
+    /// decisions the uninterrupted one would have.  With no `bits`
+    /// overrides the export is byte-identical to the pre-quantization
+    /// format (old checkpoints keep loading).
     fn export_state(&self) -> SparsifierState {
-        SparsifierState::Grouped(self.children.iter().map(|c| c.export_state()).collect())
+        SparsifierState::Grouped(
+            self.children
+                .iter()
+                .zip(&self.quants)
+                .map(|(c, q)| {
+                    let inner = c.export_state();
+                    match q {
+                        None => inner,
+                        Some(gq) => {
+                            let (rng, gauss_spare) = gq.rng.state();
+                            SparsifierState::Quantized { inner: Box::new(inner), rng, gauss_spare }
+                        }
+                    }
+                })
+                .collect(),
+        )
     }
 
     fn import_state(&mut self, st: &SparsifierState) -> Result<(), String> {
@@ -472,8 +670,35 @@ impl Sparsifier for LayerwiseSparsifier {
                         self.children.len()
                     ));
                 }
-                for (g, (c, s)) in self.children.iter_mut().zip(states).enumerate() {
-                    c.import_state(s).map_err(|e| format!("group {g}: {e}"))?;
+                for (g, ((c, q), s)) in self
+                    .children
+                    .iter_mut()
+                    .zip(&mut self.quants)
+                    .zip(states)
+                    .enumerate()
+                {
+                    match (q, s) {
+                        (Some(gq), SparsifierState::Quantized { inner, rng, gauss_spare }) => {
+                            gq.rng = Rng::from_state(*rng, *gauss_spare);
+                            c.import_state(inner).map_err(|e| format!("group {g}: {e}"))?;
+                        }
+                        (Some(_), other) => {
+                            return Err(format!(
+                                "group {g}: quantizing group needs 'quantized' state, got '{}' \
+                                 (checkpoint belongs to a bits-less policy)",
+                                other.kind()
+                            ));
+                        }
+                        (None, SparsifierState::Quantized { .. }) => {
+                            return Err(format!(
+                                "group {g}: checkpoint carries a quantizer stream but the \
+                                 policy has no bits override"
+                            ));
+                        }
+                        (None, other) => {
+                            c.import_state(other).map_err(|e| format!("group {g}: {e}"))?;
+                        }
+                    }
                 }
                 Ok(())
             }
@@ -483,6 +708,28 @@ impl Sparsifier for LayerwiseSparsifier {
 
     fn group_families(&self) -> Vec<&'static str> {
         self.children.iter().map(|c| c.name()).collect()
+    }
+
+    fn group_budgets(&self) -> Vec<usize> {
+        self.ks.clone()
+    }
+
+    fn group_shards(&self) -> Vec<usize> {
+        self.child_shards.clone()
+    }
+
+    fn group_value_bits(&self) -> Vec<usize> {
+        self.quants
+            .iter()
+            .map(|q| q.as_ref().map_or(32, |gq| gq.bits_at(0)))
+            .collect()
+    }
+
+    fn group_value_bits_end(&self) -> Vec<usize> {
+        self.quants
+            .iter()
+            .map(|q| q.as_ref().map_or(32, GroupQuant::bits_end))
+            .collect()
     }
 
     fn peek_acc_into(&self, grad: &[f32], out: &mut [f32]) {
@@ -665,6 +912,136 @@ mod tests {
         );
         assert!(lw.schedules[0].is_some());
         assert_eq!(lw.group_families(), vec!["regtopk"]);
+    }
+
+    #[test]
+    fn bits_policy_quantizes_bucket_and_folds_residual() {
+        let layout = layout_4_6();
+        let table = PolicyTable::parse("a=topk:bits=4").unwrap();
+        let mut lw = LayerwiseSparsifier::with_policies(
+            &SparsifierKind::TopK { k: 0 },
+            layout.clone(),
+            &BudgetPolicy::PerGroup { ks: vec![2, 3] },
+            &table,
+            0,
+        );
+        assert_eq!(lw.group_value_bits(), vec![4, 32]);
+        let grad: Vec<f32> = (0..10).map(|i| (10 - i) as f32 * 0.37).collect();
+        let gagg = vec![0.0f32; 10];
+        let acc_before = lw.peek_acc(&grad);
+        let ctx = RoundCtx { t: 0, gagg_prev: &gagg, omega: 1.0, genie_acc: None };
+        let view = GradView::new(&layout, &grad);
+        let mut up = SparseUpdate::empty();
+        lw.step_group_into(&view, &ctx, &mut up);
+        // group a carries a packed payload that decodes to its values
+        let q = up.quant(0).expect("group a must be quantized");
+        assert_eq!(q.bits(), 4);
+        assert_eq!(q.decode(), up.bucket(0).values());
+        assert!(up.quant(1).is_none(), "group b stays raw f32");
+        // conservation THROUGH quantization: what the wire dropped
+        // (sparsified + rounding residual) is exactly what the error
+        // store carries into the next round
+        let transmitted = up.flatten().to_dense();
+        let zeros = vec![0.0f32; 10];
+        let eps = lw.peek_acc(&zeros);
+        for i in 0..10 {
+            assert_eq!(eps[i], acc_before[i] - transmitted[i], "i={i}");
+        }
+    }
+
+    #[test]
+    fn bits_32_is_explicit_passthrough() {
+        // an explicit bits=32 rule exercises the quantization plumbing
+        // in its disabled state: no payload, no RNG draws, trajectories
+        // bit-identical to the same policy without bits
+        let layout = layout_4_6();
+        let kind = SparsifierKind::RegTopK { k: 3, mu: 0.5, q: 1.0 };
+        let budget = BudgetPolicy::Global { k: 3 };
+        let with = PolicyTable::parse("*=regtopk:mu=0.5,bits=32").unwrap();
+        let without = PolicyTable::parse("*=regtopk:mu=0.5").unwrap();
+        let mut a = LayerwiseSparsifier::with_policies(&kind, layout.clone(), &budget, &with, 0);
+        let mut b =
+            LayerwiseSparsifier::with_policies(&kind, layout.clone(), &budget, &without, 0);
+        assert_eq!(a.group_value_bits(), vec![32, 32]);
+        let mut gagg = vec![0.0f32; 10];
+        let mut up_a = SparseUpdate::empty();
+        let mut up_b = SparseUpdate::empty();
+        for t in 0..6 {
+            let g: Vec<f32> = (0..10).map(|i| ((i * 5 + t * 7) % 9) as f32 - 4.0).collect();
+            let ctx = RoundCtx { t, gagg_prev: &gagg, omega: 0.5, genie_acc: None };
+            let view = GradView::new(&layout, &g);
+            a.step_group_into(&view, &ctx, &mut up_a);
+            b.step_group_into(&view, &ctx, &mut up_b);
+            assert_eq!(up_a, up_b, "t={t}");
+            assert!(up_a.quant(0).is_none() && up_a.quant(1).is_none());
+            gagg = up_a.flatten().to_dense();
+        }
+        // a never-active bits policy creates no quantizer state, so
+        // its checkpoints stay interchangeable with bits-less ones
+        assert_eq!(a.export_state(), b.export_state());
+        assert!(b.import_state(&a.export_state()).is_ok());
+    }
+
+    #[test]
+    fn scheduled_bits_tighten_the_wire_over_rounds() {
+        let layout = GradLayout::single(16);
+        let table = PolicyTable::parse("*=topk:bits=16..4/4").unwrap();
+        let mut lw = LayerwiseSparsifier::with_policies(
+            &SparsifierKind::TopK { k: 8 },
+            layout.clone(),
+            &BudgetPolicy::Global { k: 8 },
+            &table,
+            0,
+        );
+        assert_eq!(lw.group_value_bits(), vec![16], "schedule reported at t=0");
+        let gagg = vec![0.0f32; 16];
+        let mut bytes = Vec::new();
+        for t in 0..5 {
+            let g: Vec<f32> = (0..16).map(|i| (i as f32 + 1.0) * 0.1).collect();
+            let ctx = RoundCtx { t, gagg_prev: &gagg, omega: 1.0, genie_acc: None };
+            let view = GradView::new(&layout, &g);
+            let mut up = SparseUpdate::empty();
+            lw.step_group_into(&view, &ctx, &mut up);
+            assert_eq!(up.quant(0).unwrap().bits(), [16, 13, 10, 7, 4][t]);
+            bytes.push(up.wire_bytes());
+        }
+        assert!(bytes[4] < bytes[0], "{bytes:?}");
+    }
+
+    #[test]
+    fn quantized_state_roundtrips_with_rng_stream() {
+        let layout = layout_4_6();
+        let table = PolicyTable::parse("*=topk:bits=3").unwrap();
+        let kind = SparsifierKind::TopK { k: 3 };
+        let budget = BudgetPolicy::Global { k: 3 };
+        let mk = || {
+            LayerwiseSparsifier::with_policies(&kind, layout.clone(), &budget, &table, 0)
+        };
+        let mut a = mk();
+        let mut gagg = vec![0.0f32; 10];
+        for t in 0..4 {
+            let g: Vec<f32> = (0..10).map(|i| ((i * 3 + t) % 7) as f32 - 3.0).collect();
+            let ctx = RoundCtx { t, gagg_prev: &gagg, omega: 0.5, genie_acc: None };
+            gagg = a.step(&g, &ctx).to_dense();
+        }
+        let st = a.export_state();
+        // quantizing groups wrap their child state
+        if let SparsifierState::Grouped(children) = &st {
+            assert!(children.iter().all(|c| c.kind() == "quantized"), "{children:?}");
+        } else {
+            panic!("expected grouped state");
+        }
+        let mut b = mk();
+        b.import_state(&st).unwrap();
+        // identical continuation INCLUDING the stochastic rounding
+        let g: Vec<f32> = (0..10).map(|i| (i as f32) - 4.5).collect();
+        let ctx = RoundCtx { t: 4, gagg_prev: &gagg, omega: 0.5, genie_acc: None };
+        assert_eq!(a.step(&g, &ctx), b.step(&g, &ctx));
+        // a bits-less build rejects the quantized state and vice versa
+        let mut cold = LayerwiseSparsifier::new(&kind, layout.clone(), &budget, 0);
+        assert!(cold.import_state(&st).is_err());
+        let plain = cold.export_state();
+        assert!(mk().import_state(&plain).is_err());
     }
 
     #[test]

@@ -64,6 +64,11 @@ pub enum SparsifierState {
     Residual { eps: Vec<f32> },
     /// One state per child group (the layerwise wrapper).
     Grouped(Vec<SparsifierState>),
+    /// A quantizing group's state: the child family's own state plus
+    /// the stochastic-rounding stream, so a resumed quantized run
+    /// draws exactly the rounding decisions the uninterrupted run
+    /// would have (bit-exact resume under a `bits` policy).
+    Quantized { inner: Box<SparsifierState>, rng: [u64; 4], gauss_spare: Option<f64> },
 }
 
 impl SparsifierState {
@@ -76,6 +81,7 @@ impl SparsifierState {
             SparsifierState::Dgc { .. } => "dgc",
             SparsifierState::Residual { .. } => "residual",
             SparsifierState::Grouped(_) => "grouped",
+            SparsifierState::Quantized { .. } => "quantized",
         }
     }
 }
@@ -144,6 +150,15 @@ pub trait Sparsifier: Send {
     /// no-op for families without those hyperparameters.
     fn set_temperature(&mut self, _mu: f32, _q: f32) {}
 
+    /// Fold a post-selection residual (e.g. the quantization error on
+    /// the transmitted values) back into the error store at `indices`
+    /// (which must be the indices of the update just emitted), so the
+    /// lossy stage composes with error feedback exactly as the paper
+    /// folds sparsification error into eps.  The default is a no-op:
+    /// families without a persistent error store (dense) rely on the
+    /// stochastic rounding's unbiasedness alone, QSGD-style.
+    fn fold_residual(&mut self, _indices: &[u32], _residual: &[f32]) {}
+
     /// Export the persistent cross-round state for checkpointing.  The
     /// default covers stateless families; everything with history
     /// overrides it so a resumed run continues the trajectory instead
@@ -170,6 +185,34 @@ pub trait Sparsifier: Send {
     /// one implicit group; the layerwise wrapper reports its children.
     fn group_families(&self) -> Vec<&'static str> {
         vec![self.name()]
+    }
+
+    /// Resolved per-group transmission budgets (empty = not a grouped
+    /// sparsifier).  Surfaced in the run manifest echo.
+    fn group_budgets(&self) -> Vec<usize> {
+        Vec::new()
+    }
+
+    /// Per-group shard counts as resolved by the last `set_shards`
+    /// (empty = not a grouped sparsifier).  Surfaced in the run
+    /// manifest echo.
+    fn group_shards(&self) -> Vec<usize> {
+        Vec::new()
+    }
+
+    /// Per-group quantization bit widths at round 0 (32 = passthrough;
+    /// empty = not a grouped sparsifier).  Surfaced in the run
+    /// manifest echo.
+    fn group_value_bits(&self) -> Vec<usize> {
+        Vec::new()
+    }
+
+    /// Per-group bit widths once any `bits` schedule has settled past
+    /// its horizon (== [`Self::group_value_bits`] for constant
+    /// widths).  Lets summaries report `8..4` instead of misstating a
+    /// decaying schedule as its round-0 value.
+    fn group_value_bits_end(&self) -> Vec<usize> {
+        self.group_value_bits()
     }
 
     /// Whether this sparsifier needs the genie side-channel (only the

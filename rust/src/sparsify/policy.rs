@@ -15,6 +15,8 @@
 //! ```text
 //! conv*=regtopk:mu=0.3;bias*=dense;*=topk
 //! fc*=:mu=0.5..0.1/200          # empty family = inherit, linear mu decay
+//! conv*=regtopk:mu=0.3,bits=4;*=topk:bits=8   # quantized transmission
+//! fc*=:bits=8..4/100,eta=2.0    # bits tighten over rounds, 2x group lr
 //! ```
 //!
 //! Each rule is `glob=family[:key=value,...]`; an empty family inherits
@@ -135,6 +137,18 @@ pub struct GroupPolicy {
     pub ratio: Option<f32>,
     pub k_min: Option<usize>,
     pub k_max: Option<usize>,
+    /// quantized-transmission bit width, possibly scheduled per round
+    /// (`8..4/100` tightens the wire over training); values round to
+    /// an integer in [2, 32] at each round.  Widths 2..=16 engage the
+    /// packed wire path; anything above (incl. 32) is raw f32
+    /// passthrough for that round.  Unset = no quantization (the
+    /// pre-quantization wire format, bit-identical).
+    pub bits: Option<Schedule>,
+    /// learning-rate scale for this group's slice of the aggregate
+    /// (the §1.2 G-extension applied per layer); the server multiplies
+    /// the group's gradient by this factor before the optimizer step.
+    /// Unset = 1.0 (bit-identical path).
+    pub eta: Option<f32>,
 }
 
 impl GroupPolicy {
@@ -174,6 +188,21 @@ impl GroupPolicy {
                 return Err(format!(
                     "seed {s} exceeds 2^53 and cannot round-trip through the config JSON"
                 ));
+            }
+        }
+        if let Some(bits) = &self.bits {
+            let (a, b) = bits.endpoints();
+            for v in [a, b] {
+                if !v.is_finite() || !(2.0..=32.0).contains(&v.round()) {
+                    return Err(format!(
+                        "bits schedule endpoint {v} outside [2, 32] (32 = passthrough)"
+                    ));
+                }
+            }
+        }
+        if let Some(e) = self.eta {
+            if !(e.is_finite() && e > 0.0) {
+                return Err(format!("eta scale {e} must be positive and finite"));
             }
         }
         Ok(())
@@ -270,6 +299,8 @@ impl PolicyTable {
                     "ratio" => policy.ratio = Some(fl(val)?),
                     "k_min" | "kmin" => policy.k_min = Some(us(val)?),
                     "k_max" | "kmax" => policy.k_max = Some(us(val)?),
+                    "bits" => policy.bits = Some(Schedule::parse(val)?),
+                    "eta" => policy.eta = Some(fl(val)?),
                     other => return Err(format!("unknown policy param '{other}'")),
                 }
             }
@@ -323,6 +354,12 @@ impl PolicyTable {
                     if let Some(v) = p.k_max {
                         m.insert("k_max".to_string(), v.into());
                     }
+                    if let Some(s) = &p.bits {
+                        m.insert("bits".to_string(), s.to_json());
+                    }
+                    if let Some(v) = p.eta {
+                        m.insert("eta".to_string(), (v as f64).into());
+                    }
                     Json::Obj(m)
                 })
                 .collect(),
@@ -330,9 +367,9 @@ impl PolicyTable {
     }
 
     pub fn from_json(j: &Json) -> Result<Self, String> {
-        const KEYS: [&str; 12] = [
+        const KEYS: [&str; 14] = [
             "match", "family", "k", "mu", "q", "tau", "seed", "momentum", "clip", "ratio",
-            "k_min", "k_max",
+            "k_min", "k_max", "bits", "eta",
         ];
         let arr = j.as_arr().ok_or("policy must be a JSON array")?;
         let mut rules = Vec::new();
@@ -367,6 +404,8 @@ impl PolicyTable {
                 ratio: f32_of("ratio"),
                 k_min: entry.get("k_min").and_then(Json::as_usize),
                 k_max: entry.get("k_max").and_then(Json::as_usize),
+                bits: sched_of("bits")?,
+                eta: f32_of("eta"),
             };
             rules.push(PolicyRule { pattern, policy });
         }
@@ -503,6 +542,35 @@ mod tests {
         ] {
             assert!(PolicyTable::from_json(&Json::parse(bad).unwrap()).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn bits_and_eta_parse_validate_and_roundtrip() {
+        // the ISSUE 4 spec line
+        let t = PolicyTable::parse("conv*=regtopk:mu=0.3,bits=4;*=topk:bits=8").unwrap();
+        let conv = t.resolve("conv0.w").unwrap();
+        assert_eq!(conv.bits, Some(Schedule::Const(4.0)));
+        assert_eq!(t.resolve("fc.w").unwrap().bits, Some(Schedule::Const(8.0)));
+        // scheduled bits + per-group eta
+        let t = PolicyTable::parse("fc*=:bits=8..4/100,eta=2.0;*=dense").unwrap();
+        let fc = t.resolve("fc0.w").unwrap();
+        assert_eq!(fc.bits, Some(Schedule::Linear { from: 8.0, to: 4.0, over: 100 }));
+        assert_eq!(fc.eta, Some(2.0));
+        assert_eq!(t.resolve("conv").unwrap().bits, None);
+        // JSON round trip keeps both
+        let t2 = PolicyTable::from_json(&t.to_json()).unwrap();
+        assert_eq!(t, t2);
+        // validation: bits outside [2, 32], eta <= 0 rejected on both paths
+        assert!(PolicyTable::parse("g=topk:bits=1").is_err());
+        assert!(PolicyTable::parse("g=topk:bits=33").is_err());
+        assert!(PolicyTable::parse("g=topk:bits=8..1/10").is_err());
+        assert!(PolicyTable::parse("g=topk:eta=0").is_err());
+        assert!(PolicyTable::parse("g=topk:eta=-1").is_err());
+        assert!(PolicyTable::parse("g=topk:bits=32").is_ok(), "32 = explicit passthrough");
+        assert!(
+            PolicyTable::from_json(&Json::parse(r#"[{"match":"a","bits":1}]"#).unwrap())
+                .is_err()
+        );
     }
 
     #[test]

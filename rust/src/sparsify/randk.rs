@@ -43,6 +43,10 @@ impl Sparsifier for RandK {
         self.ef.commit_into(&self.sel, out);
     }
 
+    fn fold_residual(&mut self, indices: &[u32], residual: &[f32]) {
+        self.ef.fold_residual(indices, residual);
+    }
+
     /// Error feedback AND the selection stream: a resumed randk run
     /// re-draws exactly the indices the uninterrupted run would have.
     fn export_state(&self) -> SparsifierState {

@@ -56,6 +56,7 @@ impl RegTopK {
 
     /// The regularized score  a * tanh(|1 + Delta|/mu)  (eq. 16).
     /// Exposed for the cross-check tests and the score benches.
+    #[allow(clippy::too_many_arguments)]
     pub fn compute_score(
         acc: &[f32],
         acc_prev: &[f32],
@@ -224,6 +225,10 @@ impl Sparsifier for RegTopK {
     fn set_temperature(&mut self, mu: f32, q: f32) {
         self.mu = mu.max(f32::MIN_POSITIVE);
         self.q = q;
+    }
+
+    fn fold_residual(&mut self, indices: &[u32], residual: &[f32]) {
+        self.ef.fold_residual(indices, residual);
     }
 
     fn export_state(&self) -> SparsifierState {

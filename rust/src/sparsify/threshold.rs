@@ -45,6 +45,10 @@ impl Sparsifier for Threshold {
         self.ef.commit_into(&self.sel, out);
     }
 
+    fn fold_residual(&mut self, indices: &[u32], residual: &[f32]) {
+        self.ef.fold_residual(indices, residual);
+    }
+
     fn export_state(&self) -> SparsifierState {
         SparsifierState::Ef(self.ef.snapshot())
     }

@@ -23,16 +23,6 @@ impl TopK {
     pub fn error(&self) -> &[f32] {
         &self.ef.eps
     }
-
-    /// Fold a post-sparsification residual (e.g. quantization error on
-    /// the transmitted values) back into the error accumulator so the
-    /// compression stays unbiased over time.
-    pub fn fold_residual(&mut self, indices: &[u32], residual: &[f32]) {
-        debug_assert_eq!(indices.len(), residual.len());
-        for (&i, &r) in indices.iter().zip(residual) {
-            self.ef.eps[i as usize] += r;
-        }
-    }
 }
 
 impl Sparsifier for TopK {
@@ -77,6 +67,10 @@ impl Sparsifier for TopK {
 
     fn set_shards(&mut self, shards: usize) {
         self.engine = if shards > 1 { Some(SelectEngine::new(shards)) } else { None };
+    }
+
+    fn fold_residual(&mut self, indices: &[u32], residual: &[f32]) {
+        self.ef.fold_residual(indices, residual);
     }
 
     fn export_state(&self) -> SparsifierState {

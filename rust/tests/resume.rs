@@ -129,6 +129,31 @@ fn resume_equals_uninterrupted_heterogeneous_policy() {
 }
 
 #[test]
+fn resume_equals_uninterrupted_quantized_transmission() {
+    // ISSUE 4: the quantizer's stochastic-rounding stream travels in
+    // the `.ef` sidecar (SparsifierState::Quantized), so a resumed
+    // quantized run re-draws exactly the rounding decisions — and the
+    // residual-in-EF history — the uninterrupted run would have.
+    let cfg = TrainConfig {
+        workers: 3,
+        eta: 0.03,
+        sparsifier: SparsifierKind::RegTopK { k: 6, mu: 0.5, q: 1.0 },
+        eval_every: 0,
+        groups: Some(GradLayout::from_sizes([
+            ("conv.w".to_string(), 12),
+            ("conv.b".to_string(), 4),
+            ("fc.w".to_string(), 8),
+        ])),
+        budget: Some(BudgetPolicy::Proportional { frac: 0.25 }),
+        policy: Some(
+            PolicyTable::parse("*.b=dense;conv*=regtopk:bits=4;*=topk:bits=8..4/8").unwrap(),
+        ),
+        ..TrainConfig::default()
+    };
+    assert_resume_exact("quantized", &cfg, 5, 13);
+}
+
+#[test]
 fn legacy_model_only_checkpoint_still_restores_cold() {
     let (params, seed) = testbed();
     let problem = generate(params, seed);

@@ -1,0 +1,47 @@
+#!/usr/bin/env bash
+# CI entry point — the SAME stages run locally and in GitHub Actions
+# (.github/workflows/ci.yml calls this script, so "works on my machine
+# but not in CI" cannot happen by construction).
+#
+#   scripts/ci.sh            # everything: lint + build + test + verify smoke
+#   scripts/ci.sh lint       # cargo fmt --check + cargo clippy -D warnings
+#   scripts/ci.sh verify     # build + test + verify.sh smoke (refreshes BENCH_*.json)
+#
+# Both stages are HARD gates: rustfmt drift, clippy warnings, test
+# failures or a crashed smoke run all fail the pipeline.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+stage="${1:-all}"
+
+run_lint() {
+    echo "== ci/lint: cargo fmt --check =="
+    cargo fmt --check || {
+        echo "FAIL: rustfmt drift — run 'cargo fmt' and commit the result"
+        exit 1
+    }
+    echo "== ci/lint: cargo clippy --all-targets -- -D warnings =="
+    # --all-targets lints tests and benches too — new test code must
+    # clear the same bar as the library
+    cargo clippy --all-targets -- -D warnings
+}
+
+run_verify() {
+    # verify.sh is the tier-1 gate: cargo build --release, cargo test
+    # -q, the groupwise/heterogeneous/quantized CLI smoke runs and the
+    # quick-budget bench smoke (which refreshes BENCH_*.json for the
+    # workflow's artifact upload)
+    scripts/verify.sh
+}
+
+case "$stage" in
+    lint)   run_lint ;;
+    verify) run_verify ;;
+    all)    run_lint; run_verify ;;
+    *)
+        echo "usage: scripts/ci.sh [lint|verify|all]" >&2
+        exit 2
+        ;;
+esac
+
+echo "ci ($stage): OK"

@@ -56,18 +56,30 @@ target/release/repro fig3 --layerwise --iters 8 --eval-every 0 \
 # hetero sweep row sanity
 target/release/repro sweep --param hetero --iters 40 --s 0.2
 
+echo "== quantized smoke: bits policies + sweep --param bits =="
+# mixed per-group bit widths with schedules + per-group eta (ISSUE 4
+# tentpole); the per-group table must show the resolved bits column
+target/release/repro train --config "$smoke_dir/cfg.json" \
+    --groups conv:60,fc:40 --budget prop:0.1 \
+    --policy 'conv*=regtopk:mu=0.3,bits=4;*=topk:bits=8..4/25,eta=1.5' \
+    --out "$smoke_dir/out"
+# accuracy-vs-wire-bytes sweep row (EXPERIMENTS.md §Quantization)
+target/release/repro sweep --param bits --iters 40 --s 0.2
+
 if [[ "${1:-}" == "--full" ]]; then
     echo "== bench (full budget) =="
     cargo bench --bench topk_select
     cargo bench --bench sparsifiers
     BENCH_JSON=BENCH_PR2.json cargo bench --bench layerwise
     BENCH_JSON=BENCH_PR3.json cargo bench --bench heterogeneous
+    BENCH_JSON=BENCH_PR4.json cargo bench --bench quantized
 else
     echo "== bench smoke (quick budget) =="
     BENCH_BUDGET_MS=60 cargo bench --bench topk_select
     BENCH_BUDGET_MS=60 cargo bench --bench sparsifiers
     BENCH_BUDGET_MS=60 BENCH_JSON=BENCH_PR2.json cargo bench --bench layerwise
     BENCH_BUDGET_MS=60 BENCH_JSON=BENCH_PR3.json cargo bench --bench heterogeneous
+    BENCH_BUDGET_MS=60 BENCH_JSON=BENCH_PR4.json cargo bench --bench quantized
 fi
 
 echo "verify: OK"
