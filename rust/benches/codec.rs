@@ -1,0 +1,130 @@
+//! Wire-codec benchmarks (ISSUE 5): encode/decode throughput per
+//! codec pair (Golomb–Rice index coding on clustered vs uniform index
+//! sets; uniform vs NUQ value packing) and the bound-vs-code byte
+//! points — measured Rice index bytes against the paper's bit-packed
+//! `log J` accounting.
+//!
+//!     cargo bench --bench codec
+//!
+//! Results merge into BENCH_PR5.json (override with $BENCH_JSON):
+//! `codec/*` entries carry median_s/melem_per_s; the `codec_bytes/*`
+//! entries carry `rice_bytes` vs `packed_bytes` for one bucket's index
+//! stream.  The clustered point is the acceptance gate: the entropy
+//! code must decode losslessly AND beat the packed bound there.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use regtopk::comm::codec::{index_bits, LevelKind, QuantPayload, RicePayload, ValueCodec};
+use regtopk::sparse::SparseVec;
+use regtopk::util::bench::{black_box, Bench};
+use regtopk::util::json::Json;
+use regtopk::util::rng::Rng;
+
+fn bench_json_path() -> String {
+    std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_PR5.json".to_string())
+}
+
+/// Merge `(key, rice_bytes, packed_bytes)` points into the bench JSON
+/// (preserving the timing entries written by `Bench::write_json`).
+fn merge_byte_points(path: &str, points: &[(String, usize, usize)]) {
+    let mut map: BTreeMap<String, Json> = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|text| Json::parse(&text).ok())
+        .and_then(|j| j.as_obj().cloned())
+        .unwrap_or_default();
+    for (key, rice, packed) in points {
+        let mut entry = BTreeMap::new();
+        entry.insert("rice_bytes".to_string(), Json::from(*rice));
+        entry.insert("packed_bytes".to_string(), Json::from(*packed));
+        map.insert(format!("codec_bytes/{key}"), Json::Obj(entry));
+    }
+    match std::fs::write(Path::new(path), Json::Obj(map).dump()) {
+        Ok(()) => println!("# wrote {} byte points to {path}", points.len()),
+        Err(e) => eprintln!("# could not write {path}: {e}"),
+    }
+}
+
+/// k sorted indices sampled uniformly from a `window`-wide span of a
+/// dim-`dim` group (window == dim: the uniform worst case; window <<
+/// dim: the clustered regime error feedback produces in practice).
+fn indices(dim: usize, window: usize, k: usize, rng: &mut Rng) -> Vec<u32> {
+    let mut idx: Vec<u32> =
+        rng.sample_indices(window.min(dim), k).into_iter().map(|i| i as u32).collect();
+    idx.sort_unstable();
+    idx
+}
+
+fn main() {
+    let mut b = Bench::new();
+    let dim = 1 << 20;
+    let k = 1024usize;
+    println!(
+        "# wire codecs: k={k} entries of a J={dim} group ({} packed index bits)",
+        index_bits(dim)
+    );
+
+    let mut byte_points: Vec<(String, usize, usize)> = Vec::new();
+
+    // ---- index axis: Golomb-Rice on clustered vs uniform sets ------
+    for (name, window) in [("clustered", 8 * k), ("uniform", dim)] {
+        let mut rng = Rng::seed_from(1);
+        let idx = indices(dim, window, k, &mut rng);
+        let mut p = RicePayload::default();
+        b.run_throughput(&format!("codec/rice_encode/{name}/k={k}"), k, || {
+            p.encode_into(&idx);
+            black_box(p.param());
+        });
+        let mut out = Vec::with_capacity(k);
+        b.run_throughput(&format!("codec/rice_decode/{name}/k={k}"), k, || {
+            p.decode_into(&mut out);
+            black_box(out.len());
+        });
+        assert_eq!(out, idx, "rice decode must be lossless ({name})");
+        let packed = (k * index_bits(dim)).div_ceil(8);
+        byte_points.push((format!("{name}/k={k}/J={dim}"), p.wire_bytes(), packed));
+    }
+    // the acceptance gate: entropy-coded indices beat the bit-packed
+    // log J bound on the clustered bucket
+    let (rice_c, packed_c) = (byte_points[0].1, byte_points[0].2);
+    assert!(
+        rice_c < packed_c,
+        "clustered rice {rice_c} B must beat packed {packed_c} B"
+    );
+
+    // ---- value axis: uniform vs NUQ packing at 4 bits --------------
+    for (name, levels) in [("uniform", LevelKind::Uniform), ("nuq", LevelKind::Nuq)] {
+        let vc = ValueCodec { bits: 4, levels };
+        let mut rng = Rng::seed_from(2);
+        let idx = indices(dim, dim, k, &mut rng);
+        let vals: Vec<f32> = (0..k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let proto = SparseVec::new(dim, idx, vals);
+        let mut payload = QuantPayload::default();
+        let (mut residual, mut codes) = (Vec::new(), Vec::new());
+        let mut work = proto.clone();
+        b.run_throughput(&format!("codec/value_encode/{name}/bits=4/k={k}"), k, || {
+            work = proto.clone();
+            vc.encode_bucket(&mut work, &mut rng, &mut payload, &mut residual, &mut codes);
+            black_box(payload.scale());
+        });
+        let mut out = vec![0.0f32; k];
+        b.run_throughput(&format!("codec/value_decode/{name}/bits=4/k={k}"), k, || {
+            for (i, o) in out.iter_mut().enumerate() {
+                *o = payload.decode_value(i);
+            }
+            black_box(out[k - 1]);
+        });
+        assert_eq!(out, work.values(), "decode must reproduce the bucket ({name})");
+    }
+
+    let path = bench_json_path();
+    b.write_json(Path::new(&path)).unwrap_or_else(|e| eprintln!("# could not write {path}: {e}"));
+    merge_byte_points(&path, &byte_points);
+    println!("\n# per-bucket index bytes (k={k}): measured rice vs the packed log J bound");
+    for (key, rice, packed) in &byte_points {
+        println!(
+            "  {key:<28} rice {rice:>7} B   packed {packed:>7} B   saving {:.2}%",
+            100.0 * (1.0 - *rice as f64 / (*packed).max(1) as f64)
+        );
+    }
+}

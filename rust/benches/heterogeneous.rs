@@ -109,9 +109,10 @@ fn main() {
                 t += 1;
             });
             if shards == 1 {
+                let wc = regtopk::comm::codec::WireCost::paper();
                 byte_points.push((
                     format!("{name}/J={j}"),
-                    out.wire_bytes(),
+                    wc.update(&out),
                     out.flatten().wire_bytes(),
                 ));
             }

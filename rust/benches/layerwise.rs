@@ -91,9 +91,10 @@ fn main() {
             t += 1;
         });
         // wire-cost point: the same update bucketed vs flattened
+        let wc = regtopk::comm::codec::WireCost::paper();
         byte_points.push((
             format!("G={groups}/J={j}/S={s}"),
-            out.wire_bytes(),
+            wc.update(&out),
             out.flatten().wire_bytes(),
         ));
     }

@@ -14,8 +14,8 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use regtopk::comm::Quantizer;
-use regtopk::sparse::{QuantPayload, SparseVec};
+use regtopk::comm::codec::{LevelKind, QuantPayload, ValueCodec};
+use regtopk::sparse::SparseVec;
 use regtopk::util::bench::{black_box, Bench};
 use regtopk::util::json::Json;
 use regtopk::util::rng::Rng;
@@ -60,7 +60,7 @@ fn main() {
 
     let mut byte_points: Vec<(String, usize, usize)> = Vec::new();
     for &bits in &[4usize, 8] {
-        let quant = Quantizer::new(bits);
+        let quant = ValueCodec { bits, levels: LevelKind::Uniform };
         // full worker-side pass: stochastic round + residual + pack
         {
             let mut rng = Rng::seed_from(1);
@@ -70,7 +70,7 @@ fn main() {
             let mut work = proto.clone();
             b.run_throughput(&format!("quantized/quantize_bucket/bits={bits}/k={k}"), k, || {
                 work = proto.clone();
-                quant.quantize_bucket_into(
+                quant.encode_bucket(
                     &mut work,
                     &mut rng,
                     &mut payload,
@@ -93,7 +93,7 @@ fn main() {
             let mut work = bucket(dim, k, &mut rng);
             let mut payload = QuantPayload::default();
             let (mut residual, mut codes) = (Vec::new(), Vec::new());
-            quant.quantize_bucket_into(&mut work, &mut rng, &mut payload, &mut residual, &mut codes);
+            quant.encode_bucket(&mut work, &mut rng, &mut payload, &mut residual, &mut codes);
             let mut out = vec![0.0f32; k];
             b.run_throughput(&format!("quantized/decode/bits={bits}/k={k}"), k, || {
                 for (i, o) in out.iter_mut().enumerate() {

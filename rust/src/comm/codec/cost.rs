@@ -1,0 +1,205 @@
+//! `WireCost` — the ONE byte accountant of the wire-codec stack.
+//!
+//! PR 4 left two parallel accountants (`SparseUpdate::wire_bytes` with
+//! a hardwired 32-bit value width, and `CostModel::bucket_bytes` with
+//! the link model's width); both are folded into this struct.  Every
+//! caller — the ledger, the sweeps, `repro comm`, the benches and the
+//! packing-must-pay guard — routes through [`WireCost::bucket`], so
+//! reported bytes are the bytes on the wire by construction: the
+//! dispatch reads the SAME per-bucket payload state the encoders
+//! wrote, and the accountant and the payloads can never disagree.
+//!
+//! With every codec at its default (raw f32 values, bit-packed `log J`
+//! indices) the formulas reproduce the PR 4 accounting bit-for-bit:
+//! `ceil(nnz * (value_bits + ceil(log2 dim)) / 8)` raw, and the packed
+//! payload's `ceil(nnz * (bits + ceil(log2 dim)) / 8) + 4` when a
+//! `bits` policy engaged (pinned by `rust/tests/codec.rs`).
+
+use super::index_bits;
+use crate::sparse::{SparseUpdate, SparseVec};
+
+/// Byte accountant parameterized by the link's raw value width
+/// (`CostModel::value_bits`; 32 for f32, 16 models half-precision
+/// links).  Construct via [`crate::comm::CostModel::wire`] for a run's
+/// configured link, or [`WireCost::paper`] for the paper's fixed §2
+/// format.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WireCost {
+    /// bits per un-quantized transmitted value
+    pub value_bits: usize,
+}
+
+impl WireCost {
+    pub fn new(value_bits: usize) -> Self {
+        assert!(value_bits > 0, "raw value bits must be positive");
+        WireCost { value_bits }
+    }
+
+    /// The paper's FIXED §2 format: 32-bit f32 values (what the bench
+    /// wire points and `SparseVec::wire_bytes` report, independent of
+    /// any configured link model).
+    pub fn paper() -> Self {
+        WireCost { value_bits: 32 }
+    }
+
+    /// Bytes of a raw-f32 bucket under bit-packed `log J` indexing —
+    /// the paper's §2 formula with this accountant's value width.
+    pub fn raw_bucket(&self, nnz: usize, dim: usize) -> usize {
+        (nnz * (self.value_bits + index_bits(dim))).div_ceil(8)
+    }
+
+    /// Bytes of a flat [`SparseVec`] upload (the pre-bucketing wire
+    /// format; also the degenerate single-bucket case).
+    pub fn flat(&self, sv: &SparseVec) -> usize {
+        self.raw_bucket(sv.nnz(), sv.dim())
+    }
+
+    /// Bytes of bucket `g` of a bucketed update: the single dispatch
+    /// point over the bucket's actual codec state.
+    ///
+    /// - value axis: the packed payload's own accounting when one is
+    ///   active (`bits` value bits + 4-byte scale header), raw
+    ///   `value_bits` otherwise;
+    /// - index axis: the Rice payload's measured bytes when one is
+    ///   active, 32 bits per index under `idx=raw`, bit-packed
+    ///   `ceil(log2 dim)` bits otherwise.
+    ///
+    /// Non-Rice paths keep the PR 4 combined-ceil formulas exactly
+    /// (value and index bits share one `div_ceil(8)`), so codec-unset
+    /// byte totals are bit-identical to the pre-codec tree.
+    pub fn bucket(&self, up: &SparseUpdate, g: usize) -> usize {
+        let b = up.bucket(g);
+        let quant = up.quant(g);
+        if let Some(rp) = up.rice(g) {
+            // entropy-coded indices travel as their own byte stream;
+            // values pack separately (index_bits = 0 in the payload's
+            // accounting keeps the 4-byte scale header)
+            let vbytes = match quant {
+                Some(q) => {
+                    debug_assert_eq!(b.nnz(), q.len(), "payload/bucket entry mismatch");
+                    q.wire_bytes(0)
+                }
+                None => (b.nnz() * self.value_bits).div_ceil(8),
+            };
+            return vbytes + rp.wire_bytes();
+        }
+        let ib = if up.raw_index(g) { 32 } else { index_bits(b.dim()) };
+        match quant {
+            Some(q) => {
+                debug_assert_eq!(b.nnz(), q.len(), "payload/bucket entry mismatch");
+                q.wire_bytes(ib)
+            }
+            None => (b.nnz() * (self.value_bits + ib)).div_ceil(8),
+        }
+    }
+
+    /// Bytes of a whole bucketed update: each bucket pays its own
+    /// codec stack.  The single-bucket degenerate case with default
+    /// codecs equals [`Self::flat`] on the flattened vector.
+    pub fn update(&self, up: &SparseUpdate) -> usize {
+        (0..up.num_buckets()).map(|g| self.bucket(up, g)).sum()
+    }
+
+    /// Bytes of the dense broadcast g^t (no indices needed).
+    pub fn broadcast(&self, dim: usize) -> usize {
+        (dim * self.value_bits).div_ceil(8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::codec::{LevelKind, ValueCodec};
+    use crate::grad::GradLayout;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn raw_formula_matches_the_paper_cost() {
+        let wc = WireCost::paper();
+        // J=100 -> 7 index bits; 10 entries * 39 bits = 390 bits -> 49 bytes
+        assert_eq!(wc.raw_bucket(10, 100), 49);
+        let sv = SparseVec::new(100, (0..10).collect(), vec![1.0; 10]);
+        assert_eq!(wc.flat(&sv), 49);
+        assert_eq!(wc.broadcast(100), 400);
+        // half-precision link halves the value term
+        let wc16 = WireCost::new(16);
+        // 4 * (16+20) = 144 bits = 18 bytes
+        assert_eq!(wc16.raw_bucket(4, 1 << 20), 18);
+    }
+
+    #[test]
+    fn default_codecs_reproduce_pr4_bucket_accounting() {
+        let layout = GradLayout::from_sizes([("a".to_string(), 1024), ("b".to_string(), 1024)]);
+        let mut up = SparseUpdate::zeros(&layout);
+        for i in 0..4u32 {
+            up.bucket_mut(0).push(i, 1.0);
+            up.bucket_mut(1).push(i, 1.0);
+        }
+        let wc = WireCost::paper();
+        // 8 entries * (32+10) bits = 336 bits -> 42 bytes
+        assert_eq!(wc.update(&up), 42);
+        // the flat equivalent pays 11 bits per index: 344 -> 43 bytes
+        assert_eq!(wc.flat(&up.flatten()), 43);
+        // single-bucket degenerate case matches the flat cost exactly
+        let flat = SparseVec::new(2048, (0..8).collect(), vec![1.0; 8]);
+        assert_eq!(wc.update(&SparseUpdate::single(flat.clone())), wc.flat(&flat));
+    }
+
+    #[test]
+    fn quantized_bucket_charges_the_packed_payload() {
+        let layout = GradLayout::from_sizes([("a".to_string(), 1024)]);
+        let mut up = SparseUpdate::zeros(&layout);
+        for i in 0..10u32 {
+            up.bucket_mut(0).push(i * 7, 0.1 * i as f32);
+        }
+        let mut rng = Rng::seed_from(1);
+        let (mut residual, mut codes) = (Vec::new(), Vec::new());
+        let (b, p) = up.bucket_payload_mut(0);
+        ValueCodec { bits: 4, levels: LevelKind::Uniform }.encode_bucket(
+            b,
+            &mut rng,
+            &mut p.value,
+            &mut residual,
+            &mut codes,
+        );
+        let wc = WireCost::paper();
+        // 10 entries * (4+10) bits = 140 -> 18 B, + 4 B scale header
+        assert_eq!(wc.update(&up), 22);
+        assert_eq!(wc.bucket(&up, 0), up.quant(0).unwrap().wire_bytes(10));
+    }
+
+    #[test]
+    fn raw_index_marker_charges_32_bits() {
+        let layout = GradLayout::from_sizes([("a".to_string(), 1024)]);
+        let mut up = SparseUpdate::zeros(&layout);
+        for i in 0..4u32 {
+            up.bucket_mut(0).push(i, 1.0);
+        }
+        let wc = WireCost::paper();
+        let packed = wc.update(&up); // 4 * 42 bits -> 21 bytes
+        assert_eq!(packed, 21);
+        up.payload_mut(0).raw_index = true;
+        // 4 * (32+32) bits -> 32 bytes
+        assert_eq!(wc.update(&up), 32);
+    }
+
+    #[test]
+    fn rice_bucket_pays_measured_bytes() {
+        let layout = GradLayout::from_sizes([("a".to_string(), 1 << 20)]);
+        let mut up = SparseUpdate::zeros(&layout);
+        let idx: Vec<u32> = (0..256u32).map(|i| i * 3).collect();
+        for &i in &idx {
+            up.bucket_mut(0).push(i, 1.0);
+        }
+        let wc = WireCost::paper();
+        let packed = wc.update(&up); // 256 * (32+20) bits
+        up.payload_mut(0).rice.encode_into(&idx);
+        let riced = wc.update(&up);
+        let rp = up.rice(0).unwrap();
+        assert_eq!(riced, 256 * 4 + rp.wire_bytes());
+        assert!(riced < packed, "clustered rice {riced} !< packed {packed}");
+        // empty bucket costs nothing under every codec
+        up.conform_to(&layout);
+        assert_eq!(wc.update(&up), 0);
+    }
+}

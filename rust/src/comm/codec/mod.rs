@@ -1,0 +1,394 @@
+//! `comm::codec` — the pluggable wire-codec stack (ISSUE 5 tentpole).
+//!
+//! Everything that turns a sparsified bucket into bytes-on-the-wire
+//! lives here, as two composable axes selected per parameter group by
+//! the policy keys `idx=` and `levels=` (plus the existing `bits=`
+//! width knob):
+//!
+//! | axis    | codec    | per-entry cost                 | notes |
+//! |---------|----------|--------------------------------|-------|
+//! | index   | `packed` | `ceil(log2 group_len)` bits    | default; the paper's §2 accounting |
+//! | index   | `raw`    | 32 bits (`u32`)                | the naive wire format (ablation) |
+//! | index   | `rice`   | measured Golomb–Rice bits      | delta-sorted gaps, per-bucket Rice parameter |
+//! | value   | f32      | 32 bits (or the link's width)  | default when `bits` is unset |
+//! | value   | `uniform`| `bits` bits + 4 B scale/bucket | offset-binary stochastic rounding (PR 4) |
+//! | value   | `nuq`    | `bits` bits + 4 B scale/bucket | NUQSGD-style exponential level table |
+//!
+//! The paper charges each transmitted entry "log J bits" for its index
+//! (§2) — an information bound, not a code.  "Understanding Top-k
+//! Sparsification" (arXiv 1911.08772) shows index bits dominate the
+//! payload at the paper's 0.1% sparsity regime, which is exactly where
+//! an entropy code beats the bound: top-k indices cluster (persistent
+//! coordinates under error feedback), so the delta-gap distribution is
+//! far from uniform and Golomb–Rice closes much of the gap.
+//!
+//! [`WireCost`] (see `cost`) is the ONE byte accountant: the ledger,
+//! the sweeps, `repro comm`, the benches and the packing-must-pay
+//! guard all route through it, so reported bytes are the bytes on the
+//! wire by construction.  With `idx`/`levels` unset everywhere the
+//! stack reproduces the PR 4 tree bit-for-bit — trajectories AND byte
+//! totals (pinned by `rust/tests/codec.rs`).
+
+mod cost;
+mod packed;
+mod rice;
+
+pub use cost::WireCost;
+pub use packed::{quant_levels, LevelKind, QuantPayload};
+pub use rice::RicePayload;
+
+use crate::sparse::SparseVec;
+use crate::util::rng::Rng;
+
+/// Per-entry index cost in bits under the bit-packed code:
+/// `ceil(log2 dim)` with the `dim >= 2` clamp (paper §2: "the index
+/// can be losslessly represented by log J bits").  The single source
+/// for every place the cost model meets the wire.
+pub fn index_bits(dim: usize) -> usize {
+    (usize::BITS - (dim.max(2) - 1).leading_zeros()) as usize
+}
+
+/// The index-codec axis of a group's wire stack.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum IndexCodec {
+    /// Bit-packed `ceil(log2 group_len)` bits per index — the paper's
+    /// §2 accounting and the default (bit-identical to the PR 4 tree).
+    #[default]
+    Packed,
+    /// Raw `u32` per index (32 bits) — the naive format, kept as an
+    /// ablation endpoint so the sweep can show what packing buys.
+    Raw,
+    /// Delta-sorted Golomb–Rice entropy code with a per-bucket Rice
+    /// parameter chosen from the gap distribution ([`RicePayload`]).
+    Rice,
+}
+
+impl IndexCodec {
+    pub fn name(&self) -> &'static str {
+        match self {
+            IndexCodec::Packed => "packed",
+            IndexCodec::Raw => "raw",
+            IndexCodec::Rice => "rice",
+        }
+    }
+
+    /// Parse the `idx=` policy value.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.trim() {
+            "packed" => Ok(IndexCodec::Packed),
+            "raw" => Ok(IndexCodec::Raw),
+            "rice" => Ok(IndexCodec::Rice),
+            other => Err(format!("unknown index codec '{other}' (packed|raw|rice)")),
+        }
+    }
+}
+
+/// The per-bucket wire state a [`crate::sparse::SparseUpdate`] carries:
+/// which codecs actually encoded this bucket this round.  Default
+/// (inactive value payload, inactive rice payload, packed indexing) is
+/// the raw-f32 / `log J` wire format — exactly the PR 4 bucket.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WirePayload {
+    /// packed low-bit value codes; inactive = raw f32 values
+    pub value: QuantPayload,
+    /// Golomb–Rice coded indices; inactive = no entropy code
+    pub rice: RicePayload,
+    /// raw-`u32` index accounting marker (`idx=raw`)
+    pub raw_index: bool,
+}
+
+impl WirePayload {
+    /// Deactivate everything, keeping buffer capacity (per-round
+    /// recycling in the trainer's update buffers).
+    pub fn clear(&mut self) {
+        self.value.clear();
+        self.rice.clear();
+        self.raw_index = false;
+    }
+
+    /// Whether any codec beyond the default raw-f32/`log J` format is
+    /// engaged on this bucket.
+    pub fn is_default(&self) -> bool {
+        !self.value.is_active() && !self.rice.is_active() && !self.raw_index
+    }
+}
+
+/// The value-codec axis: a bit width plus a level family.  Stateless —
+/// per-group schedule/RNG state lives with the caller (the layerwise
+/// wrapper), which hands in the rounding stream.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ValueCodec {
+    /// bits per transmitted value, 2..=16 (the packable range)
+    pub bits: usize,
+    /// level-table family (`levels=` policy key)
+    pub levels: LevelKind,
+}
+
+impl ValueCodec {
+    /// Stochastically round `bucket`'s values onto the codec's level
+    /// grid, replace them with their exact dequantized counterparts,
+    /// emit the packed codes + scale into `payload` and the per-entry
+    /// error into `residual` (aligned with the bucket's indices, for
+    /// the error-feedback fold).
+    ///
+    /// The packed payload is authoritative: every value written back
+    /// equals `payload.decode_value(i)` bit-for-bit, so server-side
+    /// decode reproduces the aggregation input exactly.  The uniform
+    /// family is the PR 4 `Quantizer::quantize_bucket_into` path moved
+    /// here unchanged (same float ops, same RNG draw discipline — one
+    /// uniform per entry unless the bucket is all-zero); the NUQ
+    /// family rounds between adjacent exponential levels
+    /// `scale * 2^(q - L)` instead of the linear grid.
+    pub fn encode_bucket(
+        &self,
+        bucket: &mut SparseVec,
+        rng: &mut Rng,
+        payload: &mut QuantPayload,
+        residual: &mut Vec<f32>,
+        codes_scratch: &mut Vec<u32>,
+    ) {
+        assert!((2..=16).contains(&self.bits), "packable bit width is 2..=16, got {}", self.bits);
+        let levels = quant_levels(self.bits);
+        let values = bucket.values_mut();
+        residual.clear();
+        codes_scratch.clear();
+        let max = values.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        match self.levels {
+            LevelKind::Uniform => {
+                let scale = if max == 0.0 { 1.0 } else { max / levels as f32 };
+                for v in values.iter_mut() {
+                    let x = (*v / scale).clamp(-(levels as f32), levels as f32);
+                    let lo = x.floor();
+                    let frac = x - lo;
+                    let q = if max != 0.0 && (rng.uniform() as f32) < frac { lo + 1.0 } else { lo };
+                    let code = (q as i64 + levels) as u32;
+                    let dv = (code as i64 - levels) as f32 * scale;
+                    residual.push(*v - dv);
+                    codes_scratch.push(code);
+                    *v = dv;
+                }
+                payload.encode_into(self.bits, scale, codes_scratch);
+            }
+            LevelKind::Nuq => {
+                // NUQSGD-style grid: magnitudes {0} ∪ {scale * 2^(q-L)
+                // for q in 1..=L}, stochastic rounding between adjacent
+                // levels (unbiased), sign folded offset-binary exactly
+                // like the uniform code space.
+                let scale = if max == 0.0 { 1.0 } else { max };
+                for v in values.iter_mut() {
+                    let q_mag: i64 = if max == 0.0 {
+                        0
+                    } else {
+                        let x = (v.abs() / scale) as f64; // in [0, 1]
+                        if x <= 0.0 {
+                            // keep one draw per entry: the stream
+                            // position must not depend on zero values
+                            let _ = rng.uniform();
+                            0
+                        } else {
+                            let e = x.log2().floor();
+                            let (qlo, lo, hi) = if e <= -(levels as f64) {
+                                // below the smallest nonzero level
+                                (0i64, 0.0f64, exp2i(1 - levels))
+                            } else {
+                                let qlo = ((levels as f64 + e) as i64).min(levels);
+                                (qlo, exp2i(qlo - levels), exp2i((qlo + 1 - levels).min(0)))
+                            };
+                            // hi == lo at the bucket max (x == 1) and
+                            // when both underflow: round down, but
+                            // still draw — the stream position must
+                            // not depend on the values
+                            let p = if hi > lo { (x - lo) / (hi - lo) } else { 0.0 };
+                            if rng.uniform() < p { (qlo + 1).min(levels) } else { qlo }
+                        }
+                    };
+                    let q = if *v < 0.0 { -q_mag } else { q_mag };
+                    let code = (q + levels) as u32;
+                    let dv = LevelKind::Nuq.decode(code, self.bits, scale);
+                    residual.push(*v - dv);
+                    codes_scratch.push(code);
+                    *v = dv;
+                }
+                payload.encode_with_levels(self.bits, scale, codes_scratch, LevelKind::Nuq);
+            }
+        }
+    }
+}
+
+/// `2^e` as f64 for (possibly very negative) integer exponents.
+fn exp2i(e: i64) -> f64 {
+    (2.0f64).powi(e.clamp(i32::MIN as i64, i32::MAX as i64) as i32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check;
+
+    #[test]
+    fn index_bits_clamps_and_rounds_up() {
+        assert_eq!(index_bits(2), 1);
+        assert_eq!(index_bits(1), 1, "dim < 2 clamps");
+        assert_eq!(index_bits(100), 7);
+        assert_eq!(index_bits(1 << 20), 20);
+        assert_eq!(index_bits((1 << 20) + 1), 21);
+    }
+
+    #[test]
+    fn index_codec_parse_roundtrip() {
+        for c in [IndexCodec::Packed, IndexCodec::Raw, IndexCodec::Rice] {
+            assert_eq!(IndexCodec::parse(c.name()).unwrap(), c);
+        }
+        assert!(IndexCodec::parse("huffman").is_err());
+        assert_eq!(IndexCodec::default(), IndexCodec::Packed);
+    }
+
+    #[test]
+    fn wire_payload_default_is_the_pr4_bucket() {
+        let p = WirePayload::default();
+        assert!(p.is_default());
+        assert!(!p.value.is_active());
+        assert!(!p.rice.is_active());
+        assert!(!p.raw_index);
+    }
+
+    #[test]
+    fn uniform_encode_decodes_bit_exact() {
+        check::forall("codec_uniform_decode", |rng, _| {
+            let n = check::arb_len(rng, 80);
+            let vals = check::arb_vec(rng, n);
+            let idx: Vec<u32> = (0..n as u32).collect();
+            let mut bucket = SparseVec::new(n.max(1), idx, vals.clone());
+            let bits = 2 + rng.below(15);
+            let vc = ValueCodec { bits, levels: LevelKind::Uniform };
+            let mut payload = QuantPayload::default();
+            let (mut residual, mut codes) = (Vec::new(), Vec::new());
+            vc.encode_bucket(&mut bucket, rng, &mut payload, &mut residual, &mut codes);
+            assert_eq!(payload.level_kind(), LevelKind::Uniform);
+            for i in 0..n {
+                assert_eq!(payload.decode_value(i), bucket.values()[i], "bits={bits} i={i}");
+                assert_eq!(residual[i], vals[i] - bucket.values()[i], "bits={bits} i={i}");
+            }
+        });
+    }
+
+    #[test]
+    fn nuq_encode_decodes_bit_exact_and_bounds_error() {
+        check::forall("codec_nuq_decode", |rng, _| {
+            let n = check::arb_len(rng, 80);
+            let vals = check::arb_vec(rng, n);
+            let idx: Vec<u32> = (0..n as u32).collect();
+            let mut bucket = SparseVec::new(n.max(1), idx, vals.clone());
+            let bits = 2 + rng.below(7); // NUQ's useful range
+            let vc = ValueCodec { bits, levels: LevelKind::Nuq };
+            let mut payload = QuantPayload::default();
+            let (mut residual, mut codes) = (Vec::new(), Vec::new());
+            vc.encode_bucket(&mut bucket, rng, &mut payload, &mut residual, &mut codes);
+            assert_eq!(payload.level_kind(), LevelKind::Nuq);
+            let scale = payload.scale();
+            for i in 0..n {
+                let dv = payload.decode_value(i);
+                assert_eq!(dv, bucket.values()[i], "bits={bits} i={i}");
+                assert_eq!(residual[i], vals[i] - dv, "bits={bits} i={i}");
+                // a decoded magnitude never exceeds the bucket max and
+                // the sign survives (or the value rounded to zero)
+                assert!(dv.abs() <= scale * 1.0001, "bits={bits} i={i}");
+                assert!(dv == 0.0 || dv.signum() == vals[i].signum(), "bits={bits} i={i}");
+                // rounding moves at most one grid step, and no step
+                // spans more than the full scale (coarsest at bits=2)
+                assert!(residual[i].abs() <= scale * 1.0001, "bits={bits} i={i}");
+            }
+        });
+    }
+
+    #[test]
+    fn uniform_zero_bucket_is_deterministic() {
+        // the documented stream contract the resume tests rely on:
+        // all-zero buckets must not consume the rounding stream
+        let vc = ValueCodec { bits: 4, levels: LevelKind::Uniform };
+        let mut rng = Rng::seed_from(8);
+        let before = rng.state();
+        let mut bucket = SparseVec::new(3, vec![0, 1, 2], vec![0.0; 3]);
+        let mut payload = QuantPayload::default();
+        let (mut residual, mut codes) = (Vec::new(), Vec::new());
+        vc.encode_bucket(&mut bucket, &mut rng, &mut payload, &mut residual, &mut codes);
+        assert_eq!(rng.state(), before, "zero buckets must not consume the stream");
+        assert_eq!(bucket.values(), &[0.0; 3]);
+        assert_eq!(payload.decode(), vec![0.0; 3]);
+    }
+
+    #[test]
+    fn uniform_residual_within_one_level() {
+        let vc = ValueCodec { bits: 4, levels: LevelKind::Uniform };
+        let mut rng = Rng::seed_from(7);
+        let vals = vec![0.9f32, -0.33, 0.05, 1.0, -1.0];
+        let mut bucket = SparseVec::new(5, (0..5).collect(), vals.clone());
+        let mut payload = QuantPayload::default();
+        let (mut residual, mut codes) = (Vec::new(), Vec::new());
+        vc.encode_bucket(&mut bucket, &mut rng, &mut payload, &mut residual, &mut codes);
+        let scale = payload.scale();
+        for r in &residual {
+            assert!(r.abs() <= scale * 1.0001, "{r} vs scale {scale}");
+        }
+    }
+
+    #[test]
+    fn nuq_zero_bucket_is_deterministic() {
+        let vc = ValueCodec { bits: 4, levels: LevelKind::Nuq };
+        let mut rng = Rng::seed_from(8);
+        let before = rng.state();
+        let mut bucket = SparseVec::new(3, vec![0, 1, 2], vec![0.0; 3]);
+        let mut payload = QuantPayload::default();
+        let (mut residual, mut codes) = (Vec::new(), Vec::new());
+        vc.encode_bucket(&mut bucket, &mut rng, &mut payload, &mut residual, &mut codes);
+        assert_eq!(rng.state(), before, "zero buckets must not consume the stream");
+        assert_eq!(bucket.values(), &[0.0; 3]);
+        assert_eq!(payload.decode(), vec![0.0; 3]);
+    }
+
+    #[test]
+    fn nuq_is_roughly_unbiased() {
+        let vc = ValueCodec { bits: 4, levels: LevelKind::Nuq };
+        let mut rng = Rng::seed_from(1);
+        let x = 0.37f32;
+        let n = 20_000;
+        let mut sum = 0.0f64;
+        for _ in 0..n {
+            let mut bucket = SparseVec::new(2, vec![0, 1], vec![x, 1.0]); // 1.0 sets the scale
+            let mut payload = QuantPayload::default();
+            let (mut residual, mut codes) = (Vec::new(), Vec::new());
+            vc.encode_bucket(&mut bucket, &mut rng, &mut payload, &mut residual, &mut codes);
+            sum += bucket.values()[0] as f64;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - x as f64).abs() < 0.01, "{mean}");
+    }
+
+    #[test]
+    fn nuq_resolves_small_values_better_than_uniform() {
+        // the point of the exponential grid: a value 1000x smaller
+        // than the max lands within one exponential step (< 100%
+        // relative error), while the 8-bit uniform grid can only round
+        // it to 0 (100% error) or a whole linear level (~690%)
+        let vals = vec![1.0f32, 0.001];
+        let mk = |levels| {
+            let mut bucket = SparseVec::new(2, vec![0, 1], vals.clone());
+            let mut rng = Rng::seed_from(3);
+            let mut payload = QuantPayload::default();
+            let (mut residual, mut codes) = (Vec::new(), Vec::new());
+            ValueCodec { bits: 8, levels }.encode_bucket(
+                &mut bucket,
+                &mut rng,
+                &mut payload,
+                &mut residual,
+                &mut codes,
+            );
+            bucket.values()[1]
+        };
+        let nuq = mk(LevelKind::Nuq);
+        let uni = mk(LevelKind::Uniform);
+        let rel = |v: f32| (v - 0.001).abs() / 0.001;
+        assert!(rel(nuq) < rel(uni), "nuq {nuq} vs uniform {uni}");
+        assert!(rel(nuq) < 1.0, "{nuq}");
+    }
+}

@@ -1,20 +1,78 @@
 //! `QuantPayload`: the packed low-bit value payload of one quantized
 //! bucket — what actually crosses the wire when a group's policy sets
-//! a `bits` override.
+//! a `bits` override.  Rehomed from `sparse/packed.rs` into the codec
+//! stack (ISSUE 5); the packing itself is unchanged, but the payload
+//! now carries its level family ([`LevelKind`], the `levels=` policy
+//! axis) so decode can dispatch between the uniform offset-binary grid
+//! and the NUQSGD-style exponential grid.
 //!
-//! Codes are offset-binary: a stochastic-rounding level `q` in
-//! `[-L, +L]` (with `L = 2^(bits-1) - 1`) is stored as `q + L`, which
-//! spans `[0, 2L]` and always fits in `bits` bits (2 <= bits <= 16).
-//! Codes are bit-packed LSB-first into `u32` words; the shared `f32`
-//! scale travels once per bucket.  Dequantization is exact and
-//! deterministic — `(code - L) * scale` reproduces the worker-side
-//! lossy values bit-for-bit, so the server can aggregate from the
-//! packed payload alone (pinned by `rust/tests/quantized.rs`).
+//! Codes are offset-binary: a level index `q` in `[-L, +L]` (with
+//! `L = 2^(bits-1) - 1`) is stored as `q + L`, which spans `[0, 2L]`
+//! and always fits in `bits` bits (2 <= bits <= 16).  Codes are
+//! bit-packed LSB-first into `u32` words; the shared `f32` scale
+//! travels once per bucket.  Dequantization is exact and deterministic
+//! — the level map reproduces the worker-side lossy values
+//! bit-for-bit, so the server can aggregate from the packed payload
+//! alone (pinned by `rust/tests/quantized.rs` + `rust/tests/codec.rs`).
 //!
-//! The *wire accounting* is the single source of truth for the ledger:
-//! [`QuantPayload::wire_bytes`] = `ceil(n*(bits + index_bits)/8)` plus
-//! the 4-byte scale header, mirroring the paper's §2 cost model with
-//! `bits` in place of the 32-bit value width.
+//! Wire accounting: [`QuantPayload::wire_bytes`] =
+//! `ceil(n*(bits + index_bits)/8)` plus the 4-byte scale header — the
+//! value-side term [`super::WireCost`] charges.  The level family
+//! travels in the run manifest (it is per-group configuration, not
+//! per-message data), so it adds no bytes.
+
+/// The value level-table family (`levels=` policy key).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum LevelKind {
+    /// Linear grid `q * scale` for `q` in `[-L, L]` — the PR 4
+    /// offset-binary format and the default (bit-identical).
+    #[default]
+    Uniform,
+    /// NUQSGD-style exponential grid: magnitudes
+    /// `{0} ∪ {scale * 2^(q - L) : q in 1..=L}` — spends the level
+    /// budget logarithmically, resolving small values a uniform grid
+    /// rounds to zero (arXiv 1908.06077's argument for nonuniform
+    /// levels under heavy-tailed gradient magnitudes).
+    Nuq,
+}
+
+impl LevelKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            LevelKind::Uniform => "uniform",
+            LevelKind::Nuq => "nuq",
+        }
+    }
+
+    /// Parse the `levels=` policy value.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.trim() {
+            "uniform" => Ok(LevelKind::Uniform),
+            "nuq" => Ok(LevelKind::Nuq),
+            other => Err(format!("unknown value levels '{other}' (uniform|nuq)")),
+        }
+    }
+
+    /// Dequantize one offset-binary `code` at `bits`/`scale` under
+    /// this level family.  This is THE level map: both the encoder
+    /// (writing back lossy values) and the payload decode route
+    /// through it, so they cannot disagree.
+    pub fn decode(&self, code: u32, bits: usize, scale: f32) -> f32 {
+        let levels = quant_levels(bits);
+        let q = code as i64 - levels;
+        match self {
+            LevelKind::Uniform => q as f32 * scale,
+            LevelKind::Nuq => {
+                if q == 0 {
+                    0.0
+                } else {
+                    let mag = scale * (2.0f32).powi((q.abs() - levels) as i32);
+                    if q < 0 { -mag } else { mag }
+                }
+            }
+        }
+    }
+}
 
 /// Packed quantized values for one bucket.  `bits == 0` means the slot
 /// is inactive (the bucket travels as raw f32, the pre-quantization
@@ -24,6 +82,7 @@ pub struct QuantPayload {
     bits: usize,
     scale: f32,
     len: usize,
+    levels: LevelKind,
     words: Vec<u32>,
 }
 
@@ -47,6 +106,11 @@ impl QuantPayload {
         self.scale
     }
 
+    /// The level family this payload's codes decode under.
+    pub fn level_kind(&self) -> LevelKind {
+        self.levels
+    }
+
     /// Number of packed codes.
     pub fn len(&self) -> usize {
         self.len
@@ -62,48 +126,51 @@ impl QuantPayload {
         self.bits = 0;
         self.scale = 0.0;
         self.len = 0;
+        self.levels = LevelKind::Uniform;
         self.words.clear();
     }
 
-    /// Pack `codes` at `bits` per code with the shared `scale`,
-    /// recycling the word buffer.  Every code must fit in `bits` bits.
+    /// Pack `codes` at `bits` per code with the shared `scale` under
+    /// the uniform level family, recycling the word buffer.  Every
+    /// code must fit in `bits` bits.
     pub fn encode_into(&mut self, bits: usize, scale: f32, codes: &[u32]) {
+        self.encode_with_levels(bits, scale, codes, LevelKind::Uniform);
+    }
+
+    /// [`Self::encode_into`] with an explicit level family.
+    pub fn encode_with_levels(
+        &mut self,
+        bits: usize,
+        scale: f32,
+        codes: &[u32],
+        levels: LevelKind,
+    ) {
         assert!((2..=16).contains(&bits), "packable bit width is 2..=16, got {bits}");
         let mask = (1u32 << bits) - 1;
         self.bits = bits;
         self.scale = scale;
         self.len = codes.len();
+        self.levels = levels;
         self.words.clear();
         self.words.resize((codes.len() * bits).div_ceil(32), 0);
         for (i, &code) in codes.iter().enumerate() {
             debug_assert_eq!(code & mask, code, "code {code} exceeds {bits} bits");
-            let bitpos = i * bits;
-            let (w, off) = (bitpos / 32, bitpos % 32);
-            self.words[w] |= code << off;
-            if off + bits > 32 {
-                self.words[w + 1] |= code >> (32 - off);
-            }
+            super::rice::put_bits(&mut self.words, i * bits, code as u64, bits);
         }
     }
 
     /// Extract code `i`.
     pub fn code(&self, i: usize) -> u32 {
         assert!(i < self.len, "code index {i} out of {}", self.len);
-        let mask = (1u32 << self.bits) - 1;
-        let bitpos = i * self.bits;
-        let (w, off) = (bitpos / 32, bitpos % 32);
-        let mut code = self.words[w] >> off;
-        if off + self.bits > 32 {
-            code |= self.words[w + 1] << (32 - off);
-        }
-        code & mask
+        super::rice::get_bits(&self.words, i * self.bits, self.bits)
     }
 
-    /// Dequantize code `i`: `(code - L) * scale`.  This is exactly the
-    /// f32 the worker wrote into the bucket, so server-side decode
-    /// reproduces the transmitted values bit-for-bit.
+    /// Dequantize code `i` under the payload's level family.  This is
+    /// exactly the f32 the worker wrote into the bucket, so
+    /// server-side decode reproduces the transmitted values
+    /// bit-for-bit.
     pub fn decode_value(&self, i: usize) -> f32 {
-        (self.code(i) as i64 - quant_levels(self.bits)) as f32 * self.scale
+        self.levels.decode(self.code(i), self.bits, self.scale)
     }
 
     /// Dequantize the whole payload into a fresh vector.
@@ -158,18 +225,30 @@ mod tests {
         // bits=4 -> L=7; codes 0, 7, 14 -> -7, 0, +7 levels
         p.encode_into(4, 0.25, &[0, 7, 14]);
         assert_eq!(p.decode(), vec![-7.0 * 0.25, 0.0, 7.0 * 0.25]);
+        assert_eq!(p.level_kind(), LevelKind::Uniform);
+    }
+
+    #[test]
+    fn nuq_decode_is_exponential() {
+        let mut p = QuantPayload::default();
+        // bits=4 -> L=7; codes 7 -> 0, 14 -> +scale*2^0, 13 -> +scale/2,
+        // 8 -> +scale*2^-6, 0 -> -scale*2^0
+        p.encode_with_levels(4, 2.0, &[7, 14, 13, 8, 0], LevelKind::Nuq);
+        assert_eq!(p.level_kind(), LevelKind::Nuq);
+        assert_eq!(p.decode(), vec![0.0, 2.0, 1.0, 2.0 * (0.5f32).powi(6), -2.0]);
     }
 
     #[test]
     fn clear_deactivates_and_recycles() {
         let mut p = QuantPayload::default();
         assert!(!p.is_active());
-        p.encode_into(8, 1.0, &[1, 2, 3]);
+        p.encode_with_levels(8, 1.0, &[1, 2, 3], LevelKind::Nuq);
         assert!(p.is_active());
         let cap = p.words.capacity();
         p.clear();
         assert!(!p.is_active());
         assert_eq!(p.len(), 0);
+        assert_eq!(p.level_kind(), LevelKind::Uniform, "levels reset with the slot");
         assert_eq!(p.words.capacity(), cap, "buffer capacity survives clear");
     }
 
@@ -190,6 +269,15 @@ mod tests {
         assert_eq!(quant_levels(4), 7);
         assert_eq!(quant_levels(8), 127);
         assert_eq!(quant_levels(16), 32767);
+    }
+
+    #[test]
+    fn level_kind_parse_roundtrip() {
+        for k in [LevelKind::Uniform, LevelKind::Nuq] {
+            assert_eq!(LevelKind::parse(k.name()).unwrap(), k);
+        }
+        assert!(LevelKind::parse("log").is_err());
+        assert_eq!(LevelKind::default(), LevelKind::Uniform);
     }
 
     #[test]

@@ -56,13 +56,14 @@ impl Ledger {
     }
 
     /// Record one worker's bucketed upload for the current round.
-    /// Quantized buckets are charged their true packed wire size
-    /// (`bits` value bits + scale header), so byte totals under a
-    /// `bits` policy report honest post-quantization upload volume.
+    /// Every bucket is charged by `codec::WireCost` — the one wire
+    /// accountant — so encoded buckets (packed values, Rice-coded
+    /// indices) report honest post-encoding upload volume.
     pub fn record_update(&mut self, up: &SparseUpdate) {
+        let wire = self.cost.wire();
         let mut total = 0usize;
         for (g, bucket) in up.buckets().iter().enumerate() {
-            let bytes = self.cost.bucket_bytes(up, g);
+            let bytes = wire.bucket(up, g);
             total += bytes;
             if let Some(acc) = self.group_bytes.get_mut(g) {
                 *acc += bytes;
@@ -219,7 +220,7 @@ mod tests {
 
     #[test]
     fn mixed_bit_widths_account_exact_packed_bytes() {
-        use crate::comm::Quantizer;
+        use crate::comm::codec::{LevelKind, ValueCodec};
         use crate::util::rng::Rng;
         let layout = GradLayout::from_sizes([
             ("q4".to_string(), 64),
@@ -238,7 +239,8 @@ mod tests {
         let (mut residual, mut codes) = (Vec::new(), Vec::new());
         for (g, bits) in [(0usize, 4usize), (1, 8)] {
             let (b, q) = up.bucket_quant_mut(g);
-            Quantizer::new(bits).quantize_bucket_into(b, &mut rng, q, &mut residual, &mut codes);
+            let vc = ValueCodec { bits, levels: LevelKind::Uniform };
+            vc.encode_bucket(b, &mut rng, q, &mut residual, &mut codes);
         }
         l.record_update(&up);
         l.close_round(0, 192, 1);
@@ -256,6 +258,35 @@ mod tests {
             totals.iter().map(|(_, b)| b).sum::<usize>()
         );
         assert_eq!(l.rounds()[0].upload_bytes, l.cost.update_bytes_grouped(&up));
+    }
+
+    #[test]
+    fn rice_coded_buckets_account_measured_bytes() {
+        let layout =
+            GradLayout::from_sizes([("conv".to_string(), 1 << 12), ("fc".to_string(), 64)]);
+        let mut l = Ledger::new(CostModel::default());
+        l.set_layout(&layout);
+        let mut up = SparseUpdate::zeros(&layout);
+        let idx: Vec<u32> = (0..32u32).map(|i| i * 2).collect();
+        for &i in &idx {
+            up.bucket_mut(0).push(i, 1.0);
+        }
+        up.bucket_mut(1).push(9, -1.0);
+        up.payload_mut(0).rice.encode_into(&idx);
+        l.record_update(&up);
+        l.close_round(0, (1 << 12) + 64, 1);
+        let totals = l.group_upload_totals();
+        // the rice group pays raw values + the measured index stream
+        let rp = up.rice(0).unwrap();
+        assert_eq!(totals[0].1, 32 * 4 + rp.wire_bytes());
+        // clustered indices: the entropy code beats the 12-bit bound
+        assert!(totals[0].1 < l.cost.update_bytes(up.bucket(0)), "{totals:?}");
+        // the un-coded group keeps the packed log J accounting
+        assert_eq!(totals[1].1, l.cost.update_bytes(up.bucket(1)));
+        assert_eq!(
+            l.rounds()[0].upload_bytes,
+            totals.iter().map(|(_, b)| b).sum::<usize>()
+        );
     }
 
     #[test]

@@ -11,10 +11,12 @@
 //! benches can report the paper's motivating traffic arithmetic
 //! (1.7e9 symbols/epoch for ResNet-110, §1).
 
+pub mod codec;
 mod ledger;
 pub mod quantize;
 mod transport;
 
+pub use codec::WireCost;
 pub use ledger::{Ledger, RoundTraffic};
 pub use quantize::Quantizer;
 pub use transport::{Endpoint, Network};
@@ -84,44 +86,31 @@ impl CostModel {
         Ok(c)
     }
 
-    /// Wire bytes of a sparse update: nnz * (value_bits + ceil(log2 J)) / 8.
+    /// This link's byte accountant — `comm::codec::WireCost` is THE
+    /// single accountant of the wire-codec stack; every byte figure
+    /// (ledger, sweeps, comm table, benches) routes through it.
+    pub fn wire(&self) -> codec::WireCost {
+        codec::WireCost::new(self.value_bits)
+    }
+
+    /// Wire bytes of a flat sparse update:
+    /// `ceil(nnz * (value_bits + ceil(log2 J)) / 8)`.
     pub fn update_bytes(&self, sv: &SparseVec) -> usize {
-        (sv.nnz() * (self.value_bits + crate::sparse::index_bits(sv.dim()))).div_ceil(8)
-    }
-
-    /// Wire bytes of a quantized bucket: the packed payload's own
-    /// accounting (`bits` value bits + per-group index bits per entry,
-    /// plus the 4-byte scale header).  Exactly what
-    /// `QuantPayload::wire_bytes` reports — the ledger and the payload
-    /// can never disagree.
-    pub fn update_bytes_packed(&self, sv: &SparseVec, q: &crate::sparse::QuantPayload) -> usize {
-        debug_assert_eq!(sv.nnz(), q.len(), "payload/bucket entry mismatch");
-        q.wire_bytes(crate::sparse::index_bits(sv.dim()))
-    }
-
-    /// Wire bytes of bucket `g` of a bucketed update: packed
-    /// accounting when the bucket carries a payload, raw f32 cost
-    /// otherwise.  The ONE dispatch point between the two accountants
-    /// — the ledger and [`Self::update_bytes_grouped`] both route
-    /// through here, so they cannot disagree with the payload.
-    pub fn bucket_bytes(&self, up: &SparseUpdate, g: usize) -> usize {
-        match up.quant(g) {
-            Some(q) => self.update_bytes_packed(up.bucket(g), q),
-            None => self.update_bytes(up.bucket(g)),
-        }
+        self.wire().flat(sv)
     }
 
     /// Wire bytes of a bucketed update: each bucket pays its own
-    /// (smaller) per-group index width, and quantized buckets pay
-    /// their packed value width.  The single-bucket degenerate case
-    /// equals [`Self::update_bytes`] on the flat vector.
+    /// (smaller) per-group index width under whatever codec stack
+    /// encoded it (see [`codec::WireCost::bucket`]).  The
+    /// single-bucket degenerate case with default codecs equals
+    /// [`Self::update_bytes`] on the flat vector.
     pub fn update_bytes_grouped(&self, up: &SparseUpdate) -> usize {
-        (0..up.num_buckets()).map(|g| self.bucket_bytes(up, g)).sum()
+        self.wire().update(up)
     }
 
     /// Wire bytes of the dense broadcast g^t (no indices needed).
     pub fn broadcast_bytes(&self, dim: usize) -> usize {
-        (dim * self.value_bits).div_ceil(8)
+        self.wire().broadcast(dim)
     }
 
     /// Simulated transfer time of a message of `bytes`.

@@ -1,15 +1,20 @@
-//! Value quantization composing with sparsification: the transmitted
-//! k values are quantized to `bits` via scaled stochastic rounding
-//! (unbiased), shrinking the per-entry payload from 32 bits to
-//! `bits` + shared 32-bit scale per message.
+//! Flat value quantization composing with sparsification: the
+//! transmitted k values are quantized to `bits` via scaled stochastic
+//! rounding (unbiased), shrinking the per-entry payload from 32 bits
+//! to `bits` + shared 32-bit scale per message.
 //!
 //! This is the compression axis orthogonal to sparsity (the paper's
 //! cost model footnote: value bits + index bits); the `CostModel`
 //! `value_bits` field accounts for it, and the quantization error
 //! feeds back through the sparsifier's error accumulator when used
-//! via [`quantize_update`] at the worker boundary.
+//! via [`Quantizer::quantize_update`] at the worker boundary.
+//!
+//! The PACKED per-bucket path (the layer-wise `bits` policy) lives in
+//! `comm::codec` ([`crate::comm::codec::ValueCodec::encode_bucket`]):
+//! this module keeps only the flat dequantized-values API used by the
+//! baseline ablations.
 
-use crate::sparse::{quant_levels, QuantPayload, SparseVec};
+use crate::sparse::SparseVec;
 use crate::util::rng::Rng;
 
 /// Symmetric linear quantizer with stochastic rounding.
@@ -45,49 +50,6 @@ impl Quantizer {
             *v = q * scale;
         }
         scale
-    }
-
-    /// The packed-wire path (layer-wise quantized transmission):
-    /// stochastically round `bucket`'s values, replace them with their
-    /// exact dequantized counterparts, emit the packed codes + scale
-    /// into `payload` and the per-entry error into `residual` (aligned
-    /// with the bucket's indices, for the error-feedback fold).
-    ///
-    /// The packed payload is authoritative: every value written back
-    /// equals `payload.decode_value(i)` bit-for-bit, so server-side
-    /// decode reproduces the aggregation input exactly.  Codes are
-    /// clamped into the representable `[-L, L]` level range before
-    /// rounding (the scale maps max|v| to L, so only float round-off
-    /// at the extremes can touch the clamp).
-    ///
-    /// Requires `2 <= bits <= 16`; callers gate 32-bit passthrough.
-    pub fn quantize_bucket_into(
-        &self,
-        bucket: &mut SparseVec,
-        rng: &mut Rng,
-        payload: &mut QuantPayload,
-        residual: &mut Vec<f32>,
-        codes_scratch: &mut Vec<u32>,
-    ) {
-        assert!((2..=16).contains(&self.bits), "packed quantization needs 2..=16 bits");
-        let levels = quant_levels(self.bits);
-        let values = bucket.values_mut();
-        residual.clear();
-        codes_scratch.clear();
-        let max = values.iter().fold(0.0f32, |m, v| m.max(v.abs()));
-        let scale = if max == 0.0 { 1.0 } else { max / levels as f32 };
-        for v in values.iter_mut() {
-            let x = (*v / scale).clamp(-(levels as f32), levels as f32);
-            let lo = x.floor();
-            let frac = x - lo;
-            let q = if max != 0.0 && (rng.uniform() as f32) < frac { lo + 1.0 } else { lo };
-            let code = (q as i64 + levels) as u32;
-            let dv = (code as i64 - levels) as f32 * scale;
-            residual.push(*v - dv);
-            codes_scratch.push(code);
-            *v = dv;
-        }
-        payload.encode_into(self.bits, scale, codes_scratch);
     }
 
     /// Quantize a sparse update's values; the returned SparseVec holds
@@ -170,60 +132,6 @@ mod tests {
             assert_eq!(qsv.values()[i] + residual[i], sv.values()[i]);
         }
         assert_eq!(qsv.indices(), sv.indices());
-    }
-
-    #[test]
-    fn packed_bucket_decode_matches_written_values() {
-        check::forall("quant_bucket_decode", |rng, _| {
-            let n = check::arb_len(rng, 80);
-            let vals = check::arb_vec(rng, n);
-            let idx: Vec<u32> = (0..n as u32).collect();
-            let mut bucket = SparseVec::new(n.max(1), idx, vals.clone());
-            let bits = 2 + rng.below(15);
-            let q = Quantizer::new(bits);
-            let mut payload = QuantPayload::default();
-            let (mut residual, mut codes) = (Vec::new(), Vec::new());
-            q.quantize_bucket_into(&mut bucket, rng, &mut payload, &mut residual, &mut codes);
-            assert_eq!(payload.bits(), bits);
-            assert_eq!(payload.len(), n);
-            for i in 0..n {
-                // the payload IS the wire format: decode reproduces the
-                // bucket's (lossy) values bit-for-bit ...
-                assert_eq!(payload.decode_value(i), bucket.values()[i], "bits={bits} i={i}");
-                // ... and the residual is exactly orig - dequantized
-                // (the same float op the EF fold receives)
-                assert_eq!(residual[i], vals[i] - bucket.values()[i], "bits={bits} i={i}");
-            }
-        });
-    }
-
-    #[test]
-    fn packed_bucket_error_within_one_level() {
-        let q = Quantizer::new(4);
-        let mut rng = Rng::seed_from(7);
-        let vals = vec![0.9f32, -0.33, 0.05, 1.0, -1.0];
-        let mut bucket = SparseVec::new(5, (0..5).collect(), vals.clone());
-        let mut payload = QuantPayload::default();
-        let (mut residual, mut codes) = (Vec::new(), Vec::new());
-        q.quantize_bucket_into(&mut bucket, &mut rng, &mut payload, &mut residual, &mut codes);
-        let scale = payload.scale();
-        for r in &residual {
-            assert!(r.abs() <= scale * 1.0001, "{r} vs scale {scale}");
-        }
-    }
-
-    #[test]
-    fn packed_bucket_all_zero_is_deterministic() {
-        let q = Quantizer::new(4);
-        let mut rng = Rng::seed_from(8);
-        let before = rng.state();
-        let mut bucket = SparseVec::new(3, vec![0, 1, 2], vec![0.0; 3]);
-        let mut payload = QuantPayload::default();
-        let (mut residual, mut codes) = (Vec::new(), Vec::new());
-        q.quantize_bucket_into(&mut bucket, &mut rng, &mut payload, &mut residual, &mut codes);
-        assert_eq!(rng.state(), before, "zero buckets must not consume the stream");
-        assert_eq!(bucket.values(), &[0.0; 3]);
-        assert_eq!(payload.decode(), vec![0.0; 3]);
     }
 
     #[test]

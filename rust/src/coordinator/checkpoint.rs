@@ -198,14 +198,20 @@ fn encode_state(out: &mut Vec<u8>, st: &SparsifierState) {
             out.push(gauss_spare.is_some() as u8);
             out.extend_from_slice(&gauss_spare.unwrap_or(0.0).to_le_bytes());
         }
-        SparsifierState::Quantized { inner, rng, gauss_spare } => {
-            out.push(6);
+        SparsifierState::Quantized { inner, rng, gauss_spare, auto_bits } => {
+            // tag 6 = scheduled width (byte-identical to the PR 4
+            // format, so old checkpoints keep loading); tag 7 adds the
+            // residual-steered live width (`bits=auto`)
+            out.push(if auto_bits.is_some() { 7 } else { 6 });
             encode_state(out, inner);
             for word in rng {
                 out.extend_from_slice(&word.to_le_bytes());
             }
             out.push(gauss_spare.is_some() as u8);
             out.extend_from_slice(&gauss_spare.unwrap_or(0.0).to_le_bytes());
+            if let Some(b) = auto_bits {
+                put_u32(out, *b);
+            }
         }
     }
 }
@@ -292,7 +298,7 @@ impl<'a> Cur<'a> {
                 let spare = self.f64()?;
                 SparsifierState::EfRng { ef, rng, gauss_spare: has_spare.then_some(spare) }
             }
-            6 => {
+            t @ (6 | 7) => {
                 // a quantizing group wraps exactly one leaf family
                 // state; deeper nesting means a corrupt stream
                 if depth > 2 {
@@ -308,7 +314,13 @@ impl<'a> Cur<'a> {
                 let rng = [self.u64()?, self.u64()?, self.u64()?, self.u64()?];
                 let has_spare = self.u8()? != 0;
                 let spare = self.f64()?;
-                SparsifierState::Quantized { inner, rng, gauss_spare: has_spare.then_some(spare) }
+                let auto_bits = if t == 7 { Some(self.u32()?) } else { None };
+                SparsifierState::Quantized {
+                    inner,
+                    rng,
+                    gauss_spare: has_spare.then_some(spare),
+                    auto_bits,
+                }
             }
             t => bail!("unknown resume-state tag {t}"),
         })
@@ -414,11 +426,21 @@ mod tests {
                     inner: Box::new(SparsifierState::Ef(ef.clone())),
                     rng: [2, 4, 6, 8],
                     gauss_spare: None,
+                    auto_bits: None,
                 }]),
                 SparsifierState::Quantized {
                     inner: Box::new(SparsifierState::Dgc { vel: vec![0.5], acc: vec![1.5] }),
                     rng: [u64::MAX, 0, 1, 2],
                     gauss_spare: Some(0.25),
+                    auto_bits: None,
+                },
+                // residual-steered width (ISSUE 5): the live auto
+                // width rides tag 7
+                SparsifierState::Quantized {
+                    inner: Box::new(SparsifierState::Ef(ef.clone())),
+                    rng: [3, 5, 7, 9],
+                    gauss_spare: None,
+                    auto_bits: Some(5),
                 },
             ],
         };

@@ -102,6 +102,8 @@ impl Trainer {
         let shards = sp.group_shards();
         let bits = sp.group_value_bits();
         let bits_end = sp.group_value_bits_end();
+        let idx_codecs = sp.group_index_codecs();
+        let levels = sp.group_value_levels();
         let layout = w0.layout();
         let resolved: Vec<Json> = layout
             .groups()
@@ -121,6 +123,8 @@ impl Trainer {
                     ("k", budgets.get(g).copied().unwrap_or(0).into()),
                     ("shards", shards.get(g).copied().unwrap_or(1).into()),
                     ("bits", b0.into()),
+                    ("idx", idx_codecs.get(g).copied().unwrap_or("packed").into()),
+                    ("levels", levels.get(g).copied().unwrap_or("f32").into()),
                     ("eta_scale", (eta as f64).into()),
                 ]);
                 // scheduled widths: also echo where the schedule lands

@@ -193,6 +193,53 @@ pub fn bits_sweep(s: f64, iters: usize, seed: u64) -> Vec<HeteroRow> {
     rows
 }
 
+/// ISSUE 5 protocol — accuracy vs TRUE wire bytes across the codec
+/// matrix (EXPERIMENTS.md §Compression): the layer-wise RegTop-k stack
+/// at one budget, sweeping the index codec (packed `log J` / raw u32 /
+/// Golomb–Rice) against the value codec (raw f32 / uniform@4 / nuq@4)
+/// plus the residual-steered `auto:4..8` width.  Same data, seed and
+/// budget per row; byte columns come from the ledger, which charges
+/// whatever each codec actually put on the wire.
+pub fn codec_sweep(s: f64, iters: usize, seed: u64) -> Vec<HeteroRow> {
+    let params = sweep_params(8);
+    let problem = generate(params, seed);
+    let k = ((s * params.dim as f64).round() as usize).max(1);
+    // one bucket over the whole testbed: per-bucket codec headers
+    // (Rice parameter, quantizer scale) amortize over all k entries,
+    // so the bound-vs-code gap stays visible at the testbed's size —
+    // on the 4-layer layout the 6-element bias buckets would drown
+    // the entropy code in headers (an honest but uninteresting row)
+    let base = TrainConfig {
+        workers: params.workers,
+        eta: 0.02,
+        sparsifier: SparsifierKind::RegTopK { k, mu: 0.5, q: 1.0 },
+        eval_every: 1,
+        groups: Some(GradLayout::single(params.dim)),
+        budget: Some(BudgetPolicy::Global { k }),
+        ..TrainConfig::default()
+    };
+    let variants: [(&str, &str); 8] = [
+        ("packed/f32", ""),
+        ("raw/f32", "*=:idx=raw"),
+        ("rice/f32", "*=:idx=rice"),
+        ("packed/uniform@4", "*=:bits=4"),
+        ("rice/uniform@4", "*=:bits=4,idx=rice"),
+        ("packed/nuq@4", "*=:bits=4,levels=nuq"),
+        ("rice/nuq@4", "*=:bits=4,idx=rice,levels=nuq"),
+        ("auto:4..8", "*=:bits=auto:4..8"),
+    ];
+    variants
+        .iter()
+        .map(|(name, spec)| {
+            let mut cfg = base.clone();
+            if !spec.is_empty() {
+                cfg.policy = Some(PolicyTable::parse(spec).expect("codec policy spec"));
+            }
+            sweep_row(name, &cfg, &problem, iters)
+        })
+        .collect()
+}
+
 /// Abl 4 — approximate top-k: (oversample, mean recall) over random
 /// Gaussian vectors at the Fig. 3 scale.
 pub fn approx_recall_sweep(oversamples: &[usize], j: usize, k: usize, trials: usize) -> Vec<(usize, f64)> {
@@ -260,6 +307,40 @@ mod tests {
         let off = rows[0].final_gap;
         let q4 = rows.iter().find(|r| r.name == "bits=4").unwrap().final_gap;
         assert!(q4 < 6.0 * off.max(0.05), "q4 {q4} vs off {off}");
+    }
+
+    #[test]
+    fn codec_sweep_orders_wire_bytes() {
+        let rows = codec_sweep(0.2, 120, 7);
+        assert_eq!(rows.len(), 8);
+        let by = |name: &str| rows.iter().find(|r| r.name == name).unwrap();
+        for r in &rows {
+            assert!(r.final_gap.is_finite() && r.final_gap >= 0.0, "{r:?}");
+            assert!(r.bytes_per_round > 0, "{r:?}");
+        }
+        // index axis at fixed values: raw u32 > packed log J > rice
+        assert!(by("raw/f32").bytes_per_round > by("packed/f32").bytes_per_round);
+        assert!(by("rice/f32").bytes_per_round < by("packed/f32").bytes_per_round);
+        // value axis at fixed index codec: 4-bit packing shrinks the
+        // wire, and nuq packs the same widths as uniform (same bytes)
+        assert!(by("packed/uniform@4").bytes_per_round < by("packed/f32").bytes_per_round);
+        assert_eq!(
+            by("packed/nuq@4").bytes_per_round,
+            by("packed/uniform@4").bytes_per_round
+        );
+        // the axes compose: rice beats packed at 4-bit values too, for
+        // either level family
+        assert!(by("rice/uniform@4").bytes_per_round < by("packed/uniform@4").bytes_per_round);
+        assert!(by("rice/nuq@4").bytes_per_round < by("packed/nuq@4").bytes_per_round);
+        // the residual-steered width stays well under the raw wire
+        assert!(by("auto:4..8").bytes_per_round < by("packed/f32").bytes_per_round);
+        // every codec path still converges near the baseline
+        let base = by("packed/f32").final_gap;
+        for r in &rows {
+            assert!(r.final_gap < 6.0 * base.max(0.05), "{r:?} vs base {base}");
+        }
+        // identical budgets: entry counts match across the matrix
+        assert!(rows.iter().all(|r| r.entries_per_round == rows[0].entries_per_round));
     }
 
     #[test]

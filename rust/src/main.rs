@@ -10,7 +10,7 @@
 //!                                      artifact's real per-layer layout;
 //!                                      degrades to the linreg testbed
 //!                                      when artifacts are unavailable)
-//! repro sweep  --param mu|q|workers|approx|hetero|bits ...
+//! repro sweep  --param mu|q|workers|approx|hetero|bits|codec ...
 //! repro comm   [--s 0.4,0.1,0.01,0.001]
 //! repro train  --config cfg.json [--groups 60,40 --budget prop:0.1]
 //!              [--policy 'glob=family:k=v,...;...']
@@ -284,8 +284,8 @@ fn cmd_fig3(args: Vec<String>) -> i32 {
 }
 
 fn cmd_sweep(args: Vec<String>) -> i32 {
-    let p = Cli::new("Ablation sweeps (DESIGN.md Abl 1-4 + hetero + quantized bits)")
-        .required("param", "mu | q | workers | approx | hetero | bits")
+    let p = Cli::new("Ablation sweeps (DESIGN.md Abl 1-4 + hetero + quantized bits + codec)")
+        .required("param", "mu | q | workers | approx | hetero | bits | codec")
         .flag("values", "", "comma-separated sweep values (defaults per param)")
         .flag("s", "0.5", "sparsity factor")
         .flag("iters", "400", "iterations per point")
@@ -378,6 +378,22 @@ fn cmd_sweep(args: Vec<String>) -> i32 {
                 );
             }
         }
+        "codec" => {
+            println!(
+                "wire-codec matrix sweep (S={s}, {iters} iters, layer-wise RegTop-k, \
+                 index codec x value codec; EXPERIMENTS.md §Compression):"
+            );
+            println!(
+                "  {:<18} {:>12} {:>14} {:>14}",
+                "idx/levels", "final gap", "bytes/round", "entries/round"
+            );
+            for r in sweeps::codec_sweep(s, iters, seed) {
+                println!(
+                    "  {:<18} {:>12.6} {:>14} {:>14}",
+                    r.name, r.final_gap, r.bytes_per_round, r.entries_per_round
+                );
+            }
+        }
         other => {
             eprintln!("unknown sweep param '{other}'");
             return 2;
@@ -438,10 +454,20 @@ fn cmd_comm(args: Vec<String>) -> i32 {
     };
     let ss = p.get_f64_list("s");
     println!("analytic symbols/epoch/worker (1000 minibatches, §1 arithmetic):");
-    println!("  {:<10} {:>10} {:>8} {:>14} {:>14} {:>8}", "model", "J", "S", "symbols/ep", "bytes/ep", "ratio");
+    println!(
+        "  {:<10} {:>10} {:>8} {:>14} {:>14} {:>8} {:>9} {:>9}",
+        "model", "J", "S", "symbols/ep", "bytes/ep", "ratio", "logJ b/i", "rice b/i"
+    );
     for r in comm_table::analytic(&ss) {
+        // index-cost pair: the paper's log J bound vs the measured
+        // Golomb-Rice code (dense rows carry no indices)
+        let (bound, rice) = if r.s >= 1.0 {
+            ("-".to_string(), "-".to_string())
+        } else {
+            (format!("{:.0}", r.idx_bound_bits), format!("{:.2}", r.rice_bits))
+        };
         println!(
-            "  {:<10} {:>10} {:>8} {:>14.3e} {:>14.3e} {:>8.5}",
+            "  {:<10} {:>10} {:>8} {:>14.3e} {:>14.3e} {:>8.5} {bound:>9} {rice:>9}",
             r.model, r.dim, r.s, r.symbols_per_epoch, r.bytes_per_epoch, r.compression
         );
     }
@@ -636,11 +662,12 @@ fn cmd_train(args: Vec<String>) -> i32 {
         let families = tr.workers[0].sparsifier.group_families();
         let bits = tr.workers[0].sparsifier.group_value_bits();
         let bits_end = tr.workers[0].sparsifier.group_value_bits_end();
+        let idx_codecs = tr.workers[0].sparsifier.group_index_codecs();
         let shards = tr.workers[0].sparsifier.group_shards();
         println!("per-group upload bytes ({} groups):", group_totals.len());
         println!(
-            "  {:<16} {:<10} {:>6} {:>7} {:>12} {:>10} {:>10}",
-            "group", "family", "bits", "shards", "B total", "B/round", "entries"
+            "  {:<16} {:<10} {:>6} {:>6} {:>7} {:>12} {:>10} {:>10}",
+            "group", "family", "bits", "idx", "shards", "B total", "B/round", "entries"
         );
         for (g, (name, bytes)) in group_totals.iter().enumerate() {
             let b0 = bits.get(g).copied().unwrap_or(32);
@@ -649,15 +676,19 @@ fn cmd_train(args: Vec<String>) -> i32 {
             let bcol =
                 if b1 == b0 { format!("{b0}") } else { format!("{b0}..{b1}") };
             println!(
-                "  {name:<16} {:<10} {bcol:>6} {:>7} {bytes:>12} {:>10} {:>10}",
+                "  {name:<16} {:<10} {bcol:>6} {:>6} {:>7} {bytes:>12} {:>10} {:>10}",
                 families.get(g).copied().unwrap_or("?"),
+                idx_codecs.get(g).copied().unwrap_or("packed"),
                 shards.get(g).copied().unwrap_or(1),
                 bytes / iters,
                 entries.get(g).map(|(_, n)| *n).unwrap_or(0)
             );
         }
         let total: usize = group_totals.iter().map(|(_, b)| b).sum();
-        println!("  {:<16} {:<10} {:>6} {:>7} {total:>12}", "(all groups)", "", "", "");
+        println!(
+            "  {:<16} {:<10} {:>6} {:>6} {:>7} {total:>12}",
+            "(all groups)", "", "", "", ""
+        );
     }
     write_logs(&[log], p.get("out"), "train");
     0

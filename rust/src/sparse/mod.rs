@@ -16,28 +16,19 @@
 //! - [`SparseUpdate`] — the bucketed wire format of the layer-wise
 //!   API: one `SparseVec` per parameter group with group-local
 //!   indices (cheaper index bits per entry).
-//! - [`QuantPayload`] — packed low-bit value codes for quantized
-//!   buckets (per-group `bits` policies): `bits` value bits per entry
-//!   instead of 32, plus one shared f32 scale per bucket.
+//!
+//! Encoding a bucket into bytes — packed low-bit values, entropy-coded
+//! indices, and ALL byte accounting — lives in `comm::codec` (the
+//! pluggable wire-codec stack); buckets here only carry the codec
+//! slots (`comm::codec::WirePayload`) the encoders write into.
 
 pub mod approx;
 pub mod engine;
-mod packed;
 pub mod topk;
 mod update;
 mod vec;
 
 pub use engine::SelectEngine;
-pub use packed::{quant_levels, QuantPayload};
 pub use topk::{select_topk, topk_threshold};
 pub use update::SparseUpdate;
 pub use vec::SparseVec;
-
-/// Per-entry index cost in bits: `ceil(log2 dim)` with the `dim >= 2`
-/// clamp (paper §2: "the index can be losslessly represented by log J
-/// bits").  The single source for every place the cost model meets
-/// the wire — `SparseVec::wire_bytes`, the bucketed update, and both
-/// `CostModel` byte accountants.
-pub fn index_bits(dim: usize) -> usize {
-    (usize::BITS - (dim.max(2) - 1).leading_zeros()) as usize
-}

@@ -8,27 +8,32 @@
 //! single-bucket update ([`SparseUpdate::single`], or any update
 //! conformed to `GradLayout::single`) is byte- and bit-identical to
 //! the seed's flat `SparseVec` path.
+//!
+//! Each bucket carries a [`WirePayload`] slot recording which codecs
+//! of the `comm::codec` stack encoded it this round: packed low-bit
+//! value codes (a `bits` policy), Golomb–Rice coded indices
+//! (`idx=rice`), or the raw-`u32` index marker (`idx=raw`).  The f32
+//! values held in the bucket are always the payload's exact decode,
+//! kept pre-decoded so the aggregation hot path stays branch-free;
+//! `comm::codec::WireCost` reads the same slots to charge the true
+//! wire size.  All-inactive slots (the default) mean the bucket
+//! travels as raw f32 with bit-packed indices, exactly as before the
+//! codec stack existed.
 
+use crate::comm::codec::{QuantPayload, RicePayload, WirePayload};
 use crate::grad::GradLayout;
-use crate::sparse::{QuantPayload, SparseVec};
+use crate::sparse::SparseVec;
 
 /// A bucketed sparse update.  Buckets are ordered by group offset;
 /// each bucket's `dim` is its group length and its indices are local
 /// to the group.
-///
-/// A bucket whose group policy sets a `bits` override additionally
-/// carries a [`QuantPayload`]: the packed low-bit codes that ARE the
-/// wire representation of its values (the f32 values held in the
-/// bucket are the payload's exact decode, kept pre-decoded so the
-/// aggregation hot path stays branch-free).  Inactive slots mean the
-/// bucket travels as raw f32 exactly as before quantization existed.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct SparseUpdate {
     /// per-bucket global offset (mirrors the layout's group offsets)
     offsets: Vec<usize>,
     buckets: Vec<SparseVec>,
-    /// per-bucket quantization payload (inactive = raw f32 bucket)
-    quant: Vec<QuantPayload>,
+    /// per-bucket codec state (all-inactive = raw f32 / packed log J)
+    payloads: Vec<WirePayload>,
     /// total flat dimension J
     total: usize,
 }
@@ -53,26 +58,26 @@ impl SparseUpdate {
         SparseUpdate {
             offsets: vec![0],
             total: sv.dim(),
-            quant: vec![QuantPayload::default()],
+            payloads: vec![WirePayload::default()],
             buckets: vec![sv],
         }
     }
 
     /// Reshape to `layout`, recycling bucket buffers (no allocation at
     /// steady state).  All buckets come back empty with their group's
-    /// dimension and their quantization slots inactive (payload word
-    /// buffers keep their capacity for the next quantized round).
+    /// dimension and their codec slots inactive (payload word buffers
+    /// keep their capacity for the next encoded round).
     pub fn conform_to(&mut self, layout: &GradLayout) {
         self.total = layout.total();
         self.offsets.clear();
         self.offsets.extend(layout.groups().iter().map(|g| g.offset));
         self.buckets.resize_with(layout.num_groups(), || SparseVec::zeros(0));
-        self.quant.resize_with(layout.num_groups(), QuantPayload::default);
+        self.payloads.resize_with(layout.num_groups(), WirePayload::default);
         for (b, g) in self.buckets.iter_mut().zip(layout.groups()) {
             b.reset(g.len);
         }
-        for q in &mut self.quant {
-            q.clear();
+        for p in &mut self.payloads {
+            p.clear();
         }
     }
 
@@ -92,17 +97,38 @@ impl SparseUpdate {
         &mut self.buckets[g]
     }
 
-    /// Bucket `g`'s quantization payload, if one is active.
+    /// Bucket `g`'s packed value payload, if one is active.
     pub fn quant(&self, g: usize) -> Option<&QuantPayload> {
-        self.quant.get(g).filter(|q| q.is_active())
+        self.payloads.get(g).map(|p| &p.value).filter(|q| q.is_active())
     }
 
-    /// Disjoint mutable borrows of bucket `g` and its quantization
-    /// slot — the worker-boundary quantization path writes both in one
-    /// pass (dequantized values into the bucket, packed codes into the
-    /// slot).
+    /// Bucket `g`'s Golomb–Rice index payload, if one is active.
+    pub fn rice(&self, g: usize) -> Option<&RicePayload> {
+        self.payloads.get(g).map(|p| &p.rice).filter(|r| r.is_active())
+    }
+
+    /// Whether bucket `g` is marked for raw-`u32` index accounting
+    /// (`idx=raw`).
+    pub fn raw_index(&self, g: usize) -> bool {
+        self.payloads.get(g).is_some_and(|p| p.raw_index)
+    }
+
+    /// Mutable access to bucket `g`'s codec slot.
+    pub fn payload_mut(&mut self, g: usize) -> &mut WirePayload {
+        &mut self.payloads[g]
+    }
+
+    /// Disjoint mutable borrows of bucket `g` and its codec slot — the
+    /// worker-boundary encode writes both in one pass (decoded values
+    /// into the bucket, packed codes into the slot).
+    pub fn bucket_payload_mut(&mut self, g: usize) -> (&mut SparseVec, &mut WirePayload) {
+        (&mut self.buckets[g], &mut self.payloads[g])
+    }
+
+    /// Disjoint mutable borrows of bucket `g` and its value-payload
+    /// slot (the PR 4 entry point, kept for value-only encoders).
     pub fn bucket_quant_mut(&mut self, g: usize) -> (&mut SparseVec, &mut QuantPayload) {
-        (&mut self.buckets[g], &mut self.quant[g])
+        (&mut self.buckets[g], &mut self.payloads[g].value)
     }
 
     /// Global offset of bucket `g`.
@@ -118,26 +144,6 @@ impl SparseUpdate {
     /// Total transmitted entries across buckets.
     pub fn nnz(&self) -> usize {
         self.buckets.iter().map(SparseVec::nnz).sum()
-    }
-
-    /// Wire bytes under the paper's FIXED §2 format — f32 (32-bit)
-    /// raw values, packed `bits` + scale header for quantized buckets,
-    /// per-group index widths.  This is the format-level accountant
-    /// the bench wire points use; runs with a configurable link model
-    /// are charged by `CostModel::bucket_bytes` instead, which swaps
-    /// in `value_bits` for the raw case.
-    pub fn wire_bytes(&self) -> usize {
-        self.buckets
-            .iter()
-            .zip(&self.quant)
-            .map(|(b, q)| {
-                if q.is_active() {
-                    q.wire_bytes(crate::sparse::index_bits(b.dim()))
-                } else {
-                    b.wire_bytes()
-                }
-            })
-            .sum()
     }
 
     /// `out += scale * self` over the full flat vector (server-side
@@ -181,6 +187,7 @@ impl SparseUpdate {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::comm::codec::WireCost;
     use crate::grad::GradLayout;
 
     fn two_group_layout() -> GradLayout {
@@ -209,7 +216,7 @@ mod tests {
         let flat_bytes = sv.wire_bytes();
         let u = SparseUpdate::single(sv.clone());
         assert_eq!(u.nnz(), 2);
-        assert_eq!(u.wire_bytes(), flat_bytes);
+        assert_eq!(WireCost::paper().update(&u), flat_bytes);
         assert_eq!(u.flatten(), sv);
         assert_eq!(u.to_dense(), sv.to_dense());
     }
@@ -233,23 +240,25 @@ mod tests {
     }
 
     #[test]
-    fn quant_slots_follow_conform_and_shrink_wire_bytes() {
+    fn codec_slots_follow_conform_and_shrink_wire_bytes() {
+        let wc = WireCost::paper();
         let layout = two_group_layout();
         let mut u = SparseUpdate::zeros(&layout);
         u.bucket_mut(0).push(1, 0.5);
         u.bucket_mut(0).push(3, -0.25);
         assert!(u.quant(0).is_none(), "slots start inactive");
-        let raw = u.wire_bytes();
+        assert!(u.rice(0).is_none() && !u.raw_index(0));
+        let raw = wc.update(&u);
         let (b, q) = u.bucket_quant_mut(0);
         // 4-bit codes for the two entries (values already "quantized")
         q.encode_into(4, 0.25, &[9, 6]);
         b.values_mut().copy_from_slice(&[0.5, -0.25]);
         assert!(u.quant(0).is_some());
-        assert!(u.wire_bytes() < raw, "{} !< {raw}", u.wire_bytes());
-        // reconforming deactivates the slot again
+        assert!(wc.update(&u) < raw, "{} !< {raw}", wc.update(&u));
+        // reconforming deactivates every slot again
         u.conform_to(&layout);
         assert!(u.quant(0).is_none());
-        assert_eq!(u.wire_bytes(), 0);
+        assert_eq!(wc.update(&u), 0);
     }
 
     #[test]
@@ -263,11 +272,12 @@ mod tests {
         }
         let flat = grouped.flatten();
         assert!(flat.dim() == 1 << 20);
+        let wc = WireCost::paper();
         assert!(
-            grouped.wire_bytes() < flat.wire_bytes(),
+            wc.update(&grouped) < wc.flat(&flat),
             "grouped {} !< flat {}",
-            grouped.wire_bytes(),
-            flat.wire_bytes()
+            wc.update(&grouped),
+            wc.flat(&flat)
         );
     }
 }

@@ -116,12 +116,12 @@ impl SparseVec {
         self.val.iter().map(|v| v * v).sum::<f32>().sqrt()
     }
 
-    /// Wire size in bytes under the paper's cost model: 4 bytes per
-    /// f32 value + ceil(log2 J)/8 bytes per index ("the index can be
-    /// losslessly represented by log J bits", §2).
+    /// Wire size in bytes under the paper's FIXED §2 format: 4 bytes
+    /// per f32 value + ceil(log2 J)/8 bytes per index ("the index can
+    /// be losslessly represented by log J bits").  Routes through the
+    /// one byte accountant, `comm::codec::WireCost`.
     pub fn wire_bytes(&self) -> usize {
-        let per_entry_bits = 32 + crate::sparse::index_bits(self.dim);
-        (self.nnz() * per_entry_bits).div_ceil(8)
+        crate::comm::codec::WireCost::paper().flat(self)
     }
 
     /// Dot with a dense vector.

@@ -21,10 +21,21 @@
 //! quantization with the sparsification (rTop-k, arXiv 2005.10941:
 //! sparsify-then-quantize beats either alone under a bit budget): the
 //! surviving entries of that group's bucket are quantized at the
-//! worker boundary, travel as a packed `sparse::QuantPayload`, and the
-//! rounding residual folds into the child's error store exactly like
-//! sparsification error folds into eps.  `bits` accepts the same
-//! `FROM..TO/OVER` schedules as mu/Q.
+//! worker boundary, travel as a packed `comm::codec::QuantPayload`,
+//! and the rounding residual folds into the child's error store
+//! exactly like sparsification error folds into eps.  `bits` accepts
+//! the same `FROM..TO/OVER` schedules as mu/Q, plus the
+//! residual-steered `auto:LO..HI` mode (the width widens when the
+//! observed rounding residual says the wire is too lossy, narrows
+//! when there is slack; the current width checkpoints, so resume is
+//! bit-exact).
+//!
+//! The rest of the wire stack is per-group too (ISSUE 5): `levels=`
+//! picks the value level family (uniform offset-binary vs NUQSGD-style
+//! exponential) and `idx=` the index codec (bit-packed `log J` /
+//! raw u32 / delta-sorted Golomb–Rice).  All encode mechanics live in
+//! `comm::codec`; this wrapper only owns the per-group schedule/RNG
+//! state and applies the stack at the worker boundary.
 //!
 //! **Equivalence net:** under the degenerate single-group layout the
 //! wrapper is a transparent pass-through — one child over the whole
@@ -34,12 +45,12 @@
 //! an empty or non-matching policy table vs the PR 2 homogeneous path
 //! (pinned by `rust/tests/layerwise.rs`).
 
-use crate::comm::Quantizer;
+use crate::comm::codec::{index_bits, IndexCodec, LevelKind, QuantPayload, ValueCodec};
 use crate::grad::{GradLayout, GradView};
 use crate::sparse::engine::MIN_SHARDED_DIM;
 use crate::sparse::{SparseUpdate, SparseVec};
 use crate::sparsify::{
-    build, GroupPolicy, PolicyTable, RoundCtx, Schedule, Sparsifier, SparsifierKind,
+    build, BitsSpec, GroupPolicy, PolicyTable, RoundCtx, Schedule, Sparsifier, SparsifierKind,
     SparsifierState,
 };
 use crate::util::json::{obj, Json};
@@ -196,11 +207,30 @@ impl BudgetPolicy {
 /// every other stream in the repo (randk selection, data generators).
 const QUANT_STREAM_TAG: u64 = 0x5154_5A51_u64;
 
-/// One quantizing group's transmission state: the `bits` schedule, the
-/// stochastic-rounding stream (checkpointed — resume is bit-exact) and
-/// the per-round scratch buffers.
+/// Residual-steered width thresholds: the relative rounding residual
+/// `rho = ||residual|| / ||pre-quantization values||` a round is
+/// allowed before the width widens, and the 4x-hysteresis slack below
+/// which it narrows (hysteresis keeps the width from oscillating on a
+/// noisy trajectory).
+const AUTO_WIDEN_RHO: f64 = 0.05;
+const AUTO_NARROW_RHO: f64 = AUTO_WIDEN_RHO / 4.0;
+
+/// A quantizing group's width rule.
+enum Width {
+    /// Fixed or linearly scheduled (the PR 4 path, bit-identical).
+    Sched(Schedule),
+    /// Residual-steered within `[lo, hi]`; `cur` is the live width —
+    /// a pure function of the trajectory, checkpointed for bit-exact
+    /// resume.
+    Auto { lo: usize, hi: usize, cur: usize },
+}
+
+/// One quantizing group's transmission state: the width rule, the
+/// level family, the stochastic-rounding stream (checkpointed —
+/// resume is bit-exact) and the per-round scratch buffers.
 struct GroupQuant {
-    bits: Schedule,
+    width: Width,
+    levels: LevelKind,
     rng: Rng,
     residual: Vec<f32>,
     codes: Vec<u32>,
@@ -209,9 +239,15 @@ struct GroupQuant {
 impl GroupQuant {
     /// Independent per-(worker, group) rounding stream; the policy's
     /// `seed` override diversifies it exactly like the randk stream.
-    fn new(bits: Schedule, seed: u64, worker: usize, group: usize) -> Self {
+    fn new(bits: BitsSpec, levels: LevelKind, seed: u64, worker: usize, group: usize) -> Self {
+        let width = match bits {
+            BitsSpec::Sched(s) => Width::Sched(s),
+            // start wide (conservative): narrowing needs evidence
+            BitsSpec::Auto { lo, hi } => Width::Auto { lo, hi, cur: hi },
+        };
         GroupQuant {
-            bits,
+            width,
+            levels,
             rng: Rng::seed_from(QUANT_STREAM_TAG ^ seed)
                 .derive(((worker as u64) << 32) | group as u64),
             residual: Vec::new(),
@@ -219,13 +255,17 @@ impl GroupQuant {
         }
     }
 
-    /// Effective bit width at round `t`: the schedule's value rounded
-    /// and clamped into [2, 32].  Packing exists for widths up to 16;
-    /// anything above is raw-f32 passthrough for the round (so a
-    /// `32..4/T` schedule stays raw until it decays into packable
-    /// territory, and `8..32/T` fades quantization out).
+    /// Effective bit width at round `t`: a schedule's value rounded
+    /// and clamped into [2, 32], or the auto mode's live width.
+    /// Packing exists for widths up to 16; anything above is raw-f32
+    /// passthrough for the round (so a `32..4/T` schedule stays raw
+    /// until it decays into packable territory, and `8..32/T` fades
+    /// quantization out).
     fn bits_at(&self, t: usize) -> usize {
-        (self.bits.at(t).round() as i64).clamp(2, 32) as usize
+        match &self.width {
+            Width::Sched(s) => (s.at(t).round() as i64).clamp(2, 32) as usize,
+            Width::Auto { cur, .. } => *cur,
+        }
     }
 
     /// Whether `bits` engages the packed path this round.
@@ -233,22 +273,86 @@ impl GroupQuant {
         bits <= 16
     }
 
-    /// Settled width once the schedule passes its horizon.
+    /// Settled width once a schedule passes its horizon (auto mode:
+    /// the live width).
     fn bits_end(&self) -> usize {
-        (self.bits.endpoints().1.round() as i64).clamp(2, 32) as usize
+        match &self.width {
+            Width::Sched(s) => (s.endpoints().1.round() as i64).clamp(2, 32) as usize,
+            Width::Auto { cur, .. } => *cur,
+        }
     }
 
-    /// Whether ANY round of the schedule engages the packed path.
-    /// Linear schedules are monotone between their endpoints, so
-    /// checking both suffices.  A policy whose width can never drop
-    /// to 16 or below (e.g. a constant `bits=32` passthrough) gets no
-    /// quantizer state at all — its exports and checkpoints stay
-    /// interchangeable with a bits-less policy, matching the
-    /// bit-identical trajectories.
+    /// The live auto width (None for scheduled policies) — exported in
+    /// `SparsifierState::Quantized` so resume is bit-exact.
+    fn auto_bits(&self) -> Option<usize> {
+        match &self.width {
+            Width::Sched(_) => None,
+            Width::Auto { cur, .. } => Some(*cur),
+        }
+    }
+
+    /// Whether ANY round engages the packed path.  Linear schedules
+    /// are monotone between their endpoints, so checking both
+    /// suffices; auto widths are capped at 16 and always engage.  A
+    /// policy whose width can never drop to 16 or below (e.g. a
+    /// constant `bits=32` passthrough) gets no quantizer state at all
+    /// — its exports and checkpoints stay interchangeable with a
+    /// bits-less policy, matching the bit-identical trajectories.
     fn ever_active(&self) -> bool {
-        let (a, b) = self.bits.endpoints();
-        let w = |v: f32| (v.round() as i64).clamp(2, 32) as usize;
-        Self::active_at(w(a)) || Self::active_at(w(b))
+        match &self.width {
+            Width::Sched(s) => {
+                let (a, b) = s.endpoints();
+                let w = |v: f32| (v.round() as i64).clamp(2, 32) as usize;
+                Self::active_at(w(a)) || Self::active_at(w(b))
+            }
+            Width::Auto { .. } => true,
+        }
+    }
+
+    /// A round where the CURRENT width did not pay on the wire: walk
+    /// an auto width one step down if the range's floor width would
+    /// pay for this bucket shape.  Without this a group whose `hi`
+    /// width never beats raw (tiny nnz: the 4-byte scale header
+    /// dominates) could deadlock at `hi` — steering only runs after
+    /// an encode, and the encode is gated on the current width
+    /// paying.  Pure function of the bucket shape, so resume stays
+    /// bit-exact; no-op for scheduled widths.
+    fn nudge_down_if_unpaid(&mut self, nnz: usize, ib: usize, raw: usize) {
+        let Width::Auto { lo, cur, .. } = &mut self.width else {
+            return;
+        };
+        if nnz > 0 && *cur > *lo && QuantPayload::bytes_for(nnz, *lo, ib) < raw {
+            *cur -= 1;
+        }
+    }
+
+    /// Steer an auto width from the round's observed rounding
+    /// residual (`self.residual`, aligned with `decoded`, the lossy
+    /// values just written to the bucket).  No-op for scheduled
+    /// widths and for rounds that observed nothing.  Deterministic —
+    /// a pure function of the trajectory — so resume stays bit-exact
+    /// once `cur` travels in the checkpoint.
+    fn steer(&mut self, decoded: &[f32]) {
+        let Width::Auto { lo, hi, cur } = &mut self.width else {
+            return;
+        };
+        debug_assert_eq!(decoded.len(), self.residual.len());
+        let mut r2 = 0.0f64;
+        let mut o2 = 0.0f64;
+        for (&d, &r) in decoded.iter().zip(&self.residual) {
+            r2 += (r as f64) * (r as f64);
+            let orig = d as f64 + r as f64;
+            o2 += orig * orig;
+        }
+        if o2 == 0.0 {
+            return; // an all-zero bucket says nothing about the width
+        }
+        let rho = (r2 / o2).sqrt();
+        if rho > AUTO_WIDEN_RHO {
+            *cur = (*cur + 1).min(*hi);
+        } else if rho < AUTO_NARROW_RHO {
+            *cur = cur.saturating_sub(1).max(*lo);
+        }
     }
 }
 
@@ -370,6 +474,9 @@ pub struct LayerwiseSparsifier {
     /// (with `bits` unset everywhere this vector is all-None and the
     /// whole path is bit-identical to the pre-quantization tree)
     quants: Vec<Option<GroupQuant>>,
+    /// per-group index codec (`idx=` policy key); all-Packed = the
+    /// pre-codec accounting, bit-identical
+    idx_codecs: Vec<IndexCodec>,
     /// bits an UN-quantized value costs on the wire (the cost model's
     /// `value_bits`; 32 unless the run models half-precision links).
     /// The packing-must-pay guard compares against this so the ledger
@@ -412,6 +519,7 @@ impl LayerwiseSparsifier {
         let mut ks = Vec::with_capacity(n);
         let mut schedules = Vec::with_capacity(n);
         let mut quants = Vec::with_capacity(n);
+        let mut idx_codecs = Vec::with_capacity(n);
         for (g, (spec, &bk)) in layout.groups().iter().zip(&base_ks).enumerate() {
             let pol = policies.resolve(&spec.name);
             let (child, k_eff, sched) = build_child(kind, pol, bk, spec.len, g, worker);
@@ -420,10 +528,17 @@ impl LayerwiseSparsifier {
             schedules.push(sched);
             quants.push(pol.and_then(|p| {
                 p.bits.clone().and_then(|bits| {
-                    let gq = GroupQuant::new(bits, p.seed.unwrap_or(0), worker, g);
+                    let gq = GroupQuant::new(
+                        bits,
+                        p.levels.unwrap_or_default(),
+                        p.seed.unwrap_or(0),
+                        worker,
+                        g,
+                    );
                     gq.ever_active().then_some(gq)
                 })
             }));
+            idx_codecs.push(pol.and_then(|p| p.idx).unwrap_or_default());
         }
         LayerwiseSparsifier {
             layout,
@@ -431,6 +546,7 @@ impl LayerwiseSparsifier {
             ks,
             schedules,
             quants,
+            idx_codecs,
             raw_value_bits: 32,
             child_shards: vec![1; n],
             scratch: SparseUpdate::empty(),
@@ -473,6 +589,7 @@ fn step_children(
     layout: &GradLayout,
     schedules: &[Option<(Schedule, Schedule)>],
     quants: &mut [Option<GroupQuant>],
+    idx_codecs: &[IndexCodec],
     raw_value_bits: usize,
     flat: &[f32],
     ctx: &RoundCtx,
@@ -497,7 +614,7 @@ fn step_children(
             genie_acc: ctx.genie_acc.map(|ga| &ga[off..off + len]),
         };
         child.step_into(&flat[off..off + len], &gctx, out.bucket_mut(g));
-        // Worker-boundary quantization: replace the bucket's values
+        // Worker-boundary value codec: replace the bucket's values
         // with their packed low-bit decode and fold the rounding error
         // back into the child's error store — the lossy wire composes
         // with error feedback exactly like sparsification does.
@@ -505,17 +622,17 @@ fn step_children(
         // under the run's cost model (`raw_value_bits`): for tiny
         // buckets the 4-byte scale header exceeds the value-bit
         // saving, so those rounds ship raw (a pure function of
-        // nnz/bits, so resume stays bit-exact).
+        // nnz/bits, so resume stays bit-exact; the guard compares
+        // under packed-log-J indexing regardless of the index codec,
+        // which cancels on both sides).
         if let Some(qs) = quants[g].as_mut() {
             let bits = qs.bits_at(ctx.t);
             if GroupQuant::active_at(bits) {
                 let (bucket, payload) = out.bucket_quant_mut(g);
-                let ib = crate::sparse::index_bits(bucket.dim());
+                let ib = index_bits(bucket.dim());
                 let raw = (bucket.nnz() * (raw_value_bits + ib)).div_ceil(8);
-                if bucket.nnz() > 0
-                    && crate::sparse::QuantPayload::bytes_for(bucket.nnz(), bits, ib) < raw
-                {
-                    Quantizer::new(bits).quantize_bucket_into(
+                if bucket.nnz() > 0 && QuantPayload::bytes_for(bucket.nnz(), bits, ib) < raw {
+                    ValueCodec { bits, levels: qs.levels }.encode_bucket(
                         bucket,
                         &mut qs.rng,
                         payload,
@@ -523,7 +640,24 @@ fn step_children(
                         &mut qs.codes,
                     );
                     child.fold_residual(out.bucket(g).indices(), &qs.residual);
+                    // residual-steered widths adapt for the NEXT round
+                    qs.steer(out.bucket(g).values());
+                } else {
+                    // the current width did not pay: auto widths walk
+                    // toward one that would (no-op for schedules)
+                    qs.nudge_down_if_unpaid(bucket.nnz(), ib, raw);
                 }
+            }
+        }
+        // Worker-boundary index codec: entropy-code (or re-mark) the
+        // bucket's index list; the packed default leaves the slot
+        // untouched (bit-identical pre-codec accounting).
+        match idx_codecs[g] {
+            IndexCodec::Packed => {}
+            IndexCodec::Raw => out.payload_mut(g).raw_index = true,
+            IndexCodec::Rice => {
+                let (bucket, payload) = out.bucket_payload_mut(g);
+                payload.rice.encode_into(bucket.indices());
             }
         }
     }
@@ -558,6 +692,7 @@ impl Sparsifier for LayerwiseSparsifier {
             &self.layout,
             &self.schedules,
             &mut self.quants,
+            &self.idx_codecs,
             self.raw_value_bits,
             grad,
             ctx,
@@ -579,6 +714,7 @@ impl Sparsifier for LayerwiseSparsifier {
             &self.layout,
             &self.schedules,
             &mut self.quants,
+            &self.idx_codecs,
             self.raw_value_bits,
             view.flat(),
             ctx,
@@ -652,7 +788,12 @@ impl Sparsifier for LayerwiseSparsifier {
                         None => inner,
                         Some(gq) => {
                             let (rng, gauss_spare) = gq.rng.state();
-                            SparsifierState::Quantized { inner: Box::new(inner), rng, gauss_spare }
+                            SparsifierState::Quantized {
+                                inner: Box::new(inner),
+                                rng,
+                                gauss_spare,
+                                auto_bits: gq.auto_bits(),
+                            }
                         }
                     }
                 })
@@ -678,8 +819,35 @@ impl Sparsifier for LayerwiseSparsifier {
                     .enumerate()
                 {
                     match (q, s) {
-                        (Some(gq), SparsifierState::Quantized { inner, rng, gauss_spare }) => {
+                        (
+                            Some(gq),
+                            SparsifierState::Quantized { inner, rng, gauss_spare, auto_bits },
+                        ) => {
                             gq.rng = Rng::from_state(*rng, *gauss_spare);
+                            match (&mut gq.width, auto_bits) {
+                                (Width::Auto { lo, hi, cur }, Some(b)) => {
+                                    if !(*lo..=*hi).contains(b) {
+                                        return Err(format!(
+                                            "group {g}: checkpointed auto width {b} outside \
+                                             the policy's {lo}..{hi} range"
+                                        ));
+                                    }
+                                    *cur = *b;
+                                }
+                                (Width::Auto { .. }, None) => {
+                                    return Err(format!(
+                                        "group {g}: bits=auto policy needs the checkpointed \
+                                         width (checkpoint belongs to a scheduled-bits policy)"
+                                    ));
+                                }
+                                (Width::Sched(_), Some(_)) => {
+                                    return Err(format!(
+                                        "group {g}: checkpoint carries an auto width but the \
+                                         policy schedules bits"
+                                    ));
+                                }
+                                (Width::Sched(_), None) => {}
+                            }
                             c.import_state(inner).map_err(|e| format!("group {g}: {e}"))?;
                         }
                         (Some(_), other) => {
@@ -729,6 +897,17 @@ impl Sparsifier for LayerwiseSparsifier {
         self.quants
             .iter()
             .map(|q| q.as_ref().map_or(32, GroupQuant::bits_end))
+            .collect()
+    }
+
+    fn group_index_codecs(&self) -> Vec<&'static str> {
+        self.idx_codecs.iter().map(IndexCodec::name).collect()
+    }
+
+    fn group_value_levels(&self) -> Vec<&'static str> {
+        self.quants
+            .iter()
+            .map(|q| q.as_ref().map_or("f32", |gq| gq.levels.name()))
             .collect()
     }
 
@@ -1003,7 +1182,7 @@ mod tests {
             let mut up = SparseUpdate::empty();
             lw.step_group_into(&view, &ctx, &mut up);
             assert_eq!(up.quant(0).unwrap().bits(), [16, 13, 10, 7, 4][t]);
-            bytes.push(up.wire_bytes());
+            bytes.push(crate::comm::codec::WireCost::paper().update(&up));
         }
         assert!(bytes[4] < bytes[0], "{bytes:?}");
     }
@@ -1042,6 +1221,191 @@ mod tests {
         assert!(cold.import_state(&st).is_err());
         let plain = cold.export_state();
         assert!(mk().import_state(&plain).is_err());
+    }
+
+    #[test]
+    fn rice_policy_encodes_and_shrinks_clustered_buckets() {
+        use crate::comm::codec::WireCost;
+        // a contiguous dense group: gaps are zero, rice pays ~1
+        // bit/index vs the 9-bit packed bound
+        let layout = GradLayout::single(512);
+        let table = PolicyTable::parse("*=dense:idx=rice").unwrap();
+        let mut lw = LayerwiseSparsifier::with_policies(
+            &SparsifierKind::Dense,
+            layout.clone(),
+            &BudgetPolicy::Global { k: 512 },
+            &table,
+            0,
+        );
+        assert_eq!(lw.group_index_codecs(), vec!["rice"]);
+        let grad: Vec<f32> = (0..512).map(|i| (i % 7) as f32 + 1.0).collect();
+        let gagg = vec![0.0f32; 512];
+        let ctx = RoundCtx { t: 0, gagg_prev: &gagg, omega: 1.0, genie_acc: None };
+        let view = GradView::new(&layout, &grad);
+        let mut up = SparseUpdate::empty();
+        lw.step_group_into(&view, &ctx, &mut up);
+        let rp = up.rice(0).expect("rice payload must be active");
+        assert_eq!(rp.decode(), up.bucket(0).indices(), "lossless index round-trip");
+        // values untouched: idx= composes with raw f32 values
+        assert!(up.quant(0).is_none());
+        let wc = WireCost::paper();
+        let riced = wc.update(&up);
+        let mut plain = LayerwiseSparsifier::new(
+            &SparsifierKind::Dense,
+            layout.clone(),
+            &BudgetPolicy::Global { k: 512 },
+            0,
+        );
+        let mut up_plain = SparseUpdate::empty();
+        plain.step_group_into(&view, &ctx, &mut up_plain);
+        assert_eq!(up.bucket(0), up_plain.bucket(0), "values identical under idx=rice");
+        assert!(riced < wc.update(&up_plain), "{riced} !< {}", wc.update(&up_plain));
+    }
+
+    #[test]
+    fn raw_index_policy_marks_buckets_and_costs_more() {
+        use crate::comm::codec::WireCost;
+        let layout = layout_4_6();
+        let table = PolicyTable::parse("a=:idx=raw").unwrap();
+        let mut lw = LayerwiseSparsifier::with_policies(
+            &SparsifierKind::TopK { k: 0 },
+            layout.clone(),
+            &BudgetPolicy::PerGroup { ks: vec![2, 2] },
+            &table,
+            0,
+        );
+        assert_eq!(lw.group_index_codecs(), vec!["raw", "packed"]);
+        let grad: Vec<f32> = (0..10).map(|i| (10 - i) as f32).collect();
+        let gagg = vec![0.0f32; 10];
+        let ctx = RoundCtx { t: 0, gagg_prev: &gagg, omega: 1.0, genie_acc: None };
+        let view = GradView::new(&layout, &grad);
+        let mut up = SparseUpdate::empty();
+        lw.step_group_into(&view, &ctx, &mut up);
+        assert!(up.raw_index(0) && !up.raw_index(1));
+        let wc = WireCost::paper();
+        // group a pays 32-bit indices: 2 * (32+32) bits = 16 bytes vs
+        // the packed 2 * (32+2) -> 9 bytes for the same bucket shape
+        assert_eq!(wc.bucket(&up, 0), 16);
+        assert_eq!(wc.bucket(&up, 1), (2 * (32 + 3usize)).div_ceil(8));
+    }
+
+    #[test]
+    fn nuq_levels_ride_the_bits_policy() {
+        let layout = layout_4_6();
+        let table = PolicyTable::parse("*=:bits=4,levels=nuq").unwrap();
+        let mut lw = LayerwiseSparsifier::with_policies(
+            &SparsifierKind::TopK { k: 0 },
+            layout.clone(),
+            &BudgetPolicy::PerGroup { ks: vec![2, 3] },
+            &table,
+            0,
+        );
+        assert_eq!(lw.group_value_levels(), vec!["nuq", "nuq"]);
+        let grad: Vec<f32> = (0..10).map(|i| (10 - i) as f32 * 0.37).collect();
+        let gagg = vec![0.0f32; 10];
+        let acc_before = lw.peek_acc(&grad);
+        let ctx = RoundCtx { t: 0, gagg_prev: &gagg, omega: 1.0, genie_acc: None };
+        let view = GradView::new(&layout, &grad);
+        let mut up = SparseUpdate::empty();
+        lw.step_group_into(&view, &ctx, &mut up);
+        let q = up.quant(0).expect("group a must be quantized");
+        assert_eq!(q.level_kind(), crate::comm::codec::LevelKind::Nuq);
+        assert_eq!(q.decode(), up.bucket(0).values(), "payload is the exact decode");
+        // conservation through the nonuniform lossy wire
+        let transmitted = up.flatten().to_dense();
+        let zeros = vec![0.0f32; 10];
+        let eps = lw.peek_acc(&zeros);
+        for i in 0..10 {
+            assert_eq!(eps[i], acc_before[i] - transmitted[i], "i={i}");
+        }
+    }
+
+    #[test]
+    fn auto_bits_start_wide_and_narrow_on_slack() {
+        // constant near-binary gradients quantize almost losslessly,
+        // so the residual-steered width should walk down toward lo
+        let layout = GradLayout::single(8);
+        let table = PolicyTable::parse("*=:bits=auto:4..8").unwrap();
+        let mut lw = LayerwiseSparsifier::with_policies(
+            &SparsifierKind::TopK { k: 4 },
+            layout.clone(),
+            &BudgetPolicy::Global { k: 4 },
+            &table,
+            0,
+        );
+        assert_eq!(lw.group_value_bits(), vec![8], "auto starts at hi");
+        let gagg = vec![0.0f32; 8];
+        let g: Vec<f32> = (0..8).map(|i| if i < 4 { 4.0 } else { 0.5 }).collect();
+        let mut widths = Vec::new();
+        let mut up = SparseUpdate::empty();
+        for t in 0..8 {
+            let ctx = RoundCtx { t, gagg_prev: &gagg, omega: 1.0, genie_acc: None };
+            let view = GradView::new(&layout, &g);
+            lw.step_group_into(&view, &ctx, &mut up);
+            widths.push(up.quant(0).map_or(32, |q| q.bits()));
+        }
+        assert_eq!(widths[0], 8, "first round uses the starting width");
+        assert!(widths.iter().all(|&w| (4..=8).contains(&w)), "{widths:?}");
+        assert!(*widths.last().unwrap() < 8, "width never narrowed: {widths:?}");
+        // the live width is exported for bit-exact resume
+        let st = lw.export_state();
+        let SparsifierState::Grouped(children) = &st else { panic!("expected grouped") };
+        let SparsifierState::Quantized { auto_bits, .. } = &children[0] else {
+            panic!("expected quantized state, got {children:?}")
+        };
+        assert_eq!(*auto_bits, Some(*widths.last().unwrap()));
+        // round-trip restores the width; a scheduled-bits build rejects it
+        let mk = || {
+            LayerwiseSparsifier::with_policies(
+                &SparsifierKind::TopK { k: 4 },
+                GradLayout::single(8),
+                &BudgetPolicy::Global { k: 4 },
+                &table,
+                0,
+            )
+        };
+        let mut b = mk();
+        b.import_state(&st).unwrap();
+        assert_eq!(b.group_value_bits(), vec![*widths.last().unwrap()]);
+        let sched_table = PolicyTable::parse("*=:bits=6").unwrap();
+        let mut sched = LayerwiseSparsifier::with_policies(
+            &SparsifierKind::TopK { k: 4 },
+            GradLayout::single(8),
+            &BudgetPolicy::Global { k: 4 },
+            &sched_table,
+            0,
+        );
+        assert!(sched.import_state(&st).is_err(), "auto width into scheduled policy");
+        assert!(mk().import_state(&sched.export_state()).is_err(), "and vice versa");
+    }
+
+    #[test]
+    fn auto_bits_escape_an_unpaying_hi_width() {
+        // nnz=2 at 2 index bits: raw = ceil(2*34/8) = 9 B, and 16- or
+        // 15-bit packing costs 9 B too (the scale header) — an auto
+        // width starting at hi=16 would deadlock without the
+        // nudge-down path, never reaching the widths that DO pay
+        let layout = GradLayout::single(4);
+        let table = PolicyTable::parse("*=:bits=auto:4..16").unwrap();
+        let mut lw = LayerwiseSparsifier::with_policies(
+            &SparsifierKind::TopK { k: 2 },
+            layout.clone(),
+            &BudgetPolicy::Global { k: 2 },
+            &table,
+            0,
+        );
+        let gagg = vec![0.0f32; 4];
+        let g = vec![4.0f32, 3.0, 0.1, 0.1];
+        let mut up = SparseUpdate::empty();
+        let mut engaged = false;
+        for t in 0..6 {
+            let ctx = RoundCtx { t, gagg_prev: &gagg, omega: 1.0, genie_acc: None };
+            let view = GradView::new(&layout, &g);
+            lw.step_group_into(&view, &ctx, &mut up);
+            engaged |= up.quant(0).is_some();
+        }
+        assert!(engaged, "auto width never walked down to a paying width");
+        assert!(lw.group_value_bits()[0] < 15, "{:?}", lw.group_value_bits());
     }
 
     #[test]

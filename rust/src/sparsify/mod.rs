@@ -37,7 +37,7 @@ pub use dense::Dense;
 pub use dgc::Dgc;
 pub use global_topk::GlobalTopK;
 pub use layerwise::{BudgetPolicy, LayerwiseSparsifier};
-pub use policy::{glob_match, GroupPolicy, PolicyRule, PolicyTable, Schedule};
+pub use policy::{glob_match, BitsSpec, GroupPolicy, PolicyRule, PolicyTable, Schedule};
 pub use randk::RandK;
 pub use regtopk::RegTopK;
 pub use threshold::Threshold;
@@ -68,7 +68,15 @@ pub enum SparsifierState {
     /// the stochastic-rounding stream, so a resumed quantized run
     /// draws exactly the rounding decisions the uninterrupted run
     /// would have (bit-exact resume under a `bits` policy).
-    Quantized { inner: Box<SparsifierState>, rng: [u64; 4], gauss_spare: Option<f64> },
+    /// `auto_bits` carries the current residual-steered width under a
+    /// `bits=auto:LO..HI` policy (None for scheduled widths — the
+    /// encoding stays byte-identical to the PR 4 checkpoints).
+    Quantized {
+        inner: Box<SparsifierState>,
+        rng: [u64; 4],
+        gauss_spare: Option<f64>,
+        auto_bits: Option<usize>,
+    },
 }
 
 impl SparsifierState {
@@ -213,6 +221,20 @@ pub trait Sparsifier: Send {
     /// decaying schedule as its round-0 value.
     fn group_value_bits_end(&self) -> Vec<usize> {
         self.group_value_bits()
+    }
+
+    /// Per-group index-codec names (`packed` unless a policy selects
+    /// `raw`/`rice`; empty = not a grouped sparsifier).  Surfaced in
+    /// the run manifest echo.
+    fn group_index_codecs(&self) -> Vec<&'static str> {
+        Vec::new()
+    }
+
+    /// Per-group value level-family names (`uniform` unless a policy
+    /// selects `nuq`; empty = not a grouped sparsifier).  Surfaced in
+    /// the run manifest echo.
+    fn group_value_levels(&self) -> Vec<&'static str> {
+        Vec::new()
     }
 
     /// Whether this sparsifier needs the genie side-channel (only the

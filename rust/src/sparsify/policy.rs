@@ -17,6 +17,8 @@
 //! fc*=:mu=0.5..0.1/200          # empty family = inherit, linear mu decay
 //! conv*=regtopk:mu=0.3,bits=4;*=topk:bits=8   # quantized transmission
 //! fc*=:bits=8..4/100,eta=2.0    # bits tighten over rounds, 2x group lr
+//! conv*=:bits=4,idx=rice,levels=nuq  # entropy-coded indices, NUQ levels
+//! *=topk:bits=auto:4..8         # residual-steered adaptive width
 //! ```
 //!
 //! Each rule is `glob=family[:key=value,...]`; an empty family inherits
@@ -25,6 +27,7 @@
 //! table round-trips through `TrainConfig` JSON, so run manifests and
 //! checkpoints echo the full heterogeneous setup.
 
+use crate::comm::codec::{IndexCodec, LevelKind};
 use crate::sparsify::{SparsifierKind, SparsifierParams};
 use crate::util::json::{obj, Json};
 
@@ -116,6 +119,86 @@ impl Schedule {
     }
 }
 
+/// The `bits=` policy value: a per-round width schedule, or the
+/// residual-steered adaptive mode (`bits=auto:LO..HI` — the ROADMAP
+/// follow-up closing the loop the AdaK family opens for k: the width
+/// widens when the observed quantization residual norm says the wire
+/// is too lossy and narrows when there is slack).
+#[derive(Clone, Debug, PartialEq)]
+pub enum BitsSpec {
+    /// Fixed or linearly scheduled width (the PR 4 surface).
+    Sched(Schedule),
+    /// Residual-steered width floating in `[lo, hi]` (both packable,
+    /// 2..=16).  Starts at `hi` (conservative) and adapts per round;
+    /// the current width is exported in `SparsifierState` so resume
+    /// stays bit-exact.
+    Auto { lo: usize, hi: usize },
+}
+
+impl BitsSpec {
+    /// Parse `"8"`, `"8..4/100"` or `"auto:4..8"`.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let s = s.trim();
+        if let Some(range) = s.strip_prefix("auto:") {
+            let (lo, hi) = range
+                .split_once("..")
+                .ok_or_else(|| format!("auto bits '{s}' needs the form auto:LO..HI"))?;
+            let num = |v: &str| {
+                v.trim()
+                    .parse::<usize>()
+                    .map_err(|_| format!("bad auto bits bound '{v}' in '{s}'"))
+            };
+            return Ok(BitsSpec::Auto { lo: num(lo)?, hi: num(hi)? });
+        }
+        Schedule::parse(s).map(BitsSpec::Sched)
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            BitsSpec::Sched(s) => s.to_json(),
+            BitsSpec::Auto { lo, hi } => {
+                obj([("auto", true.into()), ("lo", (*lo).into()), ("hi", (*hi).into())])
+            }
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        if j.get("auto").and_then(Json::as_bool).unwrap_or(false) {
+            let get = |key: &str| {
+                j.get(key)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| format!("auto bits missing '{key}'"))
+            };
+            return Ok(BitsSpec::Auto { lo: get("lo")?, hi: get("hi")? });
+        }
+        Schedule::from_json(j).map(BitsSpec::Sched)
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        match self {
+            BitsSpec::Sched(bits) => {
+                let (a, b) = bits.endpoints();
+                for v in [a, b] {
+                    if !v.is_finite() || !(2.0..=32.0).contains(&v.round()) {
+                        return Err(format!(
+                            "bits schedule endpoint {v} outside [2, 32] (32 = passthrough)"
+                        ));
+                    }
+                }
+                Ok(())
+            }
+            BitsSpec::Auto { lo, hi } => {
+                if !(2..=16).contains(lo) || !(2..=16).contains(hi) || lo > hi {
+                    return Err(format!(
+                        "auto bits range {lo}..{hi} must satisfy 2 <= lo <= hi <= 16"
+                    ));
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
 /// One group's resolved policy: an optional family override plus any
 /// subset of the family hyperparameters.  Unset fields inherit the
 /// run's base [`SparsifierKind`]; an unset `k` takes the group's
@@ -137,13 +220,21 @@ pub struct GroupPolicy {
     pub ratio: Option<f32>,
     pub k_min: Option<usize>,
     pub k_max: Option<usize>,
-    /// quantized-transmission bit width, possibly scheduled per round
-    /// (`8..4/100` tightens the wire over training); values round to
-    /// an integer in [2, 32] at each round.  Widths 2..=16 engage the
-    /// packed wire path; anything above (incl. 32) is raw f32
-    /// passthrough for that round.  Unset = no quantization (the
-    /// pre-quantization wire format, bit-identical).
-    pub bits: Option<Schedule>,
+    /// quantized-transmission bit width: a per-round schedule
+    /// (`8..4/100` tightens the wire over training; values round to
+    /// an integer in [2, 32] at each round) or the residual-steered
+    /// `auto:4..8` mode.  Widths 2..=16 engage the packed wire path;
+    /// anything above (incl. 32) is raw f32 passthrough for that
+    /// round.  Unset = no quantization (the pre-quantization wire
+    /// format, bit-identical).
+    pub bits: Option<BitsSpec>,
+    /// index-codec override (`idx=packed|raw|rice`); unset = the
+    /// bit-packed `log J` default, bit-identical to the pre-codec tree
+    pub idx: Option<IndexCodec>,
+    /// value level-table family (`levels=uniform|nuq`); only
+    /// meaningful with `bits` set (validated).  Unset = uniform, the
+    /// PR 4 offset-binary grid.
+    pub levels: Option<LevelKind>,
     /// learning-rate scale for this group's slice of the aggregate
     /// (the §1.2 G-extension applied per layer); the server multiplies
     /// the group's gradient by this factor before the optimizer step.
@@ -191,14 +282,12 @@ impl GroupPolicy {
             }
         }
         if let Some(bits) = &self.bits {
-            let (a, b) = bits.endpoints();
-            for v in [a, b] {
-                if !v.is_finite() || !(2.0..=32.0).contains(&v.round()) {
-                    return Err(format!(
-                        "bits schedule endpoint {v} outside [2, 32] (32 = passthrough)"
-                    ));
-                }
-            }
+            bits.validate()?;
+        }
+        if self.levels.is_some() && self.bits.is_none() {
+            return Err(
+                "levels= needs a bits= width (raw f32 values have no level table)".to_string()
+            );
         }
         if let Some(e) = self.eta {
             if !(e.is_finite() && e > 0.0) {
@@ -299,7 +388,9 @@ impl PolicyTable {
                     "ratio" => policy.ratio = Some(fl(val)?),
                     "k_min" | "kmin" => policy.k_min = Some(us(val)?),
                     "k_max" | "kmax" => policy.k_max = Some(us(val)?),
-                    "bits" => policy.bits = Some(Schedule::parse(val)?),
+                    "bits" => policy.bits = Some(BitsSpec::parse(val)?),
+                    "idx" => policy.idx = Some(IndexCodec::parse(val)?),
+                    "levels" => policy.levels = Some(LevelKind::parse(val)?),
                     "eta" => policy.eta = Some(fl(val)?),
                     other => return Err(format!("unknown policy param '{other}'")),
                 }
@@ -357,6 +448,12 @@ impl PolicyTable {
                     if let Some(s) = &p.bits {
                         m.insert("bits".to_string(), s.to_json());
                     }
+                    if let Some(c) = p.idx {
+                        m.insert("idx".to_string(), c.name().into());
+                    }
+                    if let Some(l) = p.levels {
+                        m.insert("levels".to_string(), l.name().into());
+                    }
                     if let Some(v) = p.eta {
                         m.insert("eta".to_string(), (v as f64).into());
                     }
@@ -367,9 +464,9 @@ impl PolicyTable {
     }
 
     pub fn from_json(j: &Json) -> Result<Self, String> {
-        const KEYS: [&str; 14] = [
+        const KEYS: [&str; 16] = [
             "match", "family", "k", "mu", "q", "tau", "seed", "momentum", "clip", "ratio",
-            "k_min", "k_max", "bits", "eta",
+            "k_min", "k_max", "bits", "idx", "levels", "eta",
         ];
         let arr = j.as_arr().ok_or("policy must be a JSON array")?;
         let mut rules = Vec::new();
@@ -404,7 +501,23 @@ impl PolicyTable {
                 ratio: f32_of("ratio"),
                 k_min: entry.get("k_min").and_then(Json::as_usize),
                 k_max: entry.get("k_max").and_then(Json::as_usize),
-                bits: sched_of("bits")?,
+                bits: entry.get("bits").map(BitsSpec::from_json).transpose()?,
+                idx: entry
+                    .get("idx")
+                    .map(|j| {
+                        j.as_str()
+                            .ok_or_else(|| format!("policy[{i}].idx must be a string"))
+                            .and_then(IndexCodec::parse)
+                    })
+                    .transpose()?,
+                levels: entry
+                    .get("levels")
+                    .map(|j| {
+                        j.as_str()
+                            .ok_or_else(|| format!("policy[{i}].levels must be a string"))
+                            .and_then(LevelKind::parse)
+                    })
+                    .transpose()?,
                 eta: f32_of("eta"),
             };
             rules.push(PolicyRule { pattern, policy });
@@ -549,12 +662,18 @@ mod tests {
         // the ISSUE 4 spec line
         let t = PolicyTable::parse("conv*=regtopk:mu=0.3,bits=4;*=topk:bits=8").unwrap();
         let conv = t.resolve("conv0.w").unwrap();
-        assert_eq!(conv.bits, Some(Schedule::Const(4.0)));
-        assert_eq!(t.resolve("fc.w").unwrap().bits, Some(Schedule::Const(8.0)));
+        assert_eq!(conv.bits, Some(BitsSpec::Sched(Schedule::Const(4.0))));
+        assert_eq!(
+            t.resolve("fc.w").unwrap().bits,
+            Some(BitsSpec::Sched(Schedule::Const(8.0)))
+        );
         // scheduled bits + per-group eta
         let t = PolicyTable::parse("fc*=:bits=8..4/100,eta=2.0;*=dense").unwrap();
         let fc = t.resolve("fc0.w").unwrap();
-        assert_eq!(fc.bits, Some(Schedule::Linear { from: 8.0, to: 4.0, over: 100 }));
+        assert_eq!(
+            fc.bits,
+            Some(BitsSpec::Sched(Schedule::Linear { from: 8.0, to: 4.0, over: 100 }))
+        );
         assert_eq!(fc.eta, Some(2.0));
         assert_eq!(t.resolve("conv").unwrap().bits, None);
         // JSON round trip keeps both
@@ -571,6 +690,49 @@ mod tests {
             PolicyTable::from_json(&Json::parse(r#"[{"match":"a","bits":1}]"#).unwrap())
                 .is_err()
         );
+    }
+
+    #[test]
+    fn codec_keys_parse_validate_and_roundtrip() {
+        use crate::comm::codec::{IndexCodec, LevelKind};
+        // the ISSUE 5 spec surface: idx / levels / auto bits
+        let t = PolicyTable::parse(
+            "conv*=regtopk:bits=4,idx=rice,levels=nuq;fc*=:idx=raw;*=topk:bits=auto:4..8",
+        )
+        .unwrap();
+        let conv = t.resolve("conv0.w").unwrap();
+        assert_eq!(conv.idx, Some(IndexCodec::Rice));
+        assert_eq!(conv.levels, Some(LevelKind::Nuq));
+        assert_eq!(t.resolve("fc.w").unwrap().idx, Some(IndexCodec::Raw));
+        assert_eq!(
+            t.resolve("other").unwrap().bits,
+            Some(BitsSpec::Auto { lo: 4, hi: 8 })
+        );
+        // JSON round trip keeps every codec key
+        assert_eq!(PolicyTable::from_json(&t.to_json()).unwrap(), t);
+        // validation on both paths
+        assert!(PolicyTable::parse("g=topk:idx=huffman").is_err());
+        assert!(PolicyTable::parse("g=topk:levels=log").is_err());
+        assert!(PolicyTable::parse("g=topk:levels=nuq").is_err(), "levels needs bits");
+        assert!(PolicyTable::parse("g=topk:bits=auto:1..8").is_err());
+        assert!(PolicyTable::parse("g=topk:bits=auto:8..20").is_err());
+        assert!(PolicyTable::parse("g=topk:bits=auto:8..4").is_err(), "lo > hi");
+        assert!(PolicyTable::parse("g=topk:bits=auto:4").is_err(), "missing ..HI");
+        assert!(
+            PolicyTable::from_json(&Json::parse(r#"[{"match":"a","idx":"huffman"}]"#).unwrap())
+                .is_err()
+        );
+        assert!(
+            PolicyTable::from_json(
+                &Json::parse(r#"[{"match":"a","levels":"nuq"}]"#).unwrap()
+            )
+            .is_err(),
+            "levels without bits rejected on the JSON path too"
+        );
+        assert!(PolicyTable::from_json(
+            &Json::parse(r#"[{"match":"a","bits":{"auto":true,"lo":4,"hi":8}}]"#).unwrap()
+        )
+        .is_ok());
     }
 
     #[test]

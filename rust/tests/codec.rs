@@ -1,0 +1,377 @@
+//! Contract of the pluggable wire-codec stack (ISSUE 5 tentpole):
+//!
+//! 1. **Equivalence net** — with `idx`/`levels`/`bits` unset (in any
+//!    spelling of the defaults) the grouped trainer is bit-identical
+//!    to the pre-codec PR 4 tree for ALL EIGHT sparsifier families,
+//!    flat and grouped: same trajectories, same checkpoints, same
+//!    ledger byte totals, and the per-round bytes match the PR 4
+//!    formula `ceil(nnz * (32 + ceil(log2 dim)) / 8)` re-derived by
+//!    hand;
+//! 2. **Losslessness** — Golomb–Rice index payloads decode to exactly
+//!    the bucket's index list and value payloads decode bit-exact to
+//!    the bucket's values, for every codec pair at sizes
+//!    0/1/tiny/large;
+//! 3. **Accounting** — ledger bytes equal the codec payloads' own wire
+//!    accounting for every `idx` x `levels` combination, and an
+//!    `idx=rice` run transmits the SAME values as the packed baseline
+//!    (an index codec cannot touch the trajectory) for fewer bytes;
+//! 4. **Auto width** — `bits=auto:LO..HI` stays inside its range and
+//!    its trajectory is reproducible from a fresh build (pure function
+//!    of the data), with resume covered in `rust/tests/resume.rs`.
+
+use regtopk::comm::codec::{
+    index_bits, IndexCodec, LevelKind, QuantPayload, RicePayload, ValueCodec, WireCost,
+};
+use regtopk::config::TrainConfig;
+use regtopk::data::linear::{generate, LinearParams};
+use regtopk::experiments::fig2;
+use regtopk::grad::{GradLayout, GradView};
+use regtopk::sparse::{SparseUpdate, SparseVec};
+use regtopk::sparsify::{
+    BudgetPolicy, LayerwiseSparsifier, PolicyTable, RoundCtx, Sparsifier, SparsifierKind,
+};
+use regtopk::util::check;
+
+fn all_kinds(dim: usize) -> Vec<SparsifierKind> {
+    let k = (dim / 4).max(1);
+    vec![
+        SparsifierKind::Dense,
+        SparsifierKind::TopK { k },
+        SparsifierKind::RegTopK { k, mu: 0.5, q: 1.0 },
+        SparsifierKind::RandK { k, seed: 5 },
+        SparsifierKind::Threshold { tau: 0.5 },
+        SparsifierKind::GlobalTopK { k },
+        SparsifierKind::Dgc { k, momentum: 0.9, clip: 0.0 },
+        SparsifierKind::AdaK { ratio: 1.0, k_min: 1, k_max: 2 * k },
+    ]
+}
+
+fn grouped_layout() -> GradLayout {
+    GradLayout::from_sizes([("conv.w".to_string(), 16), ("conv.b".to_string(), 8)])
+}
+
+/// Equivalence net: every spelling of "default codecs" — no policy, an
+/// inherit-all rule, explicit `idx=packed`, explicit
+/// `bits=4,levels=uniform` vs plain `bits=4` — keeps the grouped
+/// trainer bit-identical across spellings for every family, and the
+/// codec-unset byte stream matches the PR 4 formula by hand.
+#[test]
+fn codec_unset_is_bit_identical_for_all_families() {
+    let params =
+        LinearParams { workers: 3, rows_per_worker: 60, dim: 24, ..LinearParams::fig2() };
+    let problem = generate(params, 7);
+    for kind in all_kinds(24) {
+        let base = TrainConfig {
+            workers: 3,
+            eta: 0.03,
+            sparsifier: kind.clone(),
+            eval_every: 0,
+            groups: Some(grouped_layout()),
+            budget: Some(BudgetPolicy::Global { k: 6 }),
+            ..TrainConfig::default()
+        };
+        // three spellings of "no codec"
+        let mut none = base.clone();
+        none.policy = None;
+        let mut inherit = base.clone();
+        inherit.policy = Some(PolicyTable::parse("*=").unwrap());
+        let mut packed = base.clone();
+        packed.policy = Some(PolicyTable::parse("*=:idx=packed").unwrap());
+        let mut tr_none = fig2::trainer_from_config(&none, &problem);
+        let mut tr_inherit = fig2::trainer_from_config(&inherit, &problem);
+        let mut tr_packed = fig2::trainer_from_config(&packed, &problem);
+        for _ in 0..12 {
+            tr_none.round();
+            tr_inherit.round();
+            tr_packed.round();
+        }
+        assert_eq!(tr_none.server.w, tr_inherit.server.w, "{kind:?} inherit-rule");
+        assert_eq!(tr_none.server.w, tr_packed.server.w, "{kind:?} idx=packed");
+        for (a, b) in tr_none.ledger.rounds().iter().zip(tr_packed.ledger.rounds()) {
+            assert_eq!(a.upload_bytes, b.upload_bytes, "{kind:?} round {}", a.round);
+        }
+        assert_eq!(
+            tr_none.ledger.group_upload_totals(),
+            tr_packed.ledger.group_upload_totals(),
+            "{kind:?}"
+        );
+        // the same for the two spellings of the default value codec
+        let mut u4 = base.clone();
+        u4.policy = Some(PolicyTable::parse("*=:bits=4").unwrap());
+        let mut u4x = base.clone();
+        u4x.policy = Some(PolicyTable::parse("*=:bits=4,levels=uniform").unwrap());
+        let mut tr_u4 = fig2::trainer_from_config(&u4, &problem);
+        let mut tr_u4x = fig2::trainer_from_config(&u4x, &problem);
+        for _ in 0..12 {
+            tr_u4.round();
+            tr_u4x.round();
+        }
+        assert_eq!(tr_u4.server.w, tr_u4x.server.w, "{kind:?} levels=uniform");
+        assert_eq!(
+            tr_u4.ledger.group_upload_totals(),
+            tr_u4x.ledger.group_upload_totals(),
+            "{kind:?}"
+        );
+    }
+}
+
+/// The codec-unset byte stream is the PR 4 formula, re-derived by hand
+/// from the updates themselves: per bucket,
+/// `ceil(nnz * (32 + ceil(log2 dim)) / 8)`.
+#[test]
+fn codec_unset_bytes_match_the_pr4_formula_by_hand() {
+    let layout = grouped_layout();
+    let mut lw = LayerwiseSparsifier::new(
+        &SparsifierKind::TopK { k: 6 },
+        layout.clone(),
+        &BudgetPolicy::Global { k: 6 },
+        0,
+    );
+    let mut gagg = vec![0.0f32; 24];
+    let mut up = SparseUpdate::empty();
+    let wc = WireCost::paper();
+    for t in 0..6 {
+        let g: Vec<f32> = (0..24).map(|i| ((i * 5 + t * 7) % 9) as f32 - 4.0).collect();
+        let ctx = RoundCtx { t, gagg_prev: &gagg, omega: 0.5, genie_acc: None };
+        let view = GradView::new(&layout, &g);
+        lw.step_group_into(&view, &ctx, &mut up);
+        let by_hand: usize = (0..up.num_buckets())
+            .map(|gi| {
+                let b = up.bucket(gi);
+                (b.nnz() * (32 + index_bits(b.dim()))).div_ceil(8)
+            })
+            .sum();
+        assert_eq!(wc.update(&up), by_hand, "t={t}");
+        gagg = up.flatten().to_dense();
+    }
+}
+
+/// Losslessness across the whole codec matrix on random buckets at
+/// boundary sizes: the index payload decodes to the exact index list
+/// and the value payload decodes bit-exact to the bucket values.
+#[test]
+fn codec_pairs_roundtrip_random_buckets() {
+    check::forall("codec_pair_roundtrip", |rng, _| {
+        // sizes 0 / 1 / tiny / large
+        let n = [0usize, 1, 1 + rng.below(7), 50 + rng.below(200)][rng.below(4)];
+        let dim = (n.max(1) * (1 + rng.below(2000))).max(2);
+        let mut idx = rng.sample_indices(dim, n);
+        idx.sort_unstable();
+        let idx: Vec<u32> = idx.into_iter().map(|i| i as u32).collect();
+        let vals: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let orig = SparseVec::new(dim, idx.clone(), vals.clone());
+        for levels in [None, Some(LevelKind::Uniform), Some(LevelKind::Nuq)] {
+            for idx_codec in [IndexCodec::Packed, IndexCodec::Raw, IndexCodec::Rice] {
+                let mut bucket = orig.clone();
+                let mut payload = QuantPayload::default();
+                // value axis
+                if let Some(lv) = levels {
+                    let bits = 2 + rng.below(15);
+                    let (mut residual, mut codes) = (Vec::new(), Vec::new());
+                    ValueCodec { bits, levels: lv }.encode_bucket(
+                        &mut bucket,
+                        rng,
+                        &mut payload,
+                        &mut residual,
+                        &mut codes,
+                    );
+                    for i in 0..n {
+                        assert_eq!(
+                            payload.decode_value(i),
+                            bucket.values()[i],
+                            "{lv:?} i={i}"
+                        );
+                        assert_eq!(residual[i], vals[i] - bucket.values()[i], "{lv:?} i={i}");
+                    }
+                }
+                // index axis
+                if idx_codec == IndexCodec::Rice {
+                    let mut rp = RicePayload::default();
+                    rp.encode_into(bucket.indices());
+                    assert_eq!(rp.decode(), idx, "rice dim={dim} n={n}");
+                }
+            }
+        }
+    });
+}
+
+/// Accounting contract across the matrix, end to end through a real
+/// sparsifier stack: ledger bytes equal the payloads' own accounting
+/// for every `idx` x `levels` pair.
+#[test]
+fn ledger_bytes_equal_codec_accounting_for_every_pair() {
+    use regtopk::comm::{CostModel, Ledger};
+    let layout = GradLayout::from_sizes([("a".to_string(), 256), ("b".to_string(), 256)]);
+    let specs = [
+        "*=:idx=raw",
+        "*=:idx=rice",
+        "*=:bits=5",
+        "*=:bits=5,idx=rice",
+        "*=:bits=5,levels=nuq",
+        "*=:bits=5,idx=raw,levels=nuq",
+        "a=:bits=4,idx=rice;b=:idx=raw",
+    ];
+    for spec in specs {
+        let table = PolicyTable::parse(spec).unwrap();
+        let mut lw = LayerwiseSparsifier::with_policies(
+            &SparsifierKind::TopK { k: 24 },
+            layout.clone(),
+            &BudgetPolicy::Global { k: 24 },
+            &table,
+            0,
+        );
+        let cost = CostModel::default();
+        let mut ledger = Ledger::new(cost);
+        ledger.set_layout(&layout);
+        let gagg = vec![0.0f32; 512];
+        let mut up = SparseUpdate::empty();
+        let mut want = [0usize; 2];
+        for t in 0..4 {
+            let g: Vec<f32> =
+                (0..512).map(|i| ((i * 5 + t * 3) % 13) as f32 - 6.0).collect();
+            let ctx = RoundCtx { t, gagg_prev: &gagg, omega: 1.0, genie_acc: None };
+            let view = GradView::new(&layout, &g);
+            lw.step_group_into(&view, &ctx, &mut up);
+            ledger.record_update(&up);
+            ledger.close_round(t, 512, 1);
+            for gi in 0..2 {
+                let b = up.bucket(gi);
+                // re-derive the charge from the payloads alone
+                let vbytes = match (up.quant(gi), up.rice(gi).is_some(), up.raw_index(gi)) {
+                    (Some(q), true, _) => q.wire_bytes(0),
+                    (Some(q), false, true) => q.wire_bytes(32),
+                    (Some(q), false, false) => q.wire_bytes(index_bits(b.dim())),
+                    (None, true, _) => (b.nnz() * 32).div_ceil(8),
+                    (None, false, true) => (b.nnz() * (32 + 32)).div_ceil(8),
+                    (None, false, false) => {
+                        (b.nnz() * (32 + index_bits(b.dim()))).div_ceil(8)
+                    }
+                };
+                want[gi] += vbytes + up.rice(gi).map_or(0, RicePayload::wire_bytes);
+                // rice payloads always decode to the bucket's indices
+                if let Some(rp) = up.rice(gi) {
+                    assert_eq!(rp.decode(), b.indices(), "{spec} g={gi}");
+                }
+            }
+        }
+        let totals = ledger.group_upload_totals();
+        for gi in 0..2 {
+            assert_eq!(totals[gi].1, want[gi], "{spec} group {gi}");
+        }
+    }
+}
+
+/// An index codec cannot touch the trajectory: `idx=rice` transmits
+/// the same values as the packed baseline — the model walks the same
+/// path — while the ledger reports fewer bytes.
+#[test]
+fn rice_run_matches_baseline_trajectory_with_fewer_bytes() {
+    let params =
+        LinearParams { workers: 3, rows_per_worker: 60, dim: 24, ..LinearParams::fig2() };
+    let problem = generate(params, 9);
+    let base = TrainConfig {
+        workers: 3,
+        eta: 0.03,
+        sparsifier: SparsifierKind::RegTopK { k: 8, mu: 0.5, q: 1.0 },
+        eval_every: 0,
+        groups: Some(GradLayout::single(24)),
+        budget: Some(BudgetPolicy::Global { k: 8 }),
+        ..TrainConfig::default()
+    };
+    let mut riced = base.clone();
+    riced.policy = Some(PolicyTable::parse("*=:idx=rice").unwrap());
+    let mut tr_a = fig2::trainer_from_config(&base, &problem);
+    let mut tr_b = fig2::trainer_from_config(&riced, &problem);
+    for _ in 0..15 {
+        tr_a.round();
+        tr_b.round();
+    }
+    assert_eq!(tr_a.server.w, tr_b.server.w, "index codec changed the trajectory");
+    let (a, b) = (tr_a.ledger.total_upload_bytes(), tr_b.ledger.total_upload_bytes());
+    assert!(b < a, "rice {b} !< packed {a}");
+    // the manifest echo surfaces the codec
+    let echo = tr_b.config_echo();
+    let resolved = echo.get("resolved").and_then(|r| r.as_arr()).unwrap();
+    assert_eq!(resolved[0].get("idx").and_then(|j| j.as_str()), Some("rice"));
+    assert_eq!(resolved[0].get("levels").and_then(|j| j.as_str()), Some("f32"));
+}
+
+/// NUQ value codec end to end: converges in a sane band of the
+/// unquantized run at a fraction of the bytes (same contract the
+/// uniform codec satisfies in `rust/tests/quantized.rs`).
+#[test]
+fn nuq_training_converges_with_fewer_bytes() {
+    let params =
+        LinearParams { workers: 4, rows_per_worker: 100, dim: 40, ..LinearParams::fig2() };
+    let problem = generate(params, 11);
+    let layout =
+        GradLayout::from_sizes([("fc0.w".to_string(), 32), ("fc0.b".to_string(), 8)]);
+    let base = TrainConfig {
+        workers: 4,
+        eta: 0.03,
+        sparsifier: SparsifierKind::RegTopK { k: 10, mu: 0.5, q: 1.0 },
+        eval_every: 1,
+        groups: Some(layout),
+        budget: Some(BudgetPolicy::Global { k: 10 }),
+        ..TrainConfig::default()
+    };
+    let mut nuq = base.clone();
+    nuq.policy = Some(PolicyTable::parse("*=:bits=5,levels=nuq").unwrap());
+    let mut tr_raw = fig2::trainer_from_config(&base, &problem);
+    let mut tr_q = fig2::trainer_from_config(&nuq, &problem);
+    let log_raw = fig2::run_curve_with(&mut tr_raw, &problem, "raw", 250);
+    let log_q = fig2::run_curve_with(&mut tr_q, &problem, "nuq5", 250);
+    let gap_raw = log_raw.last().unwrap().opt_gap;
+    let gap_q = log_q.last().unwrap().opt_gap;
+    assert!(gap_q.is_finite() && gap_q < 6.0 * gap_raw.max(0.05), "{gap_q} vs {gap_raw}");
+    let bytes_raw = tr_raw.ledger.total_upload_bytes();
+    let bytes_q = tr_q.ledger.total_upload_bytes();
+    assert!((bytes_q as f64) < 0.55 * bytes_raw as f64, "nuq {bytes_q} vs raw {bytes_raw}");
+}
+
+/// Auto width end to end: the width stays inside the policy range,
+/// the run converges, and a fresh build replays the identical
+/// trajectory (the steering is a pure function of the data).
+#[test]
+fn auto_bits_trajectory_is_reproducible_and_in_range() {
+    let params =
+        LinearParams { workers: 3, rows_per_worker: 60, dim: 24, ..LinearParams::fig2() };
+    let problem = generate(params, 13);
+    let cfg = TrainConfig {
+        workers: 3,
+        eta: 0.03,
+        sparsifier: SparsifierKind::TopK { k: 6 },
+        eval_every: 0,
+        groups: Some(grouped_layout()),
+        budget: Some(BudgetPolicy::Global { k: 6 }),
+        policy: Some(PolicyTable::parse("*=:bits=auto:4..8").unwrap()),
+        ..TrainConfig::default()
+    };
+    let mut tr_a = fig2::trainer_from_config(&cfg, &problem);
+    let mut tr_b = fig2::trainer_from_config(&cfg, &problem);
+    for _ in 0..20 {
+        tr_a.round();
+        tr_b.round();
+        let bits = tr_a.workers[0].sparsifier.group_value_bits();
+        assert!(bits.iter().all(|&b| (4..=8).contains(&b)), "{bits:?}");
+    }
+    assert_eq!(tr_a.server.w, tr_b.server.w, "auto width must be deterministic");
+    assert_eq!(tr_a.ledger.total_upload_bytes(), tr_b.ledger.total_upload_bytes());
+    assert!(tr_a.server.w.iter().all(|w| w.is_finite()));
+}
+
+/// The packed/raw/rice accounting helpers agree with a brute-force
+/// bit count (pinning the exact PR 4 constants one more way).
+#[test]
+fn wire_cost_formula_pins() {
+    let wc = WireCost::paper();
+    // the PR 2 pin: J=100, 10 entries -> 49 bytes
+    assert_eq!(wc.raw_bucket(10, 100), 49);
+    // quantized: 10 entries at 4 bits + 10 index bits + scale = 22
+    assert_eq!(QuantPayload::bytes_for(10, 4, 10), 22);
+    // a rice bucket charges the measured stream + 1-byte parameter
+    let mut rp = RicePayload::default();
+    rp.encode_into(&[0, 1, 2, 3]);
+    assert_eq!(rp.wire_bytes(), 1 + rp.bit_len().div_ceil(8));
+    assert_eq!(rp.bit_len(), 4, "zero gaps cost one terminator bit each");
+}

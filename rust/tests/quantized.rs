@@ -18,12 +18,13 @@
 //! 4. per-group `eta` scaling steps the scaled slice harder without
 //!    touching the broadcast aggregate.
 
+use regtopk::comm::codec::{index_bits, QuantPayload};
 use regtopk::comm::{CostModel, Ledger};
 use regtopk::config::TrainConfig;
 use regtopk::data::linear::{generate, LinearParams};
 use regtopk::experiments::fig2;
 use regtopk::grad::{GradLayout, GradView};
-use regtopk::sparse::{index_bits, QuantPayload, SparseUpdate};
+use regtopk::sparse::SparseUpdate;
 use regtopk::sparsify::{
     BudgetPolicy, LayerwiseSparsifier, PolicyTable, RoundCtx, Sparsifier, SparsifierKind,
 };
@@ -187,7 +188,7 @@ fn ledger_bytes_equal_packed_payload_sizes_mixed_widths() {
         ledger.close_round(t, 48, 1);
         for gi in 0..3 {
             want[gi] += match up.quant(gi) {
-                Some(q) => cost.update_bytes_packed(up.bucket(gi), q),
+                Some(q) => q.wire_bytes(index_bits(up.bucket(gi).dim())),
                 None => cost.update_bytes(up.bucket(gi)),
             };
         }

@@ -154,6 +154,35 @@ fn resume_equals_uninterrupted_quantized_transmission() {
 }
 
 #[test]
+fn resume_equals_uninterrupted_codec_stack() {
+    // ISSUE 5: the codec stack checkpoints cleanly — the Rice index
+    // codec and NUQ levels are stateless per round, and the
+    // residual-steered `bits=auto` width travels in the `.ef` sidecar
+    // (SparsifierState::Quantized.auto_bits, tag 7) so a resumed run
+    // continues at exactly the width the uninterrupted run reached.
+    let cfg = TrainConfig {
+        workers: 3,
+        eta: 0.03,
+        sparsifier: SparsifierKind::RegTopK { k: 6, mu: 0.5, q: 1.0 },
+        eval_every: 0,
+        groups: Some(GradLayout::from_sizes([
+            ("conv.w".to_string(), 12),
+            ("conv.b".to_string(), 4),
+            ("fc.w".to_string(), 8),
+        ])),
+        budget: Some(BudgetPolicy::Proportional { frac: 0.25 }),
+        policy: Some(
+            PolicyTable::parse(
+                "*.b=dense;conv*=regtopk:bits=auto:4..8,idx=rice;*=topk:bits=5,levels=nuq",
+            )
+            .unwrap(),
+        ),
+        ..TrainConfig::default()
+    };
+    assert_resume_exact("codec", &cfg, 5, 13);
+}
+
+#[test]
 fn legacy_model_only_checkpoint_still_restores_cold() {
     let (params, seed) = testbed();
     let problem = generate(params, seed);

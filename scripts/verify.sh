@@ -66,6 +66,19 @@ target/release/repro train --config "$smoke_dir/cfg.json" \
 # accuracy-vs-wire-bytes sweep row (EXPERIMENTS.md §Quantization)
 target/release/repro sweep --param bits --iters 40 --s 0.2
 
+echo "== codec smoke: idx/levels policies + sweep --param codec =="
+# the full wire stack on one run: entropy-coded indices, NUQ levels,
+# and a residual-steered width (ISSUE 5 tentpole); the per-group table
+# must show the idx column
+target/release/repro train --config "$smoke_dir/cfg.json" \
+    --groups conv:60,fc:40 --budget prop:0.1 \
+    --policy 'conv*=regtopk:bits=4,idx=rice,levels=nuq;*=topk:bits=auto:4..8' \
+    --out "$smoke_dir/out"
+# codec matrix sweep (EXPERIMENTS.md §Compression) + the entropy-coded
+# comm-table columns (measured rice bits vs the log J bound)
+target/release/repro sweep --param codec --iters 40 --s 0.2
+target/release/repro comm --s 0.01 --iters 5
+
 if [[ "${1:-}" == "--full" ]]; then
     echo "== bench (full budget) =="
     cargo bench --bench topk_select
@@ -73,6 +86,7 @@ if [[ "${1:-}" == "--full" ]]; then
     BENCH_JSON=BENCH_PR2.json cargo bench --bench layerwise
     BENCH_JSON=BENCH_PR3.json cargo bench --bench heterogeneous
     BENCH_JSON=BENCH_PR4.json cargo bench --bench quantized
+    BENCH_JSON=BENCH_PR5.json cargo bench --bench codec
 else
     echo "== bench smoke (quick budget) =="
     BENCH_BUDGET_MS=60 cargo bench --bench topk_select
@@ -80,6 +94,7 @@ else
     BENCH_BUDGET_MS=60 BENCH_JSON=BENCH_PR2.json cargo bench --bench layerwise
     BENCH_BUDGET_MS=60 BENCH_JSON=BENCH_PR3.json cargo bench --bench heterogeneous
     BENCH_BUDGET_MS=60 BENCH_JSON=BENCH_PR4.json cargo bench --bench quantized
+    BENCH_BUDGET_MS=60 BENCH_JSON=BENCH_PR5.json cargo bench --bench codec
 fi
 
 echo "verify: OK"
