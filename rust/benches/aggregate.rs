@@ -1,0 +1,97 @@
+//! Server-side aggregation: dense densify-then-step loop vs the PR 6
+//! sparse union merge (`coordinator::merge_updates`).
+//!
+//!     cargo bench --bench aggregate
+//!
+//! Grid: k/J in {0.1%, 1%, 10%} x n in {4, 16} workers at J = 2^20.
+//! The dense reference pays O(J + n·k) per round (zero-fill plus
+//! scatter-adds); the merge pays O(k·n) on the union support.  Results
+//! merge into BENCH_PR6.json (override with $BENCH_JSON).
+//!
+//! Two acceptance gates, checked on every grid point / the paper's
+//! regime respectively:
+//! - the merged aggregate is bit-identical to the dense reference
+//!   (same per-index add order, so not just close — equal),
+//! - at 0.1% sparsity (the paper's Fig. 3 regime) the sparse merge
+//!   beats the dense loop at both worker counts.
+
+use std::path::Path;
+
+use regtopk::coordinator::merge_updates;
+use regtopk::sparse::{SparseUpdate, SparseVec};
+use regtopk::util::bench::{black_box, Bench};
+use regtopk::util::rng::Rng;
+
+fn bench_json_path() -> String {
+    std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_PR6.json".to_string())
+}
+
+/// One worker's update: k sorted uniform indices with gaussian values
+/// over a flat J-dim layout (uniform supports are the merge's worst
+/// case — real top-k unions overlap and shrink the output).
+fn worker_update(dim: usize, k: usize, rng: &mut Rng) -> SparseUpdate {
+    let mut idx: Vec<u32> =
+        rng.sample_indices(dim, k).into_iter().map(|i| i as u32).collect();
+    idx.sort_unstable();
+    let vals: Vec<f32> = (0..k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    SparseUpdate::single(SparseVec::new(dim, idx, vals))
+}
+
+fn main() {
+    let mut b = Bench::new();
+    let dim = 1 << 20;
+    println!("# server aggregation at J={dim}: dense zero-fill+axpy vs sparse union merge");
+    let mut gates: Vec<(String, f64, f64)> = Vec::new();
+    for n in [4usize, 16] {
+        for frac in [0.001f64, 0.01, 0.1] {
+            let k = ((dim as f64 * frac) as usize).max(1);
+            let mut rng = Rng::seed_from(0xA6_6000 + n as u64);
+            let ups: Vec<SparseUpdate> =
+                (0..n).map(|_| worker_update(dim, k, &mut rng)).collect();
+            let omega = 1.0 / n as f32;
+            let weighted: Vec<(f32, &SparseUpdate)> =
+                ups.iter().map(|u| (omega, u)).collect();
+            let label = format!("n={n}/kfrac={frac}");
+            // dense reference: the PR 5 server loop (zero-fill J, then
+            // densify every worker's update in id order)
+            let mut dense = vec![0.0f32; dim];
+            let td = b.run_throughput(&format!("aggregate/dense/{label}"), n * k, || {
+                dense.iter_mut().for_each(|v| *v = 0.0);
+                for (w, up) in &weighted {
+                    up.axpy_into(*w, &mut dense);
+                }
+                black_box(dense[0]);
+            });
+            let mut out = SparseUpdate::empty();
+            let ts =
+                b.run_throughput(&format!("aggregate/sparse_merge/{label}"), n * k, || {
+                    merge_updates(&weighted, &mut out);
+                    black_box(out.nnz());
+                });
+            // bit-identity gate: identical per-index add order means
+            // the merge must EQUAL the dense aggregate, not approximate it
+            assert_eq!(out.to_dense(), dense, "sparse merge must be bit-identical ({label})");
+            println!(
+                "# {label}: dense {} vs sparse {} ({:.1}x)",
+                regtopk::util::bench::fmt_time(td),
+                regtopk::util::bench::fmt_time(ts),
+                td / ts.max(1e-12)
+            );
+            if frac == 0.001 {
+                gates.push((label, td, ts));
+            }
+        }
+    }
+    // perf gate: at the paper's 0.1% regime the O(k·n) merge must beat
+    // the O(J) dense loop at every worker count
+    for (label, td, ts) in &gates {
+        assert!(
+            ts < td,
+            "sparse merge must win at 0.1% sparsity: {label} sparse {ts}s vs dense {td}s"
+        );
+    }
+    let path = bench_json_path();
+    b.write_json(Path::new(&path))
+        .unwrap_or_else(|e| eprintln!("# could not write {path}: {e}"));
+    println!("# wrote {} results to {path}", b.results().len());
+}

@@ -105,6 +105,22 @@ impl Ledger {
         self.upload_sizes.clear();
     }
 
+    /// Record a SPARSE server broadcast and close the round: the
+    /// downlink is charged through `codec::WireCost::update` on the
+    /// encoded aggregate — indices, packed value codes, Rice streams
+    /// and all — instead of the dense `32·J`-bit formula.  Only active
+    /// when a downlink codec is configured; [`Self::close_round`]
+    /// stays the dense-broadcast path, untouched.
+    pub fn close_round_sparse(&mut self, round: usize, gagg: &SparseUpdate, n_workers: usize) {
+        let bt = self.cost.wire().update(gagg);
+        self.current.download_bytes = bt * n_workers;
+        self.current.round = round;
+        self.current.sim_time_s = self.cost.round_time(&self.upload_sizes, bt, n_workers);
+        self.rounds.push(self.current);
+        self.current = RoundTraffic::default();
+        self.upload_sizes.clear();
+    }
+
     pub fn rounds(&self) -> &[RoundTraffic] {
         &self.rounds
     }
@@ -181,6 +197,27 @@ mod tests {
         assert_eq!(l.rounds().len(), 3);
         assert_eq!(l.total_upload_bytes(), 3 * l.cost.update_bytes(&SparseVec::new(64, vec![1], vec![1.0])));
         assert_eq!(l.total_download_bytes(), 3 * 256);
+    }
+
+    #[test]
+    fn sparse_close_charges_wire_bytes_not_dense_formula() {
+        let mut l = Ledger::new(CostModel::default());
+        let sv = SparseVec::new(1 << 10, vec![3, 700], vec![1.0, -2.0]);
+        let gagg = SparseUpdate::single(sv.clone());
+        l.record_upload(&sv);
+        l.close_round_sparse(0, &gagg, 4);
+        let r = l.rounds()[0];
+        // 2 entries * (32+10) bits = 84 bits -> 11 bytes, times 4 workers
+        assert_eq!(r.download_bytes, 11 * 4);
+        assert!(r.download_bytes < l.cost.broadcast_bytes(1 << 10) * 4);
+        assert!(r.sim_time_s > 0.0);
+        // an encoded aggregate is charged at its measured payload size
+        let mut enc = SparseUpdate::single(sv);
+        let idx: Vec<u32> = enc.bucket(0).indices().to_vec();
+        enc.payload_mut(0).rice.encode_into(&idx);
+        let mut l2 = Ledger::new(CostModel::default());
+        l2.close_round_sparse(0, &enc, 1);
+        assert_eq!(l2.rounds()[0].download_bytes, l2.cost.wire().update(&enc));
     }
 
     #[test]

@@ -35,6 +35,10 @@ pub enum Msg {
     Update { worker: usize, round: usize, update: SparseUpdate, loss: f32 },
     /// server -> workers: aggregated gradient for round `round`
     Broadcast { round: usize, gagg: Vec<f32> },
+    /// server -> workers: model + sparse aggregate (downlink codec
+    /// active); workers reconstruct dense `gagg_prev` from the union
+    /// support — exact when the value codec is lossless
+    SparseBroadcast { round: usize, w: Vec<f32>, gagg: SparseUpdate },
 }
 
 /// Link parameters for simulated transfer-time accounting.

@@ -47,6 +47,12 @@ pub struct TrainConfig {
     /// per group-name glob); only consulted when `groups` is set.
     /// None/empty = the homogeneous layer-wise path.
     pub policy: Option<PolicyTable>,
+    /// downlink (server -> worker) codec policy over the sparse
+    /// aggregate g^t: codec-only rules (`bits=`/`idx=`/`levels=` per
+    /// group glob; a bare `*=` is the lossless sparse broadcast).
+    /// Applies to flat runs too (single `all` group).  None = the
+    /// dense 32·J-bit broadcast, bit-identical to the pre-PR 6 tree.
+    pub downlink: Option<PolicyTable>,
 }
 
 impl Default for TrainConfig {
@@ -64,6 +70,7 @@ impl Default for TrainConfig {
             groups: None,
             budget: None,
             policy: None,
+            downlink: None,
         }
     }
 }
@@ -228,6 +235,12 @@ impl TrainConfig {
                     m.insert("policy".to_string(), p.to_json());
                 }
             }
+            // the downlink codec compresses the aggregate broadcast,
+            // which every run has — flat runs included — so it is
+            // echoed unconditionally
+            if let Some(d) = &self.downlink {
+                m.insert("downlink".to_string(), d.to_json());
+            }
         }
         j
     }
@@ -273,6 +286,11 @@ impl TrainConfig {
         }
         if let Some(p) = j.get("policy") {
             c.policy = Some(PolicyTable::from_json(p)?);
+        }
+        if let Some(d) = j.get("downlink") {
+            let t = PolicyTable::from_json(d)?;
+            t.validate_downlink()?;
+            c.downlink = Some(t);
         }
         if let Some(sp) = j.get("sparsifier") {
             let name = sp.get("name").and_then(Json::as_str).ok_or("sparsifier.name missing")?;
@@ -345,6 +363,7 @@ mod tests {
                 PolicyTable::parse("conv*=regtopk:mu=0.5..0.1/100;*.b=dense;*=topk")
                     .unwrap(),
             ),
+            downlink: Some(PolicyTable::parse("conv*=:bits=8,idx=rice;*=").unwrap()),
         };
         let c2 = TrainConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(c2, c, "a config field was dropped by the JSON round trip");
@@ -366,6 +385,29 @@ mod tests {
         assert!(j.get("policy").is_none());
         let c2 = TrainConfig::from_json(&j).unwrap();
         assert!(c2.budget.is_none() && c2.policy.is_none());
+    }
+
+    #[test]
+    fn downlink_roundtrips_flat_and_rejects_sparsifier_keys() {
+        // downlink applies to flat runs too, so it is echoed without
+        // groups — unlike budget/policy
+        let mut c = TrainConfig::default();
+        c.downlink = Some(PolicyTable::parse("*=:bits=8").unwrap());
+        let j = c.to_json();
+        assert!(j.get("downlink").is_some());
+        let c2 = TrainConfig::from_json(&j).unwrap();
+        assert_eq!(c2.downlink, c.downlink);
+        // the JSON path enforces codec-only downlink rules
+        let bad = Json::parse(
+            r#"{"downlink": [{"match": "*", "family": "topk"}]}"#,
+        )
+        .unwrap();
+        assert!(TrainConfig::from_json(&bad).is_err());
+        let auto = Json::parse(
+            r#"{"downlink": [{"match": "*", "bits": {"auto": true, "lo": 4, "hi": 8}}]}"#,
+        )
+        .unwrap();
+        assert!(TrainConfig::from_json(&auto).is_err(), "auto bits are worker-side only");
     }
 
     #[test]

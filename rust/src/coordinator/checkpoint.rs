@@ -24,9 +24,26 @@ use crate::util::json::{obj, Json};
 #[derive(Clone, Debug, PartialEq)]
 pub struct TrainState {
     /// g^{t-1}: the aggregate broadcast in the last completed round
+    /// (always stored dense; a sparse-broadcast run densifies via its
+    /// mirror, which is exact — see `coordinator::GaggMirror`)
     pub gagg_prev: Vec<f32>,
     /// one sparsifier state per worker, in worker-id order
     pub workers: Vec<SparsifierState>,
+    /// downlink codec state (PR 6); None when the run broadcasts dense,
+    /// and absent entirely from pre-PR 6 sidecars — the section is
+    /// additive, so old `.ef` files encode/decode byte-identically
+    pub downlink: Option<DownlinkState>,
+}
+
+/// Resume state for the server's downlink codec: just its stochastic-
+/// rounding stream.  The aggregate support need not be saved — after a
+/// restore the server's sparse mirror starts empty (consistent with
+/// its zeroed dense mirror) and `gagg_prev` is rebuilt from the dense
+/// snapshot above, so the next round proceeds bit-identically.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DownlinkState {
+    pub rng: [u64; 4],
+    pub gauss_spare: Option<f64>,
 }
 
 /// A saved training state.
@@ -223,6 +240,16 @@ fn encode_train_state(st: &TrainState) -> Vec<u8> {
     for w in &st.workers {
         encode_state(&mut out, w);
     }
+    // additive downlink section (PR 6): written only when present, so
+    // downlink-free runs produce byte-identical sidecars to PR 5
+    if let Some(dl) = &st.downlink {
+        out.extend_from_slice(b"DLNK");
+        for word in dl.rng {
+            out.extend_from_slice(&word.to_le_bytes());
+        }
+        out.push(dl.gauss_spare.is_some() as u8);
+        out.extend_from_slice(&dl.gauss_spare.unwrap_or(0.0).to_le_bytes());
+    }
     out
 }
 
@@ -338,10 +365,21 @@ fn decode_train_state(bytes: &[u8]) -> Result<TrainState> {
     for _ in 0..n {
         workers.push(c.state(0)?);
     }
+    let downlink = if c.i == bytes.len() {
+        None // pre-PR 6 sidecar: no downlink section
+    } else {
+        if c.take(4)? != b"DLNK" {
+            bail!("bad downlink-state magic");
+        }
+        let rng = [c.u64()?, c.u64()?, c.u64()?, c.u64()?];
+        let has_spare = c.u8()? != 0;
+        let spare = c.f64()?;
+        Some(DownlinkState { rng, gauss_spare: has_spare.then_some(spare) })
+    };
     if c.i != bytes.len() {
         bail!("trailing bytes in resume state");
     }
-    Ok(TrainState { gagg_prev, workers })
+    Ok(TrainState { gagg_prev, workers, downlink })
 }
 
 #[cfg(test)]
@@ -443,6 +481,7 @@ mod tests {
                     auto_bits: Some(5),
                 },
             ],
+            downlink: None,
         };
         let bytes = encode_train_state(&state);
         assert_eq!(decode_train_state(&bytes).unwrap(), state);
@@ -452,6 +491,35 @@ mod tests {
         let mut extra = bytes.clone();
         extra.push(0);
         assert!(decode_train_state(&extra).is_err(), "trailing bytes");
+        // downlink codec state (PR 6) rides an additive trailing section
+        for spare in [Some(-1.25), None] {
+            let with_dl = TrainState {
+                downlink: Some(DownlinkState { rng: [11, 13, 17, 19], gauss_spare: spare }),
+                ..state.clone()
+            };
+            let dl_bytes = encode_train_state(&with_dl);
+            assert_eq!(decode_train_state(&dl_bytes).unwrap(), with_dl);
+            assert_eq!(&dl_bytes[..bytes.len()], &bytes[..], "section is purely additive");
+            assert!(decode_train_state(&dl_bytes[..dl_bytes.len() - 1]).is_err());
+        }
+    }
+
+    #[test]
+    fn downlink_free_sidecar_keeps_the_legacy_byte_format() {
+        // a run without a downlink codec must write exactly the PR 5
+        // bytes: magic + gagg_prev + worker count + worker states,
+        // nothing after
+        let state = TrainState {
+            gagg_prev: vec![1.0, -2.0],
+            workers: vec![SparsifierState::Stateless],
+            downlink: None,
+        };
+        let bytes = encode_train_state(&state);
+        let mut want = b"RTKS".to_vec();
+        put_f32s(&mut want, &[1.0, -2.0]);
+        put_u32(&mut want, 1);
+        want.push(0); // Stateless tag
+        assert_eq!(bytes, want);
     }
 
     #[test]
@@ -465,6 +533,7 @@ mod tests {
                 mask_prev: vec![0.0, 1.0],
                 warm: true,
             })],
+            downlink: Some(DownlinkState { rng: [1, 2, 3, 4], gauss_spare: None }),
         };
         let ck = Checkpoint::with_state(7, vec![1.0, -1.0], Json::Null, state);
         ck.save(&path).unwrap();

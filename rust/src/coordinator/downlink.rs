@@ -1,0 +1,315 @@
+//! Downlink codec: compress the sparse aggregate g^t for the
+//! server -> worker broadcast (PR 6 tentpole).
+//!
+//! The same per-group `comm::codec` stack that encodes worker uploads
+//! applies symmetrically to the downlink via the `downlink` policy
+//! axis (`bits=`/`idx=`/`levels=` rules over group-name globs; a bare
+//! `*=` rule is the lossless sparse broadcast — raw f32 values over
+//! the union support).  The codec runs AFTER the optimizer step, so
+//! the model always steps on the exact aggregate; workers — and the
+//! trainer's own `gagg_prev` — see the decoded broadcast, identically
+//! on both drivers.  When the value codec is lossless, RegTop-k's
+//! posterior statistics see the identical aggregate.
+//!
+//! Two deliberate asymmetries vs the uplink stack:
+//! - no error feedback: the quantization residual is discarded (the
+//!   aggregate is re-derived each round; a server-side EF loop would
+//!   change the algorithm, not just the wire),
+//! - no `bits=auto`: the residual-steered width lives in the
+//!   worker-side sparsifier wrappers ([`PolicyTable::validate_downlink`]
+//!   rejects it).
+
+use crate::comm::codec::{IndexCodec, LevelKind, ValueCodec};
+use crate::grad::GradLayout;
+use crate::sparse::SparseUpdate;
+use crate::sparsify::{BitsSpec, PolicyTable, Schedule};
+use crate::util::rng::Rng;
+
+/// Stream tag for the downlink stochastic-rounding RNG, derived from
+/// the run seed (disjoint from the worker/data streams by the
+/// `Rng::derive` construction).
+const DOWNLINK_STREAM: u64 = 0x646f_776e_6c6b;
+
+/// One group's resolved downlink stack.
+struct DownGroup {
+    /// value width schedule (None = raw f32 values)
+    bits: Option<Schedule>,
+    levels: LevelKind,
+    idx: IndexCodec,
+}
+
+/// Server-side downlink encoder: resolves the codec-only policy table
+/// against the run's layout once, then encodes the aggregate in place
+/// each round.
+pub struct DownlinkCodec {
+    groups: Vec<DownGroup>,
+    rng: Rng,
+    /// scratch the value codec writes its (discarded) residual into
+    residual: Vec<f32>,
+    codes: Vec<u32>,
+}
+
+impl DownlinkCodec {
+    /// Resolve `table` against `layout` (first matching rule per
+    /// group; unmatched groups broadcast raw).  Panics on a table that
+    /// fails [`PolicyTable::validate_downlink`] — config loading and
+    /// the CLI validate earlier, so this guards programmatic misuse.
+    pub fn new(table: &PolicyTable, layout: &GradLayout, seed: u64) -> Self {
+        table.validate_downlink().expect("invalid downlink policy");
+        let groups = layout
+            .groups()
+            .iter()
+            .map(|g| match table.resolve(&g.name) {
+                Some(p) => DownGroup {
+                    bits: match &p.bits {
+                        Some(BitsSpec::Sched(s)) => Some(s.clone()),
+                        // rejected by validate_downlink above
+                        Some(BitsSpec::Auto { .. }) => unreachable!(),
+                        None => None,
+                    },
+                    levels: p.levels.unwrap_or_default(),
+                    idx: p.idx.unwrap_or_default(),
+                },
+                None => DownGroup {
+                    bits: None,
+                    levels: LevelKind::default(),
+                    idx: IndexCodec::default(),
+                },
+            })
+            .collect();
+        DownlinkCodec {
+            groups,
+            rng: Rng::seed_from(seed).derive(DOWNLINK_STREAM),
+            residual: Vec::new(),
+            codes: Vec::new(),
+        }
+    }
+
+    /// Encode the aggregate in place for round `t`: values are
+    /// stochastically rounded onto the configured grid (the bucket
+    /// ends up holding the exact decode), index payloads are attached
+    /// for `idx=rice`/`idx=raw` groups.  Empty buckets are skipped
+    /// entirely — they cost nothing on the wire and (like all-zero
+    /// buckets inside the value codec) consume nothing from the
+    /// rounding stream, so checkpoint resume stays bit-exact.
+    pub fn encode(&mut self, up: &mut SparseUpdate, t: usize) {
+        assert_eq!(
+            up.num_buckets(),
+            self.groups.len(),
+            "aggregate bucketing does not match the downlink layout"
+        );
+        for g in 0..up.num_buckets() {
+            if up.bucket(g).nnz() == 0 {
+                continue;
+            }
+            let gr = &self.groups[g];
+            if let Some(sched) = &gr.bits {
+                let bits = sched.at(t).round() as i64;
+                // widths outside the packable range are raw passthrough
+                // for the round (same contract as the uplink stack)
+                if (2..=16).contains(&bits) {
+                    let vc = ValueCodec { bits: bits as usize, levels: gr.levels };
+                    let (bucket, payload) = up.bucket_payload_mut(g);
+                    vc.encode_bucket(
+                        bucket,
+                        &mut self.rng,
+                        &mut payload.value,
+                        &mut self.residual,
+                        &mut self.codes,
+                    );
+                }
+            }
+            match gr.idx {
+                IndexCodec::Packed => {}
+                IndexCodec::Raw => up.payload_mut(g).raw_index = true,
+                IndexCodec::Rice => {
+                    let (bucket, payload) = up.bucket_payload_mut(g);
+                    payload.rice.encode_into(bucket.indices());
+                }
+            }
+        }
+    }
+
+    /// Whether any group quantizes values (false = the broadcast is a
+    /// lossless re-indexing of the exact aggregate).
+    pub fn is_lossless(&self) -> bool {
+        self.groups.iter().all(|g| g.bits.is_none())
+    }
+
+    /// Snapshot the rounding stream for checkpointing.
+    pub fn rng_state(&self) -> ([u64; 4], Option<f64>) {
+        self.rng.state()
+    }
+
+    /// Restore the rounding stream from a checkpoint snapshot.
+    pub fn restore_rng(&mut self, s: [u64; 4], gauss_spare: Option<f64>) {
+        self.rng = Rng::from_state(s, gauss_spare);
+    }
+}
+
+/// Worker-side reconstruction of dense `gagg_prev` from the sparse
+/// broadcast: clear the previous round's support to +0.0, scatter the
+/// new values, remember the new support.  Because union-merge sums
+/// starting from +0.0 never produce -0.0, the result is bit-identical
+/// to densifying the aggregate into a fresh zero vector every round —
+/// at O(k·n) cost instead of O(J).
+pub struct GaggMirror {
+    dense: Vec<f32>,
+    /// global indices written last round (what to clear next round)
+    support: Vec<usize>,
+}
+
+impl GaggMirror {
+    pub fn new(dim: usize) -> Self {
+        GaggMirror { dense: vec![0.0; dim], support: Vec::new() }
+    }
+
+    /// The reconstructed dense aggregate.
+    pub fn dense(&self) -> &[f32] {
+        &self.dense
+    }
+
+    /// Indices holding a (possibly zero) broadcast value.
+    pub fn support(&self) -> &[usize] {
+        &self.support
+    }
+
+    /// Apply one round's sparse broadcast.
+    pub fn apply(&mut self, up: &SparseUpdate) {
+        for &i in &self.support {
+            self.dense[i] = 0.0;
+        }
+        self.support.clear();
+        for g in 0..up.num_buckets() {
+            let off = up.offset(g);
+            let b = up.bucket(g);
+            for (&i, &v) in b.indices().iter().zip(b.values()) {
+                let gi = off + i as usize;
+                self.dense[gi] = v;
+                self.support.push(gi);
+            }
+        }
+    }
+
+    /// Dense broadcast: plain copy, with the nonzero entries recorded
+    /// as support so a later [`Self::apply`] clears them correctly
+    /// (the threaded driver's first round after a resume is dense —
+    /// the restored `g^{t-1}` has no sparse form).
+    pub fn copy_dense(&mut self, src: &[f32]) {
+        self.dense.copy_from_slice(src);
+        self.support.clear();
+        for (i, &v) in src.iter().enumerate() {
+            if v != 0.0 {
+                self.support.push(i);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::SparseVec;
+
+    fn table(spec: &str) -> PolicyTable {
+        PolicyTable::parse(spec).unwrap()
+    }
+
+    #[test]
+    fn lossless_encode_keeps_values_bit_exact() {
+        let layout = GradLayout::single(16);
+        let mut dl = DownlinkCodec::new(&table("*="), &layout, 7);
+        assert!(dl.is_lossless());
+        let sv = SparseVec::new(16, vec![1, 5, 9], vec![0.5, -0.25, 3.0]);
+        let mut up = SparseUpdate::single(sv.clone());
+        let before = dl.rng_state();
+        dl.encode(&mut up, 0);
+        assert_eq!(up.bucket(0), &sv, "bare sparse broadcast is lossless");
+        assert_eq!(dl.rng_state(), before, "lossless encode draws nothing");
+        // rice attaches an index payload but leaves values alone
+        let mut dl = DownlinkCodec::new(&table("*=:idx=rice"), &layout, 7);
+        let mut up = SparseUpdate::single(sv.clone());
+        dl.encode(&mut up, 0);
+        assert_eq!(up.bucket(0).values(), sv.values());
+        assert!(up.rice(0).is_some());
+    }
+
+    #[test]
+    fn quantized_encode_leaves_exact_decode_in_bucket() {
+        let layout = GradLayout::single(32);
+        let mut dl = DownlinkCodec::new(&table("*=:bits=4"), &layout, 3);
+        assert!(!dl.is_lossless());
+        let mut up = SparseUpdate::single(SparseVec::new(
+            32,
+            vec![0, 7, 20],
+            vec![1.0, -0.4, 0.03],
+        ));
+        dl.encode(&mut up, 0);
+        let q = up.quant(0).expect("value payload active");
+        for (i, &v) in up.bucket(0).values().iter().enumerate() {
+            assert_eq!(q.decode_value(i), v, "bucket holds the payload's exact decode");
+        }
+    }
+
+    #[test]
+    fn empty_buckets_cost_nothing_and_draw_nothing() {
+        let layout =
+            GradLayout::from_sizes([("a".to_string(), 8), ("b".to_string(), 8)]);
+        let mut dl = DownlinkCodec::new(&table("*=:bits=4,idx=rice"), &layout, 3);
+        let mut up = SparseUpdate::zeros(&layout);
+        up.bucket_mut(1).push(2, 1.5);
+        let before = dl.rng_state();
+        dl.encode(&mut up, 0);
+        assert!(up.quant(0).is_none() && up.rice(0).is_none(), "empty bucket skipped");
+        assert!(up.quant(1).is_some() && up.rice(1).is_some());
+        assert_ne!(dl.rng_state(), before, "nonzero bucket consumed the stream");
+    }
+
+    #[test]
+    fn rng_state_roundtrips() {
+        let layout = GradLayout::single(8);
+        let mut a = DownlinkCodec::new(&table("*=:bits=4"), &layout, 11);
+        let mut b = DownlinkCodec::new(&table("*=:bits=4"), &layout, 11);
+        let up0 = SparseUpdate::single(SparseVec::new(8, vec![0, 3], vec![1.0, -2.0]));
+        let mut ua = up0.clone();
+        a.encode(&mut ua, 0);
+        let (s, spare) = a.rng_state();
+        b.restore_rng(s, spare);
+        let mut x = up0.clone();
+        let mut y = up0.clone();
+        a.encode(&mut x, 1);
+        b.encode(&mut y, 1);
+        assert_eq!(x, y, "restored stream continues identically");
+    }
+
+    #[test]
+    fn mirror_reconstructs_dense_broadcast() {
+        let layout =
+            GradLayout::from_sizes([("a".to_string(), 4), ("b".to_string(), 4)]);
+        let mut m = GaggMirror::new(8);
+        let mut u1 = SparseUpdate::zeros(&layout);
+        u1.bucket_mut(0).push(1, 2.0);
+        u1.bucket_mut(1).push(3, -1.0);
+        m.apply(&u1);
+        assert_eq!(m.dense(), &[0.0, 2.0, 0.0, 0.0, 0.0, 0.0, 0.0, -1.0]);
+        assert_eq!(m.support(), &[1, 7]);
+        // next round: old support cleared, new values scattered
+        let mut u2 = SparseUpdate::zeros(&layout);
+        u2.bucket_mut(0).push(0, 5.0);
+        m.apply(&u2);
+        assert_eq!(m.dense(), &[5.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(m.dense(), u2.to_dense().as_slice());
+        // dense init (resumed g^{t-1}) followed by a sparse round:
+        // copy_dense leaves a clearable support
+        m.copy_dense(&[1.0, 0.0, 3.0, 0.0, 0.0, 0.0, 0.0, -2.0]);
+        assert_eq!(m.support(), &[0, 2, 7]);
+        m.apply(&u2);
+        assert_eq!(m.dense(), u2.to_dense().as_slice());
+    }
+
+    #[test]
+    #[should_panic]
+    fn constructor_rejects_sparsifier_keys() {
+        DownlinkCodec::new(&table("*=topk"), &GradLayout::single(4), 0);
+    }
+}

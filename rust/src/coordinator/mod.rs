@@ -17,11 +17,13 @@
 //!   (verified in tests) because gathers are ordered by worker id.
 
 mod checkpoint;
+mod downlink;
 mod server;
 mod trainer;
 mod worker;
 
-pub use checkpoint::{Checkpoint, TrainState};
-pub use server::Server;
+pub use checkpoint::{Checkpoint, DownlinkState, TrainState};
+pub use downlink::{DownlinkCodec, GaggMirror};
+pub use server::{merge_updates, Server};
 pub use trainer::{EvalFn, RoundResult, Trainer};
 pub use worker::Worker;

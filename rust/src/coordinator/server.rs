@@ -1,25 +1,182 @@
-//! Server-side state: aggregation + model update + broadcast value.
+//! Server-side state: sparse-domain aggregation + model update +
+//! broadcast value.
+//!
+//! PR 6 replaces the dense densify-then-step loop (an O(J) zero-fill
+//! plus O(J·n) adds per round) with an O(k·n) cursor merge over the
+//! union support: "Understanding Top-k Sparsification" (PAPERS.md)
+//! shows the union of n worker top-k supports stays sparse, so the
+//! aggregate g^t is itself a bucketed [`SparseUpdate`].  The merge is
+//! EXACT — for every union index the contributions accumulate in
+//! ascending worker order starting from +0.0, the same float-add
+//! sequence as the dense `axpy_into` loop — so the sparse path is
+//! bit-identical to the dense reference (kept behind
+//! [`Server::force_dense`] for the equivalence tests and benches).
 
 use crate::optim::Optimizer;
-use crate::sparse::SparseUpdate;
+use crate::sparse::{SparseUpdate, SparseVec};
+use crate::util::pool;
+
+/// Below this many total transmitted entries in a bucket the serial
+/// merge wins; above it the union merge shards over `util::pool`
+/// index ranges (disjoint writes concatenated in shard order, so the
+/// result is identical to the serial merge).
+const MIN_SHARDED_MERGE_NNZ: usize = 1 << 14;
+
+/// Merge weighted worker updates over the union support:
+/// `out = sum_n omega_n * ghat_n` as a bucketed sparse update shaped
+/// like the inputs.  Updates MUST be ordered by worker id and share
+/// one bucket structure; the per-index accumulation order (ascending
+/// worker id onto a +0.0 accumulator) reproduces the dense aggregate
+/// bit for bit.
+pub fn merge_updates(updates: &[(f32, &SparseUpdate)], out: &mut SparseUpdate) {
+    let Some((_, first)) = updates.first() else {
+        out.conform_like(&SparseUpdate::empty());
+        return;
+    };
+    out.conform_like(first);
+    let mut cursors = vec![0usize; updates.len()];
+    for g in 0..first.num_buckets() {
+        let dim = first.bucket(g).dim();
+        debug_assert!(updates.iter().all(|(_, u)| {
+            u.num_buckets() == first.num_buckets()
+                && u.bucket(g).dim() == dim
+                && u.offset(g) == first.offset(g)
+        }));
+        let nnz: usize = updates.iter().map(|(_, u)| u.bucket(g).nnz()).sum();
+        if nnz >= MIN_SHARDED_MERGE_NNZ && pool::global().parallelism() > 1 {
+            merge_bucket_sharded(updates, g, dim, out.bucket_mut(g));
+        } else {
+            cursors.fill(0);
+            merge_bucket_range(updates, g, dim as u32, &mut cursors, out.bucket_mut(g));
+        }
+    }
+}
+
+/// Cursor merge of bucket `g` over local indices in `[cursor start,
+/// hi)`.  `cursors[n]` must point at worker n's first entry inside the
+/// range (0 for a full-bucket merge).
+fn merge_bucket_range(
+    updates: &[(f32, &SparseUpdate)],
+    g: usize,
+    hi: u32,
+    cursors: &mut [usize],
+    out: &mut SparseVec,
+) {
+    loop {
+        let mut min = hi;
+        for ((_, u), c) in updates.iter().zip(cursors.iter()) {
+            let idx = u.bucket(g).indices();
+            if *c < idx.len() && idx[*c] < min {
+                min = idx[*c];
+            }
+        }
+        if min >= hi {
+            return;
+        }
+        let mut acc = 0.0f32;
+        for ((omega, u), c) in updates.iter().zip(cursors.iter_mut()) {
+            let b = u.bucket(g);
+            if *c < b.nnz() && b.indices()[*c] == min {
+                acc += *omega * b.values()[*c];
+                *c += 1;
+            }
+        }
+        out.push(min, acc);
+    }
+}
+
+/// Pool-sharded variant: each shard merges a disjoint index range of
+/// the bucket into its own scratch vec (cursor starts found by binary
+/// search), and the shards concatenate in range order — identical
+/// output to the serial merge by construction.
+fn merge_bucket_sharded(
+    updates: &[(f32, &SparseUpdate)],
+    g: usize,
+    dim: usize,
+    out: &mut SparseVec,
+) {
+    let pool = pool::global();
+    let shards = pool.parallelism();
+    let mut parts: Vec<SparseVec> = (0..shards).map(|_| SparseVec::zeros(dim)).collect();
+    pool.map_mut(&mut parts, |s, part| {
+        let (lo, hi) = pool::shard_range(dim, shards, s);
+        let mut cursors: Vec<usize> = updates
+            .iter()
+            .map(|(_, u)| u.bucket(g).indices().partition_point(|&i| (i as usize) < lo))
+            .collect();
+        merge_bucket_range(updates, g, hi as u32, &mut cursors, part);
+    });
+    for part in &parts {
+        for (&i, &v) in part.indices().iter().zip(part.values()) {
+            out.push(i, v);
+        }
+    }
+}
 
 /// The parameter server: owns the global model w and the optimizer.
 pub struct Server {
     pub w: Vec<f32>,
     pub optimizer: Box<dyn Optimizer>,
-    /// g^t of the last completed round (what gets broadcast)
+    /// dense mirror of g^t of the last completed round (what dense
+    /// consumers — `gagg_prev`, the dense `Msg::Broadcast` — read);
+    /// maintained incrementally from the sparse aggregate
     pub gagg: Vec<f32>,
+    /// dense scratch: the optimizer fallback and eta-scaled dense step
     agg_buf: Vec<f32>,
+    /// g^t over the union support (empty before the first round)
+    gagg_sparse: SparseUpdate,
+    /// scratch the next round's merge builds into (swapped in)
+    merge_next: SparseUpdate,
+    /// scratch for the eta-scaled sparse step
+    scaled_buf: SparseUpdate,
+    /// Take the dense O(J·n) reference aggregation path instead of the
+    /// union merge (equivalence tests and the `aggregate` bench).  Set
+    /// at construction time only — toggling mid-run desyncs the
+    /// mirrors — and incompatible with a downlink codec (the sparse
+    /// aggregate stays empty on this path).
+    pub force_dense: bool,
 }
 
 impl Server {
     pub fn new(w0: Vec<f32>, optimizer: Box<dyn Optimizer>) -> Self {
         let dim = w0.len();
-        Server { w: w0, optimizer, gagg: vec![0.0; dim], agg_buf: vec![0.0; dim] }
+        Server {
+            w: w0,
+            optimizer,
+            gagg: vec![0.0; dim],
+            agg_buf: vec![0.0; dim],
+            gagg_sparse: SparseUpdate::empty(),
+            merge_next: SparseUpdate::empty(),
+            scaled_buf: SparseUpdate::empty(),
+            force_dense: false,
+        }
     }
 
     pub fn dim(&self) -> usize {
         self.w.len()
+    }
+
+    /// g^t over the union support — what a downlink codec compresses
+    /// and what [`crate::comm::Ledger::close_round_sparse`] charges.
+    pub fn gagg_sparse(&self) -> &SparseUpdate {
+        &self.gagg_sparse
+    }
+
+    /// Run a downlink encoder over the sparse aggregate (AFTER the
+    /// optimizer has stepped on the exact values), then refresh the
+    /// dense mirror so every dense consumer sees exactly the decoded
+    /// broadcast.  Value codecs rewrite values in place but never the
+    /// support, so no mirror clearing is needed here.
+    pub fn encode_gagg_with(&mut self, f: impl FnOnce(&mut SparseUpdate)) {
+        assert!(!self.force_dense, "downlink encoding needs the sparse aggregation path");
+        f(&mut self.gagg_sparse);
+        for g in 0..self.gagg_sparse.num_buckets() {
+            let off = self.gagg_sparse.offset(g);
+            let b = self.gagg_sparse.bucket(g);
+            for (&i, &v) in b.indices().iter().zip(b.values()) {
+                self.gagg[off + i as usize] = v;
+            }
+        }
     }
 
     /// Aggregate bucketed updates with weights omega and update the
@@ -45,15 +202,71 @@ impl Server {
         t: usize,
         scales: Option<&[(usize, usize, f32)]>,
     ) -> &[f32] {
-        self.agg_buf.iter_mut().for_each(|v| *v = 0.0);
-        for (omega, up) in updates {
-            up.axpy_into(*omega, &mut self.agg_buf);
+        if self.force_dense {
+            // PR 5 reference path: zero-fill + densify every update
+            self.agg_buf.iter_mut().for_each(|v| *v = 0.0);
+            for (omega, up) in updates {
+                up.axpy_into(*omega, &mut self.agg_buf);
+            }
+            std::mem::swap(&mut self.gagg, &mut self.agg_buf);
+            self.step_dense(t, scales);
+            return &self.gagg;
         }
-        std::mem::swap(&mut self.gagg, &mut self.agg_buf);
+        // O(k·n) union merge, then an incremental dense-mirror update:
+        // clearing last round's support to +0.0 and scattering the new
+        // values leaves exactly the vector a fresh zero-fill + axpy
+        // pass would build (union sums starting from +0.0 cannot
+        // produce -0.0, so no sign-of-zero drift accumulates).
+        merge_updates(updates, &mut self.merge_next);
+        for g in 0..self.gagg_sparse.num_buckets() {
+            let off = self.gagg_sparse.offset(g);
+            for &i in self.gagg_sparse.bucket(g).indices() {
+                self.gagg[off + i as usize] = 0.0;
+            }
+        }
+        std::mem::swap(&mut self.gagg_sparse, &mut self.merge_next);
+        for g in 0..self.gagg_sparse.num_buckets() {
+            let off = self.gagg_sparse.offset(g);
+            let b = self.gagg_sparse.bucket(g);
+            for (&i, &v) in b.indices().iter().zip(b.values()) {
+                self.gagg[off + i as usize] = v;
+            }
+        }
+        if self.optimizer.sparse_step_exact() {
+            match scales {
+                None => self.optimizer.step_sparse(&mut self.w, &self.gagg_sparse, t),
+                Some(sc) => {
+                    // scale a sparse copy per group (buckets align 1:1
+                    // with the layout-derived scale tuples), broadcast
+                    // value stays unscaled
+                    debug_assert_eq!(sc.len(), self.gagg_sparse.num_buckets());
+                    self.scaled_buf.conform_like(&self.gagg_sparse);
+                    for g in 0..self.gagg_sparse.num_buckets() {
+                        debug_assert_eq!(sc[g].0, self.gagg_sparse.offset(g));
+                        let s = sc[g].2;
+                        let src = self.gagg_sparse.bucket(g);
+                        let dst = self.scaled_buf.bucket_mut(g);
+                        for (&i, &v) in src.indices().iter().zip(src.values()) {
+                            dst.push(i, if s != 1.0 { v * s } else { v });
+                        }
+                    }
+                    self.optimizer.step_sparse(&mut self.w, &self.scaled_buf, t);
+                }
+            }
+        } else {
+            // stateful optimizers (momentum, Adam) need the full-J
+            // gradient: step on the dense mirror exactly as before
+            self.step_dense(t, scales);
+        }
+        &self.gagg
+    }
+
+    /// Dense optimizer step on the mirror, with optional per-group eta
+    /// scaling applied in `agg_buf` scratch (the pre-PR 6 code path).
+    fn step_dense(&mut self, t: usize, scales: Option<&[(usize, usize, f32)]>) {
         match scales {
             None => self.optimizer.step(&mut self.w, &self.gagg, t),
             Some(sc) => {
-                // agg_buf (last round's gagg) is free scratch here
                 self.agg_buf.copy_from_slice(&self.gagg);
                 for &(off, len, s) in sc {
                     if s != 1.0 {
@@ -65,7 +278,6 @@ impl Server {
                 self.optimizer.step(&mut self.w, &self.agg_buf, t);
             }
         }
-        &self.gagg
     }
 }
 
@@ -73,7 +285,7 @@ impl Server {
 mod tests {
     use super::*;
     use crate::grad::GradLayout;
-    use crate::optim::Sgd;
+    use crate::optim::{Sgd, SgdMomentum};
     use crate::sparse::SparseVec;
 
     #[test]
@@ -85,6 +297,8 @@ mod tests {
         // g = [0.5*2 + 0.5*(-2), 0, 0.5*4] = [0, 0, 2]
         assert_eq!(s.gagg, vec![0.0, 0.0, 2.0]);
         assert_eq!(s.w, vec![1.0, 1.0, 0.0]);
+        // the sparse aggregate carries the union support, zeros kept
+        assert_eq!(s.gagg_sparse().nnz(), 2);
     }
 
     #[test]
@@ -121,8 +335,7 @@ mod tests {
 
     #[test]
     fn bucketed_update_aggregates_with_offsets() {
-        let layout =
-            GradLayout::from_sizes([("a".to_string(), 2), ("b".to_string(), 2)]);
+        let layout = GradLayout::from_sizes([("a".to_string(), 2), ("b".to_string(), 2)]);
         let mut up = SparseUpdate::zeros(&layout);
         up.bucket_mut(0).push(1, 4.0);
         up.bucket_mut(1).push(0, -2.0);
@@ -130,5 +343,107 @@ mod tests {
         s.aggregate_and_step(&[(0.5, &up)], 0);
         assert_eq!(s.gagg, vec![0.0, 2.0, -1.0, 0.0]);
         assert_eq!(s.w, vec![0.0, -2.0, 1.0, 0.0]);
+    }
+
+    fn overlapping_updates(layout: &GradLayout, round: usize) -> Vec<SparseUpdate> {
+        // three workers with overlapping, shifting supports and values
+        // chosen to exercise accumulation order (non-associative adds)
+        (0..3)
+            .map(|n| {
+                let mut u = SparseUpdate::zeros(layout);
+                for g in 0..u.num_buckets() {
+                    let dim = u.bucket(g).dim() as u32;
+                    let mut i = ((n + g + round) % 3) as u32;
+                    let mut v = 0.1 + n as f32 * 0.7 - g as f32 * 1.3;
+                    while i < dim {
+                        u.bucket_mut(g).push(i, v);
+                        v = -v * 1.37 + 0.011;
+                        i += 1 + (n as u32 + round as u32) % 3;
+                    }
+                }
+                u
+            })
+            .collect()
+    }
+
+    #[test]
+    fn sparse_merge_is_bit_identical_to_dense_reference() {
+        let layout = GradLayout::from_sizes([("a".to_string(), 5), ("b".to_string(), 9)]);
+        let mut sparse = Server::new(vec![0.2; 14], Box::new(Sgd::new(0.3)));
+        let mut dense = Server::new(vec![0.2; 14], Box::new(Sgd::new(0.3)));
+        dense.force_dense = true;
+        let omegas = [0.5f32, 0.25, 0.25];
+        for t in 0..4 {
+            let ups = overlapping_updates(&layout, t);
+            let weighted: Vec<(f32, &SparseUpdate)> =
+                omegas.iter().copied().zip(ups.iter()).collect();
+            sparse.aggregate_and_step(&weighted, t);
+            dense.aggregate_and_step(&weighted, t);
+            assert_eq!(
+                dense.gagg.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                sparse.gagg.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "round {t}: dense mirror diverged"
+            );
+            assert_eq!(
+                dense.w.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                sparse.w.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "round {t}: model diverged"
+            );
+            assert_eq!(sparse.gagg_sparse().to_dense(), sparse.gagg);
+        }
+    }
+
+    #[test]
+    fn sparse_merge_matches_dense_with_eta_scales_and_momentum() {
+        let layout = GradLayout::from_sizes([("a".to_string(), 5), ("b".to_string(), 9)]);
+        let sc = [(0usize, 5usize, 1.0f32), (5, 9, 2.5)];
+        // SGD with per-group eta scales: sparse scaled step
+        let mut a = Server::new(vec![0.1; 14], Box::new(Sgd::new(0.2)));
+        let mut b = Server::new(vec![0.1; 14], Box::new(Sgd::new(0.2)));
+        b.force_dense = true;
+        // momentum: sparse_step_exact() is false, dense fallback steps
+        let mut c = Server::new(vec![0.1; 14], Box::new(SgdMomentum::new(14, 0.2, 0.9)));
+        let mut d = Server::new(vec![0.1; 14], Box::new(SgdMomentum::new(14, 0.2, 0.9)));
+        d.force_dense = true;
+        for t in 0..3 {
+            let ups = overlapping_updates(&layout, t);
+            let weighted: Vec<(f32, &SparseUpdate)> =
+                [0.4f32, 0.3, 0.3].iter().copied().zip(ups.iter()).collect();
+            a.aggregate_and_step_scaled(&weighted, t, Some(&sc));
+            b.aggregate_and_step_scaled(&weighted, t, Some(&sc));
+            c.aggregate_and_step(&weighted, t);
+            d.aggregate_and_step(&weighted, t);
+        }
+        assert_eq!(a.w, b.w, "eta-scaled sparse step diverged from dense");
+        assert_eq!(a.gagg, b.gagg);
+        assert_eq!(c.w, d.w, "momentum dense fallback diverged");
+        assert_eq!(c.gagg, d.gagg);
+    }
+
+    #[test]
+    fn merge_updates_unions_and_weights() {
+        let a = SparseUpdate::single(SparseVec::new(6, vec![1, 4], vec![2.0, 8.0]));
+        let b = SparseUpdate::single(SparseVec::new(6, vec![1, 5], vec![-2.0, 4.0]));
+        let mut out = SparseUpdate::empty();
+        merge_updates(&[(0.5, &a), (0.5, &b)], &mut out);
+        assert_eq!(out.bucket(0).indices(), &[1, 4, 5]);
+        assert_eq!(out.bucket(0).values(), &[0.0, 4.0, 2.0]);
+        // empty input conforms to nothing
+        merge_updates(&[], &mut out);
+        assert_eq!(out.num_buckets(), 0);
+    }
+
+    #[test]
+    fn encode_gagg_with_refreshes_dense_mirror() {
+        let mut s = Server::new(vec![0.0; 3], Box::new(Sgd::new(0.0)));
+        let up = SparseUpdate::single(SparseVec::new(3, vec![0, 2], vec![1.0, -4.0]));
+        s.aggregate_and_step(&[(1.0, &up)], 0);
+        s.encode_gagg_with(|g| {
+            for v in g.bucket_mut(0).values_mut() {
+                *v *= 0.5; // a "lossy codec"
+            }
+        });
+        assert_eq!(s.gagg, vec![0.5, 0.0, -2.0]);
+        assert_eq!(s.gagg_sparse().bucket(0).values(), &[0.5, -2.0]);
     }
 }

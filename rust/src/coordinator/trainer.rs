@@ -5,7 +5,7 @@ use std::time::Instant;
 
 use crate::comm::{Ledger, Msg, Network};
 use crate::config::TrainConfig;
-use crate::coordinator::{Server, Worker};
+use crate::coordinator::{DownlinkCodec, GaggMirror, Server, Worker};
 use crate::metrics::{IterRecord, RunLog};
 use crate::sparse::SparseUpdate;
 use crate::sparsify::RoundCtx;
@@ -40,6 +40,9 @@ pub struct Trainer {
     /// per-group learning-rate scales from the policy table (None =
     /// the exact pre-scaling server path)
     eta_scales: Option<Vec<(usize, usize, f32)>>,
+    /// downlink codec from `config.downlink` (None = dense broadcast,
+    /// bit-identical to the pre-PR 6 path)
+    downlink: Option<DownlinkCodec>,
     t: usize,
 }
 
@@ -63,6 +66,18 @@ impl Trainer {
         }
         let updates = (0..workers.len()).map(|_| SparseUpdate::empty()).collect();
         let eta_scales = config.eta_scales(dim);
+        let downlink = config.downlink.as_ref().map(|table| {
+            assert!(
+                !server.force_dense,
+                "downlink compression needs the sparse aggregation path \
+                 (server.force_dense must stay false)"
+            );
+            let layout = workers
+                .first()
+                .map(|w| w.layout().clone())
+                .unwrap_or_else(|| crate::grad::GradLayout::single(dim));
+            DownlinkCodec::new(table, &layout, config.seed)
+        });
         Trainer {
             config,
             workers,
@@ -73,7 +88,30 @@ impl Trainer {
             genie_buf: Vec::new(),
             peek_buf: Vec::new(),
             eta_scales,
+            downlink,
             t: 0,
+        }
+    }
+
+    /// Post-aggregate bookkeeping shared by both drivers: encode the
+    /// downlink broadcast when configured (AFTER the optimizer step,
+    /// so the model always steps on the exact aggregate), refresh
+    /// `gagg_prev` with exactly what workers will decode, and close
+    /// the ledger round under the matching byte accounting.
+    fn finish_round(&mut self, t: usize, dim: usize, n: usize) {
+        match &mut self.downlink {
+            None => {
+                self.gagg_prev.copy_from_slice(&self.server.gagg);
+                self.ledger.close_round(t, dim, n);
+            }
+            Some(dl) => {
+                // encode mutates the sparse aggregate into its decoded
+                // form and re-scatters it into the dense mirror, so the
+                // copy below IS the decoded broadcast
+                self.server.encode_gagg_with(|up| dl.encode(up, t));
+                self.ledger.close_round_sparse(t, self.server.gagg_sparse(), n);
+                self.gagg_prev.copy_from_slice(&self.server.gagg);
+            }
         }
     }
 
@@ -150,6 +188,10 @@ impl Trainer {
         let state = crate::coordinator::TrainState {
             gagg_prev: self.gagg_prev.clone(),
             workers: self.workers.iter().map(Worker::export_state).collect(),
+            downlink: self.downlink.as_ref().map(|d| {
+                let (rng, gauss_spare) = d.rng_state();
+                crate::coordinator::DownlinkState { rng, gauss_spare }
+            }),
         };
         crate::coordinator::Checkpoint::with_state(
             self.t,
@@ -185,6 +227,16 @@ impl Trainer {
                 let id = w.id;
                 w.import_state(s)
                     .unwrap_or_else(|e| panic!("restoring worker {id}: {e}"));
+            }
+            match (&mut self.downlink, &st.downlink) {
+                (Some(d), Some(s)) => d.restore_rng(s.rng, s.gauss_spare),
+                (None, Some(_)) => panic!(
+                    "checkpoint carries downlink codec state but this run has no downlink table"
+                ),
+                // checkpoint from a downlink-free (or pre-PR 6) run:
+                // the rounding stream restarts cold, like the legacy
+                // model-only restore
+                _ => {}
             }
         }
     }
@@ -251,10 +303,8 @@ impl Trainer {
             .enumerate()
             .map(|(i, up)| (self.config.omega(i), up))
             .collect();
-        let gagg =
-            self.server.aggregate_and_step_scaled(&weighted, t, self.eta_scales.as_deref());
-        self.gagg_prev.copy_from_slice(gagg);
-        self.ledger.close_round(t, dim, n);
+        self.server.aggregate_and_step_scaled(&weighted, t, self.eta_scales.as_deref());
+        self.finish_round(t, dim, n);
         self.t += 1;
         RoundResult {
             t,
@@ -317,7 +367,9 @@ impl Trainer {
             worker: Worker,
             ep: crate::comm::Endpoint,
             w_model: Vec<f32>,
-            gagg_prev: Vec<f32>,
+            /// dense g^{t-1}, reconstructed from whichever broadcast
+            /// form the server sent
+            mirror: GaggMirror,
             omega: f32,
         }
         let omegas: Vec<f32> = (0..n).map(|i| self.config.omega(i)).collect();
@@ -328,17 +380,28 @@ impl Trainer {
             .map(|(i, worker)| Lane {
                 ep: net.endpoint(i),
                 w_model: vec![0.0f32; dim],
-                gagg_prev: vec![0.0f32; dim],
+                mirror: GaggMirror::new(dim),
                 omega: omegas[i],
                 worker,
             })
             .collect();
         let mut bcast = vec![0.0f32; 2 * dim];
         for t in 0..iters {
-            // broadcast layout: [w | gagg_prev]
-            bcast[..dim].copy_from_slice(&self.server.w);
-            bcast[dim..].copy_from_slice(&self.gagg_prev);
-            net.broadcast(&Msg::Broadcast { round: t, gagg: bcast.clone() });
+            if self.downlink.is_none() || t == 0 {
+                // dense broadcast, layout [w | gagg_prev].  The first
+                // round is dense even under a downlink codec: after a
+                // resume the restored g^{t-1} exists only densely, and
+                // on a cold start it is all zeros either way.
+                bcast[..dim].copy_from_slice(&self.server.w);
+                bcast[dim..].copy_from_slice(&self.gagg_prev);
+                net.broadcast(&Msg::Broadcast { round: t, gagg: bcast.clone() });
+            } else {
+                net.broadcast(&Msg::SparseBroadcast {
+                    round: t,
+                    w: self.server.w.clone(),
+                    gagg: self.server.gagg_sparse().clone(),
+                });
+            }
             // worker phase on the pool: each lane drains its own
             // endpoint (the broadcast is already queued, so no task
             // blocks on another), computes, sparsifies, sends up
@@ -347,14 +410,19 @@ impl Trainer {
                     Msg::Broadcast { round, gagg } => {
                         assert_eq!(round, t);
                         lane.w_model.copy_from_slice(&gagg[..dim]);
-                        lane.gagg_prev.copy_from_slice(&gagg[dim..]);
+                        lane.mirror.copy_dense(&gagg[dim..]);
+                    }
+                    Msg::SparseBroadcast { round, w, gagg } => {
+                        assert_eq!(round, t);
+                        lane.w_model.copy_from_slice(&w);
+                        lane.mirror.apply(&gagg);
                     }
                     other => panic!("worker {i}: unexpected {other:?}"),
                 }
                 let loss = lane.worker.compute_grad(&lane.w_model);
                 let ctx = RoundCtx {
                     t,
-                    gagg_prev: &lane.gagg_prev,
+                    gagg_prev: lane.mirror.dense(),
                     omega: lane.omega,
                     genie_acc: None,
                 };
@@ -377,10 +445,8 @@ impl Trainer {
             }
             let weighted: Vec<(f32, &SparseUpdate)> =
                 updates.iter().enumerate().map(|(i, up)| (omegas[i], up)).collect();
-            let gagg =
-                self.server.aggregate_and_step_scaled(&weighted, t, self.eta_scales.as_deref());
-            self.gagg_prev.copy_from_slice(gagg);
-            self.ledger.close_round(t, dim, n);
+            self.server.aggregate_and_step_scaled(&weighted, t, self.eta_scales.as_deref());
+            self.finish_round(t, dim, n);
             let mut rec = IterRecord::new(t);
             rec.loss = (loss_sum / n as f64) as f32;
             rec.upload_bytes = self.ledger.rounds().last().unwrap().upload_bytes;
@@ -402,6 +468,14 @@ mod tests {
     use crate::sparsify::{build, SparsifierKind};
 
     fn toy_trainer(kind: SparsifierKind, eta: f32) -> Trainer {
+        toy_trainer_with_downlink(kind, eta, None)
+    }
+
+    fn toy_trainer_with_downlink(
+        kind: SparsifierKind,
+        eta: f32,
+        downlink: Option<&str>,
+    ) -> Trainer {
         let config = TrainConfig {
             workers: 2,
             iters: 0,
@@ -410,6 +484,7 @@ mod tests {
             omega_uniform: true,
             seed: 0,
             eval_every: 0,
+            downlink: downlink.map(|s| crate::sparsify::PolicyTable::parse(s).unwrap()),
             ..TrainConfig::default()
         };
         let workers = vec![
@@ -541,6 +616,48 @@ mod tests {
                 a.ledger.total_upload_bytes(),
                 b.ledger.total_upload_bytes(),
                 "{kind:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn lossless_downlink_preserves_the_trajectory_bitwise() {
+        // downlink "*=" reindexes the exact aggregate: every worker
+        // decodes bit-identical g^{t-1}, so the whole trajectory
+        // matches the dense-broadcast run — only the ledger's download
+        // accounting changes (sparse wire cost vs dense 32J formula)
+        let kind = SparsifierKind::RegTopK { k: 1, mu: 0.5, q: 1.0 };
+        let mut dense = toy_trainer(kind.clone(), 0.9);
+        let mut sparse = toy_trainer_with_downlink(kind, 0.9, Some("*="));
+        for _ in 0..12 {
+            dense.round();
+            sparse.round();
+        }
+        assert_eq!(dense.server.w, sparse.server.w);
+        assert_eq!(dense.ledger.total_upload_bytes(), sparse.ledger.total_upload_bytes());
+        assert_ne!(
+            dense.ledger.total_download_bytes(),
+            sparse.ledger.total_download_bytes(),
+            "downlink rounds must be charged at sparse wire cost"
+        );
+    }
+
+    #[test]
+    fn threaded_driver_matches_deterministic_with_downlink() {
+        for spec in ["*=", "*=:idx=rice", "*=:bits=8"] {
+            let kind = SparsifierKind::TopK { k: 1 };
+            let mut a = toy_trainer_with_downlink(kind.clone(), 0.9, Some(spec));
+            for _ in 0..15 {
+                a.round();
+            }
+            let mut b = toy_trainer_with_downlink(kind, 0.9, Some(spec));
+            b.run_threaded(15);
+            assert_eq!(a.server.w, b.server.w, "downlink {spec}");
+            assert_eq!(a.gagg_prev, b.gagg_prev, "downlink {spec}");
+            assert_eq!(
+                a.ledger.total_download_bytes(),
+                b.ledger.total_download_bytes(),
+                "downlink {spec}"
             );
         }
     }

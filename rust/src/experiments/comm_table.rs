@@ -10,9 +10,10 @@
 
 use crate::comm::codec::{index_bits, RicePayload};
 use crate::comm::CostModel;
+use crate::config::TrainConfig;
 use crate::data::linear::generate;
 use crate::experiments::{fig2, sweeps};
-use crate::sparsify::SparsifierKind;
+use crate::sparsify::{PolicyTable, SparsifierKind};
 use crate::util::rng::Rng;
 
 /// One analytic row: model, J, S, symbols/epoch/worker, bytes/epoch,
@@ -98,26 +99,57 @@ pub fn analytic(sparsities: &[f64]) -> Vec<CommRow> {
     rows
 }
 
-/// Measured bytes/round per sparsifier on the (reduced) Fig. 2 testbed.
-pub fn measured(s: f64, iters: usize, seed: u64) -> Vec<(String, usize, f64)> {
+/// One measured row from a live ledger: bytes/round in BOTH link
+/// directions (the pre-PR 6 table printed only uploads and implied
+/// the analytic `32J` broadcast; these are the bytes the ledger
+/// actually charged, so downlink-compressed rows show their real
+/// broadcast cost).
+#[derive(Clone, Debug)]
+pub struct MeasuredRow {
+    pub name: String,
+    /// sum over workers, per round
+    pub up_bytes: usize,
+    /// broadcast cost x workers, per round
+    pub down_bytes: usize,
+    pub sim_s: f64,
+}
+
+/// Measured bytes/round per sparsifier on the (reduced) Fig. 2
+/// testbed, including downlink-compressed RegTop-k variants (`dl`
+/// rows: lossless sparse broadcast, and 8-bit Rice-indexed).
+pub fn measured(s: f64, iters: usize, seed: u64) -> Vec<MeasuredRow> {
     let params = sweeps::sweep_params(8);
     let problem = generate(params, seed);
     let k = ((s * params.dim as f64).round() as usize).max(1);
+    let reg = SparsifierKind::RegTopK { k, mu: 0.5, q: 1.0 };
     [
-        ("dense".to_string(), SparsifierKind::Dense),
-        ("topk".to_string(), SparsifierKind::TopK { k }),
-        ("regtopk".to_string(), SparsifierKind::RegTopK { k, mu: 0.5, q: 1.0 }),
-        ("randk".to_string(), SparsifierKind::RandK { k, seed: 7 }),
+        ("dense".to_string(), SparsifierKind::Dense, None),
+        ("topk".to_string(), SparsifierKind::TopK { k }, None),
+        ("regtopk".to_string(), reg.clone(), None),
+        ("randk".to_string(), SparsifierKind::RandK { k, seed: 7 }, None),
+        ("regtopk+dl".to_string(), reg.clone(), Some("*=")),
+        ("regtopk+dl8".to_string(), reg, Some("*=:bits=8,idx=rice")),
     ]
     .into_iter()
-    .map(|(name, kind)| {
-        let mut tr = fig2::trainer_for(&problem, kind, 0.02);
+    .map(|(name, kind, downlink)| {
+        let config = TrainConfig {
+            workers: params.workers,
+            eta: 0.02,
+            sparsifier: kind,
+            eval_every: 1,
+            downlink: downlink.map(|d| PolicyTable::parse(d).unwrap()),
+            ..TrainConfig::default()
+        };
+        let mut tr = fig2::trainer_from_config(&config, &problem);
         for _ in 0..iters {
             tr.round();
         }
-        let per_round = tr.ledger.total_upload_bytes() / iters;
-        let sim = tr.ledger.total_sim_time() / iters as f64;
-        (name, per_round, sim)
+        MeasuredRow {
+            name,
+            up_bytes: tr.ledger.total_upload_bytes() / iters,
+            down_bytes: tr.ledger.total_download_bytes() / iters,
+            sim_s: tr.ledger.total_sim_time() / iters as f64,
+        }
     })
     .collect()
 }
@@ -163,15 +195,32 @@ mod tests {
     #[test]
     fn measured_sparsifiers_transmit_less_than_dense() {
         let rows = measured(0.1, 5, 3);
-        let dense = rows.iter().find(|r| r.0 == "dense").unwrap().1;
-        for (name, bytes, _) in &rows {
-            if name != "dense" {
-                assert!(*bytes < dense / 5, "{name}: {bytes} vs dense {dense}");
+        let dense = rows.iter().find(|r| r.name == "dense").unwrap().up_bytes;
+        for r in &rows {
+            if r.name != "dense" {
+                assert!(r.up_bytes < dense / 5, "{}: {} vs dense {dense}", r.name, r.up_bytes);
             }
         }
         // topk and regtopk budgets identical
-        let t = rows.iter().find(|r| r.0 == "topk").unwrap().1;
-        let r = rows.iter().find(|r| r.0 == "regtopk").unwrap().1;
+        let t = rows.iter().find(|r| r.name == "topk").unwrap().up_bytes;
+        let r = rows.iter().find(|r| r.name == "regtopk").unwrap().up_bytes;
         assert_eq!(t, r);
+    }
+
+    #[test]
+    fn measured_downlink_rows_beat_the_dense_broadcast() {
+        // at 1% sparsity the 8-worker union support is far below J, so
+        // the sparse broadcast must be charged under the dense 32J
+        // formula — and 8-bit values + Rice indices under that again
+        let rows = measured(0.01, 5, 3);
+        let row = |n: &str| rows.iter().find(|r| r.name == n).unwrap();
+        let dense_down = row("dense").down_bytes;
+        assert_eq!(row("regtopk").down_bytes, dense_down, "uncompressed downlink is dense");
+        let dl = row("regtopk+dl");
+        let dl8 = row("regtopk+dl8");
+        assert!(dl.down_bytes < dense_down, "{} vs {dense_down}", dl.down_bytes);
+        assert!(dl8.down_bytes < dl.down_bytes, "{} vs {}", dl8.down_bytes, dl.down_bytes);
+        // the lossless sparse broadcast does not change the uplink
+        assert_eq!(dl.up_bytes, row("regtopk").up_bytes);
     }
 }

@@ -240,6 +240,62 @@ pub fn codec_sweep(s: f64, iters: usize, seed: u64) -> Vec<HeteroRow> {
         .collect()
 }
 
+/// One row of the downlink sweep: convergence plus BOTH link
+/// directions from the ledger (the dense row's download is the
+/// analytic `32J x workers` broadcast; sparse rows are charged at
+/// whatever their codec actually put on the wire).
+#[derive(Clone, Debug)]
+pub struct DownlinkRow {
+    pub name: String,
+    pub final_gap: f32,
+    pub up_bytes_per_round: usize,
+    pub down_bytes_per_round: usize,
+}
+
+/// PR 6 protocol — dense vs sparse-broadcast downlink across the codec
+/// matrix (EXPERIMENTS.md §Downlink protocol): flat RegTop-k at one
+/// budget, sweeping the downlink policy from off (dense 32J broadcast)
+/// through the lossless sparse broadcast to quantized/entropy-coded
+/// variants.  Same data, seed, budget and uplink per row; lossless
+/// rows reproduce the dense row's trajectory bit-for-bit, so their
+/// `final_gap` columns must match exactly.
+pub fn downlink_sweep(s: f64, iters: usize, seed: u64) -> Vec<DownlinkRow> {
+    let params = sweep_params(8);
+    let problem = generate(params, seed);
+    let k = ((s * params.dim as f64).round() as usize).max(1);
+    let base = TrainConfig {
+        workers: params.workers,
+        eta: 0.02,
+        sparsifier: SparsifierKind::RegTopK { k, mu: 0.5, q: 1.0 },
+        eval_every: 1,
+        ..TrainConfig::default()
+    };
+    let variants: [(&str, &str); 5] = [
+        ("dense", ""),
+        ("sparse/f32", "*="),
+        ("sparse/rice", "*=:idx=rice"),
+        ("sparse/u8", "*=:bits=8"),
+        ("sparse/rice+nuq@8", "*=:bits=8,idx=rice,levels=nuq"),
+    ];
+    variants
+        .iter()
+        .map(|(name, spec)| {
+            let mut cfg = base.clone();
+            if !spec.is_empty() {
+                cfg.downlink = Some(PolicyTable::parse(spec).expect("downlink policy spec"));
+            }
+            let mut tr = fig2::trainer_from_config(&cfg, &problem);
+            let log = fig2::run_curve_with(&mut tr, &problem, name, iters);
+            DownlinkRow {
+                name: name.to_string(),
+                final_gap: log.last().unwrap().opt_gap,
+                up_bytes_per_round: tr.ledger.total_upload_bytes() / iters.max(1),
+                down_bytes_per_round: tr.ledger.total_download_bytes() / iters.max(1),
+            }
+        })
+        .collect()
+}
+
 /// Abl 4 — approximate top-k: (oversample, mean recall) over random
 /// Gaussian vectors at the Fig. 3 scale.
 pub fn approx_recall_sweep(oversamples: &[usize], j: usize, k: usize, trials: usize) -> Vec<(usize, f64)> {
@@ -341,6 +397,37 @@ mod tests {
         }
         // identical budgets: entry counts match across the matrix
         assert!(rows.iter().all(|r| r.entries_per_round == rows[0].entries_per_round));
+    }
+
+    #[test]
+    fn downlink_sweep_cuts_broadcast_bytes() {
+        let rows = downlink_sweep(0.05, 120, 7);
+        assert_eq!(rows.len(), 5);
+        let by = |name: &str| rows.iter().find(|r| r.name == name).unwrap();
+        let dense = by("dense");
+        for r in &rows {
+            assert!(r.final_gap.is_finite() && r.final_gap >= 0.0, "{r:?}");
+            // the downlink never touches the uplink: same budget, same
+            // (or bit-identical) trajectory, same upload bytes
+            assert_eq!(r.up_bytes_per_round, dense.up_bytes_per_round, "{r:?}");
+        }
+        // lossless sparse broadcasts reproduce the dense trajectory
+        // bit-for-bit — the gap columns match EXACTLY
+        assert_eq!(by("sparse/f32").final_gap, dense.final_gap);
+        assert_eq!(by("sparse/rice").final_gap, dense.final_gap);
+        // byte ordering: every sparse row beats the dense 32J
+        // broadcast; rice beats packed indices; 8-bit values beat f32
+        for r in &rows {
+            if r.name != "dense" {
+                assert!(r.down_bytes_per_round < dense.down_bytes_per_round, "{r:?}");
+            }
+        }
+        assert!(by("sparse/rice").down_bytes_per_round < by("sparse/f32").down_bytes_per_round);
+        assert!(by("sparse/u8").down_bytes_per_round < by("sparse/f32").down_bytes_per_round);
+        // quantized downlink only perturbs the posterior statistic
+        // (the server still steps on the exact aggregate), so the gap
+        // stays in a tight band around the dense run
+        assert!(by("sparse/u8").final_gap < 6.0 * dense.final_gap.max(0.05), "{rows:?}");
     }
 
     #[test]

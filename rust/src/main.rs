@@ -10,14 +10,18 @@
 //!                                      artifact's real per-layer layout;
 //!                                      degrades to the linreg testbed
 //!                                      when artifacts are unavailable)
-//! repro sweep  --param mu|q|workers|approx|hetero|bits|codec ...
+//! repro sweep  --param mu|q|workers|approx|hetero|bits|codec|downlink ...
 //! repro comm   [--s 0.4,0.1,0.01,0.001]
 //! repro train  --config cfg.json [--groups 60,40 --budget prop:0.1]
 //!              [--policy 'glob=family:k=v,...;...']
+//!              [--downlink 'glob=:bits=..,idx=..,levels=..;...']
 //!                                      (generic linreg-testbed run;
 //!                                       --groups switches on the
 //!                                       layer-wise bucketed path,
-//!                                       --policy makes it heterogeneous)
+//!                                       --policy makes it heterogeneous,
+//!                                       --downlink compresses the
+//!                                       server broadcast — codec-only
+//!                                       keys, works flat or grouped)
 //! repro info                          (artifact + platform report)
 //! ```
 //!
@@ -284,8 +288,8 @@ fn cmd_fig3(args: Vec<String>) -> i32 {
 }
 
 fn cmd_sweep(args: Vec<String>) -> i32 {
-    let p = Cli::new("Ablation sweeps (DESIGN.md Abl 1-4 + hetero + quantized bits + codec)")
-        .required("param", "mu | q | workers | approx | hetero | bits | codec")
+    let p = Cli::new("Ablation sweeps (DESIGN.md Abl 1-4 + hetero + quantized bits + codec + downlink)")
+        .required("param", "mu | q | workers | approx | hetero | bits | codec | downlink")
         .flag("values", "", "comma-separated sweep values (defaults per param)")
         .flag("s", "0.5", "sparsity factor")
         .flag("iters", "400", "iterations per point")
@@ -394,6 +398,22 @@ fn cmd_sweep(args: Vec<String>) -> i32 {
                 );
             }
         }
+        "downlink" => {
+            println!(
+                "downlink sweep (S={s}, {iters} iters, flat RegTop-k, dense vs \
+                 sparse-broadcast x codec; EXPERIMENTS.md §Downlink protocol):"
+            );
+            println!(
+                "  {:<18} {:>12} {:>14} {:>14}",
+                "downlink", "final gap", "up B/round", "down B/round"
+            );
+            for r in sweeps::downlink_sweep(s, iters, seed) {
+                println!(
+                    "  {:<18} {:>12.6} {:>14} {:>14}",
+                    r.name, r.final_gap, r.up_bytes_per_round, r.down_bytes_per_round
+                );
+            }
+        }
         other => {
             eprintln!("unknown sweep param '{other}'");
             return 2;
@@ -472,12 +492,20 @@ fn cmd_comm(args: Vec<String>) -> i32 {
         );
     }
     println!("\nmeasured bytes/round on the linreg testbed (8 workers, J=60):");
+    println!(
+        "    {:<12} {:>10} {:>10} {:>12}   (ledger-measured, both directions)",
+        "", "uplink B", "downlink B", "sim ms"
+    );
     for &s in &ss {
         println!("  S={s}:");
-        for (name, bytes, sim) in
-            comm_table::measured(s, p.get_usize("iters"), p.get_usize("seed") as u64)
-        {
-            println!("    {name:<10} {bytes:>8} B/round  sim {:.3} ms/round", sim * 1e3);
+        for r in comm_table::measured(s, p.get_usize("iters"), p.get_usize("seed") as u64) {
+            println!(
+                "    {:<12} {:>10} {:>10} {:>12.3}",
+                r.name,
+                r.up_bytes,
+                r.down_bytes,
+                r.sim_s * 1e3
+            );
         }
     }
     0
@@ -498,6 +526,7 @@ fn cmd_train(args: Vec<String>) -> i32 {
     .flag("groups", "", "parameter groups 'name:len,...' or 'len,len,...' (sum = model dim; empty = flat)")
     .flag("budget", "", "per-group budget policy: global:K | per:K1,K2,... | prop:FRAC")
     .flag("policy", "", "heterogeneous per-group policies 'glob=family:k=v,...;...' (empty = homogeneous)")
+    .flag("downlink", "", "downlink codec rules 'glob=:bits=..,idx=..,levels=..;...' (codec-only keys; empty = dense broadcast)")
     .flag("sparsifier", "", "override sparsifier by name (dense|topk|regtopk|randk|threshold|gtopk|dgc|adak)")
     .flag("k", "1", "sparsity budget k")
     .flag("mu", "0.5", "regtopk temperature")
@@ -562,6 +591,27 @@ fn cmd_train(args: Vec<String>) -> i32 {
                     return 2;
                 }
             };
+        }
+    }
+    if p.provided("downlink") {
+        let spec = p.get("downlink");
+        if spec.is_empty() {
+            cfg.downlink = None; // explicit dense-broadcast override
+        } else {
+            // parse + the codec-only validation (sparsifier keys and
+            // bits=auto are uplink concepts)
+            let table = match regtopk::sparsify::PolicyTable::parse(spec) {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!("bad --downlink: {e}");
+                    return 2;
+                }
+            };
+            if let Err(e) = table.validate_downlink() {
+                eprintln!("bad --downlink: {e}");
+                return 2;
+            }
+            cfg.downlink = Some(table);
         }
     }
     // budgets/policies are only consulted on the grouped path —
@@ -653,6 +703,17 @@ fn cmd_train(args: Vec<String>) -> i32 {
         log.last().unwrap().loss,
         log.last().unwrap().opt_gap
     );
+    // downlink-compressed runs: both ledger directions, next to the
+    // dense 32J baseline the broadcast would otherwise have cost
+    if cfg.downlink.is_some() {
+        let iters = cfg.iters.max(1);
+        let dense = tr.ledger.cost.broadcast_bytes(params.dim) * cfg.workers;
+        println!(
+            "downlink: {} B/round sparse broadcast (dense baseline {dense} B/round), uplink {} B/round",
+            tr.ledger.total_download_bytes() / iters,
+            tr.ledger.total_upload_bytes() / iters
+        );
+    }
     // layer-wise runs: per-group upload accounting from the ledger,
     // with the per-group family (heterogeneous policies) and entries
     let group_totals = tr.ledger.group_upload_totals();

@@ -37,6 +37,8 @@ impl Schedule {
     }
 }
 
+use crate::sparse::SparseUpdate;
+
 /// A gradient-descent optimizer applied to the flat parameter vector.
 pub trait Optimizer: Send {
     fn name(&self) -> &'static str;
@@ -44,6 +46,24 @@ pub trait Optimizer: Send {
     fn step(&mut self, w: &mut [f32], g: &[f32], t: usize);
     /// Current learning rate (for logging / gradient recovery).
     fn lr(&self, t: usize) -> f32;
+
+    /// Whether [`Self::step_sparse`] over only the aggregate's touched
+    /// entries is bit-identical to [`Self::step`] over the full dense
+    /// vector.  True only for per-coordinate *stateless* rules where an
+    /// exactly-zero gradient entry leaves the weight bit-unchanged
+    /// (plain SGD).  Momentum/Adam keep per-coordinate state that
+    /// decays even where g is zero, so they return false and the server
+    /// falls back to the dense O(J) step.
+    fn sparse_step_exact(&self) -> bool {
+        false
+    }
+
+    /// Step only on the entries present in `up` (global index = bucket
+    /// offset + local index).  Callers must gate on
+    /// [`Self::sparse_step_exact`]; the default is unreachable.
+    fn step_sparse(&mut self, _w: &mut [f32], _up: &SparseUpdate, _t: usize) {
+        unreachable!("{}: no exact sparse step; gate on sparse_step_exact()", self.name())
+    }
 }
 
 /// Plain SGD:  w <- w - eta_t * g   (the paper's optimizer).
@@ -73,6 +93,23 @@ impl Optimizer for Sgd {
     }
     fn lr(&self, t: usize) -> f32 {
         self.schedule.at(t)
+    }
+
+    fn sparse_step_exact(&self) -> bool {
+        // w - eta*(+0.0) == w bitwise for every w (eta >= 0), so
+        // skipping untouched coordinates reproduces the dense step.
+        true
+    }
+
+    fn step_sparse(&mut self, w: &mut [f32], up: &SparseUpdate, t: usize) {
+        let eta = self.schedule.at(t);
+        for g in 0..up.num_buckets() {
+            let off = up.offset(g);
+            let b = up.bucket(g);
+            for (&i, &v) in b.indices().iter().zip(b.values()) {
+                w[off + i as usize] -= eta * v;
+            }
+        }
     }
 }
 
@@ -164,6 +201,36 @@ mod tests {
         let mut w = vec![1.0, 2.0];
         o.step(&mut w, &[10.0, -10.0], 0);
         assert_eq!(w, vec![0.0, 3.0]);
+    }
+
+    #[test]
+    fn sgd_sparse_step_matches_dense_bitwise() {
+        use crate::grad::GradLayout;
+        let layout =
+            GradLayout::from_sizes([("a".to_string(), 3), ("b".to_string(), 4)]);
+        let mut up = SparseUpdate::zeros(&layout);
+        up.bucket_mut(0).push(1, 0.125);
+        up.bucket_mut(1).push(0, -3.5);
+        up.bucket_mut(1).push(3, 0.0); // touched-but-zero entry
+        let g = up.to_dense();
+        let w0 = vec![0.1f32, -0.0, 7.25, 0.3, 1e-8, -2.0, 0.5];
+        let mut dense = Sgd::new(0.07);
+        let mut sparse = Sgd::new(0.07);
+        let (mut wd, mut ws) = (w0.clone(), w0);
+        dense.step(&mut wd, &g, 3);
+        assert!(sparse.sparse_step_exact());
+        sparse.step_sparse(&mut ws, &up, 3);
+        assert_eq!(
+            wd.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            ws.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "sparse SGD step must be bit-identical to the dense step"
+        );
+    }
+
+    #[test]
+    fn stateful_optimizers_decline_sparse_step() {
+        assert!(!SgdMomentum::new(4, 0.1, 0.9).sparse_step_exact());
+        assert!(!Adam::new(4, 0.1).sparse_step_exact());
     }
 
     #[test]

@@ -81,6 +81,25 @@ impl SparseUpdate {
         }
     }
 
+    /// Reshape to mirror `other`'s bucket structure (offsets, bucket
+    /// dims, total J) with every bucket empty and every codec slot
+    /// inactive.  The server-side merge uses this to shape its output
+    /// from the incoming worker updates — the server holds no
+    /// `GradLayout` of its own.
+    pub fn conform_like(&mut self, other: &SparseUpdate) {
+        self.total = other.total;
+        self.offsets.clear();
+        self.offsets.extend_from_slice(&other.offsets);
+        self.buckets.resize_with(other.buckets.len(), || SparseVec::zeros(0));
+        self.payloads.resize_with(other.buckets.len(), WirePayload::default);
+        for (b, ob) in self.buckets.iter_mut().zip(&other.buckets) {
+            b.reset(ob.dim());
+        }
+        for p in &mut self.payloads {
+            p.clear();
+        }
+    }
+
     pub fn num_buckets(&self) -> usize {
         self.buckets.len()
     }
@@ -208,6 +227,23 @@ mod tests {
         u.conform_to(&GradLayout::single(7));
         assert_eq!(u.num_buckets(), 1);
         assert_eq!(u.bucket(0).dim(), 7);
+    }
+
+    #[test]
+    fn conform_like_mirrors_shape_without_entries() {
+        let layout = two_group_layout();
+        let mut src = SparseUpdate::zeros(&layout);
+        src.bucket_mut(0).push(2, 1.0);
+        src.bucket_mut(1).push(3, -4.0);
+        let mut dst = SparseUpdate::single(SparseVec::new(3, vec![0], vec![9.0]));
+        dst.conform_like(&src);
+        assert_eq!(dst.num_buckets(), 2);
+        assert_eq!(dst.offset(1), src.offset(1));
+        assert_eq!(dst.bucket(0).dim(), 4);
+        assert_eq!(dst.bucket(1).dim(), 6);
+        assert_eq!(dst.total_dim(), 10);
+        assert_eq!(dst.nnz(), 0, "conform_like must not copy entries");
+        assert!(dst.quant(0).is_none() && dst.rice(0).is_none());
     }
 
     #[test]

@@ -296,6 +296,24 @@ impl GroupPolicy {
         }
         Ok(())
     }
+
+    /// Whether only wire-codec keys (`bits`/`idx`/`levels`) are set.
+    /// The downlink policy axis compresses the already-aggregated g^t,
+    /// so sparsifier hyperparameters are meaningless there.
+    pub fn is_codec_only(&self) -> bool {
+        self.family.is_none()
+            && self.k.is_none()
+            && self.mu.is_none()
+            && self.q.is_none()
+            && self.tau.is_none()
+            && self.seed.is_none()
+            && self.momentum.is_none()
+            && self.clip.is_none()
+            && self.ratio.is_none()
+            && self.k_min.is_none()
+            && self.k_max.is_none()
+            && self.eta.is_none()
+    }
 }
 
 /// `glob -> GroupPolicy` rule.
@@ -324,6 +342,32 @@ impl PolicyTable {
 
     pub fn rules(&self) -> &[PolicyRule] {
         &self.rules
+    }
+
+    /// Validate this table as a DOWNLINK policy: every rule may set
+    /// only the wire-codec keys (`bits`/`idx`/`levels`), and `bits`
+    /// must be a fixed/scheduled width — the residual-steered `auto`
+    /// mode lives in the worker-side sparsifier wrappers and has no
+    /// steering state on the server.  A bare `*=` rule is the lossless
+    /// sparse broadcast (raw f32 values over the union support).
+    pub fn validate_downlink(&self) -> Result<(), String> {
+        for r in &self.rules {
+            if !r.policy.is_codec_only() {
+                return Err(format!(
+                    "downlink rule '{}' sets sparsifier keys; only bits=/idx=/levels= apply \
+                     to the aggregate broadcast",
+                    r.pattern
+                ));
+            }
+            if matches!(r.policy.bits, Some(BitsSpec::Auto { .. })) {
+                return Err(format!(
+                    "downlink rule '{}': bits=auto is worker-side only; use a fixed or \
+                     scheduled width",
+                    r.pattern
+                ));
+            }
+        }
+        Ok(())
     }
 
     pub fn is_empty(&self) -> bool {
@@ -733,6 +777,27 @@ mod tests {
             &Json::parse(r#"[{"match":"a","bits":{"auto":true,"lo":4,"hi":8}}]"#).unwrap()
         )
         .is_ok());
+    }
+
+    #[test]
+    fn downlink_validation_allows_codec_keys_only() {
+        // the downlink surface: bare sparse broadcast + codec knobs
+        for ok in [
+            "*=",
+            "*=:bits=8",
+            "*=:idx=rice",
+            "conv*=:bits=4,idx=rice,levels=nuq;*=:idx=raw",
+            "*=:bits=8..4/100",
+        ] {
+            let t = PolicyTable::parse(ok).unwrap();
+            assert!(t.validate_downlink().is_ok(), "{ok}");
+            assert!(t.rules()[0].policy.is_codec_only(), "{ok}");
+        }
+        // sparsifier keys and auto widths have no downlink meaning
+        for bad in ["*=topk", "*=:mu=0.3", "*=:eta=2.0", "*=:k=5", "*=:bits=auto:4..8"] {
+            let t = PolicyTable::parse(bad).unwrap();
+            assert!(t.validate_downlink().is_err(), "{bad}");
+        }
     }
 
     #[test]

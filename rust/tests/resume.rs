@@ -183,6 +183,26 @@ fn resume_equals_uninterrupted_codec_stack() {
 }
 
 #[test]
+fn resume_equals_uninterrupted_with_downlink_compression() {
+    // ISSUE 6: a quantized downlink draws from its own RNG stream
+    // every round, so the `.ef` sidecar carries the codec's RNG in the
+    // additive DLNK section — a resumed run must re-draw exactly the
+    // broadcast rounding decisions the uninterrupted run would have.
+    // A lossless spec rides along to pin the stream-free case too.
+    for spec in ["*=:bits=8,idx=rice", "*=:idx=rice"] {
+        let cfg = TrainConfig {
+            workers: 3,
+            eta: 0.03,
+            sparsifier: SparsifierKind::RegTopK { k: 6, mu: 0.5, q: 1.0 },
+            eval_every: 0,
+            downlink: Some(PolicyTable::parse(spec).unwrap()),
+            ..TrainConfig::default()
+        };
+        assert_resume_exact("downlink", &cfg, 5, 13);
+    }
+}
+
+#[test]
 fn legacy_model_only_checkpoint_still_restores_cold() {
     let (params, seed) = testbed();
     let problem = generate(params, seed);

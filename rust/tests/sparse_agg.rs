@@ -1,0 +1,239 @@
+//! PR 6 equivalence net — sparse-domain aggregation and the
+//! compressed downlink:
+//!
+//! 1. the k·n sparse union merge is BIT-IDENTICAL to the dense
+//!    densify-then-step server for all eight sparsifier families, flat
+//!    and grouped/heterogeneous (the merge accumulates per-index
+//!    contributions in the same worker order as the dense axpy loop,
+//!    so the aggregates must be equal, not close);
+//! 2. a lossless downlink codec (`*=`, `idx=rice`, `idx=raw`) changes
+//!    only the wire representation: the trajectory stays bitwise equal
+//!    to the downlink-free run while the ledger charges fewer
+//!    broadcast bytes;
+//! 3. for EVERY downlink codec family — lossless and quantized — a
+//!    worker-side `GaggMirror` fed the sparse broadcast reconstructs
+//!    exactly the dense g^t the server holds;
+//! 4. the downlink axis composes with grouped layouts and a
+//!    heterogeneous quantized uplink policy.
+
+use regtopk::config::TrainConfig;
+use regtopk::coordinator::GaggMirror;
+use regtopk::data::linear::{generate, LinearParams};
+use regtopk::experiments::fig2;
+use regtopk::grad::GradLayout;
+use regtopk::sparsify::{BudgetPolicy, PolicyTable, SparsifierKind};
+
+fn testbed() -> (LinearParams, u64) {
+    (LinearParams { workers: 3, rows_per_worker: 50, dim: 24, ..LinearParams::fig2() }, 13)
+}
+
+fn all_kinds(dim: usize) -> Vec<SparsifierKind> {
+    let k = (dim / 4).max(1);
+    vec![
+        SparsifierKind::Dense,
+        SparsifierKind::TopK { k },
+        SparsifierKind::RegTopK { k, mu: 0.5, q: 1.0 },
+        SparsifierKind::RandK { k, seed: 5 },
+        SparsifierKind::Threshold { tau: 0.5 },
+        SparsifierKind::GlobalTopK { k },
+        SparsifierKind::Dgc { k, momentum: 0.9, clip: 0.0 },
+        SparsifierKind::AdaK { ratio: 1.0, k_min: 1, k_max: 2 * k },
+    ]
+}
+
+/// Drive the same config through the sparse-merge server and the
+/// legacy dense path (`force_dense`); every round's aggregate, the
+/// final model, and both ledger totals must agree bit for bit.
+fn assert_sparse_equals_dense(tag: &str, cfg: &TrainConfig, rounds: usize) {
+    let (params, seed) = testbed();
+    let problem = generate(params, seed);
+    let mut sparse = fig2::trainer_from_config(cfg, &problem);
+    let mut dense = fig2::trainer_from_config(cfg, &problem);
+    dense.server.force_dense = true;
+    for t in 0..rounds {
+        sparse.round();
+        dense.round();
+        assert_eq!(
+            sparse.server.gagg, dense.server.gagg,
+            "{tag}/{}: aggregate diverged at round {t}",
+            cfg.sparsifier.name()
+        );
+    }
+    assert_eq!(sparse.server.w, dense.server.w, "{tag}/{}", cfg.sparsifier.name());
+    assert_eq!(
+        sparse.ledger.total_upload_bytes(),
+        dense.ledger.total_upload_bytes(),
+        "{tag}/{}",
+        cfg.sparsifier.name()
+    );
+    assert_eq!(
+        sparse.ledger.total_download_bytes(),
+        dense.ledger.total_download_bytes(),
+        "{tag}/{}: downlink-unset must charge the dense broadcast",
+        cfg.sparsifier.name()
+    );
+}
+
+#[test]
+fn sparse_merge_is_bit_identical_to_dense_aggregation_flat() {
+    for kind in all_kinds(24) {
+        let cfg = TrainConfig {
+            workers: 3,
+            eta: 0.03,
+            sparsifier: kind,
+            eval_every: 0,
+            ..TrainConfig::default()
+        };
+        assert_sparse_equals_dense("flat", &cfg, 15);
+    }
+}
+
+#[test]
+fn sparse_merge_is_bit_identical_to_dense_aggregation_grouped() {
+    for kind in all_kinds(24) {
+        let cfg = TrainConfig {
+            workers: 3,
+            eta: 0.03,
+            sparsifier: kind,
+            eval_every: 0,
+            groups: Some(GradLayout::from_sizes([
+                ("conv.w".to_string(), 16),
+                ("conv.b".to_string(), 8),
+            ])),
+            budget: Some(BudgetPolicy::Global { k: 6 }),
+            ..TrainConfig::default()
+        };
+        assert_sparse_equals_dense("grouped", &cfg, 12);
+    }
+}
+
+#[test]
+fn sparse_merge_is_bit_identical_under_heterogeneous_policy() {
+    // mixed families + a dense group + quantized transmission: the
+    // merge has to reproduce partially-dense buckets and payload
+    // decodes exactly
+    let cfg = TrainConfig {
+        workers: 3,
+        eta: 0.03,
+        sparsifier: SparsifierKind::RegTopK { k: 6, mu: 0.5, q: 1.0 },
+        eval_every: 0,
+        groups: Some(GradLayout::from_sizes([
+            ("conv.w".to_string(), 12),
+            ("conv.b".to_string(), 4),
+            ("fc.w".to_string(), 8),
+        ])),
+        budget: Some(BudgetPolicy::Proportional { frac: 0.25 }),
+        policy: Some(
+            PolicyTable::parse("*.b=dense;conv*=regtopk:bits=4;*=topk").unwrap(),
+        ),
+        ..TrainConfig::default()
+    };
+    assert_sparse_equals_dense("hetero", &cfg, 12);
+}
+
+#[test]
+fn lossless_downlink_keeps_the_trajectory_and_cuts_broadcast_bytes() {
+    let (params, seed) = testbed();
+    let problem = generate(params, seed);
+    let base = TrainConfig {
+        workers: 3,
+        eta: 0.03,
+        sparsifier: SparsifierKind::RegTopK { k: 2, mu: 0.5, q: 1.0 },
+        eval_every: 0,
+        ..TrainConfig::default()
+    };
+    let mut plain = fig2::trainer_from_config(&base, &problem);
+    for _ in 0..15 {
+        plain.round();
+    }
+    for spec in ["*=", "*=:idx=rice", "*=:idx=raw"] {
+        let mut cfg = base.clone();
+        cfg.downlink = Some(PolicyTable::parse(spec).unwrap());
+        let mut tr = fig2::trainer_from_config(&cfg, &problem);
+        for _ in 0..15 {
+            tr.round();
+        }
+        // lossless codecs change the wire, not the math
+        assert_eq!(tr.server.w, plain.server.w, "{spec}: model diverged");
+        assert_eq!(tr.server.gagg, plain.server.gagg, "{spec}: aggregate diverged");
+        // the uplink is untouched by the downlink axis
+        assert_eq!(
+            tr.ledger.total_upload_bytes(),
+            plain.ledger.total_upload_bytes(),
+            "{spec}"
+        );
+        // at k=2 of 24 the 3-worker union is <= 6 entries, far below
+        // the dense 32J broadcast
+        assert!(
+            tr.ledger.total_download_bytes() < plain.ledger.total_download_bytes(),
+            "{spec}: {} vs dense {}",
+            tr.ledger.total_download_bytes(),
+            plain.ledger.total_download_bytes()
+        );
+    }
+}
+
+#[test]
+fn workers_reconstruct_the_broadcast_exactly_for_every_codec_family() {
+    // the wire contract: whatever the downlink codec does to the
+    // sparse g^t, scattering the broadcast into a worker-side mirror
+    // must reproduce the server's dense g^t bit for bit — the server
+    // steps on its own decode, so server and workers stay in lockstep
+    // even under lossy value codecs
+    let (params, seed) = testbed();
+    let problem = generate(params, seed);
+    for spec in
+        ["*=", "*=:idx=rice", "*=:idx=raw", "*=:bits=8", "*=:bits=8,idx=rice,levels=nuq"]
+    {
+        let cfg = TrainConfig {
+            workers: 3,
+            eta: 0.03,
+            sparsifier: SparsifierKind::RegTopK { k: 6, mu: 0.5, q: 1.0 },
+            eval_every: 0,
+            downlink: Some(PolicyTable::parse(spec).unwrap()),
+            ..TrainConfig::default()
+        };
+        let mut tr = fig2::trainer_from_config(&cfg, &problem);
+        let mut mirror = GaggMirror::new(24);
+        for _ in 0..12 {
+            let rr = tr.round();
+            assert!(rr.mean_loss.is_finite(), "{spec}");
+            mirror.apply(tr.server.gagg_sparse());
+            assert_eq!(mirror.dense(), tr.server.gagg.as_slice(), "{spec}");
+        }
+    }
+}
+
+#[test]
+fn downlink_composes_with_grouped_hetero_quantized_uplink() {
+    let (params, seed) = testbed();
+    let problem = generate(params, seed);
+    let rounds = 20;
+    let cfg = TrainConfig {
+        workers: 3,
+        eta: 0.03,
+        sparsifier: SparsifierKind::RegTopK { k: 6, mu: 0.5, q: 1.0 },
+        eval_every: 0,
+        groups: Some(GradLayout::from_sizes([
+            ("conv.w".to_string(), 12),
+            ("conv.b".to_string(), 4),
+            ("fc.w".to_string(), 8),
+        ])),
+        budget: Some(BudgetPolicy::Proportional { frac: 0.25 }),
+        policy: Some(
+            PolicyTable::parse("*.b=dense;conv*=regtopk:bits=4;*=topk").unwrap(),
+        ),
+        downlink: Some(PolicyTable::parse("*=:bits=8,idx=rice").unwrap()),
+        ..TrainConfig::default()
+    };
+    let mut tr = fig2::trainer_from_config(&cfg, &problem);
+    for _ in 0..rounds {
+        let rr = tr.round();
+        assert!(rr.mean_loss.is_finite());
+    }
+    // the ISSUE acceptance bar: downlink bytes below the dense 32·J
+    // per-worker baseline
+    let dense_baseline = tr.ledger.cost.broadcast_bytes(24) * 3 * rounds;
+    let down = tr.ledger.total_download_bytes();
+    assert!(down < dense_baseline, "downlink {down} vs dense baseline {dense_baseline}");
+}

@@ -79,6 +79,22 @@ target/release/repro train --config "$smoke_dir/cfg.json" \
 target/release/repro sweep --param codec --iters 40 --s 0.2
 target/release/repro comm --s 0.01 --iters 5
 
+echo "== downlink smoke: --downlink + sweep --param downlink =="
+# sparse-domain aggregation + codec-compressed broadcast (ISSUE 6
+# tentpole): lossless flat, then quantized downlink composed with a
+# grouped quantized uplink; the run must print the downlink B/round
+# line with the dense baseline next to it
+target/release/repro train --config "$smoke_dir/cfg.json" \
+    --downlink '*=' --out "$smoke_dir/out"
+target/release/repro train --config "$smoke_dir/cfg.json" \
+    --groups conv:60,fc:40 --budget prop:0.1 \
+    --policy 'conv*=regtopk:bits=4;*=topk' \
+    --downlink '*=:bits=8,idx=rice' --out "$smoke_dir/out"
+# downlink codec matrix (EXPERIMENTS.md §Downlink protocol); s=0.05
+# keeps the union support well under J so every sparse row must beat
+# the dense broadcast
+target/release/repro sweep --param downlink --iters 40 --s 0.05
+
 if [[ "${1:-}" == "--full" ]]; then
     echo "== bench (full budget) =="
     cargo bench --bench topk_select
@@ -87,6 +103,7 @@ if [[ "${1:-}" == "--full" ]]; then
     BENCH_JSON=BENCH_PR3.json cargo bench --bench heterogeneous
     BENCH_JSON=BENCH_PR4.json cargo bench --bench quantized
     BENCH_JSON=BENCH_PR5.json cargo bench --bench codec
+    BENCH_JSON=BENCH_PR6.json cargo bench --bench aggregate
 else
     echo "== bench smoke (quick budget) =="
     BENCH_BUDGET_MS=60 cargo bench --bench topk_select
@@ -95,6 +112,7 @@ else
     BENCH_BUDGET_MS=60 BENCH_JSON=BENCH_PR3.json cargo bench --bench heterogeneous
     BENCH_BUDGET_MS=60 BENCH_JSON=BENCH_PR4.json cargo bench --bench quantized
     BENCH_BUDGET_MS=60 BENCH_JSON=BENCH_PR5.json cargo bench --bench codec
+    BENCH_BUDGET_MS=60 BENCH_JSON=BENCH_PR6.json cargo bench --bench aggregate
 fi
 
 echo "verify: OK"
