@@ -1,0 +1,261 @@
+//! Comment/string-aware source splitter for the repo-invariant
+//! analyzer.
+//!
+//! The analyzer's rules are *mechanical*: they match tokens in code.
+//! A naive grep would fire on the word "unsafe" inside a doc comment
+//! or a string literal (including the analyzer's own rule tables), so
+//! every file is first split, line by line, into a **code channel**
+//! (string-literal contents blanked to spaces, comments removed) and a
+//! **comment channel** (the text of `//`, `///`, `//!` and `/* */`
+//! comments).  Rules match the code channel; `SAFETY:` annotations and
+//! `repro-lint: allow(...)` waivers are looked up in the comment
+//! channel.
+//!
+//! The lexer handles the Rust surface this repo actually uses: line
+//! comments, nested block comments, `"..."` strings with escapes,
+//! `r"..."`/`r#"..."#` raw strings, and character literals (so `'"'`
+//! and `'\''` do not open a bogus string).  Lifetimes (`'a`,
+//! `'static`) are recognized and left in the code channel.
+
+#![forbid(unsafe_code)]
+
+/// One source line, split into its two channels.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Line {
+    /// Code with comments stripped and string/char contents blanked.
+    pub code: String,
+    /// Concatenated comment text on this line (without `//` markers).
+    pub comment: String,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum State {
+    Code,
+    /// inside a block comment, at the given nesting depth
+    Block(usize),
+    /// inside a `"..."` string
+    Str,
+    /// inside a raw string closed by `"` + this many `#`
+    RawStr(usize),
+}
+
+/// Split `src` into per-line code/comment channels.
+pub fn split(src: &str) -> Vec<Line> {
+    let mut out = Vec::new();
+    let mut state = State::Code;
+    for raw in src.lines() {
+        let chars: Vec<char> = raw.chars().collect();
+        let mut code = String::with_capacity(chars.len());
+        let mut comment = String::new();
+        let mut i = 0usize;
+        while i < chars.len() {
+            let c = chars[i];
+            let next = chars.get(i + 1).copied();
+            match state {
+                State::Code => match c {
+                    '/' if next == Some('/') => {
+                        // line comment: the rest of the line is comment
+                        comment.push_str(&chars[i + 2..].iter().collect::<String>());
+                        i = chars.len();
+                    }
+                    '/' if next == Some('*') => {
+                        state = State::Block(1);
+                        i += 2;
+                    }
+                    '"' => {
+                        code.push('"');
+                        state = State::Str;
+                        i += 1;
+                    }
+                    'r' if starts_raw_string(&chars, i) => {
+                        let hashes = count_hashes(&chars, i + 1);
+                        code.push_str("r\"");
+                        state = State::RawStr(hashes);
+                        i += 2 + hashes;
+                    }
+                    '\'' => {
+                        // char literal vs lifetime: 'x' or '\n' is a
+                        // literal; anything not closed by a near ' is
+                        // a lifetime and stays in the code channel
+                        if next == Some('\\') {
+                            // escaped char literal: skip to closing '
+                            code.push_str("' '");
+                            let mut j = i + 2;
+                            // the escape body is at most a few chars
+                            // (\u{...} worst case); scan to the quote
+                            while j < chars.len() && chars[j] != '\'' {
+                                j += 1;
+                            }
+                            i = j + 1;
+                        } else if chars.get(i + 2).copied() == Some('\'') {
+                            code.push_str("' '");
+                            i += 3;
+                        } else {
+                            code.push('\'');
+                            i += 1;
+                        }
+                    }
+                    _ => {
+                        code.push(c);
+                        i += 1;
+                    }
+                },
+                State::Block(depth) => {
+                    if c == '*' && next == Some('/') {
+                        state = if depth == 1 { State::Code } else { State::Block(depth - 1) };
+                        i += 2;
+                    } else if c == '/' && next == Some('*') {
+                        state = State::Block(depth + 1);
+                        i += 2;
+                    } else {
+                        comment.push(c);
+                        i += 1;
+                    }
+                }
+                State::Str => match c {
+                    '\\' => {
+                        code.push(' ');
+                        if next.is_some() {
+                            code.push(' ');
+                        }
+                        i += 2;
+                    }
+                    '"' => {
+                        code.push('"');
+                        state = State::Code;
+                        i += 1;
+                    }
+                    _ => {
+                        code.push(' ');
+                        i += 1;
+                    }
+                },
+                State::RawStr(hashes) => {
+                    if c == '"' && closes_raw(&chars, i + 1, hashes) {
+                        code.push('"');
+                        state = State::Code;
+                        i += 1 + hashes;
+                    } else {
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+            }
+        }
+        out.push(Line { code, comment });
+    }
+    out
+}
+
+/// Is `chars[i]` the `r` of `r"..."` / `r#"..."#` (and not part of an
+/// identifier such as `for` or `r2`)?
+fn starts_raw_string(chars: &[char], i: usize) -> bool {
+    if i > 0 {
+        let prev = chars[i - 1];
+        if prev.is_alphanumeric() || prev == '_' {
+            return false;
+        }
+    }
+    let mut j = i + 1;
+    while chars.get(j).copied() == Some('#') {
+        j += 1;
+    }
+    chars.get(j).copied() == Some('"')
+}
+
+fn count_hashes(chars: &[char], mut i: usize) -> usize {
+    let mut n = 0;
+    while chars.get(i).copied() == Some('#') {
+        n += 1;
+        i += 1;
+    }
+    n
+}
+
+fn closes_raw(chars: &[char], i: usize, hashes: usize) -> bool {
+    (0..hashes).all(|k| chars.get(i + k).copied() == Some('#'))
+}
+
+/// Does `code` contain `word` as a standalone token (not part of a
+/// longer identifier)?  Used for keywords like `unsafe`, so that
+/// `unsafe_op_in_unsafe_fn` inside an attribute does not match.
+pub fn has_word(code: &str, word: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(word) {
+        let at = start + pos;
+        let before_ok = at == 0 || !is_ident_byte(bytes[at - 1]);
+        let end = at + word.len();
+        let after_ok = end >= bytes.len() || !is_ident_byte(bytes[end]);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + 1;
+    }
+    false
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn code_of(src: &str) -> Vec<String> {
+        split(src).into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn strips_line_and_doc_comments() {
+        let lines = split("let x = 1; // unsafe here\n//! unsafe docs\nx += 1;");
+        assert_eq!(lines[0].code, "let x = 1; ");
+        assert!(lines[0].comment.contains("unsafe here"));
+        assert_eq!(lines[1].code, "");
+        assert!(lines[1].comment.contains("unsafe docs"));
+        assert_eq!(lines[2].code, "x += 1;");
+    }
+
+    #[test]
+    fn blanks_string_contents() {
+        let c = code_of(r#"let s = "unsafe // not code"; f(s);"#);
+        assert!(!c[0].contains("unsafe"));
+        assert!(!c[0].contains("//"));
+        assert!(c[0].contains("f(s);"));
+    }
+
+    #[test]
+    fn raw_strings_and_hashes() {
+        let c = code_of("let s = r#\"unsafe \" inner\"# + r\"thread::spawn\";");
+        assert!(!c[0].contains("unsafe"));
+        assert!(!c[0].contains("spawn"));
+        assert!(c[0].ends_with(';'));
+    }
+
+    #[test]
+    fn nested_block_comments_span_lines() {
+        let lines = split("a /* one /* two */ still */ b\nc /* open\nunsafe\n*/ d");
+        assert_eq!(lines[0].code.replace(' ', ""), "ab");
+        assert_eq!(lines[2].code, "");
+        assert!(lines[2].comment.contains("unsafe"));
+        assert_eq!(lines[3].code.trim(), "d");
+    }
+
+    #[test]
+    fn char_literals_do_not_open_strings() {
+        let c = code_of("if c == '\"' || c == '\\'' { x('/') } // unsafe\nlet l: &'static str = y;");
+        assert!(!c[0].contains("unsafe"));
+        // the lifetime survives in the code channel
+        assert!(c[1].contains("'static"));
+    }
+
+    #[test]
+    fn word_boundaries() {
+        assert!(has_word("unsafe {", "unsafe"));
+        assert!(has_word("pub unsafe fn f()", "unsafe"));
+        assert!(!has_word("deny(unsafe_op_in_unsafe_fn)", "unsafe"));
+        assert!(!has_word("my_unsafe", "unsafe"));
+        assert!(has_word("x.unsafe", "unsafe"));
+    }
+}

@@ -1,0 +1,435 @@
+//! The repo-invariant rule set.
+//!
+//! Each rule is mechanical on purpose: these are the invariants the
+//! review history keeps re-litigating by hand, written down once and
+//! enforced on every line of the tree.  Rules match the lexer's code
+//! channel, so tokens inside strings and comments never fire.
+//!
+//! | id                  | invariant                                            |
+//! |---------------------|------------------------------------------------------|
+//! | `safety-comment`    | every `unsafe` token carries a `SAFETY:` comment      |
+//! | `unsafe-allowlist`  | `unsafe` appears only in the allowlisted module set   |
+//! | `spawn-outside-pool`| `thread::spawn` only in `util/pool.rs` (or tests)     |
+//! | `byte-accounting`   | bits→bytes (`div_ceil(8)`) only inside `comm/codec/`  |
+//! | `wall-clock`        | no wall-clock/OS-entropy calls in deterministic paths |
+//! | `kind-matrix`       | every `SparsifierKind` family in both test matrices   |
+//!
+//! A finding on a specific line can be waived with a
+//! `repro-lint: allow(<rule-id>)` comment on the same line or the
+//! line directly above — the waiver is itself a comment, so it shows
+//! up in review next to the code it excuses.
+
+#![forbid(unsafe_code)]
+
+use super::lexer::{has_word, split, Line};
+
+/// Every rule id the analyzer can report, in the order of the module
+/// docs table.  A waiver comment must name one of these.
+pub const RULES: &[&str] = &[
+    "safety-comment",
+    "unsafe-allowlist",
+    "spawn-outside-pool",
+    "byte-accounting",
+    "wall-clock",
+    "kind-matrix",
+];
+
+/// Files allowed to contain the `unsafe` keyword.  Everything else in
+/// the tree is expected to carry `#![forbid(unsafe_code)]` (directly
+/// or via its parent module); this list is the single place a new
+/// unsafe module must be registered, and `analyze_tree` fails on
+/// stale entries so the list cannot drift from the tree.
+pub const UNSAFE_ALLOWLIST: &[&str] = &[
+    "rust/src/util/pool.rs",
+    "rust/src/sparse/engine.rs",
+    "rust/src/sparsify/regtopk.rs",
+    "rust/src/sparsify/dgc.rs",
+    "rust/src/runtime/mod.rs",
+    "rust/tests/pool_audit.rs",
+];
+
+/// Wall-clock / OS-entropy / iteration-order tokens that must not
+/// appear in deterministic paths.  `HashMap`/`HashSet` are here for
+/// their `RandomState` hasher: seeded-random iteration order is how
+/// "deterministic" trees silently stop being deterministic.
+const WALL_CLOCK_TOKENS: &[&str] = &[
+    "Instant::now",
+    "SystemTime",
+    "HashMap",
+    "HashSet",
+    "RandomState",
+    "thread_rng",
+    "from_entropy",
+];
+
+/// The wall-clock rule does not apply here: measuring elapsed time is
+/// the bench harness's whole job.
+const WALL_CLOCK_EXEMPT: &[&str] = &["rust/src/util/bench.rs"];
+
+/// The two test matrices every `SparsifierKind` family must appear in.
+const KIND_MATRIX_FILES: &[&str] = &["rust/tests/resume.rs", "rust/tests/determinism.rs"];
+
+/// Where the `SparsifierKind` enum itself lives.
+const KIND_ENUM_FILE: &str = "rust/src/sparsify/mod.rs";
+
+/// One analyzer finding.  `line` is 1-based; 0 means the finding is
+/// about the file (or the tree) as a whole.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub path: String,
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path, self.line, self.rule, self.msg)
+    }
+}
+
+/// Analyze a set of `(relative_path, source)` pairs.  This is the
+/// whole analyzer minus the filesystem walk, so the self-test can
+/// feed it fixture trees.  Paths use `/` separators relative to the
+/// repo root (e.g. `rust/src/util/pool.rs`).
+pub fn analyze_sources(files: &[(String, String)]) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for (path, src) in files {
+        scan_file(path, src, &mut findings);
+    }
+    kind_matrix(files, &mut findings);
+    findings.sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
+    findings
+}
+
+/// Is this path inherently test/bench code (rules scoped to shipped
+/// library paths skip it entirely)?
+fn is_test_path(path: &str) -> bool {
+    !path.starts_with("rust/src/")
+}
+
+fn scan_file(path: &str, src: &str, findings: &mut Vec<Finding>) {
+    let lines = split(src);
+    // Repo convention: `#[cfg(test)] mod tests` sits at the end of
+    // the file, so everything from the first `#[cfg(test)]` on is
+    // treated as test region for the test-exempt rules.
+    let test_from = if is_test_path(path) {
+        0
+    } else {
+        lines
+            .iter()
+            .position(|l| l.code.contains("#[cfg(test)]"))
+            .unwrap_or(lines.len())
+    };
+    let allowlisted = UNSAFE_ALLOWLIST.contains(&path);
+    let wall_exempt = WALL_CLOCK_EXEMPT.contains(&path);
+
+    for (idx, line) in lines.iter().enumerate() {
+        let n = idx + 1;
+        let in_test = idx >= test_from;
+        let waived = |rule: &str| has_waiver(&lines, idx, rule);
+
+        if has_word(&line.code, "unsafe") {
+            if !allowlisted && !waived("unsafe-allowlist") {
+                findings.push(Finding {
+                    rule: "unsafe-allowlist",
+                    path: path.to_string(),
+                    line: n,
+                    msg: format!(
+                        "`unsafe` outside the allowlisted module set; \
+                         add a safe wrapper in an allowlisted module or \
+                         register `{path}` in analysis::rules::UNSAFE_ALLOWLIST"
+                    ),
+                });
+            }
+            if !has_safety_comment(&lines, idx) && !waived("safety-comment") {
+                findings.push(Finding {
+                    rule: "safety-comment",
+                    path: path.to_string(),
+                    line: n,
+                    msg: "`unsafe` without a `SAFETY:` comment on the same line or \
+                          directly above (unsafe fn declarations may use a \
+                          `# Safety` doc heading instead)"
+                        .to_string(),
+                });
+            }
+        }
+
+        if !in_test
+            && line.code.contains("thread::spawn")
+            && path != "rust/src/util/pool.rs"
+            && !waived("spawn-outside-pool")
+        {
+            findings.push(Finding {
+                rule: "spawn-outside-pool",
+                path: path.to_string(),
+                line: n,
+                msg: "`thread::spawn` outside util/pool.rs — hot paths must reuse \
+                      the persistent pool, not spawn per call"
+                    .to_string(),
+            });
+        }
+
+        if !in_test
+            && line.code.contains("div_ceil(8)")
+            && !path.starts_with("rust/src/comm/codec/")
+            && !waived("byte-accounting")
+        {
+            findings.push(Finding {
+                rule: "byte-accounting",
+                path: path.to_string(),
+                line: n,
+                msg: "bits→bytes conversion outside comm/codec — all byte \
+                      accounting must go through codec::WireCost so reported \
+                      bytes stay the wire bytes by construction"
+                    .to_string(),
+            });
+        }
+
+        if !in_test && !wall_exempt {
+            for tok in WALL_CLOCK_TOKENS {
+                let hit = if tok.contains("::") {
+                    line.code.contains(tok)
+                } else {
+                    has_word(&line.code, tok)
+                };
+                if hit && !waived("wall-clock") {
+                    findings.push(Finding {
+                        rule: "wall-clock",
+                        path: path.to_string(),
+                        line: n,
+                        msg: format!(
+                            "`{tok}` in a deterministic path — wall-clock and \
+                             OS-entropy (and randomly-seeded hash iteration) \
+                             break bit-reproducibility; use util::rng / BTree \
+                             collections, or waive with a justification"
+                        ),
+                    });
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// `repro-lint: allow(<rule>)` in a comment on this line or the line
+/// directly above waives that rule here.
+fn has_waiver(lines: &[Line], idx: usize, rule: &str) -> bool {
+    let tag = format!("repro-lint: allow({rule})");
+    lines[idx].comment.contains(&tag)
+        || (idx > 0 && lines[idx - 1].comment.contains(&tag))
+}
+
+/// Accept a `SAFETY:` marker on the unsafe line itself or anywhere in
+/// the contiguous run of comment/attribute/blank lines directly above
+/// it (so an attribute between the comment and the item is fine).  A
+/// `# Safety` doc heading also counts — that is rustdoc's convention
+/// for `unsafe fn` contracts.
+fn has_safety_comment(lines: &[Line], idx: usize) -> bool {
+    let marks = |l: &Line| l.comment.contains("SAFETY:") || l.comment.contains("# Safety");
+    if marks(&lines[idx]) {
+        return true;
+    }
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        let l = &lines[j];
+        let code = l.code.trim();
+        let comment_ish = code.is_empty() || code.starts_with("#[") || code.starts_with("#![");
+        if !comment_ish {
+            return false;
+        }
+        if marks(l) {
+            return true;
+        }
+    }
+    false
+}
+
+/// Parse the `SparsifierKind` variant names and require each to
+/// appear as `SparsifierKind::<Variant>` in every matrix file.  New
+/// families then cannot land without resume + bit-identity coverage.
+fn kind_matrix(files: &[(String, String)], findings: &mut Vec<Finding>) {
+    let Some((_, enum_src)) = files.iter().find(|(p, _)| p == KIND_ENUM_FILE) else {
+        return;
+    };
+    let variants = parse_kind_variants(enum_src);
+    if variants.is_empty() {
+        return;
+    }
+    for matrix in KIND_MATRIX_FILES {
+        let Some((_, src)) = files.iter().find(|(p, _)| p == *matrix) else {
+            findings.push(Finding {
+                rule: "kind-matrix",
+                path: (*matrix).to_string(),
+                line: 0,
+                msg: "matrix test file missing from tree".to_string(),
+            });
+            continue;
+        };
+        let code: String = split(src).into_iter().map(|l| l.code + "\n").collect();
+        for v in &variants {
+            if !code.contains(&format!("SparsifierKind::{v}")) {
+                findings.push(Finding {
+                    rule: "kind-matrix",
+                    path: (*matrix).to_string(),
+                    line: 0,
+                    msg: format!(
+                        "SparsifierKind::{v} is not exercised here — every \
+                         sparsifier family must appear in the resume and \
+                         bit-identity matrices"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+fn parse_kind_variants(src: &str) -> Vec<String> {
+    let lines = split(src);
+    let Some(open) = lines.iter().position(|l| l.code.contains("pub enum SparsifierKind")) else {
+        return Vec::new();
+    };
+    let mut out = Vec::new();
+    for l in &lines[open + 1..] {
+        let code = l.code.trim();
+        if code.starts_with('}') {
+            break;
+        }
+        let name: String =
+            code.chars().take_while(|c| c.is_alphanumeric() || *c == '_').collect();
+        if !name.is_empty() && name.chars().next().is_some_and(|c| c.is_uppercase()) {
+            out.push(name);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(files: &[(&str, &str)]) -> Vec<Finding> {
+        let owned: Vec<(String, String)> =
+            files.iter().map(|(p, s)| ((*p).to_string(), (*s).to_string())).collect();
+        analyze_sources(&owned)
+    }
+
+    #[test]
+    fn clean_file_has_no_findings() {
+        let f = run(&[(
+            "rust/src/util/pool.rs",
+            "// SAFETY: ptr valid for len elements\nunsafe { go() }\n",
+        )]);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn safety_comment_rule_fires() {
+        let f = run(&[("rust/src/util/pool.rs", "unsafe { go() }\n")]);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "safety-comment");
+        assert_eq!(f[0].line, 1);
+    }
+
+    #[test]
+    fn safety_comment_accepts_same_line_and_attr_gap() {
+        let src = "// SAFETY: checked above\n#[allow(clippy::x)]\nunsafe { a() }\n\
+                   let x = unsafe { b() }; // SAFETY: b is infallible here\n";
+        assert!(run(&[("rust/src/util/pool.rs", src)]).is_empty());
+    }
+
+    #[test]
+    fn safety_comment_does_not_leak_past_code() {
+        // the comment belongs to the first impl only
+        let src = "// SAFETY: T is Send\nunsafe impl Send for X {}\nunsafe impl Sync for X {}\n";
+        let f = run(&[("rust/src/util/pool.rs", src)]);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!((f[0].rule, f[0].line), ("safety-comment", 3));
+    }
+
+    #[test]
+    fn allowlist_rule_fires_off_list() {
+        let f = run(&[(
+            "rust/src/metrics/mod.rs",
+            "// SAFETY: justified\nunsafe { go() }\n",
+        )]);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "unsafe-allowlist");
+    }
+
+    #[test]
+    fn spawn_rule_fires_outside_pool_but_not_in_tests() {
+        let f = run(&[("rust/src/comm/transport.rs", "std::thread::spawn(|| {});\n")]);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "spawn-outside-pool");
+        let src = "fn main() {}\n#[cfg(test)]\nmod tests {\n  fn t() { std::thread::spawn(|| {}); }\n}\n";
+        assert!(run(&[("rust/src/comm/transport.rs", src)]).is_empty());
+        assert!(run(&[("rust/tests/pool_extra.rs", "std::thread::spawn(|| {});\n")]).is_empty());
+    }
+
+    #[test]
+    fn byte_accounting_rule_fires_outside_codec() {
+        let f = run(&[("rust/src/sparsify/layerwise.rs", "let b = (n * bits).div_ceil(8);\n")]);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "byte-accounting");
+        assert!(run(&[("rust/src/comm/codec/cost.rs", "let b = x.div_ceil(8);\n")]).is_empty());
+    }
+
+    #[test]
+    fn wall_clock_rule_fires_and_bench_is_exempt() {
+        let f = run(&[("rust/src/coordinator/trainer.rs", "let t0 = Instant::now();\n")]);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "wall-clock");
+        let f = run(&[("rust/src/grad/layout.rs", "use std::collections::HashMap;\n")]);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "wall-clock");
+        assert!(run(&[("rust/src/util/bench.rs", "let t0 = Instant::now();\n")]).is_empty());
+    }
+
+    #[test]
+    fn waiver_suppresses_exactly_one_rule() {
+        let src = "// why: reported metric only — repro-lint: allow(wall-clock)\n\
+                   let t0 = Instant::now();\n";
+        assert!(run(&[("rust/src/coordinator/trainer.rs", src)]).is_empty());
+        // a waiver for a different rule does not suppress
+        let src = "// repro-lint: allow(byte-accounting)\nlet t0 = Instant::now();\n";
+        let f = run(&[("rust/src/coordinator/trainer.rs", src)]);
+        assert_eq!(f.len(), 1, "{f:?}");
+    }
+
+    #[test]
+    fn tokens_in_strings_and_comments_do_not_fire() {
+        let src = "// unsafe thread::spawn HashMap div_ceil(8) Instant::now\n\
+                   let s = \"unsafe thread::spawn HashMap Instant::now\";\n";
+        assert!(run(&[("rust/src/metrics/mod.rs", src)]).is_empty());
+    }
+
+    #[test]
+    fn kind_matrix_catches_missing_family() {
+        let enum_src = "pub enum SparsifierKind {\n    Dense,\n    TopK { k: usize },\n}\n";
+        let covered = "t(SparsifierKind::Dense); t(SparsifierKind::TopK { k });\n";
+        let partial = "t(SparsifierKind::Dense);\n";
+        let f = run(&[
+            (KIND_ENUM_FILE, enum_src),
+            ("rust/tests/resume.rs", covered),
+            ("rust/tests/determinism.rs", partial),
+        ]);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "kind-matrix");
+        assert_eq!(f[0].path, "rust/tests/determinism.rs");
+        assert!(f[0].msg.contains("TopK"));
+        let f = run(&[
+            (KIND_ENUM_FILE, enum_src),
+            ("rust/tests/resume.rs", covered),
+            ("rust/tests/determinism.rs", covered),
+        ]);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn parse_variants_reads_real_shape() {
+        let src = "pub enum SparsifierKind {\n    Dense,\n    RegTopK { k: usize, mu: f32 },\n    AdaK { ratio: f32 },\n}\n";
+        assert_eq!(parse_kind_variants(src), vec!["Dense", "RegTopK", "AdaK"]);
+    }
+}

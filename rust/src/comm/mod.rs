@@ -11,6 +11,8 @@
 //! benches can report the paper's motivating traffic arithmetic
 //! (1.7e9 symbols/epoch for ResNet-110, §1).
 
+#![forbid(unsafe_code)]
+
 pub mod codec;
 mod ledger;
 pub mod quantize;

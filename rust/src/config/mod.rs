@@ -3,6 +3,8 @@
 //! these; the config is echoed into each run's JSON output so results
 //! are self-describing.
 
+#![forbid(unsafe_code)]
+
 use std::path::Path;
 
 use crate::comm::CostModel;

@@ -16,6 +16,8 @@
 //!   transport (no `thread::spawn` per run); bit-identical aggregates
 //!   (verified in tests) because gathers are ordered by worker id.
 
+#![forbid(unsafe_code)]
+
 mod checkpoint;
 mod downlink;
 mod server;

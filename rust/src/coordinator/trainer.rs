@@ -321,6 +321,8 @@ impl Trainer {
             self.config_echo(),
         );
         for i in 0..iters {
+            // wall_time_s is a reported metric, never an input to the
+            // trajectory — repro-lint: allow(wall-clock)
             let t0 = Instant::now();
             let rr = self.round();
             let mut rec = IterRecord::new(rr.t);

@@ -9,6 +9,8 @@
 //! - [`sampler`]    — seeded mini-batch samplers, identical across
 //!                    algorithms (the paper's §4.2 fairness condition).
 
+#![forbid(unsafe_code)]
+
 pub mod cifar_like;
 pub mod linear;
 pub mod sampler;

@@ -236,6 +236,8 @@ pub fn run(
         let mut tr = build_trainer(rt, cfg, kind, k, model, &layout, &train)?;
         let mut log = RunLog::new(name, tr.config_echo());
         for t in 0..cfg.iters {
+            // wall_time_s is a reported metric, never an input to the
+            // trajectory — repro-lint: allow(wall-clock)
             let t0 = std::time::Instant::now();
             let rr = tr.round();
             let mut rec = IterRecord::new(t);

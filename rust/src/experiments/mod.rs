@@ -5,6 +5,8 @@
 //! examples, integration tests and benches all regenerate the same
 //! series the paper reports; EXPERIMENTS.md records the outputs.
 
+#![forbid(unsafe_code)]
+
 pub mod baselines;
 pub mod comm_table;
 pub mod fig1;

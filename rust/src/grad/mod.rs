@@ -17,6 +17,8 @@
 //! the previous round's buffers; only the k-entry [`SparseVec`] is
 //! allocated per round.
 
+#![forbid(unsafe_code)]
+
 pub mod layout;
 
 pub use layout::{GradLayout, GradView, GroupSpec};

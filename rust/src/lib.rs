@@ -18,7 +18,16 @@
 //! - **L2/L1 (python, build-time only)** — JAX model graphs + Pallas
 //!   kernels, lowered once to `artifacts/*.hlo.txt`; [`runtime`] loads
 //!   and executes them via the PJRT CPU client.
+//!
+//! Soundness tooling (README §Static analysis & soundness): [`analysis`]
+//! is the repo-invariant analyzer behind `repro lint`; the `unsafe`
+//! surface is confined to the allowlist in `analysis::rules`, every
+//! `unsafe` operation sits in an explicit block (`unsafe_op_in_unsafe_fn`
+//! is denied crate-wide), and debug builds run the `SharedSlice` borrow
+//! auditor (see [`util::pool`]).
+#![deny(unsafe_op_in_unsafe_fn)]
 
+pub mod analysis;
 pub mod comm;
 pub mod config;
 pub mod coordinator;

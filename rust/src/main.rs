@@ -23,10 +23,14 @@
 //!                                       server broadcast — codec-only
 //!                                       keys, works flat or grouped)
 //! repro info                          (artifact + platform report)
+//! repro lint   [--root DIR]           (repo-invariant static analyzer;
+//!                                      exit 1 on any finding)
 //! ```
 //!
 //! Every subcommand writes CSV + JSON under `--out` (default
 //! `results/`) and prints a terminal summary with sparklines.
+
+#![forbid(unsafe_code)]
 
 use std::path::{Path, PathBuf};
 
@@ -50,9 +54,10 @@ fn main() {
         "comm" => cmd_comm(args),
         "train" => cmd_train(args),
         "info" => cmd_info(args),
+        "lint" => cmd_lint(args),
         _ => {
             eprintln!(
-                "usage: repro <fig1|fig2|fig3|sweep|baselines|comm|train|info> [flags]\n\
+                "usage: repro <fig1|fig2|fig3|sweep|baselines|comm|train|info|lint> [flags]\n\
                  run `repro <cmd> --help` for per-command flags"
             );
             2
@@ -753,6 +758,55 @@ fn cmd_train(args: Vec<String>) -> i32 {
     }
     write_logs(&[log], p.get("out"), "train");
     0
+}
+
+fn cmd_lint(args: Vec<String>) -> i32 {
+    let p = Cli::new(
+        "Repo-invariant static analyzer (the `scripts/ci.sh analyze` gate).\n\
+         Rules: SAFETY comments on every unsafe block/impl/fn, unsafe only\n\
+         in allowlisted modules, no thread::spawn outside the pool, byte\n\
+         accounting only in comm::codec::WireCost, no wall-clock or OS\n\
+         entropy in deterministic paths, every SparsifierKind family in\n\
+         the resume + determinism test matrices.  Waive a single line\n\
+         with a `repro-lint: allow(<rule>)` comment.",
+    )
+    .flag("root", "", "repo root (default: walk up from the current directory)")
+    .parse_from(args);
+    let p = match p {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let root = if p.get("root").is_empty() {
+        let cwd = std::env::current_dir().expect("cwd");
+        match regtopk::analysis::find_root(&cwd) {
+            Some(r) => r,
+            None => {
+                eprintln!("no repo root (Cargo.toml + rust/src) above {}", cwd.display());
+                return 2;
+            }
+        }
+    } else {
+        PathBuf::from(p.get("root"))
+    };
+    let findings = match regtopk::analysis::analyze_tree(&root) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("lint: cannot walk {}: {e}", root.display());
+            return 2;
+        }
+    };
+    if findings.is_empty() {
+        println!("lint: clean ({} rules, root {})", regtopk::analysis::RULES.len(), root.display());
+        return 0;
+    }
+    for f in &findings {
+        println!("{f}");
+    }
+    eprintln!("lint: {} finding(s)", findings.len());
+    1
 }
 
 fn cmd_info(_args: Vec<String>) -> i32 {

@@ -6,6 +6,8 @@
 //! is deterministic (BTreeMap-backed JSON), so identical runs produce
 //! byte-identical outputs (DESIGN.md invariant 6).
 
+#![forbid(unsafe_code)]
+
 use std::io::Write;
 use std::path::Path;
 

@@ -9,6 +9,8 @@
 //!   executables (linreg, MLP, ResNet) loaded through PJRT; the
 //!   manifest in `artifacts/manifest.json` defines shapes and layouts.
 
+#![forbid(unsafe_code)]
+
 pub mod artifact;
 pub mod logistic;
 

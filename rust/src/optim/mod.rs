@@ -5,6 +5,8 @@
 //! framework covers the "extensions to various optimizers" the related
 //! work (DGC, Adacomp) targets.
 
+#![forbid(unsafe_code)]
+
 /// Learning-rate schedule evaluated per iteration.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Schedule {

@@ -1,5 +1,7 @@
 //! Typed view of `artifacts/manifest.json` (produced by aot.py).
 
+#![forbid(unsafe_code)]
+
 use std::collections::BTreeMap;
 use std::path::Path;
 

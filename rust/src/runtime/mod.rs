@@ -65,13 +65,16 @@ pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
 }
 
-// SAFETY: the PJRT C API guarantees `PJRT_LoadedExecutable_Execute` and
-// friends are thread-safe (the underlying client serializes/locks as
-// needed; see the PJRT C API header contract), and our wrapper never
-// exposes interior mutation.  The `xla` crate simply does not annotate
-// its raw-pointer wrappers.  The CPU client used here is the standard
-// TfrtCpuClient, which is explicitly multi-threaded internally.
+// SAFETY: an Executable owns its PJRT handle exclusively; moving that
+// ownership to another thread is sound because the PJRT C API imposes
+// no thread affinity on loaded executables (the TfrtCpuClient used
+// here is itself multi-threaded).  The `xla` crate simply does not
+// annotate its raw-pointer wrappers.
 unsafe impl Send for Executable {}
+// SAFETY: the PJRT C API guarantees `PJRT_LoadedExecutable_Execute`
+// and friends are thread-safe (the underlying client serializes/locks
+// as needed; see the PJRT C API header contract), and our wrapper
+// never exposes interior mutation through `&self`.
 unsafe impl Sync for Executable {}
 
 impl Executable {

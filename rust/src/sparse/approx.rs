@@ -12,6 +12,8 @@
 //! Recall is tunable via `oversample`; the `approx_topk_recall` test
 //! and the `topk_select` bench quantify the accuracy/latency trade-off.
 
+#![forbid(unsafe_code)]
+
 use crate::sparse::topk::select_topk;
 use crate::util::rng::Rng;
 

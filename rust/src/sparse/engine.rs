@@ -122,27 +122,19 @@ impl SelectEngine {
     }
 
     /// Parallel fill without histogramming (degenerate-budget path).
+    /// `for_shards` owns the disjointness argument — no unsafe here.
     fn fill_only<F: Fn(usize, &mut [f32]) + Sync>(&self, score: &mut [f32], fill: &F) {
-        let j = score.len();
-        let shards = self.shards;
-        let score_sh = SharedSlice::new(score);
-        pool::global().run(shards, |s| {
-            let (lo, hi) = shard_range(j, shards, s);
-            // SAFETY: shard ranges are disjoint.
-            let slice = unsafe { score_sh.range(lo, hi) };
-            fill(lo, slice);
-        });
+        pool::global().for_shards(score, self.shards, |_s, lo, slice| fill(lo, slice));
     }
 
     /// Pass 1, histogram-only variant (the input already exists).
+    /// Each shard owns exactly its histogram slot, which is `map_mut`'s
+    /// contract — no unsafe here.
     fn pass1_hist(&mut self, x: &[f32]) {
         let j = x.len();
         let shards = self.shards;
-        let hist_sh = SharedSlice::new(&mut self.hists);
-        pool::global().run(shards, |s| {
+        pool::global().map_mut(&mut self.hists, |s, h| {
             let (lo, hi) = shard_range(j, shards, s);
-            // SAFETY: each shard touches only its own histogram slot.
-            let h = unsafe { &mut hist_sh.range(s, s + 1)[0] };
             h.fill(0);
             for &v in &x[lo..hi] {
                 h[(mag_bits(v) >> 24) as usize] += 1;
@@ -151,7 +143,8 @@ impl SelectEngine {
     }
 
     /// Pass 1, fused variant: fill the score slice and histogram it in
-    /// one loop per shard.
+    /// one loop per shard.  Two slices are sharded by one task index,
+    /// so this keeps raw [`SharedSlice`] hand-outs.
     fn pass1_fill_hist<F: Fn(usize, &mut [f32]) + Sync>(&mut self, score: &mut [f32], fill: &F) {
         let j = score.len();
         let shards = self.shards;
@@ -159,8 +152,12 @@ impl SelectEngine {
         let score_sh = SharedSlice::new(score);
         pool::global().run(shards, |s| {
             let (lo, hi) = shard_range(j, shards, s);
-            // SAFETY: disjoint score ranges / histogram slots per shard.
+            // SAFETY: shard_range gives disjoint `[lo, hi)` score
+            // ranges per task index, and `score` outlives the run.
             let slice = unsafe { score_sh.range(lo, hi) };
+            // SAFETY: task `s` touches only histogram slot `s`, so the
+            // one-element views are disjoint; `self.hists` outlives
+            // the run.
             let h = unsafe { &mut hist_sh.range(s, s + 1)[0] };
             fill(lo, slice);
             h.fill(0);
@@ -195,9 +192,15 @@ impl SelectEngine {
             let cv_sh = SharedSlice::new(&mut self.cand_val);
             pool::global().run(shards, |s| {
                 let (lo, hi) = shard_range(j, shards, s);
-                // SAFETY: each shard touches only its own buffers.
+                // SAFETY: task `s` touches only winner buffer `s` —
+                // one-element views are disjoint across tasks and
+                // `self.winners` outlives the run.
                 let w = unsafe { &mut win_sh.range(s, s + 1)[0] };
+                // SAFETY: same per-task-slot argument for the
+                // candidate index buffers (`self.cand_idx`).
                 let ci = unsafe { &mut ci_sh.range(s, s + 1)[0] };
+                // SAFETY: same per-task-slot argument for the
+                // candidate value buffers (`self.cand_val`).
                 let cv = unsafe { &mut cv_sh.range(s, s + 1)[0] };
                 w.clear();
                 ci.clear();

@@ -9,6 +9,8 @@
 //! O(k log k) sort of the selected prefix to emit sorted indices.  For
 //! k >= J it degenerates to "select all".
 
+#![forbid(unsafe_code)]
+
 /// Composite ordering key: larger |v| wins; on exact magnitude ties the
 /// lower index wins.
 #[inline]

@@ -20,6 +20,8 @@
 //! travels as raw f32 with bit-packed indices, exactly as before the
 //! codec stack existed.
 
+#![forbid(unsafe_code)]
+
 use crate::comm::codec::{QuantPayload, RicePayload, WirePayload};
 use crate::grad::GradLayout;
 use crate::sparse::SparseVec;

@@ -1,5 +1,7 @@
 //! `SparseVec`: the wire format of a sparsified gradient.
 
+#![forbid(unsafe_code)]
+
 /// A sparse view of a length-`dim` dense vector: parallel arrays of
 /// strictly-increasing indices and their values.
 #[derive(Clone, Debug, PartialEq)]

@@ -9,6 +9,8 @@
 //! plateau, errors piling up) and shrinks when fresh gradients
 //! dominate.
 
+#![forbid(unsafe_code)]
+
 use crate::sparse::{select_topk, SelectEngine, SparseVec};
 use crate::sparsify::{RoundCtx, Sparsifier, SparsifierState};
 

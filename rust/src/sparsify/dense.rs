@@ -6,6 +6,8 @@
 //! exactly QSGD — unbiased stochastic quantization with no feedback —
 //! which is the correct composition for a memoryless transmitter.
 
+#![forbid(unsafe_code)]
+
 use crate::sparse::SparseVec;
 use crate::sparsify::{RoundCtx, Sparsifier};
 

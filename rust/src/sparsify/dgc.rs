@@ -93,8 +93,14 @@ impl Sparsifier for Dgc {
                     &mut self.scratch,
                     |lo, scratch| {
                         let hi = lo + scratch.len();
-                        // SAFETY: shard ranges are disjoint.
+                        // SAFETY: the engine invokes `fill` once per
+                        // shard with the disjoint `[lo, hi)` ranges of
+                        // one pool job, and `self.vel` outlives the
+                        // enclosing `fused_select_into` call.
                         let vel = unsafe { vel_sh.range(lo, hi) };
+                        // SAFETY: same disjoint-shard argument for
+                        // `self.acc`, a second slice sharded by the
+                        // same ranges.
                         let acc = unsafe { acc_sh.range(lo, hi) };
                         for (i, s) in scratch.iter_mut().enumerate() {
                             vel[i] = momentum * vel[i] + scale * grad[lo + i];

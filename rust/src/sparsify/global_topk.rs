@@ -6,6 +6,8 @@
 //! side-channel).  REGTOP-k is the feasible statistical approximation
 //! of this scheme, so gtopk's curve is the ceiling REGTOP-k aims for.
 
+#![forbid(unsafe_code)]
+
 use crate::grad::ErrorFeedback;
 use crate::sparse::{select_topk, SelectEngine, SparseVec};
 use crate::sparsify::{RoundCtx, Sparsifier, SparsifierState};

@@ -45,7 +45,9 @@
 //! an empty or non-matching policy table vs the PR 2 homogeneous path
 //! (pinned by `rust/tests/layerwise.rs`).
 
-use crate::comm::codec::{index_bits, IndexCodec, LevelKind, QuantPayload, ValueCodec};
+#![forbid(unsafe_code)]
+
+use crate::comm::codec::{index_bits, IndexCodec, LevelKind, QuantPayload, ValueCodec, WireCost};
 use crate::grad::{GradLayout, GradView};
 use crate::sparse::engine::MIN_SHARDED_DIM;
 use crate::sparse::{SparseUpdate, SparseVec};
@@ -630,7 +632,7 @@ fn step_children(
             if GroupQuant::active_at(bits) {
                 let (bucket, payload) = out.bucket_quant_mut(g);
                 let ib = index_bits(bucket.dim());
-                let raw = (bucket.nnz() * (raw_value_bits + ib)).div_ceil(8);
+                let raw = WireCost::new(raw_value_bits).raw_bucket(bucket.nnz(), bucket.dim());
                 if bucket.nnz() > 0 && QuantPayload::bytes_for(bucket.nnz(), bits, ib) < raw {
                     ValueCodec { bits, levels: qs.levels }.encode_bucket(
                         bucket,

@@ -27,6 +27,8 @@
 //! table round-trips through `TrainConfig` JSON, so run manifests and
 //! checkpoints echo the full heterogeneous setup.
 
+#![forbid(unsafe_code)]
+
 use crate::comm::codec::{IndexCodec, LevelKind};
 use crate::sparsify::{SparsifierKind, SparsifierParams};
 use crate::util::json::{obj, Json};

@@ -2,6 +2,8 @@
 //! Unbiased in expectation (after 1/p scaling variants; we transmit raw
 //! accumulated values like TOP-k so comparisons stay apples-to-apples).
 
+#![forbid(unsafe_code)]
+
 use crate::grad::ErrorFeedback;
 use crate::sparse::SparseVec;
 use crate::sparsify::{RoundCtx, Sparsifier, SparsifierState};

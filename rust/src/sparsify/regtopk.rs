@@ -170,7 +170,11 @@ impl Sparsifier for RegTopK {
                         &mut self.score,
                         |lo, score| {
                             let hi = lo + score.len();
-                            // SAFETY: shard ranges are disjoint.
+                            // SAFETY: the engine invokes `fill` once
+                            // per shard with the disjoint `[lo, hi)`
+                            // ranges of one pool job, and `self.ef.acc`
+                            // outlives the enclosing
+                            // `fused_select_into` call.
                             let acc = unsafe { acc_sh.range(lo, hi) };
                             Self::fused_accumulate_score(
                                 &eps[lo..hi],

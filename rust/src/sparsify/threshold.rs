@@ -1,6 +1,8 @@
 //! Hard-threshold baseline: transmit every accumulated entry with
 //! |a| >= tau (variable k per round; error feedback on the rest).
 
+#![forbid(unsafe_code)]
+
 use crate::grad::ErrorFeedback;
 use crate::sparse::SparseVec;
 use crate::sparsify::{RoundCtx, Sparsifier, SparsifierState};

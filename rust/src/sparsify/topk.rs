@@ -1,6 +1,8 @@
 //! Classical TOP-k with error accumulation (paper §1.1) — the baseline
 //! the contribution is measured against.
 
+#![forbid(unsafe_code)]
+
 use crate::grad::ErrorFeedback;
 use crate::sparse::{select_topk, SelectEngine, SparseVec};
 use crate::sparsify::{RoundCtx, Sparsifier, SparsifierState};

@@ -15,6 +15,8 @@
 //! Env knobs: `BENCH_BUDGET_MS` overrides the per-target time budget
 //! (the `scripts/verify.sh` smoke run uses a small one).
 
+#![forbid(unsafe_code)]
+
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::time::{Duration, Instant};

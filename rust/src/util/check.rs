@@ -5,6 +5,8 @@
 //! case replays.  Used by the invariant suites in `sparse`, `sparsify`,
 //! `grad` and `comm` (DESIGN.md §6).
 
+#![forbid(unsafe_code)]
+
 use crate::util::rng::Rng;
 
 /// Number of cases per property (kept moderate; the suites cover many

@@ -3,6 +3,8 @@
 //! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
 //! positional arguments; generates `--help` text from declarations.
 
+#![forbid(unsafe_code)]
+
 use std::collections::BTreeMap;
 
 /// One declared flag.

@@ -5,6 +5,8 @@
 //! pairs outside the BMP (not needed by any producer in this repo —
 //! still parsed, lone surrogates are replaced).
 
+#![forbid(unsafe_code)]
+
 use std::collections::BTreeMap;
 use std::fmt;
 

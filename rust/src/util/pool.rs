@@ -20,8 +20,30 @@
 //! pool with `t` worker threads uses `t + 1` executors.  Nested `run`
 //! calls (a pooled task itself calling `run`) execute inline serially
 //! instead of deadlocking on the job slot.
+//!
+//! # Debug-build borrow auditing
+//!
+//! `SharedSlice` is the crate's one aliasing loophole: it hands out
+//! `&mut [T]` from `&self`, and soundness rests on call-site shard
+//! math keeping the ranges disjoint.  Under `cfg(debug_assertions)`
+//! (or the `pool-audit` feature) every [`SharedSlice::range`] call is
+//! checked by a dynamic borrow [`mod@audit`]or before the raw slice is
+//! materialized: each slice registers its outstanding `(lo, hi)`
+//! borrows per pool job, overlapping borrows from different tasks
+//! panic with an `overlapping` diagnostic, and reusing a slice after
+//! its job completed (or in a different job) panics with
+//! `use-after-join`.  Borrows are released when the *job* ends, not
+//! when the task ends, so an overlap between two tasks is detected on
+//! every interleaving — the report is deterministic, not a lucky
+//! race.  Release builds compile the auditor out entirely; the only
+//! unconditional cost is one relaxed counter increment per job.
+//!
+//! Prefer the safe [`ThreadPool::for_shards`] / [`ThreadPool::map_mut`]
+//! wrappers over raw `SharedSlice::range`: they encapsulate the
+//! disjointness argument once, so call sites carry no `unsafe`.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Deterministic contiguous shard -> range mapping: shard `s` of
@@ -33,17 +55,187 @@ pub fn shard_range(len: usize, shards: usize, s: usize) -> (usize, usize) {
     (s * len / shards, (s + 1) * len / shards)
 }
 
+/// Monotone pool-job identity.  Unconditional (one relaxed increment
+/// per job) so the borrow auditor can name jobs in its diagnostics
+/// without changing the pool's shape between build profiles.
+static NEXT_JOB: AtomicU64 = AtomicU64::new(1);
+
+/// Dynamic borrow auditor for [`SharedSlice`] — compiled only into
+/// debug builds (or with the `pool-audit` feature).  See the module
+/// docs for the discipline it enforces.
+#[cfg(any(debug_assertions, feature = "pool-audit"))]
+mod audit {
+    use std::cell::Cell;
+    use std::collections::BTreeMap;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::{Mutex, MutexGuard};
+
+    /// One outstanding `range()` borrow of a slice, attributed to the
+    /// task index that took it.
+    struct Borrow {
+        lo: usize,
+        hi: usize,
+        task: usize,
+    }
+
+    /// Audit state for one `SharedSlice` instance (keyed by its epoch).
+    #[derive(Default)]
+    struct SliceState {
+        /// the first pool job this slice was ranged in; `range()` from
+        /// any other job — or outside any job once bound — panics
+        job: Option<u64>,
+        borrows: Vec<Borrow>,
+    }
+
+    static NEXT_EPOCH: AtomicU64 = AtomicU64::new(1);
+    // BTreeMap, not HashMap: the analyzer's wall-clock rule bans
+    // randomly-seeded hashers crate-wide, auditor included.
+    static REGISTRY: Mutex<BTreeMap<u64, SliceState>> = Mutex::new(BTreeMap::new());
+
+    /// Entry cap: `end_job` prunes job-less, borrow-less entries older
+    /// than this window so long runs cannot grow the registry without
+    /// bound.  Use-after-join detection is exact inside the window and
+    /// best-effort (entry pruned -> slice looks fresh) beyond it.
+    const MAX_ENTRIES: usize = 65_536;
+    const EPOCH_WINDOW: u64 = 32_768;
+
+    thread_local! {
+        /// `(job, task)` while this thread executes a pooled task.
+        static CUR: Cell<Option<(u64, usize)>> = const { Cell::new(None) };
+    }
+
+    fn registry() -> MutexGuard<'static, BTreeMap<u64, SliceState>> {
+        // poison-tolerant: the auditor's own panics unwind while the
+        // guard is live, and the map is never left mid-mutation
+        REGISTRY.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    pub fn new_epoch() -> u64 {
+        NEXT_EPOCH.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Check one `range(lo, hi)` call *before* the raw slice is
+    /// materialized (a panic here prevents the aliasing UB instead of
+    /// reporting it after the fact, which keeps the Miri lane clean).
+    pub fn on_range(epoch: u64, lo: usize, hi: usize, len: usize) {
+        assert!(
+            lo <= hi && hi <= len,
+            "SharedSlice::range {lo}..{hi} out of bounds for len {len}"
+        );
+        if lo == hi {
+            // zero-length views alias nothing; touching shard
+            // boundaries ([a, m) / [m, b)) are likewise disjoint
+            return;
+        }
+        let cur = CUR.with(Cell::get);
+        let mut reg = registry();
+        let entry = reg.entry(epoch).or_default();
+        match (entry.job, cur) {
+            (Some(bound), Some((job, task))) => {
+                assert!(
+                    bound == job,
+                    "SharedSlice use-after-join: slice bound to pool job {bound} \
+                     was ranged again in job {job}; create a fresh SharedSlice \
+                     per pool job"
+                );
+                check_and_register(entry, lo, hi, task);
+            }
+            (Some(bound), None) => {
+                panic!(
+                    "SharedSlice use-after-join: slice bound to pool job {bound} \
+                     was ranged after that job completed; the backing slice may \
+                     no longer be exclusively borrowed"
+                );
+            }
+            (None, Some((job, task))) => {
+                entry.job = Some(job);
+                check_and_register(entry, lo, hi, task);
+            }
+            // Serial use outside any pool job: the caller still holds
+            // the exclusive `&mut` it built the slice from, so plain
+            // sequential re-borrowing is sound and goes unregistered
+            // (there is no job end to release at).
+            (None, None) => {}
+        }
+    }
+
+    fn check_and_register(entry: &mut SliceState, lo: usize, hi: usize, task: usize) {
+        for b in &entry.borrows {
+            // same-task borrows are sequential on one thread and are
+            // allowed to overlap (re-deriving a view is not a race)
+            assert!(
+                b.task == task || lo >= b.hi || hi <= b.lo,
+                "SharedSlice overlapping shard borrows: task {task} took \
+                 {lo}..{hi} while task {} holds {}..{}; shard ranges handed \
+                 to a pool job must be disjoint",
+                b.task,
+                b.lo,
+                b.hi
+            );
+        }
+        entry.borrows.push(Borrow { lo, hi, task });
+    }
+
+    /// Job teardown: release the job's borrows (its tasks have all
+    /// completed) but keep the job binding, so a slice from this job
+    /// ranged later still reports use-after-join.
+    fn end_job(job: u64) {
+        let mut reg = registry();
+        for st in reg.values_mut() {
+            if st.job == Some(job) {
+                st.borrows.clear();
+            }
+        }
+        if reg.len() > MAX_ENTRIES {
+            let cutoff = NEXT_EPOCH.load(Ordering::Relaxed).saturating_sub(EPOCH_WINDOW);
+            reg.retain(|&epoch, st| !st.borrows.is_empty() || epoch >= cutoff);
+        }
+    }
+
+    /// RAII marker: this thread is executing task `task` of job `job`.
+    /// Saves/restores the previous marker so nested inline jobs work.
+    pub struct TaskScope {
+        prev: Option<(u64, usize)>,
+    }
+
+    impl TaskScope {
+        pub fn enter(job: u64, task: usize) -> Self {
+            TaskScope { prev: CUR.with(|c| c.replace(Some((job, task)))) }
+        }
+    }
+
+    impl Drop for TaskScope {
+        fn drop(&mut self) {
+            CUR.with(|c| c.set(self.prev));
+        }
+    }
+
+    /// RAII job teardown — runs on unwind too, so a panicked job still
+    /// releases its borrows.
+    pub struct JobScope(pub u64);
+
+    impl Drop for JobScope {
+        fn drop(&mut self) {
+            end_job(self.0);
+        }
+    }
+}
+
 /// Pointer-with-length wrapper that lets pooled tasks write **disjoint**
 /// ranges of one slice in parallel.  The type is `Copy` so a `Fn`
 /// closure can hand it to every shard.
 ///
-/// Safety contract (bounds are checked in debug builds): concurrent
-/// [`Self::range`] calls must use non-overlapping ranges, and the
-/// backing slice must outlive the pool job — which
-/// [`ThreadPool::run`] guarantees by blocking until every task is done.
+/// Safety contract: concurrent [`Self::range`] calls must use
+/// non-overlapping ranges, and the backing slice must outlive the pool
+/// job — which [`ThreadPool::run`] guarantees by blocking until every
+/// task is done.  Debug builds *enforce* the contract dynamically: see
+/// the module docs on borrow auditing.
 pub struct SharedSlice<T> {
     ptr: *mut T,
     len: usize,
+    /// audit identity of this slice instance (debug builds only)
+    #[cfg(any(debug_assertions, feature = "pool-audit"))]
+    epoch: u64,
 }
 
 impl<T> Clone for SharedSlice<T> {
@@ -53,12 +245,25 @@ impl<T> Clone for SharedSlice<T> {
 }
 impl<T> Copy for SharedSlice<T> {}
 
+// SAFETY: a SharedSlice is just `(ptr, len)` into a `&mut [T]` owned
+// by the job issuer; moving it to another thread moves no T and the
+// range() contract (disjoint ranges, slice outlives the job) is what
+// permits the target thread to touch T — hence the `T: Send` bound.
 unsafe impl<T: Send> Send for SharedSlice<T> {}
+// SAFETY: `&SharedSlice` only exposes `range()`, whose contract makes
+// concurrent use from many threads equivalent to `split_at_mut`
+// hand-outs of one `&mut [T]`; `T: Send` is exactly the bound scoped
+// thread spawns require for that.
 unsafe impl<T: Send> Sync for SharedSlice<T> {}
 
 impl<T> SharedSlice<T> {
     pub fn new(slice: &mut [T]) -> Self {
-        SharedSlice { ptr: slice.as_mut_ptr(), len: slice.len() }
+        SharedSlice {
+            ptr: slice.as_mut_ptr(),
+            len: slice.len(),
+            #[cfg(any(debug_assertions, feature = "pool-audit"))]
+            epoch: audit::new_epoch(),
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -73,24 +278,59 @@ impl<T> SharedSlice<T> {
     ///
     /// # Safety
     /// Concurrent callers must use disjoint ranges; the backing slice
-    /// must be live for the duration of the borrow.
+    /// must be live for the duration of the borrow.  In debug builds
+    /// the borrow auditor panics on violations before the view is
+    /// created.
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn range(&self, lo: usize, hi: usize) -> &mut [T] {
+        #[cfg(any(debug_assertions, feature = "pool-audit"))]
+        audit::on_range(self.epoch, lo, hi, self.len);
         debug_assert!(lo <= hi && hi <= self.len, "range {lo}..{hi} of {}", self.len);
-        std::slice::from_raw_parts_mut(self.ptr.add(lo), hi - lo)
+        // SAFETY: `[lo, hi)` is in bounds (caller contract, asserted
+        // above in debug builds), `ptr` points at the live backing
+        // slice for the duration of the job, and disjointness across
+        // concurrent callers is the caller's contract (audited in
+        // debug builds) — so this view aliases no other live `&mut`.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.add(lo), hi - lo) }
     }
 }
 
-/// Type-erased borrowed task: a `'static`-laundered pointer to the
-/// caller's closure.  Sound because `run` blocks until every claimed
-/// index completes, so the closure strictly outlives all dereferences
-/// (a claim holds the job's `remaining` count up, and the job owner
-/// cannot return while `remaining > 0`).
-struct RawTask(*const (dyn Fn(usize) + Sync));
+/// Type-erased borrowed task: a raw pointer to the caller's closure
+/// plus a monomorphized trampoline that knows its concrete type.  No
+/// lifetime is laundered — the pointer is only dereferenced while the
+/// issuing `run` call is blocked (a claim holds the job's `remaining`
+/// count up, and the job owner cannot return while `remaining > 0`),
+/// so the closure strictly outlives every call through `call`.
+#[derive(Clone, Copy)]
+struct RawTask {
+    data: *const (),
+    // SAFETY: contract of the fn pointer — see [`call_closure`]:
+    // `data` must point at a live `F` when called.
+    call: unsafe fn(*const (), usize),
+}
+
+// SAFETY: RawTask is a plain pointer pair; the pointee closure is
+// `Sync` (enforced where the pointer is created, in `run`), so calling
+// it from worker threads while the issuer keeps it alive is sound.
 unsafe impl Send for RawTask {}
+
+/// Trampoline stored in [`RawTask::call`].
+///
+/// # Safety
+/// `data` must point to a live `F` — guaranteed by `run` blocking
+/// until every claimed index completes.
+unsafe fn call_closure<F: Fn(usize) + Sync>(data: *const (), i: usize) {
+    // SAFETY: `data` was created from `&F` in `run` and the issuer is
+    // still blocked in `run`, so the reference is valid; `F: Sync`
+    // permits calling it from this thread.
+    let f = unsafe { &*data.cast::<F>() };
+    f(i);
+}
 
 struct Job {
     task: RawTask,
+    /// pool-wide job identity (audit diagnostics name jobs by this)
+    id: u64,
     n: usize,
     next: usize,
     remaining: usize,
@@ -170,26 +410,29 @@ impl ThreadPool {
         // inline paths: trivial job, no workers, or nested call from a
         // pooled task (running inline keeps progress + avoids deadlock)
         if tasks == 1 || self.handles.is_empty() || IN_POOL_TASK.with(|c| c.get()) {
+            let _job_id = NEXT_JOB.fetch_add(1, Ordering::Relaxed);
+            #[cfg(any(debug_assertions, feature = "pool-audit"))]
+            let _audit_job = audit::JobScope(_job_id);
             for i in 0..tasks {
+                #[cfg(any(debug_assertions, feature = "pool-audit"))]
+                let _task = audit::TaskScope::enter(_job_id, i);
                 f(i);
             }
             return;
         }
         let _serial = self.run_lock.lock().unwrap_or_else(|p| p.into_inner());
-        let obj: &(dyn Fn(usize) + Sync) = &f;
-        // SAFETY: lifetime laundering only — this function does not
-        // return until `remaining == 0`, so `f` outlives every use.
-        let obj: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(obj) };
+        let job_id = NEXT_JOB.fetch_add(1, Ordering::Relaxed);
+        #[cfg(any(debug_assertions, feature = "pool-audit"))]
+        let _audit_job = audit::JobScope(job_id);
+        let task = RawTask {
+            data: std::ptr::from_ref(&f).cast::<()>(),
+            call: call_closure::<F>,
+        };
         {
             let mut st = self.shared.lock();
             debug_assert!(st.job.is_none(), "run_lock must serialize jobs");
-            st.job = Some(Job {
-                task: RawTask(obj as *const (dyn Fn(usize) + Sync)),
-                n: tasks,
-                next: 0,
-                remaining: tasks,
-                panic: None,
-            });
+            st.job =
+                Some(Job { task, id: job_id, n: tasks, next: 0, remaining: tasks, panic: None });
             self.shared.work_cv.notify_all();
         }
         // caller participates in execution
@@ -228,8 +471,11 @@ impl ThreadPool {
             let out_sh = SharedSlice::new(&mut out);
             self.run(n, |i| {
                 // SAFETY: each index is claimed exactly once, so the
-                // item and slot borrows are disjoint across tasks.
+                // `[i, i+1)` item views are disjoint across tasks, and
+                // `items` outlives this `run` call.
                 let item = unsafe { &mut items_sh.range(i, i + 1)[0] };
+                // SAFETY: same disjointness argument for the output
+                // slot of index `i`; `out` outlives this `run` call.
                 let slot = unsafe { &mut out_sh.range(i, i + 1)[0] };
                 *slot = Some(f(i, item));
             });
@@ -237,6 +483,31 @@ impl ThreadPool {
         out.into_iter()
             .map(|r| r.expect("pool job completed every index"))
             .collect()
+    }
+
+    /// Sharded parallel mutation of one slice with **no caller-side
+    /// `unsafe`**: runs `f(s, lo, shard)` for every shard `s`, where
+    /// `shard` is the exclusive view of `data[lo..hi)` given by
+    /// [`shard_range`].  This wrapper owns the disjointness argument
+    /// once, so kernels that only need "split this buffer across the
+    /// pool" never touch [`SharedSlice`] directly.
+    pub fn for_shards<T, F>(&self, data: &mut [T], shards: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, usize, &mut [T]) + Sync,
+    {
+        if shards == 0 {
+            return;
+        }
+        let sh = SharedSlice::new(data);
+        self.run(shards, |s| {
+            let (lo, hi) = shard_range(sh.len(), shards, s);
+            // SAFETY: shard_range partitions 0..len into disjoint
+            // ranges, one per task index, and `run` blocks until every
+            // task completes, so `data` outlives every view.
+            let part = unsafe { sh.range(lo, hi) };
+            f(s, lo, part);
+        });
     }
 }
 
@@ -260,22 +531,29 @@ impl Drop for ThreadPool {
 /// the job the index was claimed from.
 fn drain_current_job(shared: &Shared) {
     loop {
-        let (i, task_ptr) = {
+        let (i, task, _job_id) = {
             let mut st = shared.lock();
             match st.job.as_mut() {
                 Some(job) if job.next < job.n => {
                     let i = job.next;
                     job.next += 1;
-                    (i, job.task.0)
+                    (i, job.task, job.id)
                 }
                 _ => return,
             }
         };
-        // SAFETY: our claim keeps `remaining > 0`, so the job owner is
-        // still blocked in `run` and the closure is alive.
-        let f: &(dyn Fn(usize) + Sync) = unsafe { &*task_ptr };
         IN_POOL_TASK.with(|c| c.set(true));
-        let result = catch_unwind(AssertUnwindSafe(|| f(i)));
+        #[cfg(any(debug_assertions, feature = "pool-audit"))]
+        let task_scope = audit::TaskScope::enter(_job_id, i);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            // SAFETY: our claim keeps `remaining > 0`, so the job owner
+            // is still blocked in `run` and the closure behind
+            // `task.data` is alive; `call` is the trampoline
+            // monomorphized for its concrete type.
+            unsafe { (task.call)(task.data, i) }
+        }));
+        #[cfg(any(debug_assertions, feature = "pool-audit"))]
+        drop(task_scope);
         IN_POOL_TASK.with(|c| c.set(false));
         let mut st = shared.lock();
         let job = st.job.as_mut().expect("job lives until its owner takes it");
@@ -331,7 +609,7 @@ mod tests {
 
     #[test]
     fn shard_ranges_partition_exactly() {
-        for &(len, shards) in &[(10usize, 3usize), (7, 7), (5, 8), (1_000_003, 16), (0, 4), (1, 1)] {
+        for &(len, shards) in &[(10usize, 3), (7, 7), (5, 8), (1_000_003, 16), (0, 4), (1, 1)] {
             let mut covered = 0usize;
             let mut prev_hi = 0usize;
             for s in 0..shards {
@@ -429,11 +707,16 @@ mod tests {
     #[test]
     fn shared_slice_disjoint_parallel_writes() {
         let pool = ThreadPool::new(3);
-        let mut v = vec![0u64; 100_000];
+        // Miri executes this test too; a smaller buffer keeps the
+        // interpreted run inside the lane's time budget.
+        let n = if cfg!(miri) { 4_096 } else { 100_000 };
+        let mut v = vec![0u64; n];
         {
             let sh = SharedSlice::new(&mut v);
             pool.run(8, |s| {
                 let (lo, hi) = shard_range(sh.len(), 8, s);
+                // SAFETY: shard_range yields disjoint ranges per task
+                // index and `v` outlives the `run` call.
                 let part = unsafe { sh.range(lo, hi) };
                 for (off, x) in part.iter_mut().enumerate() {
                     *x = (lo + off) as u64;
@@ -442,6 +725,20 @@ mod tests {
         }
         for (i, &x) in v.iter().enumerate() {
             assert_eq!(x, i as u64);
+        }
+    }
+
+    #[test]
+    fn for_shards_covers_exactly_without_unsafe() {
+        let pool = ThreadPool::new(3);
+        let mut v = vec![0u32; 1_001];
+        pool.for_shards(&mut v, 7, |_s, lo, part| {
+            for (off, x) in part.iter_mut().enumerate() {
+                *x = (lo + off) as u32 + 1;
+            }
+        });
+        for (i, &x) in v.iter().enumerate() {
+            assert_eq!(x, i as u32 + 1);
         }
     }
 }

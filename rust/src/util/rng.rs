@@ -7,6 +7,8 @@
 //! DESIGN.md).  Gaussian variates use Box–Muller on 53-bit uniforms —
 //! exactness is irrelevant, determinism is what matters.
 
+#![forbid(unsafe_code)]
+
 /// SplitMix64: used to expand a `u64` seed into Xoshiro state (the
 /// construction recommended by the Xoshiro authors).
 #[derive(Clone, Copy, Debug)]

@@ -1,9 +1,26 @@
 //! DESIGN.md invariant 6: same config => bit-identical results, across
-//! both drivers and after state reuse.
+//! both drivers, after state reuse, and for EVERY sparsifier family —
+//! the analyzer's `kind-matrix` rule fails the build if a family is
+//! added without appearing here.
 
 use regtopk::data::linear::{generate, LinearParams};
 use regtopk::experiments::{fig1, fig2};
 use regtopk::sparsify::SparsifierKind;
+
+/// Every sparsifier family on a dim-16 testbed (k = dim/4).
+fn all_kinds(dim: usize) -> Vec<SparsifierKind> {
+    let k = (dim / 4).max(1);
+    vec![
+        SparsifierKind::Dense,
+        SparsifierKind::TopK { k },
+        SparsifierKind::RegTopK { k, mu: 0.5, q: 1.0 },
+        SparsifierKind::RandK { k, seed: 5 },
+        SparsifierKind::Threshold { tau: 0.5 },
+        SparsifierKind::GlobalTopK { k },
+        SparsifierKind::Dgc { k, momentum: 0.9, clip: 0.0 },
+        SparsifierKind::AdaK { ratio: 1.0, k_min: 1, k_max: 2 * k },
+    ]
+}
 
 #[test]
 fn fig2_runs_are_bit_identical() {
@@ -24,10 +41,12 @@ fn fig2_runs_are_bit_identical() {
 fn threaded_and_deterministic_drivers_agree_bitwise() {
     let params = LinearParams { workers: 4, rows_per_worker: 80, dim: 16, ..LinearParams::fig2() };
     let problem = generate(params, 4);
-    for kind in [
-        SparsifierKind::TopK { k: 8 },
-        SparsifierKind::RegTopK { k: 8, mu: 0.5, q: 1.0 },
-    ] {
+    for kind in all_kinds(16) {
+        // the genie side-channel (global top-k oracle) only exists on
+        // the deterministic driver; run_threaded asserts it out
+        if matches!(kind, SparsifierKind::GlobalTopK { .. }) {
+            continue;
+        }
         let mut det = fig2::trainer_for(&problem, kind.clone(), 0.02);
         for _ in 0..50 {
             det.round();
@@ -35,6 +54,26 @@ fn threaded_and_deterministic_drivers_agree_bitwise() {
         let mut thr = fig2::trainer_for(&problem, kind.clone(), 0.02);
         thr.run_threaded(50);
         assert_eq!(det.server.w, thr.server.w, "{kind:?}");
+    }
+}
+
+#[test]
+fn deterministic_reruns_bit_identical_for_all_families() {
+    // GlobalTopK included: reruns of the deterministic driver must be
+    // bit-identical for every family, genie-dependent or not
+    let params = LinearParams { workers: 4, rows_per_worker: 80, dim: 16, ..LinearParams::fig2() };
+    let problem = generate(params, 11);
+    for kind in all_kinds(16) {
+        let mut a = fig2::trainer_for(&problem, kind.clone(), 0.02);
+        let mut b = fig2::trainer_for(&problem, kind.clone(), 0.02);
+        for _ in 0..30 {
+            a.round();
+            b.round();
+        }
+        assert_eq!(a.server.w, b.server.w, "{kind:?}");
+        for (wa, wb) in a.server.w.iter().zip(&b.server.w) {
+            assert_eq!(wa.to_bits(), wb.to_bits(), "{kind:?}");
+        }
     }
 }
 

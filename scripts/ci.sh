@@ -3,12 +3,13 @@
 # (.github/workflows/ci.yml calls this script, so "works on my machine
 # but not in CI" cannot happen by construction).
 #
-#   scripts/ci.sh            # everything: lint + build + test + verify smoke
+#   scripts/ci.sh            # everything: lint + analyze + build + test + verify smoke
 #   scripts/ci.sh lint       # cargo fmt --check + cargo clippy -D warnings
+#   scripts/ci.sh analyze    # repo-invariant analyzer (repro lint), zero findings
 #   scripts/ci.sh verify     # build + test + verify.sh smoke (refreshes BENCH_*.json)
 #
-# Both stages are HARD gates: rustfmt drift, clippy warnings, test
-# failures or a crashed smoke run all fail the pipeline.
+# All stages are HARD gates: rustfmt drift, clippy warnings, analyzer
+# findings, test failures or a crashed smoke run all fail the pipeline.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -22,8 +23,26 @@ run_lint() {
     }
     echo "== ci/lint: cargo clippy --all-targets -- -D warnings =="
     # --all-targets lints tests and benches too — new test code must
-    # clear the same bar as the library
-    cargo clippy --all-targets -- -D warnings
+    # clear the same bar as the library.  The unsafe-hygiene lints are
+    # promoted to hard errors on top of the default set: every unsafe
+    # block needs a SAFETY comment (also enforced semantically by
+    # `repro lint`), and pointer casts must be explicit about what
+    # they change.
+    cargo clippy --all-targets -- -D warnings \
+        -D clippy::undocumented_unsafe_blocks \
+        -D clippy::ptr_as_ptr \
+        -D clippy::ptr_cast_constness \
+        -D clippy::transmute_ptr_to_ptr
+}
+
+run_analyze() {
+    # The repo-invariant analyzer (rust/src/analysis): SAFETY comments,
+    # unsafe-module allowlist, no stray thread::spawn, one byte
+    # accountant, no wall-clock in deterministic paths, full
+    # SparsifierKind test matrices.  Exit 1 on any finding.
+    echo "== ci/analyze: repro lint =="
+    cargo build --release --bin repro
+    target/release/repro lint
 }
 
 run_verify() {
@@ -35,11 +54,12 @@ run_verify() {
 }
 
 case "$stage" in
-    lint)   run_lint ;;
-    verify) run_verify ;;
-    all)    run_lint; run_verify ;;
+    lint)    run_lint ;;
+    analyze) run_analyze ;;
+    verify)  run_verify ;;
+    all)     run_lint; run_analyze; run_verify ;;
     *)
-        echo "usage: scripts/ci.sh [lint|verify|all]" >&2
+        echo "usage: scripts/ci.sh [lint|analyze|verify|all]" >&2
         exit 2
         ;;
 esac
