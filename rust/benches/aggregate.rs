@@ -18,7 +18,8 @@
 use std::path::Path;
 
 use regtopk::coordinator::merge_updates;
-use regtopk::sparse::{SparseUpdate, SparseVec};
+use regtopk::comm::SparseUpdate;
+use regtopk::sparse::SparseVec;
 use regtopk::util::bench::{black_box, Bench};
 use regtopk::util::rng::Rng;
 

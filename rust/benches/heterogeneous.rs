@@ -99,7 +99,7 @@ fn main() {
                     if g.len < MIN_SHARDED_DIM { c == 1 } else { c == shards }
                 }));
             }
-            let mut out = regtopk::sparse::SparseUpdate::empty();
+            let mut out = regtopk::comm::SparseUpdate::empty();
             let mut t = 0usize;
             b.run_throughput(&format!("hetero/{name}/shards={shards}/J={j}"), j, || {
                 let ctx = RoundCtx { t, gagg_prev: &gagg, omega: 0.125, genie_acc: None };
@@ -113,7 +113,7 @@ fn main() {
                 byte_points.push((
                     format!("{name}/J={j}"),
                     wc.update(&out),
-                    out.flatten().wire_bytes(),
+                    wc.flat(&out.flatten()),
                 ));
             }
         }

@@ -15,7 +15,7 @@ use std::collections::BTreeMap;
 use std::path::Path;
 
 use regtopk::grad::{GradLayout, GradView};
-use regtopk::sparse::SparseUpdate;
+use regtopk::comm::SparseUpdate;
 use regtopk::sparsify::{
     build, BudgetPolicy, LayerwiseSparsifier, RoundCtx, Sparsifier, SparsifierKind,
 };
@@ -95,7 +95,7 @@ fn main() {
         byte_points.push((
             format!("G={groups}/J={j}/S={s}"),
             wc.update(&out),
-            out.flatten().wire_bytes(),
+            wc.flat(&out.flatten()),
         ));
     }
 

@@ -14,7 +14,7 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use regtopk::comm::codec::{LevelKind, QuantPayload, ValueCodec};
+use regtopk::comm::codec::{LevelKind, QuantPayload, ValueCodec, WireCost};
 use regtopk::sparse::SparseVec;
 use regtopk::util::bench::{black_box, Bench};
 use regtopk::util::json::Json;
@@ -79,7 +79,7 @@ fn main() {
                 );
                 black_box(payload.scale());
             });
-            let raw = proto.wire_bytes();
+            let raw = WireCost::paper().flat(&proto);
             let index_bits = 20;
             byte_points.push((
                 format!("bits={bits}/k={k}/J={dim}"),

@@ -1,0 +1,824 @@
+//! Std-only item extractor: the analyzer's "semantic" layer.
+//!
+//! Built on [`super::lexer`], this module parses just enough Rust item
+//! structure to power the schema-drift, layering, and match-
+//! exhaustiveness gates: `enum` variant lists, `struct` field lists,
+//! `const` declarations (with their *values*, read from the lexer's
+//! text channel so byte-string magics like `b"RTKS"` survive),
+//! `match` sites with their arm heads, `crate::` / `regtopk::` module
+//! references, and top-level `pub` items.  It is NOT a Rust parser —
+//! it understands exactly the surface this repo uses, and every gate
+//! built on it fails *loud* (a finding) rather than silently skipping
+//! what it cannot parse.
+//!
+//! Each file is read and lexed ONCE into a [`SourceFile`]; the
+//! line-lexical rules and all three semantic gates share that pass.
+
+#![forbid(unsafe_code)]
+
+use super::lexer::{self, Line};
+
+/// One source file: path, lexed lines, and the line index where the
+/// embedded test region (`#[cfg(test)]` onward) begins.
+pub struct SourceFile {
+    /// repo-relative path, `/`-separated
+    pub path: String,
+    pub lines: Vec<Line>,
+    /// first line index (0-based) of the test region; `lines.len()`
+    /// if the file has no embedded tests
+    pub test_from: usize,
+}
+
+impl SourceFile {
+    pub fn parse(path: &str, src: &str) -> Self {
+        let lines = lexer::split(src);
+        let test_from = lines
+            .iter()
+            .position(|l| l.code.contains("#[cfg(test)]"))
+            .unwrap_or(lines.len());
+        SourceFile { path: path.to_string(), lines, test_from }
+    }
+
+    /// Is the (0-based) line inside the embedded test region?
+    pub fn is_test_line(&self, idx: usize) -> bool {
+        idx >= self.test_from
+    }
+
+    /// Is the whole file test/bench/example code (outside `rust/src`)?
+    pub fn is_test_path(&self) -> bool {
+        !self.path.starts_with("rust/src/")
+    }
+
+    /// Does line `idx` (0-based) carry the waiver tag for `rule`,
+    /// either on the same line or the line above?
+    pub fn has_waiver(&self, idx: usize, rule: &str) -> bool {
+        let tag = format!("repro-lint: allow({rule})");
+        if self.lines[idx].comment.contains(&tag) {
+            return true;
+        }
+        idx > 0 && self.lines[idx - 1].comment.contains(&tag)
+    }
+}
+
+/// An `enum` declaration: name + normalized variant declarations.
+pub struct EnumItem {
+    pub name: String,
+    /// 1-based declaration line
+    pub line: usize,
+    /// (normalized variant decl, 1-based line), in source order
+    pub variants: Vec<(String, usize)>,
+}
+
+/// A braced `struct` declaration: name + normalized field declarations.
+pub struct StructItem {
+    pub name: String,
+    pub line: usize,
+    /// (normalized `name: Type`, 1-based line), in source order
+    pub fields: Vec<(String, usize)>,
+}
+
+/// A `const` declaration with its literal value (from the text
+/// channel, so string/byte-string contents are preserved).
+pub struct ConstItem {
+    pub name: String,
+    pub ty: String,
+    pub value: String,
+    pub line: usize,
+}
+
+/// One arm of a `match`: the pattern head (guard stripped) + line.
+pub struct MatchArm {
+    pub head: String,
+    pub line: usize,
+}
+
+/// A `match` site with its parsed arms.
+pub struct MatchSite {
+    pub line: usize,
+    pub arms: Vec<MatchArm>,
+}
+
+/// A `crate::x` / `regtopk::x` module reference.
+pub struct UseEdge {
+    pub module: String,
+    pub line: usize,
+}
+
+/// A top-level `pub` item (dead-pub rule input).
+pub struct PubItem {
+    pub kind: String,
+    pub name: String,
+    pub line: usize,
+}
+
+/// Everything the semantic gates need from one file.
+pub struct FileItems {
+    pub enums: Vec<EnumItem>,
+    pub structs: Vec<StructItem>,
+    pub consts: Vec<ConstItem>,
+    pub matches: Vec<MatchSite>,
+    pub uses: Vec<UseEdge>,
+    pub pubs: Vec<PubItem>,
+}
+
+/// The code channel joined with `\n`, plus the text channel and a
+/// byte-offset → line-index map.  All item scanning happens here so
+/// that declarations spanning lines need no special casing.
+struct Joined {
+    code: Vec<u8>,
+    text: Vec<String>,
+    /// byte offset in `code` where each line starts
+    offsets: Vec<usize>,
+}
+
+impl Joined {
+    fn new(file: &SourceFile) -> Self {
+        let mut code = Vec::new();
+        let mut offsets = Vec::with_capacity(file.lines.len());
+        for l in &file.lines {
+            offsets.push(code.len());
+            code.extend_from_slice(l.code.as_bytes());
+            code.push(b'\n');
+        }
+        let text = file.lines.iter().map(|l| l.text.clone()).collect();
+        Joined { code, text, offsets }
+    }
+
+    /// 0-based line index containing byte offset `pos`.
+    fn line_of(&self, pos: usize) -> usize {
+        self.offsets.partition_point(|&o| o <= pos).saturating_sub(1)
+    }
+}
+
+/// All files of a tree, each read and lexed exactly once; every rule
+/// and gate shares this single pass (ISSUE-8 satellite c).
+pub struct Parsed {
+    pub files: Vec<(SourceFile, FileItems)>,
+}
+
+/// Lex and extract every `(path, source)` pair once, in input order.
+pub fn parse_all(sources: &[(String, String)]) -> Parsed {
+    let files = sources
+        .iter()
+        .map(|(p, s)| {
+            let f = SourceFile::parse(p, s);
+            let items = extract(&f);
+            (f, items)
+        })
+        .collect();
+    Parsed { files }
+}
+
+pub fn extract(file: &SourceFile) -> FileItems {
+    let j = Joined::new(file);
+    FileItems {
+        enums: scan_adts(&j, b"enum")
+            .into_iter()
+            .map(|(n, l, m)| EnumItem { name: n, line: l, variants: m })
+            .collect(),
+        structs: scan_adts(&j, b"struct")
+            .into_iter()
+            .map(|(n, l, m)| StructItem { name: n, line: l, fields: m })
+            .collect(),
+        consts: scan_consts(&j),
+        matches: scan_matches(&j),
+        uses: scan_uses(&j, file.is_test_path()),
+        pubs: scan_pubs(&j),
+    }
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Find every standalone occurrence of `word` in `code`.
+fn word_positions(code: &[u8], word: &[u8]) -> Vec<usize> {
+    let mut out = Vec::new();
+    if word.len() > code.len() {
+        return out;
+    }
+    for at in 0..=code.len() - word.len() {
+        if &code[at..at + word.len()] != word {
+            continue;
+        }
+        let before_ok = at == 0 || !is_ident(code[at - 1]);
+        let end = at + word.len();
+        let after_ok = end >= code.len() || !is_ident(code[end]);
+        if before_ok && after_ok {
+            out.push(at);
+        }
+    }
+    out
+}
+
+fn skip_ws(code: &[u8], mut i: usize) -> usize {
+    while i < code.len() && code[i].is_ascii_whitespace() {
+        i += 1;
+    }
+    i
+}
+
+fn read_ident(code: &[u8], mut i: usize) -> (String, usize) {
+    let start = i;
+    while i < code.len() && is_ident(code[i]) {
+        i += 1;
+    }
+    (String::from_utf8_lossy(&code[start..i]).into_owned(), i)
+}
+
+/// Advance past a balanced `{...}` / `(...)` / `[...]` starting at
+/// the opener at `i`; returns the index just past the closer.
+fn skip_balanced(code: &[u8], i: usize) -> usize {
+    let (open, close) = match code[i] {
+        b'{' => (b'{', b'}'),
+        b'(' => (b'(', b')'),
+        b'[' => (b'[', b']'),
+        _ => return i + 1,
+    };
+    let mut depth = 0usize;
+    let mut k = i;
+    while k < code.len() {
+        if code[k] == open {
+            depth += 1;
+        } else if code[k] == close {
+            depth -= 1;
+            if depth == 0 {
+                return k + 1;
+            }
+        }
+        k += 1;
+    }
+    code.len()
+}
+
+/// Collapse runs of whitespace to single spaces and trim.
+fn normalize(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut last_space = true;
+    for c in s.chars() {
+        if c.is_whitespace() {
+            if !last_space {
+                out.push(' ');
+            }
+            last_space = true;
+        } else {
+            out.push(c);
+            last_space = false;
+        }
+    }
+    while out.ends_with(' ') {
+        out.pop();
+    }
+    out
+}
+
+/// Strip leading `#[...]` attribute groups from a declaration chunk.
+fn strip_attrs(s: &str) -> String {
+    let b = s.as_bytes();
+    let mut i = 0usize;
+    loop {
+        i = skip_ws(b, i);
+        if i + 1 < b.len() && b[i] == b'#' && b[i + 1] == b'[' {
+            i = skip_balanced(b, i + 1);
+        } else {
+            break;
+        }
+    }
+    String::from_utf8_lossy(&b[i..]).into_owned()
+}
+
+/// Split a `{...}` body at top-level commas, tracking `(){}[]` and a
+/// best-effort `<>` depth (a `<` after an identifier opens a generic
+/// list; `->` does not close one).
+fn split_top_commas(body: &[u8]) -> Vec<(usize, usize)> {
+    let mut parts = Vec::new();
+    let (mut depth, mut angle) = (0isize, 0isize);
+    let mut start = 0usize;
+    for k in 0..body.len() {
+        match body[k] {
+            b'(' | b'[' | b'{' => depth += 1,
+            b')' | b']' | b'}' => depth -= 1,
+            b'<' if k > 0 && is_ident(body[k - 1]) => angle += 1,
+            b'>' if angle > 0 && (k == 0 || body[k - 1] != b'-') => angle -= 1,
+            b',' if depth == 0 && angle == 0 => {
+                parts.push((start, k));
+                start = k + 1;
+            }
+            _ => {}
+        }
+    }
+    if start < body.len() {
+        parts.push((start, body.len()));
+    }
+    parts
+}
+
+/// Scan `enum Name { ... }` / `struct Name { ... }` declarations,
+/// returning (name, decl line, members) with attribute-stripped,
+/// whitespace-normalized member declarations.  Tuple structs and unit
+/// structs yield an empty member list.
+fn scan_adts(j: &Joined, kw: &[u8]) -> Vec<(String, usize, Vec<(String, usize)>)> {
+    let mut out = Vec::new();
+    for at in word_positions(&j.code, kw) {
+        let mut i = skip_ws(&j.code, at + kw.len());
+        let (name, ni) = read_ident(&j.code, i);
+        if name.is_empty() {
+            continue;
+        }
+        i = skip_ws(&j.code, ni);
+        // skip a generic parameter list on the declaration
+        if i < j.code.len() && j.code[i] == b'<' {
+            let mut depth = 0isize;
+            while i < j.code.len() {
+                match j.code[i] {
+                    b'<' => depth += 1,
+                    b'>' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            i += 1;
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                i += 1;
+            }
+            i = skip_ws(&j.code, i);
+        }
+        if i >= j.code.len() || j.code[i] != b'{' {
+            // tuple struct / unit struct / `struct` in type position
+            out.push((name, j.line_of(at) + 1, Vec::new()));
+            continue;
+        }
+        let end = skip_balanced(&j.code, i);
+        let body = &j.code[i + 1..end - 1];
+        let mut members = Vec::new();
+        for (s, e) in split_top_commas(body) {
+            let chunk = String::from_utf8_lossy(&body[s..e]).into_owned();
+            let decl = normalize(&strip_attrs(&chunk));
+            if decl.is_empty() {
+                continue;
+            }
+            // line of the first non-attribute token in the chunk
+            let lead = chunk.len() - strip_attrs(&chunk).len();
+            members.push((decl, j.line_of(i + 1 + s + lead) + 1));
+        }
+        out.push((name, j.line_of(at) + 1, members));
+    }
+    out
+}
+
+fn scan_consts(j: &Joined) -> Vec<ConstItem> {
+    let mut out = Vec::new();
+    for at in word_positions(&j.code, b"const") {
+        let mut i = skip_ws(&j.code, at + 5);
+        let (name, ni) = read_ident(&j.code, i);
+        // `const fn`, `const {}` blocks, `*const T` have no NAME `:`
+        i = skip_ws(&j.code, ni);
+        if name.is_empty() || name == "fn" || i >= j.code.len() || j.code[i] != b':' {
+            continue;
+        }
+        // type runs to the assignment `=` at bracket depth 0 (the type
+        // may contain `;` as in `&[u8; 4]`, so track brackets)
+        let ty_start = i + 1;
+        let mut depth = 0isize;
+        let mut k = ty_start;
+        let mut eq = None;
+        while k < j.code.len() {
+            match j.code[k] {
+                b'(' | b'[' | b'{' => depth += 1,
+                b')' | b']' | b'}' => depth -= 1,
+                b'=' if depth == 0
+                    && j.code.get(k + 1) != Some(&b'=')
+                    && j.code.get(k + 1) != Some(&b'>') =>
+                {
+                    eq = Some(k);
+                    break;
+                }
+                b';' if depth == 0 => break, // associated const without value
+                _ => {}
+            }
+            k += 1;
+        }
+        let Some(eq) = eq else { continue };
+        let ty = normalize(&String::from_utf8_lossy(&j.code[ty_start..eq]));
+        // value: from just past `=` to `;` at depth 0, read from the
+        // TEXT channel so string literal contents survive
+        let mut depth = 0isize;
+        let mut k = eq + 1;
+        let mut semi = None;
+        while k < j.code.len() {
+            match j.code[k] {
+                b'(' | b'[' | b'{' => depth += 1,
+                b')' | b']' | b'}' => depth -= 1,
+                b';' if depth == 0 => {
+                    semi = Some(k);
+                    break;
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+        let Some(semi) = semi else { continue };
+        let value = normalize(&text_slice(j, eq + 1, semi));
+        out.push(ConstItem { name, ty, value, line: j.line_of(at) + 1 });
+    }
+    out
+}
+
+/// Reconstruct the TEXT-channel content corresponding to the code
+/// span `[from, to)`.  Columns in the two channels line up except
+/// inside raw-string openers/closers; const values in this repo never
+/// put a raw string before the value on the same line, and full lines
+/// are taken from the text channel verbatim.
+fn text_slice(j: &Joined, from: usize, to: usize) -> String {
+    let (l0, l1) = (j.line_of(from), j.line_of(to.saturating_sub(1).max(from)));
+    let mut out = String::new();
+    for li in l0..=l1.min(j.text.len() - 1) {
+        let line_start = j.offsets[li];
+        let t = &j.text[li];
+        let s = from.saturating_sub(line_start);
+        let line_code_len = j
+            .offsets
+            .get(li + 1)
+            .map(|n| n - 1 - line_start)
+            .unwrap_or_else(|| j.code.len().saturating_sub(line_start));
+        let e = (to - line_start).min(line_code_len);
+        // clamp to the text line (lengths differ only around raw
+        // strings, where the text channel is longer than the code)
+        if li == l0 || li == l1 {
+            let s = s.min(t.len());
+            let e = if li == l1 { e.min(t.len()) } else { t.len() };
+            if s < e {
+                out.push_str(&t[s..e]);
+            }
+        } else {
+            out.push_str(t);
+        }
+        if li < l1 {
+            out.push(' ');
+        }
+    }
+    out
+}
+
+fn scan_matches(j: &Joined) -> Vec<MatchSite> {
+    let mut out = Vec::new();
+    for at in word_positions(&j.code, b"match") {
+        // scrutinee: to the body `{` at paren/bracket depth 0 (Rust
+        // forbids bare struct literals in match scrutinees)
+        let mut depth = 0isize;
+        let mut k = at + 5;
+        let mut body_open = None;
+        while k < j.code.len() {
+            match j.code[k] {
+                b'(' | b'[' => depth += 1,
+                b')' | b']' => depth -= 1,
+                b'{' if depth == 0 => {
+                    body_open = Some(k);
+                    break;
+                }
+                b';' if depth == 0 => break, // `match` used as ident-ish? bail
+                _ => {}
+            }
+            k += 1;
+        }
+        let Some(open) = body_open else { continue };
+        let close = skip_balanced(&j.code, open);
+        let body = &j.code[open + 1..close.saturating_sub(1)];
+        let mut arms = Vec::new();
+        let mut i = 0usize;
+        while i < body.len() {
+            i = skip_ws(body, i);
+            if i >= body.len() {
+                break;
+            }
+            // pattern: to `=>` at depth 0 (struct patterns raise depth)
+            let pat_start = i;
+            let mut depth = 0isize;
+            let mut arrow = None;
+            while i < body.len() {
+                match body[i] {
+                    b'(' | b'[' | b'{' => depth += 1,
+                    b')' | b']' | b'}' => depth -= 1,
+                    b'=' if depth == 0 && body.get(i + 1) == Some(&b'>') => {
+                        arrow = Some(i);
+                        break;
+                    }
+                    _ => {}
+                }
+                i += 1;
+            }
+            let Some(arrow) = arrow else { break };
+            let head = normalize(&String::from_utf8_lossy(&body[pat_start..arrow]));
+            arms.push(MatchArm { head, line: j.line_of(open + 1 + pat_start) + 1 });
+            // arm body: a balanced block, or an expression to `,` at depth 0
+            i = skip_ws(body, arrow + 2);
+            if i < body.len() && body[i] == b'{' {
+                i = skip_balanced(body, i);
+                // optional trailing comma
+                let n = skip_ws(body, i);
+                if n < body.len() && body[n] == b',' {
+                    i = n + 1;
+                }
+            } else {
+                let mut depth = 0isize;
+                while i < body.len() {
+                    match body[i] {
+                        b'(' | b'[' | b'{' => depth += 1,
+                        b')' | b']' | b'}' => depth -= 1,
+                        b',' if depth == 0 => {
+                            i += 1;
+                            break;
+                        }
+                        _ => {}
+                    }
+                    i += 1;
+                }
+            }
+        }
+        out.push(MatchSite { line: j.line_of(at) + 1, arms });
+    }
+    out
+}
+
+/// Strip a trailing ` if <guard>` from an arm head (top-level only).
+pub fn strip_guard(head: &str) -> &str {
+    let b = head.as_bytes();
+    let mut depth = 0isize;
+    for at in word_positions(b, b"if") {
+        for &c in &b[..at] {
+            match c {
+                b'(' | b'[' | b'{' => depth += 1,
+                b')' | b']' | b'}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if depth == 0 {
+            return head[..at].trim_end();
+        }
+        depth = 0;
+    }
+    head
+}
+
+/// Is this (guard-stripped) arm head a wildcard: `_`, or a bare
+/// lowercase binding (`other`)?  Or-patterns count if ANY branch is.
+pub fn is_wildcard_head(head: &str) -> bool {
+    let head = strip_guard(head);
+    split_top_level(head, '|').iter().any(|p| {
+        let p = p.trim();
+        let p = p.strip_prefix("ref ").unwrap_or(p).trim();
+        let p = p.strip_prefix("mut ").unwrap_or(p).trim();
+        if p == "_" {
+            return true;
+        }
+        p.bytes().all(is_ident)
+            && p.bytes().next().is_some_and(|b| b.is_ascii_lowercase() || b == b'_')
+            && !matches!(p, "true" | "false")
+            && !p.is_empty()
+    })
+}
+
+/// Split at a separator char at `(){}[]` depth 0.
+fn split_top_level(s: &str, sep: char) -> Vec<String> {
+    let mut parts = Vec::new();
+    let mut depth = 0isize;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '(' | '[' | '{' => depth += 1,
+            ')' | ']' | '}' => depth -= 1,
+            _ => {}
+        }
+        if c == sep && depth == 0 {
+            parts.push(std::mem::take(&mut cur));
+        } else {
+            cur.push(c);
+        }
+    }
+    parts.push(cur);
+    parts
+}
+
+/// Every `crate::<module>` reference, including grouped imports
+/// `use crate::{a::X, b::Y}` (possibly multi-line).  The crate's
+/// external name `regtopk::<module>` counts only in test/bench/example
+/// paths (`by_extern_name`): inside `rust/src` a `regtopk::` path is
+/// the `sparsify::regtopk` submodule, not the crate root.
+fn scan_uses(j: &Joined, by_extern_name: bool) -> Vec<UseEdge> {
+    let mut out = Vec::new();
+    let roots: &[&[u8]] = if by_extern_name { &[b"crate", b"regtopk"] } else { &[b"crate"] };
+    for &root in roots {
+        for at in word_positions(&j.code, root) {
+            let mut i = at + root.len();
+            if j.code.get(i) != Some(&b':') || j.code.get(i + 1) != Some(&b':') {
+                continue;
+            }
+            i = skip_ws(&j.code, i + 2);
+            if i >= j.code.len() {
+                continue;
+            }
+            if j.code[i] == b'{' {
+                // grouped: collect the leading ident of each element
+                let end = skip_balanced(&j.code, i);
+                let body = &j.code[i + 1..end.saturating_sub(1)];
+                for (s, e) in split_top_commas(body) {
+                    let k = skip_ws(body, s);
+                    if k >= e {
+                        continue;
+                    }
+                    let (m, _) = read_ident(body, k);
+                    if !m.is_empty() && m != "self" {
+                        out.push(UseEdge { module: m, line: j.line_of(i + 1 + k) + 1 });
+                    }
+                }
+            } else {
+                let (m, _) = read_ident(&j.code, i);
+                if !m.is_empty() {
+                    out.push(UseEdge { module: m, line: j.line_of(at) + 1 });
+                }
+            }
+        }
+    }
+    out.sort_by_key(|e| e.line);
+    out
+}
+
+/// Top-level (brace depth 0) plain-`pub` items.
+fn scan_pubs(j: &Joined) -> Vec<PubItem> {
+    const KINDS: [&str; 8] = ["fn", "struct", "enum", "const", "static", "trait", "type", "mod"];
+    let mut out = Vec::new();
+    // brace depth at every byte
+    let mut depth = vec![0i32; j.code.len()];
+    let mut d = 0i32;
+    for (k, &c) in j.code.iter().enumerate() {
+        if c == b'{' {
+            d += 1;
+        } else if c == b'}' {
+            d -= 1;
+        }
+        depth[k] = if c == b'{' { d - 1 } else { d };
+    }
+    for at in word_positions(&j.code, b"pub") {
+        if depth[at] != 0 {
+            continue;
+        }
+        let mut i = skip_ws(&j.code, at + 3);
+        // skip `pub(crate)` etc. — restricted visibility is exempt
+        if i < j.code.len() && j.code[i] == b'(' {
+            continue;
+        }
+        // skip qualifiers: unsafe/const/async/extern "C"
+        loop {
+            let (w, ni) = read_ident(&j.code, i);
+            match w.as_str() {
+                "unsafe" | "async" => i = skip_ws(&j.code, ni),
+                "extern" => {
+                    i = skip_ws(&j.code, ni);
+                    if i < j.code.len() && j.code[i] == b'"' {
+                        i += 1;
+                        while i < j.code.len() && j.code[i] != b'"' {
+                            i += 1;
+                        }
+                        i = skip_ws(&j.code, i + 1);
+                    }
+                }
+                "const" => {
+                    // `pub const fn` is a fn; `pub const NAME` is a const
+                    let n = skip_ws(&j.code, ni);
+                    let (w2, _) = read_ident(&j.code, n);
+                    if w2 == "fn" {
+                        i = n;
+                    } else {
+                        break;
+                    }
+                }
+                _ => break,
+            }
+        }
+        let (kind, ki) = read_ident(&j.code, i);
+        if !KINDS.contains(&kind.as_str()) {
+            continue;
+        }
+        let (name, _) = read_ident(&j.code, skip_ws(&j.code, ki));
+        if name.is_empty() {
+            continue;
+        }
+        out.push(PubItem { kind, name, line: j.line_of(at) + 1 });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn items(src: &str) -> FileItems {
+        extract(&SourceFile::parse("rust/src/x/mod.rs", src))
+    }
+
+    #[test]
+    fn extracts_enum_variants_with_payloads() {
+        let it = items(
+            "pub enum Msg {\n    #[serde(rename = \"u\")]\n    Update { worker: usize, loss: f32 },\n    Broadcast { round: usize, gagg: Vec<f32> },\n    Ping,\n}\n",
+        );
+        assert_eq!(it.enums.len(), 1);
+        let e = &it.enums[0];
+        assert_eq!(e.name, "Msg");
+        let decls: Vec<&str> = e.variants.iter().map(|(d, _)| d.as_str()).collect();
+        assert_eq!(
+            decls,
+            [
+                "Update { worker: usize, loss: f32 }",
+                "Broadcast { round: usize, gagg: Vec<f32> }",
+                "Ping"
+            ]
+        );
+        // attribute stripped, line points at the variant itself
+        assert_eq!(e.variants[0].1, 3);
+    }
+
+    #[test]
+    fn extracts_struct_fields_and_consts() {
+        let it = items(
+            "pub struct QuantPayload {\n    pub bits: usize,\n    pub words: Vec<u32>,\n}\npub const EF_MAGIC: &[u8; 4] = b\"RTKS\";\nconst STATE_TAG_EF: u8 = 1;\n",
+        );
+        let s = &it.structs[0];
+        assert_eq!(s.name, "QuantPayload");
+        assert_eq!(s.fields.len(), 2);
+        assert_eq!(s.fields[1].0, "pub words: Vec<u32>");
+        assert_eq!(it.consts.len(), 2);
+        assert_eq!(it.consts[0].name, "EF_MAGIC");
+        assert_eq!(it.consts[0].ty, "&[u8; 4]");
+        assert_eq!(it.consts[0].value, "b\"RTKS\"");
+        assert_eq!(it.consts[1].value, "1");
+    }
+
+    #[test]
+    fn multiline_const_value_from_text_channel() {
+        let it = items("pub const KEYS: [&str; 3] = [\n    \"k\", // per-bucket k\n    \"mu\",\n    \"q\",\n];\n");
+        assert_eq!(it.consts[0].name, "KEYS");
+        assert_eq!(it.consts[0].value, "[ \"k\", \"mu\", \"q\", ]");
+    }
+
+    #[test]
+    fn match_arms_and_wildcards() {
+        let it = items(
+            "fn f(m: Msg) {\n    match m {\n        Msg::Update { worker, .. } => go(worker),\n        Msg::Broadcast { .. } => {\n            let _inner = match 3u8 { 0 => 1, t => t };\n        }\n        other => panic!(\"{other:?}\"),\n    }\n}\n",
+        );
+        assert_eq!(it.matches.len(), 2);
+        let outer = &it.matches[0];
+        assert_eq!(outer.arms.len(), 3);
+        assert!(outer.arms[0].head.starts_with("Msg::Update"));
+        assert!(!is_wildcard_head(&outer.arms[0].head));
+        assert!(is_wildcard_head(&outer.arms[2].head));
+        assert_eq!(outer.arms[2].line, 7);
+        // binding-with-pattern is NOT a wildcard
+        assert!(!is_wildcard_head("m @ Msg::Update { .. }") || false);
+        assert!(is_wildcard_head("t @ (6 | 7)") == false);
+        assert!(is_wildcard_head("_"));
+        assert!(is_wildcard_head("Some(x) | other"));
+        assert!(!is_wildcard_head("true"));
+        assert_eq!(strip_guard("_ if x > 3"), "_");
+        assert_eq!(strip_guard("Msg::Update { .. } if ok"), "Msg::Update { .. }");
+    }
+
+    #[test]
+    fn use_edges_plain_and_grouped() {
+        // inside rust/src, `regtopk::` is the sparsify submodule (as in
+        // `pub use regtopk::RegTopK`), NOT a crate-root edge
+        let it = items(
+            "use crate::comm::Msg;\nuse crate::{grad::GradLayout, util::json};\nuse regtopk::sparsify::Sparsifier;\nfn f() { crate::metrics::quantiles(&[]); }\n",
+        );
+        let mods: Vec<&str> = it.uses.iter().map(|u| u.module.as_str()).collect();
+        assert_eq!(mods, ["comm", "grad", "util", "metrics"]);
+        assert_eq!(it.uses[1].line, 2);
+        // in a test/bench path the crate's extern name does count
+        let f = SourceFile::parse(
+            "rust/tests/t.rs",
+            "use regtopk::comm::Msg;\nuse regtopk::{sparse::SparseVec, util::json};\n",
+        );
+        let it = extract(&f);
+        let mods: Vec<&str> = it.uses.iter().map(|u| u.module.as_str()).collect();
+        assert_eq!(mods, ["comm", "sparse", "util"]);
+    }
+
+    #[test]
+    fn pub_items_top_level_only() {
+        let it = items(
+            "pub fn alpha() {}\npub(crate) fn hidden() {}\nimpl X {\n    pub fn method(&self) {}\n}\npub const N: usize = 3;\npub struct S;\n",
+        );
+        let names: Vec<&str> = it.pubs.iter().map(|p| p.name.as_str()).collect();
+        assert_eq!(names, ["alpha", "N", "S"]);
+        assert_eq!(it.pubs[0].kind, "fn");
+    }
+
+    #[test]
+    fn test_region_is_tracked() {
+        let f = SourceFile::parse("rust/src/x/mod.rs", "fn a() {}\n#[cfg(test)]\nmod tests {}\n");
+        assert!(!f.is_test_line(0));
+        assert!(f.is_test_line(1));
+        assert!(f.is_test_line(2));
+    }
+}

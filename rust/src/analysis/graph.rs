@@ -1,0 +1,330 @@
+//! Module-layering gate: the dependency graph derived from `use`
+//! edges must match the declared DAG, with no cycles and no dead
+//! `pub` surface.
+//!
+//! The ISSUE-8 contract is the coarse chain `util → {sparse, analysis}
+//! → comm → grad/sparsify → coordinator → experiments → main`;
+//! [`LAYERS`] refines it to one integer per top-level module (higher
+//! = closer to the binary).  Every `crate::<mod>` / `regtopk::<mod>`
+//! reference in non-test code of `rust/src` is an edge, and an edge
+//! is legal only if it points strictly *down* (`layer(from) >
+//! layer(to)`).  Same-layer cross-module edges are violations too —
+//! siblings talk through a lower layer, not to each other.  A module
+//! absent from the table is a finding: adding a top-level module
+//! means declaring its place in the DAG, in this file, in review.
+//!
+//! `dead-pub` is the companion surface check: a top-level plain-`pub`
+//! item that no other module (and no test/bench/example) references
+//! is unused API — make it private or waive it with
+//! `repro-lint: allow(dead-pub)`.
+
+#![forbid(unsafe_code)]
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::extract::Parsed;
+use super::rules::Finding;
+
+/// The declared layering.  `layer(from) > layer(to)` for every edge.
+pub const LAYERS: &[(&str, u32)] = &[
+    ("util", 0),
+    ("sparse", 1),
+    ("analysis", 1),
+    ("data", 1),
+    ("metrics", 1),
+    ("comm", 2),
+    ("grad", 3),
+    ("sparsify", 4),
+    ("optim", 4),
+    ("runtime", 4),
+    ("config", 5),
+    ("models", 5),
+    ("coordinator", 6),
+    ("experiments", 7),
+    ("lib", 8),
+    ("main", 8),
+];
+
+fn layer_of(module: &str) -> Option<u32> {
+    LAYERS.iter().find(|(m, _)| *m == module).map(|(_, l)| *l)
+}
+
+/// Top-level module owning a `rust/src` path (`lib` / `main` for the
+/// crate roots); `None` for tests/benches/examples.
+pub fn module_of(path: &str) -> Option<&str> {
+    let rest = path.strip_prefix("rust/src/")?;
+    match rest {
+        "lib.rs" => Some("lib"),
+        "main.rs" => Some("main"),
+        _ => {
+            let end = rest.find('/').unwrap_or_else(|| rest.rfind(".rs").unwrap_or(rest.len()));
+            Some(&rest[..end])
+        }
+    }
+}
+
+/// Enforce the declared layering over all non-test `use` edges and
+/// reject cycles.  Neither finding is waivable: the DAG is edited by
+/// changing [`LAYERS`], not by sprinkling waivers.
+pub fn layering(p: &Parsed, findings: &mut Vec<Finding>) {
+    // module -> set of (target, witness path, witness line)
+    let mut edges: BTreeMap<&str, BTreeMap<String, (String, usize)>> = BTreeMap::new();
+    for (file, items) in &p.files {
+        let Some(from) = module_of(&file.path) else { continue };
+        if layer_of(from).is_none() {
+            findings.push(Finding {
+                rule: "layering",
+                path: file.path.clone(),
+                line: 0,
+                msg: format!(
+                    "module `{from}` is not in the declared DAG — register it \
+                     (with a layer) in analysis::graph::LAYERS"
+                ),
+                waived: false,
+            });
+            continue;
+        }
+        for e in &items.uses {
+            if file.is_test_line(e.line - 1) || e.module == from {
+                continue;
+            }
+            edges
+                .entry(from)
+                .or_default()
+                .entry(e.module.clone())
+                .or_insert((file.path.clone(), e.line));
+        }
+    }
+    for (from, tos) in &edges {
+        let lf = layer_of(from).expect("checked above");
+        for (to, (path, line)) in tos {
+            let Some(lt) = layer_of(to) else {
+                findings.push(Finding {
+                    rule: "layering",
+                    path: path.clone(),
+                    line: *line,
+                    msg: format!(
+                        "edge `{from}` → `{to}`: target module is not in the \
+                         declared DAG — register it in analysis::graph::LAYERS"
+                    ),
+                    waived: false,
+                });
+                continue;
+            };
+            if lf <= lt {
+                findings.push(Finding {
+                    rule: "layering",
+                    path: path.clone(),
+                    line: *line,
+                    msg: format!(
+                        "edge `{from}` (layer {lf}) → `{to}` (layer {lt}) points up \
+                         or sideways in the declared DAG — depend on a lower layer, \
+                         move the shared code down, or re-declare the layering in \
+                         analysis::graph::LAYERS"
+                    ),
+                    waived: false,
+                });
+            }
+        }
+    }
+    // cycle detection on the raw edge set (independent of the layer
+    // table, so a cycle is reported even if LAYERS is edited to allow
+    // both directions)
+    if let Some(cycle) = find_cycle(&edges) {
+        findings.push(Finding {
+            rule: "layering",
+            path: "rust/src".to_string(),
+            line: 0,
+            msg: format!("module dependency cycle: {}", cycle.join(" → ")),
+            waived: false,
+        });
+    }
+}
+
+/// DFS three-color cycle search; returns the cycle path if any.
+fn find_cycle(edges: &BTreeMap<&str, BTreeMap<String, (String, usize)>>) -> Option<Vec<String>> {
+    let mut done: BTreeSet<&str> = BTreeSet::new();
+    for &start in edges.keys() {
+        if done.contains(start) {
+            continue;
+        }
+        let mut stack: Vec<(&str, Vec<&str>)> = vec![(start, Vec::new())];
+        while let Some((node, path)) = stack.pop() {
+            if let Some(at) = path.iter().position(|&n| n == node) {
+                let mut cycle: Vec<String> = path[at..].iter().map(|s| s.to_string()).collect();
+                cycle.push(node.to_string());
+                return Some(cycle);
+            }
+            if done.contains(node) {
+                continue;
+            }
+            let mut next_path = path.clone();
+            next_path.push(node);
+            // mark finished once all children are expanded: a node is
+            // safe to skip only after full exploration, but for a
+            // DAG-sized graph (≤16 modules) re-exploration is cheap,
+            // so "done" is set eagerly per start node instead
+            if next_path.len() > edges.len() + 1 {
+                continue;
+            }
+            if let Some(tos) = edges.get(node) {
+                for to in tos.keys() {
+                    if let Some((k, _)) = edges.get_key_value(to.as_str()) {
+                        stack.push((k, next_path.clone()));
+                    }
+                }
+            }
+        }
+        done.insert(start);
+    }
+    None
+}
+
+/// Flag top-level plain-`pub` items with zero references from any
+/// other module (tests/benches/examples count as references).
+/// Waivable with `repro-lint: allow(dead-pub)` at the declaration.
+pub fn dead_pubs(p: &Parsed, findings: &mut Vec<Finding>) {
+    // (path, module, joined non-blanked code) for the reference scan
+    let joined: Vec<(&str, Option<&str>, String)> = p
+        .files
+        .iter()
+        .map(|(f, _)| {
+            let code: String =
+                f.lines.iter().map(|l| l.code.as_str()).collect::<Vec<_>>().join("\n");
+            (f.path.as_str(), module_of(&f.path), code)
+        })
+        .collect();
+    for (file, items) in &p.files {
+        let Some(module) = module_of(&file.path) else { continue };
+        for item in &items.pubs {
+            if file.is_test_line(item.line - 1) {
+                continue;
+            }
+            let referenced = joined.iter().any(|(path, m, code)| {
+                *path != file.path
+                    && m.map_or(true, |m| m != module)
+                    && super::lexer::has_word(code, &item.name)
+            });
+            if referenced {
+                continue;
+            }
+            findings.push(Finding {
+                rule: "dead-pub",
+                path: file.path.clone(),
+                line: item.line,
+                msg: format!(
+                    "`pub {} {}` has no cross-module references — narrow its \
+                     visibility, exercise it from a test, or waive with \
+                     `repro-lint: allow(dead-pub)`",
+                    item.kind, item.name
+                ),
+                waived: file.has_waiver(item.line - 1, "dead-pub"),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::extract::parse_all;
+    use super::*;
+
+    fn src(files: &[(&str, &str)]) -> Parsed {
+        let owned: Vec<(String, String)> =
+            files.iter().map(|(p, s)| ((*p).to_string(), (*s).to_string())).collect();
+        parse_all(&owned)
+    }
+
+    #[test]
+    fn module_of_maps_paths() {
+        assert_eq!(module_of("rust/src/comm/codec/mod.rs"), Some("comm"));
+        assert_eq!(module_of("rust/src/lib.rs"), Some("lib"));
+        assert_eq!(module_of("rust/src/main.rs"), Some("main"));
+        assert_eq!(module_of("rust/tests/resume.rs"), None);
+        assert_eq!(module_of("rust/benches/codec.rs"), None);
+    }
+
+    #[test]
+    fn downward_edges_are_clean() {
+        let p = src(&[
+            ("rust/src/comm/mod.rs", "use crate::sparse::SparseVec;\nuse crate::util::json;\n"),
+            ("rust/src/sparse/mod.rs", "use crate::util::pool::Pool;\n"),
+        ]);
+        let mut f = Vec::new();
+        layering(&p, &mut f);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn upward_and_sideways_edges_fire() {
+        let p = src(&[("rust/src/sparse/vec.rs", "use crate::comm::codec::WireCost;\n")]);
+        let mut f = Vec::new();
+        layering(&p, &mut f);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "layering");
+        assert!(f[0].msg.contains("`sparse` (layer 1) → `comm` (layer 2)"), "{}", f[0].msg);
+        // same layer is sideways, also rejected
+        let p = src(&[("rust/src/sparsify/mod.rs", "use crate::optim::Sgd;\n")]);
+        let mut f = Vec::new();
+        layering(&p, &mut f);
+        assert_eq!(f.len(), 1, "{f:?}");
+    }
+
+    #[test]
+    fn cycles_are_reported() {
+        // both edges individually violate layering; the cycle finding
+        // names the loop itself
+        let p = src(&[
+            ("rust/src/sparse/mod.rs", "use crate::comm::Msg;\n"),
+            ("rust/src/comm/mod.rs", "use crate::sparse::SparseVec;\n"),
+        ]);
+        let mut f = Vec::new();
+        layering(&p, &mut f);
+        let cyc: Vec<_> = f.iter().filter(|x| x.msg.contains("cycle")).collect();
+        assert_eq!(cyc.len(), 1, "{f:?}");
+        assert!(cyc[0].msg.contains("→"));
+    }
+
+    #[test]
+    fn unknown_module_fires() {
+        let p = src(&[("rust/src/telemetry/mod.rs", "use crate::util::json;\n")]);
+        let mut f = Vec::new();
+        layering(&p, &mut f);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].msg.contains("telemetry"));
+    }
+
+    #[test]
+    fn test_region_and_test_paths_do_not_add_edges() {
+        let p = src(&[
+            (
+                "rust/src/sparse/mod.rs",
+                "pub fn f() {}\n#[cfg(test)]\nmod tests {\n    use crate::comm::Msg;\n}\n",
+            ),
+            ("rust/tests/codec.rs", "use regtopk::comm::Msg;\nuse regtopk::sparse::SparseVec;\n"),
+        ]);
+        let mut f = Vec::new();
+        layering(&p, &mut f);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn dead_pub_fires_and_waives() {
+        let p = src(&[
+            (
+                "rust/src/metrics/mod.rs",
+                "pub fn used() {}\npub fn lonely() {}\n\
+                 // repro-lint: allow(dead-pub)\npub fn excused() {}\n",
+            ),
+            ("rust/src/coordinator/mod.rs", "pub fn go() { crate::metrics::used(); }\n"),
+            ("rust/tests/t.rs", "fn t() { regtopk::coordinator::go(); }\n"),
+        ]);
+        let mut f = Vec::new();
+        dead_pubs(&p, &mut f);
+        assert_eq!(f.len(), 2, "{f:?}");
+        let lonely = f.iter().find(|x| x.msg.contains("lonely")).expect("lonely finding");
+        assert!(!lonely.waived);
+        let excused = f.iter().find(|x| x.msg.contains("excused")).expect("excused finding");
+        assert!(excused.waived);
+    }
+}

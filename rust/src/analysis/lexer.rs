@@ -5,25 +5,34 @@
 //! A naive grep would fire on the word "unsafe" inside a doc comment
 //! or a string literal (including the analyzer's own rule tables), so
 //! every file is first split, line by line, into a **code channel**
-//! (string-literal contents blanked to spaces, comments removed) and a
-//! **comment channel** (the text of `//`, `///`, `//!` and `/* */`
-//! comments).  Rules match the code channel; `SAFETY:` annotations and
-//! `repro-lint: allow(...)` waivers are looked up in the comment
-//! channel.
+//! (string-literal contents blanked to spaces, comments removed), a
+//! **text channel** (comments stripped but string contents kept — the
+//! schema extractor reads `const` values such as section magics from
+//! here), and a **comment channel** (the text of `//`, `///`, `//!`
+//! and `/* */`, `/*! */` comments).  Rules match the code channel;
+//! `SAFETY:` annotations and `repro-lint: allow(...)` waivers are
+//! looked up in the comment channel.
 //!
 //! The lexer handles the Rust surface this repo actually uses: line
-//! comments, nested block comments, `"..."` strings with escapes,
-//! `r"..."`/`r#"..."#` raw strings, and character literals (so `'"'`
-//! and `'\''` do not open a bogus string).  Lifetimes (`'a`,
-//! `'static`) are recognized and left in the code channel.
+//! comments (incl. `//!` inner docs), nested block comments (incl.
+//! `/*!`), `"..."` strings with escapes, `r"..."`/`r#"..."#`/
+//! `r##"..."##` raw strings with any hash count, byte strings, and
+//! character literals (so `'"'` and `'\''` do not open a bogus
+//! string, and a `/*` inside a string does not open a comment).
+//! Lifetimes (`'a`, `'static`) are recognized and left in the code
+//! channel.
 
 #![forbid(unsafe_code)]
 
-/// One source line, split into its two channels.
+/// One source line, split into its channels.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Line {
     /// Code with comments stripped and string/char contents blanked.
     pub code: String,
+    /// Code with comments stripped but string contents preserved
+    /// (same token structure as `code`; used by the item extractor to
+    /// read `const` values like `b"RTKS"` literally).
+    pub text: String,
     /// Concatenated comment text on this line (without `//` markers).
     pub comment: String,
 }
@@ -39,13 +48,14 @@ enum State {
     RawStr(usize),
 }
 
-/// Split `src` into per-line code/comment channels.
+/// Split `src` into per-line code/text/comment channels.
 pub fn split(src: &str) -> Vec<Line> {
     let mut out = Vec::new();
     let mut state = State::Code;
     for raw in src.lines() {
         let chars: Vec<char> = raw.chars().collect();
         let mut code = String::with_capacity(chars.len());
+        let mut text = String::with_capacity(chars.len());
         let mut comment = String::new();
         let mut i = 0usize;
         while i < chars.len() {
@@ -64,12 +74,16 @@ pub fn split(src: &str) -> Vec<Line> {
                     }
                     '"' => {
                         code.push('"');
+                        text.push('"');
                         state = State::Str;
                         i += 1;
                     }
                     'r' if starts_raw_string(&chars, i) => {
                         let hashes = count_hashes(&chars, i + 1);
                         code.push_str("r\"");
+                        text.push('r');
+                        text.extend(std::iter::repeat('#').take(hashes));
+                        text.push('"');
                         state = State::RawStr(hashes);
                         i += 2 + hashes;
                     }
@@ -78,25 +92,29 @@ pub fn split(src: &str) -> Vec<Line> {
                         // literal; anything not closed by a near ' is
                         // a lifetime and stays in the code channel
                         if next == Some('\\') {
-                            // escaped char literal: skip to closing '
+                            // escaped char literal: the escape body is
+                            // at least one char ('\'', '\\', '\u{..}'),
+                            // so skip it before scanning for the close
                             code.push_str("' '");
-                            let mut j = i + 2;
-                            // the escape body is at most a few chars
-                            // (\u{...} worst case); scan to the quote
+                            text.push_str("' '");
+                            let mut j = i + 3;
                             while j < chars.len() && chars[j] != '\'' {
                                 j += 1;
                             }
                             i = j + 1;
                         } else if chars.get(i + 2).copied() == Some('\'') {
                             code.push_str("' '");
+                            text.push_str("' '");
                             i += 3;
                         } else {
                             code.push('\'');
+                            text.push('\'');
                             i += 1;
                         }
                     }
                     _ => {
                         code.push(c);
+                        text.push(c);
                         i += 1;
                     }
                 },
@@ -115,34 +133,41 @@ pub fn split(src: &str) -> Vec<Line> {
                 State::Str => match c {
                     '\\' => {
                         code.push(' ');
-                        if next.is_some() {
+                        text.push('\\');
+                        if let Some(n) = next {
                             code.push(' ');
+                            text.push(n);
                         }
                         i += 2;
                     }
                     '"' => {
                         code.push('"');
+                        text.push('"');
                         state = State::Code;
                         i += 1;
                     }
                     _ => {
                         code.push(' ');
+                        text.push(c);
                         i += 1;
                     }
                 },
                 State::RawStr(hashes) => {
                     if c == '"' && closes_raw(&chars, i + 1, hashes) {
                         code.push('"');
+                        text.push('"');
+                        text.extend(std::iter::repeat('#').take(hashes));
                         state = State::Code;
                         i += 1 + hashes;
                     } else {
                         code.push(' ');
+                        text.push(c);
                         i += 1;
                     }
                 }
             }
         }
-        out.push(Line { code, comment });
+        out.push(Line { code, text, comment });
     }
     out
 }
@@ -218,6 +243,17 @@ mod tests {
     }
 
     #[test]
+    fn inner_doc_comments_are_comment_channel() {
+        // `//!` and `/*! ... */` are comments, not code
+        let lines = split("//! module docs with unsafe\n/*! inner block unsafe */ let a = 1;");
+        assert_eq!(lines[0].code, "");
+        assert!(lines[0].comment.contains("module docs"));
+        assert!(!lines[1].code.contains("unsafe"));
+        assert!(lines[1].code.contains("let a = 1;"));
+        assert!(lines[1].comment.contains("inner block"));
+    }
+
+    #[test]
     fn blanks_string_contents() {
         let c = code_of(r#"let s = "unsafe // not code"; f(s);"#);
         assert!(!c[0].contains("unsafe"));
@@ -226,11 +262,45 @@ mod tests {
     }
 
     #[test]
+    fn text_channel_keeps_string_contents() {
+        let lines = split("pub const EF_MAGIC: &[u8; 4] = b\"RTKS\"; // magic");
+        assert!(lines[0].text.contains("b\"RTKS\""));
+        assert!(!lines[0].code.contains("RTKS"));
+        assert!(!lines[0].text.contains("magic"));
+    }
+
+    #[test]
+    fn block_comment_opener_inside_string_stays_string() {
+        // the `/*` in the string must not open a comment: the next
+        // line is still code
+        let lines = split("let s = \"a /* b\";\nlet t = 1;");
+        assert!(lines[0].code.contains("let s = "));
+        assert_eq!(lines[1].code, "let t = 1;");
+        assert!(lines[1].comment.is_empty());
+        assert!(lines[0].text.contains("a /* b"));
+    }
+
+    #[test]
     fn raw_strings_and_hashes() {
         let c = code_of("let s = r#\"unsafe \" inner\"# + r\"thread::spawn\";");
         assert!(!c[0].contains("unsafe"));
         assert!(!c[0].contains("spawn"));
         assert!(c[0].ends_with(';'));
+    }
+
+    #[test]
+    fn multi_hash_raw_strings() {
+        // r##"..."## : an inner `"#` must not close the string
+        let lines = split("let s = r##\"unsafe \"# still inside\"##; done();");
+        assert!(!lines[0].code.contains("unsafe"));
+        assert!(!lines[0].code.contains("still"));
+        assert!(lines[0].code.contains("done();"));
+        assert!(lines[0].text.contains("r##\""));
+        assert!(lines[0].text.contains("unsafe \"# still inside"));
+        // spanning lines
+        let lines = split("let s = r##\"open\nthread::spawn\n\"## ; after();");
+        assert!(!lines[1].code.contains("spawn"));
+        assert!(lines[2].code.contains("after();"));
     }
 
     #[test]
@@ -248,6 +318,18 @@ mod tests {
         assert!(!c[0].contains("unsafe"));
         // the lifetime survives in the code channel
         assert!(c[1].contains("'static"));
+    }
+
+    #[test]
+    fn escaped_quote_char_literal_does_not_leak() {
+        // '\'' : the escape body IS the quote — the scan must not stop
+        // on it and leave a stray ' in the code channel
+        let c = code_of("if c == '\\'' { f() } let l: &'static str = s;");
+        assert!(c[0].contains("{ f() }"), "{c:?}");
+        assert!(c[0].contains("'static"), "{c:?}");
+        // and a following string is still recognized as a string
+        let c = code_of("x('\\''); let s = \"unsafe\";");
+        assert!(!c[0].contains("unsafe"), "{c:?}");
     }
 
     #[test]

@@ -12,6 +12,16 @@
 //! tree and returns a deterministic, sorted list of [`Finding`]s;
 //! the CI lint job fails on any.
 //!
+//! Since ISSUE 8 the analyzer is *semantic*, not just lexical: the
+//! std-only item extractor in [`extract`] parses enum variants,
+//! struct fields, `const` values, `match` arms, and `use` edges on
+//! top of the [`lexer`] channels, powering three gates beyond the
+//! line rules — wire/persisted **schema drift** against the committed
+//! `SCHEMA.lock` ([`schema`]), module **layering** over the declared
+//! DAG plus dead-`pub` surface ([`graph`]), and match
+//! **exhaustiveness** over the wire enums ([`rules`]).  Every file is
+//! read and lexed exactly once per run; all rules share that pass.
+//!
 //! The rule set, the unsafe-module allowlist, and the waiver syntax
 //! live in [`rules`]; the comment/string-aware line splitter the
 //! rules match against lives in [`lexer`].  The analyzer is std-only
@@ -23,8 +33,11 @@
 
 #![forbid(unsafe_code)]
 
+pub mod extract;
+pub mod graph;
 pub mod lexer;
 pub mod rules;
+pub mod schema;
 
 pub use rules::{analyze_sources, Finding, RULES, UNSAFE_ALLOWLIST};
 
@@ -35,11 +48,25 @@ use std::path::{Path, PathBuf};
 /// The tree regions the analyzer scans, relative to the repo root.
 const SCAN_ROOTS: &[&str] = &["rust/src", "rust/tests", "rust/benches", "examples"];
 
-/// Walk the repo tree under `root` (the directory holding
-/// `Cargo.toml`), analyze every `.rs` file, and return all findings
-/// in deterministic (path, line, rule) order.  Also cross-checks the
-/// unsafe allowlist against the tree so stale entries fail loudly.
-pub fn analyze_tree(root: &Path) -> io::Result<Vec<Finding>> {
+/// The result of a full tree analysis: every finding (waived ones
+/// flagged, for `repro lint --json`) plus scan statistics for the
+/// lint summary line.
+pub struct TreeReport {
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+}
+
+impl TreeReport {
+    /// The findings that fail the gate (waived ones excluded).
+    pub fn failing(&self) -> impl Iterator<Item = &Finding> {
+        self.findings.iter().filter(|f| !f.waived)
+    }
+}
+
+/// Read every `.rs` file under the scan roots as `(relative_path,
+/// source)`, sorted by path.  Single filesystem pass for the whole
+/// analyzer — parsing/lexing happens once on this list.
+pub fn read_tree(root: &Path) -> io::Result<Vec<(String, String)>> {
     let mut files: Vec<(String, String)> = Vec::new();
     for scan in SCAN_ROOTS {
         let dir = root.join(scan);
@@ -58,7 +85,19 @@ pub fn analyze_tree(root: &Path) -> io::Result<Vec<Finding>> {
         }
     }
     files.sort_by(|a, b| a.0.cmp(&b.0));
-    let mut findings = analyze_sources(&files);
+    Ok(files)
+}
+
+/// Walk the repo tree under `root` (the directory holding
+/// `Cargo.toml`), analyze every `.rs` file, and return all findings
+/// (including waived ones) in deterministic (path, line, rule) order.
+/// Beyond the per-source rules this adds the tree-level gates: the
+/// unsafe-allowlist staleness check and the `SCHEMA.lock` /
+/// `docs/WIRE.md` schema-drift comparison.
+pub fn analyze_tree_full(root: &Path) -> io::Result<TreeReport> {
+    let files = read_tree(root)?;
+    let parsed = extract::parse_all(&files);
+    let mut findings = rules::analyze_parsed(&parsed);
     for entry in UNSAFE_ALLOWLIST {
         if !files.iter().any(|(p, _)| p == entry) {
             findings.push(Finding {
@@ -68,11 +107,19 @@ pub fn analyze_tree(root: &Path) -> io::Result<Vec<Finding>> {
                 msg: "stale allowlist entry: file not found in tree — remove it \
                       from analysis::rules::UNSAFE_ALLOWLIST"
                     .to_string(),
+                waived: false,
             });
         }
     }
+    schema::check_tree(root, &parsed, &mut findings);
     findings.sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
-    Ok(findings)
+    Ok(TreeReport { findings, files_scanned: files.len() })
+}
+
+/// [`analyze_tree_full`] filtered to the failing (unwaived) findings —
+/// the CI gate surface.
+pub fn analyze_tree(root: &Path) -> io::Result<Vec<Finding>> {
+    Ok(analyze_tree_full(root)?.findings.into_iter().filter(|f| !f.waived).collect())
 }
 
 fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
@@ -117,6 +164,19 @@ mod tests {
             "analyzer findings on the repo tree:\n{}",
             findings.iter().map(|f| format!("  {f}\n")).collect::<String>()
         );
+    }
+
+    #[test]
+    fn own_schema_lock_is_canonical() {
+        // regeneration is deterministic and byte-identical to the
+        // committed lockfile — the acceptance criterion of ISSUE 8
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let files = read_tree(root).expect("tree walk");
+        let parsed = extract::parse_all(&files);
+        let (text, f) = schema::render_for_tree(root, &parsed);
+        assert!(f.is_empty(), "{f:?}");
+        let committed = fs::read_to_string(root.join("SCHEMA.lock")).expect("SCHEMA.lock");
+        assert_eq!(text, committed, "SCHEMA.lock is not the canonical rendering of the tree");
     }
 
     #[test]

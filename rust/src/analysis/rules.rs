@@ -13,15 +13,30 @@
 //! | `byte-accounting`   | bits→bytes (`div_ceil(8)`) only inside `comm/codec/`  |
 //! | `wall-clock`        | no wall-clock/OS-entropy calls in deterministic paths |
 //! | `kind-matrix`       | every `SparsifierKind` family in both test matrices   |
+//! | `wildcard`          | no `_`/binding arm in matches over wire enums/tags    |
+//! | `layering`          | `use` edges respect the declared module DAG           |
+//! | `dead-pub`          | top-level `pub` items have cross-module references    |
+//! | `schema-drift`      | wire/persisted formats match committed `SCHEMA.lock`  |
+//! | `schema-tag-reuse`  | checkpoint tags/magics are never renumbered or reused |
+//! | `schema-doc`        | every SCHEMA.lock version has a docs/WIRE.md `## vN`  |
 //!
 //! A finding on a specific line can be waived with a
 //! `repro-lint: allow(<rule-id>)` comment on the same line or the
 //! line directly above — the waiver is itself a comment, so it shows
-//! up in review next to the code it excuses.
+//! up in review next to the code it excuses.  The schema and layering
+//! rules are **not** waivable: their escape hatch is an explicit edit
+//! (regenerate the lockfile + document, or re-declare the DAG), never
+//! a comment.
+//!
+//! Every file is read and lexed exactly once (see
+//! [`super::extract::parse_all`]); all rules — line-lexical and
+//! semantic — share that pass.
 
 #![forbid(unsafe_code)]
 
-use super::lexer::{has_word, split, Line};
+use super::extract::{is_wildcard_head, parse_all, FileItems, Parsed, SourceFile};
+use super::graph;
+use super::lexer::has_word;
 
 /// Every rule id the analyzer can report, in the order of the module
 /// docs table.  A waiver comment must name one of these.
@@ -32,6 +47,12 @@ pub const RULES: &[&str] = &[
     "byte-accounting",
     "wall-clock",
     "kind-matrix",
+    "wildcard",
+    "layering",
+    "dead-pub",
+    "schema-drift",
+    "schema-tag-reuse",
+    "schema-doc",
 ];
 
 /// Files allowed to contain the `unsafe` keyword.  Everything else in
@@ -72,65 +93,69 @@ const KIND_MATRIX_FILES: &[&str] = &["rust/tests/resume.rs", "rust/tests/determi
 /// Where the `SparsifierKind` enum itself lives.
 const KIND_ENUM_FILE: &str = "rust/src/sparsify/mod.rs";
 
+/// Enums (and the tag-const prefix) whose `match` sites must be
+/// literally exhaustive: a new wire/persisted variant must fail to
+/// compile at every decode site, not fall into a `_` arm.
+const WATCHED_ENUMS: &[&str] =
+    &["SparsifierKind", "SparsifierState", "Msg", "LevelKind", "IndexCodec"];
+
 /// One analyzer finding.  `line` is 1-based; 0 means the finding is
-/// about the file (or the tree) as a whole.
+/// about the file (or the tree) as a whole.  `waived` findings are
+/// suppressed from the failing set but kept for `repro lint --json`.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Finding {
     pub rule: &'static str,
     pub path: String,
     pub line: usize,
     pub msg: String,
+    pub waived: bool,
 }
 
 impl std::fmt::Display for Finding {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "{}:{}: [{}] {}", self.path, self.line, self.rule, self.msg)
+        let w = if self.waived { " (waived)" } else { "" };
+        write!(f, "{}:{}: [{}]{} {}", self.path, self.line, self.rule, w, self.msg)
     }
 }
 
-/// Analyze a set of `(relative_path, source)` pairs.  This is the
-/// whole analyzer minus the filesystem walk, so the self-test can
-/// feed it fixture trees.  Paths use `/` separators relative to the
-/// repo root (e.g. `rust/src/util/pool.rs`).
+/// Analyze a set of `(relative_path, source)` pairs, returning only
+/// unwaived findings.  This is the whole analyzer minus the
+/// filesystem walk and the SCHEMA.lock comparison (which need a repo
+/// root), so the self-test can feed it fixture trees.  Paths use `/`
+/// separators relative to the repo root (e.g. `rust/src/util/pool.rs`).
 pub fn analyze_sources(files: &[(String, String)]) -> Vec<Finding> {
+    let parsed = parse_all(files);
+    analyze_parsed(&parsed).into_iter().filter(|f| !f.waived).collect()
+}
+
+/// All rules over an already-parsed tree: every file was read and
+/// lexed exactly once, and the line rules plus the semantic gates
+/// (wildcard, layering, dead-pub, kind-matrix) share that pass.
+/// Returns waived findings too, flagged.
+pub fn analyze_parsed(p: &Parsed) -> Vec<Finding> {
     let mut findings = Vec::new();
-    for (path, src) in files {
-        scan_file(path, src, &mut findings);
+    for (file, items) in &p.files {
+        scan_file(file, &mut findings);
+        wildcard_rule(file, items, &mut findings);
     }
-    kind_matrix(files, &mut findings);
+    graph::layering(p, &mut findings);
+    graph::dead_pubs(p, &mut findings);
+    kind_matrix(p, &mut findings);
     findings.sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
     findings
 }
 
-/// Is this path inherently test/bench code (rules scoped to shipped
-/// library paths skip it entirely)?
-fn is_test_path(path: &str) -> bool {
-    !path.starts_with("rust/src/")
-}
-
-fn scan_file(path: &str, src: &str, findings: &mut Vec<Finding>) {
-    let lines = split(src);
-    // Repo convention: `#[cfg(test)] mod tests` sits at the end of
-    // the file, so everything from the first `#[cfg(test)]` on is
-    // treated as test region for the test-exempt rules.
-    let test_from = if is_test_path(path) {
-        0
-    } else {
-        lines
-            .iter()
-            .position(|l| l.code.contains("#[cfg(test)]"))
-            .unwrap_or(lines.len())
-    };
+fn scan_file(file: &SourceFile, findings: &mut Vec<Finding>) {
+    let path = file.path.as_str();
     let allowlisted = UNSAFE_ALLOWLIST.contains(&path);
     let wall_exempt = WALL_CLOCK_EXEMPT.contains(&path);
 
-    for (idx, line) in lines.iter().enumerate() {
+    for (idx, line) in file.lines.iter().enumerate() {
         let n = idx + 1;
-        let in_test = idx >= test_from;
-        let waived = |rule: &str| has_waiver(&lines, idx, rule);
+        let in_test = file.is_test_path() || file.is_test_line(idx);
 
         if has_word(&line.code, "unsafe") {
-            if !allowlisted && !waived("unsafe-allowlist") {
+            if !allowlisted {
                 findings.push(Finding {
                     rule: "unsafe-allowlist",
                     path: path.to_string(),
@@ -140,9 +165,10 @@ fn scan_file(path: &str, src: &str, findings: &mut Vec<Finding>) {
                          add a safe wrapper in an allowlisted module or \
                          register `{path}` in analysis::rules::UNSAFE_ALLOWLIST"
                     ),
+                    waived: file.has_waiver(idx, "unsafe-allowlist"),
                 });
             }
-            if !has_safety_comment(&lines, idx) && !waived("safety-comment") {
+            if !has_safety_comment(file, idx) {
                 findings.push(Finding {
                     rule: "safety-comment",
                     path: path.to_string(),
@@ -151,15 +177,12 @@ fn scan_file(path: &str, src: &str, findings: &mut Vec<Finding>) {
                           directly above (unsafe fn declarations may use a \
                           `# Safety` doc heading instead)"
                         .to_string(),
+                    waived: file.has_waiver(idx, "safety-comment"),
                 });
             }
         }
 
-        if !in_test
-            && line.code.contains("thread::spawn")
-            && path != "rust/src/util/pool.rs"
-            && !waived("spawn-outside-pool")
-        {
+        if !in_test && line.code.contains("thread::spawn") && path != "rust/src/util/pool.rs" {
             findings.push(Finding {
                 rule: "spawn-outside-pool",
                 path: path.to_string(),
@@ -167,13 +190,13 @@ fn scan_file(path: &str, src: &str, findings: &mut Vec<Finding>) {
                 msg: "`thread::spawn` outside util/pool.rs — hot paths must reuse \
                       the persistent pool, not spawn per call"
                     .to_string(),
+                waived: file.has_waiver(idx, "spawn-outside-pool"),
             });
         }
 
         if !in_test
             && line.code.contains("div_ceil(8)")
             && !path.starts_with("rust/src/comm/codec/")
-            && !waived("byte-accounting")
         {
             findings.push(Finding {
                 rule: "byte-accounting",
@@ -183,6 +206,7 @@ fn scan_file(path: &str, src: &str, findings: &mut Vec<Finding>) {
                       accounting must go through codec::WireCost so reported \
                       bytes stay the wire bytes by construction"
                     .to_string(),
+                waived: file.has_waiver(idx, "byte-accounting"),
             });
         }
 
@@ -193,7 +217,7 @@ fn scan_file(path: &str, src: &str, findings: &mut Vec<Finding>) {
                 } else {
                     has_word(&line.code, tok)
                 };
-                if hit && !waived("wall-clock") {
+                if hit {
                     findings.push(Finding {
                         rule: "wall-clock",
                         path: path.to_string(),
@@ -204,6 +228,7 @@ fn scan_file(path: &str, src: &str, findings: &mut Vec<Finding>) {
                              break bit-reproducibility; use util::rng / BTree \
                              collections, or waive with a justification"
                         ),
+                        waived: file.has_waiver(idx, "wall-clock"),
                     });
                     break;
                 }
@@ -212,62 +237,114 @@ fn scan_file(path: &str, src: &str, findings: &mut Vec<Finding>) {
     }
 }
 
-/// `repro-lint: allow(<rule>)` in a comment on this line or the line
-/// directly above waives that rule here.
-fn has_waiver(lines: &[Line], idx: usize, rule: &str) -> bool {
-    let tag = format!("repro-lint: allow({rule})");
-    lines[idx].comment.contains(&tag)
-        || (idx > 0 && lines[idx - 1].comment.contains(&tag))
-}
-
 /// Accept a `SAFETY:` marker on the unsafe line itself or anywhere in
 /// the contiguous run of comment/attribute/blank lines directly above
 /// it (so an attribute between the comment and the item is fine).  A
 /// `# Safety` doc heading also counts — that is rustdoc's convention
 /// for `unsafe fn` contracts.
-fn has_safety_comment(lines: &[Line], idx: usize) -> bool {
-    let marks = |l: &Line| l.comment.contains("SAFETY:") || l.comment.contains("# Safety");
-    if marks(&lines[idx]) {
+fn has_safety_comment(file: &SourceFile, idx: usize) -> bool {
+    let marks = |i: usize| {
+        file.lines[i].comment.contains("SAFETY:") || file.lines[i].comment.contains("# Safety")
+    };
+    if marks(idx) {
         return true;
     }
     let mut j = idx;
     while j > 0 {
         j -= 1;
-        let l = &lines[j];
-        let code = l.code.trim();
+        let code = file.lines[j].code.trim();
         let comment_ish = code.is_empty() || code.starts_with("#[") || code.starts_with("#![");
         if !comment_ish {
             return false;
         }
-        if marks(l) {
+        if marks(j) {
             return true;
         }
     }
     false
 }
 
+/// A `match` whose arms mention a watched wire/persisted enum (or a
+/// `STATE_TAG_*` const) must be literally exhaustive: with no
+/// wildcard arm the *compiler* guarantees every variant is handled,
+/// so a new wire variant breaks the build at every decode site
+/// instead of vanishing into a `_`.  Waivable per arm (or on the
+/// `match` line) with `repro-lint: allow(wildcard)`.
+fn wildcard_rule(file: &SourceFile, items: &FileItems, findings: &mut Vec<Finding>) {
+    if file.is_test_path() {
+        return;
+    }
+    for site in &items.matches {
+        if file.is_test_line(site.line - 1) {
+            continue;
+        }
+        let watched = site.arms.iter().find_map(|a| {
+            WATCHED_ENUMS
+                .iter()
+                .find(|e| a.head.contains(&format!("{e}::")))
+                .map(|e| (*e).to_string())
+                .or_else(|| a.head.contains("STATE_TAG_").then(|| "state tags".to_string()))
+        });
+        let Some(subject) = watched else { continue };
+        for arm in &site.arms {
+            if !is_wildcard_head(&arm.head) {
+                continue;
+            }
+            let idx = arm.line - 1;
+            findings.push(Finding {
+                rule: "wildcard",
+                path: file.path.clone(),
+                line: arm.line,
+                msg: format!(
+                    "wildcard arm `{}` in a match over {subject} — wire/persisted \
+                     enums must be matched exhaustively so a new variant fails \
+                     loud at every decode site; spell out the variants or waive \
+                     with `repro-lint: allow(wildcard)`",
+                    arm.head
+                ),
+                waived: file.has_waiver(idx, "wildcard")
+                    || file.has_waiver(site.line - 1, "wildcard"),
+            });
+        }
+    }
+}
+
 /// Parse the `SparsifierKind` variant names and require each to
 /// appear as `SparsifierKind::<Variant>` in every matrix file.  New
 /// families then cannot land without resume + bit-identity coverage.
-fn kind_matrix(files: &[(String, String)], findings: &mut Vec<Finding>) {
-    let Some((_, enum_src)) = files.iter().find(|(p, _)| p == KIND_ENUM_FILE) else {
+fn kind_matrix(p: &Parsed, findings: &mut Vec<Finding>) {
+    let Some((_, items)) = p.files.iter().find(|(f, _)| f.path == KIND_ENUM_FILE) else {
         return;
     };
-    let variants = parse_kind_variants(enum_src);
+    let Some(e) = items.enums.iter().find(|e| e.name == "SparsifierKind") else {
+        return;
+    };
+    let variants: Vec<String> = e
+        .variants
+        .iter()
+        .map(|(d, _)| {
+            d.split(|c: char| !(c.is_alphanumeric() || c == '_'))
+                .next()
+                .unwrap_or("")
+                .to_string()
+        })
+        .filter(|v| !v.is_empty())
+        .collect();
     if variants.is_empty() {
         return;
     }
     for matrix in KIND_MATRIX_FILES {
-        let Some((_, src)) = files.iter().find(|(p, _)| p == *matrix) else {
+        let Some((file, _)) = p.files.iter().find(|(f, _)| f.path == *matrix) else {
             findings.push(Finding {
                 rule: "kind-matrix",
                 path: (*matrix).to_string(),
                 line: 0,
                 msg: "matrix test file missing from tree".to_string(),
+                waived: false,
             });
             continue;
         };
-        let code: String = split(src).into_iter().map(|l| l.code + "\n").collect();
+        let code: String = file.lines.iter().map(|l| l.code.clone() + "\n").collect();
         for v in &variants {
             if !code.contains(&format!("SparsifierKind::{v}")) {
                 findings.push(Finding {
@@ -279,30 +356,32 @@ fn kind_matrix(files: &[(String, String)], findings: &mut Vec<Finding>) {
                          sparsifier family must appear in the resume and \
                          bit-identity matrices"
                     ),
+                    waived: false,
                 });
             }
         }
     }
 }
 
-fn parse_kind_variants(src: &str) -> Vec<String> {
-    let lines = split(src);
-    let Some(open) = lines.iter().position(|l| l.code.contains("pub enum SparsifierKind")) else {
-        return Vec::new();
-    };
-    let mut out = Vec::new();
-    for l in &lines[open + 1..] {
-        let code = l.code.trim();
-        if code.starts_with('}') {
-            break;
-        }
-        let name: String =
-            code.chars().take_while(|c| c.is_alphanumeric() || *c == '_').collect();
-        if !name.is_empty() && name.chars().next().is_some_and(|c| c.is_uppercase()) {
-            out.push(name);
-        }
-    }
-    out
+/// Variant names of a `SparsifierKind` enum source (test helper /
+/// back-compat shim over the item extractor).
+pub fn parse_kind_variants(src: &str) -> Vec<String> {
+    let file = SourceFile::parse(KIND_ENUM_FILE, src);
+    let items = super::extract::extract(&file);
+    items
+        .enums
+        .iter()
+        .find(|e| e.name == "SparsifierKind")
+        .map(|e| {
+            e.variants
+                .iter()
+                .filter_map(|(d, _)| {
+                    d.split(|c: char| !(c.is_alphanumeric() || c == '_')).next().map(str::to_string)
+                })
+                .filter(|v| !v.is_empty())
+                .collect()
+        })
+        .unwrap_or_default()
 }
 
 #[cfg(test)]
@@ -363,7 +442,8 @@ mod tests {
         let f = run(&[("rust/src/comm/transport.rs", "std::thread::spawn(|| {});\n")]);
         assert_eq!(f.len(), 1, "{f:?}");
         assert_eq!(f[0].rule, "spawn-outside-pool");
-        let src = "fn main() {}\n#[cfg(test)]\nmod tests {\n  fn t() { std::thread::spawn(|| {}); }\n}\n";
+        let src =
+            "fn main() {}\n#[cfg(test)]\nmod tests {\n  fn t() { std::thread::spawn(|| {}); }\n}\n";
         assert!(run(&[("rust/src/comm/transport.rs", src)]).is_empty());
         assert!(run(&[("rust/tests/pool_extra.rs", "std::thread::spawn(|| {});\n")]).is_empty());
     }
@@ -399,10 +479,52 @@ mod tests {
     }
 
     #[test]
+    fn waived_findings_survive_in_full_output() {
+        let src = "// metric — repro-lint: allow(wall-clock)\nlet t0 = Instant::now();\n";
+        let files = vec![("rust/src/coordinator/trainer.rs".to_string(), src.to_string())];
+        let full = analyze_parsed(&parse_all(&files));
+        assert_eq!(full.len(), 1, "{full:?}");
+        assert!(full[0].waived);
+        assert!(full[0].to_string().contains("(waived)"));
+    }
+
+    #[test]
     fn tokens_in_strings_and_comments_do_not_fire() {
         let src = "// unsafe thread::spawn HashMap div_ceil(8) Instant::now\n\
                    let s = \"unsafe thread::spawn HashMap Instant::now\";\n";
         assert!(run(&[("rust/src/metrics/mod.rs", src)]).is_empty());
+    }
+
+    #[test]
+    fn wildcard_rule_catches_watched_matches_only() {
+        // watched: Msg:: appears in an arm head; `other` is a wildcard
+        let src = "fn f(m: Msg) {\n    match m {\n        Msg::Update { .. } => a(),\n        other => b(other),\n    }\n}\n";
+        let f = run(&[("rust/src/comm/transport.rs", src)]);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!((f[0].rule, f[0].line), ("wildcard", 4));
+        assert!(f[0].msg.contains("Msg"));
+        // exhaustive watched match: clean
+        let src = "fn f(m: LevelKind) {\n    match m {\n        LevelKind::Uniform => a(),\n        LevelKind::Nuq => b(),\n    }\n}\n";
+        assert!(run(&[("rust/src/comm/codec/packed.rs", src)]).is_empty());
+        // unwatched enum: wildcard is fine
+        let src = "fn f(x: Option<u8>) {\n    match x {\n        Some(v) => a(v),\n        _ => b(),\n    }\n}\n";
+        assert!(run(&[("rust/src/comm/transport.rs", src)]).is_empty());
+        // state tags are watched; binding-with-pattern is not a wildcard
+        let src = "fn g(t: u8) {\n    match t {\n        STATE_TAG_EF => a(),\n        t @ (6 | 7) => b(t),\n        t => c(t),\n    }\n}\n";
+        let f = run(&[("rust/src/coordinator/checkpoint.rs", src)]);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!((f[0].rule, f[0].line), ("wildcard", 5));
+        // waiver on the arm line suppresses
+        let src = "fn g(t: u8) {\n    match t {\n        STATE_TAG_EF => a(),\n        // versioned fallback — repro-lint: allow(wildcard)\n        t => c(t),\n    }\n}\n";
+        assert!(run(&[("rust/src/coordinator/checkpoint.rs", src)]).is_empty());
+    }
+
+    #[test]
+    fn wildcard_rule_skips_tests() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn f(m: Msg) {\n        match m { Msg::Update { .. } => a(), _ => b() }\n    }\n}\n";
+        assert!(run(&[("rust/src/comm/transport.rs", src)]).is_empty());
+        let src = "fn f(m: Msg) {\n    match m { Msg::Update { .. } => a(), _ => b() }\n}\n";
+        assert!(run(&[("rust/tests/transport.rs", src)]).is_empty());
     }
 
     #[test]

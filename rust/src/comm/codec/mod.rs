@@ -83,7 +83,7 @@ impl IndexCodec {
     }
 }
 
-/// The per-bucket wire state a [`crate::sparse::SparseUpdate`] carries:
+/// The per-bucket wire state a [`crate::comm::SparseUpdate`] carries:
 /// which codecs actually encoded this bucket this round.  Default
 /// (inactive value payload, inactive rice payload, packed indexing) is
 /// the raw-f32 / `log J` wire format — exactly the PR 4 bucket.

@@ -7,9 +7,9 @@
 //! so a grouped run can report where the budget — and the wire saving
 //! from per-group index widths — actually lands.
 
+use crate::comm::update::{BucketLayout, SparseUpdate};
 use crate::comm::CostModel;
-use crate::grad::GradLayout;
-use crate::sparse::{SparseUpdate, SparseVec};
+use crate::sparse::SparseVec;
 
 /// Traffic observed in one synchronous round.
 #[derive(Clone, Copy, Debug, Default)]
@@ -49,10 +49,11 @@ impl Ledger {
 
     /// Enable per-group accounting for `layout` (called by the trainer
     /// once the worker layout is known).
-    pub fn set_layout(&mut self, layout: &GradLayout) {
-        self.group_names = layout.groups().iter().map(|g| g.name.clone()).collect();
-        self.group_bytes = vec![0; layout.num_groups()];
-        self.group_entries = vec![0; layout.num_groups()];
+    pub fn set_layout(&mut self, layout: &impl BucketLayout) {
+        let n = layout.num_buckets();
+        self.group_names = (0..n).map(|g| layout.bucket_name(g).to_string()).collect();
+        self.group_bytes = vec![0; n];
+        self.group_entries = vec![0; n];
     }
 
     /// Record one worker's bucketed upload for the current round.
@@ -171,6 +172,7 @@ impl Ledger {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::grad::GradLayout;
 
     #[test]
     fn ledger_sums_per_round() {

@@ -17,13 +17,15 @@ pub mod codec;
 mod ledger;
 pub mod quantize;
 mod transport;
+mod update;
 
 pub use codec::WireCost;
 pub use ledger::{Ledger, RoundTraffic};
 pub use quantize::Quantizer;
 pub use transport::{Endpoint, Network};
+pub use update::{BucketLayout, SparseUpdate};
 
-use crate::sparse::{SparseUpdate, SparseVec};
+use crate::sparse::SparseVec;
 use crate::util::json::{obj, Json};
 
 /// Messages exchanged between workers and the server.  Updates travel

@@ -78,7 +78,9 @@ impl Network {
                     slots[worker] = Some(msg);
                     got += 1;
                 }
-                other => panic!("unexpected message at server: {other:?}"),
+                m @ (Msg::Broadcast { .. } | Msg::SparseBroadcast { .. }) => {
+                    panic!("unexpected message at server: {m:?}")
+                }
             }
         }
         slots.into_iter().map(Option::unwrap).collect()
@@ -93,7 +95,8 @@ impl Network {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sparse::{SparseUpdate, SparseVec};
+    use crate::comm::update::SparseUpdate;
+    use crate::sparse::SparseVec;
 
     fn zero_update(dim: usize) -> SparseUpdate {
         SparseUpdate::single(SparseVec::zeros(dim))

@@ -6,8 +6,15 @@
 //! `ceil(log2 group_len)` bits instead of `ceil(log2 J)` (paper §2's
 //! "log J bits" argument applied per group).  The degenerate
 //! single-bucket update ([`SparseUpdate::single`], or any update
-//! conformed to `GradLayout::single`) is byte- and bit-identical to
+//! conformed to a single-group layout) is byte- and bit-identical to
 //! the seed's flat `SparseVec` path.
+//!
+//! The wire format lives in `comm` (it IS the wire), but the shape it
+//! conforms to is owned by higher layers: `grad::GradLayout` carries
+//! the model's parameter-group structure.  To keep the module DAG
+//! pointing down (`comm` must not import `grad`), shaping goes through
+//! the [`BucketLayout`] trait declared here and implemented up-stack
+//! by `GradLayout` — the classic dependency inversion.
 //!
 //! Each bucket carries a [`WirePayload`] slot recording which codecs
 //! of the `comm::codec` stack encoded it this round: packed low-bit
@@ -23,8 +30,25 @@
 #![forbid(unsafe_code)]
 
 use crate::comm::codec::{QuantPayload, RicePayload, WirePayload};
-use crate::grad::GradLayout;
 use crate::sparse::SparseVec;
+
+/// A named partition of a flat parameter vector into contiguous
+/// buckets — the shape contract [`SparseUpdate::conform_to`] and the
+/// traffic ledger consume.  `grad::GradLayout` is the canonical
+/// implementor; `comm` itself never sees the concrete type, keeping
+/// the layering DAG acyclic.
+pub trait BucketLayout {
+    /// Total flat dimension J.
+    fn total(&self) -> usize;
+    /// Number of buckets (parameter groups).
+    fn num_buckets(&self) -> usize;
+    /// Bucket `g`'s name (for per-group ledger tables).
+    fn bucket_name(&self, g: usize) -> &str;
+    /// Bucket `g`'s global offset into the flat vector.
+    fn bucket_offset(&self, g: usize) -> usize;
+    /// Bucket `g`'s length.
+    fn bucket_len(&self, g: usize) -> usize;
+}
 
 /// A bucketed sparse update.  Buckets are ordered by group offset;
 /// each bucket's `dim` is its group length and its indices are local
@@ -48,7 +72,7 @@ impl SparseUpdate {
     }
 
     /// An all-zero update shaped by `layout`.
-    pub fn zeros(layout: &GradLayout) -> Self {
+    pub fn zeros(layout: &impl BucketLayout) -> Self {
         let mut u = SparseUpdate::empty();
         u.conform_to(layout);
         u
@@ -69,14 +93,15 @@ impl SparseUpdate {
     /// steady state).  All buckets come back empty with their group's
     /// dimension and their codec slots inactive (payload word buffers
     /// keep their capacity for the next encoded round).
-    pub fn conform_to(&mut self, layout: &GradLayout) {
+    pub fn conform_to(&mut self, layout: &impl BucketLayout) {
+        let n = layout.num_buckets();
         self.total = layout.total();
         self.offsets.clear();
-        self.offsets.extend(layout.groups().iter().map(|g| g.offset));
-        self.buckets.resize_with(layout.num_groups(), || SparseVec::zeros(0));
-        self.payloads.resize_with(layout.num_groups(), WirePayload::default);
-        for (b, g) in self.buckets.iter_mut().zip(layout.groups()) {
-            b.reset(g.len);
+        self.offsets.extend((0..n).map(|g| layout.bucket_offset(g)));
+        self.buckets.resize_with(n, || SparseVec::zeros(0));
+        self.payloads.resize_with(n, WirePayload::default);
+        for (g, b) in self.buckets.iter_mut().enumerate() {
+            b.reset(layout.bucket_len(g));
         }
         for p in &mut self.payloads {
             p.clear();
@@ -87,7 +112,7 @@ impl SparseUpdate {
     /// dims, total J) with every bucket empty and every codec slot
     /// inactive.  The server-side merge uses this to shape its output
     /// from the incoming worker updates — the server holds no
-    /// `GradLayout` of its own.
+    /// layout of its own.
     pub fn conform_like(&mut self, other: &SparseUpdate) {
         self.total = other.total;
         self.offsets.clear();
@@ -232,6 +257,17 @@ mod tests {
     }
 
     #[test]
+    fn bucket_layout_trait_mirrors_grad_layout() {
+        let layout = two_group_layout();
+        let bl: &dyn BucketLayout = &layout;
+        assert_eq!(bl.total(), 10);
+        assert_eq!(bl.num_buckets(), 2);
+        assert_eq!(bl.bucket_name(0), "a");
+        assert_eq!(bl.bucket_offset(1), 4);
+        assert_eq!(bl.bucket_len(1), 6);
+    }
+
+    #[test]
     fn conform_like_mirrors_shape_without_entries() {
         let layout = two_group_layout();
         let mut src = SparseUpdate::zeros(&layout);
@@ -251,7 +287,7 @@ mod tests {
     #[test]
     fn single_matches_flat_sparsevec() {
         let sv = SparseVec::new(100, vec![3, 50], vec![1.0, -2.0]);
-        let flat_bytes = sv.wire_bytes();
+        let flat_bytes = WireCost::paper().flat(&sv);
         let u = SparseUpdate::single(sv.clone());
         assert_eq!(u.nnz(), 2);
         assert_eq!(WireCost::paper().update(&u), flat_bytes);
@@ -302,8 +338,10 @@ mod tests {
     #[test]
     fn bucketed_indices_are_cheaper_on_the_wire() {
         // 2^20 flat dim -> 20 index bits; two 2^10 groups -> 10 bits.
-        let layout =
-            GradLayout::from_sizes([("a".to_string(), 1 << 10), ("b".to_string(), (1 << 20) - (1 << 10))]);
+        let layout = GradLayout::from_sizes([
+            ("a".to_string(), 1 << 10),
+            ("b".to_string(), (1 << 20) - (1 << 10)),
+        ]);
         let mut grouped = SparseUpdate::zeros(&layout);
         for i in 0..8u32 {
             grouped.bucket_mut(0).push(i, 1.0);

@@ -165,6 +165,21 @@ impl Checkpoint {
 
 // ---- binary codec for the `.ef` sidecar (all little-endian) ---------
 
+// Persisted schema surface: section magics and state tags, extracted
+// into `SCHEMA.lock` by `repro lint --schema`.  Tags are append-only —
+// renumbering or reusing a retired number breaks old checkpoints and
+// is rejected outright by the schema gate (`schema-tag-reuse`).
+const EF_MAGIC: &[u8; 4] = b"RTKS";
+const DLNK_MAGIC: &[u8; 4] = b"DLNK";
+const STATE_TAG_STATELESS: u8 = 0;
+const STATE_TAG_EF: u8 = 1;
+const STATE_TAG_GROUPED: u8 = 2;
+const STATE_TAG_DGC: u8 = 3;
+const STATE_TAG_RESIDUAL: u8 = 4;
+const STATE_TAG_EF_RNG: u8 = 5;
+const STATE_TAG_QUANTIZED: u8 = 6;
+const STATE_TAG_QUANTIZED_AUTO: u8 = 7;
+
 fn put_u32(out: &mut Vec<u8>, v: usize) {
     out.extend_from_slice(&u32::try_from(v).expect("state section too large").to_le_bytes());
 }
@@ -185,29 +200,29 @@ fn encode_ef(out: &mut Vec<u8>, ef: &EfState) {
 
 fn encode_state(out: &mut Vec<u8>, st: &SparsifierState) {
     match st {
-        SparsifierState::Stateless => out.push(0),
+        SparsifierState::Stateless => out.push(STATE_TAG_STATELESS),
         SparsifierState::Ef(ef) => {
-            out.push(1);
+            out.push(STATE_TAG_EF);
             encode_ef(out, ef);
         }
         SparsifierState::Grouped(children) => {
-            out.push(2);
+            out.push(STATE_TAG_GROUPED);
             put_u32(out, children.len());
             for c in children {
                 encode_state(out, c);
             }
         }
         SparsifierState::Dgc { vel, acc } => {
-            out.push(3);
+            out.push(STATE_TAG_DGC);
             put_f32s(out, vel);
             put_f32s(out, acc);
         }
         SparsifierState::Residual { eps } => {
-            out.push(4);
+            out.push(STATE_TAG_RESIDUAL);
             put_f32s(out, eps);
         }
         SparsifierState::EfRng { ef, rng, gauss_spare } => {
-            out.push(5);
+            out.push(STATE_TAG_EF_RNG);
             encode_ef(out, ef);
             for word in rng {
                 out.extend_from_slice(&word.to_le_bytes());
@@ -219,7 +234,10 @@ fn encode_state(out: &mut Vec<u8>, st: &SparsifierState) {
             // tag 6 = scheduled width (byte-identical to the PR 4
             // format, so old checkpoints keep loading); tag 7 adds the
             // residual-steered live width (`bits=auto`)
-            out.push(if auto_bits.is_some() { 7 } else { 6 });
+            out.push(match auto_bits {
+                Some(_) => STATE_TAG_QUANTIZED_AUTO,
+                None => STATE_TAG_QUANTIZED,
+            });
             encode_state(out, inner);
             for word in rng {
                 out.extend_from_slice(&word.to_le_bytes());
@@ -234,7 +252,7 @@ fn encode_state(out: &mut Vec<u8>, st: &SparsifierState) {
 }
 
 fn encode_train_state(st: &TrainState) -> Vec<u8> {
-    let mut out = b"RTKS".to_vec();
+    let mut out = EF_MAGIC.to_vec();
     put_f32s(&mut out, &st.gagg_prev);
     put_u32(&mut out, st.workers.len());
     for w in &st.workers {
@@ -243,7 +261,7 @@ fn encode_train_state(st: &TrainState) -> Vec<u8> {
     // additive downlink section (PR 6): written only when present, so
     // downlink-free runs produce byte-identical sidecars to PR 5
     if let Some(dl) = &st.downlink {
-        out.extend_from_slice(b"DLNK");
+        out.extend_from_slice(DLNK_MAGIC);
         for word in dl.rng {
             out.extend_from_slice(&word.to_le_bytes());
         }
@@ -303,9 +321,9 @@ impl<'a> Cur<'a> {
 
     fn state(&mut self, depth: usize) -> Result<SparsifierState> {
         Ok(match self.u8()? {
-            0 => SparsifierState::Stateless,
-            1 => SparsifierState::Ef(self.ef()?),
-            2 => {
+            STATE_TAG_STATELESS => SparsifierState::Stateless,
+            STATE_TAG_EF => SparsifierState::Ef(self.ef()?),
+            STATE_TAG_GROUPED => {
                 if depth > 1 {
                     bail!("resume state nests groups deeper than the sparsifier stack");
                 }
@@ -316,16 +334,16 @@ impl<'a> Cur<'a> {
                 }
                 SparsifierState::Grouped(children)
             }
-            3 => SparsifierState::Dgc { vel: self.f32s()?, acc: self.f32s()? },
-            4 => SparsifierState::Residual { eps: self.f32s()? },
-            5 => {
+            STATE_TAG_DGC => SparsifierState::Dgc { vel: self.f32s()?, acc: self.f32s()? },
+            STATE_TAG_RESIDUAL => SparsifierState::Residual { eps: self.f32s()? },
+            STATE_TAG_EF_RNG => {
                 let ef = self.ef()?;
                 let rng = [self.u64()?, self.u64()?, self.u64()?, self.u64()?];
                 let has_spare = self.u8()? != 0;
                 let spare = self.f64()?;
                 SparsifierState::EfRng { ef, rng, gauss_spare: has_spare.then_some(spare) }
             }
-            t @ (6 | 7) => {
+            t @ (STATE_TAG_QUANTIZED | STATE_TAG_QUANTIZED_AUTO) => {
                 // a quantizing group wraps exactly one leaf family
                 // state; deeper nesting means a corrupt stream
                 if depth > 2 {
@@ -341,7 +359,8 @@ impl<'a> Cur<'a> {
                 let rng = [self.u64()?, self.u64()?, self.u64()?, self.u64()?];
                 let has_spare = self.u8()? != 0;
                 let spare = self.f64()?;
-                let auto_bits = if t == 7 { Some(self.u32()?) } else { None };
+                let auto_bits =
+                    if t == STATE_TAG_QUANTIZED_AUTO { Some(self.u32()?) } else { None };
                 SparsifierState::Quantized {
                     inner,
                     rng,
@@ -349,6 +368,8 @@ impl<'a> Cur<'a> {
                     auto_bits,
                 }
             }
+            // a future tag must fail the load with a message, not be
+            // silently misdecoded: repro-lint: allow(wildcard)
             t => bail!("unknown resume-state tag {t}"),
         })
     }
@@ -356,7 +377,7 @@ impl<'a> Cur<'a> {
 
 fn decode_train_state(bytes: &[u8]) -> Result<TrainState> {
     let mut c = Cur { b: bytes, i: 0 };
-    if c.take(4)? != b"RTKS" {
+    if c.take(4)? != EF_MAGIC {
         bail!("bad resume-state magic");
     }
     let gagg_prev = c.f32s()?;
@@ -368,7 +389,7 @@ fn decode_train_state(bytes: &[u8]) -> Result<TrainState> {
     let downlink = if c.i == bytes.len() {
         None // pre-PR 6 sidecar: no downlink section
     } else {
-        if c.take(4)? != b"DLNK" {
+        if c.take(4)? != DLNK_MAGIC {
             bail!("bad downlink-state magic");
         }
         let rng = [c.u64()?, c.u64()?, c.u64()?, c.u64()?];

@@ -21,7 +21,7 @@
 
 use crate::comm::codec::{IndexCodec, LevelKind, ValueCodec};
 use crate::grad::GradLayout;
-use crate::sparse::SparseUpdate;
+use crate::comm::SparseUpdate;
 use crate::sparsify::{BitsSpec, PolicyTable, Schedule};
 use crate::util::rng::Rng;
 

@@ -13,7 +13,8 @@
 //! [`Server::force_dense`] for the equivalence tests and benches).
 
 use crate::optim::Optimizer;
-use crate::sparse::{SparseUpdate, SparseVec};
+use crate::comm::SparseUpdate;
+use crate::sparse::SparseVec;
 use crate::util::pool;
 
 /// Below this many total transmitted entries in a bucket the serial

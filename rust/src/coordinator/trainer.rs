@@ -7,7 +7,7 @@ use crate::comm::{Ledger, Msg, Network};
 use crate::config::TrainConfig;
 use crate::coordinator::{DownlinkCodec, GaggMirror, Server, Worker};
 use crate::metrics::{IterRecord, RunLog};
-use crate::sparse::SparseUpdate;
+use crate::comm::SparseUpdate;
 use crate::sparsify::RoundCtx;
 
 /// Optional per-evaluation callback: `(iter, w, record)` — fills
@@ -419,7 +419,7 @@ impl Trainer {
                         lane.w_model.copy_from_slice(&w);
                         lane.mirror.apply(&gagg);
                     }
-                    other => panic!("worker {i}: unexpected {other:?}"),
+                    m @ Msg::Update { .. } => panic!("worker {i}: unexpected {m:?}"),
                 }
                 let loss = lane.worker.compute_grad(&lane.w_model);
                 let ctx = RoundCtx {

@@ -2,7 +2,8 @@
 
 use crate::grad::{GradLayout, GradView};
 use crate::models::GradModel;
-use crate::sparse::{SparseUpdate, SparseVec};
+use crate::comm::SparseUpdate;
+use crate::sparse::SparseVec;
 use crate::sparsify::{RoundCtx, Sparsifier};
 
 /// One worker: computes the local gradient with its [`GradModel`] and

@@ -8,9 +8,12 @@
 //! buckets (arXiv 1911.08772).  [`GradLayout`] carries that structure
 //! through the whole stack: the config declares it, workers carve
 //! their gradients with a [`GradView`], sparsifiers emit one bucket
-//! per group (`sparse::SparseUpdate`), and the ledger accounts wire
+//! per group (`comm::SparseUpdate`), and the ledger accounts wire
 //! bytes with per-group index widths (`ceil(log2 group_len)` bits
-//! instead of `ceil(log2 J)`).
+//! instead of `ceil(log2 J)`).  `comm` itself never names this type:
+//! it consumes the [`crate::comm::BucketLayout`] trait, which
+//! [`GradLayout`] implements below (dependency inversion keeps the
+//! module DAG pointing down).
 //!
 //! The degenerate single-group layout ([`GradLayout::single`]) is the
 //! seed's flat path and is bit-identical to it end to end (pinned by
@@ -183,6 +186,31 @@ impl GradLayout {
             return Err("groups array is empty".to_string());
         }
         Ok(Self::from_sizes(sizes))
+    }
+}
+
+/// `GradLayout` is the canonical shape provider for the wire format:
+/// `comm::SparseUpdate::conform_to` and `comm::Ledger::set_layout`
+/// see it only through this trait.
+impl crate::comm::BucketLayout for GradLayout {
+    fn total(&self) -> usize {
+        self.total
+    }
+
+    fn num_buckets(&self) -> usize {
+        self.groups.len()
+    }
+
+    fn bucket_name(&self, g: usize) -> &str {
+        &self.groups[g].name
+    }
+
+    fn bucket_offset(&self, g: usize) -> usize {
+        self.groups[g].offset
+    }
+
+    fn bucket_len(&self, g: usize) -> usize {
+        self.groups[g].len
     }
 }
 

@@ -9,7 +9,7 @@
 //! [`GradLayout`]/[`GradView`] (see [`layout`]) carve the flat vector
 //! into named parameter groups — the layer-wise gradient API's single
 //! source of truth, consumed by `sparsify::LayerwiseSparsifier` and
-//! the bucketed `sparse::SparseUpdate` wire format.
+//! the bucketed `comm::SparseUpdate` wire format.
 //!
 //! Perf note (EXPERIMENTS.md §Perf): the per-round path is
 //! zero-allocation for the length-J state — `accumulate` writes into

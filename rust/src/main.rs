@@ -23,8 +23,12 @@
 //!                                       server broadcast — codec-only
 //!                                       keys, works flat or grouped)
 //! repro info                          (artifact + platform report)
-//! repro lint   [--root DIR]           (repo-invariant static analyzer;
-//!                                      exit 1 on any finding)
+//! repro lint   [--root DIR] [--json]  (repo-invariant static analyzer;
+//!              [--schema]              exit 1 on any finding; --json
+//!              [--schema-write]        emits machine-readable findings,
+//!                                      --schema prints the canonical
+//!                                      SCHEMA.lock rendering, and
+//!                                      --schema-write regenerates it)
 //! ```
 //!
 //! Every subcommand writes CSV + JSON under `--out` (default
@@ -763,14 +767,21 @@ fn cmd_train(args: Vec<String>) -> i32 {
 fn cmd_lint(args: Vec<String>) -> i32 {
     let p = Cli::new(
         "Repo-invariant static analyzer (the `scripts/ci.sh analyze` gate).\n\
-         Rules: SAFETY comments on every unsafe block/impl/fn, unsafe only\n\
-         in allowlisted modules, no thread::spawn outside the pool, byte\n\
-         accounting only in comm::codec::WireCost, no wall-clock or OS\n\
-         entropy in deterministic paths, every SparsifierKind family in\n\
-         the resume + determinism test matrices.  Waive a single line\n\
-         with a `repro-lint: allow(<rule>)` comment.",
+         Line rules: SAFETY comments on every unsafe block/impl/fn, unsafe\n\
+         only in allowlisted modules, no thread::spawn outside the pool,\n\
+         byte accounting only in comm::codec::WireCost, no wall-clock or\n\
+         OS entropy in deterministic paths, every SparsifierKind family in\n\
+         the resume + determinism test matrices.  Semantic gates: wire/\n\
+         persisted schema drift vs SCHEMA.lock (+ docs/WIRE.md note),\n\
+         module layering over the declared DAG, dead `pub` surface, and\n\
+         literal match exhaustiveness over the wire enums.  Waive a single\n\
+         line with a `repro-lint: allow(<rule>)` comment (layering and\n\
+         schema rules are not waivable).",
     )
     .flag("root", "", "repo root (default: walk up from the current directory)")
+    .switch("json", "machine-readable findings (including waived) on stdout")
+    .switch("schema", "print the canonical SCHEMA.lock rendering and exit")
+    .switch("schema-write", "regenerate SCHEMA.lock from the tree")
     .parse_from(args);
     let p = match p {
         Ok(p) => p,
@@ -791,22 +802,110 @@ fn cmd_lint(args: Vec<String>) -> i32 {
     } else {
         PathBuf::from(p.get("root"))
     };
-    let findings = match regtopk::analysis::analyze_tree(&root) {
+    if p.get_bool("schema") || p.get_bool("schema-write") {
+        return cmd_lint_schema(&root, p.get_bool("schema-write"));
+    }
+    // timing the analyzer is observability, not a deterministic path:
+    // repro-lint: allow(wall-clock)
+    let t0 = std::time::Instant::now();
+    let report = match regtopk::analysis::analyze_tree_full(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("lint: cannot walk {}: {e}", root.display());
+            return 2;
+        }
+    };
+    let elapsed_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let failing = report.failing().count();
+    let waived = report.findings.len() - failing;
+    if p.get_bool("json") {
+        println!("{}", findings_json(&report.findings));
+    } else {
+        for f in report.failing() {
+            println!("{f}");
+        }
+    }
+    let verdict = if failing == 0 { "clean" } else { "FAIL" };
+    eprintln!(
+        "lint: {verdict} — {failing} finding(s), {waived} waived, {} rules, \
+         {} files in {elapsed_ms:.0} ms (root {})",
+        regtopk::analysis::RULES.len(),
+        report.files_scanned,
+        root.display()
+    );
+    i32::from(failing != 0)
+}
+
+/// `repro lint --schema` / `--schema-write`: print or rewrite the
+/// canonical `SCHEMA.lock` rendering of the tree.  CI pipes `--schema`
+/// into `cmp - SCHEMA.lock`, which is the determinism acceptance check.
+fn cmd_lint_schema(root: &Path, write: bool) -> i32 {
+    let files = match regtopk::analysis::read_tree(root) {
         Ok(f) => f,
         Err(e) => {
             eprintln!("lint: cannot walk {}: {e}", root.display());
             return 2;
         }
     };
-    if findings.is_empty() {
-        println!("lint: clean ({} rules, root {})", regtopk::analysis::RULES.len(), root.display());
-        return 0;
+    let parsed = regtopk::analysis::extract::parse_all(&files);
+    if write {
+        return match regtopk::analysis::schema::write_lock(root, &parsed) {
+            Ok(note) => {
+                println!("{note}");
+                0
+            }
+            Err(e) => {
+                eprintln!("lint: {e}");
+                1
+            }
+        };
     }
-    for f in &findings {
-        println!("{f}");
+    let (text, findings) = regtopk::analysis::schema::render_for_tree(root, &parsed);
+    if !findings.is_empty() {
+        for f in &findings {
+            eprintln!("{f}");
+        }
+        return 1;
     }
-    eprintln!("lint: {} finding(s)", findings.len());
-    1
+    print!("{text}");
+    0
+}
+
+/// Serialize findings as a JSON array (stable key order; the repo's
+/// own minimal escaping — messages are ASCII by construction).
+fn findings_json(findings: &[regtopk::analysis::Finding]) -> String {
+    let esc = |s: &str| {
+        let mut out = String::with_capacity(s.len());
+        for c in s.chars() {
+            match c {
+                '"' => out.push_str("\\\""),
+                '\\' => out.push_str("\\\\"),
+                '\n' => out.push_str("\\n"),
+                c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                c => out.push(c),
+            }
+        }
+        out
+    };
+    let rows: Vec<String> = findings
+        .iter()
+        .map(|f| {
+            format!(
+                "  {{\"rule\": \"{}\", \"file\": \"{}\", \"line\": {}, \
+                 \"waived\": {}, \"msg\": \"{}\"}}",
+                esc(f.rule),
+                esc(&f.path),
+                f.line,
+                f.waived,
+                esc(&f.msg)
+            )
+        })
+        .collect();
+    if rows.is_empty() {
+        "[]".to_string()
+    } else {
+        format!("[\n{}\n]", rows.join(",\n"))
+    }
 }
 
 fn cmd_info(_args: Vec<String>) -> i32 {

@@ -39,7 +39,7 @@ impl Schedule {
     }
 }
 
-use crate::sparse::SparseUpdate;
+use crate::comm::SparseUpdate;
 
 /// A gradient-descent optimizer applied to the flat parameter vector.
 pub trait Optimizer: Send {

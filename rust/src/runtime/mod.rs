@@ -13,7 +13,7 @@
 
 mod manifest;
 
-pub use manifest::{ArtifactSpec, DType, Manifest, ModelInfo};
+pub use manifest::{ArtifactSpec, DType, InputSpec, Manifest, ModelInfo};
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};

@@ -13,22 +13,17 @@
 //! - [`engine`] — the sharded zero-allocation engine: fused
 //!   score+select over the persistent thread pool, bit-identical to
 //!   the serial selectors for every shard count.
-//! - [`SparseUpdate`] — the bucketed wire format of the layer-wise
-//!   API: one `SparseVec` per parameter group with group-local
-//!   indices (cheaper index bits per entry).
 //!
-//! Encoding a bucket into bytes — packed low-bit values, entropy-coded
-//! indices, and ALL byte accounting — lives in `comm::codec` (the
-//! pluggable wire-codec stack); buckets here only carry the codec
-//! slots (`comm::codec::WirePayload`) the encoders write into.
+//! The bucketed wire format built on top of `SparseVec`
+//! (`comm::SparseUpdate`, one bucket per parameter group) and all
+//! encoding/byte accounting live one layer up in `comm` — this module
+//! is the substrate below the wire and imports nothing from it.
 
 pub mod approx;
 pub mod engine;
 pub mod topk;
-mod update;
 mod vec;
 
 pub use engine::SelectEngine;
 pub use topk::{select_topk, topk_threshold};
-pub use update::SparseUpdate;
 pub use vec::SparseVec;

@@ -118,14 +118,6 @@ impl SparseVec {
         self.val.iter().map(|v| v * v).sum::<f32>().sqrt()
     }
 
-    /// Wire size in bytes under the paper's FIXED §2 format: 4 bytes
-    /// per f32 value + ceil(log2 J)/8 bytes per index ("the index can
-    /// be losslessly represented by log J bits").  Routes through the
-    /// one byte accountant, `comm::codec::WireCost`.
-    pub fn wire_bytes(&self) -> usize {
-        crate::comm::codec::WireCost::paper().flat(self)
-    }
-
     /// Dot with a dense vector.
     pub fn dot(&self, dense: &[f32]) -> f32 {
         debug_assert_eq!(dense.len(), self.dim);
@@ -183,17 +175,6 @@ mod tests {
                 assert_eq!(out[i], expect);
             }
         });
-    }
-
-    #[test]
-    fn wire_bytes_matches_cost_model() {
-        // dim 100 -> 7 index bits; 10 entries * (32+7) bits = 390 bits = 49 bytes
-        let sv = SparseVec::new(100, (0..10).collect(), vec![1.0; 10]);
-        assert_eq!(sv.wire_bytes(), 49);
-        // dim 2^17 -> 17 bits; 1 entry * 49 bits -> 7 bytes
-        let sv = SparseVec::new(1 << 17, vec![0], vec![1.0]);
-        assert_eq!(sv.wire_bytes(), 7);
-        assert_eq!(SparseVec::zeros(10).wire_bytes(), 0);
     }
 
     #[test]

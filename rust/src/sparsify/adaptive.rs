@@ -111,6 +111,7 @@ impl Sparsifier for AdaK {
                 self.eps.copy_from_slice(eps);
                 Ok(())
             }
+            // foreign-family states must error: repro-lint: allow(wildcard)
             other => Err(format!("adak cannot import '{}' state", other.kind())),
         }
     }

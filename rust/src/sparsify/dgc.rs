@@ -163,6 +163,7 @@ impl Sparsifier for Dgc {
                 self.acc.copy_from_slice(acc);
                 Ok(())
             }
+            // foreign-family states must error: repro-lint: allow(wildcard)
             other => Err(format!("dgc cannot import '{}' state", other.kind())),
         }
     }

@@ -74,6 +74,7 @@ impl Sparsifier for GlobalTopK {
     fn import_state(&mut self, st: &SparsifierState) -> Result<(), String> {
         match st {
             SparsifierState::Ef(ef) => self.ef.restore(ef),
+            // foreign-family states must error: repro-lint: allow(wildcard)
             other => Err(format!("gtopk cannot import '{}' state", other.kind())),
         }
     }

@@ -50,7 +50,8 @@
 use crate::comm::codec::{index_bits, IndexCodec, LevelKind, QuantPayload, ValueCodec, WireCost};
 use crate::grad::{GradLayout, GradView};
 use crate::sparse::engine::MIN_SHARDED_DIM;
-use crate::sparse::{SparseUpdate, SparseVec};
+use crate::comm::SparseUpdate;
+use crate::sparse::SparseVec;
 use crate::sparsify::{
     build, BitsSpec, GroupPolicy, PolicyTable, RoundCtx, Schedule, Sparsifier, SparsifierKind,
     SparsifierState,
@@ -872,6 +873,7 @@ impl Sparsifier for LayerwiseSparsifier {
                 }
                 Ok(())
             }
+            // foreign-family states must error: repro-lint: allow(wildcard)
             other => Err(format!("layerwise cannot import '{}' state", other.kind())),
         }
     }

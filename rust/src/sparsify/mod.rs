@@ -17,7 +17,7 @@
 //!
 //! The layer-wise API (journal follow-up, arXiv 2501.05633) layers on
 //! top of the family: [`Sparsifier::step_group_into`] consumes a
-//! `grad::GradView` and emits a bucketed `sparse::SparseUpdate`;
+//! `grad::GradView` and emits a bucketed `comm::SparseUpdate`;
 //! [`LayerwiseSparsifier`] wraps any family as one independent child
 //! per `grad::GradLayout` group with budgets from a [`BudgetPolicy`].
 
@@ -37,14 +37,15 @@ pub use dense::Dense;
 pub use dgc::Dgc;
 pub use global_topk::GlobalTopK;
 pub use layerwise::{BudgetPolicy, LayerwiseSparsifier};
-pub use policy::{glob_match, BitsSpec, GroupPolicy, PolicyRule, PolicyTable, Schedule};
+pub use policy::{glob_match, BitsSpec, GroupPolicy, POLICY_KEYS, PolicyRule, PolicyTable, Schedule};
 pub use randk::RandK;
 pub use regtopk::RegTopK;
 pub use threshold::Threshold;
 pub use topk::TopK;
 
 use crate::grad::{EfState, GradView};
-use crate::sparse::{SparseUpdate, SparseVec};
+use crate::comm::SparseUpdate;
+use crate::sparse::SparseVec;
 
 /// The persistent (checkpointable) state a sparsifier carries across
 /// rounds.  Scratch buffers (scores, selection lists, engines) are
@@ -180,6 +181,7 @@ pub trait Sparsifier: Send {
     fn import_state(&mut self, st: &SparsifierState) -> Result<(), String> {
         match st {
             SparsifierState::Stateless => Ok(()),
+            // foreign-family states must error: repro-lint: allow(wildcard)
             other => Err(format!(
                 "'{}' carries no persistent state, got '{}'",
                 self.name(),

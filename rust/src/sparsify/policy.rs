@@ -33,6 +33,16 @@ use crate::comm::codec::{IndexCodec, LevelKind};
 use crate::sparsify::{SparsifierKind, SparsifierParams};
 use crate::util::json::{obj, Json};
 
+/// The full policy-table keyspace — every key the CLI spec grammar and
+/// the JSON round-trip accept.  This is persisted-schema surface
+/// (`SCHEMA.lock` pins it): run manifests and checkpoints written
+/// today must keep parsing, so keys are append-only and renames are a
+/// documented `docs/WIRE.md` schema bump.
+pub const POLICY_KEYS: &[&str] = &[
+    "match", "family", "k", "mu", "q", "tau", "seed", "momentum", "clip", "ratio", "k_min",
+    "k_max", "bits", "idx", "levels", "eta",
+];
+
 /// A per-round hyperparameter schedule.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Schedule {
@@ -510,10 +520,6 @@ impl PolicyTable {
     }
 
     pub fn from_json(j: &Json) -> Result<Self, String> {
-        const KEYS: [&str; 16] = [
-            "match", "family", "k", "mu", "q", "tau", "seed", "momentum", "clip", "ratio",
-            "k_min", "k_max", "bits", "idx", "levels", "eta",
-        ];
         let arr = j.as_arr().ok_or("policy must be a JSON array")?;
         let mut rules = Vec::new();
         for (i, entry) in arr.iter().enumerate() {
@@ -523,7 +529,7 @@ impl PolicyTable {
             let m = entry
                 .as_obj()
                 .ok_or_else(|| format!("policy[{i}] must be an object"))?;
-            if let Some(bad) = m.keys().find(|k| !KEYS.contains(&k.as_str())) {
+            if let Some(bad) = m.keys().find(|k| !POLICY_KEYS.contains(&k.as_str())) {
                 return Err(format!("policy[{i}] has unknown key '{bad}'"));
             }
             let pattern = entry

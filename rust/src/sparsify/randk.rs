@@ -63,6 +63,7 @@ impl Sparsifier for RandK {
                 self.rng = Rng::from_state(*rng, *gauss_spare);
                 Ok(())
             }
+            // foreign-family states must error: repro-lint: allow(wildcard)
             other => Err(format!("randk cannot import '{}' state", other.kind())),
         }
     }

@@ -18,7 +18,7 @@ use crate::sparse::{select_topk, SelectEngine, SparseVec};
 use crate::sparsify::{RoundCtx, Sparsifier, SparsifierState};
 
 /// Must equal ref.DIV_EPS on the python side.
-pub const DIV_EPS: f32 = 1e-30;
+const DIV_EPS: f32 = 1e-30;
 
 pub struct RegTopK {
     k: usize,
@@ -242,6 +242,7 @@ impl Sparsifier for RegTopK {
     fn import_state(&mut self, st: &SparsifierState) -> Result<(), String> {
         match st {
             SparsifierState::Ef(ef) => self.ef.restore(ef),
+            // foreign-family states must error: repro-lint: allow(wildcard)
             other => Err(format!("regtopk cannot import '{}' state", other.kind())),
         }
     }

@@ -58,6 +58,7 @@ impl Sparsifier for Threshold {
     fn import_state(&mut self, st: &SparsifierState) -> Result<(), String> {
         match st {
             SparsifierState::Ef(ef) => self.ef.restore(ef),
+            // foreign-family states must error: repro-lint: allow(wildcard)
             other => Err(format!("threshold cannot import '{}' state", other.kind())),
         }
     }

@@ -82,6 +82,7 @@ impl Sparsifier for TopK {
     fn import_state(&mut self, st: &SparsifierState) -> Result<(), String> {
         match st {
             SparsifierState::Ef(ef) => self.ef.restore(ef),
+            // foreign-family states must error: repro-lint: allow(wildcard)
             other => Err(format!("topk cannot import '{}' state", other.kind())),
         }
     }

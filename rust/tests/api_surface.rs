@@ -1,0 +1,221 @@
+//! Public-API smoke test (PR 8 dead-pub gate companion): every item
+//! here is part of the crate's intended surface — experiment drivers,
+//! wire/resume types, and the small numeric utilities — and is
+//! exercised end-to-end from outside the crate so the analyzer's
+//! `dead-pub` rule sees a real cross-module reference, not a waiver.
+
+use std::path::Path;
+
+use regtopk::comm::codec::{quant_levels, QuantPayload, WirePayload};
+use regtopk::comm::quantize::Quantizer;
+use regtopk::comm::{CostModel, Ledger, RoundTraffic};
+use regtopk::coordinator::{
+    Checkpoint, DownlinkCodec, DownlinkState, EvalFn, RoundResult, TrainState,
+};
+use regtopk::data::cifar_like::{load_cifar10_bin, CLASSES};
+use regtopk::data::linear::{generate, least_squares, solve_dense};
+use regtopk::experiments::baselines::BaselineRow;
+use regtopk::experiments::comm_table::{CommRow, MeasuredRow};
+use regtopk::experiments::fig2::{run_curve_sharded, trainer_sharded};
+use regtopk::experiments::fig3::{degraded_layout, Fig3Run};
+use regtopk::experiments::sweeps::{hetero_layout, sweep_params, DownlinkRow, HeteroRow};
+use regtopk::grad::{GradLayout, GroupSpec};
+use regtopk::metrics::{IterRecord, RunLog};
+use regtopk::optim::Adam;
+use regtopk::runtime::{ArtifactSpec, DType, InputSpec, Manifest, ModelInfo};
+use regtopk::sparsify::{
+    glob_match, GroupPolicy, POLICY_KEYS, PolicyRule, PolicyTable, SparsifierKind, SparsifierState,
+};
+use regtopk::util::bench::BenchResult;
+use regtopk::util::check::default_cases;
+use regtopk::util::json::{Json, ParseError};
+use regtopk::util::rng::{Rng, SplitMix64};
+
+#[test]
+fn wire_payload_and_quant_levels() {
+    let wp = WirePayload::default();
+    assert!(!wp.raw_index, "default payload is the raw-f32 bucket");
+    assert_eq!(wp.value, QuantPayload::default());
+    assert_eq!(quant_levels(4), 7);
+    assert_eq!(quant_levels(2), 1);
+}
+
+#[test]
+fn quantizer_returns_finite_scale() {
+    let q = Quantizer::new(4);
+    let mut vals = [1.0f32, -0.5, 0.25, 0.0];
+    let mut rng = Rng::seed_from(7);
+    let scale = q.quantize(&mut vals, &mut rng);
+    assert!(scale.is_finite() && scale > 0.0);
+}
+
+#[test]
+fn ledger_closes_rounds_with_traffic() {
+    let mut led = Ledger::new(CostModel::default());
+    led.close_round(0, 10, 2);
+    let rt: &RoundTraffic = &led.rounds()[0];
+    assert_eq!(rt.round, 0);
+    assert!(rt.download_bytes > 0, "broadcast cost × workers is never free");
+}
+
+#[test]
+fn checkpoint_state_roundtrips() {
+    let dir = std::env::temp_dir().join(format!("regtopk-api-surface-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let path = dir.join("ck.json");
+    let state = TrainState {
+        gagg_prev: vec![0.5, -1.0],
+        workers: vec![SparsifierState::Stateless],
+        downlink: Some(DownlinkState { rng: [1, 2, 3, 4], gauss_spare: None }),
+    };
+    let ck = Checkpoint::with_state(3, vec![0.25, 0.75], Json::parse("{}").unwrap(), state);
+    ck.save(&path).expect("save");
+    let back = Checkpoint::load(&path).expect("load");
+    assert_eq!(back, ck, "save∘load is the identity, downlink section included");
+    let legacy = Checkpoint::new(1, vec![1.0], Json::parse("{}").unwrap());
+    assert_eq!(legacy.state, None);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn downlink_codec_accepts_empty_policy() {
+    // unmatched groups broadcast raw, so the empty table is the
+    // lossless default
+    let table = PolicyTable::new(Vec::new()).expect("empty policy table");
+    let layout = hetero_layout();
+    assert_eq!(layout.total(), 60);
+    let _codec = DownlinkCodec::new(&table, &layout, 9);
+    assert_eq!(degraded_layout("mlp").total(), 378);
+}
+
+#[test]
+fn eval_fn_is_object_safe() {
+    let mut rec = IterRecord::new(3);
+    let mut eval: Box<EvalFn> = Box::new(|t, w, r| {
+        r.loss = w[0] + t as f32;
+    });
+    eval(1, &[0.5], &mut rec);
+    assert_eq!(rec.loss, 1.5);
+    let rr = RoundResult { t: 1, mean_loss: 0.5, upload_bytes: 640 };
+    assert_eq!((rr.t, rr.upload_bytes), (1, 640));
+}
+
+#[test]
+fn linear_testbed_solves_and_trains() {
+    let problem = generate(sweep_params(2), 11);
+    let ls = least_squares(&problem.shards);
+    assert_eq!(ls.len(), problem.params.dim);
+    for (a, b) in ls.iter().zip(&problem.w_star) {
+        assert!((a - b).abs() < 1e-4, "least_squares matches the stored optimum");
+    }
+
+    let mut a = [2.0f64, 0.0, 0.0, 2.0];
+    let mut b = [2.0f64, 4.0];
+    solve_dense(&mut a, &mut b, 2);
+    assert!((b[0] - 1.0).abs() < 1e-12 && (b[1] - 2.0).abs() < 1e-12);
+
+    let _tr = trainer_sharded(&problem, SparsifierKind::TopK { k: 4 }, 0.05, 1);
+    let log = run_curve_sharded(&problem, SparsifierKind::Dense, "dense-smoke", 2, 0.05, 1);
+    assert_eq!(log.name, "dense-smoke");
+}
+
+#[test]
+fn experiment_rows_construct() {
+    let run = Fig3Run { log: RunLog::new("fig3", Json::parse("{}").unwrap()), groups: Vec::new() };
+    assert!(run.groups.is_empty());
+    assert_eq!(run.log.name, "fig3");
+
+    let hr = HeteroRow {
+        name: "regtopk".to_string(),
+        final_gap: 0.1,
+        bytes_per_round: 64,
+        entries_per_round: 8,
+    };
+    let dr = DownlinkRow {
+        name: "sparse".to_string(),
+        final_gap: 0.2,
+        up_bytes_per_round: 32,
+        down_bytes_per_round: 16,
+    };
+    let br =
+        BaselineRow { name: "topk".to_string(), final_gap: 0.3, bytes_per_round: 48, mean_k: 4.0 };
+    let cr = CommRow {
+        model: "mlp".to_string(),
+        dim: 128,
+        s: 0.01,
+        symbols_per_epoch: 10.0,
+        bytes_per_epoch: 40.0,
+        compression: 3.2,
+        idx_bound_bits: 7.0,
+        rice_bits: 6.5,
+    };
+    let mr = MeasuredRow { name: "dense".to_string(), up_bytes: 512, down_bytes: 512, sim_s: 0.25 };
+    assert!(hr.bytes_per_round > dr.down_bytes_per_round);
+    assert!(br.mean_k > 0.0 && cr.compression > 1.0 && mr.sim_s > 0.0);
+}
+
+#[test]
+fn grad_layout_exposes_group_specs() {
+    let gl = GradLayout::from_sizes(vec![("a".to_string(), 4), ("b".to_string(), 6)]);
+    let g: &GroupSpec = &gl.groups()[1];
+    assert_eq!((g.name.as_str(), g.offset, g.len), ("b", 4, 6));
+    assert_eq!(gl.total(), 10);
+}
+
+#[test]
+fn adam_defaults_match_the_paper() {
+    let adam = Adam::new(4, 0.1);
+    assert_eq!((adam.beta1, adam.beta2), (0.9, 0.999));
+    assert!(adam.eps > 0.0);
+}
+
+#[test]
+fn manifest_registry_is_typed() {
+    let mut man = Manifest::default();
+    man.artifacts.insert(
+        "loss".to_string(),
+        ArtifactSpec {
+            file: "loss.hlo".to_string(),
+            inputs: vec![InputSpec { shape: vec![32, 10], dtype: DType::F32 }],
+            outputs: 1,
+            doc: "smoke fixture".to_string(),
+        },
+    );
+    assert_eq!(man.artifacts["loss"].inputs[0].dtype, DType::F32);
+    let none: Option<&ModelInfo> = man.models.get("mlp");
+    assert!(none.is_none());
+    assert!(Manifest::load(Path::new("/nonexistent/manifest.json")).is_err());
+}
+
+#[test]
+fn cifar_loader_and_classes() {
+    assert_eq!(CLASSES, 10);
+    assert!(load_cifar10_bin(Path::new("/nonexistent-cifar"), &["data_batch_1.bin"]).is_none());
+}
+
+#[test]
+fn policy_surface_globs_and_keys() {
+    assert!(POLICY_KEYS.contains(&"bits") && POLICY_KEYS.contains(&"match"));
+    assert!(glob_match("conv*", "conv1"));
+    assert!(!glob_match("fc", "conv"));
+    let rule = PolicyRule { pattern: "conv*".to_string(), policy: GroupPolicy::default() };
+    let table = PolicyTable::new(vec![rule]).expect("one-rule table");
+    assert_eq!(table.rules().len(), 1);
+}
+
+#[test]
+fn small_utilities_hold() {
+    let b = BenchResult { name: "flatten".to_string(), median_s: 0.001, elems: 1024 };
+    assert!(b.median_s > 0.0 && b.elems > 0);
+    assert!(default_cases() >= 1);
+
+    let err: ParseError = Json::parse("{ nope").unwrap_err();
+    assert!(!err.msg.is_empty());
+    assert!(err.pos <= "{ nope".len());
+
+    let mut a = SplitMix64(42);
+    let mut b2 = SplitMix64(42);
+    assert_eq!(a.next_u64(), b2.next_u64());
+    let mut c = SplitMix64(43);
+    assert_ne!(a.next_u64(), c.next_u64());
+}

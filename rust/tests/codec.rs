@@ -26,7 +26,8 @@ use regtopk::config::TrainConfig;
 use regtopk::data::linear::{generate, LinearParams};
 use regtopk::experiments::fig2;
 use regtopk::grad::{GradLayout, GradView};
-use regtopk::sparse::{SparseUpdate, SparseVec};
+use regtopk::comm::SparseUpdate;
+use regtopk::sparse::SparseVec;
 use regtopk::sparsify::{
     BudgetPolicy, LayerwiseSparsifier, PolicyTable, RoundCtx, Sparsifier, SparsifierKind,
 };

@@ -18,7 +18,7 @@ use regtopk::coordinator::Checkpoint;
 use regtopk::data::linear::{generate, LinearParams};
 use regtopk::experiments::fig2;
 use regtopk::grad::{GradLayout, GradView};
-use regtopk::sparse::SparseUpdate;
+use regtopk::comm::SparseUpdate;
 use regtopk::sparsify::{
     build, BudgetPolicy, LayerwiseSparsifier, PolicyTable, RoundCtx, Sparsifier,
     SparsifierKind,

@@ -18,13 +18,13 @@
 //! 4. per-group `eta` scaling steps the scaled slice harder without
 //!    touching the broadcast aggregate.
 
-use regtopk::comm::codec::{index_bits, QuantPayload};
+use regtopk::comm::codec::{index_bits, QuantPayload, WireCost};
 use regtopk::comm::{CostModel, Ledger};
 use regtopk::config::TrainConfig;
 use regtopk::data::linear::{generate, LinearParams};
 use regtopk::experiments::fig2;
 use regtopk::grad::{GradLayout, GradView};
-use regtopk::sparse::SparseUpdate;
+use regtopk::comm::SparseUpdate;
 use regtopk::sparsify::{
     BudgetPolicy, LayerwiseSparsifier, PolicyTable, RoundCtx, Sparsifier, SparsifierKind,
 };
@@ -136,7 +136,7 @@ fn bits_override_works_for_every_family() {
                         assert_eq!(q.decode(), bucket.values(), "{kind:?} t={t} g={gi}");
                         // packing only happens when it pays on the wire
                         assert!(
-                            q.wire_bytes(index_bits(bucket.dim())) < bucket.wire_bytes(),
+                            q.wire_bytes(index_bits(bucket.dim())) < WireCost::paper().flat(bucket),
                             "{kind:?} t={t} g={gi}"
                         );
                     }
@@ -145,7 +145,7 @@ fn bits_override_works_for_every_family() {
                         // would not shrink this bucket
                         assert!(
                             QuantPayload::bytes_for(bucket.nnz(), 4, index_bits(bucket.dim()))
-                                >= bucket.wire_bytes(),
+                                >= WireCost::paper().flat(bucket),
                             "{kind:?} t={t} g={gi}: raw bucket though packing would pay"
                         );
                     }

@@ -1,0 +1,294 @@
+//! Integration gates for the PR 8 semantic analysis pass: the golden
+//! SCHEMA lock fixture, one seeded violation per new rule (tag
+//! renumber, layer cycle, wildcard match), and the item-extractor
+//! surface those gates are built on.  `analysis::tests` covers the
+//! rule internals; this file pins the *public* analyzer API that
+//! `repro lint` and scripts/ci.sh drive.
+
+use std::path::Path;
+
+use regtopk::analysis::extract::{
+    extract, is_wildcard_head, parse_all, strip_guard, ConstItem, EnumItem, FileItems, MatchArm,
+    MatchSite, PubItem, SourceFile, StructItem, UseEdge,
+};
+use regtopk::analysis::graph::{dead_pubs, layering, module_of, LAYERS};
+use regtopk::analysis::lexer::{has_word, split, Line};
+use regtopk::analysis::rules::{analyze_parsed, parse_kind_variants};
+use regtopk::analysis::schema::{check_tree, compare, current, parse_lock, render, Schema, Section};
+use regtopk::analysis::{
+    analyze_sources, analyze_tree_full, read_tree, Finding, RULES, TreeReport, UNSAFE_ALLOWLIST,
+};
+
+fn src_files(files: &[(&str, &str)]) -> Vec<(String, String)> {
+    files.iter().map(|(p, s)| ((*p).to_string(), (*s).to_string())).collect()
+}
+
+#[test]
+fn lexer_separates_three_channels() {
+    let lines = split("let tag = \"RTKS\"; // trailing note\nlet c = 'x';\n");
+    let l: &Line = &lines[0];
+    assert!(!l.code.contains("RTKS"), "string contents are blanked in code: {:?}", l.code);
+    assert!(l.text.contains("RTKS"), "string contents survive in text: {:?}", l.text);
+    assert!(l.comment.contains("trailing note"));
+    assert!(!l.code.contains("trailing"), "comments never reach the code channel");
+    assert!(has_word(&l.code, "tag"));
+    assert!(!has_word("foobar", "foo"), "has_word is identifier-bounded");
+    assert!(has_word("a.quantize(x)", "quantize"));
+    // char literal on line 2 is blanked but keeps token structure
+    assert!(lines[1].code.contains('\''));
+    assert!(!lines[1].code.contains('x'));
+}
+
+#[test]
+fn extractor_builds_the_item_model() {
+    let src = concat!(
+        "pub const MAGIC: &[u8; 4] = b\"RTKS\";\n",
+        "\n",
+        "pub enum Wire {\n",
+        "    Dense { w: Vec<f32> },\n",
+        "    Sparse(u32),\n",
+        "}\n",
+        "\n",
+        "pub struct Pkt {\n",
+        "    pub seq: u32,\n",
+        "    crc: u32,\n",
+        "}\n",
+        "\n",
+        "use crate::util::json;\n",
+        "\n",
+        "fn route(m: u32) -> u32 {\n",
+        "    match m {\n",
+        "        0 => 1,\n",
+        "        n if n > 9 => 9,\n",
+        "        other => other,\n",
+        "    }\n",
+        "}\n",
+    );
+    let file = SourceFile::parse("rust/src/comm/fixture.rs", src);
+    let items: FileItems = extract(&file);
+
+    let e: &EnumItem = &items.enums[0];
+    assert_eq!(e.name, "Wire");
+    assert_eq!(e.variants.len(), 2);
+    assert_eq!(e.variants[0].0, "Dense { w: Vec<f32> }");
+
+    let s: &StructItem = &items.structs[0];
+    assert_eq!(s.name, "Pkt");
+    assert_eq!(s.fields.len(), 2);
+
+    let c: &ConstItem = &items.consts[0];
+    assert_eq!(c.name, "MAGIC");
+    assert!(c.value.contains("RTKS"), "text channel keeps the literal: {:?}", c.value);
+
+    let m: &MatchSite = &items.matches[0];
+    assert_eq!(m.arms.len(), 3);
+    let guarded: &MatchArm = &m.arms[1];
+    assert_eq!(strip_guard(&guarded.head), "n");
+    assert!(is_wildcard_head(&m.arms[2].head));
+    assert!(is_wildcard_head("_"));
+    assert!(!is_wildcard_head("Wire::Dense { .. }"));
+    assert!(!is_wildcard_head("true"), "bool matches are exhaustive without wildcards");
+
+    let u: &UseEdge = &items.uses[0];
+    assert_eq!(u.module, "util");
+
+    let p: &PubItem = &items.pubs[0];
+    assert_eq!((p.kind.as_str(), p.name.as_str()), ("const", "MAGIC"));
+    let names: Vec<&str> = items.pubs.iter().map(|p| p.name.as_str()).collect();
+    assert_eq!(names, ["MAGIC", "Wire", "Pkt"], "private `route` is not a pub item");
+}
+
+#[test]
+fn wildcard_gate_fires_and_waives() {
+    let bad = concat!(
+        "fn route(m: &Msg) -> u32 {\n",
+        "    match m {\n",
+        "        Msg::Dense { .. } => 1,\n",
+        "        _ => 0,\n",
+        "    }\n",
+        "}\n",
+    );
+    let files = src_files(&[("rust/src/comm/fixture.rs", bad)]);
+    let f = analyze_sources(&files);
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert_eq!((f[0].rule, f[0].line), ("wildcard", 4));
+
+    let waived =
+        bad.replace("        _ => 0,", "        // repro-lint: allow(wildcard)\n        _ => 0,");
+    let files = src_files(&[("rust/src/comm/fixture.rs", waived.as_str())]);
+    assert!(analyze_sources(&files).is_empty(), "waiver clears the gate");
+    let all = analyze_parsed(&parse_all(&files));
+    assert!(
+        all.iter().any(|f| f.rule == "wildcard" && f.waived),
+        "waived finding stays visible for --json: {all:?}"
+    );
+}
+
+#[test]
+fn layering_gate_rejects_upward_edges_and_cycles() {
+    let files = src_files(&[
+        ("rust/src/util/fixture.rs", "use crate::comm::Msg;\n"),
+        ("rust/src/comm/fixture.rs", "use crate::util::json;\n"),
+    ]);
+    let mut findings: Vec<Finding> = Vec::new();
+    layering(&parse_all(&files), &mut findings);
+    assert!(
+        findings
+            .iter()
+            .any(|f| f.rule == "layering" && f.msg.contains("`util` (layer 0) → `comm` (layer 2)")),
+        "{findings:?}"
+    );
+    assert!(
+        findings.iter().any(|f| f.msg.contains("module dependency cycle")),
+        "util → comm → util is a cycle: {findings:?}"
+    );
+
+    let files = src_files(&[("rust/src/widgets/fixture.rs", "use crate::util::json;\n")]);
+    let mut findings = Vec::new();
+    layering(&parse_all(&files), &mut findings);
+    assert!(
+        findings.iter().any(|f| f.rule == "layering" && f.msg.contains("not in the declared DAG")),
+        "unregistered module is rejected: {findings:?}"
+    );
+
+    assert_eq!(module_of("rust/src/comm/codec/mod.rs"), Some("comm"));
+    assert_eq!(module_of("rust/src/lib.rs"), Some("lib"));
+    assert_eq!(module_of("rust/tests/schema_gate.rs"), None, "tests are outside the DAG");
+    assert!(LAYERS.iter().any(|&(m, l)| m == "util" && l == 0), "util is the bottom layer");
+}
+
+#[test]
+fn dead_pub_gate_wants_a_cross_module_reference() {
+    let orphan = ("rust/src/util/fixture.rs", "pub fn widget_helper() -> u32 { 7 }\n");
+    let mut findings = Vec::new();
+    dead_pubs(&parse_all(&src_files(&[orphan])), &mut findings);
+    assert!(
+        findings.iter().any(|f| f.rule == "dead-pub" && f.msg.contains("widget_helper")),
+        "{findings:?}"
+    );
+
+    let caller_src = "fn call() -> u32 { crate::util::fixture::widget_helper() }\n";
+    let caller = ("rust/src/comm/fixture.rs", caller_src);
+    let mut findings = Vec::new();
+    dead_pubs(&parse_all(&src_files(&[orphan, caller])), &mut findings);
+    assert!(findings.is_empty(), "a reference from another module clears it: {findings:?}");
+}
+
+#[test]
+fn schema_lock_renders_and_parses_golden_fixture() {
+    let schema = Schema {
+        sections: vec![
+            Section {
+                header: "enum Msg @ rust/src/comm/transport.rs".to_string(),
+                entries: vec![
+                    "Dense { w: Vec<f32> }".to_string(),
+                    "Sparse(SparseUpdate)".to_string(),
+                ],
+            },
+            Section {
+                header: "tags checkpoint @ rust/src/coordinator/checkpoint.rs".to_string(),
+                entries: vec!["STATE_TAG_EF = 1".to_string(), "STATE_TAG_RAND = 2".to_string()],
+            },
+        ],
+    };
+    let text = render(&schema, 3);
+    assert!(text.starts_with('#'), "lock leads with the comment header");
+    assert!(text.contains("\nversion = 3\n"));
+    assert!(text.contains(
+        "\n[enum Msg @ rust/src/comm/transport.rs]\nDense { w: Vec<f32> }\nSparse(SparseUpdate)\n"
+    ));
+    let (v, parsed) = parse_lock(&text).expect("canonical text parses");
+    assert_eq!(v, 3);
+    assert_eq!(parsed, schema);
+    assert_eq!(render(&parsed, 3), text, "render∘parse is the identity");
+    assert!(parse_lock("STATE_TAG_EF = 1\n").is_none(), "entry before any section header");
+}
+
+#[test]
+fn tag_renumbering_is_rejected_outright() {
+    let lock = Schema {
+        sections: vec![Section {
+            header: "tags checkpoint @ rust/src/coordinator/checkpoint.rs".to_string(),
+            entries: vec!["STATE_TAG_EF = 1".to_string(), "STATE_TAG_RAND = 2".to_string()],
+        }],
+    };
+    // seeded violation: the two tags swap values
+    let mut cur = lock.clone();
+    cur.sections[0].entries =
+        vec!["STATE_TAG_EF = 2".to_string(), "STATE_TAG_RAND = 1".to_string()];
+    let mut findings = Vec::new();
+    compare(&lock, &cur, &mut findings);
+    assert!(
+        findings
+            .iter()
+            .any(|f| f.rule == "schema-tag-reuse" && f.msg.contains("STATE_TAG_EF")),
+        "renumber names the tag: {findings:?}"
+    );
+
+    // a new variant is plain drift, named and actionable
+    let mut cur2 = lock.clone();
+    cur2.sections[0].entries.push("STATE_TAG_NEW = 3".to_string());
+    let mut f2 = Vec::new();
+    compare(&lock, &cur2, &mut f2);
+    assert!(
+        f2.iter()
+            .any(|f| f.rule == "schema-drift"
+                && f.msg.contains("STATE_TAG_NEW")
+                && f.msg.contains("added")),
+        "{f2:?}"
+    );
+
+    let mut f3 = Vec::new();
+    compare(&lock, &lock.clone(), &mut f3);
+    assert!(f3.is_empty(), "identical schemas compare clean");
+}
+
+#[test]
+fn tree_schema_extraction_is_deterministic() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let files = read_tree(root).expect("tree walk");
+    let parsed = parse_all(&files);
+    let (cur1, f1) = current(&parsed);
+    assert!(f1.is_empty(), "all schema source items are present: {f1:?}");
+    let (cur2, _) = current(&parse_all(&read_tree(root).expect("tree walk")));
+    assert_eq!(render(&cur1, 1), render(&cur2, 1), "same tree → byte-identical lock");
+    assert!(cur1.sections.iter().any(|s| s.header.starts_with("enum Msg ")));
+}
+
+#[test]
+fn missing_lockfile_is_a_finding() {
+    let dir = std::env::temp_dir().join(format!("regtopk-schema-gate-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let mut findings = Vec::new();
+    check_tree(&dir, &parse_all(&[]), &mut findings);
+    assert!(
+        findings.iter().any(|f| f.rule == "schema-drift" && f.msg.contains("SCHEMA.lock missing")),
+        "{findings:?}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn full_tree_gate_is_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report: TreeReport = analyze_tree_full(root).expect("tree walk");
+    assert!(report.files_scanned > 50, "scanned {} files", report.files_scanned);
+    let failing: Vec<&Finding> = report.failing().collect();
+    assert!(failing.is_empty(), "analyzer findings on the repo tree: {failing:?}");
+
+    assert_eq!(RULES.len(), 12);
+    let new_rules =
+        ["wildcard", "layering", "dead-pub", "schema-drift", "schema-tag-reuse", "schema-doc"];
+    for rule in new_rules {
+        assert!(RULES.contains(&rule), "missing rule id {rule}");
+    }
+    for path in UNSAFE_ALLOWLIST {
+        assert!(path.starts_with("rust/src/"), "allowlist entries are src paths: {path}");
+    }
+}
+
+#[test]
+fn kind_variant_shim_reads_the_enum() {
+    let src = "pub enum SparsifierKind {\n    Dense,\n    TopK { k: usize },\n}\n";
+    assert_eq!(parse_kind_variants(src), ["Dense", "TopK"]);
+}

@@ -43,6 +43,18 @@ run_analyze() {
     echo "== ci/analyze: repro lint =="
     cargo build --release --bin repro
     target/release/repro lint
+    echo "== ci/analyze: SCHEMA.lock is the canonical rendering =="
+    # byte-for-byte: same tree -> same lockfile (tentpole acceptance
+    # criterion; any drift means a format changed without the
+    # SCHEMA.lock + docs/WIRE.md update)
+    target/release/repro lint --schema | cmp - SCHEMA.lock || {
+        echo "FAIL: SCHEMA.lock is stale — regenerate with 'repro lint --schema-write'"
+        echo "      and document the change under a '## vN' heading in docs/WIRE.md"
+        exit 1
+    }
+    # machine-readable findings (waived ones included) for the
+    # workflow's lint.json artifact upload
+    target/release/repro lint --json > lint.json
 }
 
 run_verify() {
