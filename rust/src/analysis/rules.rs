@@ -11,6 +11,7 @@
 //! | `unsafe-allowlist`  | `unsafe` appears only in the allowlisted module set   |
 //! | `spawn-outside-pool`| `thread::spawn` only in `util/pool.rs` (or tests)     |
 //! | `byte-accounting`   | bits→bytes (`div_ceil(8)`) only inside `comm/codec/`  |
+//! | `net-outside-transport` | `std::net` sockets only in `comm/transport.rs`    |
 //! | `wall-clock`        | no wall-clock/OS-entropy calls in deterministic paths |
 //! | `kind-matrix`       | every `SparsifierKind` family in both test matrices   |
 //! | `wildcard`          | no `_`/binding arm in matches over wire enums/tags    |
@@ -45,6 +46,7 @@ pub const RULES: &[&str] = &[
     "unsafe-allowlist",
     "spawn-outside-pool",
     "byte-accounting",
+    "net-outside-transport",
     "wall-clock",
     "kind-matrix",
     "wildcard",
@@ -68,6 +70,15 @@ pub const UNSAFE_ALLOWLIST: &[&str] = &[
     "rust/src/runtime/mod.rs",
     "rust/tests/pool_audit.rs",
 ];
+
+/// Socket-API tokens confined to the transport module.  Every other
+/// file reaches peers through the `comm::Transport` trait, so the
+/// framing and byte-accounting invariants (frames carry exactly the
+/// ledger-charged bytes) cannot be bypassed by a stray socket.
+const NET_TOKENS: &[&str] = &["TcpStream", "TcpListener", "UnixStream", "UnixListener"];
+
+/// The one non-test file allowed to touch `std::net` directly.
+const NET_FILE: &str = "rust/src/comm/transport.rs";
 
 /// Wall-clock / OS-entropy / iteration-order tokens that must not
 /// appear in deterministic paths.  `HashMap`/`HashSet` are here for
@@ -97,7 +108,7 @@ const KIND_ENUM_FILE: &str = "rust/src/sparsify/mod.rs";
 /// literally exhaustive: a new wire/persisted variant must fail to
 /// compile at every decode site, not fall into a `_` arm.
 const WATCHED_ENUMS: &[&str] =
-    &["SparsifierKind", "SparsifierState", "Msg", "LevelKind", "IndexCodec"];
+    &["SparsifierKind", "SparsifierState", "Msg", "LevelKind", "IndexCodec", "FrameKind"];
 
 /// One analyzer finding.  `line` is 1-based; 0 means the finding is
 /// about the file (or the tree) as a whole.  `waived` findings are
@@ -191,6 +202,23 @@ fn scan_file(file: &SourceFile, findings: &mut Vec<Finding>) {
                       the persistent pool, not spawn per call"
                     .to_string(),
                 waived: file.has_waiver(idx, "spawn-outside-pool"),
+            });
+        }
+
+        if !in_test
+            && path != NET_FILE
+            && (line.code.contains("std::net")
+                || NET_TOKENS.iter().any(|t| has_word(&line.code, t)))
+        {
+            findings.push(Finding {
+                rule: "net-outside-transport",
+                path: path.to_string(),
+                line: n,
+                msg: "direct socket use outside comm/transport.rs — peers are \
+                      reached only through the `comm::Transport` trait so the \
+                      framing and byte-accounting invariants hold by construction"
+                    .to_string(),
+                waived: file.has_waiver(idx, "net-outside-transport"),
             });
         }
 
@@ -454,6 +482,24 @@ mod tests {
         assert_eq!(f.len(), 1, "{f:?}");
         assert_eq!(f[0].rule, "byte-accounting");
         assert!(run(&[("rust/src/comm/codec/cost.rs", "let b = x.div_ceil(8);\n")]).is_empty());
+    }
+
+    #[test]
+    fn net_rule_confines_sockets_to_the_transport_module() {
+        let f = run(&[("rust/src/coordinator/trainer.rs", "let s = TcpStream::connect(a);\n")]);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "net-outside-transport");
+        let f = run(&[("rust/src/main.rs", "use std::net::TcpListener;\n")]);
+        assert_eq!(f.len(), 1, "one finding per offending line: {f:?}");
+        assert_eq!(f[0].rule, "net-outside-transport");
+        // the transport module itself, and test code anywhere, are free
+        let ok = "use std::net::{TcpListener, TcpStream};\n";
+        assert!(run(&[("rust/src/comm/transport.rs", ok)]).is_empty());
+        assert!(run(&[("rust/tests/transport.rs", ok)]).is_empty());
+        // waivable like the other line rules
+        let src = "// fixture server — repro-lint: allow(net-outside-transport)\n\
+                   let l = UnixListener::bind(p);\n";
+        assert!(run(&[("rust/src/util/bench.rs", src)]).is_empty());
     }
 
     #[test]

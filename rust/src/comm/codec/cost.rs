@@ -16,7 +16,8 @@
 //! `bits` policy engaged (pinned by `rust/tests/codec.rs`).
 
 use super::index_bits;
-use crate::sparse::{SparseUpdate, SparseVec};
+use crate::comm::update::SparseUpdate;
+use crate::sparse::SparseVec;
 
 /// Byte accountant parameterized by the link's raw value width
 /// (`CostModel::value_bits`; 32 for f32, 16 models half-precision

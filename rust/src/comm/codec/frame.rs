@@ -1,0 +1,821 @@
+//! Versioned byte-level wire framing for [`Msg`] — the serialization
+//! seam of the networked transport (`comm::transport::Tcp`).
+//!
+//! Every frame is a fixed 20-byte header followed by a length-prefixed
+//! payload:
+//!
+//! ```text
+//! magic "RTKW" (4) | version u16 LE (2) | kind u8 | pad u8 = 0
+//! round u32 LE (4) | worker u32 LE (4)  | payload len u32 LE (4)
+//! ```
+//!
+//! The payload splits into a STRUCTURAL part (shape: bucket offsets,
+//! dims, nnz counts, codec flags — bytes a real system would fold into
+//! its session state) and a CHARGED part that mirrors
+//! [`WireCost`]'s accounting byte-for-byte: for every bucket the
+//! charged segment's length equals `WireCost::paper().bucket(..)`
+//! exactly, so socket byte counters and the traffic [`Ledger`] agree
+//! by construction (ISSUE 9 acceptance criterion).  `encode`
+//! debug-asserts that equality on every bucket.
+//!
+//! Bit-level layouts reuse the codec stack's LSB-first convention
+//! (`rice::put_bits`): packed value codes are the [`QuantPayload`]
+//! stream verbatim, Rice index streams are the [`RicePayload`] words
+//! re-emitted as little-endian bytes.  Decode is lossless — a decoded
+//! update re-encodes to identical bytes — and returns `Err` (never
+//! panics) on torn frames, short reads, or corrupt streams.
+//!
+//! [`Ledger`]: crate::comm::Ledger
+
+#![forbid(unsafe_code)]
+
+use super::{index_bits, LevelKind, QuantPayload, WireCost};
+use crate::comm::update::{BucketLayout, SparseUpdate};
+use crate::comm::Msg;
+
+/// Frame magic: "RegTopK Wire".
+pub const FRAME_MAGIC: &[u8; 4] = b"RTKW";
+/// Handshake magic: "RegTopK Hello" (sent once per connection, before
+/// any frame; not itself a frame).
+pub const HELLO_MAGIC: &[u8; 4] = b"RTKH";
+/// Wire schema version carried by every frame header (v1 was the
+/// in-process era with no byte framing; see docs/WIRE.md).
+pub const WIRE_VERSION: u16 = 2;
+/// Fixed frame-header size in bytes.
+pub const FRAME_HEADER_BYTES: usize = 20;
+/// Fixed handshake size in bytes: magic + version u16 + worker u32.
+pub const HELLO_BYTES: usize = 10;
+
+/// Payload kind carried in the frame header.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameKind {
+    /// Worker → server sparsified update (`Msg::Update`).
+    Update,
+    /// Server → worker dense broadcast (`Msg::Broadcast`).
+    Broadcast,
+    /// Server → worker downlink-coded broadcast (`Msg::SparseBroadcast`).
+    SparseBroadcast,
+}
+
+impl FrameKind {
+    fn as_byte(self) -> u8 {
+        match self {
+            FrameKind::Update => 0,
+            FrameKind::Broadcast => 1,
+            FrameKind::SparseBroadcast => 2,
+        }
+    }
+
+    fn from_byte(b: u8) -> Result<Self, String> {
+        match b {
+            0 => Ok(FrameKind::Update),
+            1 => Ok(FrameKind::Broadcast),
+            2 => Ok(FrameKind::SparseBroadcast),
+            _ => Err(format!("unknown frame kind byte {b}")),
+        }
+    }
+}
+
+/// Decoded frame header.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FrameHeader {
+    pub kind: FrameKind,
+    pub round: u32,
+    pub worker: u32,
+    /// Payload length in bytes (the header's own 20 bytes excluded).
+    pub len: u32,
+}
+
+/// Byte accounting of one encoded/decoded frame: `bytes` is the full
+/// frame size on the socket, `wire` the [`WireCost`]-charged subset.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FrameStats {
+    pub bytes: usize,
+    pub wire: usize,
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// LSB-first bit appender over a byte buffer (same bit order as the
+/// codec stack's `put_bits`, so packed streams re-emit verbatim).
+#[derive(Default)]
+struct BitWriter {
+    bytes: Vec<u8>,
+    bits: usize,
+}
+
+impl BitWriter {
+    fn put(&mut self, value: u32, bits: usize) {
+        debug_assert!(bits <= 32);
+        for k in 0..bits {
+            let pos = self.bits + k;
+            if pos / 8 == self.bytes.len() {
+                self.bytes.push(0);
+            }
+            if (value >> k) & 1 == 1 {
+                self.bytes[pos / 8] |= 1 << (pos % 8);
+            }
+        }
+        self.bits += bits;
+    }
+}
+
+/// LSB-first bit reader over a byte slice; every read is bounds
+/// checked so torn frames surface as `Err`, not panics.
+struct BitReader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> BitReader<'a> {
+    fn new(bytes: &'a [u8]) -> Self {
+        BitReader { bytes, pos: 0 }
+    }
+
+    fn get(&mut self, bits: usize) -> Result<u32, String> {
+        debug_assert!(bits <= 32);
+        let mut v = 0u32;
+        for k in 0..bits {
+            let p = self.pos + k;
+            if p / 8 >= self.bytes.len() {
+                return Err("torn frame: bit stream truncated".to_string());
+            }
+            v |= (((self.bytes[p / 8] >> (p % 8)) & 1) as u32) << k;
+        }
+        self.pos += bits;
+        Ok(v)
+    }
+
+    /// Bytes consumed so far, rounded up to whole bytes.
+    fn consumed_bytes(&self) -> usize {
+        self.pos.div_ceil(8)
+    }
+}
+
+/// Bounds-checked sequential reader over a payload slice.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.remaining() < n {
+            return Err(format!(
+                "torn frame: need {n} bytes at offset {}, only {} left",
+                self.pos,
+                self.remaining()
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn f32(&mut self) -> Result<f32, String> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn rest(&self) -> &'a [u8] {
+        &self.buf[self.pos..]
+    }
+
+    fn advance(&mut self, n: usize) -> Result<(), String> {
+        self.take(n).map(|_| ())
+    }
+}
+
+/// A frame-local [`BucketLayout`] rebuilt from the structural section;
+/// buckets are nameless on the wire (names are config-side metadata).
+struct WireShape {
+    offsets: Vec<usize>,
+    dims: Vec<usize>,
+    total: usize,
+}
+
+impl BucketLayout for WireShape {
+    fn total(&self) -> usize {
+        self.total
+    }
+
+    fn num_buckets(&self) -> usize {
+        self.offsets.len()
+    }
+
+    fn bucket_name(&self, _g: usize) -> &str {
+        ""
+    }
+
+    fn bucket_offset(&self, g: usize) -> usize {
+        self.offsets[g]
+    }
+
+    fn bucket_len(&self, g: usize) -> usize {
+        self.dims[g]
+    }
+}
+
+/// Encode `msg` as one framed byte vector.  Returns the bytes plus
+/// their [`FrameStats`]; the `wire` component equals what the traffic
+/// ledger charges for the same message (`WireCost::paper()`
+/// accounting; model-weight halves of broadcasts are structural).
+pub fn encode_msg(msg: &Msg) -> (Vec<u8>, FrameStats) {
+    let (kind, round, worker) = match msg {
+        Msg::Update { worker, round, .. } => (FrameKind::Update, *round, *worker),
+        Msg::Broadcast { round, .. } => (FrameKind::Broadcast, *round, 0),
+        Msg::SparseBroadcast { round, .. } => (FrameKind::SparseBroadcast, *round, 0),
+    };
+    let mut out = Vec::with_capacity(FRAME_HEADER_BYTES + 64);
+    out.extend_from_slice(FRAME_MAGIC);
+    out.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+    out.push(kind.as_byte());
+    out.push(0);
+    put_u32(&mut out, round as u32);
+    put_u32(&mut out, worker as u32);
+    put_u32(&mut out, 0); // payload length, patched below
+    let wire = match msg {
+        Msg::Update { update, loss, .. } => {
+            put_f32(&mut out, *loss);
+            encode_update(update, &mut out)
+        }
+        Msg::Broadcast { gagg, .. } => {
+            put_u32(&mut out, gagg.len() as u32);
+            for &v in gagg {
+                put_f32(&mut out, v);
+            }
+            // the broadcast vector is [w | gagg_prev]: the model half
+            // is session state, only the aggregate half is charged
+            4 * (gagg.len() / 2)
+        }
+        Msg::SparseBroadcast { w, gagg, .. } => {
+            put_u32(&mut out, w.len() as u32);
+            for &v in w {
+                put_f32(&mut out, v);
+            }
+            encode_update(gagg, &mut out)
+        }
+    };
+    let len = (out.len() - FRAME_HEADER_BYTES) as u32;
+    out[16..20].copy_from_slice(&len.to_le_bytes());
+    let stats = FrameStats { bytes: out.len(), wire };
+    (out, stats)
+}
+
+/// Append `up`'s wire encoding; returns the charged byte count
+/// (defined equal to `WireCost::paper().update(up)`).
+fn encode_update(up: &SparseUpdate, out: &mut Vec<u8>) -> usize {
+    let wc = WireCost::paper();
+    put_u32(out, up.total_dim() as u32);
+    put_u32(out, up.num_buckets() as u32);
+    let mut charged = 0usize;
+    for g in 0..up.num_buckets() {
+        let b = up.bucket(g);
+        put_u32(out, up.offset(g) as u32);
+        put_u32(out, b.dim() as u32);
+        put_u32(out, b.nnz() as u32);
+        if b.nnz() == 0 {
+            // empty buckets carry no codec state: WireCost charges 0
+            // with or without active slots, and an empty payload's
+            // scale/param header cannot ride for free
+            out.push(0);
+            continue;
+        }
+        let quant = up.quant(g);
+        let rice = up.rice(g);
+        let raw = up.raw_index(g);
+        let mut flags = 0u8;
+        if quant.is_some() {
+            flags |= 1;
+        }
+        if rice.is_some() {
+            flags |= 2;
+        }
+        if raw {
+            flags |= 4;
+        }
+        out.push(flags);
+        if let Some(q) = quant {
+            out.push(q.bits() as u8);
+            out.push(match q.level_kind() {
+                LevelKind::Uniform => 0,
+                LevelKind::Nuq => 1,
+            });
+        }
+        let start = out.len();
+        if let Some(rp) = rice {
+            // values first (codes or raw f32), then the Rice stream
+            if let Some(q) = quant {
+                put_f32(out, q.scale());
+                let mut bw = BitWriter::default();
+                for i in 0..b.nnz() {
+                    bw.put(q.code(i), q.bits());
+                }
+                out.extend_from_slice(&bw.bytes);
+            } else {
+                for &v in b.values() {
+                    put_f32(out, v);
+                }
+            }
+            out.push(rp.param() as u8);
+            let nbytes = rp.bit_len().div_ceil(8);
+            let words = rp.words();
+            for j in 0..nbytes {
+                out.push(((words[j / 4] >> (8 * (j % 4))) & 0xFF) as u8);
+            }
+        } else {
+            let ib = if raw { 32 } else { index_bits(b.dim()) };
+            let mut bw = BitWriter::default();
+            if let Some(q) = quant {
+                put_f32(out, q.scale());
+                for (i, &idx) in b.indices().iter().enumerate() {
+                    bw.put(q.code(i), q.bits());
+                    bw.put(idx, ib);
+                }
+            } else {
+                for (&idx, &v) in b.indices().iter().zip(b.values()) {
+                    bw.put(v.to_bits(), 32);
+                    bw.put(idx, ib);
+                }
+            }
+            out.extend_from_slice(&bw.bytes);
+        }
+        let seg = out.len() - start;
+        debug_assert_eq!(
+            seg,
+            wc.bucket(up, g),
+            "bucket {g}: charged frame bytes disagree with WireCost"
+        );
+        charged += seg;
+    }
+    debug_assert_eq!(charged, wc.update(up));
+    charged
+}
+
+/// Parse and validate a frame header (exactly
+/// [`FRAME_HEADER_BYTES`] bytes).
+pub fn decode_header(buf: &[u8]) -> Result<FrameHeader, String> {
+    if buf.len() != FRAME_HEADER_BYTES {
+        return Err(format!("frame header needs {FRAME_HEADER_BYTES} bytes, got {}", buf.len()));
+    }
+    if &buf[0..4] != FRAME_MAGIC {
+        return Err(format!("bad frame magic {:?}", &buf[0..4]));
+    }
+    let version = u16::from_le_bytes([buf[4], buf[5]]);
+    if version != WIRE_VERSION {
+        return Err(format!("wire version {version} != supported {WIRE_VERSION}"));
+    }
+    let kind = FrameKind::from_byte(buf[6])?;
+    if buf[7] != 0 {
+        return Err(format!("nonzero header pad byte {}", buf[7]));
+    }
+    Ok(FrameHeader {
+        kind,
+        round: u32::from_le_bytes([buf[8], buf[9], buf[10], buf[11]]),
+        worker: u32::from_le_bytes([buf[12], buf[13], buf[14], buf[15]]),
+        len: u32::from_le_bytes([buf[16], buf[17], buf[18], buf[19]]),
+    })
+}
+
+/// Decode a payload under its header into a [`Msg`], returning the
+/// charged wire bytes alongside.  Lossless: re-encoding the result
+/// reproduces the input frame byte-for-byte.
+pub fn decode_payload(h: &FrameHeader, payload: &[u8]) -> Result<(Msg, usize), String> {
+    if payload.len() != h.len as usize {
+        return Err(format!("payload is {} bytes, header says {}", payload.len(), h.len));
+    }
+    let mut cur = Cursor::new(payload);
+    let (msg, wire) = match h.kind {
+        FrameKind::Update => {
+            let loss = cur.f32()?;
+            let (update, wire) = decode_update(&mut cur)?;
+            (
+                Msg::Update {
+                    worker: h.worker as usize,
+                    round: h.round as usize,
+                    update,
+                    loss,
+                },
+                wire,
+            )
+        }
+        FrameKind::Broadcast => {
+            let n = cur.u32()? as usize;
+            let gagg = decode_f32s(&mut cur, n)?;
+            (Msg::Broadcast { round: h.round as usize, gagg }, 4 * (n / 2))
+        }
+        FrameKind::SparseBroadcast => {
+            let n = cur.u32()? as usize;
+            let w = decode_f32s(&mut cur, n)?;
+            let (gagg, wire) = decode_update(&mut cur)?;
+            (Msg::SparseBroadcast { round: h.round as usize, w, gagg }, wire)
+        }
+    };
+    if cur.remaining() != 0 {
+        return Err(format!("{} trailing bytes after payload", cur.remaining()));
+    }
+    Ok((msg, wire))
+}
+
+/// Decode a whole frame (header + payload) in one call.
+pub fn decode_msg(frame: &[u8]) -> Result<(Msg, FrameStats), String> {
+    if frame.len() < FRAME_HEADER_BYTES {
+        return Err(format!("short frame: {} bytes", frame.len()));
+    }
+    let h = decode_header(&frame[..FRAME_HEADER_BYTES])?;
+    let (msg, wire) = decode_payload(&h, &frame[FRAME_HEADER_BYTES..])?;
+    Ok((msg, FrameStats { bytes: frame.len(), wire }))
+}
+
+fn decode_f32s(cur: &mut Cursor, n: usize) -> Result<Vec<f32>, String> {
+    if cur.remaining() < n * 4 {
+        return Err(format!("torn frame: {n} f32s need {} bytes", n * 4));
+    }
+    (0..n).map(|_| cur.f32()).collect()
+}
+
+fn decode_update(cur: &mut Cursor) -> Result<(SparseUpdate, usize), String> {
+    let total = cur.u32()? as usize;
+    let n_buckets = cur.u32()? as usize;
+    // 13 bytes is the smallest possible bucket record
+    if n_buckets * 13 > cur.remaining() + 13 {
+        return Err(format!("torn frame: {n_buckets} buckets cannot fit"));
+    }
+    struct DecBucket {
+        indices: Vec<u32>,
+        values: Vec<f32>,
+        quant: Option<(usize, f32, LevelKind, Vec<u32>)>,
+        rice: bool,
+        raw: bool,
+    }
+    let mut shape = WireShape { offsets: Vec::new(), dims: Vec::new(), total };
+    let mut dec: Vec<DecBucket> = Vec::new();
+    let mut prev_end = 0usize;
+    let mut charged = 0usize;
+    for g in 0..n_buckets {
+        let off = cur.u32()? as usize;
+        let dim = cur.u32()? as usize;
+        let nnz = cur.u32()? as usize;
+        if off < prev_end || off + dim > total {
+            return Err(format!("bucket {g}: span {off}+{dim} outside [{prev_end}, {total}]"));
+        }
+        prev_end = off + dim;
+        if nnz > dim {
+            return Err(format!("bucket {g}: nnz {nnz} > dim {dim}"));
+        }
+        let flags = cur.u8()?;
+        if flags & !0b111 != 0 {
+            return Err(format!("bucket {g}: unknown flag bits {flags:#x}"));
+        }
+        if nnz == 0 && flags != 0 {
+            return Err(format!("bucket {g}: empty bucket with codec flags {flags:#x}"));
+        }
+        shape.offsets.push(off);
+        shape.dims.push(dim);
+        let (has_quant, has_rice, raw) = (flags & 1 != 0, flags & 2 != 0, flags & 4 != 0);
+        if nnz == 0 {
+            dec.push(DecBucket {
+                indices: Vec::new(),
+                values: Vec::new(),
+                quant: None,
+                rice: false,
+                raw: false,
+            });
+            continue;
+        }
+        let qmeta = if has_quant {
+            let bits = cur.u8()? as usize;
+            if !(2..=16).contains(&bits) {
+                return Err(format!("bucket {g}: quant bit width {bits} outside 2..=16"));
+            }
+            let levels = match cur.u8()? {
+                0 => LevelKind::Uniform,
+                1 => LevelKind::Nuq,
+                b => return Err(format!("bucket {g}: unknown level-family byte {b}")),
+            };
+            Some((bits, levels))
+        } else {
+            None
+        };
+        let start = cur.pos;
+        let (indices, values, quant) = if has_rice {
+            let (values, quant) = match qmeta {
+                Some((bits, levels)) => {
+                    let scale = cur.f32()?;
+                    let mut br = BitReader::new(cur.rest());
+                    let mut codes = Vec::with_capacity(nnz);
+                    for _ in 0..nnz {
+                        codes.push(br.get(bits)?);
+                    }
+                    cur.advance((nnz * bits).div_ceil(8))?;
+                    (Vec::new(), Some((bits, scale, levels, codes)))
+                }
+                None => (decode_f32s(cur, nnz)?, None),
+            };
+            let indices = decode_rice_stream(cur, nnz, dim, g)?;
+            (indices, values, quant)
+        } else {
+            let ib = if raw { 32 } else { index_bits(dim) };
+            let mut br = BitReader::new(cur.rest());
+            let mut indices = Vec::with_capacity(nnz);
+            let (values, quant) = match qmeta {
+                Some((bits, levels)) => {
+                    let scale = cur.f32()?;
+                    let mut br = BitReader::new(cur.rest());
+                    let mut codes = Vec::with_capacity(nnz);
+                    for _ in 0..nnz {
+                        codes.push(br.get(bits)?);
+                        indices.push(br.get(ib)?);
+                    }
+                    cur.advance((nnz * (bits + ib)).div_ceil(8))?;
+                    (Vec::new(), Some((bits, scale, levels, codes)))
+                }
+                None => {
+                    let mut values = Vec::with_capacity(nnz);
+                    for _ in 0..nnz {
+                        values.push(f32::from_bits(br.get(32)?));
+                        indices.push(br.get(ib)?);
+                    }
+                    cur.advance((nnz * (32 + ib)).div_ceil(8))?;
+                    (values, None)
+                }
+            };
+            (indices, values, quant)
+        };
+        for (j, &i) in indices.iter().enumerate() {
+            let ok = (i as usize) < dim && (j == 0 || indices[j - 1] < i);
+            if !ok {
+                return Err(format!("bucket {g}: index stream not strictly increasing in-range"));
+            }
+        }
+        charged += cur.pos - start;
+        dec.push(DecBucket { indices, values, quant, rice: has_rice, raw });
+    }
+    let mut up = SparseUpdate::empty();
+    up.conform_to(&shape);
+    for (g, db) in dec.iter().enumerate() {
+        match &db.quant {
+            Some((bits, scale, levels, codes)) => {
+                let (b, q) = up.bucket_quant_mut(g);
+                q.encode_with_levels(*bits, *scale, codes, *levels);
+                for (j, &i) in db.indices.iter().enumerate() {
+                    b.push(i, q.decode_value(j));
+                }
+            }
+            None => {
+                let b = up.bucket_mut(g);
+                for (&i, &v) in db.indices.iter().zip(&db.values) {
+                    b.push(i, v);
+                }
+            }
+        }
+        if db.rice {
+            // deterministic re-encode: best_param is a pure function
+            // of the index list, so the payload matches the sender's
+            up.payload_mut(g).rice.encode_into(&db.indices);
+        }
+        up.payload_mut(g).raw_index = db.raw;
+    }
+    debug_assert_eq!(charged, WireCost::paper().update(&up));
+    Ok((up, charged))
+}
+
+/// Decode one bucket's Rice stream (param byte + bit-packed gaps) and
+/// advance the cursor past exactly the bytes the encoder emitted.
+fn decode_rice_stream(
+    cur: &mut Cursor,
+    nnz: usize,
+    dim: usize,
+    g: usize,
+) -> Result<Vec<u32>, String> {
+    let r = cur.u8()? as usize;
+    if r >= 32 {
+        return Err(format!("bucket {g}: rice parameter {r} out of range"));
+    }
+    let mut br = BitReader::new(cur.rest());
+    let mut indices = Vec::with_capacity(nnz);
+    let mut prev: u64 = 0;
+    for j in 0..nnz {
+        let mut q: u64 = 0;
+        while br.get(1)? == 1 {
+            q += 1;
+            if q as usize > dim {
+                return Err(format!("bucket {g}: runaway rice quotient"));
+            }
+        }
+        let rem = br.get(r)? as u64;
+        let d = (q << r) | rem;
+        prev = if j == 0 { d } else { prev + d + 1 };
+        if prev as usize >= dim {
+            return Err(format!("bucket {g}: rice index {prev} >= dim {dim}"));
+        }
+        indices.push(prev as u32);
+    }
+    let consumed = br.consumed_bytes();
+    cur.advance(consumed)?;
+    Ok(indices)
+}
+
+/// The per-connection handshake a worker sends before its first
+/// frame: magic + wire version + worker id.
+pub fn encode_hello(worker: u32) -> [u8; HELLO_BYTES] {
+    let mut out = [0u8; HELLO_BYTES];
+    out[0..4].copy_from_slice(HELLO_MAGIC);
+    out[4..6].copy_from_slice(&WIRE_VERSION.to_le_bytes());
+    out[6..10].copy_from_slice(&worker.to_le_bytes());
+    out
+}
+
+/// Parse and validate a handshake, returning the worker id.
+pub fn decode_hello(buf: &[u8]) -> Result<u32, String> {
+    if buf.len() != HELLO_BYTES {
+        return Err(format!("handshake needs {HELLO_BYTES} bytes, got {}", buf.len()));
+    }
+    if &buf[0..4] != HELLO_MAGIC {
+        return Err(format!("bad handshake magic {:?}", &buf[0..4]));
+    }
+    let version = u16::from_le_bytes([buf[4], buf[5]]);
+    if version != WIRE_VERSION {
+        return Err(format!("handshake version {version} != supported {WIRE_VERSION}"));
+    }
+    Ok(u32::from_le_bytes([buf[6], buf[7], buf[8], buf[9]]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::codec::ValueCodec;
+    use crate::grad::GradLayout;
+    use crate::sparse::SparseVec;
+    use crate::util::rng::Rng;
+
+    fn roundtrip(msg: &Msg) -> (Msg, FrameStats) {
+        let (bytes, st) = encode_msg(msg);
+        let (back, st2) = decode_msg(&bytes).expect("decode");
+        assert_eq!(st, st2, "encode/decode stats disagree");
+        // losslessness at the byte level: re-encode reproduces the frame
+        let (bytes2, _) = encode_msg(&back);
+        assert_eq!(bytes, bytes2, "re-encode is not byte-identical");
+        (back, st)
+    }
+
+    fn grouped_update() -> SparseUpdate {
+        let layout =
+            GradLayout::from_sizes([("conv".to_string(), 1 << 10), ("fc".to_string(), 40)]);
+        let mut up = SparseUpdate::zeros(&layout);
+        for i in 0..16u32 {
+            up.bucket_mut(0).push(i * 11, 0.25 * (i as f32 + 1.0));
+        }
+        up.bucket_mut(1).push(3, -1.5);
+        up.bucket_mut(1).push(39, 2.0);
+        up
+    }
+
+    #[test]
+    fn raw_update_roundtrips_and_charges_wirecost() {
+        let up = grouped_update();
+        let expect = WireCost::paper().update(&up);
+        let msg = Msg::Update { worker: 3, round: 7, update: up, loss: 0.625 };
+        let (back, st) = roundtrip(&msg);
+        assert_eq!(st.wire, expect);
+        assert_eq!(back, msg);
+    }
+
+    #[test]
+    fn rice_and_quant_buckets_roundtrip() {
+        let mut up = grouped_update();
+        let idx: Vec<u32> = up.bucket(0).indices().to_vec();
+        up.payload_mut(0).rice.encode_into(&idx);
+        let mut rng = Rng::seed_from(9);
+        let (mut residual, mut codes) = (Vec::new(), Vec::new());
+        let (b, q) = up.bucket_quant_mut(1);
+        let vc = ValueCodec { bits: 4, levels: LevelKind::Uniform };
+        vc.encode_bucket(b, &mut rng, q, &mut residual, &mut codes);
+        let expect = WireCost::paper().update(&up);
+        let msg = Msg::Update { worker: 0, round: 2, update: up, loss: 1.0 };
+        let (back, st) = roundtrip(&msg);
+        assert_eq!(st.wire, expect);
+        assert_eq!(back, msg);
+    }
+
+    #[test]
+    fn raw_index_and_rice_plus_quant_roundtrip() {
+        let mut up = grouped_update();
+        up.payload_mut(0).raw_index = true;
+        let mut rng = Rng::seed_from(4);
+        let (mut residual, mut codes) = (Vec::new(), Vec::new());
+        {
+            let (b, q) = up.bucket_quant_mut(1);
+            let vc = ValueCodec { bits: 8, levels: LevelKind::Nuq };
+            vc.encode_bucket(b, &mut rng, q, &mut residual, &mut codes);
+        }
+        let idx: Vec<u32> = up.bucket(1).indices().to_vec();
+        up.payload_mut(1).rice.encode_into(&idx);
+        let expect = WireCost::paper().update(&up);
+        let msg = Msg::Update { worker: 1, round: 0, update: up, loss: -0.5 };
+        let (back, st) = roundtrip(&msg);
+        assert_eq!(st.wire, expect);
+        assert_eq!(back, msg);
+    }
+
+    #[test]
+    fn empty_and_single_entry_updates_roundtrip() {
+        for nnz in [0usize, 1] {
+            let mut sv = SparseVec::zeros(64);
+            if nnz == 1 {
+                sv.push(17, -3.25);
+            }
+            let up = SparseUpdate::single(sv);
+            let expect = WireCost::paper().update(&up);
+            let msg = Msg::Update { worker: 0, round: 0, update: up, loss: 0.0 };
+            let (back, st) = roundtrip(&msg);
+            assert_eq!(st.wire, expect);
+            assert_eq!(back, msg);
+        }
+    }
+
+    #[test]
+    fn broadcast_charges_aggregate_half_only() {
+        let dim = 6;
+        let bcast: Vec<f32> = (0..2 * dim).map(|i| i as f32 * 0.5).collect();
+        let msg = Msg::Broadcast { round: 4, gagg: bcast };
+        let (back, st) = roundtrip(&msg);
+        assert_eq!(st.wire, 4 * dim, "only the gagg half is charged");
+        assert_eq!(back, msg);
+    }
+
+    #[test]
+    fn sparse_broadcast_roundtrips() {
+        let up = grouped_update();
+        let expect = WireCost::paper().update(&up);
+        let w: Vec<f32> = (0..up.total_dim()).map(|i| (i % 7) as f32).collect();
+        let msg = Msg::SparseBroadcast { round: 1, w, gagg: up };
+        let (back, st) = roundtrip(&msg);
+        assert_eq!(st.wire, expect, "model weights are structural, not charged");
+        assert_eq!(back, msg);
+    }
+
+    #[test]
+    fn header_rejects_corruption() {
+        let msg = Msg::Broadcast { round: 0, gagg: vec![1.0, 2.0] };
+        let (bytes, _) = encode_msg(&msg);
+        let h = decode_header(&bytes[..FRAME_HEADER_BYTES]).expect("good header");
+        assert_eq!(h.kind, FrameKind::Broadcast);
+        assert_eq!(h.len as usize, bytes.len() - FRAME_HEADER_BYTES);
+        for (at, label) in [(0, "magic"), (4, "version"), (6, "kind"), (7, "pad")] {
+            let mut bad = bytes.clone();
+            bad[at] ^= 0x55;
+            assert!(decode_msg(&bad).is_err(), "corrupt {label} must not decode");
+        }
+    }
+
+    #[test]
+    fn torn_frames_error_not_panic() {
+        let mut up = grouped_update();
+        let idx: Vec<u32> = up.bucket(0).indices().to_vec();
+        up.payload_mut(0).rice.encode_into(&idx);
+        let msg = Msg::Update { worker: 0, round: 0, update: up, loss: 0.5 };
+        let (bytes, _) = encode_msg(&msg);
+        // every strict prefix of the payload must fail cleanly
+        for cut in FRAME_HEADER_BYTES..bytes.len() {
+            let h = decode_header(&bytes[..FRAME_HEADER_BYTES]).expect("header");
+            assert!(
+                decode_payload(&h, &bytes[FRAME_HEADER_BYTES..cut]).is_err(),
+                "cut at {cut} decoded"
+            );
+        }
+    }
+
+    #[test]
+    fn hello_roundtrips_and_validates() {
+        let hb = encode_hello(5);
+        assert_eq!(decode_hello(&hb), Ok(5));
+        let mut bad = hb;
+        bad[0] = b'X';
+        assert!(decode_hello(&bad).is_err());
+        assert!(decode_hello(&hb[..6]).is_err());
+    }
+}

@@ -30,10 +30,16 @@
 //! totals (pinned by `rust/tests/codec.rs`).
 
 mod cost;
+mod frame;
 mod packed;
 mod rice;
 
 pub use cost::WireCost;
+pub use frame::{
+    decode_header, decode_hello, decode_msg, decode_payload, encode_hello, encode_msg,
+    FrameHeader, FrameKind, FrameStats, FRAME_HEADER_BYTES, FRAME_MAGIC, HELLO_BYTES,
+    HELLO_MAGIC, WIRE_VERSION,
+};
 pub use packed::{quant_levels, LevelKind, QuantPayload};
 pub use rice::RicePayload;
 

@@ -102,6 +102,12 @@ impl RicePayload {
         self.bitlen
     }
 
+    /// The packed bitstream words (LSB-first), for the byte-level
+    /// frame emitter.
+    pub(super) fn words(&self) -> &[u32] {
+        &self.words
+    }
+
     /// Deactivate, keeping the buffers' capacity.
     pub fn clear(&mut self) {
         self.active = false;

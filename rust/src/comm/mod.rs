@@ -1,15 +1,20 @@
-//! Communication substrate: message types, an in-process transport,
-//! the paper's byte cost model, and a per-round traffic ledger.
+//! Communication substrate: message types, pluggable transports, the
+//! paper's byte cost model, and a per-round traffic ledger.
 //!
 //! The paper's experiments ran on real multi-GPU links; here the
-//! transport is simulated (std mpsc channels for the threaded driver,
-//! direct calls for the deterministic driver) but the *accounting* is
-//! exact: each sparse update costs `32 + ceil(log2 J)` bits per entry
-//! (§2: "the index can be losslessly represented by log J bits"), and
-//! the broadcast costs `32 J` bits dense or the sparse equivalent.
-//! A [`CostModel`] converts bytes to simulated wall-clock so the
-//! benches can report the paper's motivating traffic arithmetic
-//! (1.7e9 symbols/epoch for ResNet-110, §1).
+//! transport is a [`transport::Transport`] trait with two backends —
+//! the in-process mpsc star ([`InProc`], threaded driver) and framed
+//! bytes over `std::net` sockets ([`Tcp`], workers as threads or
+//! separate processes) — plus direct calls for the deterministic
+//! driver.  The *accounting* is exact either way: each sparse update
+//! costs `32 + ceil(log2 J)` bits per entry (§2: "the index can be
+//! losslessly represented by log J bits"), the broadcast costs `32 J`
+//! bits dense or the sparse equivalent, and the TCP frames
+//! (`codec::frame`, versioned in `SCHEMA.lock` / `docs/WIRE.md`)
+//! carry exactly the charged bytes so socket counters and ledger
+//! agree byte-for-byte.  A [`CostModel`] converts bytes to simulated
+//! wall-clock so the benches can report the paper's motivating
+//! traffic arithmetic (1.7e9 symbols/epoch for ResNet-110, §1).
 
 #![forbid(unsafe_code)]
 
@@ -22,7 +27,10 @@ mod update;
 pub use codec::WireCost;
 pub use ledger::{Ledger, RoundTraffic};
 pub use quantize::Quantizer;
-pub use transport::{Endpoint, Network};
+pub use transport::{
+    kind_of, InProc, InProcLink, SocketCounters, Tcp, TcpLink, Transport, TransportKind,
+    WorkerLink,
+};
 pub use update::{BucketLayout, SparseUpdate};
 
 use crate::sparse::SparseVec;
@@ -33,7 +41,7 @@ use crate::util::json::{obj, Json};
 /// group-local indices) so the wire cost of an index is
 /// `ceil(log2 group_len)` bits; the flat path is the degenerate
 /// single-bucket case and costs exactly what the seed did.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum Msg {
     /// worker -> server: bucketed sparsified gradient for round `round`
     Update { worker: usize, round: usize, update: SparseUpdate, loss: f32 },

@@ -1,162 +1,653 @@
-//! In-process transport: mpsc-based endpoints wiring N workers to one
-//! server (parameter-server star topology).
+//! The transport seam: how [`Msg`] values move between the server
+//! loop and its workers.
 //!
-//! The deterministic single-threaded trainer calls sparsifiers
-//! directly; this transport backs the *threaded* driver
-//! (`coordinator::Trainer::run_threaded`) where each worker's round
-//! body runs as a pooled task on the persistent executors, which is
-//! how the framework would host real gradient computation.  Message
-//! order per link is FIFO (mpsc guarantee); the
-//! server gathers exactly one update per worker per round, so the
-//! aggregate is order-independent and bit-identical to the
-//! deterministic driver (verified in coordinator tests).
+//! PR 9 redesigns this module around two traits instead of concrete
+//! channel-bearing structs:
+//!
+//! ```text
+//!            Trainer (server side)              Worker (either side)
+//!            ┌─────────────────────┐            ┌────────────────┐
+//!            │   dyn Transport     │            │ dyn WorkerLink │
+//!            │ broadcast / gather  │            │  send / recv   │
+//!            └──────┬───────┬──────┘            └───┬────────┬───┘
+//!                   │       │                      │        │
+//!              InProc      Tcp ◄── framed bytes ──► TcpLink  InProcLink
+//!            (mpsc star) (std::net)                (std::net) (mpsc)
+//! ```
+//!
+//! [`InProc`] is the seed's mpsc star, kept bit-identical but with its
+//! channel internals private.  [`Tcp`] moves the SAME `Msg` values as
+//! length-framed bytes (`codec::frame`) over `std::net` sockets — TCP
+//! loopback or, on unix, a `UnixListener` domain socket — with every
+//! worker attached through a [`TcpLink`], possibly from a separate OS
+//! process (`repro worker --connect`).  The server side counts socket
+//! bytes per direction ([`SocketCounters`]); the framed charged bytes
+//! equal `codec::WireCost`'s ledger accounting by construction, which
+//! `Trainer::run_transport` asserts every round.
+//!
+//! This file is the ONLY non-test place allowed to touch `std::net`
+//! (analyzer rule `net-outside-transport`): the coordinator reaches
+//! sockets strictly through the traits.
 
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::Duration;
 
-use crate::comm::Msg;
+use super::codec::{
+    decode_header, decode_hello, decode_payload, encode_hello, encode_msg, FrameKind,
+    FrameStats, FRAME_HEADER_BYTES, HELLO_BYTES,
+};
+use super::Msg;
 
-/// One side of the star: the server holds `WorkerHandle`s; each worker
-/// thread holds an `Endpoint`.
-pub struct Network {
-    /// server's receive end (all workers send here)
-    pub from_workers: Receiver<Msg>,
-    /// per-worker broadcast senders
-    to_workers: Vec<Sender<Msg>>,
-    /// sender workers clone
-    up_tx: Sender<Msg>,
-    /// endpoints not yet taken by worker threads
-    pending: Vec<Option<Endpoint>>,
+/// Server side of the star: broadcast down, gather a full round up.
+/// `gather_round` returns the n messages ordered by worker id, so the
+/// aggregation order — and therefore the trajectory — is independent
+/// of arrival order (bit-identical across backends).
+pub trait Transport {
+    /// Deliver `msg` to every worker.
+    fn broadcast(&mut self, msg: &Msg);
+    /// Collect exactly one `Msg::Update` per worker for `round`,
+    /// ordered by worker id.  Panics on protocol violations
+    /// (duplicate, out-of-round, or non-update messages) — those are
+    /// driver bugs, not recoverable conditions.
+    fn gather_round(&mut self, n_workers: usize, round: usize) -> Vec<Msg>;
+    /// Bound the per-message wait inside `gather_round` (future
+    /// straggler/fault injection hook; `None` = wait forever).
+    fn set_gather_timeout(&mut self, timeout: Option<Duration>);
+    /// Socket byte counters, if this backend moves real bytes
+    /// (`None` for in-process transports).
+    fn counters(&self) -> Option<SocketCounters>;
+    /// Zero the counters (no-op for in-process transports).  The
+    /// server loop calls this after the uncharged bootstrap
+    /// broadcast, so the counters cover exactly the ledger-charged
+    /// span of the run.
+    fn reset_counters(&mut self) {}
 }
 
-/// A worker-side endpoint: send updates up, receive broadcasts down.
-pub struct Endpoint {
-    pub worker: usize,
-    pub up: Sender<Msg>,
-    pub down: Receiver<Msg>,
+/// Worker side of the star: send updates up, receive broadcasts down.
+pub trait WorkerLink {
+    /// Send one message to the server.
+    fn send(&mut self, msg: &Msg);
+    /// Receive the next broadcast; `None` once the server is gone.
+    fn recv(&mut self) -> Option<Msg>;
 }
 
-impl Network {
-    pub fn star(n_workers: usize) -> Self {
-        let (up_tx, from_workers) = channel();
-        let mut to_workers = Vec::with_capacity(n_workers);
-        let mut pending = Vec::with_capacity(n_workers);
-        for worker in 0..n_workers {
-            let (tx, rx) = channel();
-            to_workers.push(tx);
-            pending.push(Some(Endpoint { worker, up: up_tx.clone(), down: rx }));
+/// Which transport backend a run uses (config/CLI surface).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TransportKind {
+    /// The in-process mpsc star (threaded driver).
+    #[default]
+    InProc,
+    /// Length-framed bytes over loopback TCP, workers as threads or
+    /// separate processes.
+    Tcp,
+    /// Length-framed bytes over a unix domain socket (unix only).
+    Uds,
+}
+
+impl TransportKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::InProc => "inproc",
+            TransportKind::Tcp => "tcp",
+            TransportKind::Uds => "uds",
         }
-        Network { from_workers, to_workers, up_tx, pending }
     }
 
-    /// Take worker `i`'s endpoint (once).
-    pub fn endpoint(&mut self, worker: usize) -> Endpoint {
-        self.pending[worker].take().expect("endpoint already taken")
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "inproc" => Ok(TransportKind::InProc),
+            "tcp" => Ok(TransportKind::Tcp),
+            "uds" => Ok(TransportKind::Uds),
+            _ => Err(format!("unknown transport '{s}' (expected inproc, tcp or uds)")),
+        }
+    }
+}
+
+/// Cumulative socket traffic seen by a byte-moving transport, split
+/// into raw socket bytes and the `WireCost`-charged subset (frame
+/// headers and structural shape bytes are real traffic but not
+/// paper-§2 payload, so both views are kept).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SocketCounters {
+    pub sent_frames: u64,
+    pub recv_frames: u64,
+    /// every byte written, frame headers included
+    pub sent_bytes: u64,
+    /// every byte read, frame headers included
+    pub recv_bytes: u64,
+    /// charged (ledger-comparable) bytes written
+    pub sent_wire: u64,
+    /// charged (ledger-comparable) bytes read
+    pub recv_wire: u64,
+}
+
+impl SocketCounters {
+    fn count_sent(&mut self, st: &FrameStats) {
+        self.sent_frames += 1;
+        self.sent_bytes += st.bytes as u64;
+        self.sent_wire += st.wire as u64;
     }
 
-    /// Broadcast a message to all workers.
-    pub fn broadcast(&self, msg: &Msg) {
+    fn count_recv(&mut self, st: &FrameStats) {
+        self.recv_frames += 1;
+        self.recv_bytes += st.bytes as u64;
+        self.recv_wire += st.wire as u64;
+    }
+}
+
+// ---------------------------------------------------------------- InProc
+
+/// The in-process star: every worker holds an [`InProcLink`] whose
+/// sender feeds one shared server receiver.  Channel ends are private
+/// — the ONLY way in is the [`Transport`] / [`WorkerLink`] traits
+/// (plus [`InProc::up_sender`] for protocol-violation tests).
+pub struct InProc {
+    from_workers: Receiver<Msg>,
+    to_workers: Vec<Sender<Msg>>,
+    up_tx: Sender<Msg>,
+    pending: Vec<Option<InProcLink>>,
+    timeout: Option<Duration>,
+}
+
+/// One worker's pair of channel ends onto an [`InProc`] star.
+pub struct InProcLink {
+    up: Sender<Msg>,
+    down: Receiver<Msg>,
+}
+
+impl InProc {
+    /// A star with `n` worker links, parked until [`Self::link`]
+    /// hands them out.
+    pub fn star(n: usize) -> Self {
+        let (up_tx, from_workers) = channel();
+        let mut to_workers = Vec::with_capacity(n);
+        let mut pending = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (down_tx, down_rx) = channel();
+            to_workers.push(down_tx);
+            pending.push(Some(InProcLink { up: up_tx.clone(), down: down_rx }));
+        }
+        InProc { from_workers, to_workers, up_tx, pending, timeout: None }
+    }
+
+    /// Take worker `i`'s link (once).
+    pub fn link(&mut self, worker: usize) -> InProcLink {
+        self.pending[worker].take().unwrap_or_else(|| panic!("link {worker} already taken"))
+    }
+
+    /// A raw sender onto the up channel — for tests that inject
+    /// protocol violations the trait API makes unrepresentable.
+    pub fn up_sender(&self) -> Sender<Msg> {
+        self.up_tx.clone()
+    }
+
+    fn next_up(&mut self) -> Msg {
+        match self.timeout {
+            Some(t) => self
+                .from_workers
+                .recv_timeout(t)
+                .unwrap_or_else(|e| panic!("gather timed out / disconnected: {e}")),
+            None => self.from_workers.recv().expect("all workers disconnected mid-round"),
+        }
+    }
+}
+
+impl Transport for InProc {
+    fn broadcast(&mut self, msg: &Msg) {
         for tx in &self.to_workers {
-            // a dropped worker is a shutdown race, not an error
+            // a worker that already finished (dropped its link) is fine
             let _ = tx.send(msg.clone());
         }
     }
 
-    /// Gather exactly one update per worker for `round`; returns them
-    /// ordered by worker id (determinism).
-    pub fn gather_round(&self, n_workers: usize, round: usize) -> Vec<Msg> {
+    fn gather_round(&mut self, n_workers: usize, round: usize) -> Vec<Msg> {
         let mut slots: Vec<Option<Msg>> = (0..n_workers).map(|_| None).collect();
-        let mut got = 0;
-        while got < n_workers {
-            let msg = self
-                .from_workers
-                .recv()
-                .expect("worker hung up mid-round");
-            match msg {
+        for _ in 0..n_workers {
+            let msg = self.next_up();
+            match &msg {
                 Msg::Update { worker, round: r, .. } => {
-                    assert_eq!(r, round, "out-of-round update");
-                    assert!(slots[worker].is_none(), "duplicate update");
-                    slots[worker] = Some(msg);
-                    got += 1;
+                    assert_eq!(*r, round, "worker {worker}: out-of-round update");
+                    assert!(slots[*worker].is_none(), "worker {worker}: duplicate update");
+                    let w = *worker;
+                    slots[w] = Some(msg);
                 }
-                m @ (Msg::Broadcast { .. } | Msg::SparseBroadcast { .. }) => {
-                    panic!("unexpected message at server: {m:?}")
+                Msg::Broadcast { .. } | Msg::SparseBroadcast { .. } => {
+                    panic!("broadcast received at the server side")
                 }
             }
         }
-        slots.into_iter().map(Option::unwrap).collect()
+        slots.into_iter().map(|s| s.expect("gather slot empty")).collect()
     }
 
-    /// A sender handle for injecting messages (tests).
-    pub fn up_sender(&self) -> Sender<Msg> {
-        self.up_tx.clone()
+    fn set_gather_timeout(&mut self, timeout: Option<Duration>) {
+        self.timeout = timeout;
+    }
+
+    fn counters(&self) -> Option<SocketCounters> {
+        None
+    }
+}
+
+impl WorkerLink for InProcLink {
+    fn send(&mut self, msg: &Msg) {
+        // the server dropping its receiver ends the worker loop via
+        // recv() -> None; a failed send here is the same shutdown race
+        let _ = self.up.send(msg.clone());
+    }
+
+    fn recv(&mut self) -> Option<Msg> {
+        self.down.recv().ok()
+    }
+}
+
+// ------------------------------------------------------------------- Tcp
+
+enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Uds(UnixListener),
+}
+
+enum Conn {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Uds(UnixStream),
+}
+
+impl Conn {
+    fn write_all(&mut self, buf: &[u8]) -> std::io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.write_all(buf),
+            #[cfg(unix)]
+            Conn::Uds(s) => s.write_all(buf),
+        }
+    }
+
+    fn read_exact(&mut self, buf: &mut [u8]) -> std::io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.read_exact(buf),
+            #[cfg(unix)]
+            Conn::Uds(s) => s.read_exact(buf),
+        }
+    }
+
+    fn set_read_timeout(&self, t: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.set_read_timeout(t),
+            #[cfg(unix)]
+            Conn::Uds(s) => s.set_read_timeout(t),
+        }
+    }
+}
+
+fn write_frame(conn: &mut Conn, msg: &Msg) -> Result<FrameStats, String> {
+    let (bytes, st) = encode_msg(msg);
+    conn.write_all(&bytes).map_err(|e| format!("frame write failed: {e}"))?;
+    Ok(st)
+}
+
+fn read_frame(conn: &mut Conn) -> Result<(Msg, FrameStats), String> {
+    let mut hdr = [0u8; FRAME_HEADER_BYTES];
+    conn.read_exact(&mut hdr).map_err(|e| format!("frame header read failed: {e}"))?;
+    let h = decode_header(&hdr)?;
+    let mut payload = vec![0u8; h.len as usize];
+    conn.read_exact(&mut payload).map_err(|e| format!("frame payload read failed: {e}"))?;
+    let (msg, wire) = decode_payload(&h, &payload)?;
+    Ok((msg, FrameStats { bytes: FRAME_HEADER_BYTES + payload.len(), wire }))
+}
+
+/// The byte-moving server transport: a listening socket, one framed
+/// connection per worker (attached via [`Self::accept`] after a
+/// versioned handshake), and per-direction [`SocketCounters`].
+pub struct Tcp {
+    listener: Listener,
+    addr: String,
+    /// connections indexed by worker id
+    conns: Vec<Option<Conn>>,
+    counters: SocketCounters,
+    timeout: Option<Duration>,
+}
+
+impl Tcp {
+    /// Bind an ephemeral loopback TCP listener.
+    pub fn bind() -> Result<Self, String> {
+        let listener =
+            TcpListener::bind("127.0.0.1:0").map_err(|e| format!("tcp bind failed: {e}"))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| format!("tcp local_addr failed: {e}"))?
+            .to_string();
+        Ok(Tcp {
+            listener: Listener::Tcp(listener),
+            addr,
+            conns: Vec::new(),
+            counters: SocketCounters::default(),
+            timeout: None,
+        })
+    }
+
+    /// Bind a unix domain socket at `path` (unix only).
+    #[cfg(unix)]
+    pub fn bind_uds(path: &str) -> Result<Self, String> {
+        let listener =
+            UnixListener::bind(path).map_err(|e| format!("uds bind {path} failed: {e}"))?;
+        Ok(Tcp {
+            listener: Listener::Uds(listener),
+            addr: path.to_string(),
+            conns: Vec::new(),
+            counters: SocketCounters::default(),
+            timeout: None,
+        })
+    }
+
+    /// The address workers connect to (`host:port`, or the socket
+    /// path for uds).
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Accept exactly `n` worker connections, each opening with a
+    /// versioned handshake naming its worker id.  Connections are
+    /// stored by id; duplicate or out-of-range ids are errors.
+    pub fn accept(&mut self, n: usize) -> Result<(), String> {
+        self.conns = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let mut conn = match &self.listener {
+                Listener::Tcp(l) => {
+                    let (s, _) = l.accept().map_err(|e| format!("tcp accept failed: {e}"))?;
+                    s.set_nodelay(true).map_err(|e| format!("set_nodelay failed: {e}"))?;
+                    Conn::Tcp(s)
+                }
+                #[cfg(unix)]
+                Listener::Uds(l) => {
+                    let (s, _) = l.accept().map_err(|e| format!("uds accept failed: {e}"))?;
+                    Conn::Uds(s)
+                }
+            };
+            let mut hello = [0u8; HELLO_BYTES];
+            conn.read_exact(&mut hello).map_err(|e| format!("handshake read failed: {e}"))?;
+            let worker = decode_hello(&hello)? as usize;
+            let slot = self
+                .conns
+                .get_mut(worker)
+                .ok_or_else(|| format!("worker id {worker} out of range (n = {n})"))?;
+            if slot.is_some() {
+                return Err(format!("worker id {worker} connected twice"));
+            }
+            *slot = Some(conn);
+        }
+        Ok(())
+    }
+
+    fn conn_mut(&mut self, worker: usize) -> &mut Conn {
+        self.conns[worker].as_mut().expect("worker not connected")
+    }
+}
+
+impl Transport for Tcp {
+    fn broadcast(&mut self, msg: &Msg) {
+        let (bytes, st) = encode_msg(msg);
+        for conn in self.conns.iter_mut().flatten() {
+            conn.write_all(&bytes).expect("broadcast write failed");
+            self.counters.count_sent(&st);
+        }
+    }
+
+    fn gather_round(&mut self, n_workers: usize, round: usize) -> Vec<Msg> {
+        // read in worker-id order: the aggregation order is fixed by
+        // construction, independent of socket arrival interleaving
+        let mut out = Vec::with_capacity(n_workers);
+        for w in 0..n_workers {
+            let timeout = self.timeout;
+            let conn = self.conn_mut(w);
+            conn.set_read_timeout(timeout).expect("set_read_timeout failed");
+            let (msg, st) = read_frame(conn).unwrap_or_else(|e| panic!("worker {w}: {e}"));
+            match &msg {
+                Msg::Update { worker, round: r, .. } => {
+                    assert_eq!(*worker, w, "frame on worker {w}'s socket names worker {worker}");
+                    assert_eq!(*r, round, "worker {w}: out-of-round update");
+                }
+                Msg::Broadcast { .. } | Msg::SparseBroadcast { .. } => {
+                    panic!("broadcast received at the server side")
+                }
+            }
+            self.counters.count_recv(&st);
+            out.push(msg);
+        }
+        out
+    }
+
+    fn set_gather_timeout(&mut self, timeout: Option<Duration>) {
+        self.timeout = timeout;
+    }
+
+    fn counters(&self) -> Option<SocketCounters> {
+        Some(self.counters)
+    }
+
+    fn reset_counters(&mut self) {
+        self.counters = SocketCounters::default();
+    }
+}
+
+/// Worker side of a [`Tcp`] transport: one framed connection, opened
+/// with the handshake, usable from a thread or a separate process.
+pub struct TcpLink {
+    conn: Conn,
+}
+
+impl TcpLink {
+    /// Connect to a server at `addr` and introduce ourselves as
+    /// `worker`.
+    pub fn connect(addr: &str, worker: usize) -> Result<Self, String> {
+        let s = TcpStream::connect(addr).map_err(|e| format!("connect {addr} failed: {e}"))?;
+        s.set_nodelay(true).map_err(|e| format!("set_nodelay failed: {e}"))?;
+        let mut conn = Conn::Tcp(s);
+        conn.write_all(&encode_hello(worker as u32))
+            .map_err(|e| format!("handshake write failed: {e}"))?;
+        Ok(TcpLink { conn })
+    }
+
+    /// Connect to a unix-domain-socket server at `path` (unix only).
+    #[cfg(unix)]
+    pub fn connect_uds(path: &str, worker: usize) -> Result<Self, String> {
+        let s = UnixStream::connect(path).map_err(|e| format!("connect {path} failed: {e}"))?;
+        let mut conn = Conn::Uds(s);
+        conn.write_all(&encode_hello(worker as u32))
+            .map_err(|e| format!("handshake write failed: {e}"))?;
+        Ok(TcpLink { conn })
+    }
+}
+
+impl WorkerLink for TcpLink {
+    fn send(&mut self, msg: &Msg) {
+        write_frame(&mut self.conn, msg).expect("worker frame send failed");
+    }
+
+    fn recv(&mut self) -> Option<Msg> {
+        read_frame(&mut self.conn).ok().map(|(msg, _)| msg)
+    }
+}
+
+/// The frame kind a message travels as (shared by the transport's
+/// protocol asserts and the comm-table's byte attribution).
+pub fn kind_of(msg: &Msg) -> FrameKind {
+    match msg {
+        Msg::Update { .. } => FrameKind::Update,
+        Msg::Broadcast { .. } => FrameKind::Broadcast,
+        Msg::SparseBroadcast { .. } => FrameKind::SparseBroadcast,
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::comm::update::SparseUpdate;
+    use crate::comm::SparseUpdate;
     use crate::sparse::SparseVec;
+    use std::thread;
 
-    fn zero_update(dim: usize) -> SparseUpdate {
-        SparseUpdate::single(SparseVec::zeros(dim))
+    fn update_msg(worker: usize, round: usize, v: f32) -> Msg {
+        let mut sv = SparseVec::zeros(8);
+        sv.push(worker as u32, v);
+        Msg::Update { worker, round, update: SparseUpdate::single(sv), loss: v }
     }
 
     #[test]
-    fn star_roundtrip_two_workers() {
-        let mut net = Network::star(2);
-        let e0 = net.endpoint(0);
-        let e1 = net.endpoint(1);
-        let h0 = std::thread::spawn(move || {
-            e0.up
-                .send(Msg::Update { worker: 0, round: 0, update: zero_update(4), loss: 1.0 })
-                .unwrap();
-            match e0.down.recv().unwrap() {
-                Msg::Broadcast { round, gagg } => (round, gagg),
-                _ => panic!(),
-            }
-        });
-        let h1 = std::thread::spawn(move || {
-            e1.up
-                .send(Msg::Update { worker: 1, round: 0, update: zero_update(4), loss: 2.0 })
-                .unwrap();
-            match e1.down.recv().unwrap() {
-                Msg::Broadcast { round, .. } => round,
-                _ => panic!(),
-            }
-        });
+    fn inproc_star_roundtrip_two_workers() {
+        let mut net = InProc::star(2);
+        let mut links: Vec<InProcLink> = (0..2).map(|w| net.link(w)).collect();
+        let handles: Vec<_> = links
+            .drain(..)
+            .enumerate()
+            .map(|(w, mut link)| {
+                thread::spawn(move || {
+                    let got = link.recv().expect("broadcast");
+                    match got {
+                        Msg::Broadcast { round, gagg } => {
+                            assert_eq!(round, 0);
+                            link.send(&update_msg(w, 0, gagg[w]));
+                        }
+                        _ => panic!("expected broadcast"),
+                    }
+                })
+            })
+            .collect();
+        net.broadcast(&Msg::Broadcast { round: 0, gagg: vec![1.0, 2.0] });
         let msgs = net.gather_round(2, 0);
         assert_eq!(msgs.len(), 2);
-        // ordered by worker id regardless of arrival order
-        match (&msgs[0], &msgs[1]) {
-            (Msg::Update { worker: 0, .. }, Msg::Update { worker: 1, .. }) => {}
-            other => panic!("bad order {other:?}"),
+        for (w, m) in msgs.iter().enumerate() {
+            match m {
+                Msg::Update { worker, loss, .. } => {
+                    assert_eq!(*worker, w);
+                    assert_eq!(*loss, (w + 1) as f32);
+                }
+                _ => panic!("expected update"),
+            }
         }
-        net.broadcast(&Msg::Broadcast { round: 0, gagg: vec![1.0; 4] });
-        let (r0, g0) = h0.join().unwrap();
-        assert_eq!(r0, 0);
-        assert_eq!(g0, vec![1.0; 4]);
-        assert_eq!(h1.join().unwrap(), 0);
+        for h in handles {
+            h.join().expect("worker thread");
+        }
     }
 
     #[test]
-    #[should_panic]
-    fn duplicate_update_detected() {
-        let net = Network::star(1);
+    #[should_panic(expected = "duplicate update")]
+    fn inproc_duplicate_update_detected() {
+        let mut net = InProc::star(2);
         let tx = net.up_sender();
-        tx.send(Msg::Update { worker: 0, round: 0, update: zero_update(1), loss: 0.0 }).unwrap();
-        tx.send(Msg::Update { worker: 0, round: 0, update: zero_update(1), loss: 0.0 }).unwrap();
-        // gather for 2 workers so it tries to consume both messages
+        tx.send(update_msg(0, 0, 1.0)).unwrap();
+        tx.send(update_msg(0, 0, 2.0)).unwrap();
         net.gather_round(2, 0);
     }
 
     #[test]
-    #[should_panic]
-    fn out_of_round_update_detected() {
-        let net = Network::star(1);
-        net.up_sender()
-            .send(Msg::Update { worker: 0, round: 5, update: zero_update(1), loss: 0.0 })
-            .unwrap();
+    #[should_panic(expected = "out-of-round update")]
+    fn inproc_out_of_round_update_detected() {
+        let mut net = InProc::star(1);
+        let tx = net.up_sender();
+        tx.send(update_msg(0, 3, 1.0)).unwrap();
         net.gather_round(1, 0);
+    }
+
+    #[test]
+    fn tcp_loopback_star_roundtrip_counts_bytes() {
+        let mut net = Tcp::bind().expect("bind");
+        let addr = net.addr().to_string();
+        let handles: Vec<_> = (0..2)
+            .map(|w| {
+                let addr = addr.clone();
+                thread::spawn(move || {
+                    let mut link = TcpLink::connect(&addr, w).expect("connect");
+                    let got = link.recv().expect("broadcast");
+                    match got {
+                        Msg::Broadcast { round, gagg } => {
+                            assert_eq!(round, 0);
+                            link.send(&update_msg(w, 0, gagg[w]));
+                        }
+                        _ => panic!("expected broadcast"),
+                    }
+                })
+            })
+            .collect();
+        net.accept(2).expect("accept");
+        net.broadcast(&Msg::Broadcast { round: 0, gagg: vec![4.0, 5.0] });
+        let msgs = net.gather_round(2, 0);
+        for (w, m) in msgs.iter().enumerate() {
+            match m {
+                Msg::Update { worker, loss, .. } => {
+                    assert_eq!(*worker, w);
+                    assert_eq!(*loss, (w + 4) as f32);
+                }
+                _ => panic!("expected update"),
+            }
+        }
+        for h in handles {
+            h.join().expect("worker thread");
+        }
+        let c = net.counters().expect("tcp counts bytes");
+        assert_eq!(c.sent_frames, 2);
+        assert_eq!(c.recv_frames, 2);
+        assert!(c.sent_bytes > 0 && c.recv_bytes > 0);
+        // a 2-value broadcast charges its 1-value gagg half per worker
+        assert_eq!(c.sent_wire, 2 * 4);
+    }
+
+    #[test]
+    fn tcp_rejects_duplicate_worker_ids() {
+        let mut net = Tcp::bind().expect("bind");
+        let addr = net.addr().to_string();
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                let addr = addr.clone();
+                thread::spawn(move || TcpLink::connect(&addr, 0))
+            })
+            .collect();
+        let err = net.accept(2).expect_err("duplicate id must fail");
+        assert!(err.contains("twice") || err.contains("out of range"), "{err}");
+        drop(net);
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn uds_star_roundtrip() {
+        let path = std::env::temp_dir()
+            .join(format!("regtopk-uds-test-{}", std::process::id()))
+            .to_string_lossy()
+            .to_string();
+        let _ = std::fs::remove_file(&path);
+        let mut net = Tcp::bind_uds(&path).expect("bind");
+        let addr = net.addr().to_string();
+        let h = thread::spawn(move || {
+            let mut link = TcpLink::connect_uds(&addr, 0).expect("connect");
+            let _ = link.recv().expect("broadcast");
+            link.send(&update_msg(0, 0, 7.0));
+        });
+        net.accept(1).expect("accept");
+        net.broadcast(&Msg::Broadcast { round: 0, gagg: vec![0.0, 0.0] });
+        let msgs = net.gather_round(1, 0);
+        assert_eq!(msgs.len(), 1);
+        h.join().expect("worker thread");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn transport_kind_names_roundtrip() {
+        for k in [TransportKind::InProc, TransportKind::Tcp, TransportKind::Uds] {
+            assert_eq!(TransportKind::parse(k.name()), Ok(k));
+        }
+        assert!(TransportKind::parse("carrier-pigeon").is_err());
+        assert_eq!(TransportKind::default(), TransportKind::InProc);
+    }
+
+    #[test]
+    fn kind_of_matches_variants() {
+        assert_eq!(kind_of(&update_msg(0, 0, 1.0)), FrameKind::Update);
+        assert_eq!(kind_of(&Msg::Broadcast { round: 0, gagg: vec![] }), FrameKind::Broadcast);
     }
 }

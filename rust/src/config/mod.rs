@@ -7,7 +7,7 @@
 
 use std::path::Path;
 
-use crate::comm::CostModel;
+use crate::comm::{CostModel, TransportKind};
 use crate::grad::GradLayout;
 use crate::sparsify::{
     BudgetPolicy, LayerwiseSparsifier, PolicyTable, Sparsifier, SparsifierKind,
@@ -55,6 +55,11 @@ pub struct TrainConfig {
     /// Applies to flat runs too (single `all` group).  None = the
     /// dense 32·J-bit broadcast, bit-identical to the pre-PR 6 tree.
     pub downlink: Option<PolicyTable>,
+    /// which transport backend `repro train` drives: the in-process
+    /// star (default, bit-identical to the seed) or framed bytes over
+    /// sockets with workers as separate OS processes.  The trajectory
+    /// is identical either way; only the message path changes.
+    pub transport: TransportKind,
 }
 
 impl Default for TrainConfig {
@@ -73,6 +78,7 @@ impl Default for TrainConfig {
             budget: None,
             policy: None,
             downlink: None,
+            transport: TransportKind::InProc,
         }
     }
 }
@@ -223,6 +229,7 @@ impl TrainConfig {
             ("eval_every", self.eval_every.into()),
             ("cost", self.cost.to_json()),
             ("shards", self.shards.into()),
+            ("transport", self.transport.name().into()),
         ]);
         if let Json::Obj(m) = &mut j {
             // budget/policy are only consulted on the grouped path, so
@@ -279,6 +286,9 @@ impl TrainConfig {
         }
         if let Some(v) = j.get("shards").and_then(Json::as_usize) {
             c.shards = v;
+        }
+        if let Some(v) = j.get("transport").and_then(Json::as_str) {
+            c.transport = TransportKind::parse(v)?;
         }
         if let Some(g) = j.get("groups") {
             c.groups = Some(GradLayout::from_json(g)?);
@@ -366,6 +376,7 @@ mod tests {
                     .unwrap(),
             ),
             downlink: Some(PolicyTable::parse("conv*=:bits=8,idx=rice;*=").unwrap()),
+            transport: TransportKind::Tcp,
         };
         let c2 = TrainConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(c2, c, "a config field was dropped by the JSON round trip");
@@ -537,6 +548,17 @@ mod tests {
         c.groups = None;
         c.policy = None;
         assert_eq!(c.build_sparsifier(20, 0).group_families(), vec!["topk"]);
+    }
+
+    #[test]
+    fn transport_roundtrips_and_rejects_unknown() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.transport, TransportKind::InProc, "seed-identical default");
+        c.transport = TransportKind::Tcp;
+        let c2 = TrainConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.transport, TransportKind::Tcp);
+        let bad = Json::parse(r#"{"transport": "smoke-signals"}"#).unwrap();
+        assert!(TrainConfig::from_json(&bad).is_err());
     }
 
     #[test]

@@ -8,13 +8,20 @@
 //! paper's footnote 1: broadcasting w^{t+1} is equivalent since
 //! g^t = (w^t - w^{t+1}) / eta^t).
 //!
-//! Two drivers over the same [`Worker`]/[`Server`] state:
-//! - [`Trainer::run`]          — deterministic single-threaded rounds
+//! Three drivers over the same [`Worker`]/[`Server`] state:
+//! - [`Trainer::run`]           — deterministic single-threaded rounds
 //!   (reference semantics; all experiments and tests use this).
-//! - [`Trainer::run_threaded`] — per-worker lanes fanned out on the
-//!   persistent pool's executors over the [`crate::comm::Network`]
-//!   transport (no `thread::spawn` per run); bit-identical aggregates
-//!   (verified in tests) because gathers are ordered by worker id.
+//! - [`Trainer::run_threaded`]  — per-worker lanes fanned out on the
+//!   persistent pool's executors over the in-process
+//!   [`crate::comm::InProc`] star (no `thread::spawn` per run).
+//! - [`Trainer::run_transport`] — server loop over any
+//!   [`crate::comm::Transport`]; with the [`crate::comm::Tcp`]
+//!   backend each worker runs [`serve_worker`] behind a framed
+//!   socket, as a loopback thread or a separate OS process
+//!   (`repro worker --connect`).
+//!
+//! All three are bit-identical (verified in tests) because gathers
+//! are ordered by worker id and the aggregation path is shared.
 
 #![forbid(unsafe_code)]
 
@@ -27,5 +34,5 @@ mod worker;
 pub use checkpoint::{Checkpoint, DownlinkState, TrainState};
 pub use downlink::{DownlinkCodec, GaggMirror};
 pub use server::{merge_updates, Server};
-pub use trainer::{EvalFn, RoundResult, Trainer};
+pub use trainer::{serve_worker, EvalFn, RoundResult, Trainer};
 pub use worker::Worker;

@@ -3,7 +3,7 @@
 
 use std::time::Instant;
 
-use crate::comm::{Ledger, Msg, Network};
+use crate::comm::{InProc, Ledger, Msg, SocketCounters, Tcp, TcpLink, Transport, WorkerLink};
 use crate::config::TrainConfig;
 use crate::coordinator::{DownlinkCodec, GaggMirror, Server, Worker};
 use crate::metrics::{IterRecord, RunLog};
@@ -343,15 +343,15 @@ impl Trainer {
     }
 
     /// Threaded driver: workers exchange [`Msg`]s with the server over
-    /// the star [`Network`], with the per-worker round body fanned out
-    /// on the persistent pool's executors (no `thread::spawn` per run
-    /// — the seed spawned one OS thread per worker per call).  Each
-    /// lane owns its endpoint and model/aggregate buffers across
-    /// rounds, so the message protocol is identical to a long-lived
-    /// worker thread's.  Produces a bit-identical model trajectory to
-    /// [`Trainer::run`] because the gather orders updates by worker
-    /// id.  Genie sparsifiers are not supported here (they need a
-    /// global side-channel).
+    /// the in-process star [`InProc`], with the per-worker round body
+    /// fanned out on the persistent pool's executors (no
+    /// `thread::spawn` per run — the seed spawned one OS thread per
+    /// worker per call).  Each lane owns its [`WorkerLink`] and
+    /// model/aggregate buffers across rounds, so the message protocol
+    /// is identical to a long-lived worker thread's.  Produces a
+    /// bit-identical model trajectory to [`Trainer::run`] because the
+    /// gather orders updates by worker id.  Genie sparsifiers are not
+    /// supported here (they need a global side-channel).
     pub fn run_threaded(&mut self, iters: usize) -> RunLog {
         assert!(
             !self.workers.iter().any(Worker::needs_genie),
@@ -359,7 +359,7 @@ impl Trainer {
         );
         let n = self.workers.len();
         let dim = self.server.dim();
-        let mut net = Network::star(n);
+        let mut net = InProc::star(n);
         let mut log = RunLog::new(
             format!("{}-threaded", self.workers[0].sparsifier.name()),
             self.config_echo(),
@@ -367,7 +367,7 @@ impl Trainer {
         /// Per-worker execution lane: everything one pooled task needs.
         struct Lane {
             worker: Worker,
-            ep: crate::comm::Endpoint,
+            link: crate::comm::InProcLink,
             w_model: Vec<f32>,
             /// dense g^{t-1}, reconstructed from whichever broadcast
             /// form the server sent
@@ -380,7 +380,7 @@ impl Trainer {
             .drain(..)
             .enumerate()
             .map(|(i, worker)| Lane {
-                ep: net.endpoint(i),
+                link: net.link(i),
                 w_model: vec![0.0f32; dim],
                 mirror: GaggMirror::new(dim),
                 omega: omegas[i],
@@ -404,11 +404,11 @@ impl Trainer {
                     gagg: self.server.gagg_sparse().clone(),
                 });
             }
-            // worker phase on the pool: each lane drains its own
-            // endpoint (the broadcast is already queued, so no task
-            // blocks on another), computes, sparsifies, sends up
+            // worker phase on the pool: each lane drains its own link
+            // (the broadcast is already queued, so no task blocks on
+            // another), computes, sparsifies, sends up
             crate::util::pool::global().map_mut(&mut lanes, |i, lane| {
-                match lane.ep.down.recv().expect("server gone") {
+                match lane.link.recv().expect("server gone") {
                     Msg::Broadcast { round, gagg } => {
                         assert_eq!(round, t);
                         lane.w_model.copy_from_slice(&gagg[..dim]);
@@ -429,10 +429,7 @@ impl Trainer {
                     genie_acc: None,
                 };
                 let up = lane.worker.sparsify_update(&ctx);
-                lane.ep
-                    .up
-                    .send(Msg::Update { worker: i, round: t, update: up, loss })
-                    .expect("server gone");
+                lane.link.send(&Msg::Update { worker: i, round: t, update: up, loss });
             });
             // server phase: gather (ordered by worker id), aggregate
             let msgs = net.gather_round(n, t);
@@ -460,6 +457,198 @@ impl Trainer {
         self.t += iters;
         log
     }
+
+    /// Server loop over any [`Transport`]: broadcast the bootstrap
+    /// state (round 0, always dense), then per round gather →
+    /// aggregate → step → broadcast the next round's state.  Workers
+    /// live on the far side of the transport running [`serve_worker`]
+    /// — pool lanes over an in-process star, or threads/OS processes
+    /// over framed sockets — so `self.workers` is unused (and may be
+    /// drained) for the duration.  The trajectory is bit-identical to
+    /// [`Trainer::run`] / [`Trainer::run_threaded`] because gathers
+    /// are ordered by worker id and the aggregation path is shared.
+    ///
+    /// On byte-moving transports ([`Transport::counters`] is `Some`)
+    /// every round asserts the socket wire-byte deltas equal the
+    /// ledger's charged bytes — measured traffic IS the accounted
+    /// traffic — whenever the link model uses the paper's 32-bit
+    /// value format (other widths model hypothetical links narrower
+    /// than the real f32 frames, so only the ledger scales).
+    pub fn run_transport(&mut self, net: &mut dyn Transport, iters: usize) -> RunLog {
+        let n = self.config.workers;
+        let dim = self.server.dim();
+        let mut log = RunLog::new(
+            format!("{}-transport", self.config.sparsifier.name()),
+            self.config_echo(),
+        );
+        let mut bcast = vec![0.0f32; 2 * dim];
+        let mut dense_bcast = |server: &Server, gagg_prev: &[f32], round: usize| {
+            bcast[..dim].copy_from_slice(&server.w);
+            bcast[dim..].copy_from_slice(gagg_prev);
+            Msg::Broadcast { round, gagg: bcast.clone() }
+        };
+        // bootstrap broadcast b(0): always dense (g^{-1} exists only
+        // densely — zeros cold, restored state after a resume); the
+        // ledger never charges it, so the counters exclude it and
+        // cover exactly the charged span
+        net.broadcast(&dense_bcast(&self.server, &self.gagg_prev, 0));
+        net.reset_counters();
+        let mut wire_prev = net.counters();
+        for t in 0..iters {
+            let msgs = net.gather_round(n, t);
+            let mut updates = Vec::with_capacity(n);
+            let mut loss_sum = 0.0f64;
+            for m in msgs {
+                if let Msg::Update { update, loss, .. } = m {
+                    loss_sum += loss as f64;
+                    self.ledger.record_update(&update);
+                    updates.push(update);
+                }
+            }
+            let weighted: Vec<(f32, &SparseUpdate)> = updates
+                .iter()
+                .enumerate()
+                .map(|(i, up)| (self.config.omega(i), up))
+                .collect();
+            self.server.aggregate_and_step_scaled(&weighted, t, self.eta_scales.as_deref());
+            self.finish_round(t, dim, n);
+            // b(t+1) carries the state round t produced — the ledger
+            // charged it to round t, so the socket comparison below
+            // includes this send
+            if self.downlink.is_none() {
+                net.broadcast(&dense_bcast(&self.server, &self.gagg_prev, t + 1));
+            } else {
+                net.broadcast(&Msg::SparseBroadcast {
+                    round: t + 1,
+                    w: self.server.w.clone(),
+                    gagg: self.server.gagg_sparse().clone(),
+                });
+            }
+            let rt = *self.ledger.rounds().last().unwrap();
+            if let (Some(prev), Some(now)) = (wire_prev, net.counters()) {
+                if self.ledger.cost.value_bits == 32 {
+                    assert_eq!(
+                        (now.recv_wire - prev.recv_wire) as usize,
+                        rt.upload_bytes,
+                        "round {t}: socket upload bytes != ledger-charged bytes"
+                    );
+                    assert_eq!(
+                        (now.sent_wire - prev.sent_wire) as usize,
+                        rt.download_bytes,
+                        "round {t}: socket download bytes != ledger-charged bytes"
+                    );
+                }
+                wire_prev = Some(now);
+            }
+            let mut rec = IterRecord::new(t);
+            rec.loss = (loss_sum / n as f64) as f32;
+            rec.upload_bytes = rt.upload_bytes;
+            rec.sim_time_s = rt.sim_time_s;
+            log.push(rec);
+        }
+        self.t += iters;
+        log
+    }
+
+    /// Networked driver, loopback form: bind a TCP star, run every
+    /// worker as a [`serve_worker`] loop on its own OS thread behind
+    /// a [`TcpLink`], and drive the server with
+    /// [`Trainer::run_transport`].  Every message crosses a real
+    /// socket as framed bytes — the same path `repro train
+    /// --transport tcp` exercises with worker *processes* — and the
+    /// trajectory stays bit-identical to the in-process drivers.
+    pub fn run_tcp_loopback(&mut self, iters: usize) -> RunLog {
+        self.run_tcp_loopback_counted(iters).0
+    }
+
+    /// [`Trainer::run_tcp_loopback`] plus the server-side
+    /// [`SocketCounters`], for callers that report measured socket
+    /// traffic next to the ledger's charged bytes (`repro comm`).
+    pub fn run_tcp_loopback_counted(&mut self, iters: usize) -> (RunLog, SocketCounters) {
+        assert!(
+            !self.workers.iter().any(Worker::needs_genie),
+            "gtopk requires the deterministic driver"
+        );
+        let mut net = Tcp::bind().expect("tcp bind");
+        let addr = net.addr().to_string();
+        let omegas: Vec<f32> = (0..self.workers.len()).map(|i| self.config.omega(i)).collect();
+        // long-lived per-worker loops can't run on the pool (its
+        // executors must stay available to other callers), so this is
+        // genuinely a thread-per-worker driver
+        // repro-lint: allow(spawn-outside-pool)
+        let handles: Vec<_> = self
+            .workers
+            .drain(..)
+            .zip(omegas)
+            .map(|(worker, omega)| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let id = worker.id;
+                    let mut link = TcpLink::connect(&addr, id).expect("worker connect");
+                    serve_worker(worker, &mut link, omega, iters)
+                })
+            })
+            .collect();
+        net.accept(handles.len()).expect("tcp accept");
+        let log = self.run_transport(&mut net, iters);
+        let counters = net.counters().expect("tcp counts bytes");
+        // reclaim workers in id order (threads were spawned in order)
+        self.workers = handles
+            .into_iter()
+            .map(|h| h.join().expect("worker thread"))
+            .collect();
+        (log, counters)
+    }
+}
+
+/// The worker side of a transport-driven run: consume `rounds`
+/// broadcasts over `link`, answering each with a sparsified update.
+/// This is the loop a separate worker *process* runs (`repro worker
+/// --connect`), and what [`Trainer::run_tcp_loopback`] runs per
+/// thread; the message protocol — and therefore the trajectory — is
+/// identical to [`Trainer::run_threaded`]'s pooled lanes.  Returns
+/// the worker (with its accumulated sparsifier state) so loopback
+/// callers can reclaim it.
+pub fn serve_worker(
+    mut worker: Worker,
+    link: &mut dyn WorkerLink,
+    omega: f32,
+    rounds: usize,
+) -> Worker {
+    let dim = worker.dim();
+    let mut w_model = vec![0.0f32; dim];
+    let mut mirror = GaggMirror::new(dim);
+    let id = worker.id;
+    for t in 0..rounds {
+        match link.recv().expect("server gone") {
+            Msg::Broadcast { round, gagg } => {
+                assert_eq!(round, t, "worker {id}: broadcast out of order");
+                w_model.copy_from_slice(&gagg[..dim]);
+                mirror.copy_dense(&gagg[dim..]);
+            }
+            Msg::SparseBroadcast { round, w, gagg } => {
+                assert_eq!(round, t, "worker {id}: broadcast out of order");
+                w_model.copy_from_slice(&w);
+                mirror.apply(&gagg);
+            }
+            m @ Msg::Update { .. } => panic!("worker {id}: unexpected {m:?}"),
+        }
+        let loss = worker.compute_grad(&w_model);
+        let ctx = RoundCtx { t, gagg_prev: mirror.dense(), omega, genie_acc: None };
+        let up = worker.sparsify_update(&ctx);
+        link.send(&Msg::Update { worker: id, round: t, update: up, loss });
+    }
+    // the server closes every round with a broadcast; consume the
+    // final one so its socket write can't race our disconnect
+    if let Some(m) = link.recv() {
+        match m {
+            Msg::Broadcast { round, .. } | Msg::SparseBroadcast { round, .. } => {
+                assert_eq!(round, rounds, "worker {id}: trailing broadcast out of order");
+            }
+            m @ Msg::Update { .. } => panic!("worker {id}: unexpected {m:?}"),
+        }
+    }
+    worker
 }
 
 #[cfg(test)]
@@ -654,6 +843,49 @@ mod tests {
             }
             let mut b = toy_trainer_with_downlink(kind, 0.9, Some(spec));
             b.run_threaded(15);
+            assert_eq!(a.server.w, b.server.w, "downlink {spec}");
+            assert_eq!(a.gagg_prev, b.gagg_prev, "downlink {spec}");
+            assert_eq!(
+                a.ledger.total_download_bytes(),
+                b.ledger.total_download_bytes(),
+                "downlink {spec}"
+            );
+        }
+    }
+
+    #[test]
+    fn tcp_loopback_driver_matches_deterministic() {
+        // framed sockets end-to-end: same trajectory, same ledger, and
+        // run_transport's per-round socket==ledger asserts all hold
+        let kind = SparsifierKind::RegTopK { k: 1, mu: 0.5, q: 1.0 };
+        let mut a = toy_trainer(kind.clone(), 0.9);
+        for _ in 0..10 {
+            a.round();
+        }
+        let mut b = toy_trainer(kind, 0.9);
+        let log = b.run_tcp_loopback(10);
+        assert_eq!(a.server.w, b.server.w);
+        assert_eq!(a.ledger.total_upload_bytes(), b.ledger.total_upload_bytes());
+        assert_eq!(a.ledger.total_download_bytes(), b.ledger.total_download_bytes());
+        assert_eq!(log.records().len(), 10);
+        // workers reclaimed in id order, cursor advanced
+        assert_eq!(b.workers.len(), 2);
+        assert_eq!(b.workers[0].id, 0);
+        assert_eq!(b.iter(), 10);
+    }
+
+    #[test]
+    fn tcp_loopback_driver_matches_deterministic_with_downlink() {
+        // sparse broadcasts cross the socket too (frame kind 2), and
+        // the download side of the socket==ledger assert covers them
+        for spec in ["*=", "*=:bits=8"] {
+            let kind = SparsifierKind::TopK { k: 1 };
+            let mut a = toy_trainer_with_downlink(kind.clone(), 0.9, Some(spec));
+            for _ in 0..10 {
+                a.round();
+            }
+            let mut b = toy_trainer_with_downlink(kind, 0.9, Some(spec));
+            b.run_tcp_loopback(10);
             assert_eq!(a.server.w, b.server.w, "downlink {spec}");
             assert_eq!(a.gagg_prev, b.gagg_prev, "downlink {spec}");
             assert_eq!(

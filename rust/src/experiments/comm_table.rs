@@ -112,11 +112,21 @@ pub struct MeasuredRow {
     /// broadcast cost x workers, per round
     pub down_bytes: usize,
     pub sim_s: f64,
+    /// socket-measured charged bytes/round from a loopback-TCP replay
+    /// of the same run (worker->server frames); equal to `up_bytes`
+    /// by construction — the frames carry exactly the charged bytes —
+    /// and asserted so every round by `Trainer::run_transport`
+    pub sock_up_bytes: usize,
+    /// socket-measured charged broadcast bytes/round of the replay
+    pub sock_down_bytes: usize,
 }
 
 /// Measured bytes/round per sparsifier on the (reduced) Fig. 2
 /// testbed, including downlink-compressed RegTop-k variants (`dl`
-/// rows: lossless sparse broadcast, and 8-bit Rice-indexed).
+/// rows: lossless sparse broadcast, and 8-bit Rice-indexed).  Each
+/// row is measured twice: the deterministic driver fills the ledger
+/// columns, and a loopback-TCP replay fills the socket columns from
+/// real framed traffic.
 pub fn measured(s: f64, iters: usize, seed: u64) -> Vec<MeasuredRow> {
     let params = sweeps::sweep_params(8);
     let problem = generate(params, seed);
@@ -144,11 +154,17 @@ pub fn measured(s: f64, iters: usize, seed: u64) -> Vec<MeasuredRow> {
         for _ in 0..iters {
             tr.round();
         }
+        // loopback-TCP replay: the same trajectory over real sockets,
+        // counted at the server's connections
+        let mut tcp = fig2::trainer_from_config(&config, &problem);
+        let (_, sock) = tcp.run_tcp_loopback_counted(iters);
         MeasuredRow {
             name,
             up_bytes: tr.ledger.total_upload_bytes() / iters,
             down_bytes: tr.ledger.total_download_bytes() / iters,
             sim_s: tr.ledger.total_sim_time() / iters as f64,
+            sock_up_bytes: sock.recv_wire as usize / iters,
+            sock_down_bytes: sock.sent_wire as usize / iters,
         }
     })
     .collect()
@@ -205,6 +221,17 @@ mod tests {
         let t = rows.iter().find(|r| r.name == "topk").unwrap().up_bytes;
         let r = rows.iter().find(|r| r.name == "regtopk").unwrap().up_bytes;
         assert_eq!(t, r);
+    }
+
+    #[test]
+    fn socket_columns_equal_ledger_columns() {
+        // the tentpole acceptance in table form: bytes measured at the
+        // server's sockets == bytes the ledger charged, both directions
+        let rows = measured(0.1, 4, 5);
+        for r in &rows {
+            assert_eq!(r.sock_up_bytes, r.up_bytes, "{}: socket uplink", r.name);
+            assert_eq!(r.sock_down_bytes, r.down_bytes, "{}: socket downlink", r.name);
+        }
     }
 
     #[test]

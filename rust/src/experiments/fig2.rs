@@ -50,20 +50,29 @@ pub fn trainer_sharded(
 pub fn trainer_from_config(config: &TrainConfig, problem: &LinearProblem) -> Trainer {
     let n = problem.params.workers;
     assert_eq!(config.workers, n, "config.workers != problem workers");
+    let workers = (0..n).map(|i| worker_from_config(config, problem, i)).collect();
     let dim = problem.params.dim;
-    let layout = config.layout_for(dim);
-    let workers = (0..n)
-        .map(|i| {
-            Worker::with_layout(
-                i,
-                Box::new(LinRegShard { shard: problem.shards[i].clone() }),
-                config.build_sparsifier(dim, i),
-                layout.clone(),
-            )
-        })
-        .collect();
     let server = Server::new(vec![0.0; dim], Box::new(Sgd::new(config.eta)));
     Trainer::new(config.clone(), workers, server)
+}
+
+/// Build worker `i` of a config's testbed run, exactly as
+/// [`trainer_from_config`] would — including the engine shard count
+/// `Trainer::new` normally wires in.  This is the constructor a
+/// standalone worker *process* (`repro worker --connect`) uses: the
+/// problem generator is seeded, so every process derives the same
+/// shards and the networked trajectory matches the in-process one
+/// bit-for-bit.
+pub fn worker_from_config(config: &TrainConfig, problem: &LinearProblem, i: usize) -> Worker {
+    let dim = problem.params.dim;
+    let mut w = Worker::with_layout(
+        i,
+        Box::new(LinRegShard { shard: problem.shards[i].clone() }),
+        config.build_sparsifier(dim, i),
+        config.layout_for(dim),
+    );
+    w.set_shards(config.effective_shards(dim));
+    w
 }
 
 /// ||w - w*||

@@ -15,13 +15,21 @@
 //! repro train  --config cfg.json [--groups 60,40 --budget prop:0.1]
 //!              [--policy 'glob=family:k=v,...;...']
 //!              [--downlink 'glob=:bits=..,idx=..,levels=..;...']
+//!              [--transport inproc|tcp|uds]
 //!                                      (generic linreg-testbed run;
 //!                                       --groups switches on the
 //!                                       layer-wise bucketed path,
 //!                                       --policy makes it heterogeneous,
 //!                                       --downlink compresses the
 //!                                       server broadcast — codec-only
-//!                                       keys, works flat or grouped)
+//!                                       keys, works flat or grouped;
+//!                                       --transport tcp|uds spawns each
+//!                                       worker as a separate OS process
+//!                                       over framed sockets)
+//! repro worker --connect ADDR --config cfg.json --worker I --iters T
+//!                                      (one worker process; spawned by
+//!                                       `repro train --transport tcp`,
+//!                                       also usable by hand)
 //! repro info                          (artifact + platform report)
 //! repro lint   [--root DIR] [--json]  (repo-invariant static analyzer;
 //!              [--schema]              exit 1 on any finding; --json
@@ -38,7 +46,9 @@
 
 use std::path::{Path, PathBuf};
 
+use regtopk::comm::{Tcp, TcpLink, Transport, TransportKind};
 use regtopk::config::TrainConfig;
+use regtopk::coordinator::Trainer;
 use regtopk::data::linear::{generate, LinearParams};
 use regtopk::experiments::{comm_table, fig1, fig2, fig3, sweeps};
 use regtopk::metrics::RunLog;
@@ -57,11 +67,12 @@ fn main() {
         "baselines" => cmd_baselines(args),
         "comm" => cmd_comm(args),
         "train" => cmd_train(args),
+        "worker" => cmd_worker(args),
         "info" => cmd_info(args),
         "lint" => cmd_lint(args),
         _ => {
             eprintln!(
-                "usage: repro <fig1|fig2|fig3|sweep|baselines|comm|train|info|lint> [flags]\n\
+                "usage: repro <fig1|fig2|fig3|sweep|baselines|comm|train|worker|info|lint> [flags]\n\
                  run `repro <cmd> --help` for per-command flags"
             );
             2
@@ -502,18 +513,20 @@ fn cmd_comm(args: Vec<String>) -> i32 {
     }
     println!("\nmeasured bytes/round on the linreg testbed (8 workers, J=60):");
     println!(
-        "    {:<12} {:>10} {:>10} {:>12}   (ledger-measured, both directions)",
-        "", "uplink B", "downlink B", "sim ms"
+        "    {:<12} {:>10} {:>10} {:>12} {:>10} {:>10}   (ledger-charged | socket-counted over loopback TCP)",
+        "", "uplink B", "downlink B", "sim ms", "sock up B", "sock dn B"
     );
     for &s in &ss {
         println!("  S={s}:");
         for r in comm_table::measured(s, p.get_usize("iters"), p.get_usize("seed") as u64) {
             println!(
-                "    {:<12} {:>10} {:>10} {:>12.3}",
+                "    {:<12} {:>10} {:>10} {:>12.3} {:>10} {:>10}",
                 r.name,
                 r.up_bytes,
                 r.down_bytes,
-                r.sim_s * 1e3
+                r.sim_s * 1e3,
+                r.sock_up_bytes,
+                r.sock_down_bytes
             );
         }
     }
@@ -536,6 +549,7 @@ fn cmd_train(args: Vec<String>) -> i32 {
     .flag("budget", "", "per-group budget policy: global:K | per:K1,K2,... | prop:FRAC")
     .flag("policy", "", "heterogeneous per-group policies 'glob=family:k=v,...;...' (empty = homogeneous)")
     .flag("downlink", "", "downlink codec rules 'glob=:bits=..,idx=..,levels=..;...' (codec-only keys; empty = dense broadcast)")
+    .flag("transport", "", "inproc | tcp | uds: tcp/uds run each worker as a separate OS process over framed sockets (default: config)")
     .flag("sparsifier", "", "override sparsifier by name (dense|topk|regtopk|randk|threshold|gtopk|dgc|adak)")
     .flag("k", "1", "sparsity budget k")
     .flag("mu", "0.5", "regtopk temperature")
@@ -623,6 +637,15 @@ fn cmd_train(args: Vec<String>) -> i32 {
             cfg.downlink = Some(table);
         }
     }
+    if p.provided("transport") && !p.get("transport").is_empty() {
+        cfg.transport = match TransportKind::parse(p.get("transport")) {
+            Ok(k) => k,
+            Err(e) => {
+                eprintln!("bad --transport: {e}");
+                return 2;
+            }
+        };
+    }
     // budgets/policies are only consulted on the grouped path —
     // silently ignoring them would misreport the experiment, so reject
     if cfg.budget.is_some() && cfg.groups.is_none() {
@@ -700,9 +723,22 @@ fn cmd_train(args: Vec<String>) -> i32 {
     }
     let problem = generate(params, cfg.seed);
     let mut tr = fig2::trainer_from_config(&cfg, &problem);
-    let log = fig2::run_curve_with(&mut tr, &problem, "train", cfg.iters);
+    let log = match cfg.transport {
+        TransportKind::InProc => fig2::run_curve_with(&mut tr, &problem, "train", cfg.iters),
+        TransportKind::Tcp | TransportKind::Uds => {
+            match run_train_networked(&mut tr, &cfg) {
+                Ok(l) => l,
+                Err(e) => {
+                    eprintln!("networked train failed: {e}");
+                    return 1;
+                }
+            }
+        }
+    };
     // report the shard count that actually ran: small testbeds fall
-    // back to serial regardless of the configured value
+    // back to serial regardless of the configured value.  The final
+    // gap comes from the server model directly so the summary line is
+    // byte-comparable across transports (scripts/verify.sh diffs it).
     println!(
         "train: {} iters ({} / shards={} effective={}), final loss {:.6}, final gap {:.6}",
         cfg.iters,
@@ -710,7 +746,7 @@ fn cmd_train(args: Vec<String>) -> i32 {
         cfg.shards,
         cfg.effective_shards(params.dim),
         log.last().unwrap().loss,
-        log.last().unwrap().opt_gap
+        fig2::opt_gap(&tr.server.w, &problem.w_star)
     );
     // downlink-compressed runs: both ledger directions, next to the
     // dense 32J baseline the broadcast would otherwise have cost
@@ -761,6 +797,148 @@ fn cmd_train(args: Vec<String>) -> i32 {
         );
     }
     write_logs(&[log], p.get("out"), "train");
+    0
+}
+
+/// `repro train --transport tcp|uds`: bind a framed-socket star,
+/// spawn every worker as a SEPARATE OS PROCESS of this same binary
+/// (`repro worker --connect ...` against the resolved config written
+/// to a temp file), and drive the server loop.  The trajectory is
+/// bit-identical to the in-process path; `Trainer::run_transport`
+/// additionally asserts the per-round socket bytes equal the ledger's
+/// charged bytes.
+fn run_train_networked(tr: &mut Trainer, cfg: &TrainConfig) -> Result<RunLog, String> {
+    let uds_path = std::env::temp_dir()
+        .join(format!("regtopk-train-{}.sock", std::process::id()));
+    let mut net = match cfg.transport {
+        TransportKind::Tcp => Tcp::bind()?,
+        TransportKind::Uds => bind_uds(&uds_path)?,
+        TransportKind::InProc => unreachable!("networked driver called for inproc"),
+    };
+    // workers rebuild the run from the RESOLVED config (CLI overrides
+    // already applied), so both sides derive identical state
+    let cfg_path = std::env::temp_dir()
+        .join(format!("regtopk-train-{}.json", std::process::id()));
+    std::fs::write(&cfg_path, cfg.to_json().dump())
+        .map_err(|e| format!("writing {}: {e}", cfg_path.display()))?;
+    let exe = std::env::current_exe().map_err(|e| format!("current_exe: {e}"))?;
+    let mut children = Vec::with_capacity(cfg.workers);
+    for i in 0..cfg.workers {
+        let mut c = std::process::Command::new(&exe);
+        c.arg("worker")
+            .arg("--connect")
+            .arg(net.addr())
+            .arg("--config")
+            .arg(&cfg_path)
+            .arg("--worker")
+            .arg(i.to_string())
+            .arg("--iters")
+            .arg(cfg.iters.to_string());
+        if cfg.transport == TransportKind::Uds {
+            c.arg("--uds");
+        }
+        children.push(c.spawn().map_err(|e| format!("spawning worker {i}: {e}"))?);
+    }
+    net.accept(cfg.workers)?;
+    let log = tr.run_transport(&mut net, cfg.iters);
+    for (i, mut ch) in children.into_iter().enumerate() {
+        let st = ch.wait().map_err(|e| format!("waiting for worker {i}: {e}"))?;
+        if !st.success() {
+            return Err(format!("worker process {i} exited with {st}"));
+        }
+    }
+    let _ = std::fs::remove_file(&cfg_path);
+    let _ = std::fs::remove_file(&uds_path);
+    if let Some(c) = net.counters() {
+        println!(
+            "transport {}: {} worker processes; socket charged bytes up {} / down {} \
+             ({} frames in, {} frames out; {} raw bytes in, {} out)",
+            cfg.transport.name(),
+            cfg.workers,
+            c.recv_wire,
+            c.sent_wire,
+            c.recv_frames,
+            c.sent_frames,
+            c.recv_bytes,
+            c.sent_bytes
+        );
+    }
+    Ok(log)
+}
+
+/// Bind the `--transport uds` listener (a stale socket file from a
+/// crashed run is removed first).
+#[cfg(unix)]
+fn bind_uds(path: &Path) -> Result<Tcp, String> {
+    let _ = std::fs::remove_file(path);
+    Tcp::bind_uds(&path.to_string_lossy())
+}
+
+#[cfg(not(unix))]
+fn bind_uds(_path: &Path) -> Result<Tcp, String> {
+    Err("unix domain sockets are unavailable on this platform".to_string())
+}
+
+/// `repro worker` — one worker of a networked run, as its own OS
+/// process: rebuild worker state from the resolved config, connect to
+/// the server's framed socket, and serve rounds.
+fn cmd_worker(args: Vec<String>) -> i32 {
+    let p = Cli::new(
+        "Worker process for `repro train --transport tcp|uds`: connects\n\
+         to the server, handshakes its worker id, then serves the round\n\
+         protocol (recv broadcast, compute, sparsify, send update).",
+    )
+    .required("connect", "server address host:port (or socket path with --uds)")
+    .required("config", "path to the RESOLVED config JSON the server wrote")
+    .flag("worker", "0", "this worker's id (0-based)")
+    .flag("iters", "0", "rounds to serve (must match the server)")
+    .switch("uds", "connect over a unix domain socket")
+    .parse_from(args);
+    let p = match p {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let cfg = match TrainConfig::from_json_file(Path::new(p.get("config"))) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("bad config: {e}");
+            return 2;
+        }
+    };
+    let i = p.get_usize("worker");
+    if i >= cfg.workers {
+        eprintln!("worker id {i} out of range (config has {} workers)", cfg.workers);
+        return 2;
+    }
+    // identical problem derivation to cmd_train: the generator is
+    // seeded, so every process sees the same shards
+    let params = LinearParams { workers: cfg.workers, ..LinearParams::fig2() };
+    let problem = generate(params, cfg.seed);
+    let worker = fig2::worker_from_config(&cfg, &problem, i);
+    let addr = p.get("connect");
+    #[cfg(unix)]
+    let link_res = if p.get_bool("uds") {
+        TcpLink::connect_uds(addr, i)
+    } else {
+        TcpLink::connect(addr, i)
+    };
+    #[cfg(not(unix))]
+    let link_res = if p.get_bool("uds") {
+        Err("unix domain sockets are unavailable on this platform".to_string())
+    } else {
+        TcpLink::connect(addr, i)
+    };
+    let mut link = match link_res {
+        Ok(l) => l,
+        Err(e) => {
+            eprintln!("worker {i}: {e}");
+            return 1;
+        }
+    };
+    regtopk::coordinator::serve_worker(worker, &mut link, cfg.omega(i), p.get_usize("iters"));
     0
 }
 

@@ -149,7 +149,14 @@ fn experiment_rows_construct() {
         idx_bound_bits: 7.0,
         rice_bits: 6.5,
     };
-    let mr = MeasuredRow { name: "dense".to_string(), up_bytes: 512, down_bytes: 512, sim_s: 0.25 };
+    let mr = MeasuredRow {
+        name: "dense".to_string(),
+        up_bytes: 512,
+        down_bytes: 512,
+        sim_s: 0.25,
+        sock_up_bytes: 512,
+        sock_down_bytes: 512,
+    };
     assert!(hr.bytes_per_round > dr.down_bytes_per_round);
     assert!(br.mean_k > 0.0 && cr.compression > 1.0 && mr.sim_s > 0.0);
 }

@@ -20,13 +20,15 @@
 //!    of the data), with resume covered in `rust/tests/resume.rs`.
 
 use regtopk::comm::codec::{
-    index_bits, IndexCodec, LevelKind, QuantPayload, RicePayload, ValueCodec, WireCost,
+    decode_header, decode_msg, encode_msg, index_bits, FrameStats, IndexCodec, LevelKind,
+    QuantPayload, RicePayload, ValueCodec, WireCost, FRAME_HEADER_BYTES, FRAME_MAGIC,
+    WIRE_VERSION,
 };
 use regtopk::config::TrainConfig;
 use regtopk::data::linear::{generate, LinearParams};
 use regtopk::experiments::fig2;
 use regtopk::grad::{GradLayout, GradView};
-use regtopk::comm::SparseUpdate;
+use regtopk::comm::{Msg, SparseUpdate};
 use regtopk::sparse::SparseVec;
 use regtopk::sparsify::{
     BudgetPolicy, LayerwiseSparsifier, PolicyTable, RoundCtx, Sparsifier, SparsifierKind,
@@ -359,6 +361,49 @@ fn auto_bits_trajectory_is_reproducible_and_in_range() {
     assert_eq!(tr_a.server.w, tr_b.server.w, "auto width must be deterministic");
     assert_eq!(tr_a.ledger.total_upload_bytes(), tr_b.ledger.total_upload_bytes());
     assert!(tr_a.server.w.iter().all(|w| w.is_finite()));
+}
+
+/// Golden-bytes fixture for the framed wire format (PR 9): the exact
+/// byte image of a known `Msg::Update` is pinned, so any accidental
+/// change to the v2 frame layout — header fields, endianness, bucket
+/// structure, bit packing — fails here before it ships.  The bytes
+/// were derived by hand from docs/WIRE.md §v2.
+#[test]
+fn framed_update_golden_bytes() {
+    #[rustfmt::skip]
+    const GOLDEN: [u8; 54] = [
+        // header: magic "RTKW", version 2, kind Update, pad, round 3,
+        // worker 1, payload len 34
+        0x52, 0x54, 0x4B, 0x57, 0x02, 0x00, 0x00, 0x00, 0x03, 0x00,
+        0x00, 0x00, 0x01, 0x00, 0x00, 0x00, 0x22, 0x00, 0x00, 0x00,
+        // loss 0.5, total_dim 8, num_buckets 1
+        0x00, 0x00, 0x00, 0x3F, 0x08, 0x00, 0x00, 0x00, 0x01, 0x00,
+        // bucket: offset 0, dim 8, nnz 2, flags 0
+        0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x08, 0x00, 0x00, 0x00,
+        0x02, 0x00, 0x00, 0x00, 0x00,
+        // LSB-first packed (value:32, index:3)*2 = 70 bits -> 9 bytes
+        0x00, 0x00, 0x80, 0x3F, 0x01,
+        0x00, 0x00, 0x00, 0x36,
+    ];
+    let up = SparseUpdate::single(SparseVec::new(8, vec![1, 6], vec![1.0, -2.0]));
+    let charged = WireCost::paper().update(&up);
+    let msg = Msg::Update { worker: 1, round: 3, update: up, loss: 0.5 };
+    let (bytes, st) = encode_msg(&msg);
+    assert_eq!(bytes[..], GOLDEN[..], "framed byte image drifted");
+    assert_eq!(st, FrameStats { bytes: GOLDEN.len(), wire: charged });
+    assert_eq!(charged, (2usize * (32 + index_bits(8))).div_ceil(8));
+    // header invariants, via the public header decoder
+    assert_eq!(&bytes[..4], FRAME_MAGIC);
+    let h = decode_header(&bytes[..FRAME_HEADER_BYTES]).expect("header");
+    assert_eq!(u16::from_le_bytes([bytes[4], bytes[5]]), WIRE_VERSION);
+    assert_eq!((h.round, h.worker), (3, 1));
+    assert_eq!(h.len as usize, GOLDEN.len() - FRAME_HEADER_BYTES);
+    // lossless: decode returns the identical message and stats, and
+    // re-encoding reproduces the fixture byte-for-byte
+    let (back, st2) = decode_msg(&bytes).expect("decode");
+    assert_eq!(back, msg);
+    assert_eq!(st2, st);
+    assert_eq!(encode_msg(&back).0, bytes);
 }
 
 /// The packed/raw/rice accounting helpers agree with a brute-force

@@ -276,9 +276,16 @@ fn full_tree_gate_is_clean() {
     let failing: Vec<&Finding> = report.failing().collect();
     assert!(failing.is_empty(), "analyzer findings on the repo tree: {failing:?}");
 
-    assert_eq!(RULES.len(), 12);
-    let new_rules =
-        ["wildcard", "layering", "dead-pub", "schema-drift", "schema-tag-reuse", "schema-doc"];
+    assert_eq!(RULES.len(), 13);
+    let new_rules = [
+        "wildcard",
+        "layering",
+        "dead-pub",
+        "schema-drift",
+        "schema-tag-reuse",
+        "schema-doc",
+        "net-outside-transport",
+    ];
     for rule in new_rules {
         assert!(RULES.contains(&rule), "missing rule id {rule}");
     }

@@ -1,0 +1,223 @@
+//! Networked-transport gates (PR 9 tentpole): a loopback-TCP star —
+//! every message crossing a real socket as length-framed bytes —
+//! replays the exact trajectory of the deterministic and threaded
+//! drivers for every sparsifier family, flat and grouped, quantized
+//! and downlink-compressed; the frame codec round-trips at boundary
+//! sizes 0/1/tiny/large; and torn or corrupt frames fail with an
+//! `Err`, never a panic or a wrong message.
+//!
+//! `GlobalTopK` is exercised by the deterministic driver only (see
+//! `rust/tests/determinism.rs`): the genie needs a global
+//! side-channel no message-passing transport provides.
+
+use regtopk::comm::codec::{
+    decode_header, decode_hello, decode_msg, decode_payload, encode_hello, encode_msg,
+    FrameHeader, FrameKind, FRAME_HEADER_BYTES, HELLO_BYTES, HELLO_MAGIC,
+};
+use regtopk::comm::{kind_of, Msg, SparseUpdate};
+use regtopk::config::TrainConfig;
+use regtopk::data::linear::{generate, LinearParams};
+use regtopk::experiments::fig2;
+use regtopk::grad::GradLayout;
+use regtopk::sparse::SparseVec;
+use regtopk::sparsify::{BudgetPolicy, PolicyTable, SparsifierKind};
+use regtopk::util::check;
+
+/// Every non-genie family (the transports carry no global
+/// side-channel, so `GlobalTopK` stays on the deterministic driver).
+fn transport_families(dim: usize) -> Vec<SparsifierKind> {
+    let k = (dim / 4).max(1);
+    vec![
+        SparsifierKind::Dense,
+        SparsifierKind::TopK { k },
+        SparsifierKind::RegTopK { k, mu: 0.5, q: 1.0 },
+        SparsifierKind::RandK { k, seed: 5 },
+        SparsifierKind::Threshold { tau: 0.5 },
+        SparsifierKind::Dgc { k, momentum: 0.9, clip: 0.0 },
+        SparsifierKind::AdaK { ratio: 1.0, k_min: 1, k_max: 2 * k },
+    ]
+}
+
+fn run_three_ways(cfg: &TrainConfig, seed: u64, iters: usize, label: &str) {
+    let params = LinearParams {
+        workers: cfg.workers,
+        rows_per_worker: 40,
+        dim: 16,
+        ..LinearParams::fig2()
+    };
+    let problem = generate(params, seed);
+    let mut det = fig2::trainer_from_config(cfg, &problem);
+    let mut thr = fig2::trainer_from_config(cfg, &problem);
+    let mut tcp = fig2::trainer_from_config(cfg, &problem);
+    for _ in 0..iters {
+        det.round();
+    }
+    thr.run_threaded(iters);
+    let log = tcp.run_tcp_loopback(iters);
+    assert_eq!(det.server.w, thr.server.w, "{label}: threaded trajectory diverged");
+    assert_eq!(det.server.w, tcp.server.w, "{label}: tcp trajectory diverged");
+    assert_eq!(log.records().len(), iters, "{label}");
+    // the framed bytes charge exactly what the deterministic ledger
+    // charged, both directions (run_transport additionally asserts
+    // the socket counters equal these figures per round)
+    assert_eq!(
+        det.ledger.total_upload_bytes(),
+        tcp.ledger.total_upload_bytes(),
+        "{label}: uplink bytes"
+    );
+    assert_eq!(
+        det.ledger.total_download_bytes(),
+        tcp.ledger.total_download_bytes(),
+        "{label}: downlink bytes"
+    );
+    assert_eq!(tcp.workers.len(), cfg.workers, "{label}: workers reclaimed");
+}
+
+/// Flat layout, every family: deterministic == threaded == TCP, in
+/// trajectory and in ledger bytes.
+#[test]
+fn tcp_loopback_is_bit_identical_for_all_families_flat() {
+    for kind in transport_families(16) {
+        let cfg = TrainConfig {
+            workers: 3,
+            eta: 0.03,
+            sparsifier: kind.clone(),
+            eval_every: 0,
+            ..TrainConfig::default()
+        };
+        run_three_ways(&cfg, 11, 8, &format!("{kind:?} flat"));
+    }
+}
+
+/// Grouped layout with a global budget, every family.
+#[test]
+fn tcp_loopback_is_bit_identical_for_all_families_grouped() {
+    let layout =
+        GradLayout::from_sizes([("conv.w".to_string(), 12), ("conv.b".to_string(), 4)]);
+    for kind in transport_families(16) {
+        let cfg = TrainConfig {
+            workers: 3,
+            eta: 0.03,
+            sparsifier: kind.clone(),
+            eval_every: 0,
+            groups: Some(layout.clone()),
+            budget: Some(BudgetPolicy::Global { k: 4 }),
+            ..TrainConfig::default()
+        };
+        run_three_ways(&cfg, 13, 8, &format!("{kind:?} grouped"));
+    }
+}
+
+/// Quantized uplink (4-bit packed values) and Rice-coded indices:
+/// codec payloads survive the socket framing bit-exactly.
+#[test]
+fn tcp_loopback_is_bit_identical_with_uplink_codecs() {
+    let layout =
+        GradLayout::from_sizes([("conv.w".to_string(), 12), ("conv.b".to_string(), 4)]);
+    for spec in ["*=:bits=4", "*=:idx=rice", "*=:bits=4,idx=rice"] {
+        let cfg = TrainConfig {
+            workers: 3,
+            eta: 0.03,
+            sparsifier: SparsifierKind::RegTopK { k: 4, mu: 0.5, q: 1.0 },
+            eval_every: 0,
+            groups: Some(layout.clone()),
+            budget: Some(BudgetPolicy::Global { k: 4 }),
+            policy: Some(PolicyTable::parse(spec).unwrap()),
+            ..TrainConfig::default()
+        };
+        run_three_ways(&cfg, 17, 8, spec);
+    }
+}
+
+/// Downlink-compressed broadcasts (lossless sparse and 8-bit coded):
+/// the `SparseBroadcast` frames replay the exact threaded protocol.
+#[test]
+fn tcp_loopback_is_bit_identical_with_downlink() {
+    for spec in ["*=", "*=:bits=8,idx=rice"] {
+        let cfg = TrainConfig {
+            workers: 3,
+            eta: 0.03,
+            sparsifier: SparsifierKind::RegTopK { k: 4, mu: 0.5, q: 1.0 },
+            eval_every: 0,
+            downlink: Some(PolicyTable::parse(spec).unwrap()),
+            ..TrainConfig::default()
+        };
+        run_three_ways(&cfg, 19, 8, &format!("downlink {spec}"));
+    }
+}
+
+/// Frame round-trip property at boundary sizes 0/1/tiny/large, for
+/// all three message kinds: decode(encode(m)) == m, stats agree, and
+/// re-encoding is byte-identical.
+#[test]
+fn frames_roundtrip_at_boundary_sizes() {
+    check::forall("frame_roundtrip_sizes", |rng, case| {
+        let n = [0usize, 1, 1 + rng.below(7), 50 + rng.below(150)][case % 4];
+        let dim = (n.max(1) * (1 + rng.below(500))).max(2);
+        let mut idx = rng.sample_indices(dim, n);
+        idx.sort_unstable();
+        let idx: Vec<u32> = idx.into_iter().map(|i| i as u32).collect();
+        let vals: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let up = SparseUpdate::single(SparseVec::new(dim, idx, vals));
+        let msgs = [
+            Msg::Update { worker: rng.below(8), round: case, update: up.clone(), loss: 0.25 },
+            Msg::Broadcast { round: case, gagg: (0..2 * n).map(|i| i as f32).collect() },
+            Msg::SparseBroadcast { round: case, w: vec![0.5; dim], gagg: up },
+        ];
+        for msg in msgs {
+            let (bytes, st) = encode_msg(&msg);
+            assert_eq!(
+                kind_of(&msg),
+                decode_header(&bytes[..FRAME_HEADER_BYTES]).expect("header").kind
+            );
+            let (back, st2) = decode_msg(&bytes).expect("decode");
+            assert_eq!(back, msg, "n={n} dim={dim}");
+            assert_eq!(st, st2);
+            assert_eq!(encode_msg(&back).0, bytes, "re-encode byte-identity");
+        }
+    });
+}
+
+/// Torn and corrupt frames are decode errors, never panics: every
+/// strict payload prefix fails, as do trailing bytes and a corrupt
+/// header, while the intact frame still decodes.
+#[test]
+fn torn_and_corrupt_frames_error_cleanly() {
+    let mut sv = SparseVec::zeros(32);
+    sv.push(2, 1.5);
+    sv.push(21, -0.75);
+    let gagg = SparseUpdate::single(sv);
+    let msg = Msg::SparseBroadcast { round: 6, w: vec![1.0; 32], gagg };
+    let (bytes, _) = encode_msg(&msg);
+    let h: FrameHeader = decode_header(&bytes[..FRAME_HEADER_BYTES]).expect("header");
+    assert_eq!(h.kind, FrameKind::SparseBroadcast);
+    for cut in 0..bytes.len() - FRAME_HEADER_BYTES {
+        let torn = decode_payload(&h, &bytes[FRAME_HEADER_BYTES..FRAME_HEADER_BYTES + cut]);
+        assert!(torn.is_err(), "payload cut at {cut} decoded");
+    }
+    let mut trailing = bytes.clone();
+    trailing.push(0);
+    assert!(decode_msg(&trailing).is_err(), "trailing byte accepted");
+    for at in [0usize, 4, 6, 7] {
+        let mut bad = bytes.clone();
+        bad[at] ^= 0x40;
+        assert!(decode_msg(&bad).is_err(), "corrupt header byte {at} accepted");
+    }
+    assert!(decode_msg(&bytes).is_ok(), "the intact frame still decodes");
+}
+
+/// The connection handshake round-trips and rejects corruption.
+#[test]
+fn hello_handshake_roundtrips() {
+    let hello = encode_hello(42);
+    assert_eq!(hello.len(), HELLO_BYTES);
+    assert_eq!(&hello[..4], HELLO_MAGIC);
+    assert_eq!(decode_hello(&hello), Ok(42));
+    let mut bad = hello;
+    bad[0] ^= 1;
+    assert!(decode_hello(&bad).is_err(), "bad magic accepted");
+    let mut wrong_version = hello;
+    wrong_version[4] ^= 0xFF;
+    assert!(decode_hello(&wrong_version).is_err(), "foreign version accepted");
+    assert!(decode_hello(&hello[..9]).is_err(), "short handshake accepted");
+}

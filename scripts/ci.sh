@@ -38,8 +38,9 @@ run_lint() {
 run_analyze() {
     # The repo-invariant analyzer (rust/src/analysis): SAFETY comments,
     # unsafe-module allowlist, no stray thread::spawn, one byte
-    # accountant, no wall-clock in deterministic paths, full
-    # SparsifierKind test matrices.  Exit 1 on any finding.
+    # accountant, sockets confined to comm/transport.rs, no wall-clock
+    # in deterministic paths, full SparsifierKind test matrices.  Exit
+    # 1 on any finding.
     echo "== ci/analyze: repro lint =="
     cargo build --release --bin repro
     target/release/repro lint
@@ -59,9 +60,11 @@ run_analyze() {
 
 run_verify() {
     # verify.sh is the tier-1 gate: cargo build --release, cargo test
-    # -q, the groupwise/heterogeneous/quantized CLI smoke runs and the
-    # quick-budget bench smoke (which refreshes BENCH_*.json for the
-    # workflow's artifact upload)
+    # -q, the groupwise/heterogeneous/quantized CLI smoke runs, the
+    # 2-worker loopback-TCP smoke (worker processes over framed
+    # sockets must reproduce the in-process summary byte-for-byte) and
+    # the quick-budget bench smoke (which refreshes BENCH_*.json for
+    # the workflow's artifact upload)
     scripts/verify.sh
 }
 

@@ -1,5 +1,6 @@
 #!/usr/bin/env bash
-# Tier-1 verification gate + style check + perf/groupwise smoke runs.
+# Tier-1 verification gate + style check + perf/groupwise/networked
+# smoke runs.
 #
 #   scripts/verify.sh          # build + tests + quick bench/CLI smoke
 #   scripts/verify.sh --full   # also run the benches at full budget
@@ -94,6 +95,36 @@ target/release/repro train --config "$smoke_dir/cfg.json" \
 # keeps the union support well under J so every sparse row must beat
 # the dense broadcast
 target/release/repro sweep --param downlink --iters 40 --s 0.05
+
+echo "== networked smoke: 2-worker loopback TCP vs in-process =="
+# PR 9 tentpole: the same run over real sockets — every worker a
+# separate OS process speaking the framed wire protocol — must print a
+# byte-identical summary line (final loss AND final gap), because the
+# trajectory is bit-identical by construction.  The downlink variant
+# additionally crosses SparseBroadcast frames and the per-direction
+# byte totals on the downlink: line.
+cat > "$smoke_dir/tcp.json" <<'EOF'
+{"workers": 2, "iters": 20, "eta": 0.02,
+ "sparsifier": {"name": "regtopk", "k": 10, "mu": 0.5, "q": 1.0}}
+EOF
+target/release/repro train --config "$smoke_dir/tcp.json" \
+    --out "$smoke_dir/out" | grep -E '^(train|downlink):' > "$smoke_dir/inproc.txt"
+target/release/repro train --config "$smoke_dir/tcp.json" --transport tcp \
+    --out "$smoke_dir/out" | grep -E '^(train|downlink):' > "$smoke_dir/tcp.txt"
+diff "$smoke_dir/inproc.txt" "$smoke_dir/tcp.txt" || {
+    echo "FAIL: TCP worker-process run diverged from the in-process run"
+    exit 1
+}
+target/release/repro train --config "$smoke_dir/tcp.json" \
+    --downlink '*=:bits=8,idx=rice' \
+    --out "$smoke_dir/out" | grep -E '^(train|downlink):' > "$smoke_dir/inproc.txt"
+target/release/repro train --config "$smoke_dir/tcp.json" --transport tcp \
+    --downlink '*=:bits=8,idx=rice' \
+    --out "$smoke_dir/out" | grep -E '^(train|downlink):' > "$smoke_dir/tcp.txt"
+diff "$smoke_dir/inproc.txt" "$smoke_dir/tcp.txt" || {
+    echo "FAIL: TCP downlink-compressed run diverged from the in-process run"
+    exit 1
+}
 
 if [[ "${1:-}" == "--full" ]]; then
     echo "== bench (full budget) =="
