@@ -1,0 +1,139 @@
+//! Kernel-layer benchmarks (ISSUE 10): chunked vs scalar-referee
+//! throughput for each hot-path primitive, at J = 2^16 and 2^20.
+//!
+//!     cargo bench --bench kernels
+//!
+//! Results land in BENCH_PR10.json (override with $BENCH_JSON):
+//! `kernels/<name>/{chunked,scalar}/J=<J>` entries with
+//! median_s/melem_per_s.  Every timed point re-asserts the layer's
+//! contract inline — the chunked output is BIT-identical to the
+//! referee's — so a run that reports a speedup on divergent results
+//! is impossible.
+
+use std::path::Path;
+
+use regtopk::util::bench::{black_box, Bench};
+use regtopk::util::kernels::{
+    abs_hist, abs_hist_ref, bf16_to_f32_slice, bf16_to_f32_slice_ref, f32_to_bf16_codes,
+    f32_to_bf16_codes_ref, fill_abs_hist, fill_abs_hist_ref, pack_fixed, pack_fixed_ref,
+    scatter_add, scatter_add_ref, unpack_fixed, unpack_fixed_ref,
+};
+use regtopk::util::rng::Rng;
+
+fn bench_json_path() -> String {
+    std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_PR10.json".to_string())
+}
+
+fn bits_of(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|v| v.to_bits()).collect()
+}
+
+fn main() {
+    let mut b = Bench::new();
+    for j in [1usize << 16, 1 << 20] {
+        let mut rng = Rng::seed_from(10);
+        let x: Vec<f32> = (0..j).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+
+        // ---- fused fill + magnitude histogram ----------------------
+        let fill = |lo: usize, block: &mut [f32]| {
+            for (i, slot) in block.iter_mut().enumerate() {
+                *slot = ((lo + i) as f32 - 7.0) * 0.03125;
+            }
+        };
+        let (mut buf, mut h) = (vec![0.0f32; j], [0u32; 256]);
+        b.run_throughput(&format!("kernels/fill_hist/chunked/J={j}"), j, || {
+            fill_abs_hist(0, &mut buf, &mut h, fill);
+            black_box(h[0]);
+        });
+        let (mut rbuf, mut rh) = (vec![0.0f32; j], [0u32; 256]);
+        b.run_throughput(&format!("kernels/fill_hist/scalar/J={j}"), j, || {
+            fill_abs_hist_ref(0, &mut rbuf, &mut rh, fill);
+            black_box(rh[0]);
+        });
+        assert_eq!(bits_of(&buf), bits_of(&rbuf), "fill_hist buffer diverged at J={j}");
+        assert_eq!(h, rh, "fill_hist histogram diverged at J={j}");
+
+        let mut h2 = [0u32; 256];
+        b.run_throughput(&format!("kernels/abs_hist/chunked/J={j}"), j, || {
+            h2.fill(0);
+            abs_hist(&x, &mut h2);
+            black_box(h2[128]);
+        });
+        let mut rh2 = [0u32; 256];
+        b.run_throughput(&format!("kernels/abs_hist/scalar/J={j}"), j, || {
+            rh2.fill(0);
+            abs_hist_ref(&x, &mut rh2);
+            black_box(rh2[128]);
+        });
+        assert_eq!(h2, rh2, "abs_hist diverged at J={j}");
+
+        // ---- merge scatter-add (k = J/64 entries, duplicates) ------
+        let k = j / 64;
+        let idx: Vec<u32> = (0..k).map(|_| rng.below(j) as u32).collect();
+        let val: Vec<f32> = (0..k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut acc = vec![0.0f32; j];
+        b.run_throughput(&format!("kernels/scatter_add/chunked/k={k}"), k, || {
+            acc.fill(0.0);
+            scatter_add(&mut acc, &idx, &val, 0.25);
+            black_box(acc[idx[0] as usize]);
+        });
+        let mut racc = vec![0.0f32; j];
+        b.run_throughput(&format!("kernels/scatter_add/scalar/k={k}"), k, || {
+            racc.fill(0.0);
+            scatter_add_ref(&mut racc, &idx, &val, 0.25);
+            black_box(racc[idx[0] as usize]);
+        });
+        assert_eq!(bits_of(&acc), bits_of(&racc), "scatter_add diverged at k={k}");
+
+        // ---- fixed-width bit pack / unpack at the codec's 5 bits ---
+        let bits = 5usize;
+        let codes: Vec<u32> = (0..j).map(|_| (rng.next_u64() & 0x1F) as u32).collect();
+        let (mut w, mut rw) = (Vec::new(), Vec::new());
+        b.run_throughput(&format!("kernels/pack_fixed/chunked/J={j}"), j, || {
+            pack_fixed(&codes, bits, &mut w);
+            black_box(w.len());
+        });
+        b.run_throughput(&format!("kernels/pack_fixed/scalar/J={j}"), j, || {
+            pack_fixed_ref(&codes, bits, &mut rw);
+            black_box(rw.len());
+        });
+        assert_eq!(w, rw, "pack_fixed diverged at J={j}");
+        let (mut u, mut ru) = (Vec::new(), Vec::new());
+        b.run_throughput(&format!("kernels/unpack_fixed/chunked/J={j}"), j, || {
+            unpack_fixed(&w, bits, j, &mut u);
+            black_box(u.len());
+        });
+        b.run_throughput(&format!("kernels/unpack_fixed/scalar/J={j}"), j, || {
+            unpack_fixed_ref(&w, bits, j, &mut ru);
+            black_box(ru.len());
+        });
+        assert_eq!(u, codes, "unpack_fixed is not the pack inverse at J={j}");
+        assert_eq!(ru, codes, "referee unpack diverged at J={j}");
+
+        // ---- half-width wire converts (bf16 axis) ------------------
+        let (mut c, mut rc) = (Vec::new(), Vec::new());
+        b.run_throughput(&format!("kernels/bf16_encode/chunked/J={j}"), j, || {
+            f32_to_bf16_codes(&x, &mut c);
+            black_box(c.len());
+        });
+        b.run_throughput(&format!("kernels/bf16_encode/scalar/J={j}"), j, || {
+            f32_to_bf16_codes_ref(&x, &mut rc);
+            black_box(rc.len());
+        });
+        assert_eq!(c, rc, "bf16 encode diverged at J={j}");
+        let (mut d, mut rd) = (Vec::new(), Vec::new());
+        b.run_throughput(&format!("kernels/bf16_decode/chunked/J={j}"), j, || {
+            bf16_to_f32_slice(&c, &mut d);
+            black_box(d.len());
+        });
+        b.run_throughput(&format!("kernels/bf16_decode/scalar/J={j}"), j, || {
+            bf16_to_f32_slice_ref(&c, &mut rd);
+            black_box(rd.len());
+        });
+        assert_eq!(bits_of(&d), bits_of(&rd), "bf16 decode diverged at J={j}");
+    }
+
+    let path = bench_json_path();
+    b.write_json(Path::new(&path)).unwrap_or_else(|e| eprintln!("# could not write {path}: {e}"));
+    println!("# kernel points are chunked/scalar pairs; bit-identity asserted inline");
+}

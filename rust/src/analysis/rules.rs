@@ -13,6 +13,7 @@
 //! | `byte-accounting`   | bits→bytes (`div_ceil(8)`) only inside `comm/codec/`  |
 //! | `net-outside-transport` | `std::net` sockets only in `comm/transport.rs`    |
 //! | `wall-clock`        | no wall-clock/OS-entropy calls in deterministic paths |
+//! | `bit-kernels-outside-kernels` | float bit-twiddling only in the kernel layer |
 //! | `kind-matrix`       | every `SparsifierKind` family in both test matrices   |
 //! | `wildcard`          | no `_`/binding arm in matches over wire enums/tags    |
 //! | `layering`          | `use` edges respect the declared module DAG           |
@@ -48,6 +49,7 @@ pub const RULES: &[&str] = &[
     "byte-accounting",
     "net-outside-transport",
     "wall-clock",
+    "bit-kernels-outside-kernels",
     "kind-matrix",
     "wildcard",
     "layering",
@@ -97,6 +99,19 @@ const WALL_CLOCK_TOKENS: &[&str] = &[
 /// The wall-clock rule does not apply here: measuring elapsed time is
 /// the bench harness's whole job.
 const WALL_CLOCK_EXEMPT: &[&str] = &["rust/src/util/bench.rs"];
+
+/// Float bit-reinterpretation tokens confined to the kernel layer.
+/// `util::kernels` owns every bit-level float primitive (magnitude
+/// keys, bf16/f16 converts, histogram bin edges) with a scalar
+/// referee pinning each one bit-identical; a `to_bits`/`from_bits`
+/// scattered anywhere else escapes that contract.
+const BIT_KERNEL_TOKENS: &[&str] = &["to_bits", "from_bits", "mag_bits"];
+
+/// Files allowed to bit-twiddle floats directly: the kernel layer
+/// itself and the select path's radix loops (the kernels' independent
+/// scalar referee — sharing an implementation would make the
+/// bit-identity tests tautological).
+const BIT_KERNEL_FILES: &[&str] = &["rust/src/util/kernels.rs", "rust/src/sparse/topk.rs"];
 
 /// The two test matrices every `SparsifierKind` family must appear in.
 const KIND_MATRIX_FILES: &[&str] = &["rust/tests/resume.rs", "rust/tests/determinism.rs"];
@@ -235,6 +250,23 @@ fn scan_file(file: &SourceFile, findings: &mut Vec<Finding>) {
                       bytes stay the wire bytes by construction"
                     .to_string(),
                 waived: file.has_waiver(idx, "byte-accounting"),
+            });
+        }
+
+        if !in_test
+            && !BIT_KERNEL_FILES.contains(&path)
+            && BIT_KERNEL_TOKENS.iter().any(|t| has_word(&line.code, t))
+        {
+            findings.push(Finding {
+                rule: "bit-kernels-outside-kernels",
+                path: path.to_string(),
+                line: n,
+                msg: "float bit reinterpretation outside the kernel layer — \
+                      route through util::kernels (or sparse/topk.rs's referee \
+                      loops) so the scalar-referee bit-identity contract covers \
+                      it, or waive with a justification"
+                    .to_string(),
+                waived: file.has_waiver(idx, "bit-kernels-outside-kernels"),
             });
         }
 
@@ -511,6 +543,27 @@ mod tests {
         assert_eq!(f.len(), 1, "{f:?}");
         assert_eq!(f[0].rule, "wall-clock");
         assert!(run(&[("rust/src/util/bench.rs", "let t0 = Instant::now();\n")]).is_empty());
+    }
+
+    #[test]
+    fn bit_kernel_rule_confines_float_twiddling() {
+        let f = run(&[("rust/src/comm/codec/packed.rs", "let b = v.to_bits();\n")]);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "bit-kernels-outside-kernels");
+        let f = run(&[("rust/src/optim/mod.rs", "let v = f32::from_bits(u);\n")]);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "bit-kernels-outside-kernels");
+        // the kernel layer and the referee radix loops are free
+        assert!(run(&[("rust/src/util/kernels.rs", "let b = v.to_bits();\n")]).is_empty());
+        assert!(run(&[("rust/src/sparse/topk.rs", "let m = mag_bits(v);\n")]).is_empty());
+        // test code anywhere is free (bit-identity asserts live there)
+        assert!(run(&[("rust/tests/codec.rs", "let b = v.to_bits();\n")]).is_empty());
+        // `auto_bits` must not trip the `to_bits` token (word bound)
+        assert!(run(&[("rust/src/sparsify/mod.rs", "auto_bits: Option<usize>,\n")]).is_empty());
+        // waivable with a justification
+        let src = "// raw f32 word on the wire — repro-lint: allow(bit-kernels-outside-kernels)\n\
+                   bw.put(v.to_bits(), 32);\n";
+        assert!(run(&[("rust/src/comm/codec/frame.rs", src)]).is_empty());
     }
 
     #[test]

@@ -323,13 +323,18 @@ fn encode_update(up: &SparseUpdate, out: &mut Vec<u8>) -> usize {
             out.push(match q.level_kind() {
                 LevelKind::Uniform => 0,
                 LevelKind::Nuq => 1,
+                LevelKind::Fp16 => 2,
+                LevelKind::Bf16 => 3,
             });
         }
         let start = out.len();
         if let Some(rp) = rice {
-            // values first (codes or raw f32), then the Rice stream
+            // values first (codes or raw f32), then the Rice stream;
+            // half-width kinds are scale-free (the code IS the value)
             if let Some(q) = quant {
-                put_f32(out, q.scale());
+                if !q.level_kind().is_half() {
+                    put_f32(out, q.scale());
+                }
                 let mut bw = BitWriter::default();
                 for i in 0..b.nnz() {
                     bw.put(q.code(i), q.bits());
@@ -350,13 +355,16 @@ fn encode_update(up: &SparseUpdate, out: &mut Vec<u8>) -> usize {
             let ib = if raw { 32 } else { index_bits(b.dim()) };
             let mut bw = BitWriter::default();
             if let Some(q) = quant {
-                put_f32(out, q.scale());
+                if !q.level_kind().is_half() {
+                    put_f32(out, q.scale());
+                }
                 for (i, &idx) in b.indices().iter().enumerate() {
                     bw.put(q.code(i), q.bits());
                     bw.put(idx, ib);
                 }
             } else {
                 for (&idx, &v) in b.indices().iter().zip(b.values()) {
+                    // repro-lint: allow(bit-kernels-outside-kernels)
                     bw.put(v.to_bits(), 32);
                     bw.put(idx, ib);
                 }
@@ -514,8 +522,13 @@ fn decode_update(cur: &mut Cursor) -> Result<(SparseUpdate, usize), String> {
             let levels = match cur.u8()? {
                 0 => LevelKind::Uniform,
                 1 => LevelKind::Nuq,
+                2 => LevelKind::Fp16,
+                3 => LevelKind::Bf16,
                 b => return Err(format!("bucket {g}: unknown level-family byte {b}")),
             };
+            if levels.is_half() && bits != 16 {
+                return Err(format!("bucket {g}: half-width family requires 16 bits, got {bits}"));
+            }
             Some((bits, levels))
         } else {
             None
@@ -524,7 +537,8 @@ fn decode_update(cur: &mut Cursor) -> Result<(SparseUpdate, usize), String> {
         let (indices, values, quant) = if has_rice {
             let (values, quant) = match qmeta {
                 Some((bits, levels)) => {
-                    let scale = cur.f32()?;
+                    // half-width kinds carry no scale on the wire
+                    let scale = if levels.is_half() { 0.0 } else { cur.f32()? };
                     let mut br = BitReader::new(cur.rest());
                     let mut codes = Vec::with_capacity(nnz);
                     for _ in 0..nnz {
@@ -543,7 +557,8 @@ fn decode_update(cur: &mut Cursor) -> Result<(SparseUpdate, usize), String> {
             let mut indices = Vec::with_capacity(nnz);
             let (values, quant) = match qmeta {
                 Some((bits, levels)) => {
-                    let scale = cur.f32()?;
+                    // half-width kinds carry no scale on the wire
+                    let scale = if levels.is_half() { 0.0 } else { cur.f32()? };
                     let mut br = BitReader::new(cur.rest());
                     let mut codes = Vec::with_capacity(nnz);
                     for _ in 0..nnz {
@@ -556,6 +571,7 @@ fn decode_update(cur: &mut Cursor) -> Result<(SparseUpdate, usize), String> {
                 None => {
                     let mut values = Vec::with_capacity(nnz);
                     for _ in 0..nnz {
+                        // repro-lint: allow(bit-kernels-outside-kernels)
                         values.push(f32::from_bits(br.get(32)?));
                         indices.push(br.get(ib)?);
                     }
@@ -739,6 +755,59 @@ mod tests {
         let (back, st) = roundtrip(&msg);
         assert_eq!(st.wire, expect);
         assert_eq!(back, msg);
+    }
+
+    #[test]
+    fn half_width_buckets_roundtrip_scale_free() {
+        for levels in [LevelKind::Fp16, LevelKind::Bf16] {
+            let mut up = grouped_update();
+            let mut rng = Rng::seed_from(11);
+            let (mut residual, mut codes) = (Vec::new(), Vec::new());
+            {
+                let (b, q) = up.bucket_quant_mut(0);
+                let vc = ValueCodec { bits: 16, levels };
+                vc.encode_bucket(b, &mut rng, q, &mut residual, &mut codes);
+            }
+            // bucket 0 also exercises the rice index path with half values
+            let idx: Vec<u32> = up.bucket(0).indices().to_vec();
+            up.payload_mut(0).rice.encode_into(&idx);
+            {
+                let (b, q) = up.bucket_quant_mut(1);
+                let vc = ValueCodec { bits: 16, levels };
+                vc.encode_bucket(b, &mut rng, q, &mut residual, &mut codes);
+            }
+            let expect = WireCost::paper().update(&up);
+            let msg = Msg::Update { worker: 2, round: 5, update: up, loss: 0.125 };
+            let (back, st) = roundtrip(&msg);
+            assert_eq!(st.wire, expect, "{levels:?}: half payloads charge 16 bits/value");
+            assert_eq!(back, msg);
+        }
+    }
+
+    #[test]
+    fn half_width_family_byte_requires_sixteen_bits() {
+        let mut sv = SparseVec::zeros(64);
+        sv.push(17, -3.25);
+        let mut up = SparseUpdate::single(sv);
+        let mut rng = Rng::seed_from(3);
+        let (mut residual, mut codes) = (Vec::new(), Vec::new());
+        let (b, q) = up.bucket_quant_mut(0);
+        let vc = ValueCodec { bits: 16, levels: LevelKind::Fp16 };
+        vc.encode_bucket(b, &mut rng, q, &mut residual, &mut codes);
+        let msg = Msg::Update { worker: 0, round: 0, update: up, loss: 0.0 };
+        let (bytes, _) = encode_msg(&msg);
+        // the bucket preamble is flags=1 (quant only), bits=16, family=2;
+        // that window is unique in this minimal frame by construction
+        let pat: Vec<usize> = bytes
+            .windows(3)
+            .enumerate()
+            .filter(|(_, w)| w == &[1u8, 16, 2])
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(pat.len(), 1, "qmeta window must be unique");
+        let mut bad = bytes.clone();
+        bad[pat[0] + 1] = 8; // claims 8-bit codes with a half family
+        assert!(decode_msg(&bad).is_err(), "half family with bits != 16 must not decode");
     }
 
     #[test]

@@ -12,7 +12,9 @@
 //! | index   | `rice`   | measured Golomb–Rice bits      | delta-sorted gaps, per-bucket Rice parameter |
 //! | value   | f32      | 32 bits (or the link's width)  | default when `bits` is unset |
 //! | value   | `uniform`| `bits` bits + 4 B scale/bucket | offset-binary stochastic rounding (PR 4) |
-//! | value   | `nuq`    | `bits` bits + 4 B scale/bucket | NUQSGD-style exponential level table |
+//! | value   | `nuq`    | `bits` bits + 4 B scale/bucket | NUQSGD-style exponential table, histogram-fit scale (PR 10) |
+//! | value   | `fp16`   | 16 bits, no scale header       | real IEEE binary16 words (RNE encode, exact widen) |
+//! | value   | `bf16`   | 16 bits, no scale header       | real bfloat16 words (RNE encode, exact widen) |
 //!
 //! The paper charges each transmitted entry "log J bits" for its index
 //! (§2) — an information bound, not a code.  "Understanding Top-k
@@ -179,8 +181,12 @@ impl ValueCodec {
                 // NUQSGD-style grid: magnitudes {0} ∪ {scale * 2^(q-L)
                 // for q in 1..=L}, stochastic rounding between adjacent
                 // levels (unbiased), sign folded offset-binary exactly
-                // like the uniform code space.
-                let scale = if max == 0.0 { 1.0 } else { max };
+                // like the uniform code space.  The scale is fit from
+                // the bucket's magnitude histogram (PR 10) instead of
+                // the outlier-sensitive max; entries above it clamp to
+                // the top level with exactly one draw, error folded
+                // into feedback like any other rounding.
+                let scale = if max == 0.0 { 1.0 } else { nuq_fit_scale(values, max) };
                 for v in values.iter_mut() {
                     let q_mag: i64 = if max == 0.0 {
                         0
@@ -217,7 +223,55 @@ impl ValueCodec {
                 }
                 payload.encode_with_levels(self.bits, scale, codes_scratch, LevelKind::Nuq);
             }
+            LevelKind::Fp16 | LevelKind::Bf16 => {
+                // true half-width wire values: deterministic RNE
+                // narrowing (consumes NO rounding stream — the stream
+                // position is as if the bucket were never quantized),
+                // exact widening decode, narrowing error folded into
+                // error feedback exactly like the stochastic families.
+                debug_assert_eq!(self.bits, 16, "half-width kinds are fixed at 16 bits");
+                let half = self.levels;
+                if half == LevelKind::Fp16 {
+                    crate::util::kernels::f32_to_f16_codes(values, codes_scratch);
+                } else {
+                    crate::util::kernels::f32_to_bf16_codes(values, codes_scratch);
+                }
+                for (v, &code) in values.iter_mut().zip(codes_scratch.iter()) {
+                    let dv = half.decode(code, 16, 0.0);
+                    residual.push(*v - dv);
+                    *v = dv;
+                }
+                payload.encode_with_levels(16, 0.0, codes_scratch, half);
+            }
         }
+    }
+}
+
+/// Histogram-fit NUQ scale (ROADMAP codec follow-up): the smallest
+/// power-of-two bin edge covering all but at most `n/16` entries —
+/// instead of the max, a single outlier of which drags the whole
+/// exponential table up and wastes its resolution on empty range.
+/// Entries above the fitted scale clamp to the top level; their
+/// (possibly large) error rides error feedback, bounded in count by
+/// the 1/16 budget.  Power-of-two scales also make the level grid
+/// exact under the `scale * 2^(q-L)` decode.
+fn nuq_fit_scale(values: &[f32], max: f32) -> f32 {
+    let mut h = [0u32; 256];
+    crate::util::kernels::abs_hist(values, &mut h);
+    let budget = values.len() / 16;
+    let (mut above, mut b) = (0usize, 255usize);
+    while b > 0 && above + h[b] as usize <= budget {
+        above += h[b] as usize;
+        b -= 1;
+    }
+    let edge = crate::util::kernels::hist_bin_edge(b);
+    if edge.is_finite() {
+        edge
+    } else if max.is_finite() {
+        // bin 127 (huge magnitudes) has no representable upper edge
+        max
+    } else {
+        f32::MAX
     }
 }
 
@@ -296,13 +350,18 @@ mod tests {
                 let dv = payload.decode_value(i);
                 assert_eq!(dv, bucket.values()[i], "bits={bits} i={i}");
                 assert_eq!(residual[i], vals[i] - dv, "bits={bits} i={i}");
-                // a decoded magnitude never exceeds the bucket max and
-                // the sign survives (or the value rounded to zero)
+                // a decoded magnitude never exceeds the fitted scale
+                // and the sign survives (or the value rounded to zero)
                 assert!(dv.abs() <= scale * 1.0001, "bits={bits} i={i}");
                 assert!(dv == 0.0 || dv.signum() == vals[i].signum(), "bits={bits} i={i}");
-                // rounding moves at most one grid step, and no step
-                // spans more than the full scale (coarsest at bits=2)
-                assert!(residual[i].abs() <= scale * 1.0001, "bits={bits} i={i}");
+                // within the fitted range, rounding moves at most one
+                // grid step (no step spans more than the full scale);
+                // budgeted outliers clamp, so their residual is
+                // bounded by their own magnitude instead
+                assert!(
+                    residual[i].abs() <= scale.max(vals[i].abs()) * 1.0001,
+                    "bits={bits} i={i}"
+                );
             }
         });
     }
@@ -350,6 +409,56 @@ mod tests {
         assert_eq!(rng.state(), before, "zero buckets must not consume the stream");
         assert_eq!(bucket.values(), &[0.0; 3]);
         assert_eq!(payload.decode(), vec![0.0; 3]);
+    }
+
+    #[test]
+    fn half_encode_is_deterministic_and_decodes_bit_exact() {
+        for levels in [LevelKind::Fp16, LevelKind::Bf16] {
+            let vc = ValueCodec { bits: 16, levels };
+            let mut rng = Rng::seed_from(11);
+            let before = rng.state();
+            let vals = vec![1.0f32, -0.333, 6.1e-5, -0.0, 65519.0, 1.0e-40];
+            let n = vals.len();
+            let mut bucket = SparseVec::new(n, (0..n as u32).collect(), vals.clone());
+            let mut payload = QuantPayload::default();
+            let (mut residual, mut codes) = (Vec::new(), Vec::new());
+            vc.encode_bucket(&mut bucket, &mut rng, &mut payload, &mut residual, &mut codes);
+            assert_eq!(rng.state(), before, "half narrowing must not consume the stream");
+            for i in 0..n {
+                assert_eq!(payload.decode_value(i), bucket.values()[i], "{levels:?} i={i}");
+                assert_eq!(residual[i], vals[i] - bucket.values()[i], "{levels:?} i={i}");
+            }
+            assert_eq!(payload.bits(), 16);
+            assert_eq!(payload.level_kind(), levels);
+            assert_eq!(payload.scale(), 0.0, "half payloads are scale-free");
+        }
+    }
+
+    #[test]
+    fn nuq_scale_is_histogram_fit_not_max() {
+        // 32 entries: 31 at 1.0 plus one huge outlier.  The fit covers
+        // the bulk (power-of-two edge 2.0) and clamps the outlier to
+        // the top level, its error riding error feedback.
+        let mut vals = vec![1.0f32; 32];
+        vals[7] = 1000.0;
+        let mut bucket = SparseVec::new(32, (0..32).collect(), vals.clone());
+        let mut rng = Rng::seed_from(5);
+        let mut payload = QuantPayload::default();
+        let (mut residual, mut codes) = (Vec::new(), Vec::new());
+        ValueCodec { bits: 8, levels: LevelKind::Nuq }.encode_bucket(
+            &mut bucket,
+            &mut rng,
+            &mut payload,
+            &mut residual,
+            &mut codes,
+        );
+        assert_eq!(payload.scale(), 2.0, "fit covers the bulk, not the outlier");
+        assert_eq!(bucket.values()[7], 2.0, "outlier clamps to the top level");
+        assert_eq!(residual[7], 1000.0 - 2.0);
+        assert_eq!(bucket.values()[0], 1.0, "bulk lands exactly on a grid level");
+        for i in 0..32 {
+            assert_eq!(payload.decode_value(i), bucket.values()[i], "i={i}");
+        }
     }
 
     #[test]

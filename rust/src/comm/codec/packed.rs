@@ -20,6 +20,14 @@
 //! value-side term [`super::WireCost`] charges.  The level family
 //! travels in the run manifest (it is per-group configuration, not
 //! per-message data), so it adds no bytes.
+//!
+//! PR 10 adds the half-width float kinds [`LevelKind::Fp16`] /
+//! [`LevelKind::Bf16`]: the 16-bit code IS the value (round-to-
+//! nearest-even narrowing on encode, exact widening on decode — see
+//! `util::kernels`), so no scale header travels and the payload
+//! charges exactly 16 bits per value — the width `CostModel` has
+//! modeled all along, now carried for real.  Deterministic: half
+//! encodes consume no rounding stream.
 
 /// The value level-table family (`levels=` policy key).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -34,6 +42,14 @@ pub enum LevelKind {
     /// rounds to zero (arXiv 1908.06077's argument for nonuniform
     /// levels under heavy-tailed gradient magnitudes).
     Nuq,
+    /// IEEE binary16 on the wire: each 16-bit code is the value
+    /// itself (RNE narrowing encode, exact widening decode).  Fixed
+    /// at `bits = 16`, scale-free, deterministic.
+    Fp16,
+    /// bfloat16 on the wire (the top half of the f32 layout): f32's
+    /// full exponent range at 8 mantissa bits.  Same contract as
+    /// [`LevelKind::Fp16`].
+    Bf16,
 }
 
 impl LevelKind {
@@ -41,6 +57,8 @@ impl LevelKind {
         match self {
             LevelKind::Uniform => "uniform",
             LevelKind::Nuq => "nuq",
+            LevelKind::Fp16 => "fp16",
+            LevelKind::Bf16 => "bf16",
         }
     }
 
@@ -49,7 +67,19 @@ impl LevelKind {
         match s.trim() {
             "uniform" => Ok(LevelKind::Uniform),
             "nuq" => Ok(LevelKind::Nuq),
-            other => Err(format!("unknown value levels '{other}' (uniform|nuq)")),
+            "fp16" => Ok(LevelKind::Fp16),
+            "bf16" => Ok(LevelKind::Bf16),
+            other => Err(format!("unknown value levels '{other}' (uniform|nuq|fp16|bf16)")),
+        }
+    }
+
+    /// Whether this family is a half-width float kind: fixed 16-bit
+    /// codes that ARE the values — no scale header, no rounding
+    /// stream, no level grid.
+    pub fn is_half(&self) -> bool {
+        match self {
+            LevelKind::Uniform | LevelKind::Nuq => false,
+            LevelKind::Fp16 | LevelKind::Bf16 => true,
         }
     }
 
@@ -58,11 +88,14 @@ impl LevelKind {
     /// (writing back lossy values) and the payload decode route
     /// through it, so they cannot disagree.
     pub fn decode(&self, code: u32, bits: usize, scale: f32) -> f32 {
-        let levels = quant_levels(bits);
-        let q = code as i64 - levels;
         match self {
-            LevelKind::Uniform => q as f32 * scale,
+            LevelKind::Uniform => {
+                let levels = quant_levels(bits);
+                (code as i64 - levels) as f32 * scale
+            }
             LevelKind::Nuq => {
+                let levels = quant_levels(bits);
+                let q = code as i64 - levels;
                 if q == 0 {
                     0.0
                 } else {
@@ -70,6 +103,9 @@ impl LevelKind {
                     if q < 0 { -mag } else { mag }
                 }
             }
+            // half kinds ignore bits/scale: the code is the value
+            LevelKind::Fp16 => crate::util::kernels::f16_to_f32(code as u16),
+            LevelKind::Bf16 => crate::util::kernels::bf16_to_f32(code as u16),
         }
     }
 }
@@ -146,17 +182,14 @@ impl QuantPayload {
         levels: LevelKind,
     ) {
         assert!((2..=16).contains(&bits), "packable bit width is 2..=16, got {bits}");
-        let mask = (1u32 << bits) - 1;
+        assert!(!levels.is_half() || bits == 16, "half-width kinds are fixed at 16 bits");
         self.bits = bits;
         self.scale = scale;
         self.len = codes.len();
         self.levels = levels;
-        self.words.clear();
-        self.words.resize((codes.len() * bits).div_ceil(32), 0);
-        for (i, &code) in codes.iter().enumerate() {
-            debug_assert_eq!(code & mask, code, "code {code} exceeds {bits} bits");
-            super::rice::put_bits(&mut self.words, i * bits, code as u64, bits);
-        }
+        // chunked accumulator packer, bit-identical to the historical
+        // positioned put_bits loop (pinned in rust/tests/kernels.rs)
+        crate::util::kernels::pack_fixed(codes, bits, &mut self.words);
     }
 
     /// Extract code `i`.
@@ -185,16 +218,30 @@ impl QuantPayload {
     /// a bucket at all (for tiny buckets the scale header can exceed
     /// the value-bit saving).
     pub fn bytes_for(len: usize, bits: usize, index_bits: usize) -> usize {
+        Self::bytes_for_levels(len, bits, index_bits, LevelKind::Uniform)
+    }
+
+    /// [`Self::bytes_for`] with an explicit level family: half-width
+    /// kinds carry no scale header (the 16-bit code IS the value), so
+    /// they charge exactly `len * (16 + index_bits)` bits — the link
+    /// value width the cost model has always advertised.
+    pub fn bytes_for_levels(
+        len: usize,
+        bits: usize,
+        index_bits: usize,
+        levels: LevelKind,
+    ) -> usize {
         if len == 0 {
             return 0;
         }
-        (len * (bits + index_bits)).div_ceil(8) + 4
+        let packed = (len * (bits + index_bits)).div_ceil(8);
+        if levels.is_half() { packed } else { packed + 4 }
     }
 
     /// Wire bytes of this payload for a bucket whose index costs
     /// `index_bits` bits per entry.
     pub fn wire_bytes(&self, index_bits: usize) -> usize {
-        Self::bytes_for(self.len, self.bits, index_bits)
+        Self::bytes_for_levels(self.len, self.bits, index_bits, self.levels)
     }
 }
 
@@ -273,11 +320,41 @@ mod tests {
 
     #[test]
     fn level_kind_parse_roundtrip() {
-        for k in [LevelKind::Uniform, LevelKind::Nuq] {
+        for k in [LevelKind::Uniform, LevelKind::Nuq, LevelKind::Fp16, LevelKind::Bf16] {
             assert_eq!(LevelKind::parse(k.name()).unwrap(), k);
         }
         assert!(LevelKind::parse("log").is_err());
         assert_eq!(LevelKind::default(), LevelKind::Uniform);
+        assert!(!LevelKind::Uniform.is_half());
+        assert!(!LevelKind::Nuq.is_half());
+        assert!(LevelKind::Fp16.is_half());
+        assert!(LevelKind::Bf16.is_half());
+    }
+
+    #[test]
+    fn half_kinds_charge_sixteen_bits_and_no_scale_header() {
+        // 10 values at 16 bits + 10 index bits = 260 bits -> 33 B, no +4
+        for k in [LevelKind::Fp16, LevelKind::Bf16] {
+            assert_eq!(QuantPayload::bytes_for_levels(10, 16, 10, k), 33);
+            assert_eq!(QuantPayload::bytes_for_levels(0, 16, 10, k), 0);
+        }
+        // the uniform family at the same width still pays the header
+        assert_eq!(QuantPayload::bytes_for_levels(10, 16, 10, LevelKind::Uniform), 37);
+        let mut p = QuantPayload::default();
+        p.encode_with_levels(16, 0.0, &[0x3C00, 0x8000], LevelKind::Fp16);
+        assert_eq!(p.wire_bytes(10), (2 * 26usize).div_ceil(8));
+    }
+
+    #[test]
+    fn half_decode_is_the_code_itself() {
+        let mut p = QuantPayload::default();
+        // fp16: 1.0, -2.0, min subnormal, -0.0
+        p.encode_with_levels(16, 0.0, &[0x3C00, 0xC000, 0x0001, 0x8000], LevelKind::Fp16);
+        assert_eq!(p.decode(), vec![1.0, -2.0, 2.0f32.powi(-24), -0.0]);
+        // bf16: 1.0, -2.0 (top half of the f32 layout)
+        p.encode_with_levels(16, 0.0, &[0x3F80, 0xC000], LevelKind::Bf16);
+        assert_eq!(p.decode(), vec![1.0, -2.0]);
+        assert_eq!(p.level_kind(), LevelKind::Bf16);
     }
 
     #[test]

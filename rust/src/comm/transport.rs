@@ -15,8 +15,11 @@
 //!            (mpsc star) (std::net)                (std::net) (mpsc)
 //! ```
 //!
-//! [`InProc`] is the seed's mpsc star, kept bit-identical but with its
-//! channel internals private.  [`Tcp`] moves the SAME `Msg` values as
+//! [`InProc`] is the seed's mpsc star with its channel internals
+//! private; since PR 10 its channels carry the same length-framed
+//! bytes the socket backends move (encode once per broadcast, decode
+//! per receive — bit-identity with the by-value star is pinned in
+//! `rust/tests/transport.rs`).  [`Tcp`] moves the SAME `Msg` values as
 //! length-framed bytes (`codec::frame`) over `std::net` sockets — TCP
 //! loopback or, on unix, a `UnixListener` domain socket — with every
 //! worker attached through a [`TcpLink`], possibly from a separate OS
@@ -37,8 +40,8 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::time::Duration;
 
 use super::codec::{
-    decode_header, decode_hello, decode_payload, encode_hello, encode_msg, FrameKind,
-    FrameStats, FRAME_HEADER_BYTES, HELLO_BYTES,
+    decode_header, decode_hello, decode_msg, decode_payload, encode_hello, encode_msg,
+    FrameKind, FrameStats, FRAME_HEADER_BYTES, HELLO_BYTES,
 };
 use super::Msg;
 
@@ -145,18 +148,28 @@ impl SocketCounters {
 /// sender feeds one shared server receiver.  Channel ends are private
 /// — the ONLY way in is the [`Transport`] / [`WorkerLink`] traits
 /// (plus [`InProc::up_sender`] for protocol-violation tests).
+///
+/// Since PR 10 the channels carry ENCODED FRAME BYTES, not `Msg`
+/// values: every message crosses the thread boundary through the same
+/// `codec::frame` encode/decode the socket backends use.  The threaded
+/// driver therefore exercises the full wire path every round (torn
+/// qmeta, half-width payloads, rice streams — all of it), a broadcast
+/// encodes ONCE and clones bytes per worker instead of deep-cloning
+/// the `Msg`, and the star counts frames/bytes exactly like [`Tcp`],
+/// so `counters()` is `Some` here too.
 pub struct InProc {
-    from_workers: Receiver<Msg>,
-    to_workers: Vec<Sender<Msg>>,
-    up_tx: Sender<Msg>,
+    from_workers: Receiver<Vec<u8>>,
+    to_workers: Vec<Sender<Vec<u8>>>,
+    up_tx: Sender<Vec<u8>>,
     pending: Vec<Option<InProcLink>>,
+    counters: SocketCounters,
     timeout: Option<Duration>,
 }
 
 /// One worker's pair of channel ends onto an [`InProc`] star.
 pub struct InProcLink {
-    up: Sender<Msg>,
-    down: Receiver<Msg>,
+    up: Sender<Vec<u8>>,
+    down: Receiver<Vec<u8>>,
 }
 
 impl InProc {
@@ -171,7 +184,14 @@ impl InProc {
             to_workers.push(down_tx);
             pending.push(Some(InProcLink { up: up_tx.clone(), down: down_rx }));
         }
-        InProc { from_workers, to_workers, up_tx, pending, timeout: None }
+        InProc {
+            from_workers,
+            to_workers,
+            up_tx,
+            pending,
+            counters: SocketCounters::default(),
+            timeout: None,
+        }
     }
 
     /// Take worker `i`'s link (once).
@@ -180,12 +200,13 @@ impl InProc {
     }
 
     /// A raw sender onto the up channel — for tests that inject
-    /// protocol violations the trait API makes unrepresentable.
-    pub fn up_sender(&self) -> Sender<Msg> {
+    /// protocol violations the trait API makes unrepresentable.  The
+    /// channel carries frame bytes: inject with `encode_msg(&msg).0`.
+    pub fn up_sender(&self) -> Sender<Vec<u8>> {
         self.up_tx.clone()
     }
 
-    fn next_up(&mut self) -> Msg {
+    fn next_up(&mut self) -> Vec<u8> {
         match self.timeout {
             Some(t) => self
                 .from_workers
@@ -198,16 +219,26 @@ impl InProc {
 
 impl Transport for InProc {
     fn broadcast(&mut self, msg: &Msg) {
+        // encode once; per-worker delivery is a byte-buffer clone
+        let (bytes, st) = encode_msg(msg);
         for tx in &self.to_workers {
-            // a worker that already finished (dropped its link) is fine
-            let _ = tx.send(msg.clone());
+            // a worker that already finished (dropped its link) is
+            // fine; count the frame either way — whether the final
+            // broadcast races a worker's exit must not change the
+            // counters (Tcp's write_all has the same semantics)
+            let _ = tx.send(bytes.clone());
+            self.counters.count_sent(&st);
         }
     }
 
     fn gather_round(&mut self, n_workers: usize, round: usize) -> Vec<Msg> {
         let mut slots: Vec<Option<Msg>> = (0..n_workers).map(|_| None).collect();
         for _ in 0..n_workers {
-            let msg = self.next_up();
+            let bytes = self.next_up();
+            // in-process frames come from our own encoder: a decode
+            // failure is a driver bug, not a recoverable condition
+            let (msg, st) = decode_msg(&bytes).expect("inproc frame decode failed");
+            self.counters.count_recv(&st);
             match &msg {
                 Msg::Update { worker, round: r, .. } => {
                     assert_eq!(*r, round, "worker {worker}: out-of-round update");
@@ -228,7 +259,11 @@ impl Transport for InProc {
     }
 
     fn counters(&self) -> Option<SocketCounters> {
-        None
+        Some(self.counters)
+    }
+
+    fn reset_counters(&mut self) {
+        self.counters = SocketCounters::default();
     }
 }
 
@@ -236,11 +271,14 @@ impl WorkerLink for InProcLink {
     fn send(&mut self, msg: &Msg) {
         // the server dropping its receiver ends the worker loop via
         // recv() -> None; a failed send here is the same shutdown race
-        let _ = self.up.send(msg.clone());
+        let _ = self.up.send(encode_msg(msg).0);
     }
 
     fn recv(&mut self) -> Option<Msg> {
-        self.down.recv().ok()
+        self.down
+            .recv()
+            .ok()
+            .map(|bytes| decode_msg(&bytes).expect("inproc frame decode failed").0)
     }
 }
 
@@ -531,6 +569,14 @@ mod tests {
         for h in handles {
             h.join().expect("worker thread");
         }
+        // the byte-shipping star counts frames exactly like Tcp
+        let c = net.counters().expect("inproc counts frame bytes since PR 10");
+        assert_eq!(c.sent_frames, 2);
+        assert_eq!(c.recv_frames, 2);
+        assert!(c.sent_bytes > 0 && c.recv_bytes > 0);
+        assert_eq!(c.sent_wire, 2 * 4, "1-value gagg half charged per worker");
+        net.reset_counters();
+        assert_eq!(net.counters(), Some(SocketCounters::default()));
     }
 
     #[test]
@@ -538,8 +584,8 @@ mod tests {
     fn inproc_duplicate_update_detected() {
         let mut net = InProc::star(2);
         let tx = net.up_sender();
-        tx.send(update_msg(0, 0, 1.0)).unwrap();
-        tx.send(update_msg(0, 0, 2.0)).unwrap();
+        tx.send(encode_msg(&update_msg(0, 0, 1.0)).0).unwrap();
+        tx.send(encode_msg(&update_msg(0, 0, 2.0)).0).unwrap();
         net.gather_round(2, 0);
     }
 
@@ -548,7 +594,7 @@ mod tests {
     fn inproc_out_of_round_update_detected() {
         let mut net = InProc::star(1);
         let tx = net.up_sender();
-        tx.send(update_msg(0, 3, 1.0)).unwrap();
+        tx.send(encode_msg(&update_msg(0, 3, 1.0)).0).unwrap();
         net.gather_round(1, 0);
     }
 

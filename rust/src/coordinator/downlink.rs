@@ -65,7 +65,12 @@ impl DownlinkCodec {
                         Some(BitsSpec::Sched(s)) => Some(s.clone()),
                         // rejected by validate_downlink above
                         Some(BitsSpec::Auto { .. }) => unreachable!(),
-                        None => None,
+                        // a bare levels=fp16|bf16 rule engages the
+                        // fixed 16-bit half-width codec (no bits= key)
+                        None => p
+                            .levels
+                            .filter(LevelKind::is_half)
+                            .map(|_| Schedule::Const(16.0)),
                     },
                     levels: p.levels.unwrap_or_default(),
                     idx: p.idx.unwrap_or_default(),
@@ -249,6 +254,28 @@ mod tests {
         for (i, &v) in up.bucket(0).values().iter().enumerate() {
             assert_eq!(q.decode_value(i), v, "bucket holds the payload's exact decode");
         }
+    }
+
+    #[test]
+    fn half_levels_downlink_is_deterministic_sixteen_bit() {
+        let layout = GradLayout::single(32);
+        let mut dl = DownlinkCodec::new(&table("*=:levels=bf16"), &layout, 5);
+        assert!(!dl.is_lossless(), "half-width rounding is lossy");
+        let mut up = SparseUpdate::single(SparseVec::new(
+            32,
+            vec![0, 7, 20],
+            vec![1.0, -0.4, 0.03],
+        ));
+        let before = dl.rng_state();
+        dl.encode(&mut up, 0);
+        let q = up.quant(0).expect("half payload active");
+        assert_eq!(q.bits(), 16);
+        assert_eq!(q.level_kind(), LevelKind::Bf16);
+        for (i, &v) in up.bucket(0).values().iter().enumerate() {
+            assert_eq!(q.decode_value(i), v, "bucket holds the payload's exact decode");
+        }
+        // RNE rounding is deterministic: the stream is untouched
+        assert_eq!(dl.rng_state(), before, "half encode draws nothing");
     }
 
     #[test]

@@ -15,7 +15,7 @@
 use crate::optim::Optimizer;
 use crate::comm::SparseUpdate;
 use crate::sparse::SparseVec;
-use crate::util::pool;
+use crate::util::{kernels, pool};
 
 /// Below this many total transmitted entries in a bucket the serial
 /// merge wins; above it the union merge shards over `util::pool`
@@ -108,9 +108,7 @@ fn merge_bucket_sharded(
         merge_bucket_range(updates, g, hi as u32, &mut cursors, part);
     });
     for part in &parts {
-        for (&i, &v) in part.indices().iter().zip(part.values()) {
-            out.push(i, v);
-        }
+        out.append_tail(part.indices(), part.values());
     }
 }
 
@@ -174,9 +172,7 @@ impl Server {
         for g in 0..self.gagg_sparse.num_buckets() {
             let off = self.gagg_sparse.offset(g);
             let b = self.gagg_sparse.bucket(g);
-            for (&i, &v) in b.indices().iter().zip(b.values()) {
-                self.gagg[off + i as usize] = v;
-            }
+            kernels::scatter_assign(&mut self.gagg[off..], b.indices(), b.values());
         }
     }
 
@@ -229,9 +225,7 @@ impl Server {
         for g in 0..self.gagg_sparse.num_buckets() {
             let off = self.gagg_sparse.offset(g);
             let b = self.gagg_sparse.bucket(g);
-            for (&i, &v) in b.indices().iter().zip(b.values()) {
-                self.gagg[off + i as usize] = v;
-            }
+            kernels::scatter_assign(&mut self.gagg[off..], b.indices(), b.values());
         }
         if self.optimizer.sparse_step_exact() {
             match scales {

@@ -8,8 +8,11 @@
 //!
 //! - **pass 1 (fused fill + histogram):** each shard computes its
 //!   slice of the score vector (the caller's closure — accumulate,
-//!   RegTop-k score, DGC velocity update, ... ) and, in the same loop,
-//!   a 256-bucket histogram of the high byte of the magnitude bits.
+//!   RegTop-k score, DGC velocity update, ... ) and, in the same
+//!   cache-blocked pass, a 256-bucket histogram of the high byte of
+//!   the magnitude bits (the chunked
+//!   [`kernels::fill_abs_hist`](crate::util::kernels::fill_abs_hist),
+//!   bit-identical to its scalar referee).
 //! - **merge:** histograms are summed (256 x shards adds) and walked
 //!   from the top to find the boundary bucket — exactly the
 //!   [`select_topk_radix`](crate::sparse::topk::select_topk_radix)
@@ -30,7 +33,8 @@
 //! deterministic — so results are independent of thread scheduling and
 //! of the shard count itself.
 
-use crate::sparse::topk::{boundary_bucket, mag_bits, quickselect_keys};
+use crate::sparse::topk::{boundary_bucket, quickselect_keys};
+use crate::util::kernels;
 use crate::util::pool::{self, shard_range, SharedSlice};
 
 /// Below this dimension the trainer keeps sparsifiers on the serial
@@ -136,9 +140,7 @@ impl SelectEngine {
         pool::global().map_mut(&mut self.hists, |s, h| {
             let (lo, hi) = shard_range(j, shards, s);
             h.fill(0);
-            for &v in &x[lo..hi] {
-                h[(mag_bits(v) >> 24) as usize] += 1;
-            }
+            kernels::abs_hist(&x[lo..hi], h);
         });
     }
 
@@ -159,11 +161,11 @@ impl SelectEngine {
             // one-element views are disjoint; `self.hists` outlives
             // the run.
             let h = unsafe { &mut hist_sh.range(s, s + 1)[0] };
-            fill(lo, slice);
-            h.fill(0);
-            for &v in slice.iter() {
-                h[(mag_bits(v) >> 24) as usize] += 1;
-            }
+            // blocked fused fill+hist: the closure contract (write the
+            // scores for the global range, position-pure) already
+            // permits arbitrary sub-ranges — shard boundaries are
+            // arbitrary — so the kernel may block finer for locality.
+            kernels::fill_abs_hist(lo, slice, h, |l, sl| fill(l, sl));
         });
     }
 
@@ -205,15 +207,7 @@ impl SelectEngine {
                 w.clear();
                 ci.clear();
                 cv.clear();
-                for (off, &v) in x[lo..hi].iter().enumerate() {
-                    let m = mag_bits(v);
-                    if (m as u64) >= hi_floor {
-                        w.push((lo + off) as u32);
-                    } else if (m >> 24) as usize == b {
-                        ci.push((lo + off) as u32);
-                        cv.push(v);
-                    }
-                }
+                kernels::boundary_collect(lo as u32, &x[lo..hi], b, hi_floor, w, ci, cv);
             });
         }
         // merge in shard order == ascending global index order, so the

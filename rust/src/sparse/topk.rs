@@ -35,19 +35,11 @@ pub fn select_topk(x: &[f32], k: usize) -> Vec<u32> {
     select_topk_quick(x, k)
 }
 
-/// Magnitude as order-preserving u32 bits (IEEE-754 non-negative floats
-/// compare like their bit patterns); NaN maps to 0 (never preferred).
-/// Shared with the sharded engine ([`crate::sparse::engine`]) so both
-/// paths bucket identically.
-#[inline]
-pub(crate) fn mag_bits(v: f32) -> u32 {
-    let m = v.abs();
-    if m.is_nan() {
-        0
-    } else {
-        m.to_bits()
-    }
-}
+// The order-preserving magnitude-bits map lives in the kernel layer
+// (PR 10) so the serial radix path, the sharded engine and the chunked
+// kernels all bucket through literally the same function; re-exported
+// here because this module owns the selection semantics built on it.
+pub(crate) use crate::util::kernels::mag_bits;
 
 /// Walk 256-bucket magnitude counts from the top until the cumulative
 /// count reaches `k`: returns `(boundary_bucket, entries_above)` where

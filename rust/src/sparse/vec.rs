@@ -85,12 +85,27 @@ impl SparseVec {
         out
     }
 
-    /// `out += scale * self` (server-side aggregation hot path).
+    /// `out += scale * self` (server-side aggregation hot path);
+    /// rides the chunked [`kernels::scatter_add`] — bit-identical to
+    /// the element-at-a-time loop by the kernel contract.
     pub fn axpy_into(&self, scale: f32, out: &mut [f32]) {
         debug_assert_eq!(out.len(), self.dim);
-        for (&i, &v) in self.idx.iter().zip(&self.val) {
-            out[i as usize] += scale * v;
+        crate::util::kernels::scatter_add(out, &self.idx, &self.val, scale);
+    }
+
+    /// Bulk-append a sorted tail block (the sharded-merge concat
+    /// path): one boundary check instead of a per-entry invariant
+    /// assert, then two slice copies.
+    pub fn append_tail(&mut self, idx: &[u32], val: &[f32]) {
+        assert_eq!(idx.len(), val.len(), "index/value length mismatch");
+        let Some(&first) = idx.first() else { return };
+        if let Some(&last) = self.idx.last() {
+            assert!(first > last, "indices must be strictly increasing ({last} then {first})");
         }
+        debug_assert!(idx.windows(2).all(|w| w[0] < w[1]), "tail block must be sorted");
+        assert!((idx[idx.len() - 1] as usize) < self.dim, "index out of dim {}", self.dim);
+        self.idx.extend_from_slice(idx);
+        self.val.extend_from_slice(val);
     }
 
     pub fn dim(&self) -> usize {

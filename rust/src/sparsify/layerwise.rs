@@ -530,16 +530,22 @@ impl LayerwiseSparsifier {
             ks.push(k_eff);
             schedules.push(sched);
             quants.push(pol.and_then(|p| {
-                p.bits.clone().and_then(|bits| {
-                    let gq = GroupQuant::new(
-                        bits,
-                        p.levels.unwrap_or_default(),
-                        p.seed.unwrap_or(0),
-                        worker,
-                        g,
-                    );
-                    gq.ever_active().then_some(gq)
-                })
+                // half-width level families need no bits= key: they are
+                // fixed 16-bit grids, so a bare `levels=fp16|bf16` rule
+                // engages the codec with a synthesized constant width
+                let bits = p.bits.clone().or_else(|| {
+                    p.levels
+                        .filter(LevelKind::is_half)
+                        .map(|_| BitsSpec::Sched(Schedule::Const(16.0)))
+                })?;
+                let gq = GroupQuant::new(
+                    bits,
+                    p.levels.unwrap_or_default(),
+                    p.seed.unwrap_or(0),
+                    worker,
+                    g,
+                );
+                gq.ever_active().then_some(gq)
             }));
             idx_codecs.push(pol.and_then(|p| p.idx).unwrap_or_default());
         }
@@ -634,7 +640,8 @@ fn step_children(
                 let (bucket, payload) = out.bucket_quant_mut(g);
                 let ib = index_bits(bucket.dim());
                 let raw = WireCost::new(raw_value_bits).raw_bucket(bucket.nnz(), bucket.dim());
-                if bucket.nnz() > 0 && QuantPayload::bytes_for(bucket.nnz(), bits, ib) < raw {
+                let packed = QuantPayload::bytes_for_levels(bucket.nnz(), bits, ib, qs.levels);
+                if bucket.nnz() > 0 && packed < raw {
                     ValueCodec { bits, levels: qs.levels }.encode_bucket(
                         bucket,
                         &mut qs.rng,
@@ -1124,6 +1131,47 @@ mod tests {
         // conservation THROUGH quantization: what the wire dropped
         // (sparsified + rounding residual) is exactly what the error
         // store carries into the next round
+        let transmitted = up.flatten().to_dense();
+        let zeros = vec![0.0f32; 10];
+        let eps = lw.peek_acc(&zeros);
+        for i in 0..10 {
+            assert_eq!(eps[i], acc_before[i] - transmitted[i], "i={i}");
+        }
+    }
+
+    #[test]
+    fn half_levels_policy_engages_fixed_sixteen_bit_codec() {
+        use crate::comm::codec::LevelKind;
+        let layout = layout_4_6();
+        // a bare levels= rule, no bits= key: the width is the fixed 16
+        let table = PolicyTable::parse("a=topk:levels=fp16;b=:levels=bf16").unwrap();
+        let mut lw = LayerwiseSparsifier::with_policies(
+            &SparsifierKind::TopK { k: 0 },
+            layout.clone(),
+            &BudgetPolicy::PerGroup { ks: vec![2, 3] },
+            &table,
+            0,
+        );
+        assert_eq!(lw.group_value_bits(), vec![16, 16]);
+        assert_eq!(lw.group_value_levels(), vec!["fp16", "bf16"]);
+        let grad: Vec<f32> = (0..10).map(|i| (10 - i) as f32 * 0.37).collect();
+        let gagg = vec![0.0f32; 10];
+        let acc_before = lw.peek_acc(&grad);
+        let ctx = RoundCtx { t: 0, gagg_prev: &gagg, omega: 1.0, genie_acc: None };
+        let view = GradView::new(&layout, &grad);
+        let mut up = SparseUpdate::empty();
+        lw.step_group_into(&view, &ctx, &mut up);
+        for g in 0..2 {
+            let q = up.quant(g).expect("half groups carry a payload");
+            assert_eq!(q.bits(), 16);
+            assert_eq!(
+                q.level_kind(),
+                [LevelKind::Fp16, LevelKind::Bf16][g]
+            );
+            assert_eq!(q.decode(), up.bucket(g).values());
+        }
+        // conservation through the half-width wire: rounding residual
+        // folds into the error store exactly like uniform quantization
         let transmitted = up.flatten().to_dense();
         let zeros = vec![0.0f32; 10];
         let eps = lw.peek_acc(&zeros);

@@ -18,6 +18,7 @@
 //! conv*=regtopk:mu=0.3,bits=4;*=topk:bits=8   # quantized transmission
 //! fc*=:bits=8..4/100,eta=2.0    # bits tighten over rounds, 2x group lr
 //! conv*=:bits=4,idx=rice,levels=nuq  # entropy-coded indices, NUQ levels
+//! fc*=:levels=bf16              # true half-width wire values, no bits= key
 //! *=topk:bits=auto:4..8         # residual-steered adaptive width
 //! ```
 //!
@@ -243,9 +244,10 @@ pub struct GroupPolicy {
     /// index-codec override (`idx=packed|raw|rice`); unset = the
     /// bit-packed `log J` default, bit-identical to the pre-codec tree
     pub idx: Option<IndexCodec>,
-    /// value level-table family (`levels=uniform|nuq`); only
-    /// meaningful with `bits` set (validated).  Unset = uniform, the
-    /// PR 4 offset-binary grid.
+    /// value level-table family (`levels=uniform|nuq|fp16|bf16`).
+    /// `uniform`/`nuq` need a `bits=` width (validated); `fp16`/`bf16`
+    /// are fixed 16-bit floating grids and reject `bits=`.  Unset =
+    /// uniform, the PR 4 offset-binary grid.
     pub levels: Option<LevelKind>,
     /// learning-rate scale for this group's slice of the aggregate
     /// (the §1.2 G-extension applied per layer); the server multiplies
@@ -296,10 +298,20 @@ impl GroupPolicy {
         if let Some(bits) = &self.bits {
             bits.validate()?;
         }
-        if self.levels.is_some() && self.bits.is_none() {
-            return Err(
-                "levels= needs a bits= width (raw f32 values have no level table)".to_string()
-            );
+        if let Some(l) = self.levels {
+            if l.is_half() {
+                if self.bits.is_some() {
+                    return Err(format!(
+                        "levels={} is fixed at 16 bits on the wire; drop the bits= key",
+                        l.name()
+                    ));
+                }
+            } else if self.bits.is_none() {
+                return Err(
+                    "levels= needs a bits= width (raw f32 values have no level table)"
+                        .to_string(),
+                );
+            }
         }
         if let Some(e) = self.eta {
             if !(e.is_finite() && e > 0.0) {
@@ -785,6 +797,27 @@ mod tests {
             &Json::parse(r#"[{"match":"a","bits":{"auto":true,"lo":4,"hi":8}}]"#).unwrap()
         )
         .is_ok());
+    }
+
+    #[test]
+    fn half_width_levels_parse_without_bits() {
+        use crate::comm::codec::LevelKind;
+        let t = PolicyTable::parse("fc*=:levels=bf16;conv*=:levels=fp16;*=topk").unwrap();
+        assert_eq!(t.resolve("fc0.w").unwrap().levels, Some(LevelKind::Bf16));
+        assert_eq!(t.resolve("fc0.w").unwrap().bits, None);
+        assert_eq!(t.resolve("conv1.w").unwrap().levels, Some(LevelKind::Fp16));
+        // JSON round trip keeps the half kinds
+        assert_eq!(PolicyTable::from_json(&t.to_json()).unwrap(), t);
+        // half kinds are fixed-width: a bits= key is a contradiction
+        assert!(PolicyTable::parse("g=topk:bits=8,levels=fp16").is_err());
+        assert!(PolicyTable::parse("g=topk:bits=16,levels=bf16").is_err());
+        assert!(PolicyTable::from_json(
+            &Json::parse(r#"[{"match":"a","bits":8,"levels":"fp16"}]"#).unwrap()
+        )
+        .is_err());
+        // and they are codec-only keys, so the downlink accepts them
+        let d = PolicyTable::parse("*=:levels=fp16").unwrap();
+        assert!(d.validate_downlink().is_ok());
     }
 
     #[test]

@@ -1,0 +1,637 @@
+//! Chunked, autovectorization-friendly kernels for the per-round hot
+//! paths (ISSUE 10 tentpole), on stable Rust: fixed-width lane blocks
+//! over `chunks_exact`, no `std::simd`, no unsafe.
+//!
+//! Every kernel comes in two forms:
+//!
+//! - the **chunked** form (`abs_hist`, `boundary_collect`, ...): the
+//!   production entry point, written so the loop body is branch-light
+//!   and lane-shaped ([`LANES`]-wide blocks) and the compiler's
+//!   autovectorizer can do the rest;
+//! - a **scalar referee** (`*_ref`): the obviously-correct
+//!   element-at-a-time loop.
+//!
+//! The contract between the two is **bit-identity**, not approximate
+//! equality: for every input — including NaN, infinities, `-0.0`,
+//! denormals, and misaligned tail lengths — the chunked kernel must
+//! produce exactly the referee's output (`rust/tests/kernels.rs`
+//! property-tests this at sizes 0, 1, LANES±1 and large, and
+//! `benches/kernels.rs` re-asserts it on every timed point).  That is
+//! what lets the sharded select engine, the merge and the codec ride
+//! these kernels without disturbing any trajectory pin in the repo.
+//!
+//! Adding a kernel: write the referee first, write the chunked form
+//! so every float op happens in the same order per element (vectorize
+//! ACROSS independent elements, never reassociate within one), then
+//! pin the pair in `rust/tests/kernels.rs` and add a throughput point
+//! to `benches/kernels.rs`.
+//!
+//! Float bit-twiddling (`to_bits`/`from_bits` masks and the
+//! [`mag_bits`] order trick) is confined to this file plus
+//! `sparse/topk.rs` by the `bit-kernels-outside-kernels` analyzer
+//! rule, so there is exactly one place such tricks can drift.
+
+#![forbid(unsafe_code)]
+
+/// Lane-block width of the chunked kernels.  8 f32 lanes = one AVX2
+/// register (or two NEON registers); wide enough to expose ILP even
+/// when the target autovectorizes at 4.
+pub const LANES: usize = 8;
+
+/// Block length of the fused fill+histogram pass: 4096 f32 = 16 KiB,
+/// so the freshly-filled block is still in L1 when it is histogrammed.
+pub const FUSE_BLOCK: usize = 4096;
+
+/// Magnitude as order-preserving u32 bits (IEEE-754 non-negative
+/// floats compare like their bit patterns); NaN maps to 0 (never
+/// preferred).  THE shared bucketing map of the selection paths —
+/// `sparse/topk.rs` re-exports it so the serial radix path, the
+/// sharded engine and these kernels cannot disagree.
+#[inline]
+pub fn mag_bits(v: f32) -> u32 {
+    let m = v.abs();
+    if m.is_nan() {
+        0
+    } else {
+        m.to_bits()
+    }
+}
+
+// ---------------------------------------------------------------------
+// histogram
+// ---------------------------------------------------------------------
+
+/// Accumulate the 256-bucket histogram of the magnitude high byte of
+/// `x` into `h` (adds; the caller zeroes).  Four interleaved
+/// sub-histograms break the store-to-load dependency a single counter
+/// array serializes on; the per-lane `mag_bits` computation
+/// vectorizes.
+pub fn abs_hist(x: &[f32], h: &mut [u32; 256]) {
+    let mut sub = [[0u32; 256]; 4];
+    let mut chunks = x.chunks_exact(LANES);
+    for c in chunks.by_ref() {
+        let mut bucket = [0usize; LANES];
+        for (b, &v) in bucket.iter_mut().zip(c) {
+            *b = (mag_bits(v) >> 24) as usize;
+        }
+        for (lane, &b) in bucket.iter().enumerate() {
+            sub[lane & 3][b] += 1;
+        }
+    }
+    for &v in chunks.remainder() {
+        sub[0][(mag_bits(v) >> 24) as usize] += 1;
+    }
+    for (i, dst) in h.iter_mut().enumerate() {
+        *dst += sub[0][i] + sub[1][i] + sub[2][i] + sub[3][i];
+    }
+}
+
+/// Scalar referee of [`abs_hist`].
+pub fn abs_hist_ref(x: &[f32], h: &mut [u32; 256]) {
+    for &v in x {
+        h[(mag_bits(v) >> 24) as usize] += 1;
+    }
+}
+
+/// Upper edge of [`abs_hist`] bin `b`: the smallest magnitude landing
+/// in bin `b + 1`, always an exact power of two.  Finite magnitudes
+/// occupy bins 0..=127 (the top byte of the magnitude bits is
+/// sign-free), and bin 127 — which also holds the infinities — has no
+/// representable upper edge, so `b >= 127` returns +inf.
+pub fn hist_bin_edge(b: usize) -> f32 {
+    if b >= 127 {
+        f32::INFINITY
+    } else {
+        f32::from_bits(((b as u32) + 1) << 24)
+    }
+}
+
+/// Fused fill + histogram over one shard: `fill(lo + off, block)`
+/// writes the scores for the global range the block covers, and the
+/// same block is histogrammed while still hot in L1 ([`FUSE_BLOCK`]
+/// granularity).  `h` is overwritten.
+///
+/// `fill` MUST be position-pure — writing element `lo + i` must
+/// depend only on `lo + i`, never on how the range is blocked —
+/// because it is invoked once per block, on consecutive sub-ranges.
+/// That is already the sharded engine's closure contract (shard
+/// boundaries are arbitrary); this merely blocks finer.
+pub fn fill_abs_hist<F: FnMut(usize, &mut [f32])>(
+    lo: usize,
+    dst: &mut [f32],
+    h: &mut [u32; 256],
+    mut fill: F,
+) {
+    h.fill(0);
+    let mut off = 0usize;
+    while off < dst.len() {
+        let end = (off + FUSE_BLOCK).min(dst.len());
+        let block = &mut dst[off..end];
+        fill(lo + off, block);
+        abs_hist(block, h);
+        off = end;
+    }
+}
+
+/// Scalar referee of [`fill_abs_hist`]: one fill call over the whole
+/// slice, then the scalar histogram.
+pub fn fill_abs_hist_ref<F: FnMut(usize, &mut [f32])>(
+    lo: usize,
+    dst: &mut [f32],
+    h: &mut [u32; 256],
+    mut fill: F,
+) {
+    h.fill(0);
+    fill(lo, dst);
+    abs_hist_ref(dst, h);
+}
+
+// ---------------------------------------------------------------------
+// boundary scan / collect (pass 2 of the radix select)
+// ---------------------------------------------------------------------
+
+#[inline]
+fn classify(
+    m: u32,
+    v: f32,
+    i: u32,
+    b: usize,
+    hi_floor: u64,
+    winners: &mut Vec<u32>,
+    cand_idx: &mut Vec<u32>,
+    cand_val: &mut Vec<f32>,
+) {
+    if (m as u64) >= hi_floor {
+        winners.push(i);
+    } else if (m >> 24) as usize == b {
+        cand_idx.push(i);
+        cand_val.push(v);
+    }
+}
+
+/// Pass-2 collect of the radix select: append global indices
+/// (`base + offset`) of entries strictly above the boundary bucket to
+/// `winners`, and boundary-bucket (`b`) candidates to
+/// `cand_idx`/`cand_val`.  `hi_floor` is `((b as u64) + 1) << 24`
+/// (u64 so bucket 255 cannot overflow).  Appends in ascending index
+/// order — the tie-break the sort oracle relies on.  The magnitude
+/// computation runs a lane block ahead of the (inherently branchy)
+/// pushes.
+pub fn boundary_collect(
+    base: u32,
+    x: &[f32],
+    b: usize,
+    hi_floor: u64,
+    winners: &mut Vec<u32>,
+    cand_idx: &mut Vec<u32>,
+    cand_val: &mut Vec<f32>,
+) {
+    let mut chunks = x.chunks_exact(LANES);
+    let mut off = 0u32;
+    for c in chunks.by_ref() {
+        let mut mags = [0u32; LANES];
+        for (m, &v) in mags.iter_mut().zip(c) {
+            *m = mag_bits(v);
+        }
+        for (lane, (&m, &v)) in mags.iter().zip(c).enumerate() {
+            classify(m, v, base + off + lane as u32, b, hi_floor, winners, cand_idx, cand_val);
+        }
+        off += LANES as u32;
+    }
+    for (lane, &v) in chunks.remainder().iter().enumerate() {
+        let i = base + off + lane as u32;
+        classify(mag_bits(v), v, i, b, hi_floor, winners, cand_idx, cand_val);
+    }
+}
+
+/// Scalar referee of [`boundary_collect`].
+pub fn boundary_collect_ref(
+    base: u32,
+    x: &[f32],
+    b: usize,
+    hi_floor: u64,
+    winners: &mut Vec<u32>,
+    cand_idx: &mut Vec<u32>,
+    cand_val: &mut Vec<f32>,
+) {
+    for (off, &v) in x.iter().enumerate() {
+        classify(mag_bits(v), v, base + off as u32, b, hi_floor, winners, cand_idx, cand_val);
+    }
+}
+
+// ---------------------------------------------------------------------
+// merge: scatter-add / scaled copy
+// ---------------------------------------------------------------------
+
+/// `out[idx[j]] += c * val[j]` for every entry, in entry order (so
+/// the result is bit-identical to the scalar loop even with repeated
+/// indices).  Random stores cannot vectorize, but the 4-wide unroll
+/// keeps the address computation and multiply off the store's
+/// critical path.
+pub fn scatter_add(out: &mut [f32], idx: &[u32], val: &[f32], c: f32) {
+    assert_eq!(idx.len(), val.len(), "scatter_add: index/value length mismatch");
+    let mut ic = idx.chunks_exact(4);
+    let mut vc = val.chunks_exact(4);
+    for (i4, v4) in ic.by_ref().zip(vc.by_ref()) {
+        out[i4[0] as usize] += c * v4[0];
+        out[i4[1] as usize] += c * v4[1];
+        out[i4[2] as usize] += c * v4[2];
+        out[i4[3] as usize] += c * v4[3];
+    }
+    for (&i, &v) in ic.remainder().iter().zip(vc.remainder()) {
+        out[i as usize] += c * v;
+    }
+}
+
+/// Scalar referee of [`scatter_add`].
+pub fn scatter_add_ref(out: &mut [f32], idx: &[u32], val: &[f32], c: f32) {
+    assert_eq!(idx.len(), val.len(), "scatter_add_ref: index/value length mismatch");
+    for (&i, &v) in idx.iter().zip(val) {
+        out[i as usize] += c * v;
+    }
+}
+
+/// `out[idx[j]] = val[j]` for every entry, in entry order — the
+/// dense-mirror refresh behind the sparse aggregate (assignment, so
+/// later duplicates win exactly as in the scalar loop).
+pub fn scatter_assign(out: &mut [f32], idx: &[u32], val: &[f32]) {
+    assert_eq!(idx.len(), val.len(), "scatter_assign: index/value length mismatch");
+    let mut ic = idx.chunks_exact(4);
+    let mut vc = val.chunks_exact(4);
+    for (i4, v4) in ic.by_ref().zip(vc.by_ref()) {
+        out[i4[0] as usize] = v4[0];
+        out[i4[1] as usize] = v4[1];
+        out[i4[2] as usize] = v4[2];
+        out[i4[3] as usize] = v4[3];
+    }
+    for (&i, &v) in ic.remainder().iter().zip(vc.remainder()) {
+        out[i as usize] = v;
+    }
+}
+
+/// Scalar referee of [`scatter_assign`].
+pub fn scatter_assign_ref(out: &mut [f32], idx: &[u32], val: &[f32]) {
+    assert_eq!(idx.len(), val.len(), "scatter_assign_ref: index/value length mismatch");
+    for (&i, &v) in idx.iter().zip(val) {
+        out[i as usize] = v;
+    }
+}
+
+/// `dst[j] = c * src[j]` — the bulk scaled copy behind the
+/// single-contributor fast path of the sparse merge.
+pub fn scale_into(dst: &mut [f32], src: &[f32], c: f32) {
+    assert_eq!(dst.len(), src.len(), "scale_into: length mismatch");
+    let mut dc = dst.chunks_exact_mut(LANES);
+    let mut sc = src.chunks_exact(LANES);
+    for (d8, s8) in dc.by_ref().zip(sc.by_ref()) {
+        for (d, &s) in d8.iter_mut().zip(s8) {
+            *d = c * s;
+        }
+    }
+    for (d, &s) in dc.into_remainder().iter_mut().zip(sc.remainder()) {
+        *d = c * s;
+    }
+}
+
+/// Scalar referee of [`scale_into`].
+pub fn scale_into_ref(dst: &mut [f32], src: &[f32], c: f32) {
+    assert_eq!(dst.len(), src.len(), "scale_into_ref: length mismatch");
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = c * s;
+    }
+}
+
+// ---------------------------------------------------------------------
+// fixed-width bit pack / unpack (LSB-first, the codec word layout)
+// ---------------------------------------------------------------------
+
+#[inline]
+fn width_mask(bits: usize) -> u64 {
+    if bits == 32 {
+        u32::MAX as u64
+    } else {
+        (1u64 << bits) - 1
+    }
+}
+
+/// Pack `codes` at `bits` per code, LSB-first into `u32` words —
+/// exactly the layout the codec stack's positioned `put_bits` loop
+/// produces (`words.len() == (codes.len() * bits).div_ceil(32)`,
+/// trailing bits zero), via a single u64 accumulator instead of one
+/// read-modify-write per code.  Every code must fit in `bits` bits.
+pub fn pack_fixed(codes: &[u32], bits: usize, words: &mut Vec<u32>) {
+    assert!((1..=32).contains(&bits), "packable width is 1..=32, got {bits}");
+    words.clear();
+    words.resize((codes.len() * bits).div_ceil(32), 0);
+    let mask = width_mask(bits);
+    let mut acc = 0u64;
+    let mut nbits = 0usize;
+    let mut w = 0usize;
+    for &code in codes {
+        debug_assert_eq!(code as u64 & mask, code as u64, "code {code} exceeds {bits} bits");
+        acc |= (code as u64 & mask) << nbits;
+        nbits += bits;
+        if nbits >= 32 {
+            words[w] = acc as u32;
+            w += 1;
+            acc >>= 32;
+            nbits -= 32;
+        }
+    }
+    if nbits > 0 {
+        words[w] = acc as u32;
+    }
+}
+
+/// Scalar referee of [`pack_fixed`]: one positioned word-straddling
+/// write per code (the historical codec loop).
+pub fn pack_fixed_ref(codes: &[u32], bits: usize, words: &mut Vec<u32>) {
+    assert!((1..=32).contains(&bits), "packable width is 1..=32, got {bits}");
+    words.clear();
+    words.resize((codes.len() * bits).div_ceil(32), 0);
+    for (i, &code) in codes.iter().enumerate() {
+        let pos = i * bits;
+        let (w, off) = (pos / 32, pos % 32);
+        words[w] |= ((code as u64) << off) as u32;
+        if off + bits > 32 {
+            words[w + 1] |= ((code as u64) >> (32 - off)) as u32;
+        }
+    }
+}
+
+/// Unpack `len` codes of `bits` each from LSB-first `words` into
+/// `out` (cleared first) — the inverse of [`pack_fixed`].
+pub fn unpack_fixed(words: &[u32], bits: usize, len: usize, out: &mut Vec<u32>) {
+    assert!((1..=32).contains(&bits), "packable width is 1..=32, got {bits}");
+    assert!(len * bits <= words.len() * 32, "unpack_fixed: {len} codes of {bits}b overrun");
+    out.clear();
+    out.reserve(len);
+    let mask = width_mask(bits);
+    let mut acc = 0u64;
+    let mut nbits = 0usize;
+    let mut w = 0usize;
+    for _ in 0..len {
+        if nbits < bits {
+            acc |= (words[w] as u64) << nbits;
+            w += 1;
+            nbits += 32;
+        }
+        out.push((acc & mask) as u32);
+        acc >>= bits;
+        nbits -= bits;
+    }
+}
+
+/// Scalar referee of [`unpack_fixed`]: one positioned read per code.
+pub fn unpack_fixed_ref(words: &[u32], bits: usize, len: usize, out: &mut Vec<u32>) {
+    assert!((1..=32).contains(&bits), "packable width is 1..=32, got {bits}");
+    assert!(len * bits <= words.len() * 32, "unpack_fixed_ref: {len} codes of {bits}b overrun");
+    out.clear();
+    out.reserve(len);
+    let mask = width_mask(bits);
+    for i in 0..len {
+        let pos = i * bits;
+        let (w, off) = (pos / 32, pos % 32);
+        let mut v = (words[w] >> off) as u64;
+        if off + bits > 32 {
+            v |= (words[w + 1] as u64) << (32 - off);
+        }
+        out.push((v & mask) as u32);
+    }
+}
+
+// ---------------------------------------------------------------------
+// f32 <-> bf16 / f16 (round-to-nearest-even encode, exact widen)
+// ---------------------------------------------------------------------
+
+/// Round-to-nearest-even f32 → bf16 (top 16 bits of the f32 layout).
+/// NaNs keep their high payload bits and are quieted (the narrowed
+/// value must stay a NaN); overflow past the largest finite bf16
+/// rounds to the signed infinity, exactly as hardware RNE does.
+#[inline]
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let b = x.to_bits();
+    if x.is_nan() {
+        return ((b >> 16) as u16) | 0x0040;
+    }
+    let round = 0x7FFF + ((b >> 16) & 1);
+    ((b + round) >> 16) as u16
+}
+
+/// Exact bf16 → f32 widening (bf16 is the f32 prefix: shift only).
+#[inline]
+pub fn bf16_to_f32(u: u16) -> f32 {
+    f32::from_bits((u as u32) << 16)
+}
+
+/// Shift `v` right by `s` (1..=31) rounding to nearest, ties to even.
+#[inline]
+fn rne_shift(v: u32, s: u32) -> u32 {
+    let down = v >> s;
+    let rem = v & ((1u32 << s) - 1);
+    let half = 1u32 << (s - 1);
+    if rem > half || (rem == half && down & 1 == 1) {
+        down + 1
+    } else {
+        down
+    }
+}
+
+/// Round-to-nearest-even f32 → IEEE binary16.  Handles the full
+/// range: quiet-NaN passthrough (top 10 payload bits), infinities,
+/// overflow-to-inf at ±65520, the normal range, gradual underflow to
+/// f16 subnormals, and underflow-to-signed-zero below 2^-25.
+#[inline]
+pub fn f32_to_f16(x: f32) -> u16 {
+    let b = x.to_bits();
+    let sign = ((b >> 16) & 0x8000) as u16;
+    let abs = b & 0x7FFF_FFFF;
+    if abs >= 0x7F80_0000 {
+        // inf or NaN; NaN keeps its top payload bits and is quieted
+        return if abs > 0x7F80_0000 {
+            sign | 0x7E00 | ((abs >> 13) & 0x03FF) as u16
+        } else {
+            sign | 0x7C00
+        };
+    }
+    let e = (abs >> 23) as i32 - 127;
+    if e > 15 {
+        return sign | 0x7C00; // above the f16 range entirely
+    }
+    if e < -25 {
+        return sign; // rounds to signed zero
+    }
+    if e < -14 {
+        // subnormal result: value = mant * 2^(e-23), f16 unit 2^-24
+        let mant = 0x0080_0000 | (abs & 0x007F_FFFF);
+        return sign | rne_shift(mant, (-(e + 1)) as u32) as u16;
+    }
+    // normal: 10-bit mantissa by RNE on the low 13 bits; a mantissa
+    // carry rolls into the exponent (and e == 15 overflow lands on
+    // the infinity encoding 0x7C00 by the same carry)
+    let r = (((e + 15) as u32) << 10) + rne_shift(abs & 0x007F_FFFF, 13);
+    sign | r as u16
+}
+
+/// Exact IEEE binary16 → f32 widening (subnormals included).
+#[inline]
+pub fn f16_to_f32(u: u16) -> f32 {
+    let sign = ((u as u32) & 0x8000) << 16;
+    let exp = (u >> 10) & 0x1F;
+    let man = (u & 0x03FF) as u32;
+    if exp == 0 {
+        if man == 0 {
+            return f32::from_bits(sign); // ±0.0
+        }
+        // subnormal: man * 2^-24, exact in f32
+        let v = man as f32 * f32::from_bits(0x3380_0000);
+        return if sign != 0 { -v } else { v };
+    }
+    if exp == 0x1F {
+        return f32::from_bits(sign | 0x7F80_0000 | (man << 13));
+    }
+    f32::from_bits(sign | ((exp as u32 + 112) << 23) | (man << 13))
+}
+
+macro_rules! encode_codes {
+    ($name:ident, $ref_name:ident, $scalar:ident, $doc:literal) => {
+        #[doc = $doc]
+        pub fn $name(src: &[f32], out: &mut Vec<u32>) {
+            out.clear();
+            out.reserve(src.len());
+            let mut chunks = src.chunks_exact(LANES);
+            for c in chunks.by_ref() {
+                let mut lane = [0u32; LANES];
+                for (l, &v) in lane.iter_mut().zip(c) {
+                    *l = $scalar(v) as u32;
+                }
+                out.extend_from_slice(&lane);
+            }
+            for &v in chunks.remainder() {
+                out.push($scalar(v) as u32);
+            }
+        }
+
+        #[doc = concat!("Scalar referee of [`", stringify!($name), "`].")]
+        pub fn $ref_name(src: &[f32], out: &mut Vec<u32>) {
+            out.clear();
+            out.extend(src.iter().map(|&v| $scalar(v) as u32));
+        }
+    };
+}
+
+macro_rules! decode_codes {
+    ($name:ident, $ref_name:ident, $scalar:ident, $doc:literal) => {
+        #[doc = $doc]
+        pub fn $name(codes: &[u32], out: &mut Vec<f32>) {
+            out.clear();
+            out.reserve(codes.len());
+            let mut chunks = codes.chunks_exact(LANES);
+            for c in chunks.by_ref() {
+                let mut lane = [0f32; LANES];
+                for (l, &u) in lane.iter_mut().zip(c) {
+                    *l = $scalar(u as u16);
+                }
+                out.extend_from_slice(&lane);
+            }
+            for &u in chunks.remainder() {
+                out.push($scalar(u as u16));
+            }
+        }
+
+        #[doc = concat!("Scalar referee of [`", stringify!($name), "`].")]
+        pub fn $ref_name(codes: &[u32], out: &mut Vec<f32>) {
+            out.clear();
+            out.extend(codes.iter().map(|&u| $scalar(u as u16)));
+        }
+    };
+}
+
+encode_codes!(
+    f32_to_bf16_codes,
+    f32_to_bf16_codes_ref,
+    f32_to_bf16,
+    "Chunked slice form of [`f32_to_bf16`]: each code is the 16-bit \
+     bf16 word, widened to `u32` for the codec's packing stage."
+);
+encode_codes!(
+    f32_to_f16_codes,
+    f32_to_f16_codes_ref,
+    f32_to_f16,
+    "Chunked slice form of [`f32_to_f16`]: each code is the 16-bit \
+     binary16 word, widened to `u32` for the codec's packing stage."
+);
+decode_codes!(
+    bf16_to_f32_slice,
+    bf16_to_f32_slice_ref,
+    bf16_to_f32,
+    "Chunked slice form of [`bf16_to_f32`] over 16-bit codes in `u32`."
+);
+decode_codes!(
+    f16_to_f32_slice,
+    f16_to_f32_slice_ref,
+    f16_to_f32,
+    "Chunked slice form of [`f16_to_f32`] over 16-bit codes in `u32`."
+);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hist_matches_referee_across_tails() {
+        for n in [0usize, 1, LANES - 1, LANES, LANES + 1, 1000] {
+            let x: Vec<f32> = (0..n).map(|i| (i as f32 - 3.5) * 1.7).collect();
+            let (mut a, mut b) = ([0u32; 256], [0u32; 256]);
+            abs_hist(&x, &mut a);
+            abs_hist_ref(&x, &mut b);
+            assert_eq!(a, b, "n={n}");
+            assert_eq!(a.iter().sum::<u32>() as usize, n);
+        }
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_matches_referee() {
+        for bits in [1usize, 5, 16, 31, 32] {
+            let mask = width_mask(bits);
+            let codes: Vec<u32> =
+                (0..67u64).map(|i| ((i.wrapping_mul(0x9E37_79B9) ) & mask) as u32).collect();
+            let (mut w1, mut w2) = (Vec::new(), Vec::new());
+            pack_fixed(&codes, bits, &mut w1);
+            pack_fixed_ref(&codes, bits, &mut w2);
+            assert_eq!(w1, w2, "bits={bits}");
+            let (mut o1, mut o2) = (Vec::new(), Vec::new());
+            unpack_fixed(&w1, bits, codes.len(), &mut o1);
+            unpack_fixed_ref(&w1, bits, codes.len(), &mut o2);
+            assert_eq!(o1, codes, "bits={bits}");
+            assert_eq!(o2, codes, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn bf16_golden_values() {
+        assert_eq!(f32_to_bf16(1.0), 0x3F80);
+        assert_eq!(f32_to_bf16(-2.0), 0xC000);
+        assert_eq!(f32_to_bf16(0.0), 0x0000);
+        assert_eq!(f32_to_bf16(-0.0), 0x8000);
+        assert_eq!(f32_to_bf16(f32::INFINITY), 0x7F80);
+        assert_eq!(bf16_to_f32(0x3F80), 1.0);
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn f16_golden_values() {
+        assert_eq!(f32_to_f16(1.0), 0x3C00);
+        assert_eq!(f32_to_f16(-2.0), 0xC000);
+        assert_eq!(f32_to_f16(65504.0), 0x7BFF, "max finite f16");
+        assert_eq!(f32_to_f16(65520.0), 0x7C00, "ties up to inf");
+        assert_eq!(f32_to_f16(65519.9), 0x7BFF, "below the tie stays finite");
+        assert_eq!(f32_to_f16(2.0f32.powi(-24)), 0x0001, "min subnormal");
+        assert_eq!(f32_to_f16(2.0f32.powi(-26)), 0x0000, "underflow to zero");
+        assert_eq!(f32_to_f16(-0.0), 0x8000);
+        assert_eq!(f16_to_f32(0x3C00), 1.0);
+        assert_eq!(f16_to_f32(0x0001), 2.0f32.powi(-24));
+        assert_eq!(f16_to_f32(0xFC00), f32::NEG_INFINITY);
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+    }
+}

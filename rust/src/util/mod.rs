@@ -19,10 +19,15 @@
 //! - [`pool`]   — persistent sharded thread pool (+ deterministic
 //!               shard->range mapping) shared by the trainer fan-out
 //!               and the sparsification engine.
+//! - [`kernels`] — chunked, autovectorization-friendly hot-path
+//!               primitives (fused fill+histogram, boundary collect,
+//!               scatter-add, fixed-width bit pack, f32↔bf16/f16),
+//!               each pinned bit-identical to a scalar referee.
 
 pub mod bench;
 pub mod check;
 pub mod cli;
 pub mod json;
+pub mod kernels;
 pub mod pool;
 pub mod rng;

@@ -34,6 +34,8 @@ use regtopk::sparsify::{
     BudgetPolicy, LayerwiseSparsifier, PolicyTable, RoundCtx, Sparsifier, SparsifierKind,
 };
 use regtopk::util::check;
+use regtopk::util::kernels::{hist_bin_edge, mag_bits};
+use regtopk::util::rng::Rng;
 
 fn all_kinds(dim: usize) -> Vec<SparsifierKind> {
     let k = (dim / 4).max(1);
@@ -213,6 +215,10 @@ fn ledger_bytes_equal_codec_accounting_for_every_pair() {
         "*=:bits=5,levels=nuq",
         "*=:bits=5,idx=raw,levels=nuq",
         "a=:bits=4,idx=rice;b=:idx=raw",
+        // half-width wire values (PR 10): fixed 16-bit, scale-free
+        "*=:levels=fp16",
+        "*=:levels=bf16,idx=rice",
+        "a=:levels=fp16;b=:bits=5,levels=nuq",
     ];
     for spec in specs {
         let table = PolicyTable::parse(spec).unwrap();
@@ -361,6 +367,121 @@ fn auto_bits_trajectory_is_reproducible_and_in_range() {
     assert_eq!(tr_a.server.w, tr_b.server.w, "auto width must be deterministic");
     assert_eq!(tr_a.ledger.total_upload_bytes(), tr_b.ledger.total_upload_bytes());
     assert!(tr_a.server.w.iter().all(|w| w.is_finite()));
+}
+
+/// PR 10 satellite pin: the NUQ scale is fit from the bucket's
+/// magnitude histogram — a power-of-two bin edge covering all but at
+/// most `n/16` entries — not the outlier-sensitive max; clamped
+/// outliers still consume exactly one rounding draw each, so the RNG
+/// stream position never depends on the values.
+#[test]
+fn nuq_scale_is_histogram_fit_not_max() {
+    let mut vals = vec![1.0f32; 30];
+    vals.extend([1.0e4, -2.0e4]); // 2 outliers == the n/16 budget for n=32
+    let orig = vals.clone();
+    let mut bucket = SparseVec::new(64, (0..32).collect(), vals);
+    let mut rng = Rng::seed_from(21);
+    let mut payload = QuantPayload::default();
+    let (mut residual, mut codes) = (Vec::new(), Vec::new());
+    let vc = ValueCodec { bits: 5, levels: LevelKind::Nuq };
+    vc.encode_bucket(&mut bucket, &mut rng, &mut payload, &mut residual, &mut codes);
+
+    // the fitted scale is the power-of-two upper edge of 1.0's
+    // histogram bin (2.0), not the 2e4 max a max-fit would pick
+    let b = (mag_bits(1.0) >> 24) as usize;
+    assert_eq!(payload.scale(), hist_bin_edge(b));
+    assert_eq!(payload.scale(), 2.0);
+    // payload stays authoritative and the outliers clamp to the top
+    // level, their error riding error feedback
+    for i in 0..32 {
+        assert_eq!(payload.decode_value(i), bucket.values()[i], "i={i}");
+        assert_eq!(residual[i], orig[i] - bucket.values()[i], "i={i}");
+    }
+    assert!(bucket.values()[30].abs() <= payload.scale(), "outlier clamps to the table");
+    assert!(residual[31].abs() > 1.0e3, "clamp error is fed back, not dropped");
+
+    // stream-position pin: an outlier-free bucket of the same length
+    // consumes the identical RNG span (one draw per entry)
+    let mut r2 = Rng::seed_from(21);
+    let mut b2 = SparseVec::new(64, (0..32).collect(), vec![1.0f32; 32]);
+    vc.encode_bucket(&mut b2, &mut r2, &mut payload, &mut residual, &mut codes);
+    assert_eq!(rng.state(), r2.state(), "clamping must not shift the rounding stream");
+}
+
+/// PR 10 satellite pin: `levels=fp16|bf16` carries true 16-bit words —
+/// deterministic RNE narrowing (no RNG draws), exact widening decode,
+/// a scale-free payload, and a charge of exactly 16 bits per value.
+#[test]
+fn half_width_codec_is_deterministic_and_charges_sixteen_bits() {
+    for levels in [LevelKind::Fp16, LevelKind::Bf16] {
+        let vals = vec![1.5f32, -0.333333, 6.1e-5, -65504.0, 0.0];
+        let orig = vals.clone();
+        let mut bucket = SparseVec::new(100, vec![2, 17, 40, 63, 99], vals);
+        let mut rng = Rng::seed_from(3);
+        let s0 = rng.state();
+        let mut payload = QuantPayload::default();
+        let (mut residual, mut codes) = (Vec::new(), Vec::new());
+        let vc = ValueCodec { bits: 16, levels };
+        vc.encode_bucket(&mut bucket, &mut rng, &mut payload, &mut residual, &mut codes);
+
+        assert_eq!(rng.state(), s0, "{levels:?}: RNE narrowing draws nothing");
+        assert_eq!((payload.bits(), payload.level_kind()), (16, levels));
+        assert_eq!(payload.scale(), 0.0, "half payloads are scale-free");
+        for i in 0..5 {
+            assert_eq!(
+                payload.decode_value(i).to_bits(),
+                bucket.values()[i].to_bits(),
+                "{levels:?} i={i}"
+            );
+            assert_eq!(residual[i], orig[i] - bucket.values()[i], "{levels:?} i={i}");
+        }
+        // 1.5 and 0.0 are exactly representable in both half formats
+        assert_eq!(bucket.values()[0], 1.5, "{levels:?}");
+        assert_eq!(bucket.values()[4], 0.0, "{levels:?}");
+        // charged bytes: 16 bits/value + index bits, and NO 4-byte scale
+        let ib = index_bits(100);
+        assert_eq!(payload.wire_bytes(ib), (5 * (16 + ib)).div_ceil(8), "{levels:?}");
+        assert_eq!(
+            QuantPayload::bytes_for(5, 4, ib) - 4,
+            (5 * (4 + ib)).div_ceil(8),
+            "uniform still pays its scale word"
+        );
+    }
+}
+
+/// Half-width end to end: an fp16 uplink walks its own (finite,
+/// converging) trajectory at roughly half the value bytes of the raw
+/// run, and the manifest echo surfaces the family.
+#[test]
+fn half_width_training_shrinks_value_bytes() {
+    let params =
+        LinearParams { workers: 3, rows_per_worker: 60, dim: 24, ..LinearParams::fig2() };
+    let problem = generate(params, 15);
+    let base = TrainConfig {
+        workers: 3,
+        eta: 0.03,
+        sparsifier: SparsifierKind::RegTopK { k: 8, mu: 0.5, q: 1.0 },
+        eval_every: 0,
+        groups: Some(GradLayout::single(24)),
+        budget: Some(BudgetPolicy::Global { k: 8 }),
+        ..TrainConfig::default()
+    };
+    let mut half = base.clone();
+    half.policy = Some(PolicyTable::parse("*=:levels=fp16").unwrap());
+    let mut tr_raw = fig2::trainer_from_config(&base, &problem);
+    let mut tr_h = fig2::trainer_from_config(&half, &problem);
+    for _ in 0..15 {
+        tr_raw.round();
+        tr_h.round();
+    }
+    assert!(tr_h.server.w.iter().all(|w| w.is_finite()));
+    let (a, b) = (tr_raw.ledger.total_upload_bytes(), tr_h.ledger.total_upload_bytes());
+    // per entry: 32+log2(24) bits -> 16+log2(24) bits = 21/37 of the raw charge
+    assert!((b as f64) < 0.65 * a as f64, "fp16 {b} !< 0.65 * raw {a}");
+    let echo = tr_h.config_echo();
+    let resolved = echo.get("resolved").and_then(|r| r.as_arr()).unwrap();
+    assert_eq!(resolved[0].get("levels").and_then(|j| j.as_str()), Some("fp16"));
+    assert_eq!(resolved[0].get("bits").and_then(|j| j.as_f64()), Some(16.0));
 }
 
 /// Golden-bytes fixture for the framed wire format (PR 9): the exact

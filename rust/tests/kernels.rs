@@ -1,0 +1,295 @@
+//! Bit-identity contract of the chunked kernel layer (PR 10
+//! tentpole): every kernel in `util::kernels` against its scalar
+//! referee, at sizes 0 / 1 / LANES±1 / large, under adversarial
+//! values (NaN, ±inf, -0.0, denormals, RNE ties), plus the two
+//! consumer pins — the sharded select engine against the sort oracle
+//! over kernel-shaped inputs, and the half-width converts against
+//! exhaustive 16-bit code sweeps.
+//!
+//! "Matches" here always means bit-for-bit (`to_bits` equality), not
+//! float `==`: the kernels are only allowed to reorder work across
+//! independent elements, never to change a single element's result.
+
+use regtopk::sparse::engine::SelectEngine;
+use regtopk::sparse::topk::select_topk_sort;
+use regtopk::util::check;
+use regtopk::util::kernels::{
+    abs_hist, abs_hist_ref, bf16_to_f32, bf16_to_f32_slice, bf16_to_f32_slice_ref,
+    boundary_collect, boundary_collect_ref, f16_to_f32, f16_to_f32_slice, f16_to_f32_slice_ref,
+    f32_to_bf16, f32_to_bf16_codes, f32_to_bf16_codes_ref, f32_to_f16, f32_to_f16_codes,
+    f32_to_f16_codes_ref, fill_abs_hist, fill_abs_hist_ref, hist_bin_edge, mag_bits, pack_fixed,
+    pack_fixed_ref, scale_into, scale_into_ref, scatter_add, scatter_add_ref, scatter_assign,
+    scatter_assign_ref, unpack_fixed, unpack_fixed_ref, FUSE_BLOCK, LANES,
+};
+use regtopk::util::rng::Rng;
+
+/// Tail-alignment sweep: empty, single, one short of a lane block, an
+/// exact block, one over, a few blocks plus tail, and large enough to
+/// span multiple [`FUSE_BLOCK`]s in the fused fill path.
+const SIZES: [usize; 7] = [0, 1, LANES - 1, LANES, LANES + 1, 3 * LANES + 5, 2 * FUSE_BLOCK + 37];
+
+/// The values most likely to expose a shortcut in a "vectorized"
+/// rewrite: NaN, both infinities, both zeros, denormals, and the
+/// exact f16 overflow/tie neighborhood.
+const SPECIALS: [f32; 12] = [
+    f32::NAN,
+    f32::INFINITY,
+    f32::NEG_INFINITY,
+    -0.0,
+    0.0,
+    1.0e-42, // f32 denormal
+    -1.0e-40,
+    f32::MAX,
+    -f32::MAX,
+    65504.0, // max finite f16
+    65520.0, // f16 RNE tie up to inf
+    65519.9, // just below the tie
+];
+
+fn bits_of(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|v| v.to_bits()).collect()
+}
+
+/// Random vector with the [`SPECIALS`] spliced in at random slots.
+fn special_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    let mut v = check::arb_vec(rng, n);
+    if n > 0 {
+        for &s in &SPECIALS {
+            let i = rng.below(n);
+            v[i] = s;
+        }
+    }
+    v
+}
+
+#[test]
+fn abs_hist_matches_referee_under_special_values() {
+    check::forall("abs_hist_vs_ref", |rng, case| {
+        let n = SIZES[case % SIZES.len()];
+        let x = special_vec(rng, n);
+        let (mut a, mut b) = ([0u32; 256], [0u32; 256]);
+        abs_hist(&x, &mut a);
+        abs_hist_ref(&x, &mut b);
+        assert_eq!(a, b, "n={n}");
+        assert_eq!(a.iter().sum::<u32>() as usize, n, "every element lands in a bin");
+    });
+}
+
+#[test]
+fn hist_bin_edges_bound_their_bins() {
+    for b in 1..127 {
+        assert!(hist_bin_edge(b) > hist_bin_edge(b - 1), "edges are strictly increasing");
+    }
+    assert_eq!(hist_bin_edge(127), f32::INFINITY);
+    assert_eq!(hist_bin_edge(255), f32::INFINITY);
+    let mut rng = Rng::seed_from(7);
+    let mut vals = SPECIALS.to_vec();
+    vals.extend(check::arb_vec(&mut rng, 2000));
+    for v in vals {
+        let b = (mag_bits(v) >> 24) as usize;
+        if v.is_finite() && b < 127 {
+            assert!(v.abs() < hist_bin_edge(b), "v={v} bin={b}");
+            if b > 0 {
+                assert!(v.abs() >= hist_bin_edge(b - 1), "v={v} bin={b}");
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_fill_hist_matches_unfused_referee() {
+    // position-pure fill: element lo+i depends only on lo+i, so the
+    // FUSE_BLOCK-grained chunked pass must be invisible
+    let fill = |lo: usize, block: &mut [f32]| {
+        for (j, slot) in block.iter_mut().enumerate() {
+            let i = (lo + j) as f32;
+            *slot = (i - 5000.0) * 0.37 + if (lo + j) % 97 == 0 { 1.0e-41 } else { 0.0 };
+        }
+    };
+    for n in SIZES {
+        let (mut d1, mut d2) = (vec![0.0f32; n], vec![0.0f32; n]);
+        let (mut h1, mut h2) = ([0u32; 256], [0u32; 256]);
+        fill_abs_hist(3, &mut d1, &mut h1, fill);
+        fill_abs_hist_ref(3, &mut d2, &mut h2, fill);
+        assert_eq!(bits_of(&d1), bits_of(&d2), "n={n}: fused buffer is bit-identical");
+        assert_eq!(h1, h2, "n={n}");
+    }
+}
+
+#[test]
+fn boundary_collect_matches_referee() {
+    check::forall("boundary_collect_vs_ref", |rng, case| {
+        let n = SIZES[case % SIZES.len()];
+        let x = special_vec(rng, n);
+        // boundary buckets: extremes plus one actually present in x
+        let present =
+            x.first().map(|&v| (mag_bits(v) >> 24) as usize).unwrap_or(0);
+        for b in [0usize, present, 127, 255] {
+            let hi_floor = ((b as u64) + 1) << 24;
+            let base = 1000 * case as u32;
+            let (mut w1, mut ci1, mut cv1) = (Vec::new(), Vec::new(), Vec::new());
+            let (mut w2, mut ci2, mut cv2) = (Vec::new(), Vec::new(), Vec::new());
+            boundary_collect(base, &x, b, hi_floor, &mut w1, &mut ci1, &mut cv1);
+            boundary_collect_ref(base, &x, b, hi_floor, &mut w2, &mut ci2, &mut cv2);
+            assert_eq!(w1, w2, "winners n={n} b={b}");
+            assert_eq!(ci1, ci2, "cand idx n={n} b={b}");
+            assert_eq!(bits_of(&cv1), bits_of(&cv2), "cand val n={n} b={b}");
+            assert!(w1.windows(2).all(|p| p[0] < p[1]), "winners ascend");
+            assert!(ci1.windows(2).all(|p| p[0] < p[1]), "candidates ascend");
+        }
+    });
+}
+
+#[test]
+fn scatter_and_scale_kernels_match_referees() {
+    check::forall("scatter_vs_ref", |rng, case| {
+        let n = SIZES[case % SIZES.len()];
+        let dim = (4 * n).max(8);
+        let val = special_vec(rng, n);
+        // duplicate-heavy indices: entry order must decide the result
+        let idx: Vec<u32> = (0..n).map(|_| rng.below(dim / 2) as u32).collect();
+        let base = special_vec(rng, dim);
+        for c in [1.0f32, -0.25, 0.0, -0.0] {
+            let (mut o1, mut o2) = (base.clone(), base.clone());
+            scatter_add(&mut o1, &idx, &val, c);
+            scatter_add_ref(&mut o2, &idx, &val, c);
+            assert_eq!(bits_of(&o1), bits_of(&o2), "scatter_add n={n} c={c}");
+
+            let (mut d1, mut d2) = (base.clone(), base.clone());
+            scale_into(&mut d1, &base, c);
+            scale_into_ref(&mut d2, &base, c);
+            assert_eq!(bits_of(&d1), bits_of(&d2), "scale_into n={n} c={c}");
+        }
+        let (mut o1, mut o2) = (base.clone(), base.clone());
+        scatter_assign(&mut o1, &idx, &val);
+        scatter_assign_ref(&mut o2, &idx, &val);
+        assert_eq!(bits_of(&o1), bits_of(&o2), "scatter_assign n={n}");
+    });
+}
+
+#[test]
+fn pack_unpack_matches_referee_at_every_width() {
+    check::forall("pack_fixed_vs_ref", |rng, case| {
+        let n = SIZES[case % SIZES.len()].min(4096);
+        let bits = case % 32 + 1;
+        let mask: u64 = if bits == 32 { u32::MAX as u64 } else { (1u64 << bits) - 1 };
+        let codes: Vec<u32> =
+            (0..n).map(|_| (rng.next_u64() & mask) as u32).collect();
+        let (mut w1, mut w2) = (Vec::new(), Vec::new());
+        pack_fixed(&codes, bits, &mut w1);
+        pack_fixed_ref(&codes, bits, &mut w2);
+        assert_eq!(w1, w2, "n={n} bits={bits}");
+        assert_eq!(w1.len(), (n * bits).div_ceil(32), "exact word count");
+
+        let (mut o1, mut o2) = (Vec::new(), Vec::new());
+        unpack_fixed(&w1, bits, n, &mut o1);
+        unpack_fixed_ref(&w1, bits, n, &mut o2);
+        assert_eq!(o1, codes, "roundtrip n={n} bits={bits}");
+        assert_eq!(o2, codes, "referee roundtrip n={n} bits={bits}");
+
+        // trailing bits of the last word are zero (frame bytes beyond
+        // the payload are deterministic, not residual garbage)
+        if let Some(&last) = w1.last() {
+            let used = n * bits - (w1.len() - 1) * 32;
+            if used < 32 {
+                assert_eq!(last >> used, 0, "n={n} bits={bits}: tail is zeroed");
+            }
+        }
+    });
+}
+
+#[test]
+fn half_width_slice_converts_match_referees() {
+    check::forall("half_codes_vs_ref", |rng, case| {
+        let n = SIZES[case % SIZES.len()];
+        let x = special_vec(rng, n);
+        let (mut c1, mut c2) = (Vec::new(), Vec::new());
+        f32_to_bf16_codes(&x, &mut c1);
+        f32_to_bf16_codes_ref(&x, &mut c2);
+        assert_eq!(c1, c2, "bf16 encode n={n}");
+        let (mut d1, mut d2) = (Vec::new(), Vec::new());
+        bf16_to_f32_slice(&c1, &mut d1);
+        bf16_to_f32_slice_ref(&c1, &mut d2);
+        assert_eq!(bits_of(&d1), bits_of(&d2), "bf16 decode n={n}");
+
+        f32_to_f16_codes(&x, &mut c1);
+        f32_to_f16_codes_ref(&x, &mut c2);
+        assert_eq!(c1, c2, "f16 encode n={n}");
+        f16_to_f32_slice(&c1, &mut d1);
+        f16_to_f32_slice_ref(&c1, &mut d2);
+        assert_eq!(bits_of(&d1), bits_of(&d2), "f16 decode n={n}");
+        assert!(c1.iter().all(|&c| c <= u16::MAX as u32), "codes are true 16-bit words");
+    });
+}
+
+/// Exhaustive 16-bit sweep: widening then re-narrowing every f16 code
+/// is the identity (half values are exactly representable in f32), so
+/// a half-width wire bucket decodes losslessly and re-encodes to the
+/// same bytes.  Signaling NaNs are exempt — the encoder quiets them.
+#[test]
+fn f16_widen_narrow_is_identity_on_all_codes() {
+    for u in 0..=u16::MAX {
+        let exp = (u >> 10) & 0x1F;
+        let man = u & 0x03FF;
+        let signaling_nan = exp == 0x1F && man != 0 && man & 0x200 == 0;
+        if signaling_nan {
+            assert!(f16_to_f32(u).is_nan());
+            continue;
+        }
+        assert_eq!(f32_to_f16(f16_to_f32(u)), u, "code {u:#06x}");
+    }
+}
+
+/// Same sweep for bf16: every non-signaling-NaN 16-bit pattern
+/// survives widen → narrow exactly.
+#[test]
+fn bf16_widen_narrow_is_identity_on_all_codes() {
+    for u in 0..=u16::MAX {
+        let exp = (u >> 7) & 0xFF;
+        let man = u & 0x7F;
+        let signaling_nan = exp == 0xFF && man != 0 && man & 0x40 == 0;
+        if signaling_nan {
+            assert!(bf16_to_f32(u).is_nan());
+            continue;
+        }
+        assert_eq!(f32_to_bf16(bf16_to_f32(u)), u, "code {u:#06x}");
+    }
+}
+
+/// Round-to-nearest-even tie pins, mid-mantissa (the golden unit
+/// tests cover the range ends; these are the interior ties).
+#[test]
+fn half_width_rounding_is_ties_to_even() {
+    // f32 1.00390625 sits exactly between bf16 codes 0x3F80 and
+    // 0x3F81 — RNE picks the even one
+    assert_eq!(f32_to_bf16(f32::from_bits(0x3F80_8000)), 0x3F80);
+    assert_eq!(f32_to_bf16(f32::from_bits(0x3F81_8000)), 0x3F82);
+    // f16: low 13 bits exactly at the halfway point
+    assert_eq!(f32_to_f16(f32::from_bits(0x3F80_1000)), 0x3C00, "tie to even (down)");
+    assert_eq!(f32_to_f16(f32::from_bits(0x3F80_3000)), 0x3C02, "tie to even (up)");
+    // one past the tie always rounds up
+    assert_eq!(f32_to_f16(f32::from_bits(0x3F80_1001)), 0x3C01);
+    // subnormal tie: 1.5 * 2^-24 is between codes 0x0001 and 0x0002
+    assert_eq!(f32_to_f16(1.5 * 2.0f32.powi(-24)), 0x0002, "subnormal tie to even");
+    assert_eq!(f32_to_f16(0.5 * 2.0f32.powi(-24)), 0x0000, "half-ulp tie to even zero");
+}
+
+/// Consumer pin: the kernelized sharded engine still matches the sort
+/// oracle bit-for-bit on kernel-adversarial inputs (NaN, ±inf, -0.0,
+/// denormals), for shard counts that leave misaligned tails.
+#[test]
+fn kernelized_engine_matches_sort_oracle_on_special_values() {
+    check::forall("engine_vs_sort_special", |rng, case| {
+        let n = [1usize, LANES, 300, 4097][case % 4];
+        let x = special_vec(rng, n);
+        for k in [1usize, n / 3 + 1, n] {
+            let want = select_topk_sort(&x, k);
+            for shards in [1usize, 3, 8] {
+                let mut eng = SelectEngine::new(shards);
+                let mut got = Vec::new();
+                eng.select_into(&x, k, &mut got);
+                assert_eq!(got, want, "n={n} k={k} shards={shards}");
+            }
+        }
+    });
+}

@@ -276,7 +276,7 @@ fn full_tree_gate_is_clean() {
     let failing: Vec<&Finding> = report.failing().collect();
     assert!(failing.is_empty(), "analyzer findings on the repo tree: {failing:?}");
 
-    assert_eq!(RULES.len(), 13);
+    assert_eq!(RULES.len(), 14);
     let new_rules = [
         "wildcard",
         "layering",
@@ -285,6 +285,7 @@ fn full_tree_gate_is_clean() {
         "schema-tag-reuse",
         "schema-doc",
         "net-outside-transport",
+        "bit-kernels-outside-kernels",
     ];
     for rule in new_rules {
         assert!(RULES.contains(&rule), "missing rule id {rule}");

@@ -14,7 +14,7 @@ use regtopk::comm::codec::{
     decode_header, decode_hello, decode_msg, decode_payload, encode_hello, encode_msg,
     FrameHeader, FrameKind, FRAME_HEADER_BYTES, HELLO_BYTES, HELLO_MAGIC,
 };
-use regtopk::comm::{kind_of, Msg, SparseUpdate};
+use regtopk::comm::{kind_of, InProc, Msg, SparseUpdate, Transport, WorkerLink};
 use regtopk::config::TrainConfig;
 use regtopk::data::linear::{generate, LinearParams};
 use regtopk::experiments::fig2;
@@ -114,7 +114,14 @@ fn tcp_loopback_is_bit_identical_for_all_families_grouped() {
 fn tcp_loopback_is_bit_identical_with_uplink_codecs() {
     let layout =
         GradLayout::from_sizes([("conv.w".to_string(), 12), ("conv.b".to_string(), 4)]);
-    for spec in ["*=:bits=4", "*=:idx=rice", "*=:bits=4,idx=rice"] {
+    for spec in [
+        "*=:bits=4",
+        "*=:idx=rice",
+        "*=:bits=4,idx=rice",
+        // half-width wire values (PR 10): true 16-bit words, scale-free
+        "*=:levels=fp16",
+        "*=:levels=bf16,idx=rice",
+    ] {
         let cfg = TrainConfig {
             workers: 3,
             eta: 0.03,
@@ -204,6 +211,58 @@ fn torn_and_corrupt_frames_error_cleanly() {
         assert!(decode_msg(&bad).is_err(), "corrupt header byte {at} accepted");
     }
     assert!(decode_msg(&bytes).is_ok(), "the intact frame still decodes");
+}
+
+/// PR 10 byte-shipping pin: the threaded star's channels carry
+/// encoded frame bytes, so a message crossing `InProc` is the SAME
+/// encode→decode round trip the socket backends perform — delivered
+/// messages are bit-identical, and the star's counters account the
+/// exact frame/wire bytes of each crossing, like `Tcp`'s.
+#[test]
+fn inproc_star_ships_frame_bytes_bit_identically() {
+    let mut t = InProc::star(2);
+    let mut links: Vec<_> = (0..2).map(|i| t.link(i)).collect();
+
+    let down = Msg::Broadcast { round: 0, gagg: vec![1.0, -0.0, f32::MIN_POSITIVE / 4.0] };
+    let (_, dst) = encode_msg(&down);
+    t.broadcast(&down);
+    for (i, l) in links.iter_mut().enumerate() {
+        let got = l.recv().unwrap_or_else(|| panic!("worker {i} starved"));
+        assert_eq!(got, down, "worker {i}: decoded broadcast diverged");
+        assert_eq!(encode_msg(&got).0, encode_msg(&down).0, "worker {i}: byte identity");
+    }
+
+    let mut wire_up = 0usize;
+    for (i, l) in links.iter_mut().enumerate() {
+        let mut sv = SparseVec::zeros(64);
+        sv.push(3 * i as u32 + 1, 0.5 - i as f32);
+        let up = Msg::Update {
+            worker: i,
+            round: 1,
+            update: SparseUpdate::single(sv),
+            loss: 0.25,
+        };
+        wire_up += encode_msg(&up).1.wire;
+        l.send(&up);
+    }
+    let got = t.gather_round(2, 1);
+    assert_eq!(got.len(), 2);
+    for (i, m) in got.iter().enumerate() {
+        match m {
+            Msg::Update { worker, round, .. } => assert_eq!((*worker, *round), (i, 1)),
+            other => panic!("non-update gathered: {other:?}"),
+        }
+    }
+
+    let c = t.counters().expect("byte-shipping InProc counts like a socket");
+    assert_eq!(c.sent_frames, 2, "one broadcast frame per worker");
+    assert_eq!(c.recv_frames, 2, "one update frame per worker");
+    assert_eq!(c.sent_wire, 2 * dst.wire as u64, "downlink charged bytes");
+    assert_eq!(c.recv_wire, wire_up as u64, "uplink charged bytes");
+    assert!(c.sent_bytes > c.sent_wire, "frame headers are real but uncharged traffic");
+
+    t.reset_counters();
+    assert_eq!(t.counters(), Some(Default::default()), "reset zeroes the span");
 }
 
 /// The connection handshake round-trips and rejects corruption.

@@ -96,6 +96,16 @@ target/release/repro train --config "$smoke_dir/cfg.json" \
 # the dense broadcast
 target/release/repro sweep --param downlink --iters 40 --s 0.05
 
+echo "== half-width smoke: levels=fp16/bf16 uplink + downlink =="
+# PR 10: true 16-bit wire values (RNE encode, exact widening decode);
+# bare half rules need no bits= key and charge 16 bits/value
+target/release/repro train --config "$smoke_dir/cfg.json" \
+    --groups conv:60,fc:40 --budget prop:0.1 \
+    --policy 'conv*=regtopk:levels=bf16;*=topk:levels=fp16,idx=rice' \
+    --out "$smoke_dir/out"
+target/release/repro train --config "$smoke_dir/cfg.json" \
+    --downlink '*=:levels=fp16' --out "$smoke_dir/out"
+
 echo "== networked smoke: 2-worker loopback TCP vs in-process =="
 # PR 9 tentpole: the same run over real sockets — every worker a
 # separate OS process speaking the framed wire protocol — must print a
@@ -135,6 +145,7 @@ if [[ "${1:-}" == "--full" ]]; then
     BENCH_JSON=BENCH_PR4.json cargo bench --bench quantized
     BENCH_JSON=BENCH_PR5.json cargo bench --bench codec
     BENCH_JSON=BENCH_PR6.json cargo bench --bench aggregate
+    BENCH_JSON=BENCH_PR10.json cargo bench --bench kernels
 else
     echo "== bench smoke (quick budget) =="
     BENCH_BUDGET_MS=60 cargo bench --bench topk_select
@@ -144,6 +155,7 @@ else
     BENCH_BUDGET_MS=60 BENCH_JSON=BENCH_PR4.json cargo bench --bench quantized
     BENCH_BUDGET_MS=60 BENCH_JSON=BENCH_PR5.json cargo bench --bench codec
     BENCH_BUDGET_MS=60 BENCH_JSON=BENCH_PR6.json cargo bench --bench aggregate
+    BENCH_BUDGET_MS=60 BENCH_JSON=BENCH_PR10.json cargo bench --bench kernels
 fi
 
 echo "verify: OK"
